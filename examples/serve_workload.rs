@@ -1,0 +1,92 @@
+//! End-to-end serving driver (the repo's headline validation run): start
+//! the engine + TCP server, fire a batched request workload at it from
+//! client threads, and report latency/throughput — recorded in
+//! EXPERIMENTS.md §End-to-end.
+//!
+//!     cargo run --release --example serve_workload -- [--preset cifar-sim]
+//!         [--requests 24] [--clients 4]
+//!
+//! The workload mixes GoldDiff and baseline methods, exercising the full
+//! stack: TCP protocol → bounded queue (backpressure) → continuous batcher
+//! → coarse scan → golden-subset gather → PJRT dispatch → DDIM update.
+
+use std::sync::Arc;
+
+use golddiff::config::EngineConfig;
+use golddiff::coordinator::Engine;
+use golddiff::server::{Client, Server};
+use golddiff::util::cli::Args;
+use golddiff::util::timer::TimingStats;
+
+fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv);
+    let preset = args.get_or("preset", "cifar-sim").to_string();
+    let requests = args.usize_or("requests", 24);
+    let clients = args.usize_or("clients", 4);
+
+    let cfg = EngineConfig {
+        preset: preset.clone(),
+        ..Default::default()
+    };
+    let engine = Arc::new(Engine::start(cfg)?);
+    let server = Server::start(Arc::clone(&engine), "127.0.0.1:0")?;
+    println!("serving {preset} on {} — {requests} requests over {clients} clients", server.addr);
+
+    let addr = server.addr;
+    let t0 = std::time::Instant::now();
+    let handles: Vec<_> = (0..clients)
+        .map(|c| {
+            std::thread::spawn(move || -> anyhow::Result<TimingStats> {
+                let mut client = Client::connect(&addr)?;
+                assert!(client.ping()?);
+                let mut lat = TimingStats::new();
+                let my_requests = (requests + clients - 1) / clients;
+                for i in 0..my_requests {
+                    let method = match (c + i) % 3 {
+                        0 => "golddiff-pca",
+                        1 => "golddiff",
+                        _ => "wiener",
+                    };
+                    let t = std::time::Instant::now();
+                    let mut resp = client.generate(method, (c * 1000 + i) as u64, None)?;
+                    // honour backpressure: retry briefly on busy
+                    let mut tries = 0;
+                    while resp.get("ok").and_then(golddiff::util::json::Json::as_bool)
+                        != Some(true)
+                        && tries < 50
+                    {
+                        std::thread::sleep(std::time::Duration::from_millis(50));
+                        resp = client.generate(method, (c * 1000 + i) as u64, None)?;
+                        tries += 1;
+                    }
+                    anyhow::ensure!(
+                        resp.get("ok").and_then(golddiff::util::json::Json::as_bool)
+                            == Some(true),
+                        "request failed: {resp}"
+                    );
+                    lat.record(t.elapsed());
+                }
+                Ok(lat)
+            })
+        })
+        .collect();
+
+    let mut all = TimingStats::new();
+    for h in handles {
+        all.merge(&h.join().unwrap()?);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    println!("\n== workload summary ==");
+    println!("requests completed : {}", all.count());
+    println!("wall time          : {wall:.2}s");
+    println!("throughput         : {:.2} req/s", all.count() as f64 / wall);
+    println!("latency p50        : {:.3}s", all.percentile(0.5));
+    println!("latency p95        : {:.3}s", all.percentile(0.95));
+    println!("latency mean       : {:.3}s", all.mean());
+    println!("\nengine stats: {}", engine.stats_json());
+    println!("peak RSS           : {:.2} GiB", golddiff::util::mem::gib(golddiff::util::mem::peak_rss_bytes()));
+
+    server.stop();
+    Ok(())
+}

@@ -1,0 +1,262 @@
+"""AOT entrypoint: lower every (variant, preset, bucket) step graph to HLO
+*text* + write ``artifacts/manifest.json`` for the rust runtime.
+
+Run via ``make artifacts`` (no-op when inputs are unchanged):
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+HLO text — NOT ``lowered.compile()`` / proto ``.serialize()`` — is the
+interchange format: jax >= 0.5 emits HloModuleProto with 64-bit instruction
+ids which the runtime's xla_extension 0.5.1 rejects (``proto.id() <=
+INT_MAX``); the HLO text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .presets import (
+    KAMB_PATCHES,
+    PCA_RANK,
+    PRESETS,
+    WSS_BLOCKS,
+    Preset,
+    k_buckets,
+    m_buckets,
+    next_pow2,
+)
+
+F32 = jnp.float32
+
+
+def spec(*shape):
+    return jax.ShapeDtypeStruct(shape, F32)
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation (return_tuple=True) -> HLO text."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _block_k(k: int) -> int:
+    """Tile height for the streaming kernels: bounded grid depth so the
+    interpret-mode loop stays shallow for huge buckets."""
+    if k <= 128:
+        return k
+    return max(128, k // 64)
+
+
+def artifact_plan(preset: Preset):
+    """Yield (name, fn, arg_specs, meta) for every graph of one preset.
+
+    Serving variants (``golden_step``, ``pca_step_*``, ``exact_dist``) are
+    the pure-jnp twins — XLA fuses them into tight CPU kernels. The Pallas
+    streaming-kernel builds ride along as ``*_pallas`` variants at a reduced
+    bucket set: they are the TPU-structured artifacts and the
+    kernel-vs-graph validation/perf ablation (interpret=True is a
+    correctness vehicle on CPU, ~10-70× slower than the fused twin —
+    EXPERIMENTS.md §Perf).
+    """
+    d = preset.d
+    pd = preset.proxy_d
+    image = preset.h > 1
+    ks = k_buckets(preset)
+    pallas_ks = sorted({ks[0], 512, 2048} & set(ks)) or [ks[0]]
+
+    for k in ks:
+        bk = _block_k(k)
+        yield (
+            f"golden_step__{preset.name}__k{k}",
+            model.golden_step_jnp,
+            [spec(d), spec(k, d), spec(k), spec(2)],
+            {"variant": "golden_step", "k": k},
+        )
+        if k in pallas_ks:
+            yield (
+                f"golden_step_pallas__{preset.name}__k{k}",
+                functools.partial(_golden_step_blocked, block_k=bk),
+                [spec(d), spec(k, d), spec(k), spec(2)],
+                {"variant": "golden_step_pallas", "k": k, "block_k": bk},
+            )
+        if image:
+            pca_specs = [spec(d), spec(k, d), spec(k), spec(PCA_RANK, d), spec(d), spec(2)]
+            yield (
+                f"pca_step_ss__{preset.name}__k{k}",
+                model.pca_step_ss_jnp,
+                pca_specs,
+                {"variant": "pca_step_ss", "k": k, "r": PCA_RANK},
+            )
+            yield (
+                f"pca_step_wss__{preset.name}__k{k}",
+                model.pca_step_wss_jnp,
+                pca_specs,
+                {"variant": "pca_step_wss", "k": k, "r": PCA_RANK},
+            )
+            if k in pallas_ks:
+                yield (
+                    f"pca_step_ss_pallas__{preset.name}__k{k}",
+                    functools.partial(_pca_ss_blocked, block_k=bk),
+                    pca_specs,
+                    {"variant": "pca_step_ss_pallas", "k": k, "r": PCA_RANK, "block_k": bk},
+                )
+
+    if image:
+        # Kamb only at the full-scan bucket and one golden-subset bucket —
+        # the baseline and its GoldDiff-wrapped form (Tab. 5).
+        full = next_pow2(preset.n)
+        for k in sorted({512, full}):
+            for p in KAMB_PATCHES:
+                fn = functools.partial(
+                    model.kamb_step, h=preset.h, w=preset.w, c=preset.c, patch=p
+                )
+                yield (
+                    f"kamb_step__{preset.name}__k{k}__p{p}",
+                    fn,
+                    [spec(d), spec(k, d), spec(k), spec(2)],
+                    {"variant": "kamb_step", "k": k, "p": p},
+                )
+        yield (
+            f"wiener_step__{preset.name}",
+            model.wiener_step,
+            [spec(d), spec(d), spec(d), spec(2)],
+            {"variant": "wiener_step", "k": 0},
+        )
+
+    for m in m_buckets(preset):
+        yield (
+            f"exact_dist__{preset.name}__k{m}",
+            model.exact_dist_jnp,
+            [spec(d), spec(m, d), spec(1)],
+            {"variant": "exact_dist", "k": m},
+        )
+    yield (
+        f"exact_dist_pallas__{preset.name}__k{m_buckets(preset)[0]}",
+        _exact_dist_blocked,
+        [spec(d), spec(m_buckets(preset)[0], d), spec(1)],
+        {"variant": "exact_dist_pallas", "k": m_buckets(preset)[0]},
+    )
+
+    full = next_pow2(preset.n)
+    yield (
+        f"proxy_dist__{preset.name}__k{full}",
+        model.proxy_dist,
+        [spec(pd), spec(full, pd)],
+        {"variant": "proxy_dist", "k": full},
+    )
+
+
+# --- blocked wrappers (block size is a lowering-time choice) ---------------
+
+def _golden_step_blocked(x_t, cand, mask, alphas, *, block_k):
+    from .kernels.golden_aggregate import golden_aggregate
+
+    alpha_t, alpha_prev = alphas[0], alphas[1]
+    q = x_t / jnp.sqrt(alpha_t)
+    scale = model._scale_from_alpha(alpha_t)
+    f_hat, m, lse, mean_logit = golden_aggregate(q, cand, mask, scale, block_k=block_k)
+    x_prev = model.ddim_update(x_t, f_hat, alpha_t, alpha_prev)
+    return x_prev, f_hat, model._stats_vec(m, lse, mean_logit)
+
+
+def _pca_ss_blocked(x_t, cand, mask, basis, center, alphas, *, block_k):
+    from .kernels.golden_aggregate import logit_aggregate
+
+    alpha_t, alpha_prev = alphas[0], alphas[1]
+    logits = model._pca_logits(x_t, cand, basis, center, alpha_t)
+    f_hat, m, lse, mean_logit = logit_aggregate(logits, cand, mask, block_k=block_k)
+    x_prev = model.ddim_update(x_t, f_hat, alpha_t, alpha_prev)
+    return x_prev, f_hat, model._stats_vec(m, lse, mean_logit)
+
+
+def _pca_wss_blocked(x_t, cand, mask, basis, center, alphas, *, block_k):
+    del block_k  # WSS is block-averaged by construction (J fixed)
+    return model.pca_step_wss(x_t, cand, mask, basis, center, alphas, blocks=WSS_BLOCKS)
+
+
+def _exact_dist_blocked(x_t, cand, alpha):
+    return model.exact_dist(x_t, cand, alpha)
+
+
+# ---------------------------------------------------------------------------
+
+def build(out_dir: str, only: str | None = None, presets: list[str] | None = None) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {
+        "format": 1,
+        "pca_rank": PCA_RANK,
+        "wss_blocks": WSS_BLOCKS,
+        "kamb_patches": list(KAMB_PATCHES),
+        "presets": [],
+        "artifacts": [],
+    }
+    names = presets or list(PRESETS)
+    for pname in names:
+        preset = PRESETS[pname]
+        manifest["presets"].append(
+            {
+                "name": preset.name,
+                "paper_name": preset.paper_name,
+                "n": preset.n,
+                "h": preset.h,
+                "w": preset.w,
+                "c": preset.c,
+                "d": preset.d,
+                "proxy_d": preset.proxy_d,
+                "classes": preset.classes,
+                "conditional": preset.conditional,
+                "full_bucket": next_pow2(preset.n),
+            }
+        )
+        for name, fn, arg_specs, meta in artifact_plan(preset):
+            if only and only not in name:
+                continue
+            fname = f"{name}.hlo.txt"
+            path = os.path.join(out_dir, fname)
+            entry = {
+                "name": name,
+                "file": fname,
+                "preset": preset.name,
+                "d": preset.d,
+                "inputs": [list(s.shape) for s in arg_specs],
+                **meta,
+            }
+            manifest["artifacts"].append(entry)
+            if os.path.exists(path) and os.path.getsize(path) > 0:
+                continue  # incremental: make drives staleness via mtimes
+            lowered = jax.jit(fn).lower(*arg_specs)
+            text = to_hlo_text(lowered)
+            with open(path, "w") as f:
+                f.write(text)
+            print(f"  wrote {fname} ({len(text) / 1024:.0f} KiB)", flush=True)
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"manifest: {len(manifest['artifacts'])} artifacts -> {out_dir}/manifest.json")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="substring filter on artifact names")
+    ap.add_argument("--presets", default=None, help="comma-separated preset names")
+    args = ap.parse_args()
+    presets = args.presets.split(",") if args.presets else None
+    build(args.out_dir, only=args.only, presets=presets)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,188 @@
+"""L1 hot-spot: masked *streaming-softmax* weighted aggregation over the
+Golden Subset (Sec. 3.2 of the paper; unbiased streaming softmax of
+Dao et al. 2022), as a Pallas kernel.
+
+The kernel walks the candidate axis K in blocks of ``block_k`` rows and keeps
+a FlashAttention-style online-softmax carry:
+
+    m   — running max logit
+    l   — running denominator  sum exp(logit - m)
+    s   — running numerator    sum exp(logit - m) * logit   (for entropy)
+    acc — running weighted sum sum exp(logit - m) * x_i     ([D])
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the carry lives in
+revisited output blocks (the VMEM-scratch role shared memory plays in the
+GPU FlashAttention formulation); the dominant term of the distance
+||q - x_i||^2 = ||q||^2 - 2 q·x_i + ||x_i||^2 is computed as a
+(block_k × D)·(D) matvec which maps onto the MXU systolic array rather than
+the elementwise subtract-square form. ``interpret=True`` everywhere: the CPU
+PJRT plugin cannot run Mosaic custom-calls; real-TPU perf is estimated from
+the BlockSpec footprint in DESIGN.md.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INIT = -1e30
+
+
+def _golden_kernel(q_ref, c_ref, mask_ref, scale_ref, o_ref, m_ref, l_ref, s_ref):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INIT)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    q = q_ref[...]  # [1, D]
+    c = c_ref[...]  # [BK, D]
+    mask = mask_ref[...][0]  # [BK]
+    scale = scale_ref[0, 0]
+
+    # ||q - x_i||^2 = ||q||^2 - 2 q.x_i + ||x_i||^2 ; the q.x_i term is the
+    # MXU-friendly matvec.
+    qq = jnp.sum(q * q)
+    qx = jnp.dot(c, q[0])  # [BK]
+    xx = jnp.sum(c * c, axis=1)  # [BK]
+    d2 = qq - 2.0 * qx + xx
+    logits = -d2 * scale - (1.0 - mask) * 1e30
+
+    m_prev = m_ref[0, 0]
+    m_new = jnp.maximum(m_prev, jnp.max(logits))
+    corr = jnp.exp(m_prev - m_new)
+    p = jnp.exp(logits - m_new) * mask  # [BK]
+
+    l_ref[0, 0] = l_ref[0, 0] * corr + jnp.sum(p)
+    s_ref[0, 0] = s_ref[0, 0] * corr + jnp.sum(p * logits)
+    o_ref[...] = o_ref[...] * corr + (p @ c)[None, :]
+    m_ref[0, 0] = m_new
+
+
+@functools.partial(jax.jit, static_argnames=("block_k",))
+def golden_aggregate(q, c, mask, scale, *, block_k: int = 128):
+    """Streaming masked softmax aggregation.
+
+    Args:
+      q:     [D] noisy query (already divided by sqrt(alpha_t)).
+      c:     [K, D] golden-subset candidates (padded to the bucket size).
+      mask:  [K] validity mask in {0,1} (padding rows are 0).
+      scale: scalar 1/(2 sigma_t^2).
+      block_k: candidate rows per grid step (VMEM tile height).
+
+    Returns:
+      (f_hat [D], m [], lse [], mean_logit []) exactly matching
+      ``ref.golden_aggregate_ref`` up to float32 roundoff.
+    """
+    k, d = c.shape
+    bk = min(block_k, k)
+    assert k % bk == 0, f"bucket {k} not divisible by block {bk}"
+    grid = (k // bk,)
+    q2 = q.reshape(1, d).astype(jnp.float32)
+    mask2 = mask.reshape(1, k).astype(jnp.float32)
+    scale2 = jnp.asarray(scale, jnp.float32).reshape(1, 1)
+
+    out_shapes = [
+        jax.ShapeDtypeStruct((1, d), jnp.float32),  # acc
+        jax.ShapeDtypeStruct((1, 1), jnp.float32),  # m
+        jax.ShapeDtypeStruct((1, 1), jnp.float32),  # l
+        jax.ShapeDtypeStruct((1, 1), jnp.float32),  # s
+    ]
+    acc, m, l, s = pl.pallas_call(
+        _golden_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+            pl.BlockSpec((bk, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, bk), lambda i: (0, i)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_shape=out_shapes,
+        interpret=True,
+    )(q2, c.astype(jnp.float32), mask2, scale2)
+
+    l0 = l[0, 0]
+    f_hat = acc[0] / l0
+    lse = m[0, 0] + jnp.log(l0)
+    mean_logit = s[0, 0] / l0
+    return f_hat, m[0, 0], lse, mean_logit
+
+
+def _logit_kernel(lg_ref, c_ref, mask_ref, o_ref, m_ref, l_ref, s_ref):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INIT)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    c = c_ref[...]  # [BK, D]
+    mask = mask_ref[...][0]  # [BK]
+    logits = lg_ref[...][0] - (1.0 - mask) * 1e30
+
+    m_prev = m_ref[0, 0]
+    m_new = jnp.maximum(m_prev, jnp.max(logits))
+    corr = jnp.exp(m_prev - m_new)
+    p = jnp.exp(logits - m_new) * mask
+
+    l_ref[0, 0] = l_ref[0, 0] * corr + jnp.sum(p)
+    s_ref[0, 0] = s_ref[0, 0] * corr + jnp.sum(p * logits)
+    o_ref[...] = o_ref[...] * corr + (p @ c)[None, :]
+    m_ref[0, 0] = m_new
+
+
+@functools.partial(jax.jit, static_argnames=("block_k",))
+def logit_aggregate(logits, c, mask, *, block_k: int = 128):
+    """Streaming masked softmax aggregation from precomputed logits
+    (the PCA-subspace path: logits computed in the rank-R subspace,
+    aggregation over the full-D candidates).
+
+    Returns (f_hat [D], m [], lse [], mean_logit []).
+    """
+    k, d = c.shape
+    bk = min(block_k, k)
+    assert k % bk == 0
+    grid = (k // bk,)
+    lg2 = logits.reshape(1, k).astype(jnp.float32)
+    mask2 = mask.reshape(1, k).astype(jnp.float32)
+
+    out_shapes = [
+        jax.ShapeDtypeStruct((1, d), jnp.float32),
+        jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        jax.ShapeDtypeStruct((1, 1), jnp.float32),
+    ]
+    acc, m, l, s = pl.pallas_call(
+        _logit_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bk), lambda i: (0, i)),
+            pl.BlockSpec((bk, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, bk), lambda i: (0, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_shape=out_shapes,
+        interpret=True,
+    )(lg2, c.astype(jnp.float32), mask2)
+
+    l0 = l[0, 0]
+    return acc[0] / l0, m[0, 0], m[0, 0] + jnp.log(l0), s[0, 0] / l0

@@ -1,0 +1,64 @@
+"""Pure-jnp reference oracles for every Pallas kernel (L1 correctness spec).
+
+These are the ground truth the pytest/hypothesis suite checks the Pallas
+kernels against. They are intentionally written in the most direct form
+(materialise the full logit vector, plain softmax) so that any streaming /
+blocking error in the kernels shows up as a numeric mismatch.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+BIG = 1e30
+
+
+def sqdist_ref(q: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
+    """Squared euclidean distances ||q - c_i||^2.
+
+    q: [d], c: [K, d]  ->  [K]
+    """
+    diff = c - q[None, :]
+    return jnp.sum(diff * diff, axis=-1)
+
+
+def masked_logits_ref(q, c, mask, scale):
+    """Gaussian-kernel logits -||q - c_i||^2 * scale, invalid rows at -BIG.
+
+    scale = 1 / (2 sigma_t^2); mask: [K] in {0, 1}.
+    """
+    return -sqdist_ref(q, c) * scale - (1.0 - mask) * BIG
+
+
+def golden_aggregate_ref(q, c, mask, scale):
+    """Exact (non-streaming) masked softmax aggregation — Eq. (2) of the
+    paper restricted to the golden subset.
+
+    Returns (f_hat [D], m [], lse [], mean_logit []).
+    """
+    logits = masked_logits_ref(q, c, mask, scale)
+    return logit_aggregate_ref(logits, c, mask)
+
+
+def logit_aggregate_ref(logits, c, mask):
+    """Masked softmax aggregation from externally supplied logits
+    (PCA-subspace path). Returns (f_hat, m, lse, mean_logit)."""
+    logits = logits - (1.0 - mask) * BIG
+    m = jnp.max(logits)
+    p = jnp.exp(logits - m) * mask
+    l = jnp.sum(p)
+    f_hat = (p @ c) / l
+    lse = m + jnp.log(l)
+    mean_logit = jnp.sum(p * logits) / l
+    return f_hat, m, lse, mean_logit
+
+
+def softmax_stats_ref(logits, mask):
+    """(top-1 weight, entropy) of the masked softmax distribution."""
+    logits = logits - (1.0 - mask) * BIG
+    m = jnp.max(logits)
+    p = jnp.exp(logits - m) * mask
+    l = jnp.sum(p)
+    lse = m + jnp.log(l)
+    entropy = lse - jnp.sum(p * logits) / l
+    return jnp.max(p / l), entropy

@@ -1,0 +1,54 @@
+"""L1: blocked squared-distance kernel (Pallas, interpret mode).
+
+One kernel serves three call-sites in the L2 graphs:
+
+  * the *Adaptive Coarse Screening* proxy scan — distances between the
+    s=1/4 average-pooled query and the proxy table (Sec. 3.4, Eq. 4);
+  * the *Precision Golden Set Selection* exact distances inside the
+    candidate pool C_t (Eq. 5);
+  * PCA-subspace logits (distances between rank-R projections).
+
+The candidate table is tiled (block_k × d) over a 1-D grid; each grid step
+emits one block of the distance vector. The q·x_i cross term is an
+MXU-friendly matvec, as in ``golden_aggregate``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _sqdist_kernel(q_ref, c_ref, o_ref):
+    q = q_ref[...]  # [1, d]
+    c = c_ref[...]  # [BK, d]
+    qq = jnp.sum(q * q)
+    qx = jnp.dot(c, q[0])
+    xx = jnp.sum(c * c, axis=1)
+    o_ref[...] = (qq - 2.0 * qx + xx)[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("block_k",))
+def sqdist(q, c, *, block_k: int = 256):
+    """||q - c_i||^2 for all rows of c.
+
+    q: [d], c: [K, d] -> [K] (float32). K must be divisible by the block.
+    """
+    k, d = c.shape
+    bk = min(block_k, k)
+    assert k % bk == 0, f"{k} % {bk} != 0"
+    out = pl.pallas_call(
+        _sqdist_kernel,
+        grid=(k // bk,),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+            pl.BlockSpec((bk, d), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bk), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, k), jnp.float32),
+        interpret=True,
+    )(q.reshape(1, d).astype(jnp.float32), c.astype(jnp.float32))
+    return out[0]

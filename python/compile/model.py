@@ -1,0 +1,302 @@
+"""L2: the analytical-denoiser step graphs (JAX), calling the L1 Pallas
+kernels, lowered once per (variant, preset, bucket) by ``aot.py``.
+
+Every function here is a *pure* jax function over float32 arrays with static
+shapes; ``aot.py`` jit-lowers each to HLO text for the rust runtime. Nothing
+in this module runs on the request path.
+
+Diffusion convention (Sec. 3.1 of the paper):
+
+    x_t = sqrt(a_t) x_0 + sqrt(1 - a_t) eps ,   sigma_t^2 = (1 - a_t) / a_t
+    q_t = x_t / sqrt(a_t)                       (the "descaled" query)
+    logits_i = -||q_t - x_i||^2 / (2 sigma_t^2)
+
+The DDIM (eta = 0) update used throughout (10-step default, as in the paper):
+
+    eps_hat = (x_t - sqrt(a_t) f_hat) / sqrt(1 - a_t)
+    x_prev  = sqrt(a_prev) f_hat + sqrt(1 - a_prev) eps_hat
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.golden_aggregate import golden_aggregate, logit_aggregate
+from .kernels.sqdist import sqdist
+
+EPS = 1e-12
+
+
+# ---------------------------------------------------------------------------
+# shared pieces
+# ---------------------------------------------------------------------------
+
+def _scale_from_alpha(alpha_t):
+    """1 / (2 sigma_t^2) with sigma_t^2 = (1 - a_t)/a_t."""
+    return alpha_t / (2.0 * (1.0 - alpha_t) + EPS)
+
+
+def ddim_update(x_t, f_hat, alpha_t, alpha_prev):
+    """Deterministic DDIM step from x_t to x_{t-1} given the posterior mean."""
+    sa_t = jnp.sqrt(alpha_t)
+    s1a_t = jnp.sqrt(jnp.maximum(1.0 - alpha_t, EPS))
+    eps_hat = (x_t - sa_t * f_hat) / s1a_t
+    return jnp.sqrt(alpha_prev) * f_hat + jnp.sqrt(jnp.maximum(1.0 - alpha_prev, 0.0)) * eps_hat
+
+
+def _stats_vec(m, lse, mean_logit):
+    """[max_logit, logsumexp, entropy, top1_weight] of the posterior."""
+    entropy = lse - mean_logit
+    top1 = jnp.exp(m - lse)
+    return jnp.stack([m, lse, entropy, top1])
+
+
+# ---------------------------------------------------------------------------
+# GoldDiff / Optimal step (Eq. 2 restricted to the golden subset S_t;
+# with mask == 1 and the full-N bucket this *is* the Optimal denoiser)
+# ---------------------------------------------------------------------------
+
+def golden_step(x_t, cand, mask, alphas):
+    """One analytical denoising step over a (padded) golden subset.
+
+    x_t: [D]; cand: [K, D]; mask: [K] in {0,1}; alphas: [2] = (a_t, a_prev).
+    Returns (x_prev [D], f_hat [D], stats [4]).
+    """
+    alpha_t, alpha_prev = alphas[0], alphas[1]
+    q = x_t / jnp.sqrt(alpha_t)
+    scale = _scale_from_alpha(alpha_t)
+    f_hat, m, lse, mean_logit = golden_aggregate(q, cand, mask, scale)
+    x_prev = ddim_update(x_t, f_hat, alpha_t, alpha_prev)
+    return x_prev, f_hat, _stats_vec(m, lse, mean_logit)
+
+
+def golden_step_jnp(x_t, cand, mask, alphas):
+    """Pure-jnp twin of ``golden_step`` (no Pallas) — the XLA-fusion
+    reference point for the §Perf L1-vs-L2 comparison."""
+    alpha_t, alpha_prev = alphas[0], alphas[1]
+    q = x_t / jnp.sqrt(alpha_t)
+    scale = _scale_from_alpha(alpha_t)
+    d2 = jnp.sum((cand - q[None, :]) ** 2, axis=1)
+    logits = -d2 * scale - (1.0 - mask) * 1e30
+    m = jnp.max(logits)
+    p = jnp.exp(logits - m) * mask
+    l = jnp.sum(p)
+    f_hat = (p @ cand) / l
+    lse = m + jnp.log(l)
+    mean_logit = jnp.sum(p * logits) / l
+    x_prev = ddim_update(x_t, f_hat, alpha_t, alpha_prev)
+    return x_prev, f_hat, _stats_vec(m, lse, mean_logit)
+
+
+# ---------------------------------------------------------------------------
+# PCA denoiser (Lukoianov et al.) — subspace logits; SS (unbiased) and WSS
+# (biased, block-averaged) weightings. GoldDiff-wrapped PCA = same graphs at
+# small-k buckets.
+# ---------------------------------------------------------------------------
+
+def _pca_logits(x_t, cand, basis, center, alpha_t, *, use_pallas=True):
+    """Logits from rank-R subspace distances: z = B (x - mu)."""
+    q = x_t / jnp.sqrt(alpha_t)
+    zq = basis @ (q - center)  # [R]
+    zc = (cand - center[None, :]) @ basis.T  # [K, R]
+    if use_pallas:
+        d2 = sqdist(zq, zc)
+    else:
+        d2 = jnp.sum((zc - zq[None, :]) ** 2, axis=1)
+    return -d2 * _scale_from_alpha(alpha_t)
+
+
+def _ss_aggregate_jnp(logits, cand, mask):
+    """Pure-jnp masked softmax aggregation (XLA-fusion serving twin of the
+    L1 streaming kernel; numerically identical up to roundoff)."""
+    logits = logits - (1.0 - mask) * 1e30
+    m = jnp.max(logits)
+    p = jnp.exp(logits - m) * mask
+    l = jnp.sum(p)
+    f_hat = (p @ cand) / l
+    lse = m + jnp.log(l)
+    mean_logit = jnp.sum(p * logits) / l
+    return f_hat, m, lse, mean_logit
+
+
+def pca_step_ss(x_t, cand, mask, basis, center, alphas):
+    """PCA denoiser with the *unbiased* streaming softmax (Dao et al. 2022).
+    This is the paper's "PCA (Unbiased)" row; on golden-subset buckets it is
+    GoldDiff-on-PCA, the paper's primary configuration."""
+    alpha_t, alpha_prev = alphas[0], alphas[1]
+    logits = _pca_logits(x_t, cand, basis, center, alpha_t)
+    f_hat, m, lse, mean_logit = logit_aggregate(logits, cand, mask)
+    x_prev = ddim_update(x_t, f_hat, alpha_t, alpha_prev)
+    return x_prev, f_hat, _stats_vec(m, lse, mean_logit)
+
+
+def pca_step_ss_jnp(x_t, cand, mask, basis, center, alphas):
+    """Pure-jnp twin of ``pca_step_ss`` — the serving-path variant (the
+    Pallas interpret loop is a CPU correctness vehicle; XLA fuses this twin
+    into one tight kernel on the CPU PJRT backend)."""
+    alpha_t, alpha_prev = alphas[0], alphas[1]
+    logits = _pca_logits(x_t, cand, basis, center, alpha_t, use_pallas=False)
+    f_hat, m, lse, mean_logit = _ss_aggregate_jnp(logits, cand, mask)
+    x_prev = ddim_update(x_t, f_hat, alpha_t, alpha_prev)
+    return x_prev, f_hat, _stats_vec(m, lse, mean_logit)
+
+
+def pca_step_wss_jnp(x_t, cand, mask, basis, center, alphas, *, blocks: int = 8):
+    """Pure-jnp twin of ``pca_step_wss`` (subspace logits without the Pallas
+    sqdist; the WSS block-averaging itself was already pure jnp)."""
+    alpha_t, alpha_prev = alphas[0], alphas[1]
+    k, d = cand.shape
+    logits = _pca_logits(x_t, cand, basis, center, alpha_t, use_pallas=False) - (
+        1.0 - mask
+    ) * 1e30
+
+    kb = k // blocks
+    lg = logits.reshape(blocks, kb)
+    mk = mask.reshape(blocks, kb)
+    cb = cand.reshape(blocks, kb, d)
+    m_j = jnp.max(lg, axis=1)
+    p_j = jnp.exp(lg - m_j[:, None]) * mk
+    l_j = jnp.sum(p_j, axis=1)
+    means = jnp.einsum("jk,jkd->jd", p_j, cb) / (l_j[:, None] + EPS)
+    nonempty = (l_j > 0.0).astype(jnp.float32)
+    f_hat = jnp.sum(means * nonempty[:, None], axis=0) / (jnp.sum(nonempty) + EPS)
+
+    m = jnp.max(lg)
+    p = jnp.exp(logits - m) * mask
+    l = jnp.sum(p)
+    lse = m + jnp.log(l + EPS)
+    mean_logit = jnp.sum(p * logits) / (l + EPS)
+    x_prev = ddim_update(x_t, f_hat, alpha_t, alpha_prev)
+    return x_prev, f_hat, _stats_vec(m, lse, mean_logit)
+
+
+def pca_step_wss(x_t, cand, mask, basis, center, alphas, *, blocks: int = 8):
+    """PCA denoiser with the *biased* Weighted Streaming Softmax: the
+    candidate axis is split into ``blocks`` batches, each batch contributes
+    its own softmax mean, and batch means are averaged (batch-level
+    averaging). This reproduces the weight-flattening trick of the PCA
+    baseline and its over-smoothing failure mode (Fig. 2 / Sec. 3.2).
+    """
+    alpha_t, alpha_prev = alphas[0], alphas[1]
+    k, d = cand.shape
+    logits = _pca_logits(x_t, cand, basis, center, alpha_t) - (1.0 - mask) * 1e30
+
+    kb = k // blocks
+    lg = logits.reshape(blocks, kb)
+    mk = mask.reshape(blocks, kb)
+    cb = cand.reshape(blocks, kb, d)
+
+    m_j = jnp.max(lg, axis=1)  # [J]
+    p_j = jnp.exp(lg - m_j[:, None]) * mk  # [J, kb]
+    l_j = jnp.sum(p_j, axis=1)  # [J]
+    means = jnp.einsum("jk,jkd->jd", p_j, cb) / (l_j[:, None] + EPS)  # [J, D]
+    # batch-level averaging over non-empty blocks — the flattening bias.
+    nonempty = (l_j > 0.0).astype(jnp.float32)
+    f_hat = jnp.sum(means * nonempty[:, None], axis=0) / (jnp.sum(nonempty) + EPS)
+
+    # stats from the exact (global) weights, for apples-to-apples telemetry
+    m = jnp.max(lg)
+    p = jnp.exp(logits - m) * mask
+    l = jnp.sum(p)
+    lse = m + jnp.log(l + EPS)
+    mean_logit = jnp.sum(p * logits) / (l + EPS)
+    x_prev = ddim_update(x_t, f_hat, alpha_t, alpha_prev)
+    return x_prev, f_hat, _stats_vec(m, lse, mean_logit)
+
+
+# ---------------------------------------------------------------------------
+# Kamb (patch-based) denoiser — per-pixel softmax over patch distances,
+# expressed with reduce_window so it lowers to one fused XLA graph.
+# ---------------------------------------------------------------------------
+
+def kamb_step(x_t, cand, mask, alphas, *, h: int, w: int, c: int, patch: int):
+    """Patch-based analytical denoiser (Kamb & Ganguli 2024).
+
+    For every pixel location, weights are a softmax over the N candidates of
+    the local patch distance (window ``patch``), and the output pixel is the
+    weighted average of candidate pixels — translation-equivariant locality.
+
+    x_t: [D]; cand: [K, D]; mask: [K]; alphas: [2]. D = h*w*c.
+    """
+    alpha_t, alpha_prev = alphas[0], alphas[1]
+    k = cand.shape[0]
+    q = (x_t / jnp.sqrt(alpha_t)).reshape(h, w, c)
+    ci = cand.reshape(k, h, w, c)
+
+    diff2 = jnp.sum((ci - q[None]) ** 2, axis=-1)  # [K, h, w]
+    pad = patch // 2
+    # mean patch distance via summed-window / window-size (same padding)
+    win = jax.lax.reduce_window(
+        diff2,
+        0.0,
+        jax.lax.add,
+        window_dimensions=(1, patch, patch),
+        window_strides=(1, 1, 1),
+        padding=((0, 0), (pad, pad), (pad, pad)),
+    )
+    ones = jax.lax.reduce_window(
+        jnp.ones_like(diff2[:1]),
+        0.0,
+        jax.lax.add,
+        window_dimensions=(1, patch, patch),
+        window_strides=(1, 1, 1),
+        padding=((0, 0), (pad, pad), (pad, pad)),
+    )
+    patch_d2 = win / ones  # [K, h, w]
+
+    scale = _scale_from_alpha(alpha_t)
+    logits = -patch_d2 * scale - (1.0 - mask)[:, None, None] * 1e30  # [K,h,w]
+    m = jnp.max(logits, axis=0, keepdims=True)
+    p = jnp.exp(logits - m) * mask[:, None, None]
+    l = jnp.sum(p, axis=0, keepdims=True)
+    wts = p / (l + EPS)  # [K, h, w]
+    f_img = jnp.einsum("khw,khwc->hwc", wts, ci)
+    f_hat = f_img.reshape(-1)
+
+    # stats from the centre pixel's distribution (representative telemetry)
+    lg_c = logits[:, h // 2, w // 2]
+    mc = jnp.max(lg_c)
+    pc = jnp.exp(lg_c - mc) * mask
+    lc = jnp.sum(pc)
+    lse = mc + jnp.log(lc + EPS)
+    mean_logit = jnp.sum(pc * lg_c) / (lc + EPS)
+    x_prev = ddim_update(x_t, f_hat, alpha_t, alpha_prev)
+    return x_prev, f_hat, _stats_vec(mc, lse, mean_logit)
+
+
+# ---------------------------------------------------------------------------
+# Wiener filter — global-Gaussian closed form; no dataset access at runtime.
+# ---------------------------------------------------------------------------
+
+def wiener_step(x_t, mean, var, alphas):
+    """Classical Wiener denoiser: fit N(mean, diag(var)) to the data and
+    shrink towards the mean — complexity independent of N (Tab. 1)."""
+    alpha_t, alpha_prev = alphas[0], alphas[1]
+    q = x_t / jnp.sqrt(alpha_t)
+    sigma2 = (1.0 - alpha_t) / (alpha_t + EPS)
+    f_hat = mean + (var / (var + sigma2)) * (q - mean)
+    x_prev = ddim_update(x_t, f_hat, alpha_t, alpha_prev)
+    zeros = jnp.zeros(4, jnp.float32)
+    return x_prev, f_hat, zeros
+
+
+# ---------------------------------------------------------------------------
+# Retrieval graphs — exact refine distances and the coarse proxy scan.
+# ---------------------------------------------------------------------------
+
+def exact_dist(x_t, cand, alpha):
+    """||x_t/sqrt(a_t) - c_i||^2 over the candidate pool C_t (Eq. 5 input)."""
+    q = x_t / jnp.sqrt(alpha[0])
+    return (sqdist(q, cand),)
+
+
+def exact_dist_jnp(x_t, cand, alpha):
+    """Pure-jnp twin of ``exact_dist`` (serving path)."""
+    q = x_t / jnp.sqrt(alpha[0])
+    return (jnp.sum((cand - q[None, :]) ** 2, axis=1),)
+
+
+def proxy_dist(qp, table):
+    """Coarse-screening distances in the s=1/4 proxy space (Eq. 4 input)."""
+    return (sqdist(qp, table),)

@@ -1,0 +1,85 @@
+"""Dataset presets shared by the compile path and (via artifacts/manifest.json)
+the rust coordinator.
+
+Each preset mirrors one dataset of the paper's evaluation protocol (Sec. 4.1),
+scaled to the CPU testbed per DESIGN.md §3 (Substitutions). ``d`` is the
+flattened dimension, ``proxy_d`` the s=1/4 spatially-downsampled proxy
+dimension used by Adaptive Coarse Screening (Sec. 3.4).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class Preset:
+    name: str
+    paper_name: str
+    n: int
+    h: int
+    w: int
+    c: int
+    classes: int
+    conditional: bool = False
+
+    @property
+    def d(self) -> int:
+        return self.h * self.w * self.c
+
+    @property
+    def proxy_d(self) -> int:
+        # s = 1/4 spatial average pooling (moons is already 2-D: identity).
+        if self.h == 1:
+            return self.w * self.c
+        return (self.h // 4) * (self.w // 4) * self.c
+
+
+PRESETS: dict[str, Preset] = {
+    p.name: p
+    for p in [
+        Preset("moons", "Moons (Fig. 1)", 2000, 1, 2, 1, 2),
+        Preset("mnist-sim", "MNIST", 8000, 16, 16, 1, 10),
+        Preset("fashion-sim", "Fashion-MNIST", 8000, 16, 16, 1, 10),
+        Preset("cifar-sim", "CIFAR-10", 10000, 16, 16, 3, 10),
+        Preset("celeba-sim", "CelebA-HQ", 6000, 24, 24, 3, 40),
+        Preset("afhq-sim", "AFHQv2", 6000, 24, 24, 3, 3),
+        Preset("imagenet-sim", "ImageNet-1K", 50000, 16, 16, 3, 1000, True),
+    ]
+}
+
+#: rank of the local PCA bases (Lukoianov et al. baseline).
+PCA_RANK = 32
+
+#: Kamb patch sizes compiled (the p_t schedule snaps to the nearest).
+KAMB_PATCHES = (3, 7)
+
+#: number of averaging blocks in the biased Weighted Streaming Softmax.
+WSS_BLOCKS = 8
+
+#: dense power-of-two ladder: tight bucket padding halves the wasted
+#: gather+compute vs a 4×-spaced ladder (§Perf iteration 3)
+_K_LADDER = (32, 64, 128, 256, 512, 1024, 2048, 4096, 8192, 16384, 32768, 65536)
+
+
+def next_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+def k_buckets(preset: Preset) -> list[int]:
+    """Aggregation-bucket ladder for a preset: powers of two up to the
+    padded full-dataset size (the full bucket doubles as the Optimal
+    full-scan variant)."""
+    full = next_pow2(preset.n)
+    ks = [k for k in _K_LADDER if k < full]
+    return ks + [full]
+
+
+def m_buckets(preset: Preset) -> list[int]:
+    """Candidate-pool ladder for the exact-distance refine stage."""
+    full = next_pow2(preset.n)
+    ms = [m for m in (512, 2048, 8192, 16384) if m < full]
+    return ms + [full]

@@ -1,0 +1,89 @@
+"""AOT pipeline: lowering produces parseable HLO text and a coherent
+manifest with the exact input signatures the rust runtime expects."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot
+from compile.presets import PRESETS, k_buckets, m_buckets, next_pow2
+
+
+def test_next_pow2():
+    assert next_pow2(1) == 1
+    assert next_pow2(2) == 2
+    assert next_pow2(3) == 4
+    assert next_pow2(50000) == 65536
+    assert next_pow2(8000) == 8192
+
+
+def test_bucket_ladders_cover_full_dataset():
+    for p in PRESETS.values():
+        ks = k_buckets(p)
+        assert ks == sorted(ks)
+        assert ks[-1] >= p.n, p.name
+        ms = m_buckets(p)
+        assert ms[-1] >= p.n, p.name
+
+
+def test_preset_proxy_is_sixteenth_of_spatial():
+    p = PRESETS["cifar-sim"]
+    assert p.d == 16 * 16 * 3
+    assert p.proxy_d == 4 * 4 * 3  # s = 1/4 both spatial dims
+
+
+def test_moons_plan_has_no_image_variants():
+    names = [name for name, *_ in aot.artifact_plan(PRESETS["moons"])]
+    assert not any("pca" in n or "kamb" in n or "wiener" in n for n in names)
+    assert any(n.startswith("golden_step") for n in names)
+
+
+def test_imagenet_plan_is_conditional_and_large():
+    p = PRESETS["imagenet-sim"]
+    assert p.conditional and p.n == 50000 and p.classes == 1000
+    ks = [meta["k"] for _, _, _, meta in aot.artifact_plan(p) if meta["variant"] == "golden_step"]
+    assert 65536 in ks  # the Optimal full-scan bucket exists
+
+
+def test_build_moons_writes_hlo_and_manifest(tmp_path):
+    out = str(tmp_path / "artifacts")
+    aot.build(out, presets=["moons"])
+    manifest = json.load(open(os.path.join(out, "manifest.json")))
+    assert manifest["format"] == 1
+    arts = manifest["artifacts"]
+    assert len(arts) >= 5
+    for a in arts:
+        path = os.path.join(out, a["file"])
+        assert os.path.exists(path), a["file"]
+        text = open(path).read()
+        assert "ENTRY" in text and "HloModule" in text
+        # input arity matches the variant
+        if a["variant"] == "golden_step":
+            assert len(a["inputs"]) == 4
+            assert a["inputs"][1] == [a["k"], 2]  # cand: [K, D]
+
+
+def test_build_is_incremental(tmp_path):
+    out = str(tmp_path / "artifacts")
+    aot.build(out, presets=["moons"])
+    path = os.path.join(out, "golden_step__moons__k32.hlo.txt")
+    before = os.path.getmtime(path)
+    aot.build(out, presets=["moons"])  # second run must not rewrite
+    assert os.path.getmtime(path) == before
+
+
+@pytest.mark.parametrize("variant,n_in", [
+    ("golden_step", 4),
+    ("pca_step_ss", 6),
+    ("pca_step_wss", 6),
+    ("kamb_step", 4),
+    ("exact_dist", 3),
+    ("proxy_dist", 2),
+])
+def test_plan_input_arity(variant, n_in):
+    plan = list(aot.artifact_plan(PRESETS["cifar-sim"]))
+    matching = [p for p in plan if p[3]["variant"] == variant]
+    assert matching, variant
+    for _, _, specs, _ in matching:
+        assert len(specs) == n_in

@@ -1,0 +1,184 @@
+"""L1 correctness: Pallas kernels vs pure-jnp references.
+
+hypothesis sweeps shapes, masks, scales and data distributions; any
+streaming/blocking/masking error in the kernels shows up as an allclose
+failure against ref.py.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.golden_aggregate import golden_aggregate, logit_aggregate
+from compile.kernels.sqdist import sqdist
+
+RTOL, ATOL = 2e-4, 2e-5
+
+
+def _data(seed, k, d, valid_frac=1.0, spread=1.0):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=d) * spread, jnp.float32)
+    c = jnp.asarray(rng.normal(size=(k, d)) * spread, jnp.float32)
+    nvalid = max(1, int(k * valid_frac))
+    mask = np.zeros(k, np.float32)
+    mask[rng.choice(k, size=nvalid, replace=False)] = 1.0
+    return q, c, jnp.asarray(mask)
+
+
+# ----------------------------------------------------------------- sqdist --
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    k=st.sampled_from([4, 32, 128, 256, 512]),
+    d=st.sampled_from([2, 3, 16, 48, 257]),
+)
+def test_sqdist_matches_ref(seed, k, d):
+    q, c, _ = _data(seed, k, d)
+    got = sqdist(q, c)
+    want = ref.sqdist_ref(q, c)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=1e-3)
+
+
+def test_sqdist_zero_distance():
+    c = jnp.ones((8, 5), jnp.float32) * 3.0
+    d = sqdist(jnp.ones(5, jnp.float32) * 3.0, c)
+    np.testing.assert_allclose(d, np.zeros(8), atol=1e-5)
+
+
+def test_sqdist_single_block_vs_many_blocks():
+    q, c, _ = _data(7, 512, 16)
+    np.testing.assert_allclose(
+        sqdist(q, c, block_k=512), sqdist(q, c, block_k=64), rtol=1e-5, atol=1e-4
+    )
+
+
+# ------------------------------------------------------- golden_aggregate --
+
+@settings(max_examples=30, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    k=st.sampled_from([8, 64, 128, 256, 1024]),
+    d=st.sampled_from([2, 16, 48, 130]),
+    valid_frac=st.sampled_from([0.05, 0.3, 1.0]),
+    scale=st.sampled_from([1e-3, 0.1, 1.0, 25.0]),
+)
+def test_golden_aggregate_matches_ref(seed, k, d, valid_frac, scale):
+    q, c, mask = _data(seed, k, d, valid_frac)
+    f, m, lse, ml = golden_aggregate(q, c, mask, scale)
+    fr, mr, lser, mlr = ref.golden_aggregate_ref(q, c, mask, scale)
+    np.testing.assert_allclose(f, fr, rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(m, mr, rtol=RTOL, atol=1e-4)
+    np.testing.assert_allclose(lse, lser, rtol=RTOL, atol=1e-4)
+    np.testing.assert_allclose(ml, mlr, rtol=RTOL, atol=1e-3)
+
+
+def test_golden_aggregate_single_valid_row_returns_that_row():
+    """k_min = 1 degenerate case: posterior collapses to the lone sample."""
+    q, c, _ = _data(3, 64, 16)
+    mask = np.zeros(64, np.float32)
+    mask[17] = 1.0
+    f, _, _, _ = golden_aggregate(q, c, jnp.asarray(mask), 0.5)
+    np.testing.assert_allclose(f, c[17], rtol=1e-5, atol=1e-5)
+
+
+def test_golden_aggregate_huge_scale_selects_nearest():
+    """scale -> inf (sigma -> 0): streaming softmax must remain stable and
+    pick the nearest neighbour (the paper's low-noise selection regime)."""
+    q, c, mask = _data(11, 128, 8)
+    f, m, lse, _ = golden_aggregate(q, c, mask, 1e4)
+    d2 = np.asarray(ref.sqdist_ref(q, c))
+    nn = int(np.argmin(d2))
+    np.testing.assert_allclose(f, c[nn], rtol=1e-3, atol=1e-3)
+    assert np.isfinite(float(lse))
+
+
+def test_golden_aggregate_zero_scale_is_uniform_mean():
+    """scale -> 0 (sigma -> inf): weights become uniform over valid rows —
+    the paper's high-noise Monte-Carlo-integrator regime."""
+    q, c, mask = _data(13, 256, 8, valid_frac=0.5)
+    f, _, _, _ = golden_aggregate(q, c, mask, 0.0)
+    want = np.asarray(c)[np.asarray(mask) > 0].mean(axis=0)
+    np.testing.assert_allclose(f, want, rtol=1e-4, atol=1e-4)
+
+
+def test_golden_aggregate_block_size_invariance():
+    q, c, mask = _data(5, 512, 24, valid_frac=0.4)
+    f1, *_ = golden_aggregate(q, c, mask, 2.0, block_k=512)
+    f2, *_ = golden_aggregate(q, c, mask, 2.0, block_k=32)
+    np.testing.assert_allclose(f1, f2, rtol=1e-5, atol=1e-5)
+
+
+def test_golden_aggregate_masked_rows_do_not_contribute():
+    """Changing masked-out rows must not change the result at all."""
+    q, c, mask = _data(9, 128, 16, valid_frac=0.25)
+    f1, *_ = golden_aggregate(q, c, mask, 1.0)
+    c2 = np.asarray(c).copy()
+    c2[np.asarray(mask) == 0] = 1e6
+    f2, *_ = golden_aggregate(q, jnp.asarray(c2), mask, 1.0)
+    np.testing.assert_allclose(f1, f2, rtol=1e-5, atol=1e-5)
+
+
+def test_golden_aggregate_output_in_convex_hull():
+    """f_hat is a convex combination of the candidates (posterior mean)."""
+    q, c, mask = _data(21, 64, 4)
+    f, *_ = golden_aggregate(q, c, mask, 0.7)
+    lo = np.asarray(c).min(axis=0) - 1e-4
+    hi = np.asarray(c).max(axis=0) + 1e-4
+    assert np.all(np.asarray(f) >= lo) and np.all(np.asarray(f) <= hi)
+
+
+# -------------------------------------------------------- logit_aggregate --
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    k=st.sampled_from([8, 128, 256, 512]),
+    d=st.sampled_from([4, 32, 108]),
+    valid_frac=st.sampled_from([0.1, 1.0]),
+)
+def test_logit_aggregate_matches_ref(seed, k, d, valid_frac):
+    rng = np.random.default_rng(seed)
+    _, c, mask = _data(seed, k, d, valid_frac)
+    logits = jnp.asarray(rng.normal(size=k) * 5.0, jnp.float32)
+    f, m, lse, ml = logit_aggregate(logits, c, mask)
+    fr, mr, lser, mlr = ref.logit_aggregate_ref(logits, c, mask)
+    np.testing.assert_allclose(f, fr, rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(lse, lser, rtol=RTOL, atol=1e-4)
+
+
+def test_logit_aggregate_is_shift_invariant():
+    """softmax(logits + const) == softmax(logits) — online max handles it."""
+    _, c, mask = _data(31, 128, 8, 0.5)
+    logits = jnp.asarray(np.random.default_rng(31).normal(size=128), jnp.float32)
+    f1, *_ = logit_aggregate(logits, c, mask)
+    f2, *_ = logit_aggregate(logits + 100.0, c, mask)
+    np.testing.assert_allclose(f1, f2, rtol=1e-4, atol=1e-4)
+
+
+# --------------------------------------------------- theorem-1 truncation --
+
+@pytest.mark.parametrize("scale", [0.05, 0.5, 5.0, 50.0])
+def test_truncation_error_respects_theorem1_bound(scale):
+    """|| f_D - f_S ||_2 <= 2 R (N - k) exp(-Delta_k)  (paper Thm. 1)."""
+    rng = np.random.default_rng(42)
+    n, d, k = 256, 16, 32
+    q = jnp.asarray(rng.normal(size=d), jnp.float32)
+    c = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    full_mask = jnp.ones(n, jnp.float32)
+
+    logits = np.asarray(ref.masked_logits_ref(q, c, full_mask, scale))
+    order = np.argsort(-logits)
+    topk_mask = np.zeros(n, np.float32)
+    topk_mask[order[:k]] = 1.0
+
+    f_full, *_ = ref.golden_aggregate_ref(q, c, full_mask, scale)
+    f_trunc, *_ = ref.golden_aggregate_ref(q, c, jnp.asarray(topk_mask), scale)
+
+    err = float(np.linalg.norm(np.asarray(f_full) - np.asarray(f_trunc)))
+    radius = float(np.max(np.linalg.norm(np.asarray(c), axis=1)))
+    gap = float(logits[order[0]] - logits[order[k]])
+    bound = 2.0 * radius * (n - k) * np.exp(-gap)
+    assert err <= bound + 1e-5, f"err {err} > bound {bound}"

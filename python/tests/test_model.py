@@ -1,0 +1,246 @@
+"""L2 correctness: step graphs — DDIM algebra, regime behaviour, baselines."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+
+def _setup(seed, k=128, d=48, spread=1.0):
+    rng = np.random.default_rng(seed)
+    x_t = jnp.asarray(rng.normal(size=d), jnp.float32)
+    cand = jnp.asarray(rng.normal(size=(k, d)) * spread, jnp.float32)
+    mask = jnp.ones(k, jnp.float32)
+    return x_t, cand, mask
+
+
+# ------------------------------------------------------------------- DDIM --
+
+def test_ddim_terminal_step_returns_posterior_mean():
+    """alpha_prev = 1 must return f_hat exactly (x_0 prediction)."""
+    x_t, cand, mask = _setup(0)
+    alphas = jnp.asarray([0.5, 1.0], jnp.float32)
+    x_prev, f_hat, _ = model.golden_step(x_t, cand, mask, alphas)
+    np.testing.assert_allclose(x_prev, f_hat, rtol=1e-5, atol=1e-5)
+
+
+def test_ddim_identity_when_alpha_unchanged():
+    """alpha_prev == alpha_t must be the identity map on x_t."""
+    x_t, cand, mask = _setup(1)
+    alphas = jnp.asarray([0.37, 0.37], jnp.float32)
+    x_prev, _, _ = model.golden_step(x_t, cand, mask, alphas)
+    np.testing.assert_allclose(x_prev, x_t, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    a_t=st.floats(0.01, 0.95),
+    a_prev=st.floats(0.02, 1.0),
+)
+def test_ddim_update_algebra(seed, a_t, a_prev):
+    """ddim_update reproduces the closed form for arbitrary f_hat."""
+    rng = np.random.default_rng(seed)
+    d = 16
+    x_t = jnp.asarray(rng.normal(size=d), jnp.float32)
+    f = jnp.asarray(rng.normal(size=d), jnp.float32)
+    got = model.ddim_update(x_t, f, a_t, a_prev)
+    eps = (np.asarray(x_t) - np.sqrt(a_t) * np.asarray(f)) / np.sqrt(1 - a_t)
+    want = np.sqrt(a_prev) * np.asarray(f) + np.sqrt(max(1 - a_prev, 0)) * eps
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------- golden vs jnp --
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), a_t=st.floats(0.05, 0.9))
+def test_golden_step_pallas_matches_jnp_twin(seed, a_t):
+    x_t, cand, mask = _setup(seed)
+    alphas = jnp.asarray([a_t, min(a_t * 1.5, 1.0)], jnp.float32)
+    xp1, f1, s1 = model.golden_step(x_t, cand, mask, alphas)
+    xp2, f2, s2 = model.golden_step_jnp(x_t, cand, mask, alphas)
+    np.testing.assert_allclose(xp1, xp2, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(f1, f2, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(s1, s2, rtol=2e-3, atol=2e-3)
+
+
+# ------------------------------------------------------------ regime laws --
+
+def test_low_noise_step_snaps_to_nearest_neighbour():
+    """Selection regime: alpha -> 1 collapses the posterior to top-1."""
+    x_t, cand, mask = _setup(5, k=64, d=8)
+    alphas = jnp.asarray([0.9999, 1.0], jnp.float32)
+    _, f_hat, stats = model.golden_step(x_t, cand, mask, alphas)
+    q = np.asarray(x_t) / np.sqrt(0.9999)
+    nn = int(np.argmin(((np.asarray(cand) - q) ** 2).sum(1)))
+    np.testing.assert_allclose(f_hat, cand[nn], rtol=1e-3, atol=1e-3)
+    assert float(stats[3]) > 0.99  # top-1 weight ~ 1
+    assert float(stats[2]) < 0.05  # entropy ~ 0
+
+
+def test_high_noise_step_approaches_global_mean():
+    """Integration regime: alpha -> 0 makes weights near-uniform."""
+    x_t, cand, mask = _setup(6, k=256, d=8)
+    alphas = jnp.asarray([1e-4, 1e-3], jnp.float32)
+    _, f_hat, stats = model.golden_step(x_t, cand, mask, alphas)
+    gmean = np.asarray(cand).mean(axis=0)
+    np.testing.assert_allclose(f_hat, gmean, rtol=0.2, atol=0.2)
+    assert float(stats[2]) > np.log(256) * 0.8  # entropy near log K
+
+
+# --------------------------------------------------------------- PCA path --
+
+def _pca_setup(seed, k=256, d=48, r=8):
+    rng = np.random.default_rng(seed)
+    x_t = jnp.asarray(rng.normal(size=d), jnp.float32)
+    cand = jnp.asarray(rng.normal(size=(k, d)), jnp.float32)
+    mask = jnp.ones(k, jnp.float32)
+    basis, _ = np.linalg.qr(rng.normal(size=(d, r)))
+    basis = jnp.asarray(basis.T, jnp.float32)  # [R, D] orthonormal rows
+    center = jnp.asarray(rng.normal(size=d), jnp.float32)
+    return x_t, cand, mask, basis, center
+
+
+def test_pca_ss_matches_reference_subspace_softmax():
+    x_t, cand, mask, basis, center = _pca_setup(7)
+    alphas = jnp.asarray([0.4, 0.6], jnp.float32)
+    _, f_hat, _ = model.pca_step_ss(x_t, cand, mask, basis, center, alphas)
+
+    q = np.asarray(x_t) / np.sqrt(0.4)
+    zq = np.asarray(basis) @ (q - np.asarray(center))
+    zc = (np.asarray(cand) - np.asarray(center)) @ np.asarray(basis).T
+    scale = 0.4 / (2 * 0.6)
+    logits = -((zc - zq) ** 2).sum(1) * scale
+    w = np.exp(logits - logits.max())
+    w /= w.sum()
+    np.testing.assert_allclose(f_hat, w @ np.asarray(cand), rtol=1e-3, atol=1e-3)
+
+
+def test_pca_wss_is_flatter_than_ss():
+    """The biased WSS output must be closer to the global mean (smoothing
+    bias, Fig. 2) than the unbiased SS output, in a low-noise setting."""
+    x_t, cand, mask, basis, center = _pca_setup(8)
+    alphas = jnp.asarray([0.99, 1.0], jnp.float32)
+    _, f_ss, _ = model.pca_step_ss(x_t, cand, mask, basis, center, alphas)
+    _, f_wss, _ = model.pca_step_wss(x_t, cand, mask, basis, center, alphas)
+    gmean = np.asarray(cand).mean(0)
+    assert np.linalg.norm(np.asarray(f_wss) - gmean) < np.linalg.norm(
+        np.asarray(f_ss) - gmean
+    )
+
+
+def test_pca_wss_equals_mean_of_block_means():
+    x_t, cand, mask, basis, center = _pca_setup(9, k=64)
+    alphas = jnp.asarray([0.5, 0.7], jnp.float32)
+    _, f_wss, _ = model.pca_step_wss(x_t, cand, mask, basis, center, alphas, blocks=4)
+
+    q = np.asarray(x_t) / np.sqrt(0.5)
+    zq = np.asarray(basis) @ (q - np.asarray(center))
+    zc = (np.asarray(cand) - np.asarray(center)) @ np.asarray(basis).T
+    logits = -((zc - zq) ** 2).sum(1) * (0.5 / (2 * 0.5))
+    means = []
+    for blk in range(4):
+        lg = logits[blk * 16 : (blk + 1) * 16]
+        w = np.exp(lg - lg.max())
+        w /= w.sum()
+        means.append(w @ np.asarray(cand)[blk * 16 : (blk + 1) * 16])
+    np.testing.assert_allclose(f_wss, np.mean(means, axis=0), rtol=1e-3, atol=1e-3)
+
+
+# -------------------------------------------------------------- Kamb path --
+
+def test_kamb_patch1_on_flat_images_matches_pixelwise_softmax():
+    rng = np.random.default_rng(10)
+    h = w = 6
+    c = 1
+    k = 32
+    x_t = jnp.asarray(rng.normal(size=h * w * c), jnp.float32)
+    cand = jnp.asarray(rng.normal(size=(k, h * w * c)), jnp.float32)
+    mask = jnp.ones(k, jnp.float32)
+    alphas = jnp.asarray([0.5, 0.8], jnp.float32)
+    _, f_hat, _ = model.kamb_step(x_t, cand, mask, alphas, h=h, w=w, c=c, patch=1)
+
+    q = np.asarray(x_t).reshape(h, w) / np.sqrt(0.5)
+    ci = np.asarray(cand).reshape(k, h, w)
+    scale = 0.5 / (2 * 0.5)
+    logits = -((ci - q) ** 2) * scale  # patch=1: pixelwise
+    m = logits.max(0)
+    p = np.exp(logits - m)
+    want = (p * ci).sum(0) / p.sum(0)
+    np.testing.assert_allclose(
+        np.asarray(f_hat).reshape(h, w), want, rtol=1e-3, atol=1e-3
+    )
+
+
+def test_kamb_output_within_candidate_pixel_range():
+    rng = np.random.default_rng(11)
+    h = w = 8
+    cch = 3
+    k = 16
+    x_t = jnp.asarray(rng.normal(size=h * w * cch), jnp.float32)
+    cand = jnp.asarray(rng.normal(size=(k, h * w * cch)), jnp.float32)
+    alphas = jnp.asarray([0.3, 0.5], jnp.float32)
+    _, f_hat, _ = model.kamb_step(
+        x_t, cand, jnp.ones(k, jnp.float32), alphas, h=h, w=w, c=cch, patch=3
+    )
+    ci = np.asarray(cand).reshape(k, -1)
+    assert np.all(np.asarray(f_hat) <= ci.max(0) + 1e-4)
+    assert np.all(np.asarray(f_hat) >= ci.min(0) - 1e-4)
+
+
+# ------------------------------------------------------------ Wiener path --
+
+def test_wiener_gaussian_fixed_point():
+    """If x_t is exactly the (scaled) mean, wiener returns the mean."""
+    d = 32
+    mean = jnp.asarray(np.linspace(-1, 1, d), jnp.float32)
+    var = jnp.ones(d, jnp.float32) * 0.5
+    a_t = 0.6
+    x_t = jnp.sqrt(a_t) * mean
+    alphas = jnp.asarray([a_t, 0.9], jnp.float32)
+    _, f_hat, _ = model.wiener_step(x_t, mean, var, alphas)
+    np.testing.assert_allclose(f_hat, mean, rtol=1e-4, atol=1e-4)
+
+
+def test_wiener_shrinkage_direction():
+    """High noise shrinks towards the mean; low noise trusts the query."""
+    d = 8
+    rng = np.random.default_rng(12)
+    mean = jnp.zeros(d, jnp.float32)
+    var = jnp.ones(d, jnp.float32)
+    q = rng.normal(size=d).astype(np.float32)
+
+    for a_t, closeness in [(0.01, 0.1), (0.999, 0.9)]:
+        x_t = jnp.asarray(np.sqrt(a_t) * q)
+        alphas = jnp.asarray([a_t, 1.0], jnp.float32)
+        _, f_hat, _ = model.wiener_step(x_t, mean, var, alphas)
+        ratio = np.linalg.norm(np.asarray(f_hat)) / np.linalg.norm(q)
+        if closeness < 0.5:
+            assert ratio < 0.15
+        else:
+            assert ratio > 0.85
+
+
+# -------------------------------------------------------------- distances --
+
+def test_exact_dist_matches_ref():
+    rng = np.random.default_rng(13)
+    d, m = 48, 256
+    x_t = jnp.asarray(rng.normal(size=d), jnp.float32)
+    cand = jnp.asarray(rng.normal(size=(m, d)), jnp.float32)
+    (got,) = model.exact_dist(x_t, cand, jnp.asarray([0.25], jnp.float32))
+    q = np.asarray(x_t) / 0.5
+    want = ((np.asarray(cand) - q) ** 2).sum(1)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+
+def test_proxy_dist_matches_ref():
+    rng = np.random.default_rng(14)
+    pd, m = 48, 512
+    qp = jnp.asarray(rng.normal(size=pd), jnp.float32)
+    table = jnp.asarray(rng.normal(size=(m, pd)), jnp.float32)
+    (got,) = model.proxy_dist(qp, table)
+    np.testing.assert_allclose(got, ref.sqdist_ref(qp, table), rtol=1e-4, atol=1e-3)

@@ -1,0 +1,7 @@
+//! Regenerates the paper's Fig. 1: Posterior Progressive Concentration on
+//! the Moons dataset — effective support / 90%-mass support / top-1 weight
+//! per denoising step.
+fn main() -> anyhow::Result<()> {
+    golddiff::benchlib::figures::run_concentration("moons", 8, 0)?;
+    Ok(())
+}

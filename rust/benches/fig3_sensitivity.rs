@@ -1,0 +1,8 @@
+//! Regenerates the paper's Fig. 3: (a) weight-distribution evolution on the
+//! CIFAR-10 stand-in, (b) sensitivity to random subset size
+//! N_sub ∈ {10, 100, 1000, 5000} vs the full dataset, split by stage.
+fn main() -> anyhow::Result<()> {
+    golddiff::benchlib::figures::run_concentration("cifar-sim", 4, 0)?;
+    golddiff::benchlib::figures::run_sensitivity("cifar-sim", 0)?;
+    Ok(())
+}

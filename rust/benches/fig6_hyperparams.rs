@@ -1,0 +1,6 @@
+//! Regenerates the paper's Fig. 6: sensitivity of GoldDiff to the coarse
+//! candidate bound m_max and the golden-subset bound k_min across datasets.
+fn main() -> anyhow::Result<()> {
+    golddiff::benchlib::experiments::run_fig6(0)?;
+    Ok(())
+}

@@ -1,0 +1,131 @@
+//! §Perf microbenchmarks for the serving hot path (EXPERIMENTS.md §Perf):
+//!
+//!   1. coarse proxy scan throughput (rows/s) vs thread count;
+//!   2. exact refine top-k inside the candidate pool;
+//!   3. gather + upload of the golden subset;
+//!   4. PJRT dispatch of golden_step per k-bucket (Pallas streaming kernel);
+//!   5. golden_step (Pallas) vs golden_step_jnp (pure-XLA twin) — the
+//!      L1-vs-L2 structural comparison;
+//!   6. end-to-end XLA-backed step breakdown per method.
+
+use std::time::Instant;
+
+use golddiff::benchlib;
+use golddiff::denoiser::StepContext;
+use golddiff::index::scan::ProxyIndex;
+use golddiff::schedule::noise::{NoiseSchedule, ScheduleKind};
+use golddiff::util::timer::TimingStats;
+
+fn bench<F: FnMut()>(label: &str, iters: usize, mut f: F) -> f64 {
+    f(); // warmup (compiles executables on first use)
+    let mut t = TimingStats::new();
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        t.record(t0.elapsed());
+    }
+    println!(
+        "{label:58} {:>10.3} ms  (min {:.3} ms, n={iters})",
+        t.mean() * 1e3,
+        t.min() * 1e3
+    );
+    t.mean()
+}
+
+fn main() -> anyhow::Result<()> {
+    let ds = benchlib::dataset("cifar-sim", 0)?;
+    let sched = NoiseSchedule::new(ScheduleKind::DdpmLinear, 10);
+    let rt = benchlib::runtime()?;
+    let mut rng = golddiff::util::rng::Pcg64::new(1);
+    let x_t: Vec<f32> = (0..ds.d).map(|_| rng.normal()).collect();
+    let q: Vec<f32> = x_t.iter().map(|v| v / sched.alpha_bar(5).sqrt()).collect();
+    let qp = golddiff::data::synthetic::proxy_embed(&q, ds.h, ds.w, ds.c);
+
+    println!("== perf_hotpath (cifar-sim, N={}, D={}) ==", ds.n, ds.d);
+
+    // 1. coarse scan vs threads
+    for threads in [1usize, 2, 4, 8] {
+        let idx = ProxyIndex { threads };
+        let m = ds.n / 4;
+        let secs = bench(&format!("coarse scan top-{m} ({threads} threads)"), 20, || {
+            let _ = idx.top_m(&ds, &qp, m);
+        });
+        println!("{:>58}  -> {:.1} Mrows/s", "", ds.n as f64 / secs / 1e6);
+    }
+
+    // 2. exact refine
+    let idx = ProxyIndex::default();
+    let cands = idx.top_m(&ds, &qp, ds.n / 4);
+    bench("exact refine top-k (m=N/4 -> k=N/20)", 20, || {
+        let _ = idx.refine_top_k(&ds, &q, &cands, ds.n / 20);
+    });
+
+    // 3. gather + upload per bucket
+    let golden = idx.refine_top_k(&ds, &q, &cands, 512);
+    for bucket in [512usize, 2048] {
+        let mut buf = Vec::new();
+        let mut mask = Vec::new();
+        bench(&format!("gather+upload bucket {bucket}"), 20, || {
+            ds.gather_rows(&golden, bucket, &mut buf, &mut mask);
+            let _c = rt.upload(&buf, &[bucket, ds.d]).unwrap();
+            let _m = rt.upload(&mask, &[bucket]).unwrap();
+        });
+    }
+
+    // 4./5. dispatch per bucket: pallas vs jnp twin
+    let alphas = rt.upload(&[sched.alpha_bar(5), sched.alpha_prev(5)], &[2])?;
+    let bx = rt.upload(&x_t, &[ds.d])?;
+    for bucket in [512usize, 2048] {
+        let mut buf = Vec::new();
+        let mut mask = Vec::new();
+        ds.gather_rows(&golden, bucket, &mut buf, &mut mask);
+        let bc = rt.upload(&buf, &[bucket, ds.d])?;
+        let bm = rt.upload(&mask, &[bucket])?;
+        bench(&format!("golden_step (fused XLA, serving) k={bucket}"), 30, || {
+            let _ = rt
+                .run_step(
+                    &format!("golden_step__cifar-sim__k{bucket}"),
+                    &[&bx, &bc, &bm, &alphas],
+                )
+                .unwrap();
+        });
+        bench(&format!("golden_step_pallas (interpret L1) k={bucket}"), 30, || {
+            let _ = rt
+                .run_step(
+                    &format!("golden_step_pallas__cifar-sim__k{bucket}"),
+                    &[&bx, &bc, &bm, &alphas],
+                )
+                .unwrap();
+        });
+    }
+
+    // 6. full XLA-backed step per method
+    use golddiff::coordinator::xla_denoiser::XlaDenoiser;
+    use golddiff::denoiser::DenoiserKind;
+    for kind in [
+        DenoiserKind::GoldDiff,
+        DenoiserKind::GoldDiffPca,
+        DenoiserKind::Optimal,
+        DenoiserKind::Pca,
+    ] {
+        let mut den = XlaDenoiser::new(std::rc::Rc::clone(&rt), &ds, kind)?;
+        for step in [0usize, 9] {
+            let ctx = StepContext {
+                ds: &ds,
+                sched: &sched,
+                step,
+                class: None,
+            };
+            bench(&format!("e2e step {} t={step}", kind.name()), 10, || {
+                let _ = den.step(&x_t, &ctx).unwrap();
+            });
+            println!(
+                "{:>58}  -> scan {:.2} ms, dispatch {:.2} ms",
+                "",
+                den.telemetry.scan_secs * 1e3,
+                den.telemetry.dispatch_secs * 1e3
+            );
+        }
+    }
+    Ok(())
+}

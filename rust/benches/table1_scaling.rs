@@ -1,0 +1,12 @@
+//! Regenerates the paper's Table 1: algorithmic complexity, measured as the
+//! empirical per-step cost vs dataset size N plus fitted log-log slopes.
+//! Run: cargo bench --bench table1_scaling   (GOLDDIFF_EVAL_SAMPLES scales effort)
+fn main() -> anyhow::Result<()> {
+    let sizes = if std::env::var("GOLDDIFF_FULL").is_ok() {
+        vec![2_500usize, 5_000, 10_000, 20_000, 40_000]
+    } else {
+        vec![2_500usize, 5_000, 10_000, 20_000]
+    };
+    golddiff::benchlib::experiments::run_table1(&sizes, 0)?;
+    Ok(())
+}

@@ -1,0 +1,7 @@
+//! Regenerates the paper's Table 2: efficacy (MSE, r² vs oracle) and
+//! efficiency (time/step, memory) on the CIFAR-10 / CelebA-HQ / AFHQ
+//! stand-ins for Optimal / Wiener / Kamb / PCA / GoldDiff.
+fn main() -> anyhow::Result<()> {
+    golddiff::benchlib::experiments::run_table2(0)?;
+    Ok(())
+}

@@ -1,0 +1,7 @@
+//! Regenerates the paper's Table 3: ImageNet-1K (sim, N=50k, 1000 classes)
+//! unconditional + conditional generation at T ∈ {10, 100} for PCA,
+//! PCA (Unbiased) and GoldDiff — the paper's headline scaling result.
+fn main() -> anyhow::Result<()> {
+    golddiff::benchlib::experiments::run_table3(0)?;
+    Ok(())
+}

@@ -1,0 +1,6 @@
+//! Regenerates the paper's Table 4: validation against diverse neural
+//! denoisers — the oracle under EDM-VP and EDM-VE parameterisations.
+fn main() -> anyhow::Result<()> {
+    golddiff::benchlib::experiments::run_table4(0)?;
+    Ok(())
+}

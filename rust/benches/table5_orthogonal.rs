@@ -1,0 +1,6 @@
+//! Regenerates the paper's Table 5: orthogonality — GoldDiff plugged into
+//! the Optimal and Kamb baselines on CelebA-HQ / AFHQ stand-ins.
+fn main() -> anyhow::Result<()> {
+    golddiff::benchlib::experiments::run_table5(0)?;
+    Ok(())
+}

@@ -1,0 +1,7 @@
+//! Regenerates the paper's Table 6 (+ Fig. 2 quantification): biased WSS vs
+//! unbiased SS weight estimation inside GoldDiff, with high-frequency
+//! energy retention of generated samples.
+fn main() -> anyhow::Result<()> {
+    golddiff::benchlib::experiments::run_table6(0)?;
+    Ok(())
+}

@@ -1,0 +1,6 @@
+//! Regenerates the paper's Table 7 (App. B): MNIST / Fashion-MNIST
+//! stand-ins, full method roster.
+fn main() -> anyhow::Result<()> {
+    golddiff::benchlib::experiments::run_table7(0)?;
+    Ok(())
+}

@@ -1,0 +1,497 @@
+//! One runner per paper table. Every runner regenerates the corresponding
+//! table's rows/columns (DESIGN.md §5) and emits markdown + JSON under
+//! `out/`.
+
+use anyhow::Result;
+
+use super::{dataset, eval_samples, out_dir, runtime, EvalProtocol, MethodRow};
+use crate::coordinator::xla_denoiser::XlaDenoiser;
+use crate::data::dataset::Dataset;
+use crate::denoiser::DenoiserKind;
+use crate::metrics::tables::{fmt_ms, fmt_speedup, Table};
+use crate::schedule::budget::BudgetSchedule;
+use crate::schedule::noise::{NoiseSchedule, ScheduleKind};
+use crate::util::timer::TimingStats;
+
+/// The paper's Table 2 / Table 7 method roster. "golddiff-pca" is the
+/// paper's primary GoldDiff configuration (deployed atop the PCA denoiser).
+pub const MAIN_METHODS: &[DenoiserKind] = &[
+    DenoiserKind::Optimal,
+    DenoiserKind::Wiener,
+    DenoiserKind::Kamb,
+    DenoiserKind::Pca,
+    DenoiserKind::GoldDiffPca,
+];
+
+pub fn paper_label(kind: DenoiserKind) -> &'static str {
+    match kind {
+        DenoiserKind::Optimal => "Optimal",
+        DenoiserKind::Wiener => "Wiener",
+        DenoiserKind::Kamb => "Kamb",
+        DenoiserKind::Pca => "PCA",
+        DenoiserKind::PcaUnbiased => "PCA (Unbiased)",
+        DenoiserKind::GoldDiffPca => "GoldDiff (Ours)",
+        DenoiserKind::GoldDiff => "GoldDiff (Ours)",
+        DenoiserKind::GoldDiffWss => "GoldDiff + WSS",
+        DenoiserKind::GoldDiffKamb => "Kamb + GoldDiff",
+    }
+}
+
+/// Score a set of methods on one dataset through the XLA-backed path.
+pub fn eval_methods(
+    ds: &Dataset,
+    sched: &NoiseSchedule,
+    methods: &[DenoiserKind],
+    n_samples: usize,
+    classes: &[u32],
+    seed: u64,
+) -> Result<Vec<MethodRow>> {
+    let rt = runtime()?;
+    let protocol = EvalProtocol::build(ds, sched, n_samples, classes, seed);
+    let mut rows = Vec::new();
+    for &kind in methods {
+        let mut den = XlaDenoiser::new(std::rc::Rc::clone(&rt), ds, kind)?;
+        let mut row = protocol.eval(ds, &mut den);
+        row.name = paper_label(kind).to_string();
+        rows.push(row);
+        eprintln!(
+            "  [{}] {}: mse={:.4} r2={:.3} t/step={}",
+            ds.name,
+            rows.last().unwrap().name,
+            rows.last().unwrap().mse,
+            rows.last().unwrap().r2,
+            fmt_ms(rows.last().unwrap().time_per_step),
+        );
+    }
+    Ok(rows)
+}
+
+fn table_from_rows(title: &str, per_dataset: &[(String, Vec<MethodRow>)]) -> Table {
+    let mut columns = Vec::new();
+    for (ds, _) in per_dataset {
+        columns.push(format!("{ds} MSE↓"));
+        columns.push(format!("{ds} r²↑"));
+        columns.push(format!("{ds} Time"));
+        columns.push(format!("{ds} Mem(GB)"));
+    }
+    let col_refs: Vec<&str> = columns.iter().map(String::as_str).collect();
+    let mut t = Table::new(title, &col_refs);
+    let n_methods = per_dataset[0].1.len();
+    for mi in 0..n_methods {
+        let mut cells = Vec::new();
+        for (_, rows) in per_dataset {
+            cells.extend(rows[mi].cells());
+        }
+        t.row(&per_dataset[0].1[mi].name.clone(), cells);
+    }
+    t
+}
+
+/// Append the "vs PCA" speedup row the paper prints under Table 2.
+fn add_speedup_row(t: &mut Table, per_dataset: &[(String, Vec<MethodRow>)]) {
+    let mut cells = Vec::new();
+    for (_, rows) in per_dataset {
+        let pca = rows.iter().find(|r| r.name == "PCA");
+        let ours = rows.iter().find(|r| r.name.contains("Ours"));
+        match (pca, ours) {
+            (Some(p), Some(o)) => {
+                cells.push(format!(
+                    "↑{:.1}%",
+                    (p.mse - o.mse) / p.mse.max(1e-12) * 100.0
+                ));
+                cells.push(format!("↑{:.1}%", (o.r2 - p.r2) * 100.0));
+                cells.push(fmt_speedup(p.time_per_step, o.time_per_step));
+                cells.push("-".into());
+            }
+            _ => cells.extend(["-", "-", "-", "-"].map(String::from)),
+        }
+    }
+    t.row("vs. PCA", cells);
+}
+
+// ---------------------------------------------------------------------------
+// Table 1 — empirical complexity scaling (per-step time vs N)
+// ---------------------------------------------------------------------------
+
+/// CPU-path scaling sweep: per-step cost vs dataset size for each method,
+/// plus the fitted log-log slope (≈1 ⇒ O(N), ≈0 ⇒ O(1), GoldDiff in between
+/// because only the O(N·d_proxy) coarse scan touches N).
+pub fn run_table1(sizes: &[usize], seed: u64) -> Result<Table> {
+    use crate::data::synthetic::preset;
+    let sched = NoiseSchedule::new(ScheduleKind::DdpmLinear, 10);
+    let methods: &[DenoiserKind] = &[
+        DenoiserKind::Optimal,
+        DenoiserKind::Wiener,
+        DenoiserKind::Kamb,
+        DenoiserKind::Pca,
+        DenoiserKind::GoldDiff,
+    ];
+    let mut per_method: Vec<(String, Vec<f64>)> = methods
+        .iter()
+        .map(|k| (paper_label(*k).to_string(), Vec::new()))
+        .collect();
+
+    for &n in sizes {
+        let mut spec = preset("cifar-sim").unwrap().clone();
+        spec.n = n;
+        let ds = Dataset::synthesize(&spec, seed);
+        let queries = 6;
+        for (mi, &kind) in methods.iter().enumerate() {
+            let mut den = kind.build(&ds, &sched);
+            let mut timing = TimingStats::new();
+            for qi in 0..queries {
+                let step = (qi * sched.steps) / queries;
+                let mut rng = crate::util::rng::Pcg64::new(seed + qi as u64);
+                let x = crate::sampler::init_noise(ds.d, &mut rng);
+                let ctx = crate::denoiser::StepContext {
+                    ds: &ds,
+                    sched: &sched,
+                    step,
+                    class: None,
+                };
+                let t0 = std::time::Instant::now();
+                let _ = den.denoise(&x, &ctx);
+                timing.record(t0.elapsed());
+            }
+            per_method[mi].1.push(timing.mean());
+            eprintln!("  [N={n}] {}: {}", per_method[mi].0, fmt_ms(timing.mean()));
+        }
+    }
+
+    let mut columns: Vec<String> = sizes.iter().map(|n| format!("N={n}")).collect();
+    columns.push("log-log slope".into());
+    let col_refs: Vec<&str> = columns.iter().map(String::as_str).collect();
+    let mut t = Table::new(
+        "Table 1 — empirical per-step cost vs dataset size (paper: complexity comparison)",
+        &col_refs,
+    );
+    for (name, times) in &per_method {
+        let slope = loglog_slope(sizes, times);
+        let mut cells: Vec<String> = times.iter().map(|&s| fmt_ms(s)).collect();
+        cells.push(format!("{slope:.2}"));
+        t.row(name, cells);
+    }
+    t.emit(&out_dir(), "table1_scaling")?;
+    Ok(t)
+}
+
+pub fn loglog_slope(sizes: &[usize], times: &[f64]) -> f64 {
+    let xs: Vec<f64> = sizes.iter().map(|&n| (n as f64).ln()).collect();
+    let ys: Vec<f64> = times.iter().map(|&t| t.max(1e-9).ln()).collect();
+    let n = xs.len() as f64;
+    let mx = xs.iter().sum::<f64>() / n;
+    let my = ys.iter().sum::<f64>() / n;
+    let num: f64 = xs.iter().zip(&ys).map(|(x, y)| (x - mx) * (y - my)).sum();
+    let den: f64 = xs.iter().map(|x| (x - mx) * (x - mx)).sum();
+    num / den.max(1e-12)
+}
+
+// ---------------------------------------------------------------------------
+// Table 2 — small-scale efficacy/efficiency (CIFAR / CelebA / AFHQ)
+// ---------------------------------------------------------------------------
+
+pub fn run_table2(seed: u64) -> Result<Table> {
+    let sched = NoiseSchedule::new(ScheduleKind::DdpmLinear, 10);
+    let n = eval_samples(16);
+    let mut per_dataset = Vec::new();
+    for preset in ["cifar-sim", "celeba-sim", "afhq-sim"] {
+        let ds = dataset(preset, seed)?;
+        let rows = eval_methods(&ds, &sched, MAIN_METHODS, n, &[], seed)?;
+        per_dataset.push((short_name(preset), rows));
+    }
+    let mut t = table_from_rows(
+        "Table 2 — Quantitative comparison of analytical denoisers (CIFAR-10 / CelebA-HQ / AFHQ stand-ins)",
+        &per_dataset,
+    );
+    add_speedup_row(&mut t, &per_dataset);
+    t.emit(&out_dir(), "table2_smallscale")?;
+    Ok(t)
+}
+
+pub fn short_name(preset: &str) -> String {
+    match preset {
+        "cifar-sim" => "CIFAR-10".into(),
+        "celeba-sim" => "CelebA-HQ".into(),
+        "afhq-sim" => "AFHQ".into(),
+        "mnist-sim" => "MNIST".into(),
+        "fashion-sim" => "F-MNIST".into(),
+        "imagenet-sim" => "ImageNet-1K".into(),
+        other => other.into(),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Table 3 — ImageNet-1K scale, unconditional + conditional, T ∈ {10, 100}
+// ---------------------------------------------------------------------------
+
+pub fn run_table3(seed: u64) -> Result<Table> {
+    let ds = dataset("imagenet-sim", seed)?;
+    let methods = [
+        DenoiserKind::Pca,
+        DenoiserKind::PcaUnbiased,
+        DenoiserKind::GoldDiffPca,
+    ];
+    let n = eval_samples(4);
+    let classes: Vec<u32> = (0..n as u32).map(|i| (i * 37) % 1000).collect();
+
+    let mut columns = Vec::new();
+    for t in ["T=10", "T=100"] {
+        for c in ["Uncond MSE↓", "Uncond r²↑", "Uncond Time", "Cond MSE↓", "Cond r²↑", "Cond Time"] {
+            columns.push(format!("{t} {c}"));
+        }
+    }
+    let col_refs: Vec<&str> = columns.iter().map(String::as_str).collect();
+    let mut table = Table::new(
+        "Table 3 — ImageNet-1K (sim): unconditional + conditional",
+        &col_refs,
+    );
+
+    let mut cells_per_method: Vec<Vec<String>> = vec![Vec::new(); methods.len()];
+    for steps in [10usize, 100] {
+        let sched = NoiseSchedule::new(ScheduleKind::DdpmLinear, steps);
+        let uncond = eval_methods(&ds, &sched, &methods, n, &[], seed)?;
+        let cond = eval_methods(&ds, &sched, &methods, n, &classes, seed)?;
+        for (mi, _) in methods.iter().enumerate() {
+            cells_per_method[mi].push(format!("{:.4}", uncond[mi].mse));
+            cells_per_method[mi].push(format!("{:.3}", uncond[mi].r2));
+            cells_per_method[mi].push(fmt_ms(uncond[mi].time_per_step));
+            cells_per_method[mi].push(format!("{:.4}", cond[mi].mse));
+            cells_per_method[mi].push(format!("{:.3}", cond[mi].r2));
+            cells_per_method[mi].push(fmt_ms(cond[mi].time_per_step));
+        }
+    }
+    for (mi, &kind) in methods.iter().enumerate() {
+        table.row(paper_label(kind), cells_per_method[mi].clone());
+    }
+    table.emit(&out_dir(), "table3_imagenet")?;
+    Ok(table)
+}
+
+// ---------------------------------------------------------------------------
+// Table 4 — EDM-VP / EDM-VE oracles
+// ---------------------------------------------------------------------------
+
+pub fn run_table4(seed: u64) -> Result<Table> {
+    let n = eval_samples(12);
+    let mut per_block = Vec::new(); // (schedule, dataset, rows)
+    for kind in [ScheduleKind::EdmVp, ScheduleKind::EdmVe] {
+        let sched = NoiseSchedule::new(kind, 10);
+        for preset in ["cifar-sim", "afhq-sim"] {
+            let ds = dataset(preset, seed)?;
+            let rows = eval_methods(&ds, &sched, MAIN_METHODS, n, &[], seed)?;
+            per_block.push((kind.name().to_string(), short_name(preset), rows));
+        }
+    }
+    let mut columns = Vec::new();
+    for (sname, dsname, _) in &per_block {
+        columns.push(format!("{sname}/{dsname} MSE↓"));
+        columns.push(format!("{sname}/{dsname} r²↑"));
+    }
+    let col_refs: Vec<&str> = columns.iter().map(String::as_str).collect();
+    let mut t = Table::new("Table 4 — validation on diverse neural denoisers (EDM-VP / EDM-VE)", &col_refs);
+    for mi in 0..MAIN_METHODS.len() {
+        let mut cells = Vec::new();
+        for (_, _, rows) in &per_block {
+            cells.push(format!("{:.4}", rows[mi].mse));
+            cells.push(format!("{:.3}", rows[mi].r2));
+        }
+        t.row(paper_label(MAIN_METHODS[mi]), cells);
+    }
+    t.emit(&out_dir(), "table4_neural")?;
+    Ok(t)
+}
+
+// ---------------------------------------------------------------------------
+// Table 5 — orthogonality: GoldDiff plugged into Optimal and Kamb
+// ---------------------------------------------------------------------------
+
+pub fn run_table5(seed: u64) -> Result<Table> {
+    let sched = NoiseSchedule::new(ScheduleKind::DdpmLinear, 10);
+    let methods = [
+        DenoiserKind::Optimal,
+        DenoiserKind::GoldDiff, // golddiff over pixel logits = "+GoldDiff" on Optimal
+        DenoiserKind::Kamb,
+        DenoiserKind::GoldDiffKamb,
+    ];
+    let n = eval_samples(10);
+    let mut per_dataset = Vec::new();
+    for preset in ["celeba-sim", "afhq-sim"] {
+        let ds = dataset(preset, seed)?;
+        let mut rows = eval_methods(&ds, &sched, &methods, n, &[], seed)?;
+        rows[1].name = "Optimal + GoldDiff".into();
+        rows[3].name = "Kamb + GoldDiff".into();
+        per_dataset.push((short_name(preset), rows));
+    }
+    let mut t = table_from_rows(
+        "Table 5 — orthogonality to existing analytical denoisers",
+        &per_dataset,
+    );
+    t.title = t.title.clone();
+    t.emit(&out_dir(), "table5_orthogonal")?;
+    Ok(t)
+}
+
+// ---------------------------------------------------------------------------
+// Table 6 — biased (WSS) vs unbiased (SS) weight estimation inside GoldDiff
+// ---------------------------------------------------------------------------
+
+pub fn run_table6(seed: u64) -> Result<Table> {
+    let sched = NoiseSchedule::new(ScheduleKind::DdpmLinear, 10);
+    let methods = [DenoiserKind::GoldDiffWss, DenoiserKind::GoldDiffPca];
+    let n = eval_samples(12);
+    let mut per_dataset = Vec::new();
+    for preset in ["celeba-sim", "afhq-sim"] {
+        let ds = dataset(preset, seed)?;
+        let mut rows = eval_methods(&ds, &sched, &methods, n, &[], seed)?;
+        rows[0].name = "GoldDiff + WSS (biased)".into();
+        rows[1].name = "GoldDiff + SS (unbiased)".into();
+
+        // Fig. 2 quantification: high-frequency energy retention of samples
+        let rt = runtime()?;
+        for (mi, &kind) in methods.iter().enumerate() {
+            let mut den = XlaDenoiser::new(std::rc::Rc::clone(&rt), &ds, kind)?;
+            let mut ratio = 0.0;
+            let count = 4;
+            for s in 0..count {
+                let traj = crate::sampler::sample(
+                    &mut den,
+                    &ds,
+                    &sched,
+                    seed + s,
+                    crate::sampler::SamplerOpts::default(),
+                );
+                ratio += crate::metrics::highfreq_energy_ratio(
+                    traj.final_sample(),
+                    ds.h,
+                    ds.w,
+                    ds.c,
+                );
+            }
+            eprintln!(
+                "  [{}] {} high-freq energy ratio: {:.4}",
+                ds.name,
+                rows[mi].name,
+                ratio / count as f64
+            );
+        }
+        per_dataset.push((short_name(preset), rows));
+    }
+    let t = {
+        let mut t = table_from_rows("Table 6 — biased (WSS) vs unbiased (SS) weight estimation", &per_dataset);
+        t.title += " [+ Fig. 2 high-frequency retention printed above]";
+        t
+    };
+    t.emit(&out_dir(), "table6_softmax")?;
+    Ok(t)
+}
+
+// ---------------------------------------------------------------------------
+// Table 7 — MNIST / Fashion-MNIST
+// ---------------------------------------------------------------------------
+
+pub fn run_table7(seed: u64) -> Result<Table> {
+    let sched = NoiseSchedule::new(ScheduleKind::DdpmLinear, 10);
+    let n = eval_samples(16);
+    let mut per_dataset = Vec::new();
+    for preset in ["mnist-sim", "fashion-sim"] {
+        let ds = dataset(preset, seed)?;
+        let rows = eval_methods(&ds, &sched, MAIN_METHODS, n, &[], seed)?;
+        per_dataset.push((short_name(preset), rows));
+    }
+    let mut t = table_from_rows("Table 7 — MNIST / Fashion-MNIST stand-ins", &per_dataset);
+    add_speedup_row(&mut t, &per_dataset);
+    t.emit(&out_dir(), "table7_grayscale")?;
+    Ok(t)
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 6 — hyperparameter sensitivity (m_max, k_min)
+// ---------------------------------------------------------------------------
+
+pub fn run_fig6(seed: u64) -> Result<(Table, Table)> {
+    let sched = NoiseSchedule::new(ScheduleKind::DdpmLinear, 10);
+    let n = eval_samples(8);
+    let presets = ["mnist-sim", "cifar-sim", "afhq-sim"];
+    let rt = runtime()?;
+
+    // (a) m_max sweep at paper-default k
+    let m_fracs = [1.0, 0.5, 1.0 / 3.0, 0.25, 0.2];
+    let mut ta = Table::new(
+        "Fig. 6a — coarse candidate size m_max sweep (r² vs oracle)",
+        &presets.map(short_name).iter().map(String::as_str).collect::<Vec<_>>(),
+    );
+    for &mf in &m_fracs {
+        let mut cells = Vec::new();
+        for preset in presets {
+            let ds = dataset(preset, seed)?;
+            let protocol = EvalProtocol::build(&ds, &sched, n, &[], seed);
+            let buckets = rt.manifest.buckets("golden_step", &ds.name);
+            let budget = BudgetSchedule::new(
+                ds.n,
+                ds.n / 10,
+                ((ds.n as f64 * mf) as usize).max(ds.n / 10),
+                ds.n / 20,
+                ds.n / 10,
+                &buckets,
+            );
+            let mut den = XlaDenoiser::new(std::rc::Rc::clone(&rt), &ds, DenoiserKind::GoldDiffPca)?
+                .with_budget(budget);
+            let row = protocol.eval(&ds, &mut den);
+            cells.push(format!("{:.3}", row.r2));
+        }
+        ta.row(&format!("m_max = N×{mf:.2}"), cells);
+    }
+    ta.emit(&out_dir(), "fig6a_mmax")?;
+
+    // (b) k_min sweep at paper-default m
+    let k_fracs = [0.25, 0.1, 0.05, 1.0 / 30.0, 0.025];
+    let mut tb = Table::new(
+        "Fig. 6b — golden subset size k_min sweep (r² vs oracle)",
+        &presets.map(short_name).iter().map(String::as_str).collect::<Vec<_>>(),
+    );
+    for &kf in &k_fracs {
+        let mut cells = Vec::new();
+        for preset in presets {
+            let ds = dataset(preset, seed)?;
+            let protocol = EvalProtocol::build(&ds, &sched, n, &[], seed);
+            let buckets = rt.manifest.buckets("golden_step", &ds.name);
+            let k_min = ((ds.n as f64 * kf) as usize).max(1);
+            let budget = BudgetSchedule::new(
+                ds.n,
+                ds.n / 10,
+                ds.n / 4,
+                k_min,
+                k_min.max(ds.n / 10),
+                &buckets,
+            );
+            let mut den = XlaDenoiser::new(std::rc::Rc::clone(&rt), &ds, DenoiserKind::GoldDiffPca)?
+                .with_budget(budget);
+            let row = protocol.eval(&ds, &mut den);
+            cells.push(format!("{:.3}", row.r2));
+        }
+        tb.row(&format!("k_min = N×{kf:.3}"), cells);
+    }
+    tb.emit(&out_dir(), "fig6b_kmin")?;
+    Ok((ta, tb))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loglog_slope_detects_linear_and_constant() {
+        let sizes = [1000usize, 2000, 4000, 8000];
+        let linear: Vec<f64> = sizes.iter().map(|&n| n as f64 * 1e-6).collect();
+        let constant = vec![0.5f64; 4];
+        assert!((loglog_slope(&sizes, &linear) - 1.0).abs() < 0.01);
+        assert!(loglog_slope(&sizes, &constant).abs() < 0.01);
+    }
+
+    #[test]
+    fn labels_cover_all_kinds() {
+        for &k in DenoiserKind::all() {
+            assert!(!paper_label(k).is_empty());
+        }
+    }
+}

@@ -1,0 +1,275 @@
+//! Figure harnesses: Fig. 1 (posterior progressive concentration on Moons),
+//! Fig. 3 (weight evolution + subset-size sensitivity), and the supporting
+//! random-subset ablation denoiser.
+
+use anyhow::Result;
+
+use super::{dataset, eval_samples, out_dir, EvalProtocol};
+use crate::data::dataset::Dataset;
+use crate::denoiser::softmax::exact_softmax;
+use crate::denoiser::{descale, sqdist, DenoiseResult, Denoiser, StepContext};
+use crate::metrics::tables::Table;
+use crate::metrics::{effective_support, entropy, support_at_mass};
+use crate::sampler;
+use crate::schedule::noise::{NoiseSchedule, ScheduleKind};
+use crate::util::rng::Pcg64;
+
+/// Exact posterior weights of the full-scan denoiser at one query.
+pub fn full_posterior_weights(ds: &Dataset, x_t: &[f32], sched: &NoiseSchedule, step: usize) -> Vec<f32> {
+    let q = descale(x_t, sched.alpha_bar(step));
+    let scale = sched.logit_scale(step);
+    let logits: Vec<f32> = (0..ds.n)
+        .map(|i| -sqdist(&q, ds.row(i)) * scale)
+        .collect();
+    exact_softmax(&logits)
+}
+
+/// Fig. 1 / Fig. 3a: track the posterior weight distribution along oracle
+/// trajectories — effective support exp(H), support@90% mass, top-1 weight.
+pub fn run_concentration(preset: &str, n_traj: usize, seed: u64) -> Result<Table> {
+    let ds = dataset(preset, seed)?;
+    let sched = NoiseSchedule::new(ScheduleKind::DdpmLinear, 10);
+    let oracle = crate::oracle::GmmOracle::new(ds.gmm.clone());
+
+    let mut eff = vec![0.0f64; sched.steps];
+    let mut s90 = vec![0.0f64; sched.steps];
+    let mut top1 = vec![0.0f64; sched.steps];
+    let mut ent = vec![0.0f64; sched.steps];
+    for t in 0..n_traj {
+        let mut rng = Pcg64::with_stream(seed + t as u64, 0xf19);
+        let mut x = sampler::init_noise(ds.d, &mut rng);
+        for step in 0..sched.steps {
+            let w = full_posterior_weights(&ds, &x, &sched, step);
+            eff[step] += effective_support(&w);
+            s90[step] += support_at_mass(&w, 0.9) as f64;
+            top1[step] += *w
+                .iter()
+                .max_by(|a, b| a.total_cmp(b))
+                .unwrap() as f64;
+            ent[step] += entropy(&w);
+            let f = oracle.denoise(&x, sched.alpha_bar(step));
+            x = sampler::ddim_update(
+                &x,
+                &f,
+                sched.alpha_bar(step),
+                sched.alpha_prev(step),
+                0.0,
+                &mut rng,
+            );
+        }
+    }
+    let inv = 1.0 / n_traj as f64;
+    let cols: Vec<String> = (0..sched.steps).map(|s| format!("t{}", sched.steps - s)).collect();
+    let col_refs: Vec<&str> = cols.iter().map(String::as_str).collect();
+    let mut t = Table::new(
+        &format!("Posterior Progressive Concentration on {preset} (Fig. 1 / Fig. 3a)"),
+        &col_refs,
+    );
+    t.row(
+        "effective support exp(H)",
+        eff.iter().map(|v| format!("{:.1}", v * inv)).collect(),
+    );
+    t.row(
+        "support @ 90% mass",
+        s90.iter().map(|v| format!("{:.1}", v * inv)).collect(),
+    );
+    t.row(
+        "top-1 weight",
+        top1.iter().map(|v| format!("{:.4}", v * inv)).collect(),
+    );
+    t.row(
+        "entropy (nats)",
+        ent.iter().map(|v| format!("{:.2}", v * inv)).collect(),
+    );
+    t.emit(&out_dir(), &format!("concentration_{preset}"))?;
+    Ok(t)
+}
+
+/// Random-subset denoiser for the Fig. 3b sensitivity ablation: aggregates
+/// over a *fixed random* subset of `n_sub` rows (static retrieval — exactly
+/// the strawman the paper contrasts with dynamic golden subsets).
+pub struct RandomSubsetDenoiser {
+    pub rows: Vec<u32>,
+}
+
+impl RandomSubsetDenoiser {
+    pub fn new(ds: &Dataset, n_sub: usize, seed: u64) -> Self {
+        let mut rng = Pcg64::with_stream(seed, 0x5b5);
+        RandomSubsetDenoiser {
+            rows: rng
+                .choose_k(ds.n, n_sub)
+                .into_iter()
+                .map(|i| i as u32)
+                .collect(),
+        }
+    }
+}
+
+impl Denoiser for RandomSubsetDenoiser {
+    fn name(&self) -> String {
+        format!("random-{}", self.rows.len())
+    }
+
+    fn denoise(&mut self, x_t: &[f32], ctx: &StepContext) -> DenoiseResult {
+        let ds = ctx.ds;
+        let q = descale(x_t, ctx.alpha_bar());
+        let scale = ctx.logit_scale();
+        let (f_hat, stats) = crate::denoiser::softmax::ss_aggregate(
+            ds.d,
+            self.rows.iter().map(|&gid| {
+                let row = ds.row(gid as usize);
+                (-sqdist(&q, row) * scale, row)
+            }),
+        );
+        DenoiseResult {
+            f_hat,
+            stats,
+            support: self.rows.len(),
+        }
+    }
+}
+
+/// Fig. 3b: MSE vs oracle for random subsets of size {10, 100, 1000, 5000}
+/// vs the full dataset, split by diffusion stage (early/mid/late thirds).
+pub fn run_sensitivity(preset: &str, seed: u64) -> Result<Table> {
+    let ds = dataset(preset, seed)?;
+    let sched = NoiseSchedule::new(ScheduleKind::DdpmLinear, 10);
+    let n = eval_samples(12);
+    let protocol = EvalProtocol::build(&ds, &sched, n, &[], seed);
+
+    let sizes = [10usize, 100, 1000, 5000.min(ds.n), ds.n];
+    let mut t = Table::new(
+        &format!("Fig. 3b — sensitivity to subset size on {preset} (MSE vs oracle)"),
+        &["early (high noise)", "mid", "late (low noise)", "overall"],
+    );
+    for &n_sub in &sizes {
+        let mut den = RandomSubsetDenoiser::new(&ds, n_sub, seed);
+        // split queries by stage
+        let mut accs = [
+            crate::metrics::EfficacyAccum::new(),
+            crate::metrics::EfficacyAccum::new(),
+            crate::metrics::EfficacyAccum::new(),
+            crate::metrics::EfficacyAccum::new(),
+        ];
+        for q in &protocol.queries {
+            let ctx = StepContext {
+                ds: &ds,
+                sched: &sched,
+                step: q.step,
+                class: q.class,
+            };
+            let out = den.denoise(&q.x_t, &ctx);
+            let stage = (q.step * 3) / sched.steps;
+            accs[stage].update(&out.f_hat, &q.target);
+            accs[3].update(&out.f_hat, &q.target);
+        }
+        let label = if n_sub == ds.n {
+            "full dataset".to_string()
+        } else {
+            format!("N_sub = {n_sub}")
+        };
+        t.row(
+            &label,
+            accs.iter().map(|a| format!("{:.4}", a.mse())).collect(),
+        );
+    }
+    t.emit(&out_dir(), &format!("fig3b_sensitivity_{preset}"))?;
+    Ok(t)
+}
+
+/// Figs. 4/5: qualitative comparison grids — every method generates from
+/// the same initial noise (10-step DDIM, as the paper) and the samples are
+/// tiled into one PPM per method under `out/fig4/`, plus an oracle row
+/// (the stand-in for the paper's "trained U-Net" reference row).
+pub fn run_qualitative(preset: &str, n_samples: usize, seed: u64) -> Result<()> {
+    use crate::coordinator::xla_denoiser::XlaDenoiser;
+    use crate::denoiser::DenoiserKind;
+    use crate::util::pgm::write_grid;
+
+    let ds = dataset(preset, seed)?;
+    let sched = NoiseSchedule::new(ScheduleKind::DdpmLinear, 10);
+    let rt = super::runtime()?;
+    let dir = out_dir().join("fig4");
+
+    for kind in [
+        DenoiserKind::Optimal,
+        DenoiserKind::Wiener,
+        DenoiserKind::Kamb,
+        DenoiserKind::Pca,
+        DenoiserKind::GoldDiffPca,
+    ] {
+        let mut den = XlaDenoiser::new(std::rc::Rc::clone(&rt), &ds, kind)?;
+        let samples: Vec<Vec<f32>> = (0..n_samples)
+            .map(|s| {
+                sampler::sample(&mut den, &ds, &sched, seed + s as u64, Default::default())
+                    .final_sample()
+                    .to_vec()
+            })
+            .collect();
+        let path = dir.join(format!("{preset}_{}.ppm", kind.name()));
+        write_grid(&path, &samples, ds.h, ds.w, ds.c, n_samples.min(8))?;
+        eprintln!("  wrote {path:?}");
+    }
+
+    // oracle reference row (same seeds)
+    let oracle = crate::oracle::GmmOracle::new(ds.gmm.clone());
+    let samples: Vec<Vec<f32>> = (0..n_samples)
+        .map(|s| {
+            let mut rng = Pcg64::with_stream(seed + s as u64, 0x5a3);
+            let mut x = sampler::init_noise(ds.d, &mut rng);
+            for step in 0..sched.steps {
+                let f = oracle.denoise(&x, sched.alpha_bar(step));
+                x = sampler::ddim_update(
+                    &x,
+                    &f,
+                    sched.alpha_bar(step),
+                    sched.alpha_prev(step),
+                    0.0,
+                    &mut rng,
+                );
+            }
+            x
+        })
+        .collect();
+    write_grid(
+        &dir.join(format!("{preset}_oracle.ppm")),
+        &samples,
+        ds.h,
+        ds.w,
+        ds.c,
+        n_samples.min(8),
+    )?;
+    eprintln!("  wrote oracle reference grid");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::preset;
+
+    #[test]
+    fn posterior_weights_sum_to_one_and_concentrate() {
+        let mut spec = preset("moons").unwrap().clone();
+        spec.n = 300;
+        let ds = Dataset::synthesize(&spec, 3);
+        let sched = NoiseSchedule::new(ScheduleKind::DdpmLinear, 10);
+        let x = vec![0.4f32, 0.3];
+        let w0 = full_posterior_weights(&ds, &x, &sched, 0);
+        let w9 = full_posterior_weights(&ds, &x, &sched, 9);
+        assert!((w0.iter().sum::<f32>() - 1.0).abs() < 1e-3);
+        assert!((w9.iter().sum::<f32>() - 1.0).abs() < 1e-3);
+        assert!(effective_support(&w9) < effective_support(&w0));
+    }
+
+    #[test]
+    fn random_subset_denoiser_is_deterministic_per_seed() {
+        let mut spec = preset("moons").unwrap().clone();
+        spec.n = 200;
+        let ds = Dataset::synthesize(&spec, 1);
+        let a = RandomSubsetDenoiser::new(&ds, 32, 9);
+        let b = RandomSubsetDenoiser::new(&ds, 32, 9);
+        assert_eq!(a.rows, b.rows);
+        assert_eq!(a.rows.len(), 32);
+    }
+}

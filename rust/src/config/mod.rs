@@ -1,0 +1,203 @@
+//! Typed configuration for the serving engine and experiments, with JSON
+//! round-trip (config files + CLI overrides).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+use crate::util::json::{parse, Json};
+
+/// Engine-level configuration (the launcher's config file).
+#[derive(Debug, Clone, PartialEq)]
+pub struct EngineConfig {
+    /// dataset preset to serve
+    pub preset: String,
+    /// directory holding the `.gds` stores
+    pub data_dir: PathBuf,
+    /// directory holding AOT artifacts + manifest.json
+    pub artifacts_dir: PathBuf,
+    /// denoising steps per request (paper default 10)
+    pub steps: usize,
+    /// noise schedule family
+    pub schedule: String,
+    /// worker threads for the dispatch loop
+    pub workers: usize,
+    /// scan threads inside the coarse index
+    pub scan_threads: usize,
+    /// bounded request-queue depth (backpressure)
+    pub queue_depth: usize,
+    /// m_min/m_max/k_min/k_max as fractions of N (paper: 1/10, 1/4, 1/20, 1/10)
+    pub m_min_frac: f64,
+    pub m_max_frac: f64,
+    pub k_min_frac: f64,
+    pub k_max_frac: f64,
+    /// base denoiser the GoldDiff wrapper drives ("golden", "pca", "kamb")
+    pub method: String,
+    /// rng seed
+    pub seed: u64,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            preset: "cifar-sim".into(),
+            data_dir: PathBuf::from("data"),
+            artifacts_dir: PathBuf::from("artifacts"),
+            steps: 10,
+            schedule: "ddpm".into(),
+            workers: crate::util::threadpool::default_threads(),
+            scan_threads: crate::util::threadpool::default_threads(),
+            queue_depth: 256,
+            m_min_frac: 0.10,
+            m_max_frac: 0.25,
+            k_min_frac: 0.05,
+            k_max_frac: 0.10,
+            method: "golden".into(),
+            seed: 0,
+        }
+    }
+}
+
+impl EngineConfig {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("preset", self.preset.as_str())
+            .set("data_dir", self.data_dir.to_string_lossy().to_string())
+            .set(
+                "artifacts_dir",
+                self.artifacts_dir.to_string_lossy().to_string(),
+            )
+            .set("steps", self.steps)
+            .set("schedule", self.schedule.as_str())
+            .set("workers", self.workers)
+            .set("scan_threads", self.scan_threads)
+            .set("queue_depth", self.queue_depth)
+            .set("m_min_frac", self.m_min_frac)
+            .set("m_max_frac", self.m_max_frac)
+            .set("k_min_frac", self.k_min_frac)
+            .set("k_max_frac", self.k_max_frac)
+            .set("method", self.method.as_str())
+            .set("seed", self.seed);
+        j
+    }
+
+    pub fn from_json(j: &Json) -> Result<EngineConfig> {
+        let def = EngineConfig::default();
+        let s = |key: &str, d: &str| -> String {
+            j.get(key)
+                .and_then(Json::as_str)
+                .unwrap_or(d)
+                .to_string()
+        };
+        let n = |key: &str, d: f64| j.get(key).and_then(Json::as_f64).unwrap_or(d);
+        Ok(EngineConfig {
+            preset: s("preset", &def.preset),
+            data_dir: PathBuf::from(s("data_dir", &def.data_dir.to_string_lossy())),
+            artifacts_dir: PathBuf::from(s(
+                "artifacts_dir",
+                &def.artifacts_dir.to_string_lossy(),
+            )),
+            steps: n("steps", def.steps as f64) as usize,
+            schedule: s("schedule", &def.schedule),
+            workers: n("workers", def.workers as f64) as usize,
+            scan_threads: n("scan_threads", def.scan_threads as f64) as usize,
+            queue_depth: n("queue_depth", def.queue_depth as f64) as usize,
+            m_min_frac: n("m_min_frac", def.m_min_frac),
+            m_max_frac: n("m_max_frac", def.m_max_frac),
+            k_min_frac: n("k_min_frac", def.k_min_frac),
+            k_max_frac: n("k_max_frac", def.k_max_frac),
+            method: s("method", &def.method),
+            seed: n("seed", def.seed as f64) as u64,
+        })
+    }
+
+    pub fn load(path: &Path) -> Result<EngineConfig> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_json(&parse(&text)?)
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(p) = path.parent() {
+            std::fs::create_dir_all(p)?;
+        }
+        std::fs::write(path, self.to_json().to_string_compact())?;
+        Ok(())
+    }
+
+    /// Apply CLI overrides (`--preset`, `--steps`, …).
+    pub fn apply_args(&mut self, args: &crate::util::cli::Args) {
+        if let Some(p) = args.get("preset") {
+            self.preset = p.to_string();
+        }
+        if let Some(p) = args.get("data-dir") {
+            self.data_dir = PathBuf::from(p);
+        }
+        if let Some(p) = args.get("artifacts-dir") {
+            self.artifacts_dir = PathBuf::from(p);
+        }
+        if let Some(p) = args.get("method") {
+            self.method = p.to_string();
+        }
+        if let Some(p) = args.get("schedule") {
+            self.schedule = p.to_string();
+        }
+        self.steps = args.usize_or("steps", self.steps);
+        self.workers = args.usize_or("workers", self.workers);
+        self.scan_threads = args.usize_or("scan-threads", self.scan_threads);
+        self.queue_depth = args.usize_or("queue-depth", self.queue_depth);
+        self.seed = args.u64_or("seed", self.seed);
+        self.m_min_frac = args.f64_or("m-min-frac", self.m_min_frac);
+        self.m_max_frac = args.f64_or("m-max-frac", self.m_max_frac);
+        self.k_min_frac = args.f64_or("k-min-frac", self.k_min_frac);
+        self.k_max_frac = args.f64_or("k-max-frac", self.k_max_frac);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_roundtrip() {
+        let mut c = EngineConfig::default();
+        c.preset = "afhq-sim".into();
+        c.steps = 25;
+        c.k_min_frac = 0.025;
+        let rt = EngineConfig::from_json(&parse(&c.to_json().to_string_compact()).unwrap())
+            .unwrap();
+        assert_eq!(rt, c);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join("golddiff_cfg_test");
+        let path = dir.join("engine.json");
+        let c = EngineConfig::default();
+        c.save(&path).unwrap();
+        assert_eq!(EngineConfig::load(&path).unwrap(), c);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn cli_overrides() {
+        let mut c = EngineConfig::default();
+        let raw: Vec<String> = ["--preset", "moons", "--steps", "50", "--k-min-frac", "0.01"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        c.apply_args(&crate::util::cli::Args::parse(&raw));
+        assert_eq!(c.preset, "moons");
+        assert_eq!(c.steps, 50);
+        assert!((c.k_min_frac - 0.01).abs() < 1e-12);
+    }
+
+    #[test]
+    fn paper_default_fractions() {
+        let c = EngineConfig::default();
+        assert_eq!(c.m_min_frac, 0.10);
+        assert_eq!(c.m_max_frac, 0.25);
+        assert_eq!(c.k_min_frac, 0.05);
+        assert_eq!(c.k_max_frac, 0.10);
+        assert_eq!(c.steps, 10);
+    }
+}

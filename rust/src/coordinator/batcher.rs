@@ -1,0 +1,115 @@
+//! The dispatch batcher: groups live sequences by (method, k-bucket) for a
+//! scheduler tick.
+//!
+//! All sequences in a group share a compiled executable, so the executor
+//! runs them back-to-back while the executable (and its tiles) stay hot —
+//! and the coarse scans for the whole group run concurrently on the scan
+//! pool before any dispatch happens (scan/dispatch phase separation). The
+//! invariant tested below is the one the engine relies on: a group never
+//! mixes buckets or methods, and every sequence appears in exactly one
+//! group per tick.
+
+use crate::denoiser::DenoiserKind;
+
+/// Minimal view of a live sequence the batcher needs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SeqKey {
+    pub seq: usize,
+    pub method: DenoiserKind,
+    /// sampling-point index this tick executes
+    pub step: usize,
+    /// padded aggregation bucket for this step
+    pub k_bucket: usize,
+}
+
+/// One dispatch group of a tick.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Group {
+    pub method: DenoiserKind,
+    pub step: usize,
+    pub k_bucket: usize,
+    pub seqs: Vec<usize>,
+}
+
+/// Group sequences by (method, step, k_bucket); groups are ordered largest
+/// bucket first ("prefill-like" work before "decode-like", so early-phase
+/// requests do not starve behind a long tail of cheap late steps).
+pub fn group_tick(seqs: &[SeqKey]) -> Vec<Group> {
+    let mut groups: Vec<Group> = Vec::new();
+    for s in seqs {
+        match groups.iter_mut().find(|g| {
+            g.method == s.method && g.step == s.step && g.k_bucket == s.k_bucket
+        }) {
+            Some(g) => g.seqs.push(s.seq),
+            None => groups.push(Group {
+                method: s.method,
+                step: s.step,
+                k_bucket: s.k_bucket,
+                seqs: vec![s.seq],
+            }),
+        }
+    }
+    groups.sort_by(|a, b| b.k_bucket.cmp(&a.k_bucket).then(a.step.cmp(&b.step)));
+    groups
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{forall, gen};
+
+    #[test]
+    fn groups_never_mix_and_cover_everything() {
+        forall(29, 200, |rng| {
+            let n = gen::usize_in(rng, 0, 64);
+            let methods = [
+                DenoiserKind::GoldDiff,
+                DenoiserKind::Optimal,
+                DenoiserKind::Pca,
+            ];
+            let seqs: Vec<SeqKey> = (0..n)
+                .map(|i| SeqKey {
+                    seq: i,
+                    method: methods[rng.below(3)],
+                    step: gen::usize_in(rng, 0, 9),
+                    k_bucket: gen::pow2_in(rng, 32, 8192),
+                })
+                .collect();
+            let groups = group_tick(&seqs);
+            let mut seen = vec![false; n];
+            for g in &groups {
+                for &sid in &g.seqs {
+                    crate::prop_assert!(!seen[sid], "seq {sid} in two groups");
+                    seen[sid] = true;
+                    let key = &seqs[sid];
+                    crate::prop_assert!(
+                        key.method == g.method
+                            && key.step == g.step
+                            && key.k_bucket == g.k_bucket,
+                        "seq {sid} grouped under wrong key"
+                    );
+                }
+            }
+            crate::prop_assert!(seen.iter().all(|&s| s), "sequence dropped");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn big_buckets_dispatch_first() {
+        let seqs = vec![
+            SeqKey { seq: 0, method: DenoiserKind::GoldDiff, step: 9, k_bucket: 32 },
+            SeqKey { seq: 1, method: DenoiserKind::GoldDiff, step: 0, k_bucket: 2048 },
+            SeqKey { seq: 2, method: DenoiserKind::GoldDiff, step: 9, k_bucket: 32 },
+        ];
+        let groups = group_tick(&seqs);
+        assert_eq!(groups.len(), 2);
+        assert_eq!(groups[0].k_bucket, 2048);
+        assert_eq!(groups[1].seqs, vec![0, 2]);
+    }
+
+    #[test]
+    fn empty_input_is_empty() {
+        assert!(group_tick(&[]).is_empty());
+    }
+}

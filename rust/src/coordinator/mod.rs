@@ -1,0 +1,28 @@
+//! The L3 serving coordinator — the paper's system contribution expressed
+//! as a vLLM-style engine:
+//!
+//! * [`request`] — generation requests / responses / sequence state.
+//! * [`queue`] — bounded submission queue (backpressure).
+//! * [`batcher`] — groups live sequences by (method, k-bucket) so one
+//!   scheduler tick amortises scans and keeps dispatch order cache-friendly.
+//! * [`xla_denoiser`] — the XLA-artifact-backed denoiser (all heavy math in
+//!   PJRT executables; rust does retrieval, gather and orchestration).
+//! * [`engine`] — the continuous-batching serving loop on a dedicated
+//!   executor thread, with admission control and per-request telemetry.
+//! * [`stats`] — latency/throughput accounting.
+//!
+//! The paper's Integration→Selection transition (Sec. 3.3) is visible here
+//! as a serving policy: early steps are "prefill-like" (large k_t, coarse
+//! retrieval, compute-bound dispatches), late steps "decode-like" (small
+//! k_t, precise retrieval, retrieval-bound) — the batcher keeps the two
+//! phases in separate dispatch groups.
+
+pub mod batcher;
+pub mod engine;
+pub mod queue;
+pub mod request;
+pub mod stats;
+pub mod xla_denoiser;
+
+pub use engine::Engine;
+pub use request::{GenRequest, GenResponse};

@@ -1,0 +1,203 @@
+//! Bounded MPMC submission queue with backpressure.
+//!
+//! `submit` blocks while the queue is at capacity (backpressure towards the
+//! client); `try_submit` fails fast (the TCP server's 429-equivalent);
+//! `pop_batch` drains up to `max` entries for one admission round and
+//! `close` wakes all waiters for shutdown.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+pub struct BoundedQueue<T> {
+    inner: Mutex<Inner<T>>,
+    not_full: Condvar,
+    not_empty: Condvar,
+    capacity: usize,
+}
+
+struct Inner<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+#[derive(Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    Full,
+    Closed,
+}
+
+impl<T> BoundedQueue<T> {
+    pub fn new(capacity: usize) -> Self {
+        BoundedQueue {
+            inner: Mutex::new(Inner {
+                items: VecDeque::new(),
+                closed: false,
+            }),
+            not_full: Condvar::new(),
+            not_empty: Condvar::new(),
+            capacity: capacity.max(1),
+        }
+    }
+
+    /// Blocking submit (backpressure). Errors only when closed.
+    pub fn submit(&self, item: T) -> Result<(), SubmitError> {
+        let mut g = self.inner.lock().unwrap();
+        while g.items.len() >= self.capacity && !g.closed {
+            g = self.not_full.wait(g).unwrap();
+        }
+        if g.closed {
+            return Err(SubmitError::Closed);
+        }
+        g.items.push_back(item);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Non-blocking submit.
+    pub fn try_submit(&self, item: T) -> Result<(), SubmitError> {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed {
+            return Err(SubmitError::Closed);
+        }
+        if g.items.len() >= self.capacity {
+            return Err(SubmitError::Full);
+        }
+        g.items.push_back(item);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Drain up to `max` items; blocks until ≥1 item or closed-and-empty
+    /// (returns empty vec). With `max == 0` returns immediately.
+    pub fn pop_batch(&self, max: usize) -> Vec<T> {
+        if max == 0 {
+            return Vec::new();
+        }
+        let mut g = self.inner.lock().unwrap();
+        while g.items.is_empty() && !g.closed {
+            g = self.not_empty.wait(g).unwrap();
+        }
+        let take = max.min(g.items.len());
+        let out: Vec<T> = g.items.drain(..take).collect();
+        if !out.is_empty() {
+            self.not_full.notify_all();
+        }
+        out
+    }
+
+    /// Non-blocking drain of up to `max` items.
+    pub fn try_pop_batch(&self, max: usize) -> Vec<T> {
+        let mut g = self.inner.lock().unwrap();
+        let take = max.min(g.items.len());
+        let out: Vec<T> = g.items.drain(..take).collect();
+        if !out.is_empty() {
+            self.not_full.notify_all();
+        }
+        out
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn close(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.inner.lock().unwrap().closed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+    use std::thread;
+
+    #[test]
+    fn fifo_order_preserved() {
+        let q = BoundedQueue::new(16);
+        for i in 0..10 {
+            q.try_submit(i).unwrap();
+        }
+        assert_eq!(q.pop_batch(4), vec![0, 1, 2, 3]);
+        assert_eq!(q.pop_batch(100), vec![4, 5, 6, 7, 8, 9]);
+    }
+
+    #[test]
+    fn try_submit_full() {
+        let q = BoundedQueue::new(2);
+        q.try_submit(1).unwrap();
+        q.try_submit(2).unwrap();
+        assert_eq!(q.try_submit(3), Err(SubmitError::Full));
+        q.try_pop_batch(1);
+        q.try_submit(3).unwrap();
+    }
+
+    #[test]
+    fn close_unblocks_and_rejects() {
+        let q = Arc::new(BoundedQueue::<u32>::new(4));
+        let q2 = Arc::clone(&q);
+        let h = thread::spawn(move || q2.pop_batch(1));
+        thread::sleep(std::time::Duration::from_millis(30));
+        q.close();
+        assert!(h.join().unwrap().is_empty());
+        assert_eq!(q.try_submit(1), Err(SubmitError::Closed));
+        assert_eq!(q.submit(1), Err(SubmitError::Closed));
+    }
+
+    #[test]
+    fn blocking_submit_applies_backpressure() {
+        let q = Arc::new(BoundedQueue::new(1));
+        q.submit(0u32).unwrap();
+        let q2 = Arc::clone(&q);
+        let h = thread::spawn(move || {
+            q2.submit(1u32).unwrap(); // blocks until pop
+            true
+        });
+        thread::sleep(std::time::Duration::from_millis(30));
+        assert_eq!(q.len(), 1, "second submit must still be blocked");
+        assert_eq!(q.pop_batch(1), vec![0]);
+        assert!(h.join().unwrap());
+        assert_eq!(q.pop_batch(1), vec![1]);
+    }
+
+    #[test]
+    fn concurrent_producers_lose_nothing() {
+        let q = Arc::new(BoundedQueue::new(8));
+        let mut handles = Vec::new();
+        for t in 0..4u32 {
+            let q = Arc::clone(&q);
+            handles.push(thread::spawn(move || {
+                for i in 0..50u32 {
+                    q.submit(t * 1000 + i).unwrap();
+                }
+            }));
+        }
+        let q2 = Arc::clone(&q);
+        let consumer = thread::spawn(move || {
+            let mut got = Vec::new();
+            while got.len() < 200 {
+                got.extend(q2.pop_batch(16));
+            }
+            got
+        });
+        for h in handles {
+            h.join().unwrap();
+        }
+        let got = consumer.join().unwrap();
+        assert_eq!(got.len(), 200);
+        let mut sorted = got.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 200, "duplicates or losses");
+    }
+}

@@ -1,0 +1,131 @@
+//! Generation requests, responses, and live-sequence state.
+
+use crate::denoiser::DenoiserKind;
+use crate::util::json::Json;
+
+/// A generation job submitted to the engine.
+#[derive(Debug, Clone)]
+pub struct GenRequest {
+    pub id: u64,
+    pub method: DenoiserKind,
+    /// sampling seed (initial noise + any ancestral noise)
+    pub seed: u64,
+    /// conditional class (ImageNet-sim)
+    pub class: Option<u32>,
+    /// DDIM stochasticity
+    pub eta: f32,
+}
+
+impl GenRequest {
+    pub fn new(id: u64, method: DenoiserKind, seed: u64) -> GenRequest {
+        GenRequest {
+            id,
+            method,
+            seed,
+            class: None,
+            eta: 0.0,
+        }
+    }
+
+    pub fn with_class(mut self, class: u32) -> Self {
+        self.class = Some(class);
+        self
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("id", self.id)
+            .set("method", self.method.name())
+            .set("seed", self.seed)
+            .set("eta", self.eta as f64);
+        if let Some(c) = self.class {
+            j.set("class", c as usize);
+        }
+        j
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<GenRequest> {
+        let method = j
+            .get("method")
+            .and_then(Json::as_str)
+            .and_then(DenoiserKind::parse)
+            .ok_or_else(|| anyhow::anyhow!("bad or missing method"))?;
+        Ok(GenRequest {
+            id: j.get("id").and_then(Json::as_f64).unwrap_or(0.0) as u64,
+            method,
+            seed: j.get("seed").and_then(Json::as_f64).unwrap_or(0.0) as u64,
+            class: j.get("class").and_then(Json::as_f64).map(|c| c as u32),
+            eta: j.get("eta").and_then(Json::as_f64).unwrap_or(0.0) as f32,
+        })
+    }
+}
+
+/// Per-step telemetry attached to a finished request.
+#[derive(Debug, Clone, Default)]
+pub struct StepTelemetry {
+    pub k_bucket: usize,
+    pub m_used: usize,
+    pub k_used: usize,
+    pub scan_secs: f64,
+    pub dispatch_secs: f64,
+    pub entropy: f32,
+    pub top1_weight: f32,
+}
+
+/// The finished generation.
+#[derive(Debug, Clone)]
+pub struct GenResponse {
+    pub id: u64,
+    pub sample: Vec<f32>,
+    pub steps: Vec<StepTelemetry>,
+    /// end-to-end latency (submit → completion)
+    pub latency_secs: f64,
+    /// queueing delay before the first step
+    pub queue_secs: f64,
+}
+
+impl GenResponse {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("id", self.id)
+            .set("latency_secs", self.latency_secs)
+            .set("queue_secs", self.queue_secs)
+            .set("steps", self.steps.len())
+            .set("sample", self.sample.as_slice());
+        j
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_json_roundtrip() {
+        let r = GenRequest::new(42, DenoiserKind::GoldDiff, 7).with_class(3);
+        let rt = GenRequest::from_json(&r.to_json()).unwrap();
+        assert_eq!(rt.id, 42);
+        assert_eq!(rt.method, DenoiserKind::GoldDiff);
+        assert_eq!(rt.seed, 7);
+        assert_eq!(rt.class, Some(3));
+    }
+
+    #[test]
+    fn rejects_bad_method() {
+        let j = crate::util::json::parse(r#"{"id":1,"method":"nope","seed":0}"#).unwrap();
+        assert!(GenRequest::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn response_json_has_sample() {
+        let r = GenResponse {
+            id: 1,
+            sample: vec![0.5, -0.5],
+            steps: vec![],
+            latency_secs: 0.1,
+            queue_secs: 0.01,
+        };
+        let j = r.to_json();
+        assert_eq!(j.get("sample").unwrap().as_arr().unwrap().len(), 2);
+    }
+}

@@ -1,0 +1,95 @@
+//! Engine telemetry: request latency distribution, throughput, per-phase
+//! step timing (scan vs dispatch — the Integration/Selection split).
+
+use std::time::Instant;
+
+use crate::util::json::Json;
+use crate::util::timer::TimingStats;
+
+#[derive(Debug)]
+pub struct EngineStats {
+    pub started_at: Instant,
+    pub submitted: u64,
+    pub completed: u64,
+    pub rejected: u64,
+    pub steps_executed: u64,
+    pub latency: TimingStats,
+    pub queue_delay: TimingStats,
+    pub scan_time: TimingStats,
+    pub dispatch_time: TimingStats,
+}
+
+impl Default for EngineStats {
+    fn default() -> Self {
+        EngineStats {
+            started_at: Instant::now(),
+            submitted: 0,
+            completed: 0,
+            rejected: 0,
+            steps_executed: 0,
+            latency: TimingStats::new(),
+            queue_delay: TimingStats::new(),
+            scan_time: TimingStats::new(),
+            dispatch_time: TimingStats::new(),
+        }
+    }
+}
+
+impl EngineStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn throughput_rps(&self) -> f64 {
+        let secs = self.started_at.elapsed().as_secs_f64();
+        if secs <= 0.0 {
+            0.0
+        } else {
+            self.completed as f64 / secs
+        }
+    }
+
+    pub fn steps_per_sec(&self) -> f64 {
+        let secs = self.started_at.elapsed().as_secs_f64();
+        if secs <= 0.0 {
+            0.0
+        } else {
+            self.steps_executed as f64 / secs
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("submitted", self.submitted)
+            .set("completed", self.completed)
+            .set("rejected", self.rejected)
+            .set("steps_executed", self.steps_executed)
+            .set("throughput_rps", self.throughput_rps())
+            .set("steps_per_sec", self.steps_per_sec())
+            .set("latency_p50_s", self.latency.percentile(0.5))
+            .set("latency_p95_s", self.latency.percentile(0.95))
+            .set("latency_mean_s", self.latency.mean())
+            .set("queue_p50_s", self.queue_delay.percentile(0.5))
+            .set("scan_mean_s", self.scan_time.mean())
+            .set("dispatch_mean_s", self.dispatch_time.mean());
+        j
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_summary_has_all_fields() {
+        let mut s = EngineStats::new();
+        s.submitted = 10;
+        s.completed = 8;
+        s.latency.record_secs(0.5);
+        s.latency.record_secs(1.5);
+        let j = s.to_json();
+        assert_eq!(j.get("completed").unwrap().as_f64(), Some(8.0));
+        assert!(j.get("latency_p50_s").unwrap().as_f64().unwrap() >= 0.5);
+        assert!(j.get("throughput_rps").unwrap().as_f64().unwrap() > 0.0);
+    }
+}

@@ -1,0 +1,256 @@
+//! K-means clustering + per-cluster truncated PCA (subspace iteration).
+//!
+//! Substrate for the PCA baseline (Lukoianov et al. 2025): at dataset-build
+//! time the corpus is clustered and each cluster gets a rank-R orthonormal
+//! basis; at inference the denoiser picks the nearest cluster's basis and
+//! computes posterior weights in that local subspace (Eq. 3's P_i).
+
+use crate::util::rng::Pcg64;
+use crate::util::threadpool::parallel_chunks;
+
+/// K-means over flat [n × d] data. Returns (centroids [k × d], assignment).
+pub fn kmeans(
+    data: &[f32],
+    n: usize,
+    d: usize,
+    k: usize,
+    iters: usize,
+    rng: &mut Pcg64,
+) -> (Vec<f32>, Vec<u32>) {
+    assert!(n >= k && k >= 1);
+    // k-means++ style seeding on a subsample for speed
+    let mut centroids = vec![0.0f32; k * d];
+    let first = rng.below(n);
+    centroids[..d].copy_from_slice(&data[first * d..(first + 1) * d]);
+    for ci in 1..k {
+        // sample proportional to distance to nearest chosen centroid over a
+        // bounded candidate set
+        let cands = rng.choose_k(n, 256.min(n));
+        let mut best_idx = cands[0];
+        let mut best_score = -1.0f32;
+        for &i in &cands {
+            let row = &data[i * d..(i + 1) * d];
+            let mut nearest = f32::INFINITY;
+            for cj in 0..ci {
+                let c = &centroids[cj * d..(cj + 1) * d];
+                nearest = nearest.min(sqdist(row, c));
+            }
+            if nearest > best_score {
+                best_score = nearest;
+                best_idx = i;
+            }
+        }
+        centroids[ci * d..(ci + 1) * d]
+            .copy_from_slice(&data[best_idx * d..(best_idx + 1) * d]);
+    }
+
+    let mut assign = vec![0u32; n];
+    let threads = crate::util::threadpool::default_threads();
+    for _ in 0..iters {
+        // assignment step (parallel)
+        let parts = parallel_chunks(n, threads, |_, s, e| {
+            let mut local = vec![0u32; e - s];
+            for i in s..e {
+                let row = &data[i * d..(i + 1) * d];
+                let mut best = 0u32;
+                let mut best_d = f32::INFINITY;
+                for cj in 0..k {
+                    let dd = sqdist(row, &centroids[cj * d..(cj + 1) * d]);
+                    if dd < best_d {
+                        best_d = dd;
+                        best = cj as u32;
+                    }
+                }
+                local[i - s] = best;
+            }
+            (s, local)
+        });
+        for (s, local) in parts {
+            assign[s..s + local.len()].copy_from_slice(&local);
+        }
+        // update step
+        let mut counts = vec![0u32; k];
+        let mut sums = vec![0.0f64; k * d];
+        for i in 0..n {
+            let c = assign[i] as usize;
+            counts[c] += 1;
+            let row = &data[i * d..(i + 1) * d];
+            for j in 0..d {
+                sums[c * d + j] += row[j] as f64;
+            }
+        }
+        for c in 0..k {
+            if counts[c] == 0 {
+                // re-seed empty cluster
+                let i = rng.below(n);
+                centroids[c * d..(c + 1) * d].copy_from_slice(&data[i * d..(i + 1) * d]);
+            } else {
+                for j in 0..d {
+                    centroids[c * d + j] = (sums[c * d + j] / counts[c] as f64) as f32;
+                }
+            }
+        }
+    }
+    (centroids, assign)
+}
+
+fn sqdist(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+}
+
+/// Rank-R PCA of the rows in `rows` (indices into data) about their mean,
+/// via subspace (block power) iteration: Z ← Xᵀ(X Z), QR-orthonormalise.
+/// Returns (basis [r × d] with orthonormal rows, center [d]).
+pub fn local_pca(
+    data: &[f32],
+    d: usize,
+    rows: &[usize],
+    r: usize,
+    iters: usize,
+    rng: &mut Pcg64,
+) -> (Vec<f32>, Vec<f32>) {
+    let m = rows.len();
+    assert!(m >= 1);
+    let r = r.min(d).min(m.max(1));
+
+    let mut center = vec![0.0f32; d];
+    for &i in rows {
+        for j in 0..d {
+            center[j] += data[i * d + j];
+        }
+    }
+    for v in center.iter_mut() {
+        *v /= m as f32;
+    }
+
+    // init random basis [r × d]
+    let mut basis = vec![0.0f32; r * d];
+    rng.fill_normal(&mut basis);
+    orthonormalize_rows(&mut basis, r, d);
+
+    let mut proj = vec![0.0f32; m * r];
+    for _ in 0..iters {
+        // proj = (X - mu) Bᵀ : [m × r]
+        for (pi, &i) in rows.iter().enumerate() {
+            let row = &data[i * d..(i + 1) * d];
+            for rr in 0..r {
+                let b = &basis[rr * d..(rr + 1) * d];
+                let mut acc = 0.0f32;
+                for j in 0..d {
+                    acc += (row[j] - center[j]) * b[j];
+                }
+                proj[pi * r + rr] = acc;
+            }
+        }
+        // basis = projᵀ (X - mu) : [r × d], then orthonormalise
+        basis.iter_mut().for_each(|v| *v = 0.0);
+        for (pi, &i) in rows.iter().enumerate() {
+            let row = &data[i * d..(i + 1) * d];
+            for rr in 0..r {
+                let p = proj[pi * r + rr];
+                let b = &mut basis[rr * d..(rr + 1) * d];
+                for j in 0..d {
+                    b[j] += p * (row[j] - center[j]);
+                }
+            }
+        }
+        orthonormalize_rows(&mut basis, r, d);
+    }
+    (basis, center)
+}
+
+/// Modified Gram–Schmidt on the rows of a [r × d] matrix (in place).
+pub fn orthonormalize_rows(mat: &mut [f32], r: usize, d: usize) {
+    for i in 0..r {
+        // subtract projections onto previous rows
+        for p in 0..i {
+            let (head, tail) = mat.split_at_mut(i * d);
+            let prev = &head[p * d..(p + 1) * d];
+            let cur = &mut tail[..d];
+            let dot: f32 = prev.iter().zip(cur.iter()).map(|(a, b)| a * b).sum();
+            for j in 0..d {
+                cur[j] -= dot * prev[j];
+            }
+        }
+        let row = &mut mat[i * d..(i + 1) * d];
+        let norm: f32 = row.iter().map(|v| v * v).sum::<f32>().sqrt();
+        if norm > 1e-12 {
+            for v in row.iter_mut() {
+                *v /= norm;
+            }
+        } else {
+            // degenerate direction: re-seed with a unit vector
+            for (j, v) in row.iter_mut().enumerate() {
+                *v = if j == i % d { 1.0 } else { 0.0 };
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kmeans_separates_two_blobs() {
+        let mut rng = Pcg64::new(1);
+        let n = 400;
+        let d = 4;
+        let mut data = vec![0.0f32; n * d];
+        for i in 0..n {
+            let off = if i < n / 2 { -5.0 } else { 5.0 };
+            for j in 0..d {
+                data[i * d + j] = off + rng.normal() * 0.3;
+            }
+        }
+        let (_, assign) = kmeans(&data, n, d, 2, 8, &mut rng);
+        // all of first half same cluster, second half the other
+        let a0 = assign[0];
+        assert!(assign[..n / 2].iter().all(|&a| a == a0));
+        assert!(assign[n / 2..].iter().all(|&a| a != a0));
+    }
+
+    #[test]
+    fn pca_recovers_dominant_direction() {
+        let mut rng = Pcg64::new(2);
+        let n = 500;
+        let d = 8;
+        // variance 25 along e0, 0.01 elsewhere
+        let mut data = vec![0.0f32; n * d];
+        for i in 0..n {
+            let t = rng.normal() * 5.0;
+            for j in 0..d {
+                data[i * d + j] = if j == 0 { t } else { rng.normal() * 0.1 };
+            }
+        }
+        let rows: Vec<usize> = (0..n).collect();
+        let (basis, center) = local_pca(&data, d, &rows, 2, 12, &mut rng);
+        assert!(center.iter().all(|c| c.abs() < 0.5));
+        // first basis row should align with e0
+        assert!(
+            basis[0].abs() > 0.99,
+            "dominant direction not recovered: {}",
+            basis[0]
+        );
+    }
+
+    #[test]
+    fn orthonormal_rows_are_orthonormal() {
+        let mut rng = Pcg64::new(3);
+        let (r, d) = (4, 16);
+        let mut mat = vec![0.0f32; r * d];
+        rng.fill_normal(&mut mat);
+        orthonormalize_rows(&mut mat, r, d);
+        for i in 0..r {
+            for j in 0..r {
+                let dot: f32 = mat[i * d..(i + 1) * d]
+                    .iter()
+                    .zip(&mat[j * d..(j + 1) * d])
+                    .map(|(a, b)| a * b)
+                    .sum();
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((dot - want).abs() < 1e-4, "({i},{j}) dot {dot}");
+            }
+        }
+    }
+}

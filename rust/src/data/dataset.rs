@@ -1,0 +1,271 @@
+//! The in-memory dataset: raw corpus + every derived structure the serving
+//! engine needs (proxy table, class shards, clusters, local PCA bases,
+//! global Gaussian stats, and the population GMM for the oracle).
+
+use super::cluster::{kmeans, local_pca};
+use super::gmm::GmmSpec;
+use super::synthetic::{build_population, proxy_embed_all, PresetSpec};
+use crate::util::rng::Pcg64;
+
+/// Number of local-PCA clusters.
+pub const N_CLUSTERS: usize = 16;
+/// Rank of the local PCA bases (matches python/compile/presets.PCA_RANK).
+pub const PCA_RANK: usize = 32;
+
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub name: String,
+    pub n: usize,
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    pub d: usize,
+    pub proxy_d: usize,
+    pub classes: usize,
+    pub conditional: bool,
+
+    /// flat corpus [n × d]
+    pub data: Vec<f32>,
+    /// class labels [n]
+    pub labels: Vec<u32>,
+    /// s=1/4 proxy table [n × proxy_d]
+    pub proxies: Vec<f32>,
+    /// per-class row indices (conditional scans)
+    pub class_rows: Vec<Vec<u32>>,
+
+    /// global Gaussian stats (Wiener)
+    pub mean: Vec<f32>,
+    pub var: Vec<f32>,
+
+    /// k-means centroids [N_CLUSTERS × d] + assignment [n]
+    pub centroids: Vec<f32>,
+    pub assignments: Vec<u32>,
+    /// local PCA: bases [N_CLUSTERS × PCA_RANK × d], centers [N_CLUSTERS × d]
+    pub pca_bases: Vec<f32>,
+    pub pca_centers: Vec<f32>,
+
+    /// the known population law (closed-form oracle)
+    pub gmm: GmmSpec,
+}
+
+impl Dataset {
+    /// Synthesise a dataset from its preset (generation + all derived
+    /// structures). Deterministic in (preset, seed).
+    pub fn synthesize(spec: &PresetSpec, seed: u64) -> Dataset {
+        let gmm = build_population(spec, seed);
+        let mut rng = Pcg64::with_stream(seed, 0xda7a);
+        let (data, labels) = gmm.sample_n(spec.n, &mut rng);
+        Self::from_parts(spec, data, labels, gmm, seed)
+    }
+
+    pub fn from_parts(
+        spec: &PresetSpec,
+        data: Vec<f32>,
+        labels: Vec<u32>,
+        gmm: GmmSpec,
+        seed: u64,
+    ) -> Dataset {
+        let n = spec.n;
+        let d = spec.d();
+        assert_eq!(data.len(), n * d);
+        let proxies = proxy_embed_all(&data, n, spec.h, spec.w, spec.c);
+
+        let mut mean = vec![0.0f32; d];
+        for i in 0..n {
+            for j in 0..d {
+                mean[j] += data[i * d + j];
+            }
+        }
+        mean.iter_mut().for_each(|m| *m /= n as f32);
+        let mut var = vec![0.0f32; d];
+        for i in 0..n {
+            for j in 0..d {
+                let dv = data[i * d + j] - mean[j];
+                var[j] += dv * dv;
+            }
+        }
+        var.iter_mut().for_each(|v| *v = (*v / n as f32).max(1e-6));
+
+        let mut class_rows = vec![Vec::new(); spec.classes];
+        for (i, &y) in labels.iter().enumerate() {
+            class_rows[y as usize].push(i as u32);
+        }
+
+        // clusters + local PCA on a bounded subsample for speed
+        let mut crng = Pcg64::with_stream(seed, 0xc1u64);
+        let ncl = N_CLUSTERS.min(n);
+        let (centroids, assignments) = kmeans(&data, n, d, ncl, 6, &mut crng);
+        let rank = PCA_RANK.min(d);
+        let mut pca_bases = vec![0.0f32; ncl * rank * d];
+        let mut pca_centers = vec![0.0f32; ncl * d];
+        // per-cluster row lists (bounded subsample for the PCA fit)
+        let cluster_rows: Vec<Vec<usize>> = (0..ncl)
+            .map(|cl| {
+                let mut rows: Vec<usize> = assignments
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, &a)| a as usize == cl)
+                    .map(|(i, _)| i)
+                    .collect();
+                if rows.is_empty() {
+                    rows.push(crng.below(n));
+                }
+                if rows.len() > 1200 {
+                    crng.shuffle(&mut rows);
+                    rows.truncate(1200);
+                }
+                rows
+            })
+            .collect();
+        // fit all cluster bases in parallel (dominant cost of dataset build)
+        let fits = crate::util::threadpool::parallel_chunks(ncl, ncl, |_, s, e| {
+            let mut out = Vec::with_capacity(e - s);
+            for cl in s..e {
+                let mut rng = Pcg64::with_stream(seed ^ cl as u64, 0x9ca);
+                out.push(local_pca(&data, d, &cluster_rows[cl], rank, 5, &mut rng));
+            }
+            out
+        });
+        for (cl, (basis, center)) in fits.into_iter().flatten().enumerate() {
+            pca_bases[cl * rank * d..cl * rank * d + basis.len()].copy_from_slice(&basis);
+            pca_centers[cl * d..(cl + 1) * d].copy_from_slice(&center);
+        }
+
+        Dataset {
+            name: spec.name.to_string(),
+            n,
+            h: spec.h,
+            w: spec.w,
+            c: spec.c,
+            d,
+            proxy_d: spec.proxy_d(),
+            classes: spec.classes,
+            conditional: spec.conditional,
+            data,
+            labels,
+            proxies,
+            class_rows,
+            mean,
+            var,
+            centroids,
+            assignments,
+            pca_bases,
+            pca_centers,
+            gmm,
+        }
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.d..(i + 1) * self.d]
+    }
+
+    #[inline]
+    pub fn proxy_row(&self, i: usize) -> &[f32] {
+        &self.proxies[i * self.proxy_d..(i + 1) * self.proxy_d]
+    }
+
+    /// Gather rows into a caller-provided padded buffer [bucket × d]; rows
+    /// beyond `idx.len()` are zero-filled. Returns the validity mask length.
+    pub fn gather_rows(&self, idx: &[u32], bucket: usize, out: &mut Vec<f32>, mask: &mut Vec<f32>) {
+        out.clear();
+        out.resize(bucket * self.d, 0.0);
+        mask.clear();
+        mask.resize(bucket, 0.0);
+        for (slot, &i) in idx.iter().take(bucket).enumerate() {
+            out[slot * self.d..(slot + 1) * self.d].copy_from_slice(self.row(i as usize));
+            mask[slot] = 1.0;
+        }
+    }
+
+    /// Index of the nearest k-means cluster to a query (PCA basis pick).
+    pub fn nearest_cluster(&self, q: &[f32]) -> usize {
+        let ncl = self.centroids.len() / self.d;
+        let mut best = 0;
+        let mut best_d = f32::INFINITY;
+        for cl in 0..ncl {
+            let c = &self.centroids[cl * self.d..(cl + 1) * self.d];
+            let dd: f32 = c.iter().zip(q).map(|(a, b)| (a - b) * (a - b)).sum();
+            if dd < best_d {
+                best_d = dd;
+                best = cl;
+            }
+        }
+        best
+    }
+
+    pub fn pca_basis(&self, cluster: usize) -> (&[f32], &[f32]) {
+        let rank = PCA_RANK.min(self.d);
+        let b = &self.pca_bases[cluster * rank * self.d..(cluster + 1) * rank * self.d];
+        let c = &self.pca_centers[cluster * self.d..(cluster + 1) * self.d];
+        (b, c)
+    }
+
+    pub fn bytes(&self) -> u64 {
+        (self.data.len() + self.proxies.len() + self.mean.len() + self.var.len()) as u64 * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::preset;
+
+    fn tiny() -> Dataset {
+        let mut spec = preset("mnist-sim").unwrap().clone();
+        spec.n = 300;
+        Dataset::synthesize(&spec, 42)
+    }
+
+    #[test]
+    fn synthesis_produces_consistent_shapes() {
+        let ds = tiny();
+        assert_eq!(ds.data.len(), 300 * 256);
+        assert_eq!(ds.proxies.len(), 300 * 16);
+        assert_eq!(ds.labels.len(), 300);
+        assert_eq!(ds.class_rows.iter().map(Vec::len).sum::<usize>(), 300);
+        assert!(ds.labels.iter().all(|&y| (y as usize) < ds.classes));
+    }
+
+    #[test]
+    fn synthesis_is_deterministic() {
+        let spec = {
+            let mut s = preset("moons").unwrap().clone();
+            s.n = 100;
+            s
+        };
+        let a = Dataset::synthesize(&spec, 7);
+        let b = Dataset::synthesize(&spec, 7);
+        assert_eq!(a.data, b.data);
+        assert_eq!(a.labels, b.labels);
+        let c = Dataset::synthesize(&spec, 8);
+        assert_ne!(a.data, c.data);
+    }
+
+    #[test]
+    fn gather_pads_and_masks() {
+        let ds = tiny();
+        let mut buf = Vec::new();
+        let mut mask = Vec::new();
+        ds.gather_rows(&[3, 5], 4, &mut buf, &mut mask);
+        assert_eq!(buf.len(), 4 * ds.d);
+        assert_eq!(mask, vec![1.0, 1.0, 0.0, 0.0]);
+        assert_eq!(&buf[..ds.d], ds.row(3));
+        assert!(buf[2 * ds.d..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn nearest_cluster_self_consistent() {
+        let ds = tiny();
+        // a centroid's nearest cluster is itself
+        let cl = 3.min(ds.centroids.len() / ds.d - 1);
+        let q = ds.centroids[cl * ds.d..(cl + 1) * ds.d].to_vec();
+        assert_eq!(ds.nearest_cluster(&q), cl);
+    }
+
+    #[test]
+    fn variance_is_positive() {
+        let ds = tiny();
+        assert!(ds.var.iter().all(|&v| v > 0.0));
+    }
+}

@@ -1,0 +1,13 @@
+//! Datasets: the synthetic hierarchical-GMM image generator (the paper's
+//! benchmark stand-ins, DESIGN.md §3), the known population mixture each
+//! dataset is drawn from (which powers the closed-form oracle), clustering
+//! + local PCA bases for the PCA baseline, and the `.gds` binary store.
+
+pub mod cluster;
+pub mod dataset;
+pub mod gmm;
+pub mod store;
+pub mod synthetic;
+
+pub use dataset::Dataset;
+pub use gmm::GmmSpec;

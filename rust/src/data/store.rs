@@ -1,0 +1,287 @@
+//! `.gds` — the GoldDiff dataset store.
+//!
+//! Layout: magic `GDS1` · u32 header length · JSON header · raw
+//! little-endian sections. The header lists every section with byte offset
+//! and element count, so readers can seek directly; all tensors are f32 or
+//! u32. The population GMM rides along so the closed-form oracle can be
+//! reconstructed from the file alone.
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Seek, SeekFrom, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::dataset::Dataset;
+use super::gmm::GmmSpec;
+use crate::util::json::{parse, Json};
+
+const MAGIC: &[u8; 4] = b"GDS1";
+
+/// Serialise a dataset (with its population GMM) to `path`.
+pub fn save(ds: &Dataset, path: &Path) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut header = Json::obj();
+    header
+        .set("name", ds.name.as_str())
+        .set("n", ds.n)
+        .set("h", ds.h)
+        .set("w", ds.w)
+        .set("c", ds.c)
+        .set("d", ds.d)
+        .set("proxy_d", ds.proxy_d)
+        .set("classes", ds.classes)
+        .set("conditional", ds.conditional)
+        .set("gmm_components", ds.gmm.n_components());
+
+    // We need section offsets before writing the header, so write sections
+    // to a temp buffer plan first: compute sizes, then emit.
+    // Simpler: write header placeholder of fixed size after collecting
+    // section metadata — do a two-pass over an in-memory plan of slices.
+    let gmm_weights: Vec<f32> = ds.gmm.components.iter().map(|c| c.weight).collect();
+    let gmm_classes: Vec<u32> = ds.gmm.components.iter().map(|c| c.class).collect();
+    let mut gmm_means = Vec::with_capacity(ds.gmm.n_components() * ds.d);
+    let mut gmm_vars = Vec::with_capacity(ds.gmm.n_components() * ds.d);
+    for comp in &ds.gmm.components {
+        gmm_means.extend_from_slice(&comp.mean);
+        gmm_vars.extend_from_slice(&comp.var);
+    }
+
+    enum Sec<'a> {
+        F(&'a str, &'a [f32]),
+        U(&'a str, &'a [u32]),
+    }
+    let plan = [
+        Sec::F("data", &ds.data),
+        Sec::U("labels", &ds.labels),
+        Sec::F("proxies", &ds.proxies),
+        Sec::F("mean", &ds.mean),
+        Sec::F("var", &ds.var),
+        Sec::F("centroids", &ds.centroids),
+        Sec::U("assignments", &ds.assignments),
+        Sec::F("pca_bases", &ds.pca_bases),
+        Sec::F("pca_centers", &ds.pca_centers),
+        Sec::F("gmm_weights", &gmm_weights),
+        Sec::U("gmm_classes", &gmm_classes),
+        Sec::F("gmm_means", &gmm_means),
+        Sec::F("gmm_vars", &gmm_vars),
+    ];
+
+    // First pass: build section metadata assuming offsets start at 0 (we
+    // prepend magic + header later, storing offsets relative to data start).
+    let mut sections = Vec::new();
+    let mut offset = 0u64;
+    for sec in &plan {
+        let (name, dtype, len) = match sec {
+            Sec::F(n, v) => (*n, "f32", v.len()),
+            Sec::U(n, v) => (*n, "u32", v.len()),
+        };
+        let mut meta = Json::obj();
+        meta.set("name", name)
+            .set("dtype", dtype)
+            .set("offset", offset)
+            .set("len", len);
+        sections.push(meta);
+        offset += len as u64 * 4;
+    }
+    header.set("sections", Json::Arr(sections));
+    let header_bytes = header.to_string_compact().into_bytes();
+
+    let file = File::create(path).with_context(|| format!("create {path:?}"))?;
+    let mut out = BufWriter::new(file);
+    out.write_all(MAGIC)?;
+    out.write_all(&(header_bytes.len() as u32).to_le_bytes())?;
+    out.write_all(&header_bytes)?;
+    for sec in &plan {
+        match sec {
+            Sec::F(_, v) => {
+                for x in *v {
+                    out.write_all(&x.to_le_bytes())?;
+                }
+            }
+            Sec::U(_, v) => {
+                for x in *v {
+                    out.write_all(&x.to_le_bytes())?;
+                }
+            }
+        }
+    }
+    out.flush()?;
+    Ok(())
+}
+
+/// Load a dataset from a `.gds` file.
+pub fn load(path: &Path) -> Result<Dataset> {
+    let file = File::open(path).with_context(|| format!("open {path:?}"))?;
+    let mut rd = BufReader::new(file);
+    let mut magic = [0u8; 4];
+    rd.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{path:?}: not a GDS1 file");
+    }
+    let mut len4 = [0u8; 4];
+    rd.read_exact(&mut len4)?;
+    let hlen = u32::from_le_bytes(len4) as usize;
+    let mut hbytes = vec![0u8; hlen];
+    rd.read_exact(&mut hbytes)?;
+    let header = parse(std::str::from_utf8(&hbytes)?)?;
+    let data_start = 8 + hlen as u64;
+
+    let n = header.num_field("n")? as usize;
+    let d = header.num_field("d")? as usize;
+    let sections = header
+        .get("sections")
+        .and_then(Json::as_arr)
+        .context("missing sections")?;
+
+    let read_f32 = |rd: &mut BufReader<File>, name: &str| -> Result<Vec<f32>> {
+        let sec = sections
+            .iter()
+            .find(|s| s.get("name").and_then(Json::as_str) == Some(name))
+            .with_context(|| format!("section {name} missing"))?;
+        let off = sec.num_field("offset")? as u64;
+        let len = sec.num_field("len")? as usize;
+        rd.seek(SeekFrom::Start(data_start + off))?;
+        let mut bytes = vec![0u8; len * 4];
+        rd.read_exact(&mut bytes)?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect())
+    };
+    let read_u32 = |rd: &mut BufReader<File>, name: &str| -> Result<Vec<u32>> {
+        let sec = sections
+            .iter()
+            .find(|s| s.get("name").and_then(Json::as_str) == Some(name))
+            .with_context(|| format!("section {name} missing"))?;
+        let off = sec.num_field("offset")? as u64;
+        let len = sec.num_field("len")? as usize;
+        rd.seek(SeekFrom::Start(data_start + off))?;
+        let mut bytes = vec![0u8; len * 4];
+        rd.read_exact(&mut bytes)?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|b| u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect())
+    };
+
+    let data = read_f32(&mut rd, "data")?;
+    let labels = read_u32(&mut rd, "labels")?;
+    let proxies = read_f32(&mut rd, "proxies")?;
+    let mean = read_f32(&mut rd, "mean")?;
+    let var = read_f32(&mut rd, "var")?;
+    let centroids = read_f32(&mut rd, "centroids")?;
+    let assignments = read_u32(&mut rd, "assignments")?;
+    let pca_bases = read_f32(&mut rd, "pca_bases")?;
+    let pca_centers = read_f32(&mut rd, "pca_centers")?;
+    let gmm_weights = read_f32(&mut rd, "gmm_weights")?;
+    let gmm_classes = read_u32(&mut rd, "gmm_classes")?;
+    let gmm_means = read_f32(&mut rd, "gmm_means")?;
+    let gmm_vars = read_f32(&mut rd, "gmm_vars")?;
+
+    let mut gmm = GmmSpec::new(d);
+    for (i, (&w, &cls)) in gmm_weights.iter().zip(&gmm_classes).enumerate() {
+        gmm.push(
+            w,
+            gmm_means[i * d..(i + 1) * d].to_vec(),
+            gmm_vars[i * d..(i + 1) * d].to_vec(),
+            cls,
+        );
+    }
+
+    let classes = header.num_field("classes")? as usize;
+    let mut class_rows = vec![Vec::new(); classes];
+    for (i, &y) in labels.iter().enumerate() {
+        class_rows[y as usize].push(i as u32);
+    }
+
+    Ok(Dataset {
+        name: header.str_field("name")?.to_string(),
+        n,
+        h: header.num_field("h")? as usize,
+        w: header.num_field("w")? as usize,
+        c: header.num_field("c")? as usize,
+        d,
+        proxy_d: header.num_field("proxy_d")? as usize,
+        classes,
+        conditional: header.get("conditional").and_then(Json::as_bool).unwrap_or(false),
+        data,
+        labels,
+        proxies,
+        class_rows,
+        mean,
+        var,
+        centroids,
+        assignments,
+        pca_bases,
+        pca_centers,
+        gmm,
+    })
+}
+
+/// Conventional on-disk path for a preset's store.
+pub fn store_path(dir: &Path, preset: &str) -> std::path::PathBuf {
+    dir.join(format!("{preset}.gds"))
+}
+
+/// Load a preset from `dir`, synthesising (and saving) it when missing.
+pub fn load_or_synthesize(dir: &Path, preset_name: &str, seed: u64) -> Result<Dataset> {
+    let path = store_path(dir, preset_name);
+    if path.exists() {
+        return load(&path);
+    }
+    let spec = super::synthetic::preset(preset_name)
+        .with_context(|| format!("unknown preset {preset_name}"))?;
+    let ds = Dataset::synthesize(spec, seed);
+    save(&ds, &path)?;
+    Ok(ds)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::preset;
+
+    #[test]
+    fn roundtrip_preserves_everything() {
+        let mut spec = preset("moons").unwrap().clone();
+        spec.n = 128;
+        let ds = Dataset::synthesize(&spec, 9);
+        let dir = std::env::temp_dir().join("golddiff_store_test");
+        let path = dir.join("moons.gds");
+        save(&ds, &path).unwrap();
+        let rt = load(&path).unwrap();
+        assert_eq!(rt.name, ds.name);
+        assert_eq!(rt.data, ds.data);
+        assert_eq!(rt.labels, ds.labels);
+        assert_eq!(rt.proxies, ds.proxies);
+        assert_eq!(rt.gmm.n_components(), ds.gmm.n_components());
+        assert_eq!(rt.gmm.components[3].mean, ds.gmm.components[3].mean);
+        assert_eq!(rt.class_rows, ds.class_rows);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn load_or_synthesize_caches() {
+        let dir = std::env::temp_dir().join("golddiff_store_test2");
+        std::fs::remove_dir_all(&dir).ok();
+        // shrink via direct synthesize to keep the test fast: use moons
+        let a = load_or_synthesize(&dir, "moons", 1).unwrap();
+        assert!(store_path(&dir, "moons").exists());
+        let b = load_or_synthesize(&dir, "moons", 999).unwrap(); // seed ignored on cache hit
+        assert_eq!(a.data, b.data);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join("golddiff_store_test3");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.gds");
+        std::fs::write(&path, b"NOPE1234").unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

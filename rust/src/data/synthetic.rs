@@ -1,0 +1,280 @@
+//! Procedural hierarchical-GMM image datasets — the benchmark stand-ins
+//! for MNIST/CIFAR/CelebA-HQ/AFHQ/ImageNet-1K (DESIGN.md §3).
+//!
+//! Each class owns a set of mixture components whose means are multi-scale
+//! procedural "images": a smooth class-level low-frequency structure plus
+//! component-level mid-frequency detail. Per-pixel variances encode
+//! high-frequency texture. This enforces the two properties the paper's
+//! mechanisms rely on:
+//!
+//! 1. a clustered manifold (Posterior Progressive Concentration is
+//!    observable: the posterior collapses onto the right component), and
+//! 2. *hierarchical consistency* (Sec. 3.4): the s=1/4 downsampling proxy
+//!    distance correlates with the full-resolution distance, because class
+//!    identity lives in the low-frequency band.
+
+use super::gmm::GmmSpec;
+use crate::util::rng::Pcg64;
+
+/// Static description of a dataset preset (mirrors python/compile/presets.py
+/// and the manifest; kept in sync by integration tests).
+#[derive(Debug, Clone)]
+pub struct PresetSpec {
+    pub name: &'static str,
+    pub paper_name: &'static str,
+    pub n: usize,
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    pub classes: usize,
+    pub modes_per_class: usize,
+    pub conditional: bool,
+    /// base per-pixel noise std of each component (texture amplitude)
+    pub texture: f32,
+}
+
+impl PresetSpec {
+    pub fn d(&self) -> usize {
+        self.h * self.w * self.c
+    }
+
+    pub fn proxy_d(&self) -> usize {
+        if self.h == 1 {
+            self.w * self.c
+        } else {
+            (self.h / 4) * (self.w / 4) * self.c
+        }
+    }
+}
+
+pub const PRESETS: &[PresetSpec] = &[
+    PresetSpec { name: "moons", paper_name: "Moons (Fig. 1)", n: 2000, h: 1, w: 2, c: 1, classes: 2, modes_per_class: 24, conditional: false, texture: 0.05 },
+    PresetSpec { name: "mnist-sim", paper_name: "MNIST", n: 8000, h: 16, w: 16, c: 1, classes: 10, modes_per_class: 4, conditional: false, texture: 0.10 },
+    PresetSpec { name: "fashion-sim", paper_name: "Fashion-MNIST", n: 8000, h: 16, w: 16, c: 1, classes: 10, modes_per_class: 6, conditional: false, texture: 0.14 },
+    PresetSpec { name: "cifar-sim", paper_name: "CIFAR-10", n: 10_000, h: 16, w: 16, c: 3, classes: 10, modes_per_class: 8, conditional: false, texture: 0.16 },
+    PresetSpec { name: "celeba-sim", paper_name: "CelebA-HQ", n: 6000, h: 24, w: 24, c: 3, classes: 40, modes_per_class: 2, conditional: false, texture: 0.12 },
+    PresetSpec { name: "afhq-sim", paper_name: "AFHQv2", n: 6000, h: 24, w: 24, c: 3, classes: 3, modes_per_class: 24, conditional: false, texture: 0.13 },
+    PresetSpec { name: "imagenet-sim", paper_name: "ImageNet-1K", n: 50_000, h: 16, w: 16, c: 3, classes: 1000, modes_per_class: 2, conditional: true, texture: 0.15 },
+];
+
+pub fn preset(name: &str) -> Option<&'static PresetSpec> {
+    PRESETS.iter().find(|p| p.name == name)
+}
+
+/// Build the population mixture for a preset.
+pub fn build_population(spec: &PresetSpec, seed: u64) -> GmmSpec {
+    if spec.name == "moons" {
+        return moons_population(spec);
+    }
+    let mut rng = Pcg64::with_stream(seed, 0x5e_ed);
+    let d = spec.d();
+    let mut gmm = GmmSpec::new(d);
+    for class in 0..spec.classes {
+        // class-level low-frequency field: 3 cosine harmonics with
+        // class-determined frequencies & phases
+        let class_rng_seed = seed ^ (class as u64).wrapping_mul(0x9e37_79b9);
+        let mut crng = Pcg64::with_stream(class_rng_seed, 0xc1a5_5e5);
+        let harmonics: Vec<(f32, f32, f32, f32, f32)> = (0..3)
+            .map(|_| {
+                (
+                    0.5 + 1.5 * crng.f32(),          // fx (cycles over image)
+                    0.5 + 1.5 * crng.f32(),          // fy
+                    crng.f32() * std::f32::consts::TAU, // phase
+                    0.4 + 0.6 * crng.f32(),          // amplitude
+                    crng.f32() * 2.0 - 1.0,          // channel tilt
+                )
+            })
+            .collect();
+
+        for _mode in 0..spec.modes_per_class {
+            // component-level mid-frequency detail
+            let detail: Vec<(f32, f32, f32, f32)> = (0..2)
+                .map(|_| {
+                    (
+                        3.0 + 3.0 * rng.f32(),
+                        3.0 + 3.0 * rng.f32(),
+                        rng.f32() * std::f32::consts::TAU,
+                        0.15 + 0.2 * rng.f32(),
+                    )
+                })
+                .collect();
+            let brightness = 0.3 * rng.normal();
+
+            let mut mean = vec![0.0f32; d];
+            let mut var = vec![0.0f32; d];
+            for y in 0..spec.h {
+                for x in 0..spec.w {
+                    let u = x as f32 / spec.w as f32;
+                    let v = y as f32 / spec.h as f32;
+                    let mut low = 0.0f32;
+                    for &(fx, fy, ph, amp, _) in &harmonics {
+                        low += amp
+                            * (std::f32::consts::TAU * (fx * u + fy * v) + ph).cos();
+                    }
+                    let mut mid = 0.0f32;
+                    for &(fx, fy, ph, amp) in &detail {
+                        mid += amp
+                            * (std::f32::consts::TAU * (fx * u + fy * v) + ph).cos();
+                    }
+                    for ch in 0..spec.c {
+                        let tilt = harmonics[ch % harmonics.len()].4;
+                        let idx = (y * spec.w + x) * spec.c + ch;
+                        mean[idx] = (low * (1.0 + 0.25 * tilt * ch as f32)
+                            + mid
+                            + brightness)
+                            .tanh();
+                        // texture: high-frequency variance, stronger where the
+                        // mid-band detail is strong (edge-like regions)
+                        let t = spec.texture * (1.0 + 0.5 * mid.abs());
+                        var[idx] = (t * t).max(1e-4);
+                    }
+                }
+            }
+            gmm.push(1.0, mean, var, class as u32);
+        }
+    }
+    gmm
+}
+
+/// Moons (Fig. 1): two interleaved half-circles approximated by a chain of
+/// small-variance components along each arc — keeps the population an exact
+/// GMM so the oracle stays closed-form.
+fn moons_population(spec: &PresetSpec) -> GmmSpec {
+    let mut gmm = GmmSpec::new(2);
+    let m = spec.modes_per_class;
+    let v = spec.texture * spec.texture;
+    for i in 0..m {
+        let th = std::f32::consts::PI * (i as f32 + 0.5) / m as f32;
+        // upper moon
+        gmm.push(1.0, vec![th.cos(), th.sin()], vec![v, v], 0);
+        // lower moon, offset per sklearn's make_moons
+        gmm.push(1.0, vec![1.0 - th.cos(), 0.5 - th.sin()], vec![v, v], 1);
+    }
+    gmm
+}
+
+/// s = 1/4 spatial average-pool proxy embedding of one flattened image.
+/// For 1-D data (moons) the proxy is the identity.
+pub fn proxy_embed(x: &[f32], h: usize, w: usize, c: usize) -> Vec<f32> {
+    if h == 1 {
+        return x.to_vec();
+    }
+    let (ph, pw) = (h / 4, w / 4);
+    let mut out = vec![0.0f32; ph * pw * c];
+    for py in 0..ph {
+        for px in 0..pw {
+            for ch in 0..c {
+                let mut acc = 0.0f32;
+                for dy in 0..4 {
+                    for dx in 0..4 {
+                        let y = py * 4 + dy;
+                        let xx = px * 4 + dx;
+                        acc += x[(y * w + xx) * c + ch];
+                    }
+                }
+                out[(py * pw + px) * c + ch] = acc / 16.0;
+            }
+        }
+    }
+    out
+}
+
+/// Proxy-embed every row of a flat [n × d] matrix.
+pub fn proxy_embed_all(data: &[f32], n: usize, h: usize, w: usize, c: usize) -> Vec<f32> {
+    let d = h * w * c;
+    let pd = if h == 1 { d } else { (h / 4) * (w / 4) * c };
+    let mut out = vec![0.0f32; n * pd];
+    for i in 0..n {
+        let row = proxy_embed(&data[i * d..(i + 1) * d], h, w, c);
+        out[i * pd..(i + 1) * pd].copy_from_slice(&row);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_cover_paper_datasets() {
+        for name in [
+            "moons",
+            "mnist-sim",
+            "fashion-sim",
+            "cifar-sim",
+            "celeba-sim",
+            "afhq-sim",
+            "imagenet-sim",
+        ] {
+            assert!(preset(name).is_some(), "{name} missing");
+        }
+        assert_eq!(preset("imagenet-sim").unwrap().classes, 1000);
+        assert!(preset("imagenet-sim").unwrap().conditional);
+    }
+
+    #[test]
+    fn population_has_expected_component_count() {
+        let spec = preset("cifar-sim").unwrap();
+        let gmm = build_population(spec, 7);
+        assert_eq!(gmm.n_components(), spec.classes * spec.modes_per_class);
+        assert_eq!(gmm.d, spec.d());
+    }
+
+    #[test]
+    fn component_means_bounded_by_tanh() {
+        let spec = preset("mnist-sim").unwrap();
+        let gmm = build_population(spec, 7);
+        for comp in &gmm.components {
+            assert!(comp.mean.iter().all(|m| m.abs() <= 1.0));
+        }
+    }
+
+    #[test]
+    fn moons_is_two_arcs() {
+        let spec = preset("moons").unwrap();
+        let gmm = build_population(spec, 7);
+        assert_eq!(gmm.d, 2);
+        assert_eq!(gmm.n_classes(), 2);
+        // upper-moon means have y >= 0
+        for comp in gmm.components.iter().filter(|c| c.class == 0) {
+            assert!(comp.mean[1] >= -1e-6);
+        }
+    }
+
+    #[test]
+    fn proxy_is_sixteen_to_one_average() {
+        let (h, w, c) = (8, 8, 1);
+        let img = vec![2.0f32; h * w * c];
+        let p = proxy_embed(&img, h, w, c);
+        assert_eq!(p.len(), 4);
+        assert!(p.iter().all(|&v| (v - 2.0).abs() < 1e-6));
+    }
+
+    #[test]
+    fn hierarchical_consistency_proxy_correlates() {
+        // The design property the coarse screen relies on: same-class
+        // samples are closer in proxy space than cross-class ones, on
+        // average.
+        let spec = preset("cifar-sim").unwrap();
+        let gmm = build_population(spec, 7);
+        let mut rng = Pcg64::new(3);
+        let a0 = gmm.sample_component(0, &mut rng);
+        let a0b = gmm.sample_component(1, &mut rng); // same class (mode 1)
+        let b0 = gmm.sample_component(9 * spec.modes_per_class, &mut rng); // other class
+        let (h, w, c) = (spec.h, spec.w, spec.c);
+        let d_same: f32 = proxy_embed(&a0, h, w, c)
+            .iter()
+            .zip(proxy_embed(&a0b, h, w, c))
+            .map(|(x, y)| (x - y) * (x - y))
+            .sum();
+        let d_cross: f32 = proxy_embed(&a0, h, w, c)
+            .iter()
+            .zip(proxy_embed(&b0, h, w, c))
+            .map(|(x, y)| (x - y) * (x - y))
+            .sum();
+        assert!(
+            d_same < d_cross,
+            "proxy lost class structure: same {d_same} cross {d_cross}"
+        );
+    }
+}

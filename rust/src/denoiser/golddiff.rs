@@ -1,0 +1,355 @@
+//! GoldDiff — Dynamic Time-Aware Golden Subset Diffusion (the paper's
+//! contribution, Sec. 3.4), as a plug-and-play wrapper over any base
+//! weighting:
+//!
+//! 1. **Adaptive Coarse Screening** (Eq. 4): top-m_t rows by the s=1/4
+//!    downsampled-ℓ2 proxy distance (sharded scan in `index::scan`), with
+//!    m_t *growing* as noise decreases.
+//! 2. **Precision Golden Set Selection** (Eq. 5): exact full-resolution
+//!    top-k_t inside the candidate pool, with k_t *shrinking* as noise
+//!    decreases (Eq. 6).
+//! 3. **Unbiased aggregation** (Sec. 3.2): a plain streaming softmax over
+//!    the purified support — no weight-flattening tricks needed.
+//!
+//! `BaseWeighting` selects what Eq. 3's local operator is: plain pixel-space
+//! logits (GoldDiff-on-Optimal), the PCA subspace (the paper's primary
+//! configuration; `unbiased=false` gives the Tab. 6 WSS ablation arm), or
+//! the Kamb patch weighting (Tab. 5).
+
+use super::kamb::KambDenoiser;
+use super::pca::PcaDenoiser;
+use super::softmax::{ss_aggregate, PosteriorStats};
+use super::{descale, sqdist, DenoiseResult, Denoiser, StepContext};
+use crate::data::dataset::Dataset;
+use crate::data::synthetic::proxy_embed;
+use crate::index::scan::ProxyIndex;
+use crate::schedule::budget::BudgetSchedule;
+use crate::schedule::noise::NoiseSchedule;
+
+/// The shared GoldDiff retrieval used by both the CPU reference path and
+/// the XLA engine (`coordinator::xla_denoiser`).
+///
+/// Two regimes, per the paper's Integration→Selection analysis (Sec. 3.3):
+///
+/// * the **precision fraction** (1−g) of the budget comes from the
+///   coarse→fine pipeline — proxy top-m_t then exact top-k (Eqs. 4–5);
+/// * the **breadth fraction** g comes from a *stratified* sample of the
+///   support (every ⌈n/k⌉-th row with a step-dependent offset; rows are in
+///   iid order so this is an unbiased random subset). At high noise the
+///   estimator is a Monte-Carlo integrator — "robust to retrieval
+///   imprecision but sensitive to sample sparsity" — so nearest-only
+///   selection would bias the global mean; the breadth rows restore it.
+///
+/// As g → 0 this degenerates to pure precision retrieval; as g → 1 to a
+/// broad Monte-Carlo subset. Duplicates are skipped so exactly k distinct
+/// rows return.
+pub fn blended_golden_rows(
+    index: &ProxyIndex,
+    ctx: &StepContext,
+    x_t: &[f32],
+    m: usize,
+    k: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+) -> Vec<u32> {
+    let ds = ctx.ds;
+    let g = ctx.sched.g(ctx.step) as f64;
+    let k_breadth = ((k as f64) * g) as usize;
+    let k_precise = k - k_breadth;
+
+    let q = descale(x_t, ctx.alpha_bar());
+    let mut rows: Vec<u32> = if k_precise > 0 {
+        let qp = proxy_embed(&q, h, w, c);
+        let cands = match ctx.class {
+            Some(y) => index.top_m_class(ds, &qp, m, y),
+            None => index.top_m(ds, &qp, m),
+        };
+        index.refine_top_k(ds, &q, &cands, k_precise)
+    } else {
+        Vec::new()
+    };
+
+    if k_breadth > 0 {
+        // stratified fill over the (class-restricted) support
+        let support: &[u32] = match ctx.class {
+            Some(y) => &ds.class_rows[y as usize],
+            None => &[],
+        };
+        let n = if ctx.class.is_some() {
+            support.len()
+        } else {
+            ds.n
+        };
+        let mut seen: std::collections::HashSet<u32> = rows.iter().copied().collect();
+        let stride = (n as f64 / k_breadth.max(1) as f64).max(1.0);
+        let offset = (ctx.step as f64 * 0.618_033_99).fract() * stride;
+        let mut pos = offset;
+        while rows.len() < k && (pos as usize) < n {
+            let idx = pos as usize;
+            let gid = if ctx.class.is_some() {
+                support[idx]
+            } else {
+                idx as u32
+            };
+            if seen.insert(gid) {
+                rows.push(gid);
+            }
+            pos += stride;
+        }
+        // top up sequentially if strides collided with precise picks
+        let mut idx = 0usize;
+        while rows.len() < k && idx < n {
+            let gid = if ctx.class.is_some() {
+                support[idx]
+            } else {
+                idx as u32
+            };
+            if seen.insert(gid) {
+                rows.push(gid);
+            }
+            idx += 1;
+        }
+    }
+    rows
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BaseWeighting {
+    /// pixel-space Gaussian-kernel logits + unbiased SS
+    Golden,
+    /// PCA-subspace logits; `unbiased=false` = biased WSS (ablation)
+    PcaSubspace { unbiased: bool },
+    /// Kamb patch-based weighting restricted to the golden subset
+    Kamb,
+}
+
+pub struct GoldDiff {
+    pub base: BaseWeighting,
+    pub budget: BudgetSchedule,
+    pub index: ProxyIndex,
+    h: usize,
+    w: usize,
+    c: usize,
+    /// last step's budgets (telemetry)
+    pub last_m: usize,
+    pub last_k: usize,
+}
+
+impl GoldDiff {
+    /// Paper defaults: m_min = k_max = N/10, m_max = N/4, k_min = N/20
+    /// (Sec. 4.1), with the bucket ladder left un-padded on this CPU path
+    /// (the XLA engine buckets via the manifest).
+    pub fn paper_defaults(ds: &Dataset, _sched: &NoiseSchedule, base: BaseWeighting) -> GoldDiff {
+        let buckets: Vec<usize> = (5..=17).map(|p| 1usize << p).collect();
+        GoldDiff::new(ds, BudgetSchedule::paper_defaults(ds.n, &buckets), base)
+    }
+
+    pub fn new(ds: &Dataset, budget: BudgetSchedule, base: BaseWeighting) -> GoldDiff {
+        GoldDiff {
+            base,
+            budget,
+            index: ProxyIndex::default(),
+            h: ds.h,
+            w: ds.w,
+            c: ds.c,
+            last_m: 0,
+            last_k: 0,
+        }
+    }
+
+    /// The coarse→fine retrieval: returns the golden subset S_t (row ids,
+    /// nearest-first) for a query at sampling point `step`.
+    pub fn golden_subset(&mut self, x_t: &[f32], ctx: &StepContext) -> Vec<u32> {
+        let b = self.budget.at(ctx.sched, ctx.step);
+        self.last_m = b.m;
+        self.last_k = b.k;
+        blended_golden_rows(&self.index, ctx, x_t, b.m, b.k, self.h, self.w, self.c)
+    }
+}
+
+impl Denoiser for GoldDiff {
+    fn name(&self) -> String {
+        match self.base {
+            BaseWeighting::Golden => "golddiff".into(),
+            BaseWeighting::PcaSubspace { unbiased: true } => "golddiff-pca".into(),
+            BaseWeighting::PcaSubspace { unbiased: false } => "golddiff-wss".into(),
+            BaseWeighting::Kamb => "golddiff-kamb".into(),
+        }
+    }
+
+    fn denoise(&mut self, x_t: &[f32], ctx: &StepContext) -> DenoiseResult {
+        let golden = self.golden_subset(x_t, ctx);
+        let support = golden.len();
+        let ds = ctx.ds;
+        match self.base {
+            BaseWeighting::Golden => {
+                let q = descale(x_t, ctx.alpha_bar());
+                let scale = ctx.logit_scale();
+                let (f_hat, stats): (Vec<f32>, PosteriorStats) = ss_aggregate(
+                    ds.d,
+                    golden.iter().map(|&gid| {
+                        let row = ds.row(gid as usize);
+                        (-sqdist(&q, row) * scale, row)
+                    }),
+                );
+                DenoiseResult {
+                    f_hat,
+                    stats,
+                    support,
+                }
+            }
+            BaseWeighting::PcaSubspace { unbiased } => {
+                let mut base = PcaDenoiser::new(ds, unbiased);
+                base.subset = Some(golden);
+                let mut out = base.denoise(x_t, ctx);
+                out.support = support;
+                out
+            }
+            BaseWeighting::Kamb => {
+                let mut base = KambDenoiser::new(ds);
+                base.subset = Some(golden);
+                let mut out = base.denoise(x_t, ctx);
+                out.support = support;
+                out
+            }
+        }
+    }
+
+    fn working_set_bytes(&self, ds: &Dataset) -> u64 {
+        // proxy table + gathered golden subset + scratch — NOT the corpus
+        // resident per-query working set (the corpus itself is shared,
+        // dominant term is the m_max gather)
+        (ds.n * ds.proxy_d + self.budget.m_max * ds.d + 4 * ds.d) as u64 * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::preset;
+    use crate::schedule::noise::ScheduleKind;
+
+    fn setup() -> (Dataset, NoiseSchedule) {
+        let mut spec = preset("cifar-sim").unwrap().clone();
+        spec.n = 500;
+        (
+            Dataset::synthesize(&spec, 6),
+            NoiseSchedule::new(ScheduleKind::DdpmLinear, 10),
+        )
+    }
+
+    #[test]
+    fn golden_subset_sizes_follow_schedule() {
+        let (ds, sched) = setup();
+        let mut gd = GoldDiff::paper_defaults(&ds, &sched, BaseWeighting::Golden);
+        let x = vec![0.1f32; ds.d];
+        let ctx0 = StepContext {
+            ds: &ds,
+            sched: &sched,
+            step: 0,
+            class: None,
+        };
+        let s0 = gd.golden_subset(&x, &ctx0);
+        let (m0, k0) = (gd.last_m, gd.last_k);
+        let ctx9 = StepContext {
+            ds: &ds,
+            sched: &sched,
+            step: 9,
+            class: None,
+        };
+        let s9 = gd.golden_subset(&x, &ctx9);
+        let (m9, k9) = (gd.last_m, gd.last_k);
+        assert_eq!(s0.len(), k0);
+        assert_eq!(s9.len(), k9);
+        assert!(m9 > m0, "retrieval scope must grow: {m0} -> {m9}");
+        assert!(k9 < k0, "aggregation budget must shrink: {k0} -> {k9}");
+    }
+
+    #[test]
+    fn low_noise_golden_subset_contains_true_neighbour() {
+        let (ds, sched) = setup();
+        let mut gd = GoldDiff::paper_defaults(&ds, &sched, BaseWeighting::Golden);
+        let step = 9;
+        let a = sched.alpha_bar(step);
+        let x_t: Vec<f32> = ds.row(42).iter().map(|&v| v * a.sqrt()).collect();
+        let ctx = StepContext {
+            ds: &ds,
+            sched: &sched,
+            step,
+            class: None,
+        };
+        let s = gd.golden_subset(&x_t, &ctx);
+        assert_eq!(s[0], 42, "exact refine must put the true neighbour first");
+    }
+
+    #[test]
+    fn golddiff_tracks_optimal_at_low_noise() {
+        // Theorem 1 consequence: at low noise, truncation error is
+        // negligible, so GoldDiff ≈ Optimal full scan.
+        let (ds, sched) = setup();
+        let mut gd = GoldDiff::paper_defaults(&ds, &sched, BaseWeighting::Golden);
+        let mut opt = super::super::optimal::OptimalDenoiser::new();
+        let step = 9;
+        let a = sched.alpha_bar(step);
+        let x_t: Vec<f32> = ds.row(3).iter().map(|&v| v * a.sqrt()).collect();
+        let ctx = StepContext {
+            ds: &ds,
+            sched: &sched,
+            step,
+            class: None,
+        };
+        let f_gd = gd.denoise(&x_t, &ctx).f_hat;
+        let f_opt = opt.denoise(&x_t, &ctx).f_hat;
+        let err: f32 = f_gd
+            .iter()
+            .zip(&f_opt)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max);
+        assert!(err < 1e-3, "max deviation from optimal {err}");
+    }
+
+    #[test]
+    fn conditional_subset_stays_in_class() {
+        let (ds, sched) = setup();
+        let mut gd = GoldDiff::paper_defaults(&ds, &sched, BaseWeighting::Golden);
+        let ctx = StepContext {
+            ds: &ds,
+            sched: &sched,
+            step: 5,
+            class: Some(3),
+        };
+        let s = gd.golden_subset(&vec![0.0; ds.d], &ctx);
+        assert!(!s.is_empty());
+        assert!(s.iter().all(|&i| ds.labels[i as usize] == 3));
+    }
+
+    #[test]
+    fn all_base_weightings_produce_finite_output() {
+        let (ds, sched) = setup();
+        let ctx = StepContext {
+            ds: &ds,
+            sched: &sched,
+            step: 5,
+            class: None,
+        };
+        for base in [
+            BaseWeighting::Golden,
+            BaseWeighting::PcaSubspace { unbiased: true },
+            BaseWeighting::PcaSubspace { unbiased: false },
+            BaseWeighting::Kamb,
+        ] {
+            let mut gd = GoldDiff::paper_defaults(&ds, &sched, base);
+            let out = gd.denoise(&vec![0.2; ds.d], &ctx);
+            assert!(out.f_hat.iter().all(|v| v.is_finite()), "{base:?}");
+            assert!(out.support > 0);
+        }
+    }
+
+    #[test]
+    fn working_set_much_smaller_than_corpus() {
+        let (ds, sched) = setup();
+        let gd = GoldDiff::paper_defaults(&ds, &sched, BaseWeighting::Golden);
+        assert!(gd.working_set_bytes(&ds) < ds.bytes());
+    }
+}

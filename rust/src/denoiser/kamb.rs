@@ -1,0 +1,258 @@
+//! Kamb & Ganguli (2024) patch-based analytical denoiser.
+//!
+//! Per-pixel posterior: the weight of candidate i at pixel (y, x) is a
+//! softmax over the *local patch* distance between the query and candidate
+//! patches centred there; the output pixel is the weighted average of the
+//! candidates' centre pixels. Translation-equivariant locality ⇒
+//! generalisation, at O(N·p_t²·D) cost (Tab. 1) — the paper's slowest
+//! baseline, reproduced here with separable box-filtered patch distances
+//! (O(N·p_t·D)) and a per-pixel online softmax.
+//!
+//! Patch-size schedule p_t: the original uses the effective receptive field
+//! of a pre-trained U-Net per timestep; we use the standard wide-early /
+//! narrow-late heuristic snapped to the compiled sizes {3, 7}.
+
+use super::softmax::PosteriorStats;
+use super::{descale, DenoiseResult, Denoiser, StepContext};
+use crate::data::dataset::Dataset;
+
+#[derive(Debug)]
+pub struct KambDenoiser {
+    h: usize,
+    w: usize,
+    c: usize,
+    /// candidate subset to aggregate over (None = full corpus); set by the
+    /// GoldDiff wrapper in Tab. 5.
+    pub subset: Option<Vec<u32>>,
+}
+
+impl KambDenoiser {
+    pub fn new(ds: &Dataset) -> Self {
+        assert!(ds.h > 1, "Kamb requires 2-D images");
+        KambDenoiser {
+            h: ds.h,
+            w: ds.w,
+            c: ds.c,
+            subset: None,
+        }
+    }
+
+    /// p_t: large patches in the high-noise (global) regime, small in the
+    /// low-noise (local) regime, matching the compiled {3,7} ladder.
+    pub fn patch_for(&self, g: f32) -> usize {
+        if g > 0.5 {
+            7
+        } else {
+            3
+        }
+    }
+}
+
+/// Separable box sum of a [h × w] map with window `p` (same padding),
+/// normalised by the true per-pixel window size.
+fn box_mean(src: &[f32], h: usize, w: usize, p: usize, tmp: &mut [f32], out: &mut [f32]) {
+    let r = p / 2;
+    // horizontal pass
+    for y in 0..h {
+        for x in 0..w {
+            let lo = x.saturating_sub(r);
+            let hi = (x + r).min(w - 1);
+            let mut acc = 0.0f32;
+            for xx in lo..=hi {
+                acc += src[y * w + xx];
+            }
+            tmp[y * w + x] = acc / (hi - lo + 1) as f32;
+        }
+    }
+    // vertical pass
+    for y in 0..h {
+        let lo = y.saturating_sub(r);
+        let hi = (y + r).min(h - 1);
+        for x in 0..w {
+            let mut acc = 0.0f32;
+            for yy in lo..=hi {
+                acc += tmp[yy * w + x];
+            }
+            out[y * w + x] = acc / (hi - lo + 1) as f32;
+        }
+    }
+}
+
+impl Denoiser for KambDenoiser {
+    fn name(&self) -> String {
+        "kamb".into()
+    }
+
+    fn denoise(&mut self, x_t: &[f32], ctx: &StepContext) -> DenoiseResult {
+        let ds = ctx.ds;
+        let (h, w, c) = (self.h, self.w, self.c);
+        let hw = h * w;
+        let q = descale(x_t, ctx.alpha_bar());
+        let scale = ctx.logit_scale();
+        let p = self.patch_for(ctx.sched.g(ctx.step));
+
+        // per-pixel online softmax state
+        let mut m = vec![f32::NEG_INFINITY; hw];
+        let mut l = vec![0.0f32; hw];
+        let mut acc = vec![0.0f32; hw * c];
+        // centre-pixel telemetry
+        let centre = (h / 2) * w + w / 2;
+        let mut centre_s = 0.0f32; // sum p*logit at centre
+
+        let mut diff2 = vec![0.0f32; hw];
+        let mut tmp = vec![0.0f32; hw];
+        let mut patch_d2 = vec![0.0f32; hw];
+
+        let rows: Vec<u32> = match &self.subset {
+            Some(s) => s.clone(),
+            None => ctx.rows().collect(),
+        };
+        for &gid in &rows {
+            let cand = ds.row(gid as usize);
+            // channel-summed squared diff map
+            for pix in 0..hw {
+                let mut acc2 = 0.0f32;
+                for ch in 0..c {
+                    let d = q[pix * c + ch] - cand[pix * c + ch];
+                    acc2 += d * d;
+                }
+                diff2[pix] = acc2;
+            }
+            box_mean(&diff2, h, w, p, &mut tmp, &mut patch_d2);
+            for pix in 0..hw {
+                let logit = -patch_d2[pix] * scale;
+                if logit > m[pix] {
+                    let corr = if m[pix].is_finite() {
+                        (m[pix] - logit).exp()
+                    } else {
+                        0.0
+                    };
+                    l[pix] *= corr;
+                    for ch in 0..c {
+                        acc[pix * c + ch] *= corr;
+                    }
+                    if pix == centre {
+                        centre_s *= corr;
+                    }
+                    m[pix] = logit;
+                }
+                let pw = (logit - m[pix]).exp();
+                l[pix] += pw;
+                for ch in 0..c {
+                    acc[pix * c + ch] += pw * cand[pix * c + ch];
+                }
+                if pix == centre {
+                    centre_s += pw * logit;
+                }
+            }
+        }
+
+        let mut f_hat = vec![0.0f32; hw * c];
+        for pix in 0..hw {
+            let inv = 1.0 / l[pix];
+            for ch in 0..c {
+                f_hat[pix * c + ch] = acc[pix * c + ch] * inv;
+            }
+        }
+        let lse = m[centre] + l[centre].ln();
+        let mean_logit = centre_s / l[centre];
+        DenoiseResult {
+            f_hat,
+            stats: PosteriorStats {
+                max_logit: m[centre],
+                logsumexp: lse,
+                entropy: (lse - mean_logit).max(0.0),
+                top1_weight: (m[centre] - lse).exp(),
+            },
+            support: rows.len(),
+        }
+    }
+
+    fn working_set_bytes(&self, ds: &Dataset) -> u64 {
+        // corpus + per-pixel softmax state + patch-distance scratch
+        (ds.n * ds.d + 5 * ds.d) as u64 * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::preset;
+    use crate::schedule::noise::{NoiseSchedule, ScheduleKind};
+
+    fn setup() -> (Dataset, NoiseSchedule) {
+        let mut spec = preset("mnist-sim").unwrap().clone();
+        spec.n = 120;
+        (
+            Dataset::synthesize(&spec, 2),
+            NoiseSchedule::new(ScheduleKind::DdpmLinear, 10),
+        )
+    }
+
+    #[test]
+    fn box_mean_constant_map_is_identity() {
+        let (h, w) = (6, 6);
+        let src = vec![3.0f32; h * w];
+        let mut tmp = vec![0.0; h * w];
+        let mut out = vec![0.0; h * w];
+        box_mean(&src, h, w, 3, &mut tmp, &mut out);
+        assert!(out.iter().all(|&v| (v - 3.0).abs() < 1e-6));
+    }
+
+    #[test]
+    fn low_noise_reconstructs_on_manifold_query() {
+        let (ds, sched) = setup();
+        let mut den = KambDenoiser::new(&ds);
+        let step = 9;
+        let a = sched.alpha_bar(step);
+        let x0 = ds.row(7).to_vec();
+        let x_t: Vec<f32> = x0.iter().map(|&v| v * a.sqrt()).collect();
+        let ctx = StepContext {
+            ds: &ds,
+            sched: &sched,
+            step,
+            class: None,
+        };
+        let out = den.denoise(&x_t, &ctx);
+        let mse: f32 = out
+            .f_hat
+            .iter()
+            .zip(&x0)
+            .map(|(p, q)| (p - q) * (p - q))
+            .sum::<f32>()
+            / ds.d as f32;
+        assert!(mse < 0.05, "patch denoiser should reconstruct: mse {mse}");
+    }
+
+    #[test]
+    fn subset_restriction_is_respected() {
+        let (ds, sched) = setup();
+        let mut den = KambDenoiser::new(&ds);
+        den.subset = Some(vec![4]);
+        let ctx = StepContext {
+            ds: &ds,
+            sched: &sched,
+            step: 9,
+            class: None,
+        };
+        let out = den.denoise(&vec![0.2; ds.d], &ctx);
+        assert_eq!(out.support, 1);
+        // single candidate → output pixels equal that candidate's pixels
+        let cand = ds.row(4);
+        let err: f32 = out
+            .f_hat
+            .iter()
+            .zip(cand)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max);
+        assert!(err < 1e-4, "max err {err}");
+    }
+
+    #[test]
+    fn patch_schedule_is_counter_noise() {
+        let (ds, _) = setup();
+        let den = KambDenoiser::new(&ds);
+        assert_eq!(den.patch_for(0.9), 7);
+        assert_eq!(den.patch_for(0.1), 3);
+    }
+}

@@ -1,0 +1,225 @@
+//! Analytical denoisers: the paper's baselines (Optimal, Wiener, Kamb, PCA)
+//! and the GoldDiff coarse→fine wrapper (Sec. 3.4), as pure-rust reference
+//! implementations.
+//!
+//! These CPU paths are the *semantic specification*: the XLA-artifact-backed
+//! engine (`coordinator`) must agree with them numerically (integration
+//! tests), and the bench harnesses use whichever path an experiment calls
+//! for. All share the empirical-Bayes convention of Sec. 3.1:
+//!
+//!   q = x_t/√ᾱ_t ,  ℓ_i = -||q - x_i||² / (2σ_t²) ,  σ_t² = (1-ᾱ_t)/ᾱ_t
+
+pub mod golddiff;
+pub mod kamb;
+pub mod optimal;
+pub mod pca;
+pub mod softmax;
+pub mod wiener;
+
+use crate::data::dataset::Dataset;
+use crate::schedule::noise::NoiseSchedule;
+pub use softmax::PosteriorStats;
+
+/// Per-step context handed to a denoiser.
+pub struct StepContext<'a> {
+    pub ds: &'a Dataset,
+    pub sched: &'a NoiseSchedule,
+    /// sampling point index (0 = deepest noise)
+    pub step: usize,
+    /// conditional class (ImageNet-sim)
+    pub class: Option<u32>,
+}
+
+impl StepContext<'_> {
+    pub fn alpha_bar(&self) -> f32 {
+        self.sched.alpha_bar(self.step)
+    }
+
+    pub fn logit_scale(&self) -> f32 {
+        self.sched.logit_scale(self.step)
+    }
+
+    /// Row ids the posterior may range over (class shard when conditional).
+    pub fn rows(&self) -> RowIter<'_> {
+        match self.class {
+            Some(y) => RowIter::Class(self.ds.class_rows[y as usize].iter()),
+            None => RowIter::All(0..self.ds.n as u32),
+        }
+    }
+}
+
+pub enum RowIter<'a> {
+    All(std::ops::Range<u32>),
+    Class(std::slice::Iter<'a, u32>),
+}
+
+impl Iterator for RowIter<'_> {
+    type Item = u32;
+    fn next(&mut self) -> Option<u32> {
+        match self {
+            RowIter::All(r) => r.next(),
+            RowIter::Class(it) => it.next().copied(),
+        }
+    }
+}
+
+/// One denoising evaluation: the posterior mean plus telemetry.
+#[derive(Debug, Clone)]
+pub struct DenoiseResult {
+    pub f_hat: Vec<f32>,
+    pub stats: PosteriorStats,
+    /// number of candidates actually aggregated (golden-subset size)
+    pub support: usize,
+}
+
+/// The analytical-denoiser interface all methods implement.
+///
+/// Deliberately *not* `Send`: the XLA-backed implementation holds PJRT
+/// handles that live on the engine's executor thread. CPU implementations
+/// are all `Send` structs and can be moved across threads directly.
+pub trait Denoiser {
+    fn name(&self) -> String;
+
+    /// Posterior-mean estimate f̂(x_t, t).
+    fn denoise(&mut self, x_t: &[f32], ctx: &StepContext) -> DenoiseResult;
+
+    /// Logical working set (the paper's Memory column attribution).
+    fn working_set_bytes(&self, ds: &Dataset) -> u64 {
+        ds.bytes()
+    }
+}
+
+/// Factory-friendly method taxonomy (CLI / config / bench names).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DenoiserKind {
+    Optimal,
+    Wiener,
+    Kamb,
+    /// PCA baseline with biased WSS (the published configuration)
+    Pca,
+    /// PCA with unbiased streaming softmax ("PCA (Unbiased)")
+    PcaUnbiased,
+    /// GoldDiff over plain pixel-space logits (= GoldDiff-on-Optimal)
+    GoldDiff,
+    /// GoldDiff over the PCA subspace weighting (the paper's primary config)
+    GoldDiffPca,
+    /// GoldDiff + biased WSS (Tab. 6 ablation arm)
+    GoldDiffWss,
+    /// GoldDiff wrapped around Kamb (Tab. 5)
+    GoldDiffKamb,
+}
+
+impl DenoiserKind {
+    pub fn parse(s: &str) -> Option<DenoiserKind> {
+        Some(match s {
+            "optimal" => DenoiserKind::Optimal,
+            "wiener" => DenoiserKind::Wiener,
+            "kamb" => DenoiserKind::Kamb,
+            "pca" => DenoiserKind::Pca,
+            "pca-unbiased" => DenoiserKind::PcaUnbiased,
+            "golden" | "golddiff" => DenoiserKind::GoldDiff,
+            "golddiff-pca" => DenoiserKind::GoldDiffPca,
+            "golddiff-wss" => DenoiserKind::GoldDiffWss,
+            "golddiff-kamb" => DenoiserKind::GoldDiffKamb,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DenoiserKind::Optimal => "optimal",
+            DenoiserKind::Wiener => "wiener",
+            DenoiserKind::Kamb => "kamb",
+            DenoiserKind::Pca => "pca",
+            DenoiserKind::PcaUnbiased => "pca-unbiased",
+            DenoiserKind::GoldDiff => "golddiff",
+            DenoiserKind::GoldDiffPca => "golddiff-pca",
+            DenoiserKind::GoldDiffWss => "golddiff-wss",
+            DenoiserKind::GoldDiffKamb => "golddiff-kamb",
+        }
+    }
+
+    pub fn all() -> &'static [DenoiserKind] {
+        &[
+            DenoiserKind::Optimal,
+            DenoiserKind::Wiener,
+            DenoiserKind::Kamb,
+            DenoiserKind::Pca,
+            DenoiserKind::PcaUnbiased,
+            DenoiserKind::GoldDiff,
+            DenoiserKind::GoldDiffPca,
+            DenoiserKind::GoldDiffWss,
+            DenoiserKind::GoldDiffKamb,
+        ]
+    }
+
+    /// Build a denoiser for a dataset with the paper's default budgets.
+    pub fn build(&self, ds: &Dataset, sched: &NoiseSchedule) -> Box<dyn Denoiser> {
+        use golddiff::{BaseWeighting, GoldDiff};
+        match self {
+            DenoiserKind::Optimal => Box::new(optimal::OptimalDenoiser::new()),
+            DenoiserKind::Wiener => Box::new(wiener::WienerDenoiser::new(ds)),
+            DenoiserKind::Kamb => Box::new(kamb::KambDenoiser::new(ds)),
+            DenoiserKind::Pca => Box::new(pca::PcaDenoiser::new(ds, false)),
+            DenoiserKind::PcaUnbiased => Box::new(pca::PcaDenoiser::new(ds, true)),
+            DenoiserKind::GoldDiff => {
+                Box::new(GoldDiff::paper_defaults(ds, sched, BaseWeighting::Golden))
+            }
+            DenoiserKind::GoldDiffPca => Box::new(GoldDiff::paper_defaults(
+                ds,
+                sched,
+                BaseWeighting::PcaSubspace { unbiased: true },
+            )),
+            DenoiserKind::GoldDiffWss => Box::new(GoldDiff::paper_defaults(
+                ds,
+                sched,
+                BaseWeighting::PcaSubspace { unbiased: false },
+            )),
+            DenoiserKind::GoldDiffKamb => {
+                Box::new(GoldDiff::paper_defaults(ds, sched, BaseWeighting::Kamb))
+            }
+        }
+    }
+}
+
+/// Squared distance between two vectors.
+#[inline]
+pub(crate) fn sqdist(a: &[f32], b: &[f32]) -> f32 {
+    let mut acc = 0.0f32;
+    for (x, y) in a.iter().zip(b) {
+        let d = x - y;
+        acc += d * d;
+    }
+    acc
+}
+
+/// Descale x_t into q = x_t/√ᾱ.
+pub(crate) fn descale(x_t: &[f32], alpha_bar: f32) -> Vec<f32> {
+    let inv = 1.0 / alpha_bar.max(1e-12).sqrt();
+    x_t.iter().map(|&v| v * inv).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_parse_roundtrip() {
+        for &k in DenoiserKind::all() {
+            assert_eq!(DenoiserKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(DenoiserKind::parse("bogus"), None);
+    }
+
+    #[test]
+    fn sqdist_basics() {
+        assert_eq!(sqdist(&[0.0, 0.0], &[3.0, 4.0]), 25.0);
+        assert_eq!(sqdist(&[1.0], &[1.0]), 0.0);
+    }
+
+    #[test]
+    fn descale_divides_by_sqrt_alpha() {
+        let q = descale(&[2.0, 4.0], 0.25);
+        assert_eq!(q, vec![4.0, 8.0]);
+    }
+}

@@ -1,0 +1,127 @@
+//! The Optimal (exact empirical-Bayes) denoiser — Eq. 2 over the *entire*
+//! training corpus (De Bortoli 2022). O(N·D) per evaluation: the paper's
+//! scalability bottleneck and the memorisation-prone upper bound.
+
+use super::softmax::StreamingSoftmax;
+use super::{descale, sqdist, DenoiseResult, Denoiser, StepContext};
+use crate::data::dataset::Dataset;
+
+#[derive(Debug, Default)]
+pub struct OptimalDenoiser;
+
+impl OptimalDenoiser {
+    pub fn new() -> Self {
+        OptimalDenoiser
+    }
+}
+
+impl Denoiser for OptimalDenoiser {
+    fn name(&self) -> String {
+        "optimal".into()
+    }
+
+    fn denoise(&mut self, x_t: &[f32], ctx: &StepContext) -> DenoiseResult {
+        let ds = ctx.ds;
+        let q = descale(x_t, ctx.alpha_bar());
+        let scale = ctx.logit_scale();
+        let mut acc = StreamingSoftmax::new(ds.d);
+        let mut support = 0usize;
+        for i in ctx.rows() {
+            let row = ds.row(i as usize);
+            acc.push(-sqdist(&q, row) * scale, row);
+            support += 1;
+        }
+        let (f_hat, stats) = acc.finish();
+        DenoiseResult {
+            f_hat,
+            stats,
+            support,
+        }
+    }
+
+    fn working_set_bytes(&self, ds: &Dataset) -> u64 {
+        // full corpus + query/accumulator scratch
+        (ds.n * ds.d + 2 * ds.d) as u64 * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::preset;
+    use crate::schedule::noise::{NoiseSchedule, ScheduleKind};
+
+    fn setup() -> (Dataset, NoiseSchedule) {
+        let mut spec = preset("mnist-sim").unwrap().clone();
+        spec.n = 200;
+        (
+            Dataset::synthesize(&spec, 3),
+            NoiseSchedule::new(ScheduleKind::DdpmLinear, 10),
+        )
+    }
+
+    #[test]
+    fn low_noise_memorizes_training_sample() {
+        // The paper's memorisation pathology: at tiny noise the optimal
+        // denoiser collapses onto the nearest training point.
+        let (ds, sched) = setup();
+        let mut den = OptimalDenoiser::new();
+        let step = 9; // cleanest
+        let a = sched.alpha_bar(step);
+        let target = ds.row(17).to_vec();
+        let x_t: Vec<f32> = target.iter().map(|&v| v * a.sqrt()).collect();
+        let ctx = StepContext {
+            ds: &ds,
+            sched: &sched,
+            step,
+            class: None,
+        };
+        let out = den.denoise(&x_t, &ctx);
+        let err: f32 = out
+            .f_hat
+            .iter()
+            .zip(&target)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max);
+        assert!(err < 0.05, "should memorise row 17, max err {err}");
+        assert!(out.stats.top1_weight > 0.9);
+        assert_eq!(out.support, ds.n);
+    }
+
+    #[test]
+    fn high_noise_returns_corpus_mean() {
+        let (ds, sched) = setup();
+        let mut den = OptimalDenoiser::new();
+        let ctx = StepContext {
+            ds: &ds,
+            sched: &sched,
+            step: 0,
+            class: None,
+        };
+        let x_t = vec![0.01f32; ds.d];
+        let out = den.denoise(&x_t, &ctx);
+        let mse: f32 = out
+            .f_hat
+            .iter()
+            .zip(&ds.mean)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f32>()
+            / ds.d as f32;
+        assert!(mse < 0.05, "high noise should blur to the mean, mse {mse}");
+        assert!(out.stats.entropy > (ds.n as f32).ln() * 0.5);
+    }
+
+    #[test]
+    fn conditional_restricts_support() {
+        let (ds, sched) = setup();
+        let mut den = OptimalDenoiser::new();
+        let ctx = StepContext {
+            ds: &ds,
+            sched: &sched,
+            step: 5,
+            class: Some(2),
+        };
+        let out = den.denoise(&vec![0.0; ds.d], &ctx);
+        assert_eq!(out.support, ds.class_rows[2].len());
+    }
+}

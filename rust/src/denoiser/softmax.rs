@@ -1,0 +1,266 @@
+//! Streaming softmax aggregation — the rust twins of the L1 Pallas kernels.
+//!
+//! * `ss_aggregate` — *unbiased* one-pass online softmax (Dao et al. 2022):
+//!   running max / denominator / weighted accumulator; bit-for-bit the same
+//!   recurrence as `kernels/golden_aggregate.py`.
+//! * `wss_aggregate` — the *biased* Weighted Streaming Softmax of the PCA
+//!   baseline (Sec. 3.2): candidates are processed in batches, each batch
+//!   contributes its own softmax mean, batch means are averaged — the
+//!   weight-flattening trick that causes the paper's over-smoothing.
+
+/// Posterior telemetry shared by every denoiser.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PosteriorStats {
+    pub max_logit: f32,
+    pub logsumexp: f32,
+    pub entropy: f32,
+    pub top1_weight: f32,
+}
+
+impl PosteriorStats {
+    pub fn zero() -> Self {
+        PosteriorStats {
+            max_logit: 0.0,
+            logsumexp: 0.0,
+            entropy: 0.0,
+            top1_weight: 0.0,
+        }
+    }
+}
+
+/// Online-softmax accumulator over (logit, row) pairs.
+pub struct StreamingSoftmax {
+    d: usize,
+    m: f32,
+    l: f32,
+    s: f32, // sum p * logit (for entropy)
+    acc: Vec<f32>,
+    count: usize,
+}
+
+impl StreamingSoftmax {
+    pub fn new(d: usize) -> Self {
+        StreamingSoftmax {
+            d,
+            m: f32::NEG_INFINITY,
+            l: 0.0,
+            s: 0.0,
+            acc: vec![0.0; d],
+            count: 0,
+        }
+    }
+
+    #[inline]
+    pub fn push(&mut self, logit: f32, row: &[f32]) {
+        debug_assert_eq!(row.len(), self.d);
+        if logit > self.m {
+            let corr = if self.m.is_finite() {
+                (self.m - logit).exp()
+            } else {
+                0.0
+            };
+            self.l *= corr;
+            self.s *= corr;
+            for v in self.acc.iter_mut() {
+                *v *= corr;
+            }
+            self.m = logit;
+        }
+        let p = (logit - self.m).exp();
+        self.l += p;
+        self.s += p * logit;
+        for (a, &x) in self.acc.iter_mut().zip(row) {
+            *a += p * x;
+        }
+        self.count += 1;
+    }
+
+    /// Finalise into (posterior mean, stats).
+    pub fn finish(self) -> (Vec<f32>, PosteriorStats) {
+        assert!(self.count > 0, "no rows aggregated");
+        let mut out = self.acc;
+        let inv = 1.0 / self.l;
+        for v in out.iter_mut() {
+            *v *= inv;
+        }
+        let lse = self.m + self.l.ln();
+        let mean_logit = self.s / self.l;
+        (
+            out,
+            PosteriorStats {
+                max_logit: self.m,
+                logsumexp: lse,
+                entropy: (lse - mean_logit).max(0.0),
+                top1_weight: (self.m - lse).exp(),
+            },
+        )
+    }
+}
+
+/// Unbiased streaming aggregation of `(logit_i, row_i)` over an iterator.
+pub fn ss_aggregate<'a>(
+    d: usize,
+    items: impl IntoIterator<Item = (f32, &'a [f32])>,
+) -> (Vec<f32>, PosteriorStats) {
+    let mut acc = StreamingSoftmax::new(d);
+    for (logit, row) in items {
+        acc.push(logit, row);
+    }
+    acc.finish()
+}
+
+/// Biased Weighted Streaming Softmax with batch-level averaging over
+/// `blocks` equal batches (the PCA baseline's flattening heuristic).
+pub fn wss_aggregate<'a>(
+    d: usize,
+    items: &[(f32, &'a [f32])],
+    blocks: usize,
+) -> (Vec<f32>, PosteriorStats) {
+    assert!(!items.is_empty());
+    let blocks = blocks.clamp(1, items.len());
+    let per = items.len().div_ceil(blocks);
+    let mut means: Vec<Vec<f32>> = Vec::new();
+    // exact global stats for telemetry come from a parallel SS pass
+    let mut global = StreamingSoftmax::new(d);
+    for chunk in items.chunks(per) {
+        let mut block = StreamingSoftmax::new(d);
+        for &(logit, row) in chunk {
+            block.push(logit, row);
+            global.push(logit, row);
+        }
+        means.push(block.finish().0);
+    }
+    let mut out = vec![0.0f32; d];
+    for m in &means {
+        for (o, &v) in out.iter_mut().zip(m) {
+            *o += v;
+        }
+    }
+    let inv = 1.0 / means.len() as f32;
+    for v in out.iter_mut() {
+        *v *= inv;
+    }
+    let (_, stats) = global.finish();
+    (out, stats)
+}
+
+/// Exact (two-pass) normalised weights of a logit slice — test oracle and
+/// Fig. 1/3a telemetry.
+pub fn exact_softmax(logits: &[f32]) -> Vec<f32> {
+    let m = logits.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let exps: Vec<f32> = logits.iter().map(|&l| (l - m).exp()).collect();
+    let z: f32 = exps.iter().sum();
+    exps.into_iter().map(|e| e / z).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{forall, gen};
+
+    fn naive_agg(logits: &[f32], rows: &[Vec<f32>]) -> Vec<f32> {
+        let w = exact_softmax(logits);
+        let d = rows[0].len();
+        let mut out = vec![0.0f32; d];
+        for (wi, row) in w.iter().zip(rows) {
+            for j in 0..d {
+                out[j] += wi * row[j];
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn ss_matches_naive_softmax() {
+        forall(7, 100, |rng| {
+            let k = gen::usize_in(rng, 1, 200);
+            let d = gen::usize_in(rng, 1, 32);
+            let logits: Vec<f32> = (0..k).map(|_| rng.normal() * 10.0).collect();
+            let rows: Vec<Vec<f32>> = (0..k).map(|_| gen::vec_normal(rng, d, 2.0)).collect();
+            let (got, stats) =
+                ss_aggregate(d, logits.iter().copied().zip(rows.iter().map(|r| r.as_slice())));
+            let want = naive_agg(&logits, &rows);
+            for j in 0..d {
+                crate::prop_assert!(
+                    (got[j] - want[j]).abs() < 1e-3,
+                    "dim {j}: {} vs {}",
+                    got[j],
+                    want[j]
+                );
+            }
+            let w = exact_softmax(&logits);
+            let top1 = w.iter().copied().fold(0.0f32, f32::max);
+            crate::prop_assert!(
+                (stats.top1_weight - top1).abs() < 1e-3,
+                "top1 {} vs {}",
+                stats.top1_weight,
+                top1
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn ss_is_shift_invariant() {
+        let rows = vec![vec![1.0f32, 0.0], vec![0.0, 1.0]];
+        let (a, _) = ss_aggregate(2, [(0.3f32, rows[0].as_slice()), (0.9, rows[1].as_slice())]);
+        let (b, _) = ss_aggregate(
+            2,
+            [(100.3f32, rows[0].as_slice()), (100.9, rows[1].as_slice())],
+        );
+        for j in 0..2 {
+            assert!((a[j] - b[j]).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn ss_survives_extreme_logits() {
+        let rows = vec![vec![1.0f32], vec![2.0]];
+        let (out, stats) =
+            ss_aggregate(1, [(-3e4f32, rows[0].as_slice()), (3e4, rows[1].as_slice())]);
+        assert!((out[0] - 2.0).abs() < 1e-6);
+        assert!(stats.logsumexp.is_finite());
+        assert!((stats.top1_weight - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn wss_flattens_towards_block_mean_average() {
+        // One dominant logit; SS returns its row, WSS averages block means
+        // so the dominated blocks still pull the answer away.
+        let rows: Vec<Vec<f32>> = (0..8).map(|i| vec![i as f32]).collect();
+        let mut items: Vec<(f32, &[f32])> =
+            rows.iter().map(|r| (0.0f32, r.as_slice())).collect();
+        items[0].0 = 50.0; // dominant
+        let (ss, _) = ss_aggregate(1, items.iter().copied());
+        let (wss, _) = wss_aggregate(1, &items, 4);
+        assert!((ss[0] - 0.0).abs() < 1e-3, "SS must track the dominant row");
+        assert!(wss[0] > 1.0, "WSS must be flattened: {}", wss[0]);
+    }
+
+    #[test]
+    fn wss_single_block_equals_ss() {
+        let rows: Vec<Vec<f32>> = (0..16).map(|i| vec![i as f32, -(i as f32)]).collect();
+        let items: Vec<(f32, &[f32])> = rows
+            .iter()
+            .enumerate()
+            .map(|(i, r)| ((i as f32) * 0.3, r.as_slice()))
+            .collect();
+        let (ss, _) = ss_aggregate(2, items.iter().copied());
+        let (wss, _) = wss_aggregate(2, &items, 1);
+        for j in 0..2 {
+            assert!((ss[j] - wss[j]).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn entropy_limits() {
+        let rows: Vec<Vec<f32>> = (0..64).map(|_| vec![0.0f32]).collect();
+        let uniform: Vec<(f32, &[f32])> = rows.iter().map(|r| (1.0f32, r.as_slice())).collect();
+        let (_, stats) = ss_aggregate(1, uniform.iter().copied());
+        assert!((stats.entropy - (64.0f32).ln()).abs() < 1e-3);
+        let mut peaked = uniform.clone();
+        peaked[5].0 = 1e4;
+        let (_, stats) = ss_aggregate(1, peaked.iter().copied());
+        assert!(stats.entropy < 1e-3);
+    }
+}

@@ -1,0 +1,9 @@
+//! Adaptive Coarse Screening (Sec. 3.4): the sharded proxy-distance scan
+//! that produces the candidate pool C_t, and exact top-k selection that
+//! produces the golden subset S_t.
+
+pub mod scan;
+pub mod topk;
+
+pub use scan::ProxyIndex;
+pub use topk::{top_k_smallest, BoundedMaxHeap};

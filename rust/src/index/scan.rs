@@ -1,0 +1,247 @@
+//! The coarse proxy scan: top-m_t nearest rows of the s=1/4 proxy table.
+//!
+//! This is the L3 half of Adaptive Coarse Screening (Sec. 3.4, Eq. 4). The
+//! scan is sharded across a thread pool; each shard keeps a bounded top-m
+//! heap and shards merge at the end, so the scan is O(N·d_proxy + m log m)
+//! with zero allocation inside the distance loop. The unrolled
+//! squared-distance inner loop and early-exit against the shard's current
+//! worst retained distance are the §Perf levers (EXPERIMENTS.md).
+
+use super::topk::BoundedMaxHeap;
+use crate::data::dataset::Dataset;
+use crate::util::threadpool::parallel_chunks;
+
+/// Scan configuration + scratch-free entry points.
+#[derive(Debug, Clone)]
+pub struct ProxyIndex {
+    pub threads: usize,
+}
+
+impl Default for ProxyIndex {
+    fn default() -> Self {
+        ProxyIndex {
+            threads: crate::util::threadpool::default_threads(),
+        }
+    }
+}
+
+/// Branchless squared distance — auto-vectorises (the early-exit branch
+/// below defeats SIMD, so short rows use this instead).
+#[inline]
+fn sqdist_flat(a: &[f32], b: &[f32]) -> f32 {
+    let mut acc = [0.0f32; 8];
+    let chunks = a.len() / 8;
+    for s in 0..chunks {
+        let i = s * 8;
+        for j in 0..8 {
+            let d = a[i + j] - b[i + j];
+            acc[j] += d * d;
+        }
+    }
+    let mut total: f32 = acc.iter().sum();
+    for i in chunks * 8..a.len() {
+        let d = a[i] - b[i];
+        total += d * d;
+    }
+    total
+}
+
+#[inline]
+fn sqdist_early_exit(a: &[f32], b: &[f32], cutoff: f32) -> f32 {
+    // 64-element strips with a cutoff check between strips: in the
+    // late-diffusion regime the heap's worst distance is tiny, so most rows
+    // exit after the first strip, while each strip stays vectorisable.
+    if a.len() <= 64 {
+        return sqdist_flat(a, b);
+    }
+    let mut acc = 0.0f32;
+    let strips = a.len() / 64;
+    for s in 0..strips {
+        acc += sqdist_flat(&a[s * 64..(s + 1) * 64], &b[s * 64..(s + 1) * 64]);
+        if acc >= cutoff {
+            return f32::INFINITY;
+        }
+    }
+    let rem = strips * 64;
+    acc += sqdist_flat(&a[rem..], &b[rem..]);
+    acc
+}
+
+impl ProxyIndex {
+    /// Scoped-thread spawn costs ~0.3 ms; below this many element-ops a
+    /// single-threaded scan wins (measured in benches/perf_hotpath.rs).
+    fn effective_threads(&self, work: usize) -> usize {
+        if work < 2_000_000 {
+            1
+        } else {
+            self.threads
+        }
+    }
+
+    /// Unconditional top-m scan over the whole proxy table.
+    /// Returns row ids sorted ascending by proxy distance.
+    pub fn top_m(&self, ds: &Dataset, query_proxy: &[f32], m: usize) -> Vec<u32> {
+        assert_eq!(query_proxy.len(), ds.proxy_d);
+        let m = m.max(1).min(ds.n);
+        let threads = self.effective_threads(ds.n * ds.proxy_d);
+        let shards = parallel_chunks(ds.n, threads, |_, s, e| {
+            let mut heap = BoundedMaxHeap::new(m);
+            for i in s..e {
+                let row = ds.proxy_row(i);
+                let d = sqdist_early_exit(query_proxy, row, heap.worst());
+                if d.is_finite() {
+                    heap.push(d, i as u32);
+                }
+            }
+            heap
+        });
+        let mut all = BoundedMaxHeap::new(m);
+        for shard in shards {
+            all.merge(shard);
+        }
+        all.into_sorted().into_iter().map(|(_, i)| i).collect()
+    }
+
+    /// Class-conditional top-m scan (ImageNet-sim conditional generation):
+    /// only rows of `class` participate.
+    pub fn top_m_class(&self, ds: &Dataset, query_proxy: &[f32], m: usize, class: u32) -> Vec<u32> {
+        let rows = &ds.class_rows[class as usize];
+        let m = m.max(1).min(rows.len().max(1));
+        let threads = self.effective_threads(rows.len() * ds.proxy_d);
+        let shards = parallel_chunks(rows.len(), threads, |_, s, e| {
+            let mut heap = BoundedMaxHeap::new(m);
+            for &gid in &rows[s..e] {
+                let row = ds.proxy_row(gid as usize);
+                let d = sqdist_early_exit(query_proxy, row, heap.worst());
+                if d.is_finite() {
+                    heap.push(d, gid);
+                }
+            }
+            heap
+        });
+        let mut all = BoundedMaxHeap::new(m);
+        for shard in shards {
+            all.merge(shard);
+        }
+        all.into_sorted().into_iter().map(|(_, i)| i).collect()
+    }
+
+    /// Exact full-resolution refine inside a candidate pool: top-k of
+    /// ||q - x_i||² over `cands` (Eq. 5) computed on the CPU path.
+    /// The runtime-backed engine uses the `exact_dist` XLA artifact instead;
+    /// this scalar path is the tested reference and the no-runtime fallback.
+    pub fn refine_top_k(&self, ds: &Dataset, q: &[f32], cands: &[u32], k: usize) -> Vec<u32> {
+        let k = k.max(1).min(cands.len().max(1));
+        let threads = self.effective_threads(cands.len() * ds.d);
+        let shards = parallel_chunks(cands.len(), threads, |_, s, e| {
+            let mut heap = BoundedMaxHeap::new(k);
+            for &gid in &cands[s..e] {
+                let row = ds.row(gid as usize);
+                let d = sqdist_early_exit(q, row, heap.worst());
+                if d.is_finite() {
+                    heap.push(d, gid);
+                }
+            }
+            heap
+        });
+        let mut all = BoundedMaxHeap::new(k);
+        for shard in shards {
+            all.merge(shard);
+        }
+        all.into_sorted().into_iter().map(|(_, i)| i).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::preset;
+    use crate::util::prop::{forall, gen};
+
+    fn tiny() -> Dataset {
+        let mut spec = preset("cifar-sim").unwrap().clone();
+        spec.n = 400;
+        Dataset::synthesize(&spec, 5)
+    }
+
+    fn naive_top_m(ds: &Dataset, qp: &[f32], m: usize) -> Vec<u32> {
+        let mut dists: Vec<(f32, u32)> = (0..ds.n)
+            .map(|i| {
+                let d: f32 = ds
+                    .proxy_row(i)
+                    .iter()
+                    .zip(qp)
+                    .map(|(a, b)| (a - b) * (a - b))
+                    .sum();
+                (d, i as u32)
+            })
+            .collect();
+        dists.sort_by(|a, b| a.0.total_cmp(&b.0));
+        dists.truncate(m);
+        dists.into_iter().map(|(_, i)| i).collect()
+    }
+
+    #[test]
+    fn top_m_matches_naive() {
+        let ds = tiny();
+        let idx = ProxyIndex::default();
+        forall(3, 20, |rng| {
+            let m = gen::usize_in(rng, 1, 64);
+            let qi = rng.below(ds.n);
+            let qp = ds.proxy_row(qi).to_vec();
+            let got = idx.top_m(&ds, &qp, m);
+            let want = naive_top_m(&ds, &qp, m);
+            crate::prop_assert!(got == want, "m={m} qi={qi}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn self_query_returns_self_first() {
+        let ds = tiny();
+        let idx = ProxyIndex::default();
+        let got = idx.top_m(&ds, ds.proxy_row(37), 5);
+        assert_eq!(got[0], 37);
+    }
+
+    #[test]
+    fn class_conditional_scan_stays_in_class() {
+        let ds = tiny();
+        let idx = ProxyIndex::default();
+        let qp = ds.proxy_row(0).to_vec();
+        for class in 0..3u32 {
+            let got = idx.top_m_class(&ds, &qp, 16, class);
+            assert!(!got.is_empty());
+            assert!(got.iter().all(|&i| ds.labels[i as usize] == class));
+        }
+    }
+
+    #[test]
+    fn refine_orders_by_full_distance() {
+        let ds = tiny();
+        let idx = ProxyIndex::default();
+        let q = ds.row(11).to_vec();
+        let cands: Vec<u32> = (0..200u32).collect();
+        let got = idx.refine_top_k(&ds, &q, &cands, 7);
+        assert_eq!(got[0], 11);
+        // verify sorted by exact distance
+        let dist = |i: u32| -> f32 {
+            ds.row(i as usize)
+                .iter()
+                .zip(&q)
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum()
+        };
+        for w in got.windows(2) {
+            assert!(dist(w[0]) <= dist(w[1]) + 1e-6);
+        }
+    }
+
+    #[test]
+    fn m_larger_than_n_clamps() {
+        let ds = tiny();
+        let idx = ProxyIndex::default();
+        let got = idx.top_m(&ds, ds.proxy_row(0), 10_000);
+        assert_eq!(got.len(), ds.n);
+    }
+}

@@ -1,0 +1,166 @@
+//! Top-k selection over distance streams.
+//!
+//! `BoundedMaxHeap` keeps the k smallest values seen (a max-heap rooted at
+//! the current worst retained value), so a scan can push N items in
+//! O(N log k) without materialising or sorting the full distance vector.
+
+/// Max-heap of (dist, idx) bounded to capacity k; retains the k smallest.
+#[derive(Debug, Clone)]
+pub struct BoundedMaxHeap {
+    k: usize,
+    /// binary heap ordered by dist descending at the root
+    items: Vec<(f32, u32)>,
+}
+
+impl BoundedMaxHeap {
+    pub fn new(k: usize) -> Self {
+        assert!(k > 0);
+        BoundedMaxHeap {
+            k,
+            items: Vec::with_capacity(k),
+        }
+    }
+
+    #[inline]
+    pub fn worst(&self) -> f32 {
+        if self.items.len() < self.k {
+            f32::INFINITY
+        } else {
+            self.items[0].0
+        }
+    }
+
+    #[inline]
+    pub fn push(&mut self, dist: f32, idx: u32) {
+        if self.items.len() < self.k {
+            self.items.push((dist, idx));
+            self.sift_up(self.items.len() - 1);
+        } else if dist < self.items[0].0 {
+            self.items[0] = (dist, idx);
+            self.sift_down(0);
+        }
+    }
+
+    fn sift_up(&mut self, mut i: usize) {
+        while i > 0 {
+            let parent = (i - 1) / 2;
+            if self.items[i].0 > self.items[parent].0 {
+                self.items.swap(i, parent);
+                i = parent;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn sift_down(&mut self, mut i: usize) {
+        loop {
+            let (l, r) = (2 * i + 1, 2 * i + 2);
+            let mut largest = i;
+            if l < self.items.len() && self.items[l].0 > self.items[largest].0 {
+                largest = l;
+            }
+            if r < self.items.len() && self.items[r].0 > self.items[largest].0 {
+                largest = r;
+            }
+            if largest == i {
+                break;
+            }
+            self.items.swap(i, largest);
+            i = largest;
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    /// Drain into (dist, idx) pairs sorted ascending by distance.
+    pub fn into_sorted(mut self) -> Vec<(f32, u32)> {
+        self.items.sort_by(|a, b| a.0.total_cmp(&b.0));
+        self.items
+    }
+
+    /// Merge another heap's contents (used to combine per-shard results).
+    pub fn merge(&mut self, other: BoundedMaxHeap) {
+        for (d, i) in other.items {
+            self.push(d, i);
+        }
+    }
+}
+
+/// Exact top-k smallest of a dense distance slice; returns indices sorted
+/// ascending by distance. `idx_map` translates local positions to global
+/// row ids (pass `None` for the identity).
+pub fn top_k_smallest(dists: &[f32], k: usize, idx_map: Option<&[u32]>) -> Vec<u32> {
+    let mut heap = BoundedMaxHeap::new(k.max(1).min(dists.len().max(1)));
+    for (i, &d) in dists.iter().enumerate() {
+        let gid = idx_map.map(|m| m[i]).unwrap_or(i as u32);
+        heap.push(d, gid);
+    }
+    heap.into_sorted().into_iter().map(|(_, i)| i).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{forall, gen};
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn keeps_k_smallest() {
+        let mut heap = BoundedMaxHeap::new(3);
+        for (i, d) in [5.0, 1.0, 4.0, 0.5, 9.0, 2.0].iter().enumerate() {
+            heap.push(*d, i as u32);
+        }
+        let got: Vec<u32> = heap.into_sorted().into_iter().map(|(_, i)| i).collect();
+        assert_eq!(got, vec![3, 1, 5]); // dists 0.5, 1.0, 2.0
+    }
+
+    #[test]
+    fn top_k_matches_naive_sort() {
+        forall(11, 100, |rng| {
+            let n = gen::usize_in(rng, 1, 500);
+            let k = gen::usize_in(rng, 1, n);
+            let dists: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
+            let got = top_k_smallest(&dists, k, None);
+            let mut naive: Vec<u32> = (0..n as u32).collect();
+            naive.sort_by(|&a, &b| dists[a as usize].total_cmp(&dists[b as usize]));
+            naive.truncate(k);
+            crate::prop_assert!(got == naive, "mismatch n={n} k={k}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn merge_equals_single_heap() {
+        let mut rng = Pcg64::new(4);
+        let dists: Vec<f32> = (0..200).map(|_| rng.f32()).collect();
+        let mut whole = BoundedMaxHeap::new(10);
+        for (i, &d) in dists.iter().enumerate() {
+            whole.push(d, i as u32);
+        }
+        let mut a = BoundedMaxHeap::new(10);
+        let mut b = BoundedMaxHeap::new(10);
+        for (i, &d) in dists.iter().enumerate() {
+            if i < 100 {
+                a.push(d, i as u32)
+            } else {
+                b.push(d, i as u32)
+            }
+        }
+        a.merge(b);
+        assert_eq!(a.into_sorted(), whole.into_sorted());
+    }
+
+    #[test]
+    fn idx_map_translates() {
+        let map = [10u32, 20, 30];
+        let got = top_k_smallest(&[3.0, 1.0, 2.0], 2, Some(&map));
+        assert_eq!(got, vec![20, 30]);
+    }
+}

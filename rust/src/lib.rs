@@ -1,0 +1,45 @@
+//! # GoldDiff — Fast and Scalable Analytical Diffusion
+//!
+//! Production reproduction of *"Fast and Scalable Analytical Diffusion"*
+//! (Shang, Sun, Lin, Shen; 2026): a three-layer rust + JAX + Pallas stack
+//! where the rust coordinator owns the serving hot path and all heavy
+//! numerics run in AOT-compiled XLA executables (PJRT CPU client).
+//!
+//! Layer map (see DESIGN.md):
+//!
+//! * [`util`] — offline-friendly substrates (JSON, RNG, threadpool, CLI, …).
+//! * [`config`] — typed configuration for datasets, schedules and the engine.
+//! * [`data`] — synthetic hierarchical-GMM datasets + the `.gds` store.
+//! * [`schedule`] — noise schedules and the paper's counter-monotonic
+//!   (m_t, k_t) budget schedules (Eqs. 4 & 6).
+//! * [`index`] — Adaptive Coarse Screening: s=1/4 proxy scan + top-k.
+//! * [`oracle`] — closed-form population denoiser (the neural-oracle stand-in).
+//! * [`denoiser`] — Optimal / Wiener / Kamb / PCA baselines + the GoldDiff
+//!   coarse→fine wrapper; streaming softmax (SS) and biased WSS.
+//! * [`sampler`] — DDIM / DDPM drivers over any denoiser.
+//! * [`runtime`] — PJRT executable cache over `artifacts/*.hlo.txt`.
+//! * [`coordinator`] — the serving engine: router, batcher, scheduler,
+//!   workers, backpressure, stats.
+//! * [`server`] — TCP line-JSON front end.
+//! * [`metrics`] — MSE / r² / entropy / spectra + table writers.
+//! * [`benchlib`] — per-paper-experiment harnesses shared by `cargo bench`
+//!   targets and examples.
+
+pub mod benchlib;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod denoiser;
+pub mod index;
+pub mod metrics;
+pub mod oracle;
+pub mod runtime;
+pub mod sampler;
+pub mod schedule;
+pub mod server;
+pub mod util;
+
+pub use config::EngineConfig;
+pub use data::dataset::Dataset;
+pub use denoiser::{Denoiser, DenoiserKind};
+pub use schedule::noise::{NoiseSchedule, ScheduleKind};

@@ -1,0 +1,230 @@
+//! `golddiff` — the launcher CLI for the GoldDiff serving stack.
+//!
+//! Commands:
+//!   gen-data   synthesise + cache the benchmark dataset stores (.gds)
+//!   serve      start the TCP serving engine for one preset
+//!   generate   run generations locally through the engine and print stats
+//!   exp        regenerate a paper table/figure (table1..table7, fig1, fig3, fig6, all)
+//!   info       summarise artifacts + datasets
+//!
+//! Example:
+//!   golddiff gen-data --all
+//!   golddiff serve --preset cifar-sim --addr 127.0.0.1:7391
+//!   golddiff generate --preset afhq-sim --method golddiff-pca --count 8
+//!   golddiff exp table2
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use golddiff::benchlib::{self, experiments, figures};
+use golddiff::config::EngineConfig;
+use golddiff::coordinator::Engine;
+use golddiff::data::store;
+use golddiff::data::synthetic::{preset, PRESETS};
+use golddiff::denoiser::DenoiserKind;
+use golddiff::server::Server;
+use golddiff::util::cli::{Args, Cli};
+
+fn main() {
+    let cli = Cli::new("golddiff", "Fast and Scalable Analytical Diffusion (GoldDiff)")
+        .command("gen-data", "synthesise + cache benchmark datasets")
+        .command("serve", "start the TCP serving engine")
+        .command("generate", "run local generations and print stats")
+        .command("exp", "regenerate a paper table/figure")
+        .command("info", "summarise artifacts and datasets");
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some((cmd, args)) = cli.dispatch(&argv) else {
+        eprint!("{}", cli.usage());
+        std::process::exit(2);
+    };
+    let code = match run(&cmd, &args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(cmd: &str, args: &Args) -> Result<()> {
+    match cmd {
+        "gen-data" => gen_data(args),
+        "serve" => serve(args),
+        "generate" => generate(args),
+        "exp" => exp(args),
+        "info" => info(args),
+        _ => unreachable!(),
+    }
+}
+
+fn gen_data(args: &Args) -> Result<()> {
+    let dir = std::path::PathBuf::from(args.get_or("out-dir", "data"));
+    let seed = args.u64_or("seed", 0);
+    let names: Vec<&str> = if args.flag("all") {
+        PRESETS.iter().map(|p| p.name).collect()
+    } else {
+        vec![args.get_or("preset", "cifar-sim")]
+    };
+    for name in names {
+        let spec = preset(name).ok_or_else(|| anyhow::anyhow!("unknown preset {name}"))?;
+        let path = store::store_path(&dir, name);
+        if path.exists() && !args.flag("force") {
+            println!("{name}: cached at {path:?}");
+            continue;
+        }
+        let t0 = std::time::Instant::now();
+        let ds = golddiff::Dataset::synthesize(spec, seed);
+        store::save(&ds, &path)?;
+        println!(
+            "{name}: N={} D={} classes={} -> {path:?} ({:.1}s)",
+            ds.n,
+            ds.d,
+            ds.classes,
+            t0.elapsed().as_secs_f64()
+        );
+    }
+    Ok(())
+}
+
+fn engine_from_args(args: &Args) -> Result<Engine> {
+    let mut cfg = EngineConfig::default();
+    if let Some(path) = args.get("config") {
+        cfg = EngineConfig::load(std::path::Path::new(path))?;
+    }
+    cfg.apply_args(args);
+    Engine::start(cfg)
+}
+
+fn serve(args: &Args) -> Result<()> {
+    let engine = Arc::new(engine_from_args(args)?);
+    let addr = args.get_or("addr", "127.0.0.1:7391");
+    let server = Server::start(Arc::clone(&engine), addr)?;
+    println!(
+        "golddiff serving preset={} on {} ({} steps) — line-JSON protocol; Ctrl-C to stop",
+        engine.preset, server.addr, engine.steps
+    );
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(5));
+        println!("stats: {}", engine.stats_json());
+    }
+}
+
+fn generate(args: &Args) -> Result<()> {
+    let engine = engine_from_args(args)?;
+    let method = DenoiserKind::parse(args.get_or("method", "golddiff-pca"))
+        .ok_or_else(|| anyhow::anyhow!("unknown method"))?;
+    let count = args.usize_or("count", 4);
+    let class = args.get("class").and_then(|c| c.parse().ok());
+    let t0 = std::time::Instant::now();
+    let rxs: Vec<_> = (0..count)
+        .map(|i| engine.submit(method, args.u64_or("seed", 0) + i as u64, class))
+        .collect::<Result<_>>()?;
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let resp = rx.recv()?;
+        println!(
+            "sample {i}: latency={:.3}s queue={:.3}s steps={} k: {} -> {}",
+            resp.latency_secs,
+            resp.queue_secs,
+            resp.steps.len(),
+            resp.steps.first().map(|s| s.k_used).unwrap_or(0),
+            resp.steps.last().map(|s| s.k_used).unwrap_or(0),
+        );
+    }
+    println!(
+        "total {:.3}s, throughput {:.2} samples/s",
+        t0.elapsed().as_secs_f64(),
+        count as f64 / t0.elapsed().as_secs_f64()
+    );
+    println!("engine stats: {}", engine.stats_json());
+    engine.shutdown();
+    Ok(())
+}
+
+fn exp(args: &Args) -> Result<()> {
+    let which = args
+        .positional()
+        .first()
+        .map(String::as_str)
+        .unwrap_or("all");
+    let seed = args.u64_or("seed", 0);
+    let run_one = |name: &str| -> Result<()> {
+        eprintln!("== {name} ==");
+        match name {
+            "table1" => {
+                experiments::run_table1(&[2500, 5000, 10_000, 20_000], seed)?;
+            }
+            "table2" => {
+                experiments::run_table2(seed)?;
+            }
+            "table3" => {
+                experiments::run_table3(seed)?;
+            }
+            "table4" => {
+                experiments::run_table4(seed)?;
+            }
+            "table5" => {
+                experiments::run_table5(seed)?;
+            }
+            "table6" => {
+                experiments::run_table6(seed)?;
+            }
+            "table7" => {
+                experiments::run_table7(seed)?;
+            }
+            "fig1" => {
+                figures::run_concentration("moons", 8, seed)?;
+            }
+            "fig3" => {
+                figures::run_concentration("cifar-sim", 4, seed)?;
+                figures::run_sensitivity("cifar-sim", seed)?;
+            }
+            "fig4" => {
+                figures::run_qualitative("cifar-sim", 8, seed)?;
+            }
+            "fig6" => {
+                experiments::run_fig6(seed)?;
+            }
+            other => anyhow::bail!("unknown experiment `{other}`"),
+        }
+        Ok(())
+    };
+    if which == "all" {
+        for name in [
+            "fig1", "table1", "table2", "table4", "table5", "table6", "table7", "fig3", "fig4",
+            "fig6", "table3",
+        ] {
+            run_one(name)?;
+        }
+    } else {
+        run_one(which)?;
+    }
+    Ok(())
+}
+
+fn info(_args: &Args) -> Result<()> {
+    let rt = benchlib::runtime()?;
+    println!("artifacts: {} graphs", rt.manifest.artifacts.len());
+    for p in &rt.manifest.presets {
+        let buckets = rt.manifest.buckets("golden_step", &p.name);
+        println!(
+            "  {:14} N={:6} D={:5} proxy_d={:4} classes={:4} buckets={:?}",
+            p.name, p.n, p.d, p.proxy_d, p.classes, buckets
+        );
+    }
+    let dir = benchlib::data_dir();
+    for p in PRESETS {
+        let path = store::store_path(&dir, p.name);
+        println!(
+            "  data/{:18} {}",
+            format!("{}.gds", p.name),
+            if path.exists() {
+                "cached"
+            } else {
+                "missing (golddiff gen-data)"
+            }
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,221 @@
+//! Evaluation metrics (the paper's Efficacy axis: MSE and r² against the
+//! oracle; posterior telemetry: entropy, top-1 weight, logit gap; spectrum
+//! split for the Fig. 2 smoothing-bias quantification) and table writers.
+
+pub mod tables;
+
+/// Mean squared error between two vectors.
+pub fn mse(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    if a.is_empty() {
+        return 0.0;
+    }
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| {
+            let d = (*x - *y) as f64;
+            d * d
+        })
+        .sum::<f64>()
+        / a.len() as f64
+}
+
+/// Coefficient of determination r² of prediction `pred` against target
+/// `target` (1 - SS_res/SS_tot), matching the paper's efficacy metric:
+/// how much of the oracle's output variance the analytical estimate explains.
+pub fn r_squared(pred: &[f32], target: &[f32]) -> f64 {
+    assert_eq!(pred.len(), target.len());
+    let n = target.len() as f64;
+    if n == 0.0 {
+        return 0.0;
+    }
+    let mean = target.iter().map(|&v| v as f64).sum::<f64>() / n;
+    let ss_tot: f64 = target.iter().map(|&v| (v as f64 - mean).powi(2)).sum();
+    let ss_res: f64 = pred
+        .iter()
+        .zip(target)
+        .map(|(&p, &t)| (t as f64 - p as f64).powi(2))
+        .sum();
+    if ss_tot < 1e-12 {
+        return if ss_res < 1e-12 { 1.0 } else { 0.0 };
+    }
+    1.0 - ss_res / ss_tot
+}
+
+/// Accumulates (pred, target) pairs across samples/steps and reports the
+/// pooled MSE and r² exactly as the paper's "averaged over 128 samples".
+#[derive(Debug, Default, Clone)]
+pub struct EfficacyAccum {
+    ss_res: f64,
+    sum_t: f64,
+    sum_t2: f64,
+    count: f64,
+}
+
+impl EfficacyAccum {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn update(&mut self, pred: &[f32], target: &[f32]) {
+        assert_eq!(pred.len(), target.len());
+        for (&p, &t) in pred.iter().zip(target) {
+            let (p, t) = (p as f64, t as f64);
+            self.ss_res += (p - t) * (p - t);
+            self.sum_t += t;
+            self.sum_t2 += t * t;
+            self.count += 1.0;
+        }
+    }
+
+    pub fn mse(&self) -> f64 {
+        if self.count == 0.0 {
+            0.0
+        } else {
+            self.ss_res / self.count
+        }
+    }
+
+    pub fn r2(&self) -> f64 {
+        if self.count == 0.0 {
+            return 0.0;
+        }
+        let mean = self.sum_t / self.count;
+        let ss_tot = self.sum_t2 - self.count * mean * mean;
+        if ss_tot < 1e-12 {
+            return 0.0;
+        }
+        1.0 - self.ss_res / ss_tot
+    }
+
+    pub fn n(&self) -> u64 {
+        self.count as u64
+    }
+}
+
+/// Shannon entropy (nats) of a weight distribution (already normalised).
+pub fn entropy(weights: &[f32]) -> f64 {
+    weights
+        .iter()
+        .filter(|&&w| w > 0.0)
+        .map(|&w| -(w as f64) * (w as f64).ln())
+        .sum()
+}
+
+/// Effective support size exp(H) — the paper's "golden support" measure in
+/// Fig. 1/3a: how many samples carry non-negligible posterior mass.
+pub fn effective_support(weights: &[f32]) -> f64 {
+    entropy(weights).exp()
+}
+
+/// Smallest prefix of the sorted-descending weights covering `mass`.
+pub fn support_at_mass(weights: &[f32], mass: f64) -> usize {
+    let mut sorted: Vec<f32> = weights.to_vec();
+    sorted.sort_by(|a, b| b.total_cmp(a));
+    let mut acc = 0.0f64;
+    for (i, &w) in sorted.iter().enumerate() {
+        acc += w as f64;
+        if acc >= mass {
+            return i + 1;
+        }
+    }
+    sorted.len()
+}
+
+/// High-frequency energy ratio of a flattened image: energy not captured by
+/// the s=1/4 low-pass, over total energy. Quantifies the Fig. 2 smoothing
+/// bias (WSS outputs lose high-frequency energy).
+pub fn highfreq_energy_ratio(x: &[f32], h: usize, w: usize, c: usize) -> f64 {
+    if h < 4 || w < 4 {
+        return 0.0;
+    }
+    let low = crate::data::synthetic::proxy_embed(x, h, w, c);
+    // upsample low back to full res (nearest) and measure residual energy
+    let (pw, _ph) = (w / 4, h / 4);
+    let mut res = 0.0f64;
+    let mut tot = 0.0f64;
+    for y in 0..h {
+        for xx in 0..w {
+            for ch in 0..c {
+                let v = x[(y * w + xx) * c + ch] as f64;
+                let l = low[((y / 4) * pw + (xx / 4)) * c + ch] as f64;
+                res += (v - l) * (v - l);
+                tot += v * v;
+            }
+        }
+    }
+    if tot < 1e-12 {
+        0.0
+    } else {
+        res / tot
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mse_and_r2_basics() {
+        let t = [1.0f32, 2.0, 3.0, 4.0];
+        assert_eq!(mse(&t, &t), 0.0);
+        assert!((r_squared(&t, &t) - 1.0).abs() < 1e-12);
+        let mean = [2.5f32; 4];
+        assert!(r_squared(&mean, &t).abs() < 1e-9); // predicting the mean → r²=0
+        let bad = [4.0f32, 3.0, 2.0, 1.0];
+        assert!(r_squared(&bad, &t) < 0.0); // worse than the mean → negative
+    }
+
+    #[test]
+    fn accum_matches_pooled_computation() {
+        let mut acc = EfficacyAccum::new();
+        let p1 = [1.0f32, 2.0];
+        let t1 = [1.5f32, 2.5];
+        let p2 = [3.0f32, 10.0];
+        let t2 = [3.5f32, 9.0];
+        acc.update(&p1, &t1);
+        acc.update(&p2, &t2);
+        let pooled_p = [1.0f32, 2.0, 3.0, 10.0];
+        let pooled_t = [1.5f32, 2.5, 3.5, 9.0];
+        assert!((acc.mse() - mse(&pooled_p, &pooled_t)).abs() < 1e-12);
+        assert!((acc.r2() - r_squared(&pooled_p, &pooled_t)).abs() < 1e-9);
+        assert_eq!(acc.n(), 4);
+    }
+
+    #[test]
+    fn entropy_uniform_is_log_n() {
+        let w = vec![0.25f32; 4];
+        assert!((entropy(&w) - (4.0f64).ln()).abs() < 1e-9);
+        assert!((effective_support(&w) - 4.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn entropy_delta_is_zero() {
+        let w = [1.0f32, 0.0, 0.0];
+        assert_eq!(entropy(&w), 0.0);
+        assert!((effective_support(&w) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn support_at_mass_counts_prefix() {
+        let w = [0.5f32, 0.3, 0.15, 0.05];
+        assert_eq!(support_at_mass(&w, 0.5), 1);
+        assert_eq!(support_at_mass(&w, 0.8), 2);
+        assert_eq!(support_at_mass(&w, 0.99), 4);
+    }
+
+    #[test]
+    fn highfreq_ratio_detects_smoothing() {
+        // checkerboard (pure high frequency) vs constant (pure low)
+        let (h, w, c) = (8, 8, 1);
+        let mut sharp = vec![0.0f32; h * w];
+        for y in 0..h {
+            for x in 0..w {
+                sharp[y * w + x] = if (x + y) % 2 == 0 { 1.0 } else { -1.0 };
+            }
+        }
+        let flat = vec![1.0f32; h * w];
+        assert!(highfreq_energy_ratio(&sharp, h, w, c) > 0.9);
+        assert!(highfreq_energy_ratio(&flat, h, w, c) < 1e-9);
+    }
+}

@@ -1,0 +1,159 @@
+//! Markdown / CSV table writers for the bench harnesses: every paper table
+//! is emitted in the same row/column layout the paper prints, plus a JSON
+//! dump for machine comparison in EXPERIMENTS.md.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use crate::util::json::Json;
+
+/// A rectangular results table with row labels.
+#[derive(Debug, Clone)]
+pub struct Table {
+    pub title: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<(String, Vec<String>)>,
+}
+
+impl Table {
+    pub fn new(title: &str, columns: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, label: &str, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.columns.len(), "row width mismatch");
+        self.rows.push((label.to_string(), cells));
+        self
+    }
+
+    /// Render GitHub-flavoured markdown.
+    pub fn to_markdown(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "### {}\n", self.title);
+        let _ = write!(out, "| Method |");
+        for c in &self.columns {
+            let _ = write!(out, " {c} |");
+        }
+        let _ = writeln!(out);
+        let _ = write!(out, "|---|");
+        for _ in &self.columns {
+            let _ = write!(out, "---|");
+        }
+        let _ = writeln!(out);
+        for (label, cells) in &self.rows {
+            let _ = write!(out, "| {label} |");
+            for c in cells {
+                let _ = write!(out, " {c} |");
+            }
+            let _ = writeln!(out);
+        }
+        out
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "method,{}", self.columns.join(","));
+        for (label, cells) in &self.rows {
+            let _ = writeln!(out, "{label},{}", cells.join(","));
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut obj = Json::obj();
+        obj.set("title", self.title.as_str());
+        obj.set(
+            "columns",
+            Json::Arr(self.columns.iter().map(|c| Json::Str(c.clone())).collect()),
+        );
+        let rows: Vec<Json> = self
+            .rows
+            .iter()
+            .map(|(label, cells)| {
+                let mut r = Json::obj();
+                r.set("method", label.as_str());
+                r.set(
+                    "cells",
+                    Json::Arr(cells.iter().map(|c| Json::Str(c.clone())).collect()),
+                );
+                r
+            })
+            .collect();
+        obj.set("rows", Json::Arr(rows));
+        obj
+    }
+
+    /// Print to stdout and persist markdown + json under `out/`.
+    pub fn emit(&self, out_dir: &Path, stem: &str) -> anyhow::Result<()> {
+        println!("{}", self.to_markdown());
+        std::fs::create_dir_all(out_dir)?;
+        std::fs::write(out_dir.join(format!("{stem}.md")), self.to_markdown())?;
+        std::fs::write(
+            out_dir.join(format!("{stem}.json")),
+            self.to_json().to_string_compact(),
+        )?;
+        Ok(())
+    }
+}
+
+/// Format helpers shared by the bench harnesses.
+pub fn fmt_f(v: f64, digits: usize) -> String {
+    format!("{v:.digits$}")
+}
+
+pub fn fmt_ms(seconds: f64) -> String {
+    if seconds >= 1.0 {
+        format!("{seconds:.3}s")
+    } else {
+        format!("{:.3}ms", seconds * 1e3)
+    }
+}
+
+pub fn fmt_speedup(base: f64, ours: f64) -> String {
+    if ours <= 0.0 {
+        return "-".into();
+    }
+    format!("×{:.1}", base / ours)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn markdown_layout() {
+        let mut t = Table::new("Tab. X", &["MSE", "Time"]);
+        t.row("PCA", vec!["0.008".into(), "2.802s".into()]);
+        t.row("GoldDiff", vec!["0.007".into(), "0.087s".into()]);
+        let md = t.to_markdown();
+        assert!(md.contains("| PCA | 0.008 | 2.802s |"));
+        assert!(md.contains("| Method | MSE | Time |"));
+    }
+
+    #[test]
+    fn csv_and_json() {
+        let mut t = Table::new("t", &["a"]);
+        t.row("m", vec!["1".into()]);
+        assert_eq!(t.to_csv(), "method,a\nm,1\n");
+        let j = t.to_json();
+        assert_eq!(j.get("title").unwrap().as_str(), Some("t"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn width_checked() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row("m", vec!["1".into()]);
+    }
+
+    #[test]
+    fn formatters() {
+        assert_eq!(fmt_ms(2.5), "2.500s");
+        assert_eq!(fmt_ms(0.0123), "12.300ms");
+        assert_eq!(fmt_speedup(10.0, 0.5), "×20.0");
+    }
+}

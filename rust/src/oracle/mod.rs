@@ -1,0 +1,165 @@
+//! The population oracle: exact Bayes denoiser E[x₀ | x_t] under the known
+//! GMM data law — the stand-in for the paper's trained U-Net / EDM oracles
+//! (DESIGN.md §3).
+//!
+//! With x_t = √ᾱ x₀ + √(1-ᾱ) ε and x₀ ~ Σ_c w_c N(μ_c, diag(v_c)), the
+//! descaled query q = x_t/√ᾱ satisfies q | c ~ N(μ_c, diag(v_c + σ²)) with
+//! σ² = (1-ᾱ)/ᾱ, so
+//!
+//!   responsibilities  r_c ∝ w_c · N(q; μ_c, v_c + σ²)
+//!   E[x₀ | q, c]      = μ_c + v_c/(v_c + σ²) · (q − μ_c)
+//!   E[x₀ | q]         = Σ_c r_c · E[x₀ | q, c]
+//!
+//! This is precisely the generalising denoiser the paper's neural oracles
+//! approximate; analytical estimators are scored by MSE / r² against it.
+
+use crate::data::gmm::GmmSpec;
+
+/// Closed-form population denoiser over a diagonal GMM.
+#[derive(Debug, Clone)]
+pub struct GmmOracle {
+    gmm: GmmSpec,
+    log_weights: Vec<f32>,
+}
+
+impl GmmOracle {
+    pub fn new(gmm: GmmSpec) -> GmmOracle {
+        let wsum: f32 = gmm.components.iter().map(|c| c.weight).sum();
+        let log_weights = gmm
+            .components
+            .iter()
+            .map(|c| (c.weight / wsum).ln())
+            .collect();
+        GmmOracle { gmm, log_weights }
+    }
+
+    pub fn d(&self) -> usize {
+        self.gmm.d
+    }
+
+    /// E[x₀ | x_t] under the population, unconditional.
+    pub fn denoise(&self, x_t: &[f32], alpha_bar: f32) -> Vec<f32> {
+        self.denoise_filtered(x_t, alpha_bar, None)
+    }
+
+    /// Class-conditional E[x₀ | x_t, class] (ImageNet-sim conditional rows).
+    pub fn denoise_class(&self, x_t: &[f32], alpha_bar: f32, class: u32) -> Vec<f32> {
+        self.denoise_filtered(x_t, alpha_bar, Some(class))
+    }
+
+    fn denoise_filtered(&self, x_t: &[f32], alpha_bar: f32, class: Option<u32>) -> Vec<f32> {
+        let d = self.gmm.d;
+        assert_eq!(x_t.len(), d);
+        let a = alpha_bar.clamp(1e-6, 1.0 - 1e-6);
+        let sigma2 = (1.0 - a) / a;
+        let sa = a.sqrt();
+
+        // log responsibilities
+        let mut logr = Vec::with_capacity(self.gmm.components.len());
+        let mut max_lr = f32::NEG_INFINITY;
+        for (ci, comp) in self.gmm.components.iter().enumerate() {
+            if let Some(y) = class {
+                if comp.class != y {
+                    logr.push(f32::NEG_INFINITY);
+                    continue;
+                }
+            }
+            let mut lr = self.log_weights[ci];
+            for j in 0..d {
+                let q = x_t[j] / sa;
+                let s = comp.var[j] + sigma2;
+                let diff = q - comp.mean[j];
+                lr += -0.5 * (diff * diff / s + s.ln());
+            }
+            logr.push(lr);
+            if lr > max_lr {
+                max_lr = lr;
+            }
+        }
+        debug_assert!(max_lr.is_finite(), "no components matched class filter");
+
+        let mut out = vec![0.0f32; d];
+        let mut total = 0.0f32;
+        for (ci, comp) in self.gmm.components.iter().enumerate() {
+            let lr = logr[ci];
+            if !lr.is_finite() {
+                continue;
+            }
+            let r = (lr - max_lr).exp();
+            if r < 1e-12 {
+                continue;
+            }
+            total += r;
+            for j in 0..d {
+                let q = x_t[j] / sa;
+                let shrink = comp.var[j] / (comp.var[j] + sigma2);
+                out[j] += r * (comp.mean[j] + shrink * (q - comp.mean[j]));
+            }
+        }
+        for v in out.iter_mut() {
+            *v /= total;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn two_blob() -> GmmOracle {
+        let mut g = GmmSpec::new(2);
+        g.push(0.5, vec![-3.0, 0.0], vec![0.05, 0.05], 0);
+        g.push(0.5, vec![3.0, 0.0], vec![0.05, 0.05], 1);
+        GmmOracle::new(g)
+    }
+
+    #[test]
+    fn high_noise_returns_population_mean() {
+        let o = two_blob();
+        let f = o.denoise(&[0.3, -0.2], 1e-5);
+        assert!(f[0].abs() < 0.2, "expected ~0, got {}", f[0]);
+    }
+
+    #[test]
+    fn low_noise_near_identity_on_manifold() {
+        let o = two_blob();
+        let x0 = [-3.02f32, 0.01];
+        let a: f32 = 0.999;
+        let x_t = [x0[0] * a.sqrt(), x0[1] * a.sqrt()];
+        let f = o.denoise(&x_t, a);
+        assert!((f[0] - x0[0]).abs() < 0.1, "{f:?}");
+    }
+
+    #[test]
+    fn moderate_noise_resolves_nearer_component() {
+        let o = two_blob();
+        let a: f32 = 0.5;
+        let x_t = [-2.0 * a.sqrt(), 0.0];
+        let f = o.denoise(&x_t, a);
+        assert!(f[0] < -2.0, "should commit to left blob: {f:?}");
+    }
+
+    #[test]
+    fn conditional_restricts_components() {
+        let o = two_blob();
+        // query near class 0, but condition on class 1
+        let f = o.denoise_class(&[-1.0, 0.0], 0.3, 1);
+        assert!(f[0] > 0.0, "conditional must use class-1 blob: {f:?}");
+    }
+
+    #[test]
+    fn oracle_is_smooth_in_alpha() {
+        let o = two_blob();
+        let mut rng = Pcg64::new(1);
+        let x = [rng.normal(), rng.normal()];
+        let mut prev = o.denoise(&x, 0.01);
+        for a in [0.05f32, 0.1, 0.3, 0.5, 0.8, 0.99] {
+            let f = o.denoise(&x, a);
+            let jump: f32 = f.iter().zip(&prev).map(|(p, q)| (p - q).abs()).sum();
+            assert!(jump < 8.0, "discontinuity at alpha {a}: {jump}");
+            prev = f;
+        }
+    }
+}

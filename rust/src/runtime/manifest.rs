@@ -1,0 +1,223 @@
+//! `artifacts/manifest.json` — the contract between `python/compile/aot.py`
+//! and the rust runtime: every AOT-lowered executable with its variant,
+//! preset, bucket size and input signature.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{parse, Json};
+
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    pub variant: String,
+    pub preset: String,
+    pub d: usize,
+    /// bucket size (K for steps, M for dist graphs; 0 for wiener)
+    pub k: usize,
+    /// Kamb patch size (0 when n/a)
+    pub p: usize,
+    /// PCA rank (0 when n/a)
+    pub r: usize,
+    /// input shapes, in call order
+    pub inputs: Vec<Vec<usize>>,
+}
+
+#[derive(Debug, Clone)]
+pub struct PresetMeta {
+    pub name: String,
+    pub paper_name: String,
+    pub n: usize,
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    pub d: usize,
+    pub proxy_d: usize,
+    pub classes: usize,
+    pub conditional: bool,
+    pub full_bucket: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub artifacts: Vec<ArtifactMeta>,
+    pub presets: Vec<PresetMeta>,
+    pub pca_rank: usize,
+    pub wss_blocks: usize,
+    pub kamb_patches: Vec<usize>,
+}
+
+impl Manifest {
+    pub fn load(artifacts_dir: &Path) -> Result<Manifest> {
+        let path = artifacts_dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        Self::from_json(&parse(&text)?)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Manifest> {
+        let arts = j
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .context("manifest: missing artifacts")?;
+        let artifacts = arts
+            .iter()
+            .map(|a| {
+                let inputs = a
+                    .get("inputs")
+                    .and_then(Json::as_arr)
+                    .context("artifact missing inputs")?
+                    .iter()
+                    .map(|shape| {
+                        shape
+                            .as_arr()
+                            .map(|dims| {
+                                dims.iter().filter_map(Json::as_usize).collect::<Vec<_>>()
+                            })
+                            .context("bad shape")
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                Ok(ArtifactMeta {
+                    name: a.str_field("name")?.to_string(),
+                    file: a.str_field("file")?.to_string(),
+                    variant: a.str_field("variant")?.to_string(),
+                    preset: a.str_field("preset")?.to_string(),
+                    d: a.num_field("d")? as usize,
+                    k: a.get("k").and_then(Json::as_usize).unwrap_or(0),
+                    p: a.get("p").and_then(Json::as_usize).unwrap_or(0),
+                    r: a.get("r").and_then(Json::as_usize).unwrap_or(0),
+                    inputs,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let presets = j
+            .get("presets")
+            .and_then(Json::as_arr)
+            .context("manifest: missing presets")?
+            .iter()
+            .map(|p| {
+                Ok(PresetMeta {
+                    name: p.str_field("name")?.to_string(),
+                    paper_name: p.str_field("paper_name")?.to_string(),
+                    n: p.num_field("n")? as usize,
+                    h: p.num_field("h")? as usize,
+                    w: p.num_field("w")? as usize,
+                    c: p.num_field("c")? as usize,
+                    d: p.num_field("d")? as usize,
+                    proxy_d: p.num_field("proxy_d")? as usize,
+                    classes: p.num_field("classes")? as usize,
+                    conditional: p.get("conditional").and_then(Json::as_bool).unwrap_or(false),
+                    full_bucket: p.num_field("full_bucket")? as usize,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        Ok(Manifest {
+            artifacts,
+            presets,
+            pca_rank: j.get("pca_rank").and_then(Json::as_usize).unwrap_or(32),
+            wss_blocks: j.get("wss_blocks").and_then(Json::as_usize).unwrap_or(8),
+            kamb_patches: j
+                .get("kamb_patches")
+                .and_then(Json::as_arr)
+                .map(|a| a.iter().filter_map(Json::as_usize).collect())
+                .unwrap_or_else(|| vec![3, 7]),
+        })
+    }
+
+    pub fn preset(&self, name: &str) -> Option<&PresetMeta> {
+        self.presets.iter().find(|p| p.name == name)
+    }
+
+    /// Find the artifact of `variant` for `preset` at bucket `k`
+    /// (and patch `p` for kamb variants).
+    pub fn find(&self, variant: &str, preset: &str, k: usize, p: usize) -> Option<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .find(|a| a.variant == variant && a.preset == preset && a.k == k && a.p == p)
+    }
+
+    /// Ascending bucket ladder available for (variant, preset).
+    pub fn buckets(&self, variant: &str, preset: &str) -> Vec<usize> {
+        let mut ks: Vec<usize> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.variant == variant && a.preset == preset)
+            .map(|a| a.k)
+            .collect();
+        ks.sort_unstable();
+        ks.dedup();
+        ks
+    }
+
+    /// Smallest compiled bucket that fits `want` (or the largest available).
+    pub fn bucket_for(&self, variant: &str, preset: &str, want: usize) -> Option<usize> {
+        let ks = self.buckets(variant, preset);
+        ks.iter().copied().find(|&b| b >= want).or(ks.last().copied())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_manifest() -> Json {
+        parse(
+            r#"{
+          "format": 1, "pca_rank": 32, "wss_blocks": 8, "kamb_patches": [3, 7],
+          "presets": [{"name":"moons","paper_name":"Moons","n":2000,"h":1,"w":2,
+                       "c":1,"d":2,"proxy_d":2,"classes":2,"conditional":false,
+                       "full_bucket":2048}],
+          "artifacts": [
+            {"name":"golden_step__moons__k32","file":"golden_step__moons__k32.hlo.txt",
+             "variant":"golden_step","preset":"moons","d":2,"k":32,
+             "inputs":[[2],[32,2],[32],[2]]},
+            {"name":"golden_step__moons__k2048","file":"f2","variant":"golden_step",
+             "preset":"moons","d":2,"k":2048,"inputs":[[2],[2048,2],[2048],[2]]}
+          ]
+        }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parses_and_indexes() {
+        let m = Manifest::from_json(&sample_manifest()).unwrap();
+        assert_eq!(m.artifacts.len(), 2);
+        assert_eq!(m.preset("moons").unwrap().full_bucket, 2048);
+        let a = m.find("golden_step", "moons", 32, 0).unwrap();
+        assert_eq!(a.inputs[1], vec![32, 2]);
+        assert!(m.find("golden_step", "moons", 64, 0).is_none());
+    }
+
+    #[test]
+    fn bucket_ladder_and_rounding() {
+        let m = Manifest::from_json(&sample_manifest()).unwrap();
+        assert_eq!(m.buckets("golden_step", "moons"), vec![32, 2048]);
+        assert_eq!(m.bucket_for("golden_step", "moons", 10), Some(32));
+        assert_eq!(m.bucket_for("golden_step", "moons", 33), Some(2048));
+        assert_eq!(m.bucket_for("golden_step", "moons", 99999), Some(2048));
+        assert_eq!(m.bucket_for("golden_step", "nope", 1), None);
+    }
+
+    #[test]
+    fn loads_real_manifest_when_present() {
+        let dir = std::path::Path::new("artifacts");
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(dir).unwrap();
+            assert!(m.presets.len() >= 7);
+            assert!(m.artifacts.len() > 100);
+            // every preset has a full-scan golden bucket
+            for p in &m.presets {
+                assert!(
+                    m.find("golden_step", &p.name, p.full_bucket, 0).is_some(),
+                    "{} missing full bucket",
+                    p.name
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,276 @@
+//! PJRT runtime: loads `artifacts/*.hlo.txt` (HLO text — see DESIGN.md §2),
+//! compiles them on the CPU PJRT client, and caches one
+//! `PjRtLoadedExecutable` per (variant, preset, bucket).
+//!
+//! This is the only module that touches the `xla` crate. The request path
+//! is: gather golden subset (L3) → `upload` → `run_*` dispatch →
+//! tuple-decomposed f32 outputs. Dataset-sized device buffers (the
+//! full-scan candidate matrix, the proxy table) are uploaded once and
+//! reused across steps via `DeviceTensor`.
+//!
+//! Thread model: XLA's CPU PJRT client is internally thread-safe and runs
+//! each dispatch on its Eigen pool, but the `xla` crate's wrappers hold raw
+//! pointers (auto-`!Send`). The coordinator therefore owns the runtime from
+//! a single executor thread (vLLM-style model executor); `SendRuntime` is
+//! the documented escape hatch that moves the whole runtime into that
+//! thread.
+
+pub mod manifest;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use anyhow::{Context, Result};
+
+pub use manifest::{ArtifactMeta, Manifest, PresetMeta};
+
+/// A device-resident tensor (uploaded once, reused across dispatches).
+pub struct DeviceTensor {
+    pub buffer: xla::PjRtBuffer,
+    pub dims: Vec<usize>,
+}
+
+/// Stats vector layout produced by every `*_step` graph.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StepStats {
+    pub max_logit: f32,
+    pub logsumexp: f32,
+    pub entropy: f32,
+    pub top1_weight: f32,
+}
+
+/// Output of a `*_step` dispatch.
+pub struct StepOutput {
+    pub x_prev: Vec<f32>,
+    pub f_hat: Vec<f32>,
+    pub stats: StepStats,
+}
+
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    dir: PathBuf,
+    cache: std::cell::RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    /// compile counter (perf telemetry)
+    pub compiles: std::cell::Cell<usize>,
+}
+
+impl Runtime {
+    /// Open the artifact directory and its manifest (lazy compilation).
+    pub fn new(artifacts_dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            manifest,
+            dir: artifacts_dir.to_path_buf(),
+            cache: Default::default(),
+            compiles: std::cell::Cell::new(0),
+        })
+    }
+
+    /// Fetch (compile-on-first-use) an executable by artifact name.
+    pub fn executable(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(name) {
+            return Ok(Rc::clone(exe));
+        }
+        let meta = self
+            .manifest
+            .artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .with_context(|| format!("unknown artifact `{name}`"))?;
+        let path = self.dir.join(&meta.file);
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+            .with_context(|| format!("parsing {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("compiling {name}"))?,
+        );
+        self.compiles.set(self.compiles.get() + 1);
+        self.cache
+            .borrow_mut()
+            .insert(name.to_string(), Rc::clone(&exe));
+        Ok(exe)
+    }
+
+    /// Upload an f32 tensor to the device.
+    pub fn upload(&self, data: &[f32], dims: &[usize]) -> Result<DeviceTensor> {
+        let buffer = self
+            .client
+            .buffer_from_host_buffer(data, dims, None)
+            .context("host->device upload")?;
+        Ok(DeviceTensor {
+            buffer,
+            dims: dims.to_vec(),
+        })
+    }
+
+    /// Dispatch an executable on device buffers; returns the decomposed
+    /// output tuple as f32 vectors.
+    pub fn run(&self, name: &str, args: &[&DeviceTensor]) -> Result<Vec<Vec<f32>>> {
+        let exe = self.executable(name)?;
+        let bufs: Vec<&xla::PjRtBuffer> = args.iter().map(|t| &t.buffer).collect();
+        let result = exe
+            .execute_b(&bufs)
+            .with_context(|| format!("executing {name}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .context("device->host transfer")?;
+        let parts = lit.to_tuple().context("tuple decompose")?;
+        parts
+            .into_iter()
+            .map(|p| p.to_vec::<f32>().context("literal to_vec"))
+            .collect()
+    }
+
+    /// Dispatch a `*_step` graph: (x_t, cand, mask, …, alphas) →
+    /// (x_prev, f_hat, stats).
+    pub fn run_step(&self, name: &str, args: &[&DeviceTensor]) -> Result<StepOutput> {
+        let mut outs = self.run(name, args)?;
+        anyhow::ensure!(
+            outs.len() == 3,
+            "{name}: expected 3 outputs, got {}",
+            outs.len()
+        );
+        let stats_v = outs.pop().unwrap();
+        let f_hat = outs.pop().unwrap();
+        let x_prev = outs.pop().unwrap();
+        Ok(StepOutput {
+            x_prev,
+            f_hat,
+            stats: StepStats {
+                max_logit: stats_v[0],
+                logsumexp: stats_v[1],
+                entropy: stats_v[2],
+                top1_weight: stats_v[3],
+            },
+        })
+    }
+
+    /// Dispatch a distance graph (`exact_dist` / `proxy_dist`): → one vector.
+    pub fn run_dist(&self, name: &str, args: &[&DeviceTensor]) -> Result<Vec<f32>> {
+        let mut outs = self.run(name, args)?;
+        anyhow::ensure!(outs.len() == 1, "{name}: expected 1 output");
+        Ok(outs.pop().unwrap())
+    }
+
+    pub fn cached_executables(&self) -> usize {
+        self.cache.borrow().len()
+    }
+}
+
+/// Moves a `Runtime` into the coordinator's executor thread.
+///
+/// SAFETY: the PJRT C API is thread-compatible (XLA documents PjRtClient /
+/// PjRtLoadedExecutable as safe to call from any thread); the rust wrappers
+/// are `!Send` only because they hold raw pointers. We never *share* the
+/// runtime across threads — `SendRuntime` is consumed by exactly one
+/// executor thread and all access stays on that thread afterwards.
+pub struct SendRuntime(pub Runtime);
+unsafe impl Send for SendRuntime {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn runtime() -> Option<Runtime> {
+        let dir = Path::new("artifacts");
+        if dir.join("manifest.json").exists() {
+            Some(Runtime::new(dir).unwrap())
+        } else {
+            None
+        }
+    }
+
+    #[test]
+    fn compiles_and_runs_golden_step_vs_cpu_reference() {
+        let Some(rt) = runtime() else { return };
+        let k = 32usize;
+        let d = 2usize;
+        let mut rng = crate::util::rng::Pcg64::new(1);
+        let x_t: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
+        let cand: Vec<f32> = (0..k * d).map(|_| rng.normal()).collect();
+        let mut mask = vec![0.0f32; k];
+        for m in mask.iter_mut().take(20) {
+            *m = 1.0;
+        }
+        let alphas = [0.4f32, 0.7f32];
+
+        let bx = rt.upload(&x_t, &[d]).unwrap();
+        let bc = rt.upload(&cand, &[k, d]).unwrap();
+        let bm = rt.upload(&mask, &[k]).unwrap();
+        let ba = rt.upload(&alphas, &[2]).unwrap();
+        let out = rt
+            .run_step("golden_step__moons__k32", &[&bx, &bc, &bm, &ba])
+            .unwrap();
+
+        // CPU reference: same math via StreamingSoftmax + ddim_update
+        let q: Vec<f32> = x_t.iter().map(|&v| v / alphas[0].sqrt()).collect();
+        let scale = alphas[0] / (2.0 * (1.0 - alphas[0]));
+        let items: Vec<(f32, &[f32])> = (0..20)
+            .map(|i| {
+                let row = &cand[i * d..(i + 1) * d];
+                let dd: f32 = row.iter().zip(&q).map(|(a, b)| (a - b) * (a - b)).sum();
+                (-dd * scale, row)
+            })
+            .collect();
+        let (f_ref, stats_ref) =
+            crate::denoiser::softmax::ss_aggregate(d, items.iter().copied());
+        for j in 0..d {
+            assert!(
+                (out.f_hat[j] - f_ref[j]).abs() < 1e-4,
+                "f_hat[{j}]: {} vs {}",
+                out.f_hat[j],
+                f_ref[j]
+            );
+        }
+        assert!((out.stats.top1_weight - stats_ref.top1_weight).abs() < 1e-4);
+        assert!((out.stats.entropy - stats_ref.entropy).abs() < 1e-3);
+
+        // DDIM update agreement
+        let mut rng2 = crate::util::rng::Pcg64::new(0);
+        let x_ref =
+            crate::sampler::ddim_update(&x_t, &f_ref, alphas[0], alphas[1], 0.0, &mut rng2);
+        for j in 0..d {
+            assert!((out.x_prev[j] - x_ref[j]).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn exact_dist_matches_cpu() {
+        let Some(rt) = runtime() else { return };
+        let m = 512usize;
+        let d = 2usize;
+        let mut rng = crate::util::rng::Pcg64::new(2);
+        let x_t: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
+        let cand: Vec<f32> = (0..m * d).map(|_| rng.normal()).collect();
+        let alpha = [0.25f32];
+        let bx = rt.upload(&x_t, &[d]).unwrap();
+        let bc = rt.upload(&cand, &[m, d]).unwrap();
+        let ba = rt.upload(&alpha, &[1]).unwrap();
+        let dists = rt
+            .run_dist("exact_dist__moons__k512", &[&bx, &bc, &ba])
+            .unwrap();
+        assert_eq!(dists.len(), m);
+        let q: Vec<f32> = x_t.iter().map(|&v| v / 0.5).collect();
+        for i in (0..m).step_by(37) {
+            let row = &cand[i * d..(i + 1) * d];
+            let want: f32 = row.iter().zip(&q).map(|(a, b)| (a - b) * (a - b)).sum();
+            assert!((dists[i] - want).abs() < 1e-3, "{i}: {} vs {want}", dists[i]);
+        }
+    }
+
+    #[test]
+    fn executable_cache_hits() {
+        let Some(rt) = runtime() else { return };
+        let _ = rt.executable("golden_step__moons__k32").unwrap();
+        let before = rt.compiles.get();
+        let _ = rt.executable("golden_step__moons__k32").unwrap();
+        assert_eq!(rt.compiles.get(), before);
+        assert!(rt.cached_executables() >= 1);
+    }
+}

@@ -1,0 +1,194 @@
+//! The paper's *Counter-Monotonic Schedule* (Sec. 3.4): retrieval scope m_t
+//! grows and aggregation budget k_t shrinks as noise decreases.
+//!
+//!   m_t = ⌊ m_min + (m_max - m_min) · (1 - g(σ_t)) ⌋     (Eq. 4)
+//!   k_t = ⌊ k_min + (k_max - k_min) ·      g(σ_t)  ⌋     (Eq. 6)
+//!
+//! Defaults follow Sec. 4.1: m_min = k_max = N/10, m_max = N/4,
+//! k_min = N/20. XLA executables need static shapes, so both budgets are
+//! rounded *up* to the bucket ladder compiled by aot.py; the mask handles
+//! the padding.
+
+use super::noise::NoiseSchedule;
+
+/// Per-step retrieval/aggregation budget.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StepBudget {
+    /// coarse candidate pool size m_t (exact, pre-bucketing)
+    pub m: usize,
+    /// golden subset size k_t (exact, pre-bucketing)
+    pub k: usize,
+    /// m_t rounded up to a compiled bucket
+    pub m_bucket: usize,
+    /// k_t rounded up to a compiled bucket
+    pub k_bucket: usize,
+}
+
+/// Schedule generator bound to a dataset size and bucket ladder.
+#[derive(Debug, Clone)]
+pub struct BudgetSchedule {
+    pub n: usize,
+    pub m_min: usize,
+    pub m_max: usize,
+    pub k_min: usize,
+    pub k_max: usize,
+    buckets: Vec<usize>, // ascending compiled bucket ladder
+}
+
+impl BudgetSchedule {
+    /// Paper defaults: m_min = k_max = N/10, m_max = N/4, k_min = N/20.
+    pub fn paper_defaults(n: usize, buckets: &[usize]) -> BudgetSchedule {
+        BudgetSchedule::new(n, n / 10, n / 4, n / 20, n / 10, buckets)
+    }
+
+    pub fn new(
+        n: usize,
+        m_min: usize,
+        m_max: usize,
+        k_min: usize,
+        k_max: usize,
+        buckets: &[usize],
+    ) -> BudgetSchedule {
+        assert!(m_min <= m_max, "m_min {m_min} > m_max {m_max}");
+        assert!(k_min <= k_max, "k_min {k_min} > k_max {k_max}");
+        assert!(k_max <= m_max, "k_max must fit in the candidate pool");
+        let mut buckets = buckets.to_vec();
+        buckets.sort_unstable();
+        buckets.dedup();
+        assert!(!buckets.is_empty());
+        BudgetSchedule {
+            n,
+            m_min: m_min.max(1),
+            m_max: m_max.max(1),
+            k_min: k_min.max(1),
+            k_max: k_max.max(1),
+            buckets,
+        }
+    }
+
+    /// Round a budget up to the nearest compiled bucket (or the largest
+    /// bucket when it exceeds the ladder — mask covers the rest).
+    pub fn to_bucket(&self, want: usize) -> usize {
+        for &b in &self.buckets {
+            if b >= want {
+                return b;
+            }
+        }
+        *self.buckets.last().unwrap()
+    }
+
+    /// Budgets at sampling point i of `sched` (Eqs. 4 & 6).
+    pub fn at(&self, sched: &NoiseSchedule, i: usize) -> StepBudget {
+        let g = sched.g(i) as f64;
+        let m = (self.m_min as f64 + (self.m_max - self.m_min) as f64 * (1.0 - g)).floor()
+            as usize;
+        let k = (self.k_min as f64 + (self.k_max - self.k_min) as f64 * g).floor() as usize;
+        let m = m.clamp(1, self.n);
+        let k = k.clamp(1, m);
+        StepBudget {
+            m,
+            k,
+            m_bucket: self.to_bucket(m),
+            k_bucket: self.to_bucket(k),
+        }
+    }
+
+    /// Full trajectory of budgets for a schedule.
+    pub fn trajectory(&self, sched: &NoiseSchedule) -> Vec<StepBudget> {
+        (0..sched.steps).map(|i| self.at(sched, i)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::noise::ScheduleKind;
+    use crate::util::prop::{forall, gen};
+
+    const BUCKETS: &[usize] = &[32, 128, 512, 2048, 8192, 16384];
+
+    fn sched() -> NoiseSchedule {
+        NoiseSchedule::new(ScheduleKind::DdpmLinear, 10)
+    }
+
+    #[test]
+    fn counter_monotonic() {
+        let b = BudgetSchedule::paper_defaults(10_000, BUCKETS);
+        let traj = b.trajectory(&sched());
+        for w in traj.windows(2) {
+            assert!(w[1].m >= w[0].m, "m must grow as noise decreases");
+            assert!(w[1].k <= w[0].k, "k must shrink as noise decreases");
+        }
+        // endpoints approach the configured extremes (g(σ) does not reach
+        // exactly {0,1} on a finite schedule, so allow a 10% band)
+        let k_range = b.k_max - b.k_min;
+        let m_range = b.m_max - b.m_min;
+        assert!(traj[0].k >= b.k_max - k_range / 10);
+        assert!(traj.last().unwrap().k <= b.k_min + k_range / 10);
+        assert!(traj.last().unwrap().m >= b.m_max - m_range / 10);
+        assert!(traj[0].m <= b.m_min + m_range / 10);
+    }
+
+    #[test]
+    fn paper_default_ratios() {
+        let b = BudgetSchedule::paper_defaults(50_000, BUCKETS);
+        assert_eq!(b.m_min, 5_000);
+        assert_eq!(b.m_max, 12_500);
+        assert_eq!(b.k_min, 2_500);
+        assert_eq!(b.k_max, 5_000);
+    }
+
+    #[test]
+    fn bucket_rounding_covers_budget() {
+        let b = BudgetSchedule::paper_defaults(10_000, BUCKETS);
+        for i in 0..10 {
+            let s = b.at(&sched(), i);
+            assert!(s.k_bucket >= s.k || s.k_bucket == *BUCKETS.last().unwrap());
+            assert!(s.m_bucket >= s.m || s.m_bucket == *BUCKETS.last().unwrap());
+            assert!(BUCKETS.contains(&s.k_bucket));
+        }
+    }
+
+    #[test]
+    fn k_never_exceeds_m() {
+        forall(17, 200, |rng| {
+            let n = gen::usize_in(rng, 100, 100_000);
+            let b = BudgetSchedule::paper_defaults(n, BUCKETS);
+            let steps = gen::usize_in(rng, 2, 100);
+            let sched = NoiseSchedule::new(ScheduleKind::Cosine, steps);
+            for i in 0..steps {
+                let s = b.at(&sched, i);
+                crate::prop_assert!(s.k <= s.m, "k {} > m {} at step {i} n {n}", s.k, s.m);
+                crate::prop_assert!(s.k >= 1 && s.m <= n, "bounds violated");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn budgets_within_configured_range() {
+        forall(23, 100, |rng| {
+            let n = gen::usize_in(rng, 1_000, 60_000);
+            let b = BudgetSchedule::paper_defaults(n, BUCKETS);
+            let sched = NoiseSchedule::new(ScheduleKind::EdmVp, 10);
+            for i in 0..10 {
+                let s = b.at(&sched, i);
+                crate::prop_assert!(
+                    s.m >= b.m_min && s.m <= b.m_max,
+                    "m {} outside [{}, {}]",
+                    s.m,
+                    b.m_min,
+                    b.m_max
+                );
+                crate::prop_assert!(
+                    s.k >= b.k_min && s.k <= b.k_max,
+                    "k {} outside [{}, {}]",
+                    s.k,
+                    b.k_min,
+                    b.k_max
+                );
+            }
+            Ok(())
+        });
+    }
+}

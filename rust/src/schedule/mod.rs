@@ -1,0 +1,8 @@
+//! Diffusion noise schedules and the paper's counter-monotonic retrieval /
+//! aggregation budget schedules (Sec. 3.4).
+
+pub mod budget;
+pub mod noise;
+
+pub use budget::{BudgetSchedule, StepBudget};
+pub use noise::{NoiseSchedule, ScheduleKind};

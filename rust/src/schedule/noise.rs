@@ -1,0 +1,233 @@
+//! Noise schedules: cumulative signal level ᾱ_t for the DDPM convention
+//! x_t = √ᾱ_t x₀ + √(1-ᾱ_t) ε, plus EDM-VP / EDM-VE parameterisations
+//! (Karras et al. 2022) used by Table 4's "diverse neural denoisers" rows.
+//!
+//! All schedules expose the same interface: a descending list of timesteps
+//! (t = T-1 … 0 over `steps` sampling points, as in 10-step DDIM) with
+//! `alpha_bar(i)` the signal level at sampling point i and the derived
+//! noise-to-signal ratio σ_t² = (1-ᾱ)/ᾱ used in the analytical logits.
+
+/// Which schedule family to use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScheduleKind {
+    /// DDPM linear-β (Ho et al. 2020), T=1000 reference grid.
+    DdpmLinear,
+    /// Cosine ᾱ (Nichol & Dhariwal).
+    Cosine,
+    /// EDM variance-preserving parameterisation.
+    EdmVp,
+    /// EDM variance-exploding parameterisation (σ ∈ [σ_min, σ_max]).
+    EdmVe,
+}
+
+impl ScheduleKind {
+    pub fn parse(s: &str) -> Option<ScheduleKind> {
+        match s {
+            "ddpm" | "ddpm-linear" => Some(ScheduleKind::DdpmLinear),
+            "cosine" => Some(ScheduleKind::Cosine),
+            "edm-vp" => Some(ScheduleKind::EdmVp),
+            "edm-ve" => Some(ScheduleKind::EdmVe),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ScheduleKind::DdpmLinear => "ddpm",
+            ScheduleKind::Cosine => "cosine",
+            ScheduleKind::EdmVp => "edm-vp",
+            ScheduleKind::EdmVe => "edm-ve",
+        }
+    }
+}
+
+/// A sampled schedule: `steps` points, index 0 = highest noise (start of
+/// reverse diffusion), index steps-1 = lowest noise (end).
+#[derive(Debug, Clone)]
+pub struct NoiseSchedule {
+    pub kind: ScheduleKind,
+    pub steps: usize,
+    alpha_bars: Vec<f32>, // per sampling point, ascending signal
+}
+
+const T_REF: usize = 1000;
+
+impl NoiseSchedule {
+    pub fn new(kind: ScheduleKind, steps: usize) -> NoiseSchedule {
+        assert!(steps >= 1);
+        // Reference ᾱ grid over T_REF steps, then strided DDIM-style.
+        let grid: Vec<f64> = match kind {
+            ScheduleKind::DdpmLinear => {
+                let beta0 = 1e-4;
+                let beta1 = 0.02;
+                let mut acc = 1.0f64;
+                (0..T_REF)
+                    .map(|t| {
+                        let beta = beta0 + (beta1 - beta0) * t as f64 / (T_REF - 1) as f64;
+                        acc *= 1.0 - beta;
+                        acc
+                    })
+                    .collect()
+            }
+            ScheduleKind::Cosine => {
+                let s = 0.008;
+                let f = |t: f64| ((t + s) / (1.0 + s) * std::f64::consts::FRAC_PI_2).cos().powi(2);
+                (0..T_REF)
+                    .map(|t| {
+                        let x = (t as f64 + 1.0) / T_REF as f64;
+                        (f(x) / f(0.0)).clamp(1e-6, 0.99999)
+                    })
+                    .collect()
+            }
+            ScheduleKind::EdmVp => {
+                // VP: sigma(t)^2 = exp(0.5 beta_d t^2 + beta_min t) - 1,
+                // alpha_bar = 1/(1+sigma^2).
+                let beta_d = 19.9;
+                let beta_min = 0.1;
+                (0..T_REF)
+                    .map(|i| {
+                        let t = 1e-3 + (1.0 - 1e-3) * (i as f64 + 1.0) / T_REF as f64;
+                        let sigma2 = (0.5 * beta_d * t * t + beta_min * t).exp() - 1.0;
+                        (1.0 / (1.0 + sigma2)).clamp(1e-6, 0.99999)
+                    })
+                    .collect()
+            }
+            ScheduleKind::EdmVe => {
+                // VE: sigma geometric in [0.02, 100]; map to alpha_bar via
+                // the scaled-query equivalence alpha = 1/(1+sigma^2).
+                let (s_min, s_max) = (0.02f64, 100.0f64);
+                (0..T_REF)
+                    .map(|i| {
+                        let u = (i as f64 + 1.0) / T_REF as f64;
+                        let sigma = s_min * (s_max / s_min).powf(u);
+                        (1.0 / (1.0 + sigma * sigma)).clamp(1e-9, 0.99999)
+                    })
+                    .collect()
+            }
+        };
+
+        // DDIM stride: pick `steps` indices from the reference grid,
+        // descending in t (ascending in signal along sampling order).
+        let mut alpha_bars = Vec::with_capacity(steps);
+        for i in 0..steps {
+            // i = 0 -> deepest noise (t = T-1); i = steps-1 -> t = 0
+            let frac = if steps == 1 {
+                1.0
+            } else {
+                1.0 - i as f64 / (steps - 1) as f64
+            };
+            let idx = ((T_REF - 1) as f64 * frac).round() as usize;
+            alpha_bars.push(grid[idx] as f32);
+        }
+        NoiseSchedule {
+            kind,
+            steps,
+            alpha_bars,
+        }
+    }
+
+    /// Signal level ᾱ at sampling point i (0 = highest noise).
+    pub fn alpha_bar(&self, i: usize) -> f32 {
+        self.alpha_bars[i]
+    }
+
+    /// ᾱ for the *next* sampling point (i+1), 1.0 at the terminal step.
+    pub fn alpha_prev(&self, i: usize) -> f32 {
+        if i + 1 < self.steps {
+            self.alpha_bars[i + 1]
+        } else {
+            1.0
+        }
+    }
+
+    /// Noise-to-signal ratio σ_t² = (1-ᾱ)/ᾱ.
+    pub fn sigma2(&self, i: usize) -> f32 {
+        let a = self.alpha_bar(i);
+        (1.0 - a) / a
+    }
+
+    /// Normalised noise level g(σ_t) ∈ [0,1] used by the budget schedules
+    /// (Eqs. 4 & 6): g = σ²/(1+σ²) = 1-ᾱ. 1 at pure noise, 0 at data.
+    pub fn g(&self, i: usize) -> f32 {
+        1.0 - self.alpha_bar(i)
+    }
+
+    /// The analytical-logit scale 1/(2σ_t²).
+    pub fn logit_scale(&self, i: usize) -> f32 {
+        1.0 / (2.0 * self.sigma2(i)).max(1e-12)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alpha_is_monotone_increasing_along_sampling() {
+        for kind in [
+            ScheduleKind::DdpmLinear,
+            ScheduleKind::Cosine,
+            ScheduleKind::EdmVp,
+            ScheduleKind::EdmVe,
+        ] {
+            let s = NoiseSchedule::new(kind, 10);
+            for i in 1..s.steps {
+                assert!(
+                    s.alpha_bar(i) > s.alpha_bar(i - 1),
+                    "{kind:?} not monotone at {i}"
+                );
+            }
+            assert!(s.alpha_bar(0) < 0.1, "{kind:?} should start noisy");
+            assert!(s.alpha_bar(s.steps - 1) > 0.5, "{kind:?} should end clean");
+        }
+    }
+
+    #[test]
+    fn g_is_in_unit_interval_and_decreasing() {
+        let s = NoiseSchedule::new(ScheduleKind::DdpmLinear, 25);
+        for i in 0..s.steps {
+            assert!((0.0..=1.0).contains(&s.g(i)));
+            if i > 0 {
+                assert!(s.g(i) < s.g(i - 1));
+            }
+        }
+    }
+
+    #[test]
+    fn alpha_prev_terminal_is_one() {
+        let s = NoiseSchedule::new(ScheduleKind::Cosine, 10);
+        assert_eq!(s.alpha_prev(9), 1.0);
+        assert_eq!(s.alpha_prev(3), s.alpha_bar(4));
+    }
+
+    #[test]
+    fn sigma2_matches_alpha() {
+        let s = NoiseSchedule::new(ScheduleKind::EdmVp, 10);
+        for i in 0..10 {
+            let a = s.alpha_bar(i);
+            assert!((s.sigma2(i) - (1.0 - a) / a).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn ve_spans_the_karras_sigma_range() {
+        // VE: sigma in [0.02, 100] geometric — huge dynamic range, with a
+        // much cleaner terminal step than VP.
+        let ve = NoiseSchedule::new(ScheduleKind::EdmVe, 10);
+        assert!(ve.sigma2(0) > 1e3);
+        assert!(ve.sigma2(9) < 1e-2);
+    }
+
+    #[test]
+    fn parse_names_roundtrip() {
+        for kind in [
+            ScheduleKind::DdpmLinear,
+            ScheduleKind::Cosine,
+            ScheduleKind::EdmVp,
+            ScheduleKind::EdmVe,
+        ] {
+            assert_eq!(ScheduleKind::parse(kind.name()), Some(kind));
+        }
+        assert_eq!(ScheduleKind::parse("bogus"), None);
+    }
+}

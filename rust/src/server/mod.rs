@@ -1,0 +1,254 @@
+//! TCP line-JSON front end for the engine (one JSON document per line).
+//!
+//! Protocol:
+//!   → {"op":"ping"}                                  ← {"ok":true,"pong":true}
+//!   → {"op":"stats"}                                 ← {"ok":true,"stats":{…}}
+//!   → {"op":"generate","method":"golddiff","seed":1[,"class":3]}
+//!                                                    ← {"ok":true,"id":…,"sample":[…],…}
+//! Queue-full responses carry `"ok":false,"error":"busy"` — the bounded
+//! queue's backpressure surfaced to clients (HTTP-429 analogue).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::queue::SubmitError;
+use crate::coordinator::Engine;
+use crate::denoiser::DenoiserKind;
+use crate::util::json::{parse, Json};
+
+/// A running server (owns the accept thread).
+pub struct Server {
+    pub addr: std::net::SocketAddr,
+    shutdown: Arc<std::sync::atomic::AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind `addr` (e.g. "127.0.0.1:0") and serve `engine` until shutdown.
+    pub fn start(engine: Arc<Engine>, addr: &str) -> Result<Server> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let shutdown = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let sd = Arc::clone(&shutdown);
+        let handle = std::thread::Builder::new()
+            .name("golddiff-server".into())
+            .spawn(move || {
+                let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
+                while !sd.load(std::sync::atomic::Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            let eng = Arc::clone(&engine);
+                            let sd2 = Arc::clone(&sd);
+                            conns.push(std::thread::spawn(move || {
+                                let _ = handle_conn(stream, eng, sd2);
+                            }));
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(std::time::Duration::from_millis(10));
+                        }
+                        Err(_) => break,
+                    }
+                }
+                for c in conns {
+                    let _ = c.join();
+                }
+            })?;
+        Ok(Server {
+            addr: local,
+            shutdown,
+            handle: Some(handle),
+        })
+    }
+
+    pub fn stop(mut self) {
+        self.shutdown
+            .store(true, std::sync::atomic::Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    engine: Arc<Engine>,
+    shutdown: Arc<std::sync::atomic::AtomicBool>,
+) -> Result<()> {
+    // periodic read timeout so connection threads observe shutdown instead
+    // of blocking forever in read_line (otherwise Server::stop deadlocks
+    // joining a thread parked on a live but idle client)
+    stream.set_read_timeout(Some(std::time::Duration::from_millis(200)))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut stream = stream;
+    let mut line = String::new();
+    loop {
+        match reader.read_line(&mut line) {
+            Ok(0) => return Ok(()), // client closed
+            Ok(_) => {
+                let reply = match handle_line(line.trim(), &engine) {
+                    Ok(j) => j,
+                    Err(e) => {
+                        let mut j = Json::obj();
+                        j.set("ok", false).set("error", e.to_string());
+                        j
+                    }
+                };
+                line.clear();
+                stream.write_all(reply.to_string_compact().as_bytes())?;
+                stream.write_all(b"\n")?;
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                if shutdown.load(std::sync::atomic::Ordering::Relaxed) {
+                    return Ok(());
+                }
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+}
+
+fn handle_line(line: &str, engine: &Engine) -> Result<Json> {
+    let req = parse(line)?;
+    let op = req.str_field("op")?;
+    match op {
+        "ping" => {
+            let mut j = Json::obj();
+            j.set("ok", true)
+                .set("pong", true)
+                .set("preset", engine.preset.as_str());
+            Ok(j)
+        }
+        "stats" => {
+            let mut j = Json::obj();
+            j.set("ok", true).set("stats", engine.stats_json());
+            Ok(j)
+        }
+        "generate" => {
+            let method = req
+                .get("method")
+                .and_then(Json::as_str)
+                .and_then(DenoiserKind::parse)
+                .unwrap_or(DenoiserKind::GoldDiff);
+            let seed = req.get("seed").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+            let class = req.get("class").and_then(Json::as_f64).map(|c| c as u32);
+            match engine.try_submit(method, seed, class) {
+                Ok(rx) => {
+                    let resp = rx.recv().context("engine dropped request")?;
+                    let mut j = Json::obj();
+                    j.set("ok", true)
+                        .set("id", resp.id)
+                        .set("latency_secs", resp.latency_secs)
+                        .set("queue_secs", resp.queue_secs)
+                        .set("steps", resp.steps.len())
+                        .set("sample", resp.sample.as_slice());
+                    Ok(j)
+                }
+                Err(SubmitError::Full) => {
+                    let mut j = Json::obj();
+                    j.set("ok", false).set("error", "busy");
+                    Ok(j)
+                }
+                Err(SubmitError::Closed) => anyhow::bail!("engine shut down"),
+            }
+        }
+        other => anyhow::bail!("unknown op `{other}`"),
+    }
+}
+
+/// Blocking line-JSON client.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    stream: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: &std::net::SocketAddr) -> Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        Ok(Client {
+            reader: BufReader::new(stream.try_clone()?),
+            stream,
+        })
+    }
+
+    pub fn call(&mut self, req: &Json) -> Result<Json> {
+        self.stream.write_all(req.to_string_compact().as_bytes())?;
+        self.stream.write_all(b"\n")?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        parse(line.trim())
+    }
+
+    pub fn ping(&mut self) -> Result<bool> {
+        let mut j = Json::obj();
+        j.set("op", "ping");
+        Ok(self.call(&j)?.get("pong").and_then(Json::as_bool) == Some(true))
+    }
+
+    pub fn generate(&mut self, method: &str, seed: u64, class: Option<u32>) -> Result<Json> {
+        let mut j = Json::obj();
+        j.set("op", "generate").set("method", method).set("seed", seed);
+        if let Some(c) = class {
+            j.set("class", c as usize);
+        }
+        self.call(&j)
+    }
+
+    pub fn stats(&mut self) -> Result<Json> {
+        let mut j = Json::obj();
+        j.set("op", "stats");
+        self.call(&j)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::EngineConfig;
+
+    #[test]
+    fn serves_ping_generate_stats_over_tcp() {
+        if !std::path::Path::new("artifacts/manifest.json").exists() {
+            return;
+        }
+        let cfg = EngineConfig {
+            preset: "moons".into(),
+            data_dir: std::env::temp_dir().join("golddiff_server_test"),
+            ..Default::default()
+        };
+        let engine = Arc::new(Engine::start(cfg).unwrap());
+        let server = Server::start(Arc::clone(&engine), "127.0.0.1:0").unwrap();
+        let mut client = Client::connect(&server.addr).unwrap();
+
+        assert!(client.ping().unwrap());
+
+        let resp = client.generate("golddiff", 3, None).unwrap();
+        assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true));
+        assert_eq!(resp.get("sample").unwrap().as_arr().unwrap().len(), 2);
+
+        let stats = client.stats().unwrap();
+        assert!(
+            stats
+                .get("stats")
+                .unwrap()
+                .get("completed")
+                .unwrap()
+                .as_f64()
+                .unwrap()
+                >= 1.0
+        );
+
+        let bad = client
+            .call(&crate::util::json::parse(r#"{"op":"wat"}"#).unwrap())
+            .unwrap();
+        assert_eq!(bad.get("ok").and_then(Json::as_bool), Some(false));
+
+        server.stop();
+    }
+}

@@ -1,0 +1,161 @@
+//! Tiny declarative CLI argument parser (clap is not available offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments
+//! and subcommand dispatch; generates usage text from registered options.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct Args {
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw argv (excluding program name / subcommand).
+    pub fn parse(raw: &[String]) -> Args {
+        let mut options = BTreeMap::new();
+        let mut flags = Vec::new();
+        let mut positional = Vec::new();
+        let mut i = 0;
+        while i < raw.len() {
+            let a = &raw[i];
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    options.insert(k.to_string(), v.to_string());
+                } else if i + 1 < raw.len() && !raw[i + 1].starts_with("--") {
+                    options.insert(stripped.to_string(), raw[i + 1].clone());
+                    i += 1;
+                } else {
+                    flags.push(stripped.to_string());
+                }
+            } else {
+                positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Args {
+            options,
+            flags,
+            positional,
+        }
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(String::as_str)
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key) || self.get(key) == Some("true")
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+/// Subcommand registry with usage rendering.
+pub struct Cli {
+    pub name: &'static str,
+    pub about: &'static str,
+    commands: Vec<(&'static str, &'static str)>,
+}
+
+impl Cli {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Cli {
+            name,
+            about,
+            commands: Vec::new(),
+        }
+    }
+
+    pub fn command(mut self, cmd: &'static str, help: &'static str) -> Self {
+        self.commands.push((cmd, help));
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut out = format!("{} — {}\n\nUSAGE:\n  {} <command> [options]\n\nCOMMANDS:\n", self.name, self.about, self.name);
+        for (cmd, help) in &self.commands {
+            out.push_str(&format!("  {cmd:<18} {help}\n"));
+        }
+        out
+    }
+
+    /// Split argv into (subcommand, args). Returns None when help is needed.
+    pub fn dispatch(&self, argv: &[String]) -> Option<(String, Args)> {
+        if argv.is_empty() || argv[0] == "help" || argv[0] == "--help" || argv[0] == "-h" {
+            return None;
+        }
+        let cmd = argv[0].clone();
+        if !self.commands.iter().any(|(c, _)| *c == cmd) {
+            return None;
+        }
+        Some((cmd, Args::parse(&argv[1..])))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(items: &[&str]) -> Vec<String> {
+        items.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_key_value_both_styles() {
+        let a = Args::parse(&sv(&["--k", "8", "--preset=cifar-sim", "pos1"]));
+        assert_eq!(a.usize_or("k", 0), 8);
+        assert_eq!(a.get("preset"), Some("cifar-sim"));
+        assert_eq!(a.positional(), &["pos1".to_string()]);
+    }
+
+    #[test]
+    fn flags_without_values() {
+        let a = Args::parse(&sv(&["--verbose", "--n", "5"]));
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+        assert_eq!(a.usize_or("n", 0), 5);
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = Args::parse(&sv(&["--all"]));
+        assert!(a.flag("all"));
+    }
+
+    #[test]
+    fn dispatch_known_and_unknown() {
+        let cli = Cli::new("golddiff", "test").command("serve", "run server");
+        assert!(cli.dispatch(&sv(&["serve", "--port", "8080"])).is_some());
+        assert!(cli.dispatch(&sv(&["nope"])).is_none());
+        assert!(cli.dispatch(&sv(&[])).is_none());
+        assert!(cli.usage().contains("serve"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(&sv(&[]));
+        assert_eq!(a.f64_or("lr", 0.5), 0.5);
+        assert_eq!(a.get_or("preset", "moons"), "moons");
+    }
+}

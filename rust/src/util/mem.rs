@@ -1,0 +1,98 @@
+//! Process-memory probes (peak RSS) — the "Memory (GB)" column of the
+//! paper's Tables 2 and 7 — plus a lightweight logical-bytes tracker for
+//! attributing working-set size to a single denoiser.
+
+use std::fs;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Peak resident set size of this process in bytes (VmHWM from
+/// /proc/self/status). Returns 0 on non-Linux or parse failure.
+pub fn peak_rss_bytes() -> u64 {
+    read_status_kib("VmHWM:").map(|k| k * 1024).unwrap_or(0)
+}
+
+/// Current resident set size in bytes.
+pub fn current_rss_bytes() -> u64 {
+    read_status_kib("VmRSS:").map(|k| k * 1024).unwrap_or(0)
+}
+
+fn read_status_kib(field: &str) -> Option<u64> {
+    let status = fs::read_to_string("/proc/self/status").ok()?;
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix(field) {
+            let kib: u64 = rest.trim().trim_end_matches(" kB").trim().parse().ok()?;
+            return Some(kib);
+        }
+    }
+    None
+}
+
+/// Logical working-set tracker: denoisers report the buffers they allocate
+/// so the per-method memory column is attributable (process RSS is shared
+/// across methods within one bench run).
+#[derive(Debug, Default)]
+pub struct WorkingSet {
+    current: AtomicU64,
+    peak: AtomicU64,
+}
+
+impl WorkingSet {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn alloc(&self, bytes: u64) {
+        let now = self.current.fetch_add(bytes, Ordering::Relaxed) + bytes;
+        self.peak.fetch_max(now, Ordering::Relaxed);
+    }
+
+    pub fn free(&self, bytes: u64) {
+        self.current.fetch_sub(bytes.min(self.current.load(Ordering::Relaxed)), Ordering::Relaxed);
+    }
+
+    pub fn peak_bytes(&self) -> u64 {
+        self.peak.load(Ordering::Relaxed)
+    }
+
+    pub fn current_bytes(&self) -> u64 {
+        self.current.load(Ordering::Relaxed)
+    }
+
+    pub fn reset(&self) {
+        self.current.store(0, Ordering::Relaxed);
+        self.peak.store(0, Ordering::Relaxed);
+    }
+}
+
+pub fn gib(bytes: u64) -> f64 {
+    bytes as f64 / (1u64 << 30) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rss_is_positive_on_linux() {
+        assert!(peak_rss_bytes() > 0);
+        assert!(current_rss_bytes() > 0);
+    }
+
+    #[test]
+    fn working_set_tracks_peak() {
+        let ws = WorkingSet::new();
+        ws.alloc(100);
+        ws.alloc(50);
+        ws.free(120);
+        ws.alloc(10);
+        assert_eq!(ws.peak_bytes(), 150);
+        assert!(ws.current_bytes() <= 40);
+        ws.reset();
+        assert_eq!(ws.peak_bytes(), 0);
+    }
+
+    #[test]
+    fn gib_conversion() {
+        assert!((gib(1 << 30) - 1.0).abs() < 1e-12);
+    }
+}

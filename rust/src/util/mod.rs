@@ -1,0 +1,13 @@
+//! Offline-friendly substrates: the registry in this image only carries the
+//! `xla` crate and its build deps, so JSON, CLI parsing, RNG, the thread
+//! pool, property testing and RSS probing are implemented here instead of
+//! pulled from crates.io. Each is small, documented and unit-tested.
+
+pub mod cli;
+pub mod json;
+pub mod mem;
+pub mod pgm;
+pub mod prop;
+pub mod rng;
+pub mod threadpool;
+pub mod timer;

@@ -1,0 +1,104 @@
+//! Tiny PPM/PGM image writer — dumps generated samples as viewable images
+//! (the repo's analogue of the paper's qualitative Figs. 4/5 grids).
+//!
+//! Samples live in [-1, 1] (tanh-bounded synthesis); values are clamped and
+//! mapped to 8-bit. Binary P5 (grayscale) / P6 (RGB) formats, zero deps.
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::Result;
+
+/// Write one flattened [h × w × c] sample (c ∈ {1, 3}) as PGM/PPM.
+pub fn write_image(path: &Path, x: &[f32], h: usize, w: usize, c: usize) -> Result<()> {
+    anyhow::ensure!(c == 1 || c == 3, "c must be 1 or 3, got {c}");
+    anyhow::ensure!(x.len() == h * w * c, "shape mismatch");
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut out = std::io::BufWriter::new(std::fs::File::create(path)?);
+    let magic = if c == 1 { "P5" } else { "P6" };
+    write!(out, "{magic}\n{w} {h}\n255\n")?;
+    let bytes: Vec<u8> = x.iter().map(|&v| to_u8(v)).collect();
+    out.write_all(&bytes)?;
+    Ok(())
+}
+
+/// Tile a list of equally-shaped samples into one grid image with a 1-px
+/// separator, `cols` tiles per row.
+pub fn write_grid(
+    path: &Path,
+    samples: &[Vec<f32>],
+    h: usize,
+    w: usize,
+    c: usize,
+    cols: usize,
+) -> Result<()> {
+    anyhow::ensure!(!samples.is_empty());
+    let cols = cols.max(1).min(samples.len());
+    let rows = samples.len().div_ceil(cols);
+    let gw = cols * (w + 1) - 1;
+    let gh = rows * (h + 1) - 1;
+    let mut grid = vec![-1.0f32; gh * gw * c]; // separators at black
+    for (si, s) in samples.iter().enumerate() {
+        let (gr, gc) = (si / cols, si % cols);
+        let (oy, ox) = (gr * (h + 1), gc * (w + 1));
+        for y in 0..h {
+            for x in 0..w {
+                for ch in 0..c {
+                    grid[((oy + y) * gw + ox + x) * c + ch] = s[(y * w + x) * c + ch];
+                }
+            }
+        }
+    }
+    write_image(path, &grid, gh, gw, c)
+}
+
+#[inline]
+fn to_u8(v: f32) -> u8 {
+    (((v.clamp(-1.0, 1.0) + 1.0) * 0.5) * 255.0).round() as u8
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_valid_ppm_header_and_size() {
+        let dir = std::env::temp_dir().join("golddiff_pgm_test");
+        let path = dir.join("t.ppm");
+        let x = vec![0.0f32; 4 * 5 * 3];
+        write_image(&path, &x, 4, 5, 3).unwrap();
+        let data = std::fs::read(&path).unwrap();
+        assert!(data.starts_with(b"P6\n5 4\n255\n"));
+        assert_eq!(data.len(), 11 + 4 * 5 * 3);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn value_mapping_clamps() {
+        assert_eq!(to_u8(-2.0), 0);
+        assert_eq!(to_u8(-1.0), 0);
+        assert_eq!(to_u8(1.0), 255);
+        assert_eq!(to_u8(0.0), 128);
+    }
+
+    #[test]
+    fn grid_tiles_with_separators() {
+        let dir = std::env::temp_dir().join("golddiff_pgm_test2");
+        let path = dir.join("g.pgm");
+        let samples = vec![vec![1.0f32; 4], vec![0.0f32; 4], vec![-1.0f32; 4]];
+        write_grid(&path, &samples, 2, 2, 1, 2).unwrap();
+        let data = std::fs::read(&path).unwrap();
+        // 2 cols, 2 rows -> 5x5 grid
+        assert!(data.starts_with(b"P5\n5 5\n255\n"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_bad_shapes() {
+        let p = std::env::temp_dir().join("x.pgm");
+        assert!(write_image(&p, &[0.0; 4], 2, 2, 2).is_err());
+        assert!(write_image(&p, &[0.0; 3], 2, 2, 1).is_err());
+    }
+}

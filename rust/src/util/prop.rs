@@ -1,0 +1,98 @@
+//! Hand-rolled property-testing helper (proptest is not available offline).
+//!
+//! `forall` runs a property over `n` generated cases from a seeded PCG
+//! stream and, on failure, reports the failing case number and seed so the
+//! exact case can be replayed deterministically. Generators are plain
+//! closures over `Pcg64`, composed with ordinary rust code.
+
+use super::rng::Pcg64;
+
+/// Run `prop(case_rng)` for `cases` deterministic cases derived from `seed`.
+/// Panics with the replay seed on the first failing case.
+pub fn forall<F>(seed: u64, cases: usize, mut prop: F)
+where
+    F: FnMut(&mut Pcg64) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let case_seed = seed.wrapping_mul(0x9e37_79b9_7f4a_7c15).wrapping_add(case as u64);
+        let mut rng = Pcg64::new(case_seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property failed at case {case}/{cases} (replay seed {case_seed}): {msg}");
+        }
+    }
+}
+
+/// Generator helpers.
+pub mod gen {
+    use super::Pcg64;
+
+    pub fn usize_in(rng: &mut Pcg64, lo: usize, hi: usize) -> usize {
+        lo + rng.below(hi - lo + 1)
+    }
+
+    pub fn f32_in(rng: &mut Pcg64, lo: f32, hi: f32) -> f32 {
+        lo + rng.f32() * (hi - lo)
+    }
+
+    pub fn vec_normal(rng: &mut Pcg64, len: usize, scale: f32) -> Vec<f32> {
+        (0..len).map(|_| rng.normal() * scale).collect()
+    }
+
+    /// Power-of-two in [lo, hi].
+    pub fn pow2_in(rng: &mut Pcg64, lo: usize, hi: usize) -> usize {
+        let lo_log = lo.next_power_of_two().trailing_zeros();
+        let hi_log = hi.next_power_of_two().trailing_zeros();
+        1 << usize_in(rng, lo_log as usize, hi_log as usize)
+    }
+}
+
+/// Assert helper returning Result for use inside properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            return Err(format!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall(1, 50, |rng| {
+            let x = rng.f32();
+            if (0.0..1.0).contains(&x) {
+                Ok(())
+            } else {
+                Err(format!("out of range: {x}"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn forall_reports_failure() {
+        forall(2, 50, |rng| {
+            let x = rng.f32();
+            if x < 0.9 {
+                Ok(())
+            } else {
+                Err("too big".to_string())
+            }
+        });
+    }
+
+    #[test]
+    fn generators_in_bounds() {
+        forall(3, 100, |rng| {
+            let n = gen::usize_in(rng, 5, 10);
+            prop_assert!((5..=10).contains(&n), "n={n}");
+            let p = gen::pow2_in(rng, 8, 64);
+            prop_assert!(p.is_power_of_two() && (8..=64).contains(&p), "p={p}");
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,211 @@
+//! Minimal scoped data-parallel helpers over std threads.
+//!
+//! The serving engine and the coarse-scan index want "run this closure over
+//! chunk ranges on N threads and join" — `parallel_chunks` provides exactly
+//! that with zero allocation on the steady path. A long-lived `WorkerPool`
+//! (channel-fed) backs the coordinator's continuous-batching loop.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+/// Number of worker threads to use by default: physical parallelism capped
+/// to keep the PJRT CPU client responsive.
+pub fn default_threads() -> usize {
+    thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(16)
+}
+
+/// Split `[0, len)` into `chunks` half-open ranges of near-equal size.
+pub fn split_ranges(len: usize, chunks: usize) -> Vec<(usize, usize)> {
+    if len == 0 || chunks == 0 {
+        return vec![];
+    }
+    let chunks = chunks.min(len);
+    let base = len / chunks;
+    let extra = len % chunks;
+    let mut out = Vec::with_capacity(chunks);
+    let mut start = 0;
+    for i in 0..chunks {
+        let size = base + usize::from(i < extra);
+        out.push((start, start + size));
+        start += size;
+    }
+    out
+}
+
+/// Run `f(chunk_index, start, end)` over the ranges of `[0, len)` on up to
+/// `threads` scoped threads, collecting each chunk's return value in order.
+pub fn parallel_chunks<T, F>(len: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize, usize, usize) -> T + Sync,
+{
+    let ranges = split_ranges(len, threads.max(1));
+    if ranges.len() <= 1 {
+        return ranges
+            .into_iter()
+            .enumerate()
+            .map(|(i, (s, e))| f(i, s, e))
+            .collect();
+    }
+    let mut out: Vec<Option<T>> = (0..ranges.len()).map(|_| None).collect();
+    thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(ranges.len());
+        for (i, (s, e)) in ranges.iter().copied().enumerate() {
+            let fref = &f;
+            handles.push(scope.spawn(move || (i, fref(i, s, e))));
+        }
+        for h in handles {
+            let (i, v) = h.join().expect("worker panicked");
+            out[i] = Some(v);
+        }
+    });
+    out.into_iter().map(|v| v.unwrap()).collect()
+}
+
+/// Work-stealing-free dynamic scheduler: threads atomically grab fixed-size
+/// tiles until the range is exhausted. Better than static chunks when tile
+/// costs vary (e.g. conditional class shards of very different sizes).
+pub fn parallel_tiles<F>(len: usize, tile: usize, threads: usize, f: F)
+where
+    F: Fn(usize, usize) + Sync,
+{
+    let cursor = AtomicUsize::new(0);
+    thread::scope(|scope| {
+        for _ in 0..threads.max(1) {
+            let cursor = &cursor;
+            let fref = &f;
+            scope.spawn(move || loop {
+                let start = cursor.fetch_add(tile, Ordering::Relaxed);
+                if start >= len {
+                    break;
+                }
+                fref(start, (start + tile).min(len));
+            });
+        }
+    });
+}
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Long-lived FIFO worker pool for the coordinator's dispatch loop.
+pub struct WorkerPool {
+    tx: Option<mpsc::Sender<Job>>,
+    handles: Vec<thread::JoinHandle<()>>,
+    inflight: Arc<(Mutex<usize>, std::sync::Condvar)>,
+}
+
+impl WorkerPool {
+    pub fn new(threads: usize) -> Self {
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let inflight = Arc::new((Mutex::new(0usize), std::sync::Condvar::new()));
+        let mut handles = Vec::new();
+        for _ in 0..threads.max(1) {
+            let rx = Arc::clone(&rx);
+            let inflight = Arc::clone(&inflight);
+            handles.push(thread::spawn(move || loop {
+                let job = {
+                    let guard = rx.lock().unwrap();
+                    guard.recv()
+                };
+                match job {
+                    Ok(job) => {
+                        job();
+                        let (lock, cvar) = &*inflight;
+                        let mut n = lock.lock().unwrap();
+                        *n -= 1;
+                        cvar.notify_all();
+                    }
+                    Err(_) => break,
+                }
+            }));
+        }
+        WorkerPool {
+            tx: Some(tx),
+            handles,
+            inflight,
+        }
+    }
+
+    pub fn submit(&self, job: impl FnOnce() + Send + 'static) {
+        let (lock, _) = &*self.inflight;
+        *lock.lock().unwrap() += 1;
+        self.tx
+            .as_ref()
+            .expect("pool shut down")
+            .send(Box::new(job))
+            .expect("worker pool hung up");
+    }
+
+    /// Block until every submitted job has finished.
+    pub fn wait_idle(&self) {
+        let (lock, cvar) = &*self.inflight;
+        let mut n = lock.lock().unwrap();
+        while *n > 0 {
+            n = cvar.wait(n).unwrap();
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.tx.take();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn ranges_partition_exactly() {
+        for (len, chunks) in [(10, 3), (7, 7), (100, 8), (3, 16), (0, 4)] {
+            let r = split_ranges(len, chunks);
+            let total: usize = r.iter().map(|(s, e)| e - s).sum();
+            assert_eq!(total, len);
+            for w in r.windows(2) {
+                assert_eq!(w[0].1, w[1].0); // contiguous
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_chunks_sums_correctly() {
+        let data: Vec<u64> = (0..10_000).collect();
+        let partials = parallel_chunks(data.len(), 8, |_, s, e| {
+            data[s..e].iter().sum::<u64>()
+        });
+        assert_eq!(partials.iter().sum::<u64>(), data.iter().sum::<u64>());
+    }
+
+    #[test]
+    fn parallel_tiles_visits_everything_once() {
+        let hits: Vec<AtomicU64> = (0..1000).map(|_| AtomicU64::new(0)).collect();
+        parallel_tiles(1000, 64, 4, |s, e| {
+            for i in s..e {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn worker_pool_runs_jobs_and_waits() {
+        let pool = WorkerPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::Relaxed), 100);
+    }
+}

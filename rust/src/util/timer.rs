@@ -1,0 +1,119 @@
+//! Wall-clock timing helpers used by the bench harnesses and engine stats.
+
+use std::time::{Duration, Instant};
+
+/// Accumulates durations and reports summary statistics.
+#[derive(Debug, Default, Clone)]
+pub struct TimingStats {
+    samples: Vec<f64>, // seconds
+}
+
+impl TimingStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, d: Duration) {
+        self.samples.push(d.as_secs_f64());
+    }
+
+    pub fn record_secs(&mut self, s: f64) {
+        self.samples.push(s);
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn total(&self) -> f64 {
+        self.samples.iter().sum()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            0.0
+        } else {
+            self.total() / self.samples.len() as f64
+        }
+    }
+
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        let mut sorted = self.samples.clone();
+        sorted.sort_by(|a, b| a.total_cmp(b));
+        let idx = ((sorted.len() - 1) as f64 * p).round() as usize;
+        sorted[idx]
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn merge(&mut self, other: &TimingStats) {
+        self.samples.extend_from_slice(&other.samples);
+    }
+}
+
+/// Times a closure, returning (result, seconds).
+pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let start = Instant::now();
+    let out = f();
+    (out, start.elapsed().as_secs_f64())
+}
+
+/// Scope timer: records into a `TimingStats` on drop.
+pub struct ScopedTimer<'a> {
+    stats: &'a mut TimingStats,
+    start: Instant,
+}
+
+impl<'a> ScopedTimer<'a> {
+    pub fn new(stats: &'a mut TimingStats) -> Self {
+        Self {
+            stats,
+            start: Instant::now(),
+        }
+    }
+}
+
+impl Drop for ScopedTimer<'_> {
+    fn drop(&mut self) {
+        self.stats.record(self.start.elapsed());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_math() {
+        let mut t = TimingStats::new();
+        for s in [1.0, 2.0, 3.0, 4.0] {
+            t.record_secs(s);
+        }
+        assert_eq!(t.count(), 4);
+        assert!((t.mean() - 2.5).abs() < 1e-12);
+        assert!((t.percentile(0.0) - 1.0).abs() < 1e-12);
+        assert!((t.percentile(1.0) - 4.0).abs() < 1e-12);
+        assert_eq!(t.min(), 1.0);
+    }
+
+    #[test]
+    fn time_it_returns_result() {
+        let (v, secs) = time_it(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(secs >= 0.0);
+    }
+
+    #[test]
+    fn scoped_timer_records() {
+        let mut t = TimingStats::new();
+        {
+            let _g = ScopedTimer::new(&mut t);
+        }
+        assert_eq!(t.count(), 1);
+    }
+}

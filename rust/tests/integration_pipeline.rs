@@ -1,0 +1,202 @@
+//! Cross-module integration: dataset synthesis → store roundtrip → coarse
+//! index → denoisers → sampler → oracle scoring, plus XLA-vs-CPU
+//! cross-validation on an image preset.
+
+use golddiff::data::store;
+use golddiff::data::synthetic::preset;
+use golddiff::denoiser::{DenoiserKind, StepContext};
+use golddiff::metrics::EfficacyAccum;
+use golddiff::oracle::GmmOracle;
+use golddiff::sampler;
+use golddiff::schedule::noise::{NoiseSchedule, ScheduleKind};
+use golddiff::Dataset;
+
+fn small(name: &str, n: usize, seed: u64) -> Dataset {
+    let mut spec = preset(name).unwrap().clone();
+    spec.n = n;
+    Dataset::synthesize(&spec, seed)
+}
+
+#[test]
+fn full_pipeline_moons_store_roundtrip_then_sample() {
+    let dir = std::env::temp_dir().join("golddiff_it_pipeline");
+    std::fs::remove_dir_all(&dir).ok();
+    let ds = small("moons", 600, 3);
+    store::save(&ds, &store::store_path(&dir, "moons")).unwrap();
+    let ds = store::load(&store::store_path(&dir, "moons")).unwrap();
+    let sched = NoiseSchedule::new(ScheduleKind::DdpmLinear, 10);
+
+    // every method produces a finite on-manifold-ish sample
+    for kind in [
+        DenoiserKind::Optimal,
+        DenoiserKind::GoldDiff,
+    ] {
+        let mut den = kind.build(&ds, &sched);
+        let traj = sampler::sample(den.as_mut(), &ds, &sched, 1, sampler::SamplerOpts::default());
+        let x = traj.final_sample();
+        assert!(x.iter().all(|v| v.is_finite()), "{kind:?}");
+        let nearest: f32 = (0..ds.n)
+            .map(|i| {
+                ds.row(i)
+                    .iter()
+                    .zip(x)
+                    .map(|(a, b)| (a - b) * (a - b))
+                    .sum::<f32>()
+            })
+            .fold(f32::INFINITY, f32::min);
+        assert!(nearest < 0.5, "{kind:?} sample far from manifold: {nearest}");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn golddiff_beats_or_matches_pca_and_runs_faster_cpu_path() {
+    // The paper's core quantitative claim on the CPU reference path.
+    let ds = small("cifar-sim", 1500, 5);
+    let sched = NoiseSchedule::new(ScheduleKind::DdpmLinear, 10);
+    let oracle = GmmOracle::new(ds.gmm.clone());
+
+    let score = |kind: DenoiserKind| -> (f64, f64) {
+        let mut den = kind.build(&ds, &sched);
+        let mut acc = EfficacyAccum::new();
+        let mut secs = 0.0;
+        for s in 0..3u64 {
+            let mut rng = golddiff::util::rng::Pcg64::new(s);
+            let mut x = sampler::init_noise(ds.d, &mut rng);
+            for step in 0..sched.steps {
+                let target = oracle.denoise(&x, sched.alpha_bar(step));
+                let ctx = StepContext {
+                    ds: &ds,
+                    sched: &sched,
+                    step,
+                    class: None,
+                };
+                let t0 = std::time::Instant::now();
+                let out = den.denoise(&x, &ctx);
+                secs += t0.elapsed().as_secs_f64();
+                acc.update(&out.f_hat, &target);
+                x = sampler::ddim_update(
+                    &x,
+                    &target,
+                    sched.alpha_bar(step),
+                    sched.alpha_prev(step),
+                    0.0,
+                    &mut rng,
+                );
+            }
+        }
+        (acc.mse(), secs)
+    };
+
+    let (mse_pca, t_pca) = score(DenoiserKind::Pca);
+    let (mse_gold, t_gold) = score(DenoiserKind::GoldDiffPca);
+    assert!(
+        mse_gold <= mse_pca * 1.10,
+        "GoldDiff mse {mse_gold} should match/beat PCA {mse_pca}"
+    );
+    assert!(
+        t_gold < t_pca,
+        "GoldDiff ({t_gold:.3}s) must be faster than full-scan PCA ({t_pca:.3}s)"
+    );
+}
+
+#[test]
+fn xla_and_cpu_paths_agree_on_image_preset() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        return;
+    }
+    // mnist-sim at its full preset size so manifest buckets match; shares
+    // the `data/` cache with `make data` so repeat runs just load the store
+    let dir = golddiff::benchlib::data_dir();
+    let ds = store::load_or_synthesize(&dir, "mnist-sim", 0).unwrap();
+    let sched = NoiseSchedule::new(ScheduleKind::DdpmLinear, 10);
+    let rt = std::rc::Rc::new(
+        golddiff::runtime::Runtime::new(std::path::Path::new("artifacts")).unwrap(),
+    );
+
+    let mut rng = golddiff::util::rng::Pcg64::new(9);
+    let x_t: Vec<f32> = (0..ds.d).map(|_| rng.normal()).collect();
+
+    use golddiff::coordinator::xla_denoiser::XlaDenoiser;
+    use golddiff::denoiser::Denoiser;
+    for (kind, tol) in [
+        (DenoiserKind::Optimal, 1e-3f32),
+        (DenoiserKind::Wiener, 1e-3),
+        (DenoiserKind::GoldDiff, 1e-3),
+    ] {
+        let mut xla = XlaDenoiser::new(std::rc::Rc::clone(&rt), &ds, kind).unwrap();
+        let mut cpu = kind.build(&ds, &sched);
+        for step in [2usize, 8] {
+            let ctx = StepContext {
+                ds: &ds,
+                sched: &sched,
+                step,
+                class: None,
+            };
+            let fx = xla.denoise(&x_t, &ctx).f_hat;
+            let fc = cpu.denoise(&x_t, &ctx).f_hat;
+            let max_err = fx
+                .iter()
+                .zip(&fc)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            assert!(max_err < tol, "{kind:?} step {step}: max err {max_err}");
+        }
+    }
+}
+
+#[test]
+fn truncation_error_bound_holds_in_rust_stack() {
+    // Theorem 1 checked end-to-end on real synthesized data.
+    let ds = small("mnist-sim", 400, 7);
+    let sched = NoiseSchedule::new(ScheduleKind::DdpmLinear, 10);
+    let mut rng = golddiff::util::rng::Pcg64::new(1);
+    for step in [0usize, 4, 9] {
+        let x_t = sampler::renoise(ds.row(5), &sched, step, &mut rng);
+        let q: Vec<f32> = x_t
+            .iter()
+            .map(|&v| v / sched.alpha_bar(step).sqrt())
+            .collect();
+        let scale = sched.logit_scale(step);
+        let mut logits: Vec<f32> = (0..ds.n)
+            .map(|i| {
+                -ds.row(i)
+                    .iter()
+                    .zip(&q)
+                    .map(|(a, b)| (a - b) * (a - b))
+                    .sum::<f32>()
+                    * scale
+            })
+            .collect();
+        // full vs top-k aggregate
+        let k = 40;
+        let mut order: Vec<usize> = (0..ds.n).collect();
+        order.sort_by(|&a, &b| logits[b].total_cmp(&logits[a]));
+        let items_full: Vec<(f32, &[f32])> =
+            (0..ds.n).map(|i| (logits[i], ds.row(i))).collect();
+        let items_topk: Vec<(f32, &[f32])> = order[..k]
+            .iter()
+            .map(|&i| (logits[i], ds.row(i)))
+            .collect();
+        let (f_full, _) =
+            golddiff::denoiser::softmax::ss_aggregate(ds.d, items_full.iter().copied());
+        let (f_topk, _) =
+            golddiff::denoiser::softmax::ss_aggregate(ds.d, items_topk.iter().copied());
+        let err: f32 = f_full
+            .iter()
+            .zip(&f_topk)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f32>()
+            .sqrt();
+        let radius = (0..ds.n)
+            .map(|i| ds.row(i).iter().map(|v| v * v).sum::<f32>().sqrt())
+            .fold(0.0f32, f32::max);
+        let gap = logits[order[0]] - logits[order[k]];
+        let bound = 2.0 * radius * (ds.n - k) as f32 * (-gap).exp();
+        assert!(
+            err <= bound + 1e-4,
+            "step {step}: err {err} > bound {bound} (gap {gap})"
+        );
+        logits.clear();
+    }
+}

@@ -1,0 +1,144 @@
+//! Serving-stack integration: engine + server under concurrent load,
+//! backpressure behaviour, conditional generation, and stats coherence.
+
+use std::sync::Arc;
+
+use golddiff::config::EngineConfig;
+use golddiff::coordinator::Engine;
+use golddiff::denoiser::DenoiserKind;
+use golddiff::server::{Client, Server};
+use golddiff::util::json::Json;
+
+fn have_artifacts() -> bool {
+    std::path::Path::new("artifacts/manifest.json").exists()
+}
+
+fn engine(preset: &str) -> Engine {
+    let cfg = EngineConfig {
+        preset: preset.into(),
+        data_dir: std::env::temp_dir().join("golddiff_it_serving"),
+        ..Default::default()
+    };
+    Engine::start(cfg).unwrap()
+}
+
+#[test]
+fn sixteen_concurrent_mixed_requests_complete() {
+    if !have_artifacts() {
+        return;
+    }
+    let eng = engine("moons");
+    // moons is 2-D: only the pixel-space variants exist for it
+    let methods = [DenoiserKind::GoldDiff, DenoiserKind::Optimal];
+    let rxs: Vec<_> = (0..16)
+        .map(|i| {
+            eng.submit(
+                methods[i % methods.len()],
+                i as u64,
+                None,
+            )
+            .unwrap()
+        })
+        .collect();
+    let mut ids = Vec::new();
+    for rx in rxs {
+        let resp = rx.recv().unwrap();
+        assert!(resp.sample.iter().all(|v| v.is_finite()));
+        assert_eq!(resp.steps.len(), 10);
+        ids.push(resp.id);
+    }
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), 16, "duplicate or lost responses");
+
+    let stats = eng.stats_json();
+    assert!(stats.get("completed").unwrap().as_f64().unwrap() >= 16.0);
+    assert!(stats.get("steps_executed").unwrap().as_f64().unwrap() >= 160.0);
+    eng.shutdown();
+}
+
+#[test]
+fn determinism_under_concurrency() {
+    if !have_artifacts() {
+        return;
+    }
+    let eng = engine("moons");
+    // run the same seed alone and under load — identical outputs
+    let alone = eng.generate(DenoiserKind::GoldDiff, 77, None).unwrap();
+    let rxs: Vec<_> = (0..8)
+        .map(|i| eng.submit(DenoiserKind::GoldDiff, 70 + i, None).unwrap())
+        .collect();
+    let batch: Vec<_> = rxs.into_iter().map(|rx| rx.recv().unwrap()).collect();
+    let under_load = batch.iter().find(|r| {
+        // seed 77 is the 8th (70..78); find by matching sample to alone
+        r.sample == alone.sample
+    });
+    assert!(
+        under_load.is_some(),
+        "seed-77 output changed under concurrent batching"
+    );
+    eng.shutdown();
+}
+
+#[test]
+fn server_round_trip_with_multiple_clients() {
+    if !have_artifacts() {
+        return;
+    }
+    let eng = Arc::new(engine("moons"));
+    let server = Server::start(Arc::clone(&eng), "127.0.0.1:0").unwrap();
+    let addr = server.addr;
+    let handles: Vec<_> = (0..3)
+        .map(|c| {
+            std::thread::spawn(move || {
+                let mut client = Client::connect(&addr).unwrap();
+                for i in 0..3 {
+                    let resp = client
+                        .generate("golddiff", (c * 10 + i) as u64, None)
+                        .unwrap();
+                    assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true));
+                    assert_eq!(resp.get("sample").unwrap().as_arr().unwrap().len(), 2);
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let mut client = Client::connect(&addr).unwrap();
+    let stats = client.stats().unwrap();
+    assert!(
+        stats
+            .get("stats")
+            .unwrap()
+            .get("completed")
+            .unwrap()
+            .as_f64()
+            .unwrap()
+            >= 9.0
+    );
+    server.stop();
+}
+
+#[test]
+fn latency_telemetry_is_sane() {
+    if !have_artifacts() {
+        return;
+    }
+    let eng = engine("moons");
+    let resp = eng.generate(DenoiserKind::GoldDiff, 5, None).unwrap();
+    assert!(resp.latency_secs >= resp.queue_secs);
+    for step in &resp.steps {
+        assert!(step.scan_secs >= 0.0 && step.dispatch_secs > 0.0);
+        assert!(step.k_bucket >= step.k_used);
+        assert!(step.m_used >= step.k_used);
+    }
+    // entropy collapses along the trajectory (posterior concentration)
+    let first = resp.steps.first().unwrap().entropy;
+    let last = resp.steps.last().unwrap().entropy;
+    assert!(
+        last < first,
+        "posterior entropy should collapse: {first} -> {last}"
+    );
+    eng.shutdown();
+}

@@ -1,0 +1,165 @@
+//! Cross-module property tests (hand-rolled `util::prop`, proptest-style):
+//! the coordinator/retrieval invariants DESIGN.md §8 calls out, checked on
+//! randomly generated datasets, schedules and budgets.
+
+use golddiff::data::synthetic::preset;
+use golddiff::denoiser::softmax::{exact_softmax, ss_aggregate};
+use golddiff::denoiser::{DenoiserKind, StepContext};
+use golddiff::index::scan::ProxyIndex;
+use golddiff::prop_assert;
+use golddiff::schedule::budget::BudgetSchedule;
+use golddiff::schedule::noise::{NoiseSchedule, ScheduleKind};
+use golddiff::util::prop::{forall, gen};
+use golddiff::Dataset;
+
+#[test]
+fn prop_retrieval_recall_golden_subset_is_true_topk_of_candidates() {
+    // For any query, refine_top_k over the coarse candidates returns
+    // exactly the k nearest of those candidates in full space, sorted.
+    let mut spec = preset("mnist-sim").unwrap().clone();
+    spec.n = 300;
+    let ds = Dataset::synthesize(&spec, 21);
+    let idx = ProxyIndex::default();
+    forall(31, 25, |rng| {
+        let m = gen::usize_in(rng, 4, 128);
+        let k = gen::usize_in(rng, 1, m);
+        let q = gen::vec_normal(rng, ds.d, 1.0);
+        let qp = golddiff::data::synthetic::proxy_embed(&q, ds.h, ds.w, ds.c);
+        let cands = idx.top_m(&ds, &qp, m);
+        let golden = idx.refine_top_k(&ds, &q, &cands, k);
+        prop_assert!(golden.len() == k.min(cands.len()), "size");
+        // naive check within candidates
+        let dist = |i: u32| -> f32 {
+            ds.row(i as usize)
+                .iter()
+                .zip(&q)
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum()
+        };
+        let mut naive = cands.clone();
+        naive.sort_by(|&a, &b| dist(a).total_cmp(&dist(b)));
+        naive.truncate(k);
+        prop_assert!(golden == naive, "golden != naive topk");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_budget_bucket_always_at_least_exact_budget() {
+    forall(37, 100, |rng| {
+        let n = gen::usize_in(rng, 500, 80_000);
+        let buckets: Vec<usize> = (5..=17).map(|p| 1usize << p).collect();
+        let b = BudgetSchedule::paper_defaults(n, &buckets);
+        let steps = gen::usize_in(rng, 2, 50);
+        let sched = NoiseSchedule::new(ScheduleKind::Cosine, steps);
+        for i in 0..steps {
+            let s = b.at(&sched, i);
+            prop_assert!(
+                s.k_bucket >= s.k || s.k_bucket == 1 << 17,
+                "bucket {} < k {}",
+                s.k_bucket,
+                s.k
+            );
+            prop_assert!(s.m_bucket >= s.m || s.m_bucket == 1 << 17, "m bucket");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_streaming_softmax_is_permutation_invariant() {
+    forall(41, 60, |rng| {
+        let k = gen::usize_in(rng, 2, 100);
+        let d = gen::usize_in(rng, 1, 16);
+        let logits: Vec<f32> = (0..k).map(|_| rng.normal() * 8.0).collect();
+        let rows: Vec<Vec<f32>> = (0..k).map(|_| gen::vec_normal(rng, d, 1.0)).collect();
+        let items: Vec<(f32, &[f32])> = logits
+            .iter()
+            .copied()
+            .zip(rows.iter().map(|r| r.as_slice()))
+            .collect();
+        let mut shuffled = items.clone();
+        rng.shuffle(&mut shuffled);
+        let (a, _) = ss_aggregate(d, items.iter().copied());
+        let (b, _) = ss_aggregate(d, shuffled.iter().copied());
+        for j in 0..d {
+            prop_assert!((a[j] - b[j]).abs() < 1e-3, "dim {j}: {} vs {}", a[j], b[j]);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_posterior_weights_are_a_distribution() {
+    forall(43, 60, |rng| {
+        let k = gen::usize_in(rng, 1, 200);
+        let logits: Vec<f32> = (0..k).map(|_| rng.normal() * 20.0).collect();
+        let w = exact_softmax(&logits);
+        let sum: f32 = w.iter().sum();
+        prop_assert!((sum - 1.0).abs() < 1e-3, "sum {sum}");
+        prop_assert!(w.iter().all(|&x| (0.0..=1.0 + 1e-6).contains(&x)), "range");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_denoiser_outputs_always_finite_and_in_hull() {
+    // Across random queries, noise levels and methods, f̂ is finite and a
+    // convex combination (within the global bounding box) for unbiased
+    // aggregators.
+    let mut spec = preset("mnist-sim").unwrap().clone();
+    spec.n = 250;
+    let ds = Dataset::synthesize(&spec, 23);
+    let sched = NoiseSchedule::new(ScheduleKind::DdpmLinear, 10);
+    let (mut lo, mut hi) = (vec![f32::INFINITY; ds.d], vec![f32::NEG_INFINITY; ds.d]);
+    for i in 0..ds.n {
+        for (j, &v) in ds.row(i).iter().enumerate() {
+            lo[j] = lo[j].min(v);
+            hi[j] = hi[j].max(v);
+        }
+    }
+    forall(47, 12, |rng| {
+        let step = gen::usize_in(rng, 0, 9);
+        let x_t = gen::vec_normal(rng, ds.d, 1.0);
+        let kind = [
+            DenoiserKind::Optimal,
+            DenoiserKind::GoldDiff,
+            DenoiserKind::PcaUnbiased,
+        ][rng.below(3)];
+        let mut den = kind.build(&ds, &sched);
+        let ctx = StepContext {
+            ds: &ds,
+            sched: &sched,
+            step,
+            class: None,
+        };
+        let out = den.denoise(&x_t, &ctx);
+        prop_assert!(out.f_hat.iter().all(|v| v.is_finite()), "{kind:?} non-finite");
+        for j in (0..ds.d).step_by(37) {
+            prop_assert!(
+                out.f_hat[j] >= lo[j] - 1e-3 && out.f_hat[j] <= hi[j] + 1e-3,
+                "{kind:?} dim {j} out of hull"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_conditional_scan_never_leaks_other_classes() {
+    let mut spec = preset("cifar-sim").unwrap().clone();
+    spec.n = 300;
+    let ds = Dataset::synthesize(&spec, 29);
+    let idx = ProxyIndex::default();
+    forall(53, 30, |rng| {
+        let class = rng.below(ds.classes) as u32;
+        let q = gen::vec_normal(rng, ds.proxy_d, 1.0);
+        let m = gen::usize_in(rng, 1, 64);
+        let got = idx.top_m_class(&ds, &q, m, class);
+        prop_assert!(
+            got.iter().all(|&i| ds.labels[i as usize] == class),
+            "class leak"
+        );
+        Ok(())
+    });
+}
