@@ -33,6 +33,12 @@ pub struct EngineConfig {
     pub k_max_frac: f64,
     /// base denoiser the GoldDiff wrapper drives ("golden", "pca", "kamb")
     pub method: String,
+    /// coarse retrieval backend ("flat", "batched", "cluster")
+    pub backend: String,
+    /// IVF lists for the cluster-pruned backend
+    pub clusters: usize,
+    /// cluster-pruned probe cap; 0 = exact centroid-bound pruning only
+    pub nprobe: usize,
     /// rng seed
     pub seed: u64,
 }
@@ -53,6 +59,9 @@ impl Default for EngineConfig {
             k_min_frac: 0.05,
             k_max_frac: 0.10,
             method: "golden".into(),
+            backend: "batched".into(),
+            clusters: 64,
+            nprobe: 0,
             seed: 0,
         }
     }
@@ -77,6 +86,9 @@ impl EngineConfig {
             .set("k_min_frac", self.k_min_frac)
             .set("k_max_frac", self.k_max_frac)
             .set("method", self.method.as_str())
+            .set("backend", self.backend.as_str())
+            .set("clusters", self.clusters)
+            .set("nprobe", self.nprobe)
             .set("seed", self.seed);
         j
     }
@@ -107,6 +119,9 @@ impl EngineConfig {
             k_min_frac: n("k_min_frac", def.k_min_frac),
             k_max_frac: n("k_max_frac", def.k_max_frac),
             method: s("method", &def.method),
+            backend: s("backend", &def.backend),
+            clusters: n("clusters", def.clusters as f64) as usize,
+            nprobe: n("nprobe", def.nprobe as f64) as usize,
             seed: n("seed", def.seed as f64) as u64,
         })
     }
@@ -141,6 +156,11 @@ impl EngineConfig {
         if let Some(p) = args.get("schedule") {
             self.schedule = p.to_string();
         }
+        if let Some(p) = args.get("backend") {
+            self.backend = p.to_string();
+        }
+        self.clusters = args.usize_or("clusters", self.clusters);
+        self.nprobe = args.usize_or("nprobe", self.nprobe);
         self.steps = args.usize_or("steps", self.steps);
         self.workers = args.usize_or("workers", self.workers);
         self.scan_threads = args.usize_or("scan-threads", self.scan_threads);
@@ -163,6 +183,9 @@ mod tests {
         c.preset = "afhq-sim".into();
         c.steps = 25;
         c.k_min_frac = 0.025;
+        c.backend = "cluster".into();
+        c.clusters = 128;
+        c.nprobe = 4;
         let rt = EngineConfig::from_json(&parse(&c.to_json().to_string_compact()).unwrap())
             .unwrap();
         assert_eq!(rt, c);
@@ -189,6 +212,24 @@ mod tests {
         assert_eq!(c.preset, "moons");
         assert_eq!(c.steps, 50);
         assert!((c.k_min_frac - 0.01).abs() < 1e-12);
+    }
+
+    #[test]
+    fn backend_knobs_default_and_override() {
+        let c = EngineConfig::default();
+        assert_eq!(c.backend, "batched");
+        assert_eq!(c.clusters, 64);
+        assert_eq!(c.nprobe, 0);
+        assert!(crate::index::backend::RetrievalBackendKind::parse(&c.backend).is_some());
+        let mut c = EngineConfig::default();
+        let raw: Vec<String> = ["--backend", "cluster", "--clusters", "32", "--nprobe", "2"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        c.apply_args(&crate::util::cli::Args::parse(&raw));
+        assert_eq!(c.backend, "cluster");
+        assert_eq!(c.clusters, 32);
+        assert_eq!(c.nprobe, 2);
     }
 
     #[test]

@@ -32,6 +32,7 @@ use crate::config::EngineConfig;
 use crate::data::dataset::Dataset;
 use crate::data::store;
 use crate::denoiser::{DenoiserKind, StepContext};
+use crate::index::backend::{RetrievalBackend, RetrievalBackendKind};
 use crate::runtime::{Runtime, SendRuntime};
 use crate::sampler;
 use crate::schedule::budget::BudgetSchedule;
@@ -76,10 +77,17 @@ impl Engine {
         let kind = ScheduleKind::parse(&cfg.schedule)
             .with_context(|| format!("unknown schedule {}", cfg.schedule))?;
         let sched = NoiseSchedule::new(kind, cfg.steps);
+        let backend_kind = RetrievalBackendKind::parse(&cfg.backend)
+            .with_context(|| format!("unknown retrieval backend {}", cfg.backend))?;
+        // built once per engine (cluster-pruned runs its k-means here) and
+        // shared by every denoiser so telemetry aggregates in one place
+        let backend: Arc<dyn RetrievalBackend> =
+            backend_kind.build(&ds, cfg.scan_threads, cfg.clusters, cfg.nprobe, cfg.seed);
         let runtime = SendRuntime(Runtime::new(&cfg.artifacts_dir)?);
 
         let queue = Arc::new(BoundedQueue::<Submission>::new(cfg.queue_depth));
         let stats = Arc::new(Mutex::new(EngineStats::new()));
+        stats.lock().unwrap().backend = backend_kind.name().to_string();
         let d = ds.d;
         let preset = cfg.preset.clone();
         let steps = cfg.steps;
@@ -89,7 +97,7 @@ impl Engine {
         let handle = std::thread::Builder::new()
             .name("golddiff-executor".into())
             .spawn(move || {
-                executor_loop(runtime, ds, sched, cfg, q2, s2);
+                executor_loop(runtime, ds, sched, cfg, backend, q2, s2);
             })?;
 
         Ok(Engine {
@@ -207,6 +215,7 @@ fn executor_loop(
     ds: Arc<Dataset>,
     sched: NoiseSchedule,
     cfg: EngineConfig,
+    backend: Arc<dyn RetrievalBackend>,
     queue: Arc<BoundedQueue<Submission>>,
     stats: Arc<Mutex<EngineStats>>,
 ) {
@@ -273,17 +282,28 @@ fn executor_loop(
                 XlaDenoiser::new(std::rc::Rc::clone(&rt), &ds, group.method)
                     .expect("denoiser init")
                     .with_budget(budget.clone())
+                    .with_retrieval(Arc::clone(&backend))
             });
-            for &si in &group.seqs {
-                let seq = &mut active[si];
-                let ctx = StepContext {
+            // one batched retrieval for the whole group, then dispatch —
+            // every sequence here shares (method, step, k-bucket)
+            let xs: Vec<&[f32]> = group.seqs.iter().map(|&si| active[si].x.as_slice()).collect();
+            let ctx_store: Vec<StepContext> = group
+                .seqs
+                .iter()
+                .map(|&si| StepContext {
                     ds: &ds,
                     sched: &sched,
-                    step: seq.step,
-                    class: seq.req.class,
-                };
-                let out = den.step(&seq.x, &ctx).expect("dispatch failed");
-                let tel = den.telemetry;
+                    step: active[si].step,
+                    class: active[si].req.class,
+                })
+                .collect();
+            let ctxs: Vec<&StepContext> = ctx_store.iter().collect();
+            let results = den.step_group(&xs, &ctxs).expect("dispatch failed");
+            drop(ctxs);
+            drop(xs);
+            let group_scan: f64 = results.iter().map(|(_, tel)| tel.scan_secs).sum();
+            for (&si, (out, tel)) in group.seqs.iter().zip(results) {
+                let seq = &mut active[si];
                 seq.telemetry.push(StepTelemetry {
                     k_bucket: tel.k_bucket,
                     m_used: tel.m_used,
@@ -313,6 +333,9 @@ fn executor_loop(
                 st.scan_time.record_secs(tel.scan_secs);
                 st.dispatch_time.record_secs(tel.dispatch_secs);
             }
+            let mut st = stats.lock().unwrap();
+            st.retrieval_time.record_secs(group_scan);
+            st.record_backend(backend.stats());
         }
 
         // ---- completions -------------------------------------------------
@@ -386,6 +409,76 @@ mod tests {
         let j = eng.stats_json();
         assert!(j.get("completed").unwrap().as_f64().unwrap() >= 7.0);
         eng.shutdown();
+    }
+
+    #[test]
+    fn every_backend_serves_identical_samples() {
+        // the retrieval backends are exact (nprobe = 0), so the engine must
+        // produce bit-identical samples whichever one the config selects
+        if !std::path::Path::new("artifacts/manifest.json").exists() {
+            return;
+        }
+        let mut samples: Vec<Vec<f32>> = Vec::new();
+        for backend in ["flat", "batched", "cluster"] {
+            let cfg = EngineConfig {
+                preset: "moons".into(),
+                data_dir: std::env::temp_dir().join("golddiff_engine_test"),
+                backend: backend.into(),
+                clusters: 8,
+                ..Default::default()
+            };
+            let eng = Engine::start(cfg).unwrap();
+            let resp = eng.generate(DenoiserKind::GoldDiff, 4242, None).unwrap();
+            assert!(resp.sample.iter().all(|v| v.is_finite()), "{backend}");
+            let j = eng.stats_json();
+            assert_eq!(
+                j.get("retrieval_backend").unwrap().as_str(),
+                Some(backend)
+            );
+            samples.push(resp.sample);
+            eng.shutdown();
+        }
+        assert_eq!(samples[0], samples[1], "flat vs batched");
+        assert_eq!(samples[0], samples[2], "flat vs cluster");
+    }
+
+    #[test]
+    fn batched_backend_amortises_proxy_passes() {
+        if !std::path::Path::new("artifacts/manifest.json").exists() {
+            return;
+        }
+        let cfg = EngineConfig {
+            preset: "moons".into(),
+            data_dir: std::env::temp_dir().join("golddiff_engine_test"),
+            backend: "batched".into(),
+            ..Default::default()
+        };
+        let eng = Engine::start(cfg).unwrap();
+        let rxs: Vec<_> = (0..8)
+            .map(|i| eng.submit(DenoiserKind::GoldDiff, 900 + i, None).unwrap())
+            .collect();
+        for rx in rxs {
+            let _ = rx.recv().unwrap();
+        }
+        let j = eng.stats_json();
+        let passes = j.get("proxy_passes").unwrap().as_f64().unwrap();
+        let queries = j.get("retrieval_queries").unwrap().as_f64().unwrap();
+        assert!(
+            passes < queries,
+            "batched ticks must share passes: {passes} passes for {queries} queries"
+        );
+        eng.shutdown();
+    }
+
+    #[test]
+    fn unknown_backend_fails_fast() {
+        let cfg = EngineConfig {
+            preset: "moons".into(),
+            data_dir: std::env::temp_dir().join("golddiff_engine_test"),
+            backend: "warp-drive".into(),
+            ..Default::default()
+        };
+        assert!(Engine::start(cfg).is_err());
     }
 
     #[test]

@@ -1,5 +1,7 @@
 //! Engine telemetry: request latency distribution, throughput, per-phase
-//! step timing (scan vs dispatch — the Integration/Selection split).
+//! step timing (scan vs dispatch — the Integration/Selection split), and
+//! the retrieval backend's cumulative counters (proxy passes, cluster
+//! pruning) surfaced per tick.
 
 use std::time::Instant;
 
@@ -17,6 +19,15 @@ pub struct EngineStats {
     pub queue_delay: TimingStats,
     pub scan_time: TimingStats,
     pub dispatch_time: TimingStats,
+    /// wall-clock of each batched group retrieval (one sample per group)
+    pub retrieval_time: TimingStats,
+    /// retrieval backend name ("flat" / "batched" / "cluster")
+    pub backend: String,
+    /// cumulative backend counters (latest snapshot)
+    pub proxy_passes: u64,
+    pub retrieval_queries: u64,
+    pub clusters_scanned: u64,
+    pub clusters_pruned: u64,
 }
 
 impl Default for EngineStats {
@@ -31,6 +42,12 @@ impl Default for EngineStats {
             queue_delay: TimingStats::new(),
             scan_time: TimingStats::new(),
             dispatch_time: TimingStats::new(),
+            retrieval_time: TimingStats::new(),
+            backend: String::new(),
+            proxy_passes: 0,
+            retrieval_queries: 0,
+            clusters_scanned: 0,
+            clusters_pruned: 0,
         }
     }
 }
@@ -58,6 +75,14 @@ impl EngineStats {
         }
     }
 
+    /// Record a backend telemetry snapshot (cumulative counters).
+    pub fn record_backend(&mut self, snap: crate::index::backend::RetrievalStats) {
+        self.proxy_passes = snap.proxy_passes;
+        self.retrieval_queries = snap.queries;
+        self.clusters_scanned = snap.clusters_scanned;
+        self.clusters_pruned = snap.clusters_pruned;
+    }
+
     pub fn to_json(&self) -> Json {
         let mut j = Json::obj();
         j.set("submitted", self.submitted)
@@ -71,7 +96,13 @@ impl EngineStats {
             .set("latency_mean_s", self.latency.mean())
             .set("queue_p50_s", self.queue_delay.percentile(0.5))
             .set("scan_mean_s", self.scan_time.mean())
-            .set("dispatch_mean_s", self.dispatch_time.mean());
+            .set("dispatch_mean_s", self.dispatch_time.mean())
+            .set("retrieval_mean_s", self.retrieval_time.mean())
+            .set("retrieval_backend", self.backend.as_str())
+            .set("proxy_passes", self.proxy_passes as usize)
+            .set("retrieval_queries", self.retrieval_queries as usize)
+            .set("clusters_scanned", self.clusters_scanned as usize)
+            .set("clusters_pruned", self.clusters_pruned as usize);
         j
     }
 }
@@ -91,5 +122,27 @@ mod tests {
         assert_eq!(j.get("completed").unwrap().as_f64(), Some(8.0));
         assert!(j.get("latency_p50_s").unwrap().as_f64().unwrap() >= 0.5);
         assert!(j.get("throughput_rps").unwrap().as_f64().unwrap() > 0.0);
+        assert!(j.get("retrieval_backend").is_some());
+        assert_eq!(j.get("proxy_passes").unwrap().as_f64(), Some(0.0));
+    }
+
+    #[test]
+    fn backend_snapshot_is_reflected() {
+        let mut s = EngineStats::new();
+        s.backend = "cluster".into();
+        s.record_backend(crate::index::backend::RetrievalStats {
+            proxy_passes: 3,
+            queries: 12,
+            rows_scanned: 1000,
+            clusters_scanned: 40,
+            clusters_pruned: 24,
+        });
+        let j = s.to_json();
+        assert_eq!(j.get("clusters_pruned").unwrap().as_f64(), Some(24.0));
+        assert_eq!(j.get("retrieval_queries").unwrap().as_f64(), Some(12.0));
+        assert_eq!(
+            j.get("retrieval_backend").unwrap().as_str(),
+            Some("cluster")
+        );
     }
 }

@@ -3,10 +3,16 @@
 //! timing comparisons share one compute substrate.
 //!
 //! Hot-path split per DESIGN.md:
-//!   rust (L3): budget schedule → coarse proxy scan → exact refine →
+//!   rust (L3): budget schedule → coarse retrieval backend → exact refine →
 //!              gather + pad the golden subset            (retrieval)
 //!   XLA (L2/L1): logits + streaming-softmax aggregation + DDIM update
 //!              (`golden_step` / `pca_step_*` / `kamb_step` / `wiener_step`)
+//!
+//! Retrieval goes through the pluggable `index::backend::RetrievalBackend`
+//! the engine shares across its denoisers; [`XlaDenoiser::step_group`] runs
+//! **one** batched coarse retrieval for a whole batcher group before any
+//! dispatch happens, so a tick of B GoldDiff sequences pays a single
+//! proxy-table pass (with the batched backend) instead of B.
 //!
 //! Full-scan methods (Optimal / PCA / Kamb baselines) keep their padded
 //! candidate matrix *device-resident* (uploaded once, reused every step) —
@@ -15,12 +21,14 @@
 //! exactly the paper's complexity story.
 
 use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
 use crate::data::dataset::Dataset;
+use crate::denoiser::golddiff::{blended_golden_rows, blended_golden_rows_batch};
 use crate::denoiser::{DenoiseResult, Denoiser, DenoiserKind, PosteriorStats, StepContext};
-use crate::index::scan::ProxyIndex;
+use crate::index::backend::{FlatScan, RetrievalBackend};
 use crate::runtime::{DeviceTensor, Runtime, StepOutput};
 use crate::schedule::budget::BudgetSchedule;
 
@@ -39,7 +47,8 @@ pub struct XlaDenoiser {
     pub kind: DenoiserKind,
     preset: String,
     budget: BudgetSchedule,
-    index: ProxyIndex,
+    /// pluggable coarse-retrieval backend (shared engine-wide)
+    backend: Arc<dyn RetrievalBackend>,
     /// device-resident full-scan candidates (+ mask), lazily built
     resident_full: Option<(usize, Rc<DeviceTensor>, Rc<DeviceTensor>)>,
     /// device-resident Wiener stats
@@ -63,7 +72,7 @@ impl XlaDenoiser {
             kind,
             preset: ds.name.clone(),
             budget: BudgetSchedule::paper_defaults(ds.n, &buckets),
-            index: ProxyIndex::default(),
+            backend: Arc::new(FlatScan::new(crate::util::threadpool::default_threads())),
             resident_full: None,
             resident_wiener: None,
             gather_buf: Vec::new(),
@@ -75,6 +84,13 @@ impl XlaDenoiser {
     /// Override the budget schedule (hyperparameter sweeps, Fig. 6).
     pub fn with_budget(mut self, budget: BudgetSchedule) -> Self {
         self.budget = budget;
+        self
+    }
+
+    /// Swap the coarse-retrieval backend (the engine shares one instance
+    /// across all its denoisers so telemetry aggregates in one place).
+    pub fn with_retrieval(mut self, backend: Arc<dyn RetrievalBackend>) -> Self {
+        self.backend = backend;
         self
     }
 
@@ -129,24 +145,6 @@ impl XlaDenoiser {
         ))
     }
 
-    /// GoldDiff retrieval: the shared blended precision/breadth pipeline
-    /// (see `denoiser::golddiff::blended_golden_rows`).
-    fn golden_rows(&mut self, x_t: &[f32], ctx: &StepContext) -> (Vec<u32>, usize, usize) {
-        let ds = ctx.ds;
-        let b = self.budget.at(ctx.sched, ctx.step);
-        let golden = crate::denoiser::golddiff::blended_golden_rows(
-            &self.index,
-            ctx,
-            x_t,
-            b.m,
-            b.k,
-            ds.h,
-            ds.w,
-            ds.c,
-        );
-        (golden, b.m, b.k)
-    }
-
     fn variant(&self) -> &'static str {
         match self.kind {
             DenoiserKind::Wiener => "wiener_step",
@@ -167,44 +165,72 @@ impl XlaDenoiser {
         )
     }
 
-    /// One full step dispatch: returns (x_prev, f_hat, stats) from the graph.
-    pub fn step(&mut self, x_t: &[f32], ctx: &StepContext) -> Result<StepOutput> {
-        let ds = ctx.ds;
-        let preset = self.preset.clone();
+    /// Bucket a retrieved row set for the compiled ladder and record the
+    /// retrieval telemetry.
+    fn bucket_plan(
+        &mut self,
+        mut rows: Vec<u32>,
+        m: usize,
+        k: usize,
+    ) -> Result<(Vec<u32>, usize)> {
         let variant = self.variant();
+        let bucket = self
+            .rt
+            .manifest
+            .bucket_for(variant, &self.preset, rows.len())
+            .with_context(|| format!("no {variant} bucket for {}", self.preset))?;
+        rows.truncate(bucket); // kamb ladder may be coarser than k_t
+        self.telemetry.m_used = m;
+        self.telemetry.k_used = rows.len().min(k);
+        Ok((rows, bucket))
+    }
 
-        // ---- retrieval phase (L3) -------------------------------------
-        let t_scan = std::time::Instant::now();
-        let plan: Option<(Vec<u32>, usize)> = if self.kind == DenoiserKind::Wiener {
-            None
-        } else if self.is_golddiff() {
-            let (mut rows, m, k) = self.golden_rows(x_t, ctx);
-            let bucket = self
-                .rt
-                .manifest
-                .bucket_for(variant, &preset, rows.len())
-                .with_context(|| format!("no {variant} bucket for {preset}"))?;
-            rows.truncate(bucket); // kamb ladder may be coarser than k_t
-            self.telemetry.m_used = m;
-            self.telemetry.k_used = rows.len().min(k);
-            Some((rows, bucket))
-        } else if let Some(y) = ctx.class {
+    /// The retrieval phase (L3) for one sequence: produces the candidate
+    /// plan the dispatch phase uploads, or `None` for resident full scans.
+    fn plan(&mut self, x_t: &[f32], ctx: &StepContext) -> Result<Option<(Vec<u32>, usize)>> {
+        let ds = ctx.ds;
+        if self.kind == DenoiserKind::Wiener {
+            return Ok(None);
+        }
+        if self.is_golddiff() {
+            let b = self.budget.at(ctx.sched, ctx.step);
+            let rows = blended_golden_rows(
+                self.backend.as_ref(),
+                ctx,
+                x_t,
+                b.m,
+                b.k,
+                ds.h,
+                ds.w,
+                ds.c,
+            );
+            return Ok(Some(self.bucket_plan(rows, b.m, b.k)?));
+        }
+        if let Some(y) = ctx.class {
             // conditional full scan: the class shard is the support
             let rows = ds.class_rows[y as usize].clone();
             let bucket = self
                 .rt
                 .manifest
-                .bucket_for(variant, &preset, rows.len())
+                .bucket_for(self.variant(), &self.preset, rows.len())
                 .context("no bucket")?;
             self.telemetry.k_used = rows.len().min(bucket);
-            Some((rows, bucket))
-        } else {
-            self.telemetry.k_used = ds.n;
-            None // resident full scan
-        };
-        self.telemetry.scan_secs = t_scan.elapsed().as_secs_f64();
+            return Ok(Some((rows, bucket)));
+        }
+        self.telemetry.k_used = ds.n;
+        Ok(None) // resident full scan
+    }
 
-        // ---- dispatch phase (L2/L1 via PJRT) ---------------------------
+    /// The dispatch phase (L2/L1 via PJRT) for one sequence.
+    fn dispatch(
+        &mut self,
+        x_t: &[f32],
+        ctx: &StepContext,
+        plan: Option<(Vec<u32>, usize)>,
+    ) -> Result<StepOutput> {
+        let ds = ctx.ds;
+        let preset = self.preset.clone();
+        let variant = self.variant();
         let t_disp = std::time::Instant::now();
         let alphas = self
             .rt
@@ -255,6 +281,59 @@ impl XlaDenoiser {
         self.telemetry.dispatch_secs = t_disp.elapsed().as_secs_f64();
         Ok(out)
     }
+
+    /// One full step dispatch: returns (x_prev, f_hat, stats) from the graph.
+    pub fn step(&mut self, x_t: &[f32], ctx: &StepContext) -> Result<StepOutput> {
+        let t_scan = std::time::Instant::now();
+        let plan = self.plan(x_t, ctx)?;
+        self.telemetry.scan_secs = t_scan.elapsed().as_secs_f64();
+        self.dispatch(x_t, ctx, plan)
+    }
+
+    /// One scheduler-tick group: all sequences share (method, step,
+    /// k-bucket), so GoldDiff methods run **one** batched coarse retrieval
+    /// for the whole group before dispatching each sequence. Returns one
+    /// (output, telemetry) pair per sequence; the group's retrieval time is
+    /// amortised evenly over the per-sequence `scan_secs`.
+    pub fn step_group(
+        &mut self,
+        xs: &[&[f32]],
+        ctxs: &[&StepContext],
+    ) -> Result<Vec<(StepOutput, XlaStepTelemetry)>> {
+        assert_eq!(xs.len(), ctxs.len());
+        if xs.len() <= 1 || !self.is_golddiff() {
+            let mut outs = Vec::with_capacity(xs.len());
+            for (x_t, ctx) in xs.iter().zip(ctxs) {
+                let out = self.step(x_t, ctx)?;
+                outs.push((out, self.telemetry));
+            }
+            return Ok(outs);
+        }
+
+        let ds = ctxs[0].ds;
+        let t_scan = std::time::Instant::now();
+        let b = self.budget.at(ctxs[0].sched, ctxs[0].step);
+        let rows_batch = blended_golden_rows_batch(
+            self.backend.as_ref(),
+            ctxs,
+            xs,
+            b.m,
+            b.k,
+            ds.h,
+            ds.w,
+            ds.c,
+        );
+        let scan_each = t_scan.elapsed().as_secs_f64() / xs.len() as f64;
+
+        let mut outs = Vec::with_capacity(xs.len());
+        for ((x_t, ctx), rows) in xs.iter().zip(ctxs).zip(rows_batch) {
+            let plan = self.bucket_plan(rows, b.m, b.k)?;
+            self.telemetry.scan_secs = scan_each;
+            let out = self.dispatch(x_t, ctx, Some(plan))?;
+            outs.push((out, self.telemetry));
+        }
+        Ok(outs)
+    }
 }
 
 impl Denoiser for XlaDenoiser {
@@ -296,6 +375,7 @@ impl Denoiser for XlaDenoiser {
 mod tests {
     use super::*;
     use crate::data::synthetic::preset;
+    use crate::index::backend::BatchedScan;
     use crate::schedule::noise::{NoiseSchedule, ScheduleKind};
 
     fn setup() -> Option<(Rc<Runtime>, Dataset, NoiseSchedule)> {
@@ -407,5 +487,34 @@ mod tests {
         }
         // exactly one full-bucket executable compiled & one resident upload
         assert!(xla.resident_full.is_some());
+    }
+
+    #[test]
+    fn step_group_matches_per_sequence_steps() {
+        // the batched group path must be numerically identical to stepping
+        // every sequence on its own (same backend, same sampling point)
+        let Some((rt, ds, sched)) = setup() else { return };
+        let backend: Arc<dyn RetrievalBackend> = Arc::new(BatchedScan::new(2));
+        let mut xla = XlaDenoiser::new(Rc::clone(&rt), &ds, DenoiserKind::GoldDiff)
+            .unwrap()
+            .with_retrieval(Arc::clone(&backend));
+        let xs_data: Vec<Vec<f32>> = (0..4).map(|i| vec![0.1 * i as f32, -0.2]).collect();
+        for step in [0usize, 9] {
+            let ctx = StepContext {
+                ds: &ds,
+                sched: &sched,
+                step,
+                class: None,
+            };
+            let xs: Vec<&[f32]> = xs_data.iter().map(|x| x.as_slice()).collect();
+            let ctxs: Vec<&StepContext> = xs.iter().map(|_| &ctx).collect();
+            let grouped = xla.step_group(&xs, &ctxs).unwrap();
+            assert_eq!(grouped.len(), xs.len());
+            for (i, x) in xs.iter().enumerate() {
+                let solo = xla.step(x, &ctx).unwrap();
+                assert_eq!(grouped[i].0.f_hat, solo.f_hat, "step {step} seq {i}");
+                assert_eq!(grouped[i].0.x_prev, solo.x_prev, "step {step} seq {i}");
+            }
+        }
     }
 }

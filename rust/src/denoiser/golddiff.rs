@@ -3,8 +3,9 @@
 //! weighting:
 //!
 //! 1. **Adaptive Coarse Screening** (Eq. 4): top-m_t rows by the s=1/4
-//!    downsampled-ℓ2 proxy distance (sharded scan in `index::scan`), with
-//!    m_t *growing* as noise decreases.
+//!    downsampled-ℓ2 proxy distance through a pluggable
+//!    [`RetrievalBackend`] (flat / batched / cluster-pruned — see
+//!    `index::backend`), with m_t *growing* as noise decreases.
 //! 2. **Precision Golden Set Selection** (Eq. 5): exact full-resolution
 //!    top-k_t inside the candidate pool, with k_t *shrinking* as noise
 //!    decreases (Eq. 6).
@@ -14,7 +15,11 @@
 //! `BaseWeighting` selects what Eq. 3's local operator is: plain pixel-space
 //! logits (GoldDiff-on-Optimal), the PCA subspace (the paper's primary
 //! configuration; `unbiased=false` gives the Tab. 6 WSS ablation arm), or
-//! the Kamb patch weighting (Tab. 5).
+//! the Kamb patch weighting (Tab. 5). The base denoisers are built once and
+//! cached in the `GoldDiff` struct — the seed rebuilt them every step.
+
+use std::collections::HashSet;
+use std::sync::Arc;
 
 use super::kamb::KambDenoiser;
 use super::pca::PcaDenoiser;
@@ -22,7 +27,7 @@ use super::softmax::{ss_aggregate, PosteriorStats};
 use super::{descale, sqdist, DenoiseResult, Denoiser, StepContext};
 use crate::data::dataset::Dataset;
 use crate::data::synthetic::proxy_embed;
-use crate::index::scan::ProxyIndex;
+use crate::index::backend::{FlatScan, ProxyQuery, RetrievalBackend};
 use crate::schedule::budget::BudgetSchedule;
 use crate::schedule::noise::NoiseSchedule;
 
@@ -41,10 +46,10 @@ use crate::schedule::noise::NoiseSchedule;
 ///   selection would bias the global mean; the breadth rows restore it.
 ///
 /// As g → 0 this degenerates to pure precision retrieval; as g → 1 to a
-/// broad Monte-Carlo subset. Duplicates are skipped so exactly k distinct
-/// rows return.
+/// broad Monte-Carlo subset. Duplicates are skipped, and the fill is
+/// guaranteed to return exactly `min(k, support)` distinct rows.
 pub fn blended_golden_rows(
-    index: &ProxyIndex,
+    backend: &dyn RetrievalBackend,
     ctx: &StepContext,
     x_t: &[f32],
     m: usize,
@@ -53,65 +58,122 @@ pub fn blended_golden_rows(
     w: usize,
     c: usize,
 ) -> Vec<u32> {
-    let ds = ctx.ds;
-    let g = ctx.sched.g(ctx.step) as f64;
+    blended_golden_rows_batch(backend, &[ctx], &[x_t], m, k, h, w, c)
+        .pop()
+        .unwrap_or_default()
+}
+
+/// Batched variant of [`blended_golden_rows`]: one coarse retrieval for the
+/// whole group (the engine batches sequences that share a sampling point,
+/// so every query shares (m, k, g)), then per-query exact refine + breadth
+/// fill. With the `BatchedScan` backend the group pays a *single* pass over
+/// the proxy table.
+///
+/// All contexts must be at the same sampling point; classes may differ.
+pub fn blended_golden_rows_batch(
+    backend: &dyn RetrievalBackend,
+    ctxs: &[&StepContext],
+    xs: &[&[f32]],
+    m: usize,
+    k: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+) -> Vec<Vec<u32>> {
+    assert_eq!(ctxs.len(), xs.len());
+    if ctxs.is_empty() {
+        return Vec::new();
+    }
+    debug_assert!(
+        ctxs.iter().all(|ctx| ctx.step == ctxs[0].step),
+        "a batch group must share one sampling point"
+    );
+    let ds = ctxs[0].ds;
+    let g = ctxs[0].sched.g(ctxs[0].step) as f64;
     let k_breadth = ((k as f64) * g) as usize;
     let k_precise = k - k_breadth;
 
-    let q = descale(x_t, ctx.alpha_bar());
-    let mut rows: Vec<u32> = if k_precise > 0 {
-        let qp = proxy_embed(&q, h, w, c);
-        let cands = match ctx.class {
-            Some(y) => index.top_m_class(ds, &qp, m, y),
-            None => index.top_m(ds, &qp, m),
-        };
-        index.refine_top_k(ds, &q, &cands, k_precise)
+    let qs: Vec<Vec<f32>> = xs
+        .iter()
+        .zip(ctxs)
+        .map(|(x, ctx)| descale(x, ctx.alpha_bar()))
+        .collect();
+
+    let mut per_query: Vec<Vec<u32>> = if k_precise > 0 {
+        let proxies: Vec<Vec<f32>> = qs.iter().map(|q| proxy_embed(q, h, w, c)).collect();
+        let queries: Vec<ProxyQuery> = proxies
+            .iter()
+            .zip(ctxs)
+            .map(|(p, ctx)| ProxyQuery {
+                proxy: p,
+                class: ctx.class,
+            })
+            .collect();
+        let cands = backend.top_m_batch(ds, &queries, m);
+        cands
+            .iter()
+            .zip(&qs)
+            .map(|(pool, q)| backend.refine_top_k(ds, q, pool, k_precise))
+            .collect()
     } else {
-        Vec::new()
+        vec![Vec::new(); xs.len()]
     };
 
-    if k_breadth > 0 {
-        // stratified fill over the (class-restricted) support
-        let support: &[u32] = match ctx.class {
-            Some(y) => &ds.class_rows[y as usize],
-            None => &[],
-        };
-        let n = if ctx.class.is_some() {
-            support.len()
-        } else {
-            ds.n
-        };
-        let mut seen: std::collections::HashSet<u32> = rows.iter().copied().collect();
-        let stride = (n as f64 / k_breadth.max(1) as f64).max(1.0);
-        let offset = (ctx.step as f64 * 0.618_033_99).fract() * stride;
-        let mut pos = offset;
-        while rows.len() < k && (pos as usize) < n {
-            let idx = pos as usize;
-            let gid = if ctx.class.is_some() {
-                support[idx]
-            } else {
-                idx as u32
-            };
-            if seen.insert(gid) {
-                rows.push(gid);
-            }
-            pos += stride;
-        }
-        // top up sequentially if strides collided with precise picks
-        let mut idx = 0usize;
-        while rows.len() < k && idx < n {
-            let gid = if ctx.class.is_some() {
-                support[idx]
-            } else {
-                idx as u32
-            };
-            if seen.insert(gid) {
-                rows.push(gid);
-            }
-            idx += 1;
-        }
+    for (rows, ctx) in per_query.iter_mut().zip(ctxs) {
+        breadth_fill(ctx, rows, k, k_breadth);
     }
-    rows
+    per_query
+}
+
+/// Stratified breadth fill over the (class-restricted) support.
+///
+/// Invariant: on return `rows` holds exactly `min(k, support_size)`
+/// distinct rows (the precise picks are always support members, so the
+/// target clamps to what is achievable — strides colliding near `n` fall
+/// through to the sequential top-up, which covers the whole support).
+fn breadth_fill(ctx: &StepContext, rows: &mut Vec<u32>, k: usize, k_breadth: usize) {
+    if k_breadth == 0 {
+        return;
+    }
+    let support: &[u32] = match ctx.class {
+        Some(y) => &ctx.ds.class_rows[y as usize],
+        None => &[],
+    };
+    let n = if ctx.class.is_some() {
+        support.len()
+    } else {
+        ctx.ds.n
+    };
+    let target = k.min(n);
+    let row_at = |idx: usize| -> u32 {
+        if ctx.class.is_some() {
+            support[idx]
+        } else {
+            idx as u32
+        }
+    };
+    let mut seen: HashSet<u32> = rows.iter().copied().collect();
+    let stride = (n as f64 / k_breadth.max(1) as f64).max(1.0);
+    let offset = (ctx.step as f64 * 0.618_033_99).fract() * stride;
+    let mut pos = offset;
+    while rows.len() < target && (pos as usize) < n {
+        let gid = row_at(pos as usize);
+        if seen.insert(gid) {
+            rows.push(gid);
+        }
+        pos += stride;
+    }
+    // top up sequentially if strides collided with precise picks or with
+    // each other near n
+    let mut idx = 0usize;
+    while rows.len() < target && idx < n {
+        let gid = row_at(idx);
+        if seen.insert(gid) {
+            rows.push(gid);
+        }
+        idx += 1;
+    }
+    debug_assert_eq!(rows.len(), target, "breadth fill must reach its target");
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -127,10 +189,14 @@ pub enum BaseWeighting {
 pub struct GoldDiff {
     pub base: BaseWeighting,
     pub budget: BudgetSchedule,
-    pub index: ProxyIndex,
+    /// pluggable coarse-retrieval backend (shared with the engine)
+    pub backend: Arc<dyn RetrievalBackend>,
     h: usize,
     w: usize,
     c: usize,
+    /// cached base denoisers — built once per GoldDiff, not per step
+    pca: Option<PcaDenoiser>,
+    kamb: Option<KambDenoiser>,
     /// last step's budgets (telemetry)
     pub last_m: usize,
     pub last_k: usize,
@@ -146,25 +212,60 @@ impl GoldDiff {
     }
 
     pub fn new(ds: &Dataset, budget: BudgetSchedule, base: BaseWeighting) -> GoldDiff {
+        let pca = match base {
+            BaseWeighting::PcaSubspace { unbiased } => Some(PcaDenoiser::new(ds, unbiased)),
+            _ => None,
+        };
+        let kamb = match base {
+            BaseWeighting::Kamb => Some(KambDenoiser::new(ds)),
+            _ => None,
+        };
         GoldDiff {
             base,
             budget,
-            index: ProxyIndex::default(),
+            backend: Arc::new(FlatScan::new(crate::util::threadpool::default_threads())),
             h: ds.h,
             w: ds.w,
             c: ds.c,
+            pca,
+            kamb,
             last_m: 0,
             last_k: 0,
         }
     }
 
+    /// Swap the coarse-retrieval backend (the engine shares one per dataset).
+    pub fn with_backend(mut self, backend: Arc<dyn RetrievalBackend>) -> Self {
+        self.backend = backend;
+        self
+    }
+
     /// The coarse→fine retrieval: returns the golden subset S_t (row ids,
     /// nearest-first) for a query at sampling point `step`.
     pub fn golden_subset(&mut self, x_t: &[f32], ctx: &StepContext) -> Vec<u32> {
-        let b = self.budget.at(ctx.sched, ctx.step);
+        self.golden_subsets(&[x_t], &[ctx]).pop().unwrap_or_default()
+    }
+
+    /// Batched retrieval for a group of sequences sharing one sampling
+    /// point: one coarse pass over the proxy table (with the batched
+    /// backend) instead of one per sequence.
+    pub fn golden_subsets(&mut self, xs: &[&[f32]], ctxs: &[&StepContext]) -> Vec<Vec<u32>> {
+        if ctxs.is_empty() {
+            return Vec::new();
+        }
+        let b = self.budget.at(ctxs[0].sched, ctxs[0].step);
         self.last_m = b.m;
         self.last_k = b.k;
-        blended_golden_rows(&self.index, ctx, x_t, b.m, b.k, self.h, self.w, self.c)
+        blended_golden_rows_batch(
+            self.backend.as_ref(),
+            ctxs,
+            xs,
+            b.m,
+            b.k,
+            self.h,
+            self.w,
+            self.c,
+        )
     }
 }
 
@@ -199,15 +300,18 @@ impl Denoiser for GoldDiff {
                     support,
                 }
             }
-            BaseWeighting::PcaSubspace { unbiased } => {
-                let mut base = PcaDenoiser::new(ds, unbiased);
+            BaseWeighting::PcaSubspace { .. } => {
+                let base = self.pca.as_mut().expect("pca base cached at construction");
                 base.subset = Some(golden);
                 let mut out = base.denoise(x_t, ctx);
                 out.support = support;
                 out
             }
             BaseWeighting::Kamb => {
-                let mut base = KambDenoiser::new(ds);
+                let base = self
+                    .kamb
+                    .as_mut()
+                    .expect("kamb base cached at construction");
                 base.subset = Some(golden);
                 let mut out = base.denoise(x_t, ctx);
                 out.support = support;
@@ -228,6 +332,7 @@ impl Denoiser for GoldDiff {
 mod tests {
     use super::*;
     use crate::data::synthetic::preset;
+    use crate::index::backend::BatchedScan;
     use crate::schedule::noise::ScheduleKind;
 
     fn setup() -> (Dataset, NoiseSchedule) {
@@ -343,6 +448,109 @@ mod tests {
             let out = gd.denoise(&vec![0.2; ds.d], &ctx);
             assert!(out.f_hat.iter().all(|v| v.is_finite()), "{base:?}");
             assert!(out.support > 0);
+        }
+    }
+
+    #[test]
+    fn cached_base_denoiser_is_reused_across_steps() {
+        // the seed rebuilt PcaDenoiser/KambDenoiser on every denoise call;
+        // the cached instances must keep producing identical output
+        let (ds, sched) = setup();
+        let mut gd = GoldDiff::paper_defaults(
+            &ds,
+            &sched,
+            BaseWeighting::PcaSubspace { unbiased: true },
+        );
+        let x = vec![0.15f32; ds.d];
+        let ctx = StepContext {
+            ds: &ds,
+            sched: &sched,
+            step: 4,
+            class: None,
+        };
+        let a = gd.denoise(&x, &ctx).f_hat;
+        let b = gd.denoise(&x, &ctx).f_hat;
+        assert_eq!(a, b, "cached base must be deterministic across calls");
+        assert!(gd.pca.is_some() && gd.kamb.is_none());
+    }
+
+    #[test]
+    fn breadth_fill_returns_exactly_k_distinct_rows_at_tiny_n() {
+        // regression (satellite): strides colliding near n must fall back
+        // to the sequential top-up so exactly min(k, n) rows return
+        let mut spec = preset("cifar-sim").unwrap().clone();
+        spec.n = 24;
+        let ds = Dataset::synthesize(&spec, 17);
+        let sched = NoiseSchedule::new(ScheduleKind::DdpmLinear, 10);
+        let backend = FlatScan::new(1);
+        let x = vec![0.2f32; ds.d];
+        // step 0 = deepest noise: g ≈ 1, the fill is breadth-dominated
+        let ctx = StepContext {
+            ds: &ds,
+            sched: &sched,
+            step: 0,
+            class: None,
+        };
+        for k in [1usize, 7, 23, 24, 40] {
+            let rows = blended_golden_rows(&backend, &ctx, &x, 6, k, ds.h, ds.w, ds.c);
+            let want = k.min(ds.n);
+            assert_eq!(rows.len(), want, "k={k}");
+            let distinct: HashSet<u32> = rows.iter().copied().collect();
+            assert_eq!(distinct.len(), want, "k={k} duplicates");
+            assert!(rows.iter().all(|&r| (r as usize) < ds.n));
+        }
+    }
+
+    #[test]
+    fn breadth_fill_conditional_clamps_to_class_support() {
+        let mut spec = preset("cifar-sim").unwrap().clone();
+        spec.n = 40;
+        let ds = Dataset::synthesize(&spec, 19);
+        let sched = NoiseSchedule::new(ScheduleKind::DdpmLinear, 10);
+        let backend = FlatScan::new(1);
+        let x = vec![0.1f32; ds.d];
+        // pick the best-populated class (tiny n can leave classes empty)
+        let class = (0..ds.classes)
+            .max_by_key(|&c| ds.class_rows[c].len())
+            .unwrap() as u32;
+        let support = ds.class_rows[class as usize].len();
+        assert!(support > 0);
+        let ctx = StepContext {
+            ds: &ds,
+            sched: &sched,
+            step: 0,
+            class: Some(class),
+        };
+        let rows = blended_golden_rows(&backend, &ctx, &x, 8, support + 10, ds.h, ds.w, ds.c);
+        assert_eq!(rows.len(), support, "cannot exceed the class support");
+        assert!(rows.iter().all(|&r| ds.labels[r as usize] == class));
+    }
+
+    #[test]
+    fn batched_subsets_match_single_query_subsets() {
+        let (ds, sched) = setup();
+        let mut gd = GoldDiff::paper_defaults(&ds, &sched, BaseWeighting::Golden)
+            .with_backend(Arc::new(BatchedScan::new(2)));
+        let xs_data: Vec<Vec<f32>> = (0..6)
+            .map(|i| {
+                let mut rng = crate::util::rng::Pcg64::new(100 + i);
+                (0..ds.d).map(|_| rng.normal()).collect()
+            })
+            .collect();
+        for step in [0usize, 5, 9] {
+            let ctx = StepContext {
+                ds: &ds,
+                sched: &sched,
+                step,
+                class: None,
+            };
+            let xs: Vec<&[f32]> = xs_data.iter().map(|x| x.as_slice()).collect();
+            let ctxs: Vec<&StepContext> = xs.iter().map(|_| &ctx).collect();
+            let batch = gd.golden_subsets(&xs, &ctxs);
+            for (i, x) in xs.iter().enumerate() {
+                let solo = gd.golden_subset(x, &ctx);
+                assert_eq!(batch[i], solo, "step {step} seq {i}");
+            }
         }
     }
 

@@ -1,0 +1,699 @@
+//! Pluggable retrieval backends behind one `RetrievalBackend` contract.
+//!
+//! The coarse half of Adaptive Coarse Screening (Sec. 3.4, Eq. 4) used to be
+//! a single hard-wired flat scan that ran once per query — B live sequences
+//! in one engine tick paid B full passes over the proxy table. This module
+//! turns the retrieval step into a trait with three implementations:
+//!
+//! * [`FlatScan`] — the original sharded scan, extracted behind the trait.
+//!   Bit-stable with the seed `ProxyIndex` semantics; the tested reference.
+//! * [`BatchedScan`] — a multi-query scan that makes **one** pass over the
+//!   proxy table for a whole batch group, keeping one bounded heap per
+//!   query. The corpus traversal is memory-bandwidth dominated, so
+//!   amortising it across the batch is where serving throughput comes from.
+//! * [`ClusterPruned`] — an IVF-style backend: k-means over the proxy table
+//!   (reusing `data::cluster::kmeans`) at build time, then per-query
+//!   pruning of whole clusters via the exact triangle-inequality lower
+//!   bound `d(q, x) ≥ d(q, c) − r_c`. With `nprobe == 0` results are
+//!   *exact* (identical to `FlatScan` up to distance ties); `nprobe > 0`
+//!   is the approximate fallback that scans only the nprobe nearest lists.
+//!
+//! All backends share the exact full-resolution refine (Eq. 5) and expose
+//! atomic telemetry counters (`proxy_passes`, `rows_scanned`,
+//! `clusters_pruned`, …) that the engine's stats and the perf benches
+//! scrape. See `index/README.md` for when each backend wins.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use super::scan::ProxyIndex;
+use super::topk::BoundedMaxHeap;
+use crate::data::cluster::kmeans;
+use crate::data::dataset::Dataset;
+use crate::util::rng::Pcg64;
+use crate::util::threadpool::parallel_chunks;
+
+/// One coarse query of a batch: the s=1/4 proxy embedding plus the optional
+/// conditional class restriction.
+#[derive(Debug, Clone)]
+pub struct ProxyQuery<'a> {
+    pub proxy: &'a [f32],
+    pub class: Option<u32>,
+}
+
+/// Snapshot of a backend's cumulative retrieval telemetry.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RetrievalStats {
+    /// full traversals of the proxy table (a batched scan counts one pass
+    /// for the whole group; cluster-pruned scans never do a full pass)
+    pub proxy_passes: u64,
+    /// individual coarse queries answered
+    pub queries: u64,
+    /// proxy rows actually visited across all queries
+    pub rows_scanned: u64,
+    /// clusters scanned (ClusterPruned only)
+    pub clusters_scanned: u64,
+    /// clusters skipped via the centroid lower bound or nprobe cap
+    pub clusters_pruned: u64,
+}
+
+#[derive(Debug, Default)]
+struct Counters {
+    proxy_passes: AtomicU64,
+    queries: AtomicU64,
+    rows_scanned: AtomicU64,
+    clusters_scanned: AtomicU64,
+    clusters_pruned: AtomicU64,
+}
+
+impl Counters {
+    fn snapshot(&self) -> RetrievalStats {
+        RetrievalStats {
+            proxy_passes: self.proxy_passes.load(Ordering::Relaxed),
+            queries: self.queries.load(Ordering::Relaxed),
+            rows_scanned: self.rows_scanned.load(Ordering::Relaxed),
+            clusters_scanned: self.clusters_scanned.load(Ordering::Relaxed),
+            clusters_pruned: self.clusters_pruned.load(Ordering::Relaxed),
+        }
+    }
+
+    fn reset(&self) {
+        self.proxy_passes.store(0, Ordering::Relaxed);
+        self.queries.store(0, Ordering::Relaxed);
+        self.rows_scanned.store(0, Ordering::Relaxed);
+        self.clusters_scanned.store(0, Ordering::Relaxed);
+        self.clusters_pruned.store(0, Ordering::Relaxed);
+    }
+}
+
+/// The retrieval contract every backend implements. Coarse top-m produces
+/// the candidate pool C_t; the exact refine produces the golden subset S_t.
+///
+/// `Send + Sync` so one backend instance can be shared by the engine's
+/// denoisers and scraped for telemetry from other threads.
+pub trait RetrievalBackend: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// Coarse top-m over the proxy table for a single query. Returns row
+    /// ids sorted ascending by proxy distance; class-conditional queries
+    /// only see rows of that class.
+    fn top_m(&self, ds: &Dataset, query_proxy: &[f32], m: usize, class: Option<u32>) -> Vec<u32>;
+
+    /// Coarse top-m for a whole batch group sharing one budget `m`. The
+    /// default loops `top_m`; `BatchedScan` overrides it with a one-pass
+    /// traversal.
+    fn top_m_batch(&self, ds: &Dataset, queries: &[ProxyQuery], m: usize) -> Vec<Vec<u32>> {
+        queries
+            .iter()
+            .map(|q| self.top_m(ds, q.proxy, m, q.class))
+            .collect()
+    }
+
+    /// Exact full-resolution top-k inside a candidate pool (Eq. 5). Shared
+    /// CPU reference used by every backend.
+    fn refine_top_k(&self, ds: &Dataset, q: &[f32], cands: &[u32], k: usize) -> Vec<u32> {
+        exact_refine(ds, q, cands, k, crate::util::threadpool::default_threads())
+    }
+
+    /// Cumulative telemetry since construction (or the last reset).
+    fn stats(&self) -> RetrievalStats;
+
+    /// Zero the telemetry counters (bench harness hook).
+    fn reset_stats(&self);
+}
+
+/// Exact top-k of ||q − x_i||² over `cands`, sorted ascending — the shared
+/// refine every backend uses (same algorithm as `ProxyIndex::refine_top_k`).
+pub fn exact_refine(ds: &Dataset, q: &[f32], cands: &[u32], k: usize, threads: usize) -> Vec<u32> {
+    ProxyIndex { threads }.refine_top_k(ds, q, cands, k)
+}
+
+// ---------------------------------------------------------------------------
+// FlatScan
+// ---------------------------------------------------------------------------
+
+/// The seed's sharded flat scan behind the trait: one full proxy-table pass
+/// per query. The CPU reference semantics — all other backends must agree
+/// with it (see the parity property tests).
+#[derive(Debug, Default)]
+pub struct FlatScan {
+    inner: ProxyIndex,
+    counters: Counters,
+}
+
+impl FlatScan {
+    pub fn new(threads: usize) -> FlatScan {
+        FlatScan {
+            inner: ProxyIndex { threads },
+            counters: Counters::default(),
+        }
+    }
+}
+
+impl RetrievalBackend for FlatScan {
+    fn name(&self) -> &'static str {
+        "flat"
+    }
+
+    fn top_m(&self, ds: &Dataset, query_proxy: &[f32], m: usize, class: Option<u32>) -> Vec<u32> {
+        self.counters.proxy_passes.fetch_add(1, Ordering::Relaxed);
+        self.counters.queries.fetch_add(1, Ordering::Relaxed);
+        let got = match class {
+            Some(y) => {
+                self.counters
+                    .rows_scanned
+                    .fetch_add(ds.class_rows[y as usize].len() as u64, Ordering::Relaxed);
+                self.inner.top_m_class(ds, query_proxy, m, y)
+            }
+            None => {
+                self.counters
+                    .rows_scanned
+                    .fetch_add(ds.n as u64, Ordering::Relaxed);
+                self.inner.top_m(ds, query_proxy, m)
+            }
+        };
+        got
+    }
+
+    fn refine_top_k(&self, ds: &Dataset, q: &[f32], cands: &[u32], k: usize) -> Vec<u32> {
+        self.inner.refine_top_k(ds, q, cands, k)
+    }
+
+    fn stats(&self) -> RetrievalStats {
+        self.counters.snapshot()
+    }
+
+    fn reset_stats(&self) {
+        self.counters.reset();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// BatchedScan
+// ---------------------------------------------------------------------------
+
+/// Multi-query scan: one pass over the proxy table per `top_m_batch` call,
+/// one bounded heap per query. Rows stream through the cache once and are
+/// scored against every query in the group, so the memory-bandwidth cost of
+/// the corpus traversal is amortised across the whole batch.
+#[derive(Debug)]
+pub struct BatchedScan {
+    pub threads: usize,
+    counters: Counters,
+}
+
+impl Default for BatchedScan {
+    fn default() -> Self {
+        BatchedScan::new(crate::util::threadpool::default_threads())
+    }
+}
+
+impl BatchedScan {
+    pub fn new(threads: usize) -> BatchedScan {
+        BatchedScan {
+            threads,
+            counters: Counters::default(),
+        }
+    }
+
+    /// Same spawn-overhead threshold as the flat scan (the batch multiplies
+    /// the work, never shrinks it, so single-query sharding stays stable).
+    fn effective_threads(&self, work: usize) -> usize {
+        if work < 2_000_000 {
+            1
+        } else {
+            self.threads
+        }
+    }
+}
+
+impl RetrievalBackend for BatchedScan {
+    fn name(&self) -> &'static str {
+        "batched"
+    }
+
+    fn top_m(&self, ds: &Dataset, query_proxy: &[f32], m: usize, class: Option<u32>) -> Vec<u32> {
+        self.top_m_batch(
+            ds,
+            &[ProxyQuery {
+                proxy: query_proxy,
+                class,
+            }],
+            m,
+        )
+        .pop()
+        .unwrap_or_default()
+    }
+
+    fn top_m_batch(&self, ds: &Dataset, queries: &[ProxyQuery], m: usize) -> Vec<Vec<u32>> {
+        if queries.is_empty() {
+            return Vec::new();
+        }
+        let b = queries.len();
+        let cap = m.max(1).min(ds.n.max(1));
+        self.counters.proxy_passes.fetch_add(1, Ordering::Relaxed);
+        self.counters.queries.fetch_add(b as u64, Ordering::Relaxed);
+        self.counters
+            .rows_scanned
+            .fetch_add(ds.n as u64, Ordering::Relaxed);
+
+        let threads = self.effective_threads(ds.n * ds.proxy_d);
+        let conditional = queries.iter().any(|q| q.class.is_some());
+        let shards: Vec<Vec<BoundedMaxHeap>> = parallel_chunks(ds.n, threads, |_, s, e| {
+            let mut heaps: Vec<BoundedMaxHeap> =
+                (0..b).map(|_| BoundedMaxHeap::new(cap)).collect();
+            for i in s..e {
+                let row = ds.proxy_row(i);
+                let label = if conditional { ds.labels[i] } else { 0 };
+                for (j, q) in queries.iter().enumerate() {
+                    if let Some(y) = q.class {
+                        if y != label {
+                            continue;
+                        }
+                    }
+                    let heap = &mut heaps[j];
+                    let d = super::scan::sqdist_early_exit(q.proxy, row, heap.worst());
+                    if d.is_finite() {
+                        heap.push(d, i as u32);
+                    }
+                }
+            }
+            heaps
+        });
+
+        let mut merged: Vec<BoundedMaxHeap> = (0..b).map(|_| BoundedMaxHeap::new(cap)).collect();
+        for shard in shards {
+            for (j, heap) in shard.into_iter().enumerate() {
+                merged[j].merge(heap);
+            }
+        }
+        merged
+            .into_iter()
+            .map(|h| h.into_sorted().into_iter().map(|(_, i)| i).collect())
+            .collect()
+    }
+
+    fn refine_top_k(&self, ds: &Dataset, q: &[f32], cands: &[u32], k: usize) -> Vec<u32> {
+        exact_refine(ds, q, cands, k, self.threads)
+    }
+
+    fn stats(&self) -> RetrievalStats {
+        self.counters.snapshot()
+    }
+
+    fn reset_stats(&self) {
+        self.counters.reset();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ClusterPruned
+// ---------------------------------------------------------------------------
+
+/// IVF-style backend: the proxy table is k-means-partitioned into `lists`
+/// clusters once at build time; a query visits clusters in ascending
+/// centroid distance and, once its heap is full, skips any cluster whose
+/// triangle-inequality lower bound `(d(q, c) − r_c)²` already exceeds the
+/// worst retained distance. Local-structure arguments (Wang & Vastola 2024)
+/// say posterior mass concentrates on a few clusters at moderate-to-low
+/// noise, so most lists are skipped with *exact* bounds.
+///
+/// Knobs:
+/// * `nprobe == 0` (default) — exactness: only bound-justified skips, the
+///   result equals the flat scan.
+/// * `nprobe > 0` — approximate fallback: scan at most `nprobe` nearest
+///   clusters (still topping up past the cap if the heap is not yet full,
+///   so a class-conditional query always gets its m rows when they exist).
+pub struct ClusterPruned {
+    pub threads: usize,
+    /// number of IVF lists (k-means clusters over the proxy table)
+    lists: usize,
+    /// 0 = exact bound pruning; >0 = scan at most this many nearest lists
+    nprobe: usize,
+    /// centroids [lists × proxy_d]
+    centroids: Vec<f32>,
+    /// member row ids per list
+    members: Vec<Vec<u32>>,
+    /// max Euclidean member→centroid distance per list
+    radius: Vec<f32>,
+    counters: Counters,
+}
+
+impl ClusterPruned {
+    /// Partition the dataset's proxy table (build once per dataset; the
+    /// k-means substrate is `data::cluster::kmeans`, the same code the PCA
+    /// baseline's dataset build uses).
+    pub fn build(ds: &Dataset, lists: usize, nprobe: usize, seed: u64) -> ClusterPruned {
+        Self::build_with_threads(
+            ds,
+            lists,
+            nprobe,
+            seed,
+            crate::util::threadpool::default_threads(),
+        )
+    }
+
+    pub fn build_with_threads(
+        ds: &Dataset,
+        lists: usize,
+        nprobe: usize,
+        seed: u64,
+        threads: usize,
+    ) -> ClusterPruned {
+        let lists = lists.clamp(1, ds.n.max(1));
+        let mut rng = Pcg64::with_stream(seed, 0x1f5);
+        let (centroids, assign) = kmeans(&ds.proxies, ds.n, ds.proxy_d, lists, 8, &mut rng);
+        let mut members: Vec<Vec<u32>> = vec![Vec::new(); lists];
+        for (i, &a) in assign.iter().enumerate() {
+            members[a as usize].push(i as u32);
+        }
+        let mut radius = vec![0.0f32; lists];
+        for (cl, rows) in members.iter().enumerate() {
+            let c = &centroids[cl * ds.proxy_d..(cl + 1) * ds.proxy_d];
+            let mut worst = 0.0f32;
+            for &i in rows {
+                let d = super::scan::sqdist_flat(ds.proxy_row(i as usize), c);
+                worst = worst.max(d);
+            }
+            radius[cl] = worst.sqrt();
+        }
+        ClusterPruned {
+            threads,
+            lists,
+            nprobe,
+            centroids,
+            members,
+            radius,
+            counters: Counters::default(),
+        }
+    }
+
+    pub fn lists(&self) -> usize {
+        self.lists
+    }
+}
+
+impl RetrievalBackend for ClusterPruned {
+    fn name(&self) -> &'static str {
+        "cluster"
+    }
+
+    fn top_m(&self, ds: &Dataset, query_proxy: &[f32], m: usize, class: Option<u32>) -> Vec<u32> {
+        let cap = m.max(1).min(ds.n.max(1));
+        self.counters.queries.fetch_add(1, Ordering::Relaxed);
+
+        // rank clusters by centroid distance
+        let pd = ds.proxy_d;
+        let mut order: Vec<(f32, usize)> = (0..self.lists)
+            .map(|cl| {
+                (
+                    super::scan::sqdist_flat(query_proxy, &self.centroids[cl * pd..(cl + 1) * pd]),
+                    cl,
+                )
+            })
+            .collect();
+        order.sort_by(|a, b| a.0.total_cmp(&b.0));
+
+        let mut heap = BoundedMaxHeap::new(cap);
+        let mut scanned_lists = 0u64;
+        let mut pruned_lists = 0u64;
+        let mut rows_scanned = 0u64;
+        for &(c_d2, cl) in &order {
+            // pruning only ever applies once the heap is full — a query
+            // must always receive its m rows when they exist
+            if heap.len() >= cap {
+                let lb = (c_d2.sqrt() - self.radius[cl]).max(0.0);
+                if lb * lb >= heap.worst() {
+                    pruned_lists += 1;
+                    continue;
+                }
+                if self.nprobe > 0 && scanned_lists >= self.nprobe as u64 {
+                    pruned_lists += 1;
+                    continue;
+                }
+            }
+            scanned_lists += 1;
+            for &gid in &self.members[cl] {
+                if let Some(y) = class {
+                    if ds.labels[gid as usize] != y {
+                        continue;
+                    }
+                }
+                rows_scanned += 1;
+                let row = ds.proxy_row(gid as usize);
+                let d = super::scan::sqdist_early_exit(query_proxy, row, heap.worst());
+                if d.is_finite() {
+                    heap.push(d, gid);
+                }
+            }
+        }
+        self.counters
+            .clusters_scanned
+            .fetch_add(scanned_lists, Ordering::Relaxed);
+        self.counters
+            .clusters_pruned
+            .fetch_add(pruned_lists, Ordering::Relaxed);
+        self.counters
+            .rows_scanned
+            .fetch_add(rows_scanned, Ordering::Relaxed);
+        heap.into_sorted().into_iter().map(|(_, i)| i).collect()
+    }
+
+    fn refine_top_k(&self, ds: &Dataset, q: &[f32], cands: &[u32], k: usize) -> Vec<u32> {
+        exact_refine(ds, q, cands, k, self.threads)
+    }
+
+    fn stats(&self) -> RetrievalStats {
+        self.counters.snapshot()
+    }
+
+    fn reset_stats(&self) {
+        self.counters.reset();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Kind selection (config / CLI surface)
+// ---------------------------------------------------------------------------
+
+/// Config-facing backend taxonomy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RetrievalBackendKind {
+    Flat,
+    Batched,
+    ClusterPruned,
+}
+
+impl RetrievalBackendKind {
+    pub fn parse(s: &str) -> Option<RetrievalBackendKind> {
+        Some(match s {
+            "flat" => RetrievalBackendKind::Flat,
+            "batched" => RetrievalBackendKind::Batched,
+            "cluster" | "cluster-pruned" | "ivf" => RetrievalBackendKind::ClusterPruned,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            RetrievalBackendKind::Flat => "flat",
+            RetrievalBackendKind::Batched => "batched",
+            RetrievalBackendKind::ClusterPruned => "cluster",
+        }
+    }
+
+    pub fn all() -> &'static [RetrievalBackendKind] {
+        &[
+            RetrievalBackendKind::Flat,
+            RetrievalBackendKind::Batched,
+            RetrievalBackendKind::ClusterPruned,
+        ]
+    }
+
+    /// Build a shareable backend for a dataset. `clusters`/`nprobe` only
+    /// apply to the cluster-pruned backend.
+    pub fn build(
+        &self,
+        ds: &Dataset,
+        threads: usize,
+        clusters: usize,
+        nprobe: usize,
+        seed: u64,
+    ) -> Arc<dyn RetrievalBackend> {
+        match self {
+            RetrievalBackendKind::Flat => Arc::new(FlatScan::new(threads)),
+            RetrievalBackendKind::Batched => Arc::new(BatchedScan::new(threads)),
+            RetrievalBackendKind::ClusterPruned => Arc::new(ClusterPruned::build_with_threads(
+                ds,
+                clusters.max(1),
+                nprobe,
+                seed,
+                threads,
+            )),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::preset;
+    use crate::util::prop::{forall, gen};
+
+    fn tiny(n: usize, seed: u64) -> Dataset {
+        let mut spec = preset("cifar-sim").unwrap().clone();
+        spec.n = n;
+        Dataset::synthesize(&spec, seed)
+    }
+
+    fn backends(ds: &Dataset) -> Vec<Box<dyn RetrievalBackend>> {
+        vec![
+            Box::new(FlatScan::new(2)),
+            Box::new(BatchedScan::new(2)),
+            Box::new(ClusterPruned::build_with_threads(ds, 12, 0, 7, 2)),
+            // pruning disabled: every list within nprobe and bounds can
+            // never exclude (radius covers all members, nprobe = lists)
+            Box::new(ClusterPruned::build_with_threads(ds, 1, 0, 7, 2)),
+        ]
+    }
+
+    #[test]
+    fn parity_flat_batched_cluster_unconditional_and_conditional() {
+        // Satellite: BatchedScan and ClusterPruned (exact mode) return
+        // identical row ids to FlatScan for random queries, including
+        // class-conditional scans.
+        let ds = tiny(500, 3);
+        let all = backends(&ds);
+        let flat = &all[0];
+        forall(61, 25, |rng| {
+            let m = gen::usize_in(rng, 1, 96);
+            let q = gen::vec_normal(rng, ds.proxy_d, 1.0);
+            let class = if rng.below(2) == 0 {
+                None
+            } else {
+                Some(rng.below(ds.classes) as u32)
+            };
+            let want = flat.top_m(&ds, &q, m, class);
+            for b in &all[1..] {
+                let got = b.top_m(&ds, &q, m, class);
+                crate::prop_assert!(
+                    got == want,
+                    "{} != flat (m={m} class={class:?}): {got:?} vs {want:?}",
+                    b.name()
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn batch_matches_per_query_results() {
+        let ds = tiny(400, 5);
+        let batched = BatchedScan::new(2);
+        let flat = FlatScan::new(2);
+        let mut rng = Pcg64::new(11);
+        let qs: Vec<Vec<f32>> = (0..8)
+            .map(|_| (0..ds.proxy_d).map(|_| rng.normal()).collect())
+            .collect();
+        let queries: Vec<ProxyQuery> = qs
+            .iter()
+            .enumerate()
+            .map(|(i, q)| ProxyQuery {
+                proxy: q,
+                class: if i % 3 == 0 { Some((i % 4) as u32) } else { None },
+            })
+            .collect();
+        let got = batched.top_m_batch(&ds, &queries, 24);
+        for (i, q) in queries.iter().enumerate() {
+            let want = flat.top_m(&ds, q.proxy, 24, q.class);
+            assert_eq!(got[i], want, "query {i}");
+        }
+    }
+
+    #[test]
+    fn batched_scan_counts_one_pass_per_group() {
+        let ds = tiny(300, 6);
+        let batched = BatchedScan::new(1);
+        let q = vec![0.1f32; ds.proxy_d];
+        let queries: Vec<ProxyQuery> = (0..8)
+            .map(|_| ProxyQuery {
+                proxy: &q,
+                class: None,
+            })
+            .collect();
+        let _ = batched.top_m_batch(&ds, &queries, 16);
+        let s = batched.stats();
+        assert_eq!(s.proxy_passes, 1, "8 queries must share one pass");
+        assert_eq!(s.queries, 8);
+        assert_eq!(s.rows_scanned, ds.n as u64);
+
+        let flat = FlatScan::new(1);
+        for _ in 0..8 {
+            let _ = flat.top_m(&ds, &q, 16, None);
+        }
+        assert_eq!(flat.stats().proxy_passes, 8, "flat pays one pass per query");
+    }
+
+    #[test]
+    fn cluster_pruning_skips_lists_and_accounts_for_all() {
+        let ds = tiny(600, 9);
+        let cp = ClusterPruned::build_with_threads(&ds, 16, 0, 13, 1);
+        // self-query at tiny m: after the home cluster the worst retained
+        // distance is ~0, so far-away lists must be bound-pruned
+        let q = ds.proxy_row(42).to_vec();
+        let got = cp.top_m(&ds, &q, 1, None);
+        assert_eq!(got[0], 42);
+        let s = cp.stats();
+        assert_eq!(
+            s.clusters_scanned + s.clusters_pruned,
+            cp.lists() as u64,
+            "every list is either scanned or pruned"
+        );
+        assert!(s.clusters_pruned > 0, "self-query must prune some lists");
+        assert!(s.rows_scanned < ds.n as u64, "pruning must skip rows");
+    }
+
+    #[test]
+    fn nprobe_caps_scanned_lists_but_fills_the_heap() {
+        let ds = tiny(500, 4);
+        let cp = ClusterPruned::build_with_threads(&ds, 16, 2, 21, 1);
+        let q = ds.proxy_row(7).to_vec();
+        let got = cp.top_m(&ds, &q, 32, None);
+        // approximate mode may miss true neighbours but never underfills
+        assert_eq!(got.len(), 32, "approximate mode still returns m rows");
+        let distinct: std::collections::HashSet<u32> = got.iter().copied().collect();
+        assert_eq!(distinct.len(), 32);
+    }
+
+    #[test]
+    fn conditional_queries_stay_in_class_for_all_backends() {
+        let ds = tiny(400, 8);
+        for b in backends(&ds) {
+            for class in 0..3u32 {
+                let got = b.top_m(&ds, &vec![0.05; ds.proxy_d], 16, Some(class));
+                assert!(!got.is_empty(), "{}", b.name());
+                assert!(
+                    got.iter().all(|&i| ds.labels[i as usize] == class),
+                    "{} leaked class rows",
+                    b.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn kind_parse_and_build_roundtrip() {
+        let ds = tiny(200, 2);
+        for &k in RetrievalBackendKind::all() {
+            assert_eq!(RetrievalBackendKind::parse(k.name()), Some(k));
+            let b = k.build(&ds, 1, 8, 0, 0);
+            let got = b.top_m(&ds, ds.proxy_row(0), 4, None);
+            assert_eq!(got[0], 0, "{} self-query", b.name());
+        }
+        assert_eq!(RetrievalBackendKind::parse("bogus"), None);
+        assert_eq!(
+            RetrievalBackendKind::parse("ivf"),
+            Some(RetrievalBackendKind::ClusterPruned)
+        );
+    }
+}

@@ -1,9 +1,21 @@
 //! Adaptive Coarse Screening (Sec. 3.4): the sharded proxy-distance scan
 //! that produces the candidate pool C_t, and exact top-k selection that
 //! produces the golden subset S_t.
+//!
+//! The retrieval contract lives in [`backend`]: `RetrievalBackend` with the
+//! `FlatScan` (per-query reference), `BatchedScan` (one proxy-table pass
+//! per batch group) and `ClusterPruned` (IVF-style centroid-bound pruning)
+//! implementations. `scan::ProxyIndex` remains the low-level sharded-scan
+//! primitive the flat backend and the refine step are built on. See
+//! `index/README.md` for the backend selection guide.
 
+pub mod backend;
 pub mod scan;
 pub mod topk;
 
+pub use backend::{
+    BatchedScan, ClusterPruned, FlatScan, ProxyQuery, RetrievalBackend, RetrievalBackendKind,
+    RetrievalStats,
+};
 pub use scan::ProxyIndex;
 pub use topk::{top_k_smallest, BoundedMaxHeap};

@@ -28,7 +28,7 @@ impl Default for ProxyIndex {
 /// Branchless squared distance — auto-vectorises (the early-exit branch
 /// below defeats SIMD, so short rows use this instead).
 #[inline]
-fn sqdist_flat(a: &[f32], b: &[f32]) -> f32 {
+pub(crate) fn sqdist_flat(a: &[f32], b: &[f32]) -> f32 {
     let mut acc = [0.0f32; 8];
     let chunks = a.len() / 8;
     for s in 0..chunks {
@@ -47,7 +47,7 @@ fn sqdist_flat(a: &[f32], b: &[f32]) -> f32 {
 }
 
 #[inline]
-fn sqdist_early_exit(a: &[f32], b: &[f32], cutoff: f32) -> f32 {
+pub(crate) fn sqdist_early_exit(a: &[f32], b: &[f32], cutoff: f32) -> f32 {
     // 64-element strips with a cutoff check between strips: in the
     // late-diffusion regime the heap's worst distance is tiny, so most rows
     // exit after the first strip, while each strip stays vectorisable.

@@ -5,6 +5,9 @@
 use golddiff::data::synthetic::preset;
 use golddiff::denoiser::softmax::{exact_softmax, ss_aggregate};
 use golddiff::denoiser::{DenoiserKind, StepContext};
+use golddiff::index::backend::{
+    BatchedScan, ClusterPruned, FlatScan, ProxyQuery, RetrievalBackend,
+};
 use golddiff::index::scan::ProxyIndex;
 use golddiff::prop_assert;
 use golddiff::schedule::budget::BudgetSchedule;
@@ -140,6 +143,73 @@ fn prop_denoiser_outputs_always_finite_and_in_hull() {
                 out.f_hat[j] >= lo[j] - 1e-3 && out.f_hat[j] <= hi[j] + 1e-3,
                 "{kind:?} dim {j} out of hull"
             );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_retrieval_backends_agree_with_flat_reference() {
+    // FlatScan ≡ BatchedScan ≡ unpruned/exact ClusterPruned: for random
+    // queries (unconditional and class-conditional) every backend must
+    // return the identical row-id list — the exactness guarantee the
+    // engine's backend knob relies on.
+    let mut spec = preset("cifar-sim").unwrap().clone();
+    spec.n = 400;
+    let ds = Dataset::synthesize(&spec, 31);
+    let flat = FlatScan::new(2);
+    let batched = BatchedScan::new(2);
+    let pruned = ClusterPruned::build(&ds, 12, 0, 5);
+    let unpruned = ClusterPruned::build(&ds, 1, 0, 5); // single list = no pruning possible
+    forall(59, 30, |rng| {
+        let m = gen::usize_in(rng, 1, 128);
+        let q = gen::vec_normal(rng, ds.proxy_d, 1.0);
+        let class = if rng.below(3) == 0 {
+            Some(rng.below(ds.classes) as u32)
+        } else {
+            None
+        };
+        let want = flat.top_m(&ds, &q, m, class);
+        for (name, got) in [
+            ("batched", batched.top_m(&ds, &q, m, class)),
+            ("cluster-pruned", pruned.top_m(&ds, &q, m, class)),
+            ("cluster-unpruned", unpruned.top_m(&ds, &q, m, class)),
+        ] {
+            prop_assert!(got == want, "{name} != flat (m={m} class={class:?})");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_batched_group_scan_matches_per_query_scans() {
+    // a whole batch group through one pass == each query scanned alone
+    let mut spec = preset("mnist-sim").unwrap().clone();
+    spec.n = 350;
+    let ds = Dataset::synthesize(&spec, 37);
+    let batched = BatchedScan::new(2);
+    forall(67, 15, |rng| {
+        let b = gen::usize_in(rng, 1, 12);
+        let m = gen::usize_in(rng, 1, 64);
+        let qs: Vec<Vec<f32>> = (0..b).map(|_| gen::vec_normal(rng, ds.proxy_d, 1.0)).collect();
+        let classes: Vec<Option<u32>> = (0..b)
+            .map(|_| {
+                if rng.below(4) == 0 {
+                    Some(rng.below(ds.classes) as u32)
+                } else {
+                    None
+                }
+            })
+            .collect();
+        let queries: Vec<ProxyQuery> = qs
+            .iter()
+            .zip(&classes)
+            .map(|(q, &class)| ProxyQuery { proxy: q, class })
+            .collect();
+        let grouped = batched.top_m_batch(&ds, &queries, m);
+        for (i, query) in queries.iter().enumerate() {
+            let solo = batched.top_m(&ds, query.proxy, m, query.class);
+            prop_assert!(grouped[i] == solo, "query {i} of {b} diverged (m={m})");
         }
         Ok(())
     });

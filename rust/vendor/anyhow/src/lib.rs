@@ -1,0 +1,147 @@
+//! Minimal offline stand-in for the `anyhow` crate, vendored so the repo
+//! builds with zero network access. Covers the API surface this codebase
+//! uses: `Error`, `Result<T, E = Error>`, the `Context` extension trait on
+//! `Result`/`Option`, and the `anyhow!` / `bail!` / `ensure!` macros.
+//! Messages chain like anyhow's `{:#}` rendering (`context: cause`).
+
+use std::fmt::{self, Debug, Display};
+
+/// A boxed-free error: the rendered message chain.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn msg<M: Display>(message: M) -> Error {
+        Error {
+            msg: message.to_string(),
+        }
+    }
+
+    /// Prepend a context layer (the anyhow convention: outermost first).
+    pub fn context<C: Display>(self, context: C) -> Error {
+        Error {
+            msg: format!("{context}: {}", self.msg),
+        }
+    }
+}
+
+impl Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// Like the real anyhow: `Error` deliberately does NOT implement
+// `std::error::Error`, which is what makes this blanket conversion
+// coherent (`?` works on any std error type).
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// `anyhow::Result` with the defaulted error parameter the codebase relies
+/// on (e.g. `Result<T, SubmitError>` reuses the same alias).
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Context extension: `.context(..)` / `.with_context(|| ..)` on results
+/// and options.
+pub trait Context<T> {
+    fn context<C: Display>(self, context: C) -> Result<T>;
+    fn with_context<C: Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{context}: {e}")))
+    }
+
+    fn with_context<C: Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::Error::msg(::std::concat!(
+                "condition failed: ",
+                ::std::stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*)
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        std::fs::read_to_string("/definitely/not/a/path")?;
+        Ok(())
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        assert!(io_fail().is_err());
+    }
+
+    #[test]
+    fn context_chains_outermost_first() {
+        let e: Result<()> = io_fail().context("loading config");
+        let msg = format!("{:#}", e.unwrap_err());
+        assert!(msg.starts_with("loading config: "), "{msg}");
+    }
+
+    #[test]
+    fn option_context_and_macros() {
+        let v: Option<u32> = None;
+        let e = v.with_context(|| format!("missing {}", "thing")).unwrap_err();
+        assert_eq!(e.to_string(), "missing thing");
+        let e = anyhow!("x = {}", 3);
+        assert_eq!(e.to_string(), "x = 3");
+        fn f(flag: bool) -> Result<u32> {
+            ensure!(flag, "flag was {flag}");
+            Ok(1)
+        }
+        assert!(f(true).is_ok());
+        assert_eq!(f(false).unwrap_err().to_string(), "flag was false");
+    }
+}
