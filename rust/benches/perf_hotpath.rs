@@ -1,6 +1,9 @@
 //! §Perf microbenchmarks for the serving hot path (EXPERIMENTS.md §Perf):
 //!
-//!   0. retrieval backends — batched-vs-per-query multi-query scanning and
+//!   0. retrieval backends — batched-vs-per-query multi-query scanning,
+//!      the register-tiled kernel vs the scalar batched pass
+//!      (`kernel_tiled_vs_scalar`, with rows-per-pass and tiles-evaluated
+//!      telemetry), the batched refine ladder vs per-query refines, and
 //!      cluster-pruned-vs-flat screening (runs without the XLA runtime;
 //!      emits machine-readable `BENCH {json}` lines and *verifies* the
 //!      one-pass-per-group invariant via the backend pass counter);
@@ -85,6 +88,10 @@ fn bench_retrieval_backends(ds: &golddiff::Dataset) {
         "batched scan must pay exactly one pass per group call"
     );
     assert_eq!(snap.queries, 16 * BATCH as u64);
+    assert!(
+        snap.tiles_evaluated > 0,
+        "the default batched scan must run through the tiled kernel"
+    );
     let speedup = t_flat / t_batched.max(1e-12);
     println!("{:>58}  -> batched speedup {speedup:.2}x at batch {BATCH}", "");
     benchlib::emit_bench(
@@ -97,6 +104,90 @@ fn bench_retrieval_backends(ds: &golddiff::Dataset) {
             ("batched_secs", t_batched),
             ("speedup", speedup),
             ("passes_per_group", 1.0),
+        ],
+    );
+
+    // register-tiled kernel vs the PR 1 scalar batched pass: identical
+    // pass structure (one traversal per group), different inner loop
+    let scalar = BatchedScan::scalar(golddiff::util::threadpool::default_threads());
+    let t_scalar = bench(
+        &format!("kernel_scalar batched x{BATCH} (PR 1 row-major)"),
+        15,
+        || {
+            let _ = scalar.top_m_batch(ds, &queries, m);
+        },
+    );
+    let kernel_speedup = t_scalar / t_batched.max(1e-12);
+    let rows_per_pass = snap.rows_scanned as f64 / snap.proxy_passes.max(1) as f64;
+    println!(
+        "{:>58}  -> kernel_tiled speedup {kernel_speedup:.2}x, {rows_per_pass:.0} rows/pass, {} tiles",
+        "", snap.tiles_evaluated
+    );
+    benchlib::emit_bench(
+        "kernel_tiled_vs_scalar",
+        &[
+            ("batch", BATCH as f64),
+            ("m", m as f64),
+            ("n", ds.n as f64),
+            ("tiled_secs", t_batched),
+            ("scalar_secs", t_scalar),
+            ("speedup", kernel_speedup),
+            ("rows_per_pass", rows_per_pass),
+            ("tiles_evaluated", snap.tiles_evaluated as f64),
+            ("kernel_exits", snap.kernel_exits as f64),
+        ],
+    );
+
+    // batched refine ladder vs per-query refine over the same pools
+    let full_queries: Vec<Vec<f32>> = (0..BATCH)
+        .map(|_| {
+            let row = ds.row(rng.below(ds.n)).to_vec();
+            row.iter().map(|&v| v + rng.normal() * 0.2).collect()
+        })
+        .collect();
+    let fq_proxies: Vec<Vec<f32>> = full_queries
+        .iter()
+        .map(|q| golddiff::data::synthetic::proxy_embed(q, ds.h, ds.w, ds.c))
+        .collect();
+    let pq: Vec<ProxyQuery> = fq_proxies
+        .iter()
+        .map(|p| ProxyQuery {
+            proxy: p,
+            class: None,
+        })
+        .collect();
+    let pools = batched.top_m_batch(ds, &pq, m);
+    let k = (ds.n / 20).max(1);
+    let t_per = bench(&format!("refine per-query x{BATCH} top-{k}"), 15, || {
+        for (q, pool) in full_queries.iter().zip(&pools) {
+            let _ = flat.refine_top_k(ds, q, pool, k);
+        }
+    });
+    let qrefs: Vec<&[f32]> = full_queries.iter().map(|q| q.as_slice()).collect();
+    let poolrefs: Vec<&[u32]> = pools.iter().map(|p| p.as_slice()).collect();
+    let t_ladder = bench(&format!("refine ladder x{BATCH} top-{k} (union scan)"), 15, || {
+        let _ = batched.refine_top_k_batch(ds, &qrefs, &poolrefs, k);
+    });
+    let ladder_speedup = t_per / t_ladder.max(1e-12);
+    // per-call union size: reset, run once, snapshot (the timed loop above
+    // accumulates the counter across every iteration)
+    batched.reset_stats();
+    let _ = batched.refine_top_k_batch(ds, &qrefs, &poolrefs, k);
+    let refine_rows = batched.stats().refine_rows;
+    println!(
+        "{:>58}  -> ladder speedup {ladder_speedup:.2}x at batch {BATCH}, {refine_rows} union rows",
+        ""
+    );
+    benchlib::emit_bench(
+        "refine_ladder_batched_vs_perquery",
+        &[
+            ("batch", BATCH as f64),
+            ("m", m as f64),
+            ("k", k as f64),
+            ("perquery_secs", t_per),
+            ("ladder_secs", t_ladder),
+            ("speedup", ladder_speedup),
+            ("refine_rows", refine_rows as f64),
         ],
     );
 

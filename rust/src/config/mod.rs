@@ -39,6 +39,11 @@ pub struct EngineConfig {
     pub clusters: usize,
     /// cluster-pruned probe cap; 0 = exact centroid-bound pruning only
     pub nprobe: usize,
+    /// route proxy scans through the register-tiled kernel (scalar paths
+    /// remain available for reference runs / debugging)
+    pub kernel: bool,
+    /// queries per kernel register tile (clamped to 1..=8 at build)
+    pub kernel_tile_q: usize,
     /// rng seed
     pub seed: u64,
 }
@@ -62,6 +67,8 @@ impl Default for EngineConfig {
             backend: "batched".into(),
             clusters: 64,
             nprobe: 0,
+            kernel: true,
+            kernel_tile_q: crate::index::kernel::TILE_Q,
             seed: 0,
         }
     }
@@ -89,6 +96,8 @@ impl EngineConfig {
             .set("backend", self.backend.as_str())
             .set("clusters", self.clusters)
             .set("nprobe", self.nprobe)
+            .set("kernel", self.kernel)
+            .set("kernel_tile_q", self.kernel_tile_q)
             .set("seed", self.seed);
         j
     }
@@ -122,6 +131,11 @@ impl EngineConfig {
             backend: s("backend", &def.backend),
             clusters: n("clusters", def.clusters as f64) as usize,
             nprobe: n("nprobe", def.nprobe as f64) as usize,
+            kernel: j
+                .get("kernel")
+                .and_then(Json::as_bool)
+                .unwrap_or(def.kernel),
+            kernel_tile_q: n("kernel_tile_q", def.kernel_tile_q as f64) as usize,
             seed: n("seed", def.seed as f64) as u64,
         })
     }
@@ -161,6 +175,10 @@ impl EngineConfig {
         }
         self.clusters = args.usize_or("clusters", self.clusters);
         self.nprobe = args.usize_or("nprobe", self.nprobe);
+        if let Some(v) = args.get("kernel") {
+            self.kernel = matches!(v, "1" | "true" | "on" | "yes");
+        }
+        self.kernel_tile_q = args.usize_or("kernel-tile-q", self.kernel_tile_q);
         self.steps = args.usize_or("steps", self.steps);
         self.workers = args.usize_or("workers", self.workers);
         self.scan_threads = args.usize_or("scan-threads", self.scan_threads);
@@ -170,6 +188,18 @@ impl EngineConfig {
         self.m_max_frac = args.f64_or("m-max-frac", self.m_max_frac);
         self.k_min_frac = args.f64_or("k-min-frac", self.k_min_frac);
         self.k_max_frac = args.f64_or("k-max-frac", self.k_max_frac);
+    }
+
+    /// The retrieval-backend build knobs this config selects.
+    pub fn backend_opts(&self) -> crate::index::backend::BackendOpts {
+        crate::index::backend::BackendOpts {
+            threads: self.scan_threads,
+            clusters: self.clusters,
+            nprobe: self.nprobe,
+            seed: self.seed,
+            kernel: self.kernel,
+            tile_q: self.kernel_tile_q,
+        }
     }
 }
 
@@ -186,6 +216,8 @@ mod tests {
         c.backend = "cluster".into();
         c.clusters = 128;
         c.nprobe = 4;
+        c.kernel = false;
+        c.kernel_tile_q = 2;
         let rt = EngineConfig::from_json(&parse(&c.to_json().to_string_compact()).unwrap())
             .unwrap();
         assert_eq!(rt, c);
@@ -220,16 +252,27 @@ mod tests {
         assert_eq!(c.backend, "batched");
         assert_eq!(c.clusters, 64);
         assert_eq!(c.nprobe, 0);
+        assert!(c.kernel, "the tiled kernel is on by default");
+        assert_eq!(c.kernel_tile_q, crate::index::kernel::TILE_Q);
         assert!(crate::index::backend::RetrievalBackendKind::parse(&c.backend).is_some());
         let mut c = EngineConfig::default();
-        let raw: Vec<String> = ["--backend", "cluster", "--clusters", "32", "--nprobe", "2"]
-            .iter()
-            .map(|s| s.to_string())
-            .collect();
+        let raw: Vec<String> = [
+            "--backend", "cluster", "--clusters", "32", "--nprobe", "2", "--kernel", "off",
+            "--kernel-tile-q", "4",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
         c.apply_args(&crate::util::cli::Args::parse(&raw));
         assert_eq!(c.backend, "cluster");
         assert_eq!(c.clusters, 32);
         assert_eq!(c.nprobe, 2);
+        assert!(!c.kernel);
+        assert_eq!(c.kernel_tile_q, 4);
+        let opts = c.backend_opts();
+        assert!(!opts.kernel);
+        assert_eq!(opts.tile_q, 4);
+        assert_eq!(opts.clusters, 32);
     }
 
     #[test]

@@ -29,7 +29,7 @@ use super::request::{GenRequest, GenResponse, StepTelemetry};
 use super::stats::EngineStats;
 use super::xla_denoiser::XlaDenoiser;
 use crate::config::EngineConfig;
-use crate::data::dataset::Dataset;
+use crate::data::dataset::{Dataset, IvfPartition};
 use crate::data::store;
 use crate::denoiser::{DenoiserKind, StepContext};
 use crate::index::backend::{RetrievalBackend, RetrievalBackendKind};
@@ -70,19 +70,32 @@ impl Engine {
     /// Load (or synthesise) the dataset, open the runtime, spawn the
     /// executor thread.
     pub fn start(cfg: EngineConfig) -> Result<Engine> {
-        let ds = Arc::new(
-            store::load_or_synthesize(&cfg.data_dir, &cfg.preset, cfg.seed)
-                .context("loading dataset")?,
-        );
+        let mut ds = store::load_or_synthesize(&cfg.data_dir, &cfg.preset, cfg.seed)
+            .context("loading dataset")?;
         let kind = ScheduleKind::parse(&cfg.schedule)
             .with_context(|| format!("unknown schedule {}", cfg.schedule))?;
         let sched = NoiseSchedule::new(kind, cfg.steps);
         let backend_kind = RetrievalBackendKind::parse(&cfg.backend)
             .with_context(|| format!("unknown retrieval backend {}", cfg.backend))?;
-        // built once per engine (cluster-pruned runs its k-means here) and
-        // shared by every denoiser so telemetry aggregates in one place
-        let backend: Arc<dyn RetrievalBackend> =
-            backend_kind.build(&ds, cfg.scan_threads, cfg.clusters, cfg.nprobe, cfg.seed);
+        if backend_kind == RetrievalBackendKind::ClusterPruned {
+            // the IVF partition persists in the .gds store; only a config
+            // mismatch (lists/seed) pays the k-means here, and the result
+            // is written back (best-effort) so the next start skips it
+            let lists = cfg.clusters.clamp(1, ds.n.max(1));
+            let stale = ds
+                .ivf
+                .as_ref()
+                .is_none_or(|p| !p.matches(lists, cfg.seed));
+            if stale {
+                ds.ivf = Some(IvfPartition::compute(&ds, lists, cfg.seed));
+                let _ = store::save(&ds, &store::store_path(&cfg.data_dir, &cfg.preset));
+            }
+        }
+        let ds = Arc::new(ds);
+        // built once per engine (cluster-pruned reuses the persisted IVF
+        // partition here) and shared by every denoiser so telemetry
+        // aggregates in one place
+        let backend: Arc<dyn RetrievalBackend> = backend_kind.build(&ds, cfg.backend_opts());
         let runtime = SendRuntime(Runtime::new(&cfg.artifacts_dir)?);
 
         let queue = Arc::new(BoundedQueue::<Submission>::new(cfg.queue_depth));
@@ -468,6 +481,41 @@ mod tests {
             "batched ticks must share passes: {passes} passes for {queries} queries"
         );
         eng.shutdown();
+    }
+
+    #[test]
+    fn cluster_engine_persists_ivf_partition() {
+        // satellite: the first cluster start computes + persists the IVF
+        // partition; the store then carries it for later starts to reuse
+        if !std::path::Path::new("artifacts/manifest.json").exists() {
+            return;
+        }
+        let data_dir = std::env::temp_dir().join("golddiff_engine_ivf_test");
+        std::fs::remove_dir_all(&data_dir).ok();
+        let cfg = EngineConfig {
+            preset: "moons".into(),
+            data_dir: data_dir.clone(),
+            backend: "cluster".into(),
+            clusters: 8,
+            ..Default::default()
+        };
+        let eng = Engine::start(cfg.clone()).unwrap();
+        let resp = eng.generate(DenoiserKind::GoldDiff, 5, None).unwrap();
+        assert!(resp.sample.iter().all(|v| v.is_finite()));
+        eng.shutdown();
+
+        let ds = store::load(&store::store_path(&data_dir, "moons")).unwrap();
+        let ivf = ds.ivf.expect("cluster start must persist the partition");
+        assert!(ivf.matches(8usize.clamp(1, ds.n.max(1)), cfg.seed));
+        assert_eq!(ivf.assignments.len(), ds.n);
+
+        // a second start with the same config serves identically off the
+        // persisted partition (no k-means mismatch)
+        let eng2 = Engine::start(cfg).unwrap();
+        let again = eng2.generate(DenoiserKind::GoldDiff, 5, None).unwrap();
+        assert_eq!(again.sample, resp.sample);
+        eng2.shutdown();
+        std::fs::remove_dir_all(&data_dir).ok();
     }
 
     #[test]

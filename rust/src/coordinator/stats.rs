@@ -26,8 +26,14 @@ pub struct EngineStats {
     /// cumulative backend counters (latest snapshot)
     pub proxy_passes: u64,
     pub retrieval_queries: u64,
+    pub rows_scanned: u64,
     pub clusters_scanned: u64,
     pub clusters_pruned: u64,
+    /// kernel telemetry: (query-group × row-block) tiles evaluated,
+    /// early-retired tiles, and refine-ladder row visits
+    pub tiles_evaluated: u64,
+    pub kernel_exits: u64,
+    pub refine_rows: u64,
 }
 
 impl Default for EngineStats {
@@ -46,8 +52,12 @@ impl Default for EngineStats {
             backend: String::new(),
             proxy_passes: 0,
             retrieval_queries: 0,
+            rows_scanned: 0,
             clusters_scanned: 0,
             clusters_pruned: 0,
+            tiles_evaluated: 0,
+            kernel_exits: 0,
+            refine_rows: 0,
         }
     }
 }
@@ -79,8 +89,23 @@ impl EngineStats {
     pub fn record_backend(&mut self, snap: crate::index::backend::RetrievalStats) {
         self.proxy_passes = snap.proxy_passes;
         self.retrieval_queries = snap.queries;
+        self.rows_scanned = snap.rows_scanned;
         self.clusters_scanned = snap.clusters_scanned;
         self.clusters_pruned = snap.clusters_pruned;
+        self.tiles_evaluated = snap.tiles_evaluated;
+        self.kernel_exits = snap.kernel_exits;
+        self.refine_rows = snap.refine_rows;
+    }
+
+    /// Proxy rows evaluated per full table traversal (≈ n for a batched
+    /// group — each row-block load serves the whole query tile — while the
+    /// flat backend pays n rows per query).
+    pub fn rows_per_pass(&self) -> f64 {
+        if self.proxy_passes == 0 {
+            0.0
+        } else {
+            self.rows_scanned as f64 / self.proxy_passes as f64
+        }
     }
 
     pub fn to_json(&self) -> Json {
@@ -101,8 +126,13 @@ impl EngineStats {
             .set("retrieval_backend", self.backend.as_str())
             .set("proxy_passes", self.proxy_passes as usize)
             .set("retrieval_queries", self.retrieval_queries as usize)
+            .set("rows_scanned", self.rows_scanned as usize)
+            .set("rows_per_pass", self.rows_per_pass())
             .set("clusters_scanned", self.clusters_scanned as usize)
-            .set("clusters_pruned", self.clusters_pruned as usize);
+            .set("clusters_pruned", self.clusters_pruned as usize)
+            .set("tiles_evaluated", self.tiles_evaluated as usize)
+            .set("kernel_exits", self.kernel_exits as usize)
+            .set("refine_rows", self.refine_rows as usize);
         j
     }
 }
@@ -131,15 +161,22 @@ mod tests {
         let mut s = EngineStats::new();
         s.backend = "cluster".into();
         s.record_backend(crate::index::backend::RetrievalStats {
-            proxy_passes: 3,
+            proxy_passes: 4,
             queries: 12,
             rows_scanned: 1000,
             clusters_scanned: 40,
             clusters_pruned: 24,
+            tiles_evaluated: 96,
+            kernel_exits: 7,
+            refine_rows: 320,
         });
         let j = s.to_json();
         assert_eq!(j.get("clusters_pruned").unwrap().as_f64(), Some(24.0));
         assert_eq!(j.get("retrieval_queries").unwrap().as_f64(), Some(12.0));
+        assert_eq!(j.get("tiles_evaluated").unwrap().as_f64(), Some(96.0));
+        assert_eq!(j.get("kernel_exits").unwrap().as_f64(), Some(7.0));
+        assert_eq!(j.get("refine_rows").unwrap().as_f64(), Some(320.0));
+        assert_eq!(j.get("rows_per_pass").unwrap().as_f64(), Some(250.0));
         assert_eq!(
             j.get("retrieval_backend").unwrap().as_str(),
             Some("cluster")

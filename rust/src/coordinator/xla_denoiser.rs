@@ -12,7 +12,12 @@
 //! the engine shares across its denoisers; [`XlaDenoiser::step_group`] runs
 //! **one** batched coarse retrieval for a whole batcher group before any
 //! dispatch happens, so a tick of B GoldDiff sequences pays a single
-//! proxy-table pass (with the batched backend) instead of B.
+//! proxy-table pass (with the batched backend) instead of B. Since the
+//! kernel refactor that pass runs as register tiles over the dataset's
+//! structure-of-arrays proxy blocks (`index::kernel`), and the exact refine
+//! behind `blended_golden_rows_batch` is the batched ladder: the group's
+//! candidate-pool union is scanned once, with one bounded heap per
+//! sequence, instead of one refine pass per sequence.
 //!
 //! Full-scan methods (Optimal / PCA / Kamb baselines) keep their padded
 //! candidate matrix *device-resident* (uploaded once, reused every step) —

@@ -5,12 +5,53 @@
 use super::cluster::{kmeans, local_pca};
 use super::gmm::GmmSpec;
 use super::synthetic::{build_population, proxy_embed_all, PresetSpec};
+use crate::index::kernel::ProxyBlocks;
 use crate::util::rng::Pcg64;
 
 /// Number of local-PCA clusters.
 pub const N_CLUSTERS: usize = 16;
 /// Rank of the local PCA bases (matches python/compile/presets.PCA_RANK).
 pub const PCA_RANK: usize = 32;
+
+/// An IVF k-means partition of the proxy table, keyed by `(lists, seed)`.
+///
+/// Computed once (deterministically) and persisted in the `.gds` store so a
+/// `ClusterPruned` engine start can skip k-means entirely when the stored
+/// partition matches the config. Old stores without the section simply load
+/// `ivf: None` and trigger a rebuild.
+#[derive(Debug, Clone, PartialEq)]
+pub struct IvfPartition {
+    /// number of IVF lists the partition was built with
+    pub lists: usize,
+    /// rng seed the k-means ran under
+    pub seed: u64,
+    /// centroids [lists × proxy_d]
+    pub centroids: Vec<f32>,
+    /// list assignment per row [n]
+    pub assignments: Vec<u32>,
+}
+
+impl IvfPartition {
+    /// Deterministic k-means over the proxy table — the single source of
+    /// truth for the IVF substrate (`ClusterPruned` reuses this verbatim,
+    /// so a persisted partition is bit-identical to a fresh one).
+    pub fn compute(ds: &Dataset, lists: usize, seed: u64) -> IvfPartition {
+        let lists = lists.clamp(1, ds.n.max(1));
+        let mut rng = Pcg64::with_stream(seed, 0x1f5);
+        let (centroids, assignments) = kmeans(&ds.proxies, ds.n, ds.proxy_d, lists, 8, &mut rng);
+        IvfPartition {
+            lists,
+            seed,
+            centroids,
+            assignments,
+        }
+    }
+
+    /// Does this partition serve a `(lists, seed)` config verbatim?
+    pub fn matches(&self, lists: usize, seed: u64) -> bool {
+        self.lists == lists && self.seed == seed
+    }
+}
 
 #[derive(Debug, Clone)]
 pub struct Dataset {
@@ -30,8 +71,14 @@ pub struct Dataset {
     pub labels: Vec<u32>,
     /// s=1/4 proxy table [n × proxy_d]
     pub proxies: Vec<f32>,
+    /// the proxy table transposed into cache-friendly SoA row blocks — the
+    /// resident layout the tiled scan kernel reads (built once here so
+    /// every backend shares one copy)
+    pub proxy_blocks: ProxyBlocks,
     /// per-class row indices (conditional scans)
     pub class_rows: Vec<Vec<u32>>,
+    /// persisted IVF partition, if the `.gds` store carried one
+    pub ivf: Option<IvfPartition>,
 
     /// global Gaussian stats (Wiener)
     pub mean: Vec<f32>,
@@ -69,6 +116,7 @@ impl Dataset {
         let d = spec.d();
         assert_eq!(data.len(), n * d);
         let proxies = proxy_embed_all(&data, n, spec.h, spec.w, spec.c);
+        let proxy_blocks = ProxyBlocks::build(&proxies, n, spec.proxy_d());
 
         let mut mean = vec![0.0f32; d];
         for i in 0..n {
@@ -144,7 +192,9 @@ impl Dataset {
             data,
             labels,
             proxies,
+            proxy_blocks,
             class_rows,
+            ivf: None,
             mean,
             var,
             centroids,
@@ -267,5 +317,41 @@ mod tests {
     fn variance_is_positive() {
         let ds = tiny();
         assert!(ds.var.iter().all(|&v| v > 0.0));
+    }
+
+    #[test]
+    fn proxy_blocks_mirror_the_proxy_table() {
+        use crate::index::kernel::BLOCK_ROWS;
+        let ds = tiny();
+        assert_eq!(ds.proxy_blocks.rows, ds.n);
+        assert_eq!(ds.proxy_blocks.dim, ds.proxy_d);
+        for i in [0usize, 1, 31, 32, 299] {
+            let (b, lane) = (i / BLOCK_ROWS, i % BLOCK_ROWS);
+            assert_eq!(ds.proxy_blocks.id(b, lane), i as u32);
+            for j in 0..ds.proxy_d {
+                assert_eq!(
+                    ds.proxy_blocks.block(b)[j * BLOCK_ROWS + lane],
+                    ds.proxy_row(i)[j],
+                    "row {i} dim {j}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn ivf_partition_is_deterministic_and_clamped() {
+        let ds = tiny();
+        let a = IvfPartition::compute(&ds, 8, 5);
+        let b = IvfPartition::compute(&ds, 8, 5);
+        assert_eq!(a, b);
+        assert!(a.matches(8, 5) && !a.matches(8, 6) && !a.matches(9, 5));
+        assert_eq!(a.assignments.len(), ds.n);
+        assert_eq!(a.centroids.len(), 8 * ds.proxy_d);
+        // lists clamp to n (tiny corpus so the degenerate k-means is cheap)
+        let mut spec = preset("moons").unwrap().clone();
+        spec.n = 40;
+        let small = Dataset::synthesize(&spec, 2);
+        let huge = IvfPartition::compute(&small, 10_000, 1);
+        assert_eq!(huge.lists, small.n, "lists clamp to n");
     }
 }

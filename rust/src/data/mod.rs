@@ -9,5 +9,5 @@ pub mod gmm;
 pub mod store;
 pub mod synthetic;
 
-pub use dataset::Dataset;
+pub use dataset::{Dataset, IvfPartition};
 pub use gmm::GmmSpec;

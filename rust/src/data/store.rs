@@ -5,6 +5,12 @@
 //! and element count, so readers can seek directly; all tensors are f32 or
 //! u32. The population GMM rides along so the closed-form oracle can be
 //! reconstructed from the file alone.
+//!
+//! Version 2 optionally appends the IVF k-means partition
+//! (`ivf_centroids` / `ivf_assign` sections, keyed by the `ivf_lists` /
+//! `ivf_seed` header fields) so a `ClusterPruned` engine start can skip
+//! k-means. Readers ignore unknown sections and treat a missing partition
+//! as "rebuild", so version-1 stores keep loading unchanged.
 
 use std::fs::File;
 use std::io::{BufReader, BufWriter, Read, Seek, SeekFrom, Write};
@@ -12,20 +18,36 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
-use super::dataset::Dataset;
+use super::dataset::{Dataset, IvfPartition};
 use super::gmm::GmmSpec;
+use crate::index::kernel::ProxyBlocks;
 use crate::util::json::{parse, Json};
 
 const MAGIC: &[u8; 4] = b"GDS1";
+/// Header format version: 2 added the optional IVF partition sections.
+const VERSION: usize = 2;
 
 /// Serialise a dataset (with its population GMM) to `path`.
+///
+/// The write is atomic: sections stream into a sibling `.tmp` file that is
+/// renamed over `path` only after a successful flush, so a crash mid-save
+/// (or an engine start rewriting the store to persist its IVF partition
+/// while another process loads it) can never leave a torn store behind.
 pub fn save(ds: &Dataset, path: &Path) -> Result<()> {
     if let Some(parent) = path.parent() {
         std::fs::create_dir_all(parent)?;
     }
+    let tmp = path.with_extension("gds.tmp");
+    write_store(ds, &tmp)?;
+    std::fs::rename(&tmp, path).with_context(|| format!("rename {tmp:?} -> {path:?}"))?;
+    Ok(())
+}
+
+fn write_store(ds: &Dataset, path: &Path) -> Result<()> {
     let mut header = Json::obj();
     header
         .set("name", ds.name.as_str())
+        .set("version", VERSION)
         .set("n", ds.n)
         .set("h", ds.h)
         .set("w", ds.w)
@@ -35,6 +57,13 @@ pub fn save(ds: &Dataset, path: &Path) -> Result<()> {
         .set("classes", ds.classes)
         .set("conditional", ds.conditional)
         .set("gmm_components", ds.gmm.n_components());
+    if let Some(ivf) = &ds.ivf {
+        // the seed rides as a string so u64 values survive the f64 JSON
+        // number path losslessly
+        header
+            .set("ivf_lists", ivf.lists)
+            .set("ivf_seed", ivf.seed.to_string());
+    }
 
     // We need section offsets before writing the header, so write sections
     // to a temp buffer plan first: compute sizes, then emit.
@@ -53,7 +82,7 @@ pub fn save(ds: &Dataset, path: &Path) -> Result<()> {
         F(&'a str, &'a [f32]),
         U(&'a str, &'a [u32]),
     }
-    let plan = [
+    let mut plan = vec![
         Sec::F("data", &ds.data),
         Sec::U("labels", &ds.labels),
         Sec::F("proxies", &ds.proxies),
@@ -68,6 +97,10 @@ pub fn save(ds: &Dataset, path: &Path) -> Result<()> {
         Sec::F("gmm_means", &gmm_means),
         Sec::F("gmm_vars", &gmm_vars),
     ];
+    if let Some(ivf) = &ds.ivf {
+        plan.push(Sec::F("ivf_centroids", &ivf.centroids));
+        plan.push(Sec::U("ivf_assign", &ivf.assignments));
+    }
 
     // First pass: build section metadata assuming offsets start at 0 (we
     // prepend magic + header later, storing offsets relative to data start).
@@ -197,6 +230,27 @@ pub fn load(path: &Path) -> Result<Dataset> {
         class_rows[y as usize].push(i as u32);
     }
 
+    let proxy_d = header.num_field("proxy_d")? as usize;
+
+    // version-2 stores may carry the IVF partition; anything older (or a
+    // store saved before a cluster engine ran) yields None → k-means rebuild
+    let ivf = match (
+        header.get("ivf_lists").and_then(Json::as_f64),
+        header
+            .get("ivf_seed")
+            .and_then(Json::as_str)
+            .and_then(|s| s.parse::<u64>().ok()),
+    ) {
+        (Some(lists), Some(seed)) => Some(IvfPartition {
+            lists: lists as usize,
+            seed,
+            centroids: read_f32(&mut rd, "ivf_centroids")?,
+            assignments: read_u32(&mut rd, "ivf_assign")?,
+        }),
+        _ => None,
+    };
+
+    let proxy_blocks = ProxyBlocks::build(&proxies, n, proxy_d);
     Ok(Dataset {
         name: header.str_field("name")?.to_string(),
         n,
@@ -204,13 +258,15 @@ pub fn load(path: &Path) -> Result<Dataset> {
         w: header.num_field("w")? as usize,
         c: header.num_field("c")? as usize,
         d,
-        proxy_d: header.num_field("proxy_d")? as usize,
+        proxy_d,
         classes,
         conditional: header.get("conditional").and_then(Json::as_bool).unwrap_or(false),
         data,
         labels,
         proxies,
+        proxy_blocks,
         class_rows,
+        ivf,
         mean,
         var,
         centroids,
@@ -272,6 +328,34 @@ mod tests {
         assert!(store_path(&dir, "moons").exists());
         let b = load_or_synthesize(&dir, "moons", 999).unwrap(); // seed ignored on cache hit
         assert_eq!(a.data, b.data);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn ivf_partition_roundtrips_and_legacy_stores_load_without_it() {
+        let mut spec = preset("moons").unwrap().clone();
+        spec.n = 96;
+        let mut ds = Dataset::synthesize(&spec, 13);
+        let dir = std::env::temp_dir().join("golddiff_store_ivf_test");
+        let path = dir.join("moons.gds");
+
+        // "legacy" store: saved without a partition → loads as None
+        save(&ds, &path).unwrap();
+        assert!(load(&path).unwrap().ivf.is_none());
+
+        // version-2 store with the partition riding along
+        ds.ivf = Some(IvfPartition::compute(&ds, 6, 0xdead_beef_0042));
+        save(&ds, &path).unwrap();
+        let rt = load(&path).unwrap();
+        let got = rt.ivf.expect("partition must roundtrip");
+        let want = ds.ivf.as_ref().unwrap();
+        assert_eq!(got.lists, want.lists);
+        assert_eq!(got.seed, want.seed, "u64 seed survives the JSON header");
+        assert_eq!(got.centroids, want.centroids);
+        assert_eq!(got.assignments, want.assignments);
+        // the rest of the dataset is untouched by the new sections
+        assert_eq!(rt.data, ds.data);
+        assert_eq!(rt.proxies, ds.proxies);
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -65,9 +65,10 @@ pub fn blended_golden_rows(
 
 /// Batched variant of [`blended_golden_rows`]: one coarse retrieval for the
 /// whole group (the engine batches sequences that share a sampling point,
-/// so every query shares (m, k, g)), then per-query exact refine + breadth
-/// fill. With the `BatchedScan` backend the group pays a *single* pass over
-/// the proxy table.
+/// so every query shares (m, k, g)), then one batched exact refine over the
+/// union of the group's candidate pools, then per-query breadth fill. With
+/// the `BatchedScan` backend the group pays a *single* tiled pass over the
+/// proxy table and a *single* union scan of the refine candidates.
 ///
 /// All contexts must be at the same sampling point; classes may differ.
 pub fn blended_golden_rows_batch(
@@ -110,11 +111,13 @@ pub fn blended_golden_rows_batch(
             })
             .collect();
         let cands = backend.top_m_batch(ds, &queries, m);
-        cands
-            .iter()
-            .zip(&qs)
-            .map(|(pool, q)| backend.refine_top_k(ds, q, pool, k_precise))
-            .collect()
+        // the batched refine ladder: one scan of the group's candidate-pool
+        // union per tick, each full-resolution row loaded once and scored
+        // against every query whose pool holds it, one bounded heap per
+        // query (the trait default degrades to per-query refines)
+        let qrefs: Vec<&[f32]> = qs.iter().map(|q| q.as_slice()).collect();
+        let pools: Vec<&[u32]> = cands.iter().map(|p| p.as_slice()).collect();
+        backend.refine_top_k_batch(ds, &qrefs, &pools, k_precise)
     } else {
         vec![Vec::new(); xs.len()]
     };

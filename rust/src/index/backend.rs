@@ -6,31 +6,44 @@
 //! turns the retrieval step into a trait with three implementations:
 //!
 //! * [`FlatScan`] — the original sharded scan, extracted behind the trait.
-//!   Bit-stable with the seed `ProxyIndex` semantics; the tested reference.
+//!   `FlatScan::scalar` keeps the seed `ProxyIndex` semantics bit-stable;
+//!   the default constructor routes through the tiled kernel.
 //! * [`BatchedScan`] — a multi-query scan that makes **one** pass over the
 //!   proxy table for a whole batch group, keeping one bounded heap per
-//!   query. The corpus traversal is memory-bandwidth dominated, so
-//!   amortising it across the batch is where serving throughput comes from.
+//!   query. Since the kernel refactor the pass itself runs through
+//!   [`kernel::KernelScan`]: the proxy table lives in a structure-of-arrays
+//!   block layout and every row-block load is shared by a register tile of
+//!   up to [`kernel::TILE_Q`] queries, so the scan is FLOP-efficient as
+//!   well as pass-efficient.
 //! * [`ClusterPruned`] — an IVF-style backend: k-means over the proxy table
-//!   (reusing `data::cluster::kmeans`) at build time, then per-query
-//!   pruning of whole clusters via the exact triangle-inequality lower
-//!   bound `d(q, x) ≥ d(q, c) − r_c`. With `nprobe == 0` results are
-//!   *exact* (identical to `FlatScan` up to distance ties); `nprobe > 0`
-//!   is the approximate fallback that scans only the nprobe nearest lists.
+//!   (reused from a persisted [`IvfPartition`] when the `.gds` store has a
+//!   matching one) at build time, then per-query pruning of whole clusters
+//!   via the exact triangle-inequality lower bound `d(q, x) ≥ d(q, c) −
+//!   r_c`. Member lists are kept **per class** as pre-blocked kernel
+//!   tables, so conditional scans probe class-filtered lists (with the
+//!   tighter per-class radius bound) instead of filtering labels
+//!   row-by-row. With `nprobe == 0` results are *exact* (identical to
+//!   `FlatScan` up to distance ties); `nprobe > 0` is the approximate
+//!   fallback that scans only the nprobe nearest lists.
 //!
-//! All backends share the exact full-resolution refine (Eq. 5) and expose
-//! atomic telemetry counters (`proxy_passes`, `rows_scanned`,
-//! `clusters_pruned`, …) that the engine's stats and the perf benches
-//! scrape. See `index/README.md` for when each backend wins.
+//! All backends share the exact full-resolution refine (Eq. 5). Groups go
+//! through [`RetrievalBackend::refine_top_k_batch`] — the batched refine
+//! ladder ([`batched_refine`]): the union of the group's candidate pools is
+//! scanned once, each full-resolution row is loaded once and scored against
+//! every query whose pool contains it, and one bounded heap per query
+//! collects the top-k. Backends expose atomic telemetry counters
+//! (`proxy_passes`, `rows_scanned`, `tiles_evaluated`, `clusters_pruned`,
+//! …) that the engine's stats and the perf benches scrape. See
+//! `index/README.md` for when each backend wins.
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
+use super::kernel::{self, KernelScan, KernelStats, ProxyBlocks};
 use super::scan::ProxyIndex;
 use super::topk::BoundedMaxHeap;
-use crate::data::cluster::kmeans;
-use crate::data::dataset::Dataset;
-use crate::util::rng::Pcg64;
+use crate::data::dataset::{Dataset, IvfPartition};
 use crate::util::threadpool::parallel_chunks;
 
 /// One coarse query of a batch: the s=1/4 proxy embedding plus the optional
@@ -49,12 +62,18 @@ pub struct RetrievalStats {
     pub proxy_passes: u64,
     /// individual coarse queries answered
     pub queries: u64,
-    /// proxy rows actually visited across all queries
+    /// proxy rows whose distances were evaluated across all queries
     pub rows_scanned: u64,
     /// clusters scanned (ClusterPruned only)
     pub clusters_scanned: u64,
     /// clusters skipped via the centroid lower bound or nprobe cap
     pub clusters_pruned: u64,
+    /// (query-group × row-block) tiles the kernel evaluated
+    pub tiles_evaluated: u64,
+    /// (query, block) tiles retired early by the strip bound
+    pub kernel_exits: u64,
+    /// full-resolution rows visited by the batched refine ladder
+    pub refine_rows: u64,
 }
 
 #[derive(Debug, Default)]
@@ -64,6 +83,9 @@ struct Counters {
     rows_scanned: AtomicU64,
     clusters_scanned: AtomicU64,
     clusters_pruned: AtomicU64,
+    tiles_evaluated: AtomicU64,
+    kernel_exits: AtomicU64,
+    refine_rows: AtomicU64,
 }
 
 impl Counters {
@@ -74,7 +96,16 @@ impl Counters {
             rows_scanned: self.rows_scanned.load(Ordering::Relaxed),
             clusters_scanned: self.clusters_scanned.load(Ordering::Relaxed),
             clusters_pruned: self.clusters_pruned.load(Ordering::Relaxed),
+            tiles_evaluated: self.tiles_evaluated.load(Ordering::Relaxed),
+            kernel_exits: self.kernel_exits.load(Ordering::Relaxed),
+            refine_rows: self.refine_rows.load(Ordering::Relaxed),
         }
+    }
+
+    fn record_kernel(&self, st: &KernelStats) {
+        self.rows_scanned.fetch_add(st.rows, Ordering::Relaxed);
+        self.tiles_evaluated.fetch_add(st.tiles, Ordering::Relaxed);
+        self.kernel_exits.fetch_add(st.strip_exits, Ordering::Relaxed);
     }
 
     fn reset(&self) {
@@ -83,6 +114,9 @@ impl Counters {
         self.rows_scanned.store(0, Ordering::Relaxed);
         self.clusters_scanned.store(0, Ordering::Relaxed);
         self.clusters_pruned.store(0, Ordering::Relaxed);
+        self.tiles_evaluated.store(0, Ordering::Relaxed);
+        self.kernel_exits.store(0, Ordering::Relaxed);
+        self.refine_rows.store(0, Ordering::Relaxed);
     }
 }
 
@@ -101,7 +135,7 @@ pub trait RetrievalBackend: Send + Sync {
 
     /// Coarse top-m for a whole batch group sharing one budget `m`. The
     /// default loops `top_m`; `BatchedScan` overrides it with a one-pass
-    /// traversal.
+    /// tiled traversal.
     fn top_m_batch(&self, ds: &Dataset, queries: &[ProxyQuery], m: usize) -> Vec<Vec<u32>> {
         queries
             .iter()
@@ -113,6 +147,24 @@ pub trait RetrievalBackend: Send + Sync {
     /// CPU reference used by every backend.
     fn refine_top_k(&self, ds: &Dataset, q: &[f32], cands: &[u32], k: usize) -> Vec<u32> {
         exact_refine(ds, q, cands, k, crate::util::threadpool::default_threads())
+    }
+
+    /// Exact refine for a whole tick group: each query keeps its own
+    /// candidate pool and budget `k`. The default loops `refine_top_k`;
+    /// the batched backends override it with the union-scan refine ladder
+    /// ([`batched_refine`]) so each full-resolution row is loaded once per
+    /// group instead of once per query.
+    fn refine_top_k_batch(
+        &self,
+        ds: &Dataset,
+        qs: &[&[f32]],
+        pools: &[&[u32]],
+        k: usize,
+    ) -> Vec<Vec<u32>> {
+        qs.iter()
+            .zip(pools)
+            .map(|(q, pool)| self.refine_top_k(ds, q, pool, k))
+            .collect()
     }
 
     /// Cumulative telemetry since construction (or the last reset).
@@ -129,23 +181,135 @@ pub fn exact_refine(ds: &Dataset, q: &[f32], cands: &[u32], k: usize, threads: u
 }
 
 // ---------------------------------------------------------------------------
+// Batched refine ladder
+// ---------------------------------------------------------------------------
+
+/// Exact batched refine: scan the union of the group's candidate pools
+/// once, scoring each full-resolution row against every query whose pool
+/// contains it (queries are chunked into ≤64-wide membership masks). Each
+/// query's result is identical to a per-query [`exact_refine`] over its own
+/// pool — only the row visit order differs, so exact f32 distance ties are
+/// the sole divergence surface, as everywhere else in `index`. Pools must
+/// hold distinct row ids (coarse `top_m` output always does).
+///
+/// Returns the per-query top-k lists plus the number of distinct
+/// full-resolution rows visited (the refine ladder's bandwidth telemetry).
+pub fn batched_refine(
+    ds: &Dataset,
+    qs: &[&[f32]],
+    pools: &[&[u32]],
+    k: usize,
+    threads: usize,
+) -> (Vec<Vec<u32>>, u64) {
+    assert_eq!(qs.len(), pools.len());
+    let mut out = Vec::with_capacity(qs.len());
+    let mut rows_visited = 0u64;
+    for (qc, pc) in qs.chunks(64).zip(pools.chunks(64)) {
+        let (res, rows) = batched_refine_group(ds, qc, pc, k, threads);
+        out.extend(res);
+        rows_visited += rows;
+    }
+    (out, rows_visited)
+}
+
+fn batched_refine_group(
+    ds: &Dataset,
+    qs: &[&[f32]],
+    pools: &[&[u32]],
+    k: usize,
+    threads: usize,
+) -> (Vec<Vec<u32>>, u64) {
+    // union of the pools with a per-row membership mask, in deterministic
+    // (ascending row id) order so shard merges stay reproducible
+    let mut mask: HashMap<u32, u64> = HashMap::new();
+    for (j, pool) in pools.iter().enumerate() {
+        for &gid in *pool {
+            *mask.entry(gid).or_insert(0) |= 1u64 << j;
+        }
+    }
+    let mut union: Vec<(u32, u64)> = mask.into_iter().collect();
+    union.sort_unstable_by_key(|e| e.0);
+
+    // per-query caps mirror the per-query refine's clamp exactly
+    let caps: Vec<usize> = pools.iter().map(|p| k.max(1).min(p.len().max(1))).collect();
+    let threads = if union.len() * ds.d < 2_000_000 {
+        1
+    } else {
+        threads.max(1)
+    };
+    let shards = parallel_chunks(union.len(), threads, |_, s, e| {
+        let mut heaps: Vec<BoundedMaxHeap> =
+            caps.iter().map(|&c| BoundedMaxHeap::new(c)).collect();
+        for &(gid, bits) in &union[s..e] {
+            let row = ds.row(gid as usize);
+            let mut bits = bits;
+            while bits != 0 {
+                let j = bits.trailing_zeros() as usize;
+                bits &= bits - 1;
+                let d = super::scan::sqdist_early_exit(qs[j], row, heaps[j].worst());
+                if d.is_finite() {
+                    heaps[j].push(d, gid);
+                }
+            }
+        }
+        heaps
+    });
+    let mut merged: Vec<BoundedMaxHeap> = caps.iter().map(|&c| BoundedMaxHeap::new(c)).collect();
+    for shard in shards {
+        for (m, h) in merged.iter_mut().zip(shard) {
+            m.merge(h);
+        }
+    }
+    let rows = union.len() as u64;
+    (
+        merged
+            .into_iter()
+            .map(|h| h.into_sorted().into_iter().map(|(_, i)| i).collect())
+            .collect(),
+        rows,
+    )
+}
+
+// ---------------------------------------------------------------------------
 // FlatScan
 // ---------------------------------------------------------------------------
 
 /// The seed's sharded flat scan behind the trait: one full proxy-table pass
-/// per query. The CPU reference semantics — all other backends must agree
-/// with it (see the parity property tests).
+/// per query. [`FlatScan::scalar`] keeps the seed `ProxyIndex` semantics —
+/// the bit-stable CPU reference all other paths are property-tested
+/// against; the default constructor evaluates single-query tiles through
+/// the kernel so all default backends share one distance code path.
 #[derive(Debug, Default)]
 pub struct FlatScan {
     inner: ProxyIndex,
+    use_kernel: bool,
     counters: Counters,
 }
 
 impl FlatScan {
+    /// Kernel-backed flat scan (the default path).
     pub fn new(threads: usize) -> FlatScan {
         FlatScan {
             inner: ProxyIndex { threads },
+            use_kernel: true,
             counters: Counters::default(),
+        }
+    }
+
+    /// The seed-semantics scalar scan (reference for parity tests and the
+    /// `kernel = false` engine knob).
+    pub fn scalar(threads: usize) -> FlatScan {
+        FlatScan {
+            use_kernel: false,
+            ..FlatScan::new(threads)
+        }
+    }
+
+    fn effective_threads(&self, work: usize) -> usize {
+        if work < 2_000_000 {
+            1
+        } else {
+            self.inner.threads
         }
     }
 }
@@ -158,7 +322,26 @@ impl RetrievalBackend for FlatScan {
     fn top_m(&self, ds: &Dataset, query_proxy: &[f32], m: usize, class: Option<u32>) -> Vec<u32> {
         self.counters.proxy_passes.fetch_add(1, Ordering::Relaxed);
         self.counters.queries.fetch_add(1, Ordering::Relaxed);
-        let got = match class {
+        // the kernel only pays off when its work matches the scalar scan's:
+        // a lone conditional query would tile the WHOLE table and discard
+        // non-class rows at harvest, so class queries keep the class-shard
+        // scalar scan (BatchedScan's mixed groups are where conditional
+        // queries ride the kernel, sharing the pass they'd pay anyway)
+        if self.use_kernel && class.is_none() {
+            let cap = m.max(1).min(ds.n.max(1));
+            let queries = [query_proxy];
+            let scan = KernelScan {
+                blocks: &ds.proxy_blocks,
+                queries: &queries,
+                classes: &[None],
+                labels: None,
+            };
+            let threads = self.effective_threads(ds.n * ds.proxy_d);
+            let (mut got, st) = scan.top_m(cap, threads);
+            self.counters.record_kernel(&st);
+            return got.pop().unwrap_or_default();
+        }
+        match class {
             Some(y) => {
                 self.counters
                     .rows_scanned
@@ -171,8 +354,7 @@ impl RetrievalBackend for FlatScan {
                     .fetch_add(ds.n as u64, Ordering::Relaxed);
                 self.inner.top_m(ds, query_proxy, m)
             }
-        };
-        got
+        }
     }
 
     fn refine_top_k(&self, ds: &Dataset, q: &[f32], cands: &[u32], k: usize) -> Vec<u32> {
@@ -194,11 +376,15 @@ impl RetrievalBackend for FlatScan {
 
 /// Multi-query scan: one pass over the proxy table per `top_m_batch` call,
 /// one bounded heap per query. Rows stream through the cache once and are
-/// scored against every query in the group, so the memory-bandwidth cost of
-/// the corpus traversal is amortised across the whole batch.
+/// scored against every query in the group; with the kernel enabled
+/// (default) the pass runs as [`kernel::TILE_Q`]-query register tiles over
+/// the dataset's resident [`ProxyBlocks`], so one block-column load feeds
+/// the whole query group.
 #[derive(Debug)]
 pub struct BatchedScan {
     pub threads: usize,
+    use_kernel: bool,
+    tile_q: usize,
     counters: Counters,
 }
 
@@ -212,8 +398,24 @@ impl BatchedScan {
     pub fn new(threads: usize) -> BatchedScan {
         BatchedScan {
             threads,
+            use_kernel: true,
+            tile_q: kernel::TILE_Q,
             counters: Counters::default(),
         }
+    }
+
+    /// The PR 1 scalar row-major pass (reference and `kernel = false` knob).
+    pub fn scalar(threads: usize) -> BatchedScan {
+        BatchedScan {
+            use_kernel: false,
+            ..BatchedScan::new(threads)
+        }
+    }
+
+    /// Override the queries-per-tile width (clamped to 1..=[`kernel::TILE_Q`]).
+    pub fn with_tile(mut self, tile_q: usize) -> Self {
+        self.tile_q = tile_q.clamp(1, kernel::TILE_Q);
+        self
     }
 
     /// Same spawn-overhead threshold as the flat scan (the batch multiplies
@@ -225,38 +427,37 @@ impl BatchedScan {
             self.threads
         }
     }
-}
 
-impl RetrievalBackend for BatchedScan {
-    fn name(&self) -> &'static str {
-        "batched"
-    }
-
-    fn top_m(&self, ds: &Dataset, query_proxy: &[f32], m: usize, class: Option<u32>) -> Vec<u32> {
-        self.top_m_batch(
-            ds,
-            &[ProxyQuery {
-                proxy: query_proxy,
-                class,
-            }],
-            m,
-        )
-        .pop()
-        .unwrap_or_default()
-    }
-
-    fn top_m_batch(&self, ds: &Dataset, queries: &[ProxyQuery], m: usize) -> Vec<Vec<u32>> {
-        if queries.is_empty() {
-            return Vec::new();
+    /// The tiled pass: queries are split into `tile_q`-wide register
+    /// groups; each group shares every block-column load.
+    fn kernel_top_m_batch(&self, ds: &Dataset, queries: &[ProxyQuery], m: usize) -> Vec<Vec<u32>> {
+        let cap = m.max(1).min(ds.n.max(1));
+        let threads = self.effective_threads(ds.n * ds.proxy_d);
+        let mut out = Vec::with_capacity(queries.len());
+        for group in queries.chunks(self.tile_q.clamp(1, kernel::TILE_Q)) {
+            let qs: Vec<&[f32]> = group.iter().map(|q| q.proxy).collect();
+            let classes: Vec<Option<u32>> = group.iter().map(|q| q.class).collect();
+            let scan = KernelScan {
+                blocks: &ds.proxy_blocks,
+                queries: &qs,
+                classes: &classes,
+                labels: Some(&ds.labels),
+            };
+            let (res, st) = scan.top_m(cap, threads);
+            self.counters.record_kernel(&st);
+            out.extend(res);
         }
+        out
+    }
+
+    /// The PR 1 scalar pass, kept as the `kernel = false` fallback and the
+    /// `kernel_scalar` bench baseline.
+    fn scalar_top_m_batch(&self, ds: &Dataset, queries: &[ProxyQuery], m: usize) -> Vec<Vec<u32>> {
         let b = queries.len();
         let cap = m.max(1).min(ds.n.max(1));
-        self.counters.proxy_passes.fetch_add(1, Ordering::Relaxed);
-        self.counters.queries.fetch_add(b as u64, Ordering::Relaxed);
         self.counters
             .rows_scanned
             .fetch_add(ds.n as u64, Ordering::Relaxed);
-
         let threads = self.effective_threads(ds.n * ds.proxy_d);
         let conditional = queries.iter().any(|q| q.class.is_some());
         let shards: Vec<Vec<BoundedMaxHeap>> = parallel_chunks(ds.n, threads, |_, s, e| {
@@ -292,9 +493,55 @@ impl RetrievalBackend for BatchedScan {
             .map(|h| h.into_sorted().into_iter().map(|(_, i)| i).collect())
             .collect()
     }
+}
+
+impl RetrievalBackend for BatchedScan {
+    fn name(&self) -> &'static str {
+        "batched"
+    }
+
+    fn top_m(&self, ds: &Dataset, query_proxy: &[f32], m: usize, class: Option<u32>) -> Vec<u32> {
+        self.top_m_batch(
+            ds,
+            &[ProxyQuery {
+                proxy: query_proxy,
+                class,
+            }],
+            m,
+        )
+        .pop()
+        .unwrap_or_default()
+    }
+
+    fn top_m_batch(&self, ds: &Dataset, queries: &[ProxyQuery], m: usize) -> Vec<Vec<u32>> {
+        if queries.is_empty() {
+            return Vec::new();
+        }
+        self.counters.proxy_passes.fetch_add(1, Ordering::Relaxed);
+        self.counters
+            .queries
+            .fetch_add(queries.len() as u64, Ordering::Relaxed);
+        if self.use_kernel {
+            self.kernel_top_m_batch(ds, queries, m)
+        } else {
+            self.scalar_top_m_batch(ds, queries, m)
+        }
+    }
 
     fn refine_top_k(&self, ds: &Dataset, q: &[f32], cands: &[u32], k: usize) -> Vec<u32> {
         exact_refine(ds, q, cands, k, self.threads)
+    }
+
+    fn refine_top_k_batch(
+        &self,
+        ds: &Dataset,
+        qs: &[&[f32]],
+        pools: &[&[u32]],
+        k: usize,
+    ) -> Vec<Vec<u32>> {
+        let (out, rows) = batched_refine(ds, qs, pools, k, self.threads);
+        self.counters.refine_rows.fetch_add(rows, Ordering::Relaxed);
+        out
     }
 
     fn stats(&self) -> RetrievalStats {
@@ -311,12 +558,19 @@ impl RetrievalBackend for BatchedScan {
 // ---------------------------------------------------------------------------
 
 /// IVF-style backend: the proxy table is k-means-partitioned into `lists`
-/// clusters once at build time; a query visits clusters in ascending
-/// centroid distance and, once its heap is full, skips any cluster whose
-/// triangle-inequality lower bound `(d(q, c) − r_c)²` already exceeds the
-/// worst retained distance. Local-structure arguments (Wang & Vastola 2024)
-/// say posterior mass concentrates on a few clusters at moderate-to-low
-/// noise, so most lists are skipped with *exact* bounds.
+/// clusters once at build time (reusing the dataset's persisted
+/// [`IvfPartition`] when it matches, so engine start skips k-means); a
+/// query visits clusters in ascending centroid distance and, once its heap
+/// is full, skips any cluster whose triangle-inequality lower bound
+/// `(d(q, c) − r_c)²` already exceeds the worst retained distance.
+/// Local-structure arguments (Wang & Vastola 2024) say posterior mass
+/// concentrates on a few clusters at moderate-to-low noise, so most lists
+/// are skipped with *exact* bounds.
+///
+/// Member lists are materialised twice: whole-list and **per-class** (both
+/// as pre-blocked kernel tables), so conditional queries probe
+/// class-filtered lists under the tighter per-class radius bound instead of
+/// testing labels row-by-row inside each list.
 ///
 /// Knobs:
 /// * `nprobe == 0` (default) — exactness: only bound-justified skips, the
@@ -334,15 +588,24 @@ pub struct ClusterPruned {
     centroids: Vec<f32>,
     /// member row ids per list
     members: Vec<Vec<u32>>,
+    /// member row ids per (list, class)
+    class_members: Vec<Vec<Vec<u32>>>,
     /// max Euclidean member→centroid distance per list
     radius: Vec<f32>,
+    /// max member→centroid distance per (list, class) — the tighter bound
+    /// conditional queries prune with
+    class_radius: Vec<Vec<f32>>,
+    /// pre-blocked kernel tables per list / per (list, class)
+    blocks: Vec<ProxyBlocks>,
+    class_blocks: Vec<Vec<ProxyBlocks>>,
+    use_kernel: bool,
     counters: Counters,
 }
 
 impl ClusterPruned {
-    /// Partition the dataset's proxy table (build once per dataset; the
-    /// k-means substrate is `data::cluster::kmeans`, the same code the PCA
-    /// baseline's dataset build uses).
+    /// Partition the dataset's proxy table (build once per dataset). When
+    /// `ds.ivf` holds a persisted partition for the same `(lists, seed)`,
+    /// the k-means step is skipped entirely.
     pub fn build(ds: &Dataset, lists: usize, nprobe: usize, seed: u64) -> ClusterPruned {
         Self::build_with_threads(
             ds,
@@ -360,32 +623,110 @@ impl ClusterPruned {
         seed: u64,
         threads: usize,
     ) -> ClusterPruned {
+        Self::build_inner(ds, lists, nprobe, seed, threads, true)
+    }
+
+    fn build_inner(
+        ds: &Dataset,
+        lists: usize,
+        nprobe: usize,
+        seed: u64,
+        threads: usize,
+        use_kernel: bool,
+    ) -> ClusterPruned {
         let lists = lists.clamp(1, ds.n.max(1));
-        let mut rng = Pcg64::with_stream(seed, 0x1f5);
-        let (centroids, assign) = kmeans(&ds.proxies, ds.n, ds.proxy_d, lists, 8, &mut rng);
+        let part = match &ds.ivf {
+            Some(p) if p.matches(lists, seed) => p.clone(),
+            _ => IvfPartition::compute(ds, lists, seed),
+        };
+        let pd = ds.proxy_d;
+        let nclass = ds.classes.max(1);
+        // with one class the per-class structures would duplicate the
+        // whole-list ones verbatim — skip them and fall back at query time
+        let per_class = nclass > 1;
         let mut members: Vec<Vec<u32>> = vec![Vec::new(); lists];
-        for (i, &a) in assign.iter().enumerate() {
+        let mut class_members: Vec<Vec<Vec<u32>>> = if per_class {
+            vec![vec![Vec::new(); nclass]; lists]
+        } else {
+            Vec::new()
+        };
+        for (i, &a) in part.assignments.iter().enumerate() {
             members[a as usize].push(i as u32);
+            if per_class {
+                class_members[a as usize][ds.labels[i] as usize].push(i as u32);
+            }
         }
         let mut radius = vec![0.0f32; lists];
+        let mut class_radius: Vec<Vec<f32>> = if per_class {
+            vec![vec![0.0f32; nclass]; lists]
+        } else {
+            Vec::new()
+        };
         for (cl, rows) in members.iter().enumerate() {
-            let c = &centroids[cl * ds.proxy_d..(cl + 1) * ds.proxy_d];
+            let c = &part.centroids[cl * pd..(cl + 1) * pd];
             let mut worst = 0.0f32;
+            let mut class_worst = vec![0.0f32; nclass];
             for &i in rows {
                 let d = super::scan::sqdist_flat(ds.proxy_row(i as usize), c);
                 worst = worst.max(d);
+                let y = ds.labels[i as usize] as usize;
+                class_worst[y] = class_worst[y].max(d);
             }
             radius[cl] = worst.sqrt();
+            if per_class {
+                for (r, w) in class_radius[cl].iter_mut().zip(&class_worst) {
+                    *r = w.sqrt();
+                }
+            }
         }
+        // block tables exist only for the kernel path — a scalar-only
+        // build skips the transposed copies entirely
+        let blocks: Vec<ProxyBlocks> = if use_kernel {
+            members
+                .iter()
+                .map(|rows| ProxyBlocks::build_subset(&ds.proxies, pd, rows))
+                .collect()
+        } else {
+            Vec::new()
+        };
+        let class_blocks: Vec<Vec<ProxyBlocks>> = if use_kernel && per_class {
+            class_members
+                .iter()
+                .map(|per| {
+                    per.iter()
+                        .map(|rows| ProxyBlocks::build_subset(&ds.proxies, pd, rows))
+                        .collect()
+                })
+                .collect()
+        } else {
+            Vec::new()
+        };
         ClusterPruned {
             threads,
             lists,
             nprobe,
-            centroids,
+            centroids: part.centroids,
             members,
+            class_members,
             radius,
+            class_radius,
+            blocks,
+            class_blocks,
+            use_kernel,
             counters: Counters::default(),
         }
+    }
+
+    /// Disable the tiled kernel (scalar per-row list scans). Disabling also
+    /// frees the pre-blocked tables; re-enabling on a scalar-built instance
+    /// is not supported (the default build is kernel-backed).
+    pub fn with_kernel(mut self, use_kernel: bool) -> Self {
+        self.use_kernel = use_kernel && !self.blocks.is_empty();
+        if !self.use_kernel {
+            self.blocks = Vec::new();
+            self.class_blocks = Vec::new();
+        }
+        self
     }
 
     pub fn lists(&self) -> usize {
@@ -399,7 +740,12 @@ impl RetrievalBackend for ClusterPruned {
     }
 
     fn top_m(&self, ds: &Dataset, query_proxy: &[f32], m: usize, class: Option<u32>) -> Vec<u32> {
-        let cap = m.max(1).min(ds.n.max(1));
+        // conditional queries clamp to the class support so the heap can
+        // actually fill (and the bound prune can engage) on small classes
+        let cap = match class {
+            Some(y) => m.max(1).min(ds.class_rows[y as usize].len().max(1)),
+            None => m.max(1).min(ds.n.max(1)),
+        };
         self.counters.queries.fetch_add(1, Ordering::Relaxed);
 
         // rank clusters by centroid distance
@@ -415,14 +761,23 @@ impl RetrievalBackend for ClusterPruned {
         order.sort_by(|a, b| a.0.total_cmp(&b.0));
 
         let mut heap = BoundedMaxHeap::new(cap);
+        let mut kstats = KernelStats::default();
         let mut scanned_lists = 0u64;
         let mut pruned_lists = 0u64;
         let mut rows_scanned = 0u64;
         for &(c_d2, cl) in &order {
+            // the bound radius tightens to the class subset for
+            // conditional queries — still a valid lower bound, so skips
+            // stay provably exact (single-class datasets fall back to the
+            // whole-list radius, which equals the class radius there)
+            let r = match class {
+                Some(y) if !self.class_radius.is_empty() => self.class_radius[cl][y as usize],
+                _ => self.radius[cl],
+            };
             // pruning only ever applies once the heap is full — a query
             // must always receive its m rows when they exist
             if heap.len() >= cap {
-                let lb = (c_d2.sqrt() - self.radius[cl]).max(0.0);
+                let lb = (c_d2.sqrt() - r).max(0.0);
                 if lb * lb >= heap.worst() {
                     pruned_lists += 1;
                     continue;
@@ -433,17 +788,36 @@ impl RetrievalBackend for ClusterPruned {
                 }
             }
             scanned_lists += 1;
-            for &gid in &self.members[cl] {
-                if let Some(y) = class {
-                    if ds.labels[gid as usize] != y {
-                        continue;
+            if self.use_kernel {
+                let blocks = match class {
+                    Some(y) if !self.class_blocks.is_empty() => &self.class_blocks[cl][y as usize],
+                    _ => &self.blocks[cl],
+                };
+                let queries = [query_proxy];
+                let scan = KernelScan {
+                    blocks,
+                    queries: &queries,
+                    classes: &[None],
+                    labels: None,
+                };
+                scan.scan_into(
+                    0,
+                    blocks.n_blocks(),
+                    std::slice::from_mut(&mut heap),
+                    &mut kstats,
+                );
+            } else {
+                let rows = match class {
+                    Some(y) if !self.class_members.is_empty() => &self.class_members[cl][y as usize],
+                    _ => &self.members[cl],
+                };
+                for &gid in rows {
+                    rows_scanned += 1;
+                    let row = ds.proxy_row(gid as usize);
+                    let d = super::scan::sqdist_early_exit(query_proxy, row, heap.worst());
+                    if d.is_finite() {
+                        heap.push(d, gid);
                     }
-                }
-                rows_scanned += 1;
-                let row = ds.proxy_row(gid as usize);
-                let d = super::scan::sqdist_early_exit(query_proxy, row, heap.worst());
-                if d.is_finite() {
-                    heap.push(d, gid);
                 }
             }
         }
@@ -453,14 +827,30 @@ impl RetrievalBackend for ClusterPruned {
         self.counters
             .clusters_pruned
             .fetch_add(pruned_lists, Ordering::Relaxed);
-        self.counters
-            .rows_scanned
-            .fetch_add(rows_scanned, Ordering::Relaxed);
+        if self.use_kernel {
+            self.counters.record_kernel(&kstats);
+        } else {
+            self.counters
+                .rows_scanned
+                .fetch_add(rows_scanned, Ordering::Relaxed);
+        }
         heap.into_sorted().into_iter().map(|(_, i)| i).collect()
     }
 
     fn refine_top_k(&self, ds: &Dataset, q: &[f32], cands: &[u32], k: usize) -> Vec<u32> {
         exact_refine(ds, q, cands, k, self.threads)
+    }
+
+    fn refine_top_k_batch(
+        &self,
+        ds: &Dataset,
+        qs: &[&[f32]],
+        pools: &[&[u32]],
+        k: usize,
+    ) -> Vec<Vec<u32>> {
+        let (out, rows) = batched_refine(ds, qs, pools, k, self.threads);
+        self.counters.refine_rows.fetch_add(rows, Ordering::Relaxed);
+        out
     }
 
     fn stats(&self) -> RetrievalStats {
@@ -475,6 +865,34 @@ impl RetrievalBackend for ClusterPruned {
 // ---------------------------------------------------------------------------
 // Kind selection (config / CLI surface)
 // ---------------------------------------------------------------------------
+
+/// Build-time knobs shared by every backend kind (`EngineConfig` surface).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BackendOpts {
+    pub threads: usize,
+    /// IVF lists for `ClusterPruned`
+    pub clusters: usize,
+    /// probe cap for `ClusterPruned` (0 = exact bounds)
+    pub nprobe: usize,
+    pub seed: u64,
+    /// route scans through the tiled kernel (default) or the scalar paths
+    pub kernel: bool,
+    /// queries per register tile, clamped to 1..=[`kernel::TILE_Q`]
+    pub tile_q: usize,
+}
+
+impl Default for BackendOpts {
+    fn default() -> Self {
+        BackendOpts {
+            threads: crate::util::threadpool::default_threads(),
+            clusters: 64,
+            nprobe: 0,
+            seed: 0,
+            kernel: true,
+            tile_q: kernel::TILE_Q,
+        }
+    }
+}
 
 /// Config-facing backend taxonomy.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -510,25 +928,27 @@ impl RetrievalBackendKind {
         ]
     }
 
-    /// Build a shareable backend for a dataset. `clusters`/`nprobe` only
-    /// apply to the cluster-pruned backend.
-    pub fn build(
-        &self,
-        ds: &Dataset,
-        threads: usize,
-        clusters: usize,
-        nprobe: usize,
-        seed: u64,
-    ) -> Arc<dyn RetrievalBackend> {
+    /// Build a shareable backend for a dataset. `opts.clusters`/`opts.nprobe`
+    /// only apply to the cluster-pruned backend.
+    pub fn build(&self, ds: &Dataset, opts: BackendOpts) -> Arc<dyn RetrievalBackend> {
         match self {
-            RetrievalBackendKind::Flat => Arc::new(FlatScan::new(threads)),
-            RetrievalBackendKind::Batched => Arc::new(BatchedScan::new(threads)),
-            RetrievalBackendKind::ClusterPruned => Arc::new(ClusterPruned::build_with_threads(
+            RetrievalBackendKind::Flat => Arc::new(if opts.kernel {
+                FlatScan::new(opts.threads)
+            } else {
+                FlatScan::scalar(opts.threads)
+            }),
+            RetrievalBackendKind::Batched => Arc::new(if opts.kernel {
+                BatchedScan::new(opts.threads).with_tile(opts.tile_q)
+            } else {
+                BatchedScan::scalar(opts.threads)
+            }),
+            RetrievalBackendKind::ClusterPruned => Arc::new(ClusterPruned::build_inner(
                 ds,
-                clusters.max(1),
-                nprobe,
-                seed,
-                threads,
+                opts.clusters.max(1),
+                opts.nprobe,
+                opts.seed,
+                opts.threads,
+                opts.kernel,
             )),
         }
     }
@@ -539,6 +959,7 @@ mod tests {
     use super::*;
     use crate::data::synthetic::preset;
     use crate::util::prop::{forall, gen};
+    use crate::util::rng::Pcg64;
 
     fn tiny(n: usize, seed: u64) -> Dataset {
         let mut spec = preset("cifar-sim").unwrap().clone();
@@ -548,9 +969,13 @@ mod tests {
 
     fn backends(ds: &Dataset) -> Vec<Box<dyn RetrievalBackend>> {
         vec![
+            // [0] is the seed-semantics scalar reference
+            Box::new(FlatScan::scalar(2)),
             Box::new(FlatScan::new(2)),
+            Box::new(BatchedScan::scalar(2)),
             Box::new(BatchedScan::new(2)),
             Box::new(ClusterPruned::build_with_threads(ds, 12, 0, 7, 2)),
+            Box::new(ClusterPruned::build_with_threads(ds, 12, 0, 7, 2).with_kernel(false)),
             // pruning disabled: every list within nprobe and bounds can
             // never exclude (radius covers all members, nprobe = lists)
             Box::new(ClusterPruned::build_with_threads(ds, 1, 0, 7, 2)),
@@ -559,9 +984,9 @@ mod tests {
 
     #[test]
     fn parity_flat_batched_cluster_unconditional_and_conditional() {
-        // Satellite: BatchedScan and ClusterPruned (exact mode) return
-        // identical row ids to FlatScan for random queries, including
-        // class-conditional scans.
+        // Satellite: every backend — kernel-tiled and scalar — returns
+        // identical row ids to the scalar FlatScan reference for random
+        // queries, including class-conditional scans.
         let ds = tiny(500, 3);
         let all = backends(&ds);
         let flat = &all[0];
@@ -590,7 +1015,7 @@ mod tests {
     fn batch_matches_per_query_results() {
         let ds = tiny(400, 5);
         let batched = BatchedScan::new(2);
-        let flat = FlatScan::new(2);
+        let flat = FlatScan::scalar(2);
         let mut rng = Pcg64::new(11);
         let qs: Vec<Vec<f32>> = (0..8)
             .map(|_| (0..ds.proxy_d).map(|_| rng.normal()).collect())
@@ -611,7 +1036,36 @@ mod tests {
     }
 
     #[test]
-    fn batched_scan_counts_one_pass_per_group() {
+    fn ragged_query_groups_match_reference() {
+        // Satellite: group sizes 1..=9 — under, at and past the TILE_Q
+        // register width (9 splits into an 8-tile and a 1-tile).
+        let ds = tiny(300, 13);
+        let batched = BatchedScan::new(2);
+        let flat = FlatScan::scalar(2);
+        let mut rng = Pcg64::new(19);
+        for b in 1usize..=9 {
+            let qs: Vec<Vec<f32>> = (0..b)
+                .map(|_| (0..ds.proxy_d).map(|_| rng.normal()).collect())
+                .collect();
+            let queries: Vec<ProxyQuery> = qs
+                .iter()
+                .enumerate()
+                .map(|(i, q)| ProxyQuery {
+                    proxy: q,
+                    class: if i % 4 == 1 { Some((i % 3) as u32) } else { None },
+                })
+                .collect();
+            let got = batched.top_m_batch(&ds, &queries, 17);
+            assert_eq!(got.len(), b);
+            for (i, q) in queries.iter().enumerate() {
+                let want = flat.top_m(&ds, q.proxy, 17, q.class);
+                assert_eq!(got[i], want, "group {b} query {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn batched_scan_counts_one_pass_per_group_and_kernel_tiles() {
         let ds = tiny(300, 6);
         let batched = BatchedScan::new(1);
         let q = vec![0.1f32; ds.proxy_d];
@@ -626,12 +1080,60 @@ mod tests {
         assert_eq!(s.proxy_passes, 1, "8 queries must share one pass");
         assert_eq!(s.queries, 8);
         assert_eq!(s.rows_scanned, ds.n as u64);
+        assert_eq!(
+            s.tiles_evaluated,
+            ds.proxy_blocks.n_blocks() as u64,
+            "an 8-query group is one tile per block"
+        );
 
         let flat = FlatScan::new(1);
         for _ in 0..8 {
             let _ = flat.top_m(&ds, &q, 16, None);
         }
         assert_eq!(flat.stats().proxy_passes, 8, "flat pays one pass per query");
+    }
+
+    #[test]
+    fn batched_refine_matches_per_query_refine() {
+        // Satellite: the union-scan refine ladder returns exactly what the
+        // per-query refine returns, including empty and singleton pools.
+        let ds = tiny(400, 21);
+        let batched = BatchedScan::new(2);
+        let flat = FlatScan::scalar(2);
+        forall(73, 20, |rng| {
+            let nq = gen::usize_in(rng, 1, 9);
+            let k = gen::usize_in(rng, 1, 24);
+            let qs_data: Vec<Vec<f32>> =
+                (0..nq).map(|_| gen::vec_normal(rng, ds.d, 1.0)).collect();
+            let pools_data: Vec<Vec<u32>> = (0..nq)
+                .map(|i| match i % 4 {
+                    0 => Vec::new(),                   // empty pool
+                    1 => vec![rng.below(ds.n) as u32], // singleton
+                    _ => {
+                        // distinct ids — candidate pools are top_m output
+                        let len = gen::usize_in(rng, 1, 80);
+                        rng.choose_k(ds.n, len.min(ds.n))
+                            .into_iter()
+                            .map(|i| i as u32)
+                            .collect()
+                    }
+                })
+                .collect();
+            let qs: Vec<&[f32]> = qs_data.iter().map(|q| q.as_slice()).collect();
+            let pools: Vec<&[u32]> = pools_data.iter().map(|p| p.as_slice()).collect();
+            let got = batched.refine_top_k_batch(&ds, &qs, &pools, k);
+            for i in 0..nq {
+                let want = flat.refine_top_k(&ds, qs[i], pools[i], k);
+                crate::prop_assert!(
+                    got[i] == want,
+                    "refine query {i}/{nq} (k={k}, pool={}): {:?} vs {want:?}",
+                    pools[i].len(),
+                    got[i]
+                );
+            }
+            Ok(())
+        });
+        assert!(batched.stats().refine_rows > 0, "refine telemetry counts");
     }
 
     #[test]
@@ -651,6 +1153,48 @@ mod tests {
         );
         assert!(s.clusters_pruned > 0, "self-query must prune some lists");
         assert!(s.rows_scanned < ds.n as u64, "pruning must skip rows");
+    }
+
+    #[test]
+    fn cluster_conditional_probes_class_lists_only() {
+        // Satellite: conditional scans touch only class member rows — the
+        // per-class lists replace row-by-row label filtering.
+        let ds = tiny(500, 15);
+        for kernel_on in [true, false] {
+            let cp =
+                ClusterPruned::build_with_threads(&ds, 8, 0, 3, 1).with_kernel(kernel_on);
+            let class = (0..ds.classes)
+                .max_by_key(|&c| ds.class_rows[c].len())
+                .unwrap() as u32;
+            let support = ds.class_rows[class as usize].len() as u64;
+            let got = cp.top_m(&ds, &vec![0.05; ds.proxy_d], 16, Some(class));
+            assert!(got.iter().all(|&i| ds.labels[i as usize] == class));
+            let s = cp.stats();
+            assert!(
+                s.rows_scanned <= support,
+                "kernel={kernel_on}: conditional scan visited {} rows for a class of {support}",
+                s.rows_scanned
+            );
+        }
+    }
+
+    #[test]
+    fn cluster_reuses_persisted_partition() {
+        // Satellite: a matching ds.ivf partition short-circuits k-means and
+        // yields the identical backend.
+        let mut ds = tiny(300, 17);
+        let part = IvfPartition::compute(&ds, 8, 99);
+        ds.ivf = Some(part.clone());
+        let reused = ClusterPruned::build_with_threads(&ds, 8, 0, 99, 1);
+        assert_eq!(reused.centroids, part.centroids, "partition must be reused");
+        // a different (lists, seed) must NOT reuse the stored partition
+        let fresh = ClusterPruned::build_with_threads(&ds, 12, 0, 99, 1);
+        assert_eq!(fresh.lists(), 12);
+        // and both serve identical results to the flat reference
+        let flat = FlatScan::scalar(1);
+        let q = ds.proxy_row(5).to_vec();
+        assert_eq!(reused.top_m(&ds, &q, 9, None), flat.top_m(&ds, &q, 9, None));
+        assert_eq!(fresh.top_m(&ds, &q, 9, None), flat.top_m(&ds, &q, 9, None));
     }
 
     #[test]
@@ -684,11 +1228,19 @@ mod tests {
     #[test]
     fn kind_parse_and_build_roundtrip() {
         let ds = tiny(200, 2);
-        for &k in RetrievalBackendKind::all() {
-            assert_eq!(RetrievalBackendKind::parse(k.name()), Some(k));
-            let b = k.build(&ds, 1, 8, 0, 0);
-            let got = b.top_m(&ds, ds.proxy_row(0), 4, None);
-            assert_eq!(got[0], 0, "{} self-query", b.name());
+        for kernel in [true, false] {
+            let opts = BackendOpts {
+                threads: 1,
+                clusters: 8,
+                kernel,
+                ..BackendOpts::default()
+            };
+            for &k in RetrievalBackendKind::all() {
+                assert_eq!(RetrievalBackendKind::parse(k.name()), Some(k));
+                let b = k.build(&ds, opts);
+                let got = b.top_m(&ds, ds.proxy_row(0), 4, None);
+                assert_eq!(got[0], 0, "{} self-query (kernel={kernel})", b.name());
+            }
         }
         assert_eq!(RetrievalBackendKind::parse("bogus"), None);
         assert_eq!(

@@ -1,0 +1,485 @@
+//! Register-tiled multi-query distance kernel over a structure-of-arrays
+//! proxy-block layout.
+//!
+//! The PR 1 batched scan amortised *passes* over the proxy table — one
+//! traversal per batch group — but the inner loop still walked one `f32` at
+//! a time, row-major, and re-derived each query's stride from scratch. This
+//! module makes the FLOPs themselves cache- and register-efficient:
+//!
+//! * [`ProxyBlocks`] transposes the proxy table once at dataset load into
+//!   fixed-width row blocks ([`BLOCK_ROWS`] rows each) stored *dim-major*
+//!   inside the block, so the values of one dimension for all rows of a
+//!   block are contiguous — the shape auto-vectorisers want.
+//! * [`KernelScan`] evaluates a [`TILE_Q`]-query × row-block tile per inner
+//!   loop: each block column (one dimension, `BLOCK_ROWS` lanes) is loaded
+//!   once and broadcast against every query in the group, so the
+//!   memory-bandwidth cost of a row is shared by up to 8 queries while the
+//!   running distances stay in a 1 KB register/L1 tile.
+//! * Between dimension strips ([`STRIP_DIMS`] wide) the kernel checks each
+//!   query's best partial distance in the tile against that query's current
+//!   worst retained heap distance: partial sums only grow, so when even the
+//!   closest row of the block already exceeds the cutoff the whole
+//!   (query, block) tile is provably dead and the remaining strips are
+//!   skipped — the tile-level generalisation of `scan::sqdist_early_exit`.
+//!
+//! Exactness: a tile that survives all strips holds full squared distances
+//! (each accumulator sums dimensions in index order), and a tile retired
+//! early can only drop rows whose distance is already ≥ the heap's worst —
+//! the same guarantee the scalar early-exit gives, so kernel and scalar
+//! scans retain identical row sets (ties between bit-equal distances are
+//! the only divergence surface, as with every backend — see
+//! `index/README.md`).
+//!
+//! The kernel is layout-generic: the whole proxy table (`Dataset`'s
+//! resident [`ProxyBlocks`]), an IVF list, or a class-filtered member list
+//! all scan through the same code path via the optional row-id map.
+
+use super::topk::BoundedMaxHeap;
+use crate::util::threadpool::parallel_chunks;
+
+/// Queries evaluated per register tile (one row-block load is shared by up
+/// to this many queries).
+pub const TILE_Q: usize = 8;
+/// Rows per structure-of-arrays block. 32 rows × 8 queries × 4 B = 1 KB of
+/// running accumulators — small enough to live in registers/L1 while one
+/// block column streams through.
+pub const BLOCK_ROWS: usize = 32;
+/// Dimensions accumulated between early-exit checks.
+const STRIP_DIMS: usize = 16;
+
+/// The proxy table transposed into fixed-width, dim-major row blocks.
+///
+/// Block `b` occupies `data[b*dim*BLOCK_ROWS ..]` and stores, for each
+/// dimension `j`, the `BLOCK_ROWS` values `data[.. + j*BLOCK_ROWS + lane]`
+/// of rows `b*BLOCK_ROWS + lane`. The final block is zero-padded; padded
+/// lanes are never harvested. `ids` optionally maps block lanes back to
+/// global row ids (IVF lists); `None` means the identity (the whole table).
+#[derive(Debug, Clone, Default)]
+pub struct ProxyBlocks {
+    /// valid rows (excluding padding)
+    pub rows: usize,
+    /// values per row
+    pub dim: usize,
+    ids: Option<Vec<u32>>,
+    data: Vec<f32>,
+}
+
+impl ProxyBlocks {
+    /// Block the whole `rows × dim` table with identity row ids.
+    pub fn build(table: &[f32], rows: usize, dim: usize) -> ProxyBlocks {
+        assert_eq!(table.len(), rows * dim);
+        Self::build_inner(table, dim, rows, None)
+    }
+
+    /// Block a row subset (e.g. an IVF member list); lane `l` of the result
+    /// holds `table` row `ids[l]` and harvests as global id `ids[l]`.
+    pub fn build_subset(table: &[f32], dim: usize, ids: &[u32]) -> ProxyBlocks {
+        Self::build_inner(table, dim, ids.len(), Some(ids.to_vec()))
+    }
+
+    fn build_inner(table: &[f32], dim: usize, rows: usize, ids: Option<Vec<u32>>) -> ProxyBlocks {
+        let nb = rows.div_ceil(BLOCK_ROWS);
+        let mut data = vec![0.0f32; nb * dim * BLOCK_ROWS];
+        for r in 0..rows {
+            let src_row = match &ids {
+                Some(map) => map[r] as usize,
+                None => r,
+            };
+            let src = &table[src_row * dim..(src_row + 1) * dim];
+            let base = (r / BLOCK_ROWS) * dim * BLOCK_ROWS + (r % BLOCK_ROWS);
+            for (j, &v) in src.iter().enumerate() {
+                data[base + j * BLOCK_ROWS] = v;
+            }
+        }
+        ProxyBlocks {
+            rows,
+            dim,
+            ids,
+            data,
+        }
+    }
+
+    #[inline]
+    pub fn n_blocks(&self) -> usize {
+        self.rows.div_ceil(BLOCK_ROWS)
+    }
+
+    /// The dim-major slice of block `b` (`dim * BLOCK_ROWS` values).
+    #[inline]
+    pub fn block(&self, b: usize) -> &[f32] {
+        let w = self.dim * BLOCK_ROWS;
+        &self.data[b * w..(b + 1) * w]
+    }
+
+    /// Valid (non-padding) rows in block `b`.
+    #[inline]
+    pub fn rows_in(&self, b: usize) -> usize {
+        (self.rows - b * BLOCK_ROWS).min(BLOCK_ROWS)
+    }
+
+    /// Global row id of lane `lane` in block `b`.
+    #[inline]
+    pub fn id(&self, b: usize, lane: usize) -> u32 {
+        let r = b * BLOCK_ROWS + lane;
+        match &self.ids {
+            Some(map) => map[r],
+            None => r as u32,
+        }
+    }
+
+    /// Resident bytes of the blocked copy (telemetry / working-set math).
+    pub fn bytes(&self) -> u64 {
+        self.data.len() as u64 * 4
+    }
+}
+
+/// Cumulative kernel counters for one scan (merged across shards).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct KernelStats {
+    /// (query-group × block) tiles evaluated
+    pub tiles: u64,
+    /// valid rows whose distances were produced (padding excluded)
+    pub rows: u64,
+    /// (query, block) pairs retired by the strip early-exit bound
+    pub strip_exits: u64,
+}
+
+impl KernelStats {
+    pub fn add(&mut self, other: &KernelStats) {
+        self.tiles += other.tiles;
+        self.rows += other.rows;
+        self.strip_exits += other.strip_exits;
+    }
+}
+
+/// One tiled scan: a group of ≤ [`TILE_Q`] queries against a block table.
+///
+/// `classes[qi]` restricts query `qi` to rows whose `labels[gid]` matches —
+/// the distance is still computed tile-wide (the row load is shared), the
+/// filter applies at harvest. Pass `labels: None` when the blocks are
+/// already class-filtered (per-class IVF lists) or every query is
+/// unconditional.
+pub struct KernelScan<'a> {
+    pub blocks: &'a ProxyBlocks,
+    pub queries: &'a [&'a [f32]],
+    pub classes: &'a [Option<u32>],
+    pub labels: Option<&'a [u32]>,
+}
+
+impl KernelScan<'_> {
+    /// Scan blocks `[b0, b1)` pushing exact squared distances into one
+    /// bounded heap per query. The heaps' current worst retained distances
+    /// drive the per-tile early-exit bound.
+    pub fn scan_into(
+        &self,
+        b0: usize,
+        b1: usize,
+        heaps: &mut [BoundedMaxHeap],
+        stats: &mut KernelStats,
+    ) {
+        let nq = self.queries.len();
+        assert!(nq > 0 && nq <= TILE_Q, "query group of {nq} exceeds TILE_Q");
+        assert_eq!(nq, heaps.len());
+        assert_eq!(nq, self.classes.len());
+        let dim = self.blocks.dim;
+        debug_assert!(self.queries.iter().all(|q| q.len() == dim));
+
+        for b in b0..b1 {
+            let rows = self.blocks.rows_in(b);
+            let data = self.blocks.block(b);
+            let mut acc = [[0.0f32; BLOCK_ROWS]; TILE_Q];
+            let mut alive = [false; TILE_Q];
+            alive[..nq].fill(true);
+            let mut n_alive = nq;
+
+            let mut j = 0;
+            while j < dim {
+                let jend = (j + STRIP_DIMS).min(dim);
+                for jj in j..jend {
+                    let col = &data[jj * BLOCK_ROWS..(jj + 1) * BLOCK_ROWS];
+                    for (qi, q) in self.queries.iter().enumerate() {
+                        if !alive[qi] {
+                            continue;
+                        }
+                        let qv = q[jj];
+                        // one column load serves every live query: the
+                        // lane loop is contiguous and branch-free, so it
+                        // vectorises across the block's rows
+                        for (a, &v) in acc[qi].iter_mut().zip(col) {
+                            let d = qv - v;
+                            *a += d * d;
+                        }
+                    }
+                }
+                j = jend;
+                if j >= dim {
+                    break;
+                }
+                // partial sums only grow: once even the nearest row of the
+                // tile exceeds a query's worst retained distance, no row of
+                // this block can enter that query's heap
+                for qi in 0..nq {
+                    if !alive[qi] {
+                        continue;
+                    }
+                    let cutoff = heaps[qi].worst();
+                    if !cutoff.is_finite() {
+                        continue;
+                    }
+                    let best = acc[qi][..rows]
+                        .iter()
+                        .fold(f32::INFINITY, |m, &v| m.min(v));
+                    if best >= cutoff {
+                        alive[qi] = false;
+                        n_alive -= 1;
+                        stats.strip_exits += 1;
+                    }
+                }
+                if n_alive == 0 {
+                    break;
+                }
+            }
+            stats.tiles += 1;
+            stats.rows += rows as u64;
+
+            // harvest: only queries that survived every strip hold full
+            // distances; retired queries provably gain nothing here
+            for qi in 0..nq {
+                if !alive[qi] {
+                    continue;
+                }
+                let heap = &mut heaps[qi];
+                let class = self.classes[qi];
+                for (lane, &d) in acc[qi][..rows].iter().enumerate() {
+                    let gid = self.blocks.id(b, lane);
+                    if let (Some(y), Some(labels)) = (class, self.labels) {
+                        if labels[gid as usize] != y {
+                            continue;
+                        }
+                    }
+                    heap.push(d, gid);
+                }
+            }
+        }
+    }
+
+    /// Full scan of the block table sharded over `threads`: per-shard heaps
+    /// of capacity `cap` merged in shard order (the same merge discipline
+    /// the scalar backends use). Returns ids sorted ascending by distance
+    /// per query, plus the merged kernel counters.
+    pub fn top_m(&self, cap: usize, threads: usize) -> (Vec<Vec<u32>>, KernelStats) {
+        let nq = self.queries.len();
+        let cap = cap.max(1);
+        let nb = self.blocks.n_blocks();
+        let shards = parallel_chunks(nb, threads.max(1), |_, s, e| {
+            let mut heaps: Vec<BoundedMaxHeap> = (0..nq).map(|_| BoundedMaxHeap::new(cap)).collect();
+            let mut st = KernelStats::default();
+            self.scan_into(s, e, &mut heaps, &mut st);
+            (heaps, st)
+        });
+        let mut merged: Vec<BoundedMaxHeap> = (0..nq).map(|_| BoundedMaxHeap::new(cap)).collect();
+        let mut stats = KernelStats::default();
+        for (heaps, st) in shards {
+            stats.add(&st);
+            for (m, h) in merged.iter_mut().zip(heaps) {
+                m.merge(h);
+            }
+        }
+        (
+            merged
+                .into_iter()
+                .map(|h| h.into_sorted().into_iter().map(|(_, i)| i).collect())
+                .collect(),
+            stats,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{forall, gen};
+    use crate::util::rng::Pcg64;
+
+    /// Sequential-scalar reference top-m (the naive oracle).
+    fn naive_top_m(table: &[f32], rows: usize, dim: usize, q: &[f32], m: usize) -> Vec<u32> {
+        let mut dists: Vec<(f32, u32)> = (0..rows)
+            .map(|i| {
+                let d: f32 = table[i * dim..(i + 1) * dim]
+                    .iter()
+                    .zip(q)
+                    .map(|(a, b)| (a - b) * (a - b))
+                    .sum();
+                (d, i as u32)
+            })
+            .collect();
+        dists.sort_by(|a, b| a.0.total_cmp(&b.0));
+        dists.truncate(m.min(rows));
+        dists.into_iter().map(|(_, i)| i).collect()
+    }
+
+    fn random_table(rng: &mut Pcg64, rows: usize, dim: usize) -> Vec<f32> {
+        (0..rows * dim).map(|_| rng.normal()).collect()
+    }
+
+    #[test]
+    fn blocks_layout_roundtrips_every_cell() {
+        let mut rng = Pcg64::new(3);
+        for (rows, dim) in [(1usize, 1usize), (31, 7), (32, 16), (33, 16), (100, 5)] {
+            let table = random_table(&mut rng, rows, dim);
+            let blocks = ProxyBlocks::build(&table, rows, dim);
+            assert_eq!(blocks.n_blocks(), rows.div_ceil(BLOCK_ROWS));
+            for r in 0..rows {
+                let (b, lane) = (r / BLOCK_ROWS, r % BLOCK_ROWS);
+                assert_eq!(blocks.id(b, lane), r as u32);
+                for j in 0..dim {
+                    assert_eq!(
+                        blocks.block(b)[j * BLOCK_ROWS + lane],
+                        table[r * dim + j],
+                        "rows={rows} dim={dim} r={r} j={j}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tiled_matches_naive_across_ragged_dims_and_rows() {
+        // Satellite: parity across proxy dims that are and are not
+        // multiples of the strip/lane width, and row counts that do and do
+        // not fill the last block.
+        forall(71, 40, |rng| {
+            let dim = [1usize, 7, 15, 16, 17, 31, 32, 33, 48, 100][rng.below(10)];
+            let rows = [1usize, 2, 31, 32, 33, 64, 97][rng.below(7)];
+            let table = random_table(rng, rows, dim);
+            let blocks = ProxyBlocks::build(&table, rows, dim);
+            let nq = gen::usize_in(rng, 1, TILE_Q);
+            let m = gen::usize_in(rng, 1, rows + 2);
+            let qs_data: Vec<Vec<f32>> = (0..nq).map(|_| gen::vec_normal(rng, dim, 1.0)).collect();
+            let qs: Vec<&[f32]> = qs_data.iter().map(|q| q.as_slice()).collect();
+            let classes = vec![None; nq];
+            let scan = KernelScan {
+                blocks: &blocks,
+                queries: &qs,
+                classes: &classes,
+                labels: None,
+            };
+            let (got, st) = scan.top_m(m.min(rows).max(1), 2);
+            crate::prop_assert!(st.rows >= rows as u64, "row accounting");
+            for (qi, q) in qs.iter().enumerate() {
+                let want = naive_top_m(&table, rows, dim, q, m);
+                crate::prop_assert!(
+                    got[qi] == want,
+                    "dim={dim} rows={rows} nq={nq} m={m} qi={qi}: {:?} vs {:?}",
+                    got[qi],
+                    want
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn strip_early_exit_preserves_exactness_on_self_queries() {
+        // self-queries make heap cutoffs tiny after the home block, so most
+        // tiles retire early — results must still equal the naive scan
+        let mut rng = Pcg64::new(9);
+        let (rows, dim) = (200usize, 96usize); // several strips per block
+        let table = random_table(&mut rng, rows, dim);
+        let blocks = ProxyBlocks::build(&table, rows, dim);
+        for r in [0usize, 57, 199] {
+            let q = &table[r * dim..(r + 1) * dim];
+            let queries = [q];
+            let scan = KernelScan {
+                blocks: &blocks,
+                queries: &queries,
+                classes: &[None],
+                labels: None,
+            };
+            let (got, st) = scan.top_m(3, 1);
+            assert_eq!(got[0], naive_top_m(&table, rows, dim, q, 3));
+            assert_eq!(got[0][0], r as u32);
+            assert!(st.strip_exits > 0, "self-query must retire tiles early");
+        }
+    }
+
+    #[test]
+    fn subset_blocks_map_lanes_to_global_ids() {
+        let mut rng = Pcg64::new(5);
+        let (rows, dim) = (90usize, 24usize);
+        let table = random_table(&mut rng, rows, dim);
+        let ids: Vec<u32> = (0..rows as u32).filter(|i| i % 3 == 0).collect();
+        let blocks = ProxyBlocks::build_subset(&table, dim, &ids);
+        assert_eq!(blocks.rows, ids.len());
+        let q = gen::vec_normal(&mut rng, dim, 1.0);
+        let queries = [q.as_slice()];
+        let scan = KernelScan {
+            blocks: &blocks,
+            queries: &queries,
+            classes: &[None],
+            labels: None,
+        };
+        let (got, _) = scan.top_m(5, 1);
+        // naive over the subset only
+        let mut dists: Vec<(f32, u32)> = ids
+            .iter()
+            .map(|&gid| {
+                let row = &table[gid as usize * dim..(gid as usize + 1) * dim];
+                let d: f32 = row.iter().zip(&q).map(|(a, b)| (a - b) * (a - b)).sum();
+                (d, gid)
+            })
+            .collect();
+        dists.sort_by(|a, b| a.0.total_cmp(&b.0));
+        let want: Vec<u32> = dists.into_iter().take(5).map(|(_, i)| i).collect();
+        assert_eq!(got[0], want);
+    }
+
+    #[test]
+    fn conditional_harvest_filters_by_label() {
+        let mut rng = Pcg64::new(7);
+        let (rows, dim) = (64usize, 8usize);
+        let table = random_table(&mut rng, rows, dim);
+        let labels: Vec<u32> = (0..rows as u32).map(|i| i % 4).collect();
+        let blocks = ProxyBlocks::build(&table, rows, dim);
+        let q = gen::vec_normal(&mut rng, dim, 1.0);
+        let queries = [q.as_slice()];
+        let scan = KernelScan {
+            blocks: &blocks,
+            queries: &queries,
+            classes: &[Some(2)],
+            labels: Some(&labels),
+        };
+        let (got, _) = scan.top_m(6, 2);
+        assert_eq!(got[0].len(), 6);
+        assert!(got[0].iter().all(|&gid| labels[gid as usize] == 2));
+    }
+
+    #[test]
+    fn empty_and_singleton_tables_are_safe() {
+        let blocks = ProxyBlocks::build(&[], 0, 4);
+        assert_eq!(blocks.n_blocks(), 0);
+        let q = vec![0.5f32; 4];
+        let queries = [q.as_slice()];
+        let scan = KernelScan {
+            blocks: &blocks,
+            queries: &queries,
+            classes: &[None],
+            labels: None,
+        };
+        let (got, st) = scan.top_m(3, 2);
+        assert!(got[0].is_empty());
+        assert_eq!(st.rows, 0);
+
+        let table = vec![1.0f32, -2.0, 0.0, 3.0];
+        let blocks = ProxyBlocks::build(&table, 1, 4);
+        let queries = [q.as_slice()];
+        let scan = KernelScan {
+            blocks: &blocks,
+            queries: &queries,
+            classes: &[None],
+            labels: None,
+        };
+        let (got, _) = scan.top_m(3, 2);
+        assert_eq!(got[0], vec![0]);
+    }
+}

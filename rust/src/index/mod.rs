@@ -5,17 +5,23 @@
 //! The retrieval contract lives in [`backend`]: `RetrievalBackend` with the
 //! `FlatScan` (per-query reference), `BatchedScan` (one proxy-table pass
 //! per batch group) and `ClusterPruned` (IVF-style centroid-bound pruning)
-//! implementations. `scan::ProxyIndex` remains the low-level sharded-scan
-//! primitive the flat backend and the refine step are built on. See
-//! `index/README.md` for the backend selection guide.
+//! implementations, plus the batched refine ladder. [`kernel`] holds the
+//! register-tiled multi-query distance kernel and the structure-of-arrays
+//! `ProxyBlocks` layout every default backend scans through;
+//! `scan::ProxyIndex` remains the low-level scalar sharded-scan primitive
+//! the reference paths and the refine step are built on. See
+//! `index/README.md` for the backend selection guide and the kernel design
+//! notes.
 
 pub mod backend;
+pub mod kernel;
 pub mod scan;
 pub mod topk;
 
 pub use backend::{
-    BatchedScan, ClusterPruned, FlatScan, ProxyQuery, RetrievalBackend, RetrievalBackendKind,
-    RetrievalStats,
+    batched_refine, BackendOpts, BatchedScan, ClusterPruned, FlatScan, ProxyQuery,
+    RetrievalBackend, RetrievalBackendKind, RetrievalStats,
 };
+pub use kernel::{KernelScan, KernelStats, ProxyBlocks, BLOCK_ROWS, TILE_Q};
 pub use scan::ProxyIndex;
 pub use topk::{top_k_smallest, BoundedMaxHeap};

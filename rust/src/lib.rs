@@ -15,8 +15,11 @@
 //! * [`index`] — Adaptive Coarse Screening behind pluggable
 //!   `RetrievalBackend`s: flat per-query scan (reference), batched
 //!   multi-query scan (one proxy-table pass per engine tick group), and
-//!   IVF-style cluster-pruned screening with exact centroid bounds
-//!   (`index/README.md` documents the trait, knobs and guarantees).
+//!   IVF-style cluster-pruned screening with exact centroid bounds; all
+//!   three scan through the register-tiled SoA kernel (`index::kernel`)
+//!   by default, and tick groups refine through the batched union-scan
+//!   ladder (`index/README.md` documents the trait, the kernel layout,
+//!   knobs and guarantees).
 //! * [`oracle`] — closed-form population denoiser (the neural-oracle stand-in).
 //! * [`denoiser`] — Optimal / Wiener / Kamb / PCA baselines + the GoldDiff
 //!   coarse→fine wrapper; streaming softmax (SS) and biased WSS.

@@ -157,8 +157,10 @@ fn prop_retrieval_backends_agree_with_flat_reference() {
     let mut spec = preset("cifar-sim").unwrap().clone();
     spec.n = 400;
     let ds = Dataset::synthesize(&spec, 31);
-    let flat = FlatScan::new(2);
+    let flat = FlatScan::scalar(2); // seed-semantics scalar reference
+    let flat_kernel = FlatScan::new(2);
     let batched = BatchedScan::new(2);
+    let batched_scalar = BatchedScan::scalar(2);
     let pruned = ClusterPruned::build(&ds, 12, 0, 5);
     let unpruned = ClusterPruned::build(&ds, 1, 0, 5); // single list = no pruning possible
     forall(59, 30, |rng| {
@@ -171,11 +173,93 @@ fn prop_retrieval_backends_agree_with_flat_reference() {
         };
         let want = flat.top_m(&ds, &q, m, class);
         for (name, got) in [
+            ("flat-kernel", flat_kernel.top_m(&ds, &q, m, class)),
             ("batched", batched.top_m(&ds, &q, m, class)),
+            ("batched-scalar", batched_scalar.top_m(&ds, &q, m, class)),
             ("cluster-pruned", pruned.top_m(&ds, &q, m, class)),
             ("cluster-unpruned", unpruned.top_m(&ds, &q, m, class)),
         ] {
             prop_assert!(got == want, "{name} != flat (m={m} class={class:?})");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_tiled_kernel_groups_match_scalar_reference() {
+    // The register-tiled kernel pass over ragged query groups (1..=9 spans
+    // under, at and past the 8-query tile width) must return exactly what
+    // the scalar per-query reference returns, conditional queries included.
+    let mut spec = preset("cifar-sim").unwrap().clone();
+    spec.n = 350;
+    let ds = Dataset::synthesize(&spec, 41);
+    let tiled = BatchedScan::new(2);
+    let reference = FlatScan::scalar(2);
+    forall(79, 15, |rng| {
+        let b = gen::usize_in(rng, 1, 9);
+        let m = gen::usize_in(rng, 1, 72);
+        let qs: Vec<Vec<f32>> = (0..b).map(|_| gen::vec_normal(rng, ds.proxy_d, 1.0)).collect();
+        let classes: Vec<Option<u32>> = (0..b)
+            .map(|_| {
+                if rng.below(4) == 0 {
+                    Some(rng.below(ds.classes) as u32)
+                } else {
+                    None
+                }
+            })
+            .collect();
+        let queries: Vec<ProxyQuery> = qs
+            .iter()
+            .zip(&classes)
+            .map(|(q, &class)| ProxyQuery { proxy: q, class })
+            .collect();
+        let grouped = tiled.top_m_batch(&ds, &queries, m);
+        for (i, query) in queries.iter().enumerate() {
+            let want = reference.top_m(&ds, query.proxy, m, query.class);
+            prop_assert!(grouped[i] == want, "query {i} of {b} diverged (m={m})");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_batched_refine_ladder_matches_per_query_refine() {
+    // The union-scan refine ladder is exact: per-query results equal the
+    // scalar per-query refine for every pool shape, including empty and
+    // singleton candidate sets.
+    let mut spec = preset("mnist-sim").unwrap().clone();
+    spec.n = 320;
+    let ds = Dataset::synthesize(&spec, 43);
+    let ladder = BatchedScan::new(2);
+    let reference = FlatScan::scalar(2);
+    forall(83, 15, |rng| {
+        let b = gen::usize_in(rng, 1, 10);
+        let k = gen::usize_in(rng, 1, 32);
+        let qs_data: Vec<Vec<f32>> = (0..b).map(|_| gen::vec_normal(rng, ds.d, 1.0)).collect();
+        let pools_data: Vec<Vec<u32>> = (0..b)
+            .map(|i| match i % 3 {
+                0 if i > 0 => Vec::new(),
+                1 => vec![rng.below(ds.n) as u32],
+                _ => {
+                    let len = gen::usize_in(rng, 1, 96);
+                    // distinct ids — candidate pools are top_m output
+                    rng.choose_k(ds.n, len.min(ds.n))
+                        .into_iter()
+                        .map(|i| i as u32)
+                        .collect()
+                }
+            })
+            .collect();
+        let qs: Vec<&[f32]> = qs_data.iter().map(|q| q.as_slice()).collect();
+        let pools: Vec<&[u32]> = pools_data.iter().map(|p| p.as_slice()).collect();
+        let got = ladder.refine_top_k_batch(&ds, &qs, &pools, k);
+        for i in 0..b {
+            let want = reference.refine_top_k(&ds, qs[i], pools[i], k);
+            prop_assert!(
+                got[i] == want,
+                "refine {i}/{b} (k={k}, pool={}) diverged",
+                pools[i].len()
+            );
         }
         Ok(())
     });
