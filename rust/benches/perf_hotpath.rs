@@ -138,6 +138,51 @@ fn bench_retrieval_backends(ds: &golddiff::Dataset) {
         ],
     );
 
+    // heap-aware block ordering vs storage order: same kernel pass, the
+    // ordered scan visits blocks nearest the query-group mean first so the
+    // strip bound engages early (precision budgets show the gap)
+    let m_ord = (ds.n / 20).max(1);
+    let unordered = BatchedScan::new(golddiff::util::threadpool::default_threads())
+        .with_ordering(false);
+    let t_unord = bench(
+        &format!("batched scan top-{m_ord} x{BATCH} (storage order)"),
+        15,
+        || {
+            let _ = unordered.top_m_batch(ds, &queries, m_ord);
+        },
+    );
+    batched.reset_stats();
+    let t_ord = bench(
+        &format!("batched scan top-{m_ord} x{BATCH} (heap-aware order)"),
+        15,
+        || {
+            let _ = batched.top_m_batch(ds, &queries, m_ord);
+        },
+    );
+    let osnap = batched.stats();
+    assert!(
+        osnap.blocks_reordered > 0,
+        "the default batched scan must reorder blocks"
+    );
+    let order_speedup = t_unord / t_ord.max(1e-12);
+    println!(
+        "{:>58}  -> ordered speedup {order_speedup:.2}x, {} blocks reordered, {} exit-gain rows",
+        "", osnap.blocks_reordered, osnap.exit_gain_rows
+    );
+    benchlib::emit_bench(
+        "scan_ordered_vs_unordered",
+        &[
+            ("batch", BATCH as f64),
+            ("m", m_ord as f64),
+            ("n", ds.n as f64),
+            ("unordered_secs", t_unord),
+            ("ordered_secs", t_ord),
+            ("speedup", order_speedup),
+            ("blocks_reordered", osnap.blocks_reordered as f64),
+            ("exit_gain_rows", osnap.exit_gain_rows as f64),
+        ],
+    );
+
     // batched refine ladder vs per-query refine over the same pools
     let full_queries: Vec<Vec<f32>> = (0..BATCH)
         .map(|_| {
@@ -188,6 +233,44 @@ fn bench_retrieval_backends(ds: &golddiff::Dataset) {
             ("ladder_secs", t_ladder),
             ("speedup", ladder_speedup),
             ("refine_rows", refine_rows as f64),
+        ],
+    );
+
+    // pre-blocked refine (default, masked kernel tiles over row_blocks) vs
+    // the row-major reference ladder on the identical pools
+    let rowmajor = BatchedScan::new(golddiff::util::threadpool::default_threads())
+        .with_refine_kernel(false);
+    let t_rowmajor = bench(
+        &format!("refine ladder x{BATCH} top-{k} (row-major)"),
+        15,
+        || {
+            let _ = rowmajor.refine_top_k_batch(ds, &qrefs, &poolrefs, k);
+        },
+    );
+    let preblocked_speedup = t_rowmajor / t_ladder.max(1e-12);
+    batched.reset_stats();
+    let _ = batched.refine_top_k_batch(ds, &qrefs, &poolrefs, k);
+    let rsnap = batched.stats();
+    assert!(
+        rsnap.tiles_evaluated > 0,
+        "the default refine must run through the masked kernel tiles"
+    );
+    println!(
+        "{:>58}  -> preblocked speedup {preblocked_speedup:.2}x, {} tiles, {} exits",
+        "", rsnap.tiles_evaluated, rsnap.kernel_exits
+    );
+    benchlib::emit_bench(
+        "refine_preblocked_vs_rowmajor",
+        &[
+            ("batch", BATCH as f64),
+            ("m", m as f64),
+            ("k", k as f64),
+            ("rowmajor_secs", t_rowmajor),
+            ("preblocked_secs", t_ladder),
+            ("speedup", preblocked_speedup),
+            ("refine_rows", rsnap.refine_rows as f64),
+            ("tiles_evaluated", rsnap.tiles_evaluated as f64),
+            ("kernel_exits", rsnap.kernel_exits as f64),
         ],
     );
 
@@ -262,6 +345,97 @@ fn bench_retrieval_backends(ds: &golddiff::Dataset) {
     }
 }
 
+/// Section 0b: the concentration warm-start vs the cold screen (no runtime
+/// required). A tick group's golden subsets at sampling point t−1 seed the
+/// screens at t; the seeded screen skips every proxy block the exact
+/// centroid bound clears.
+fn bench_warm_start(ds: &golddiff::Dataset, sched: &NoiseSchedule) {
+    use golddiff::denoiser::golddiff::{
+        blended_golden_rows_batch, blended_golden_rows_batch_warm, WarmStart,
+    };
+
+    const BATCH: usize = 8;
+    let backend = BatchedScan::default();
+    let buckets: Vec<usize> = (5..=17).map(|p| 1usize << p).collect();
+    let budget = golddiff::schedule::budget::BudgetSchedule::paper_defaults(ds.n, &buckets);
+    let step = sched.steps - 1; // largest m — the hardest screen to warm
+    let b = budget.at(sched, step);
+    let b_prev = budget.at(sched, step - 1);
+
+    let xs_data: Vec<Vec<f32>> = (0..BATCH as u64)
+        .map(|i| {
+            let mut r = golddiff::util::rng::Pcg64::new(400 + i);
+            let row = ds.row(r.below(ds.n)).to_vec();
+            row.iter().map(|&v| v + r.normal() * 0.2).collect()
+        })
+        .collect();
+    let xs: Vec<&[f32]> = xs_data.iter().map(|x| x.as_slice()).collect();
+    let ctx = StepContext {
+        ds,
+        sched,
+        step,
+        class: None,
+    };
+    let ctxs: Vec<&StepContext> = xs.iter().map(|_| &ctx).collect();
+
+    println!("-- concentration warm-start (batch={BATCH}, m={}, k={}) --", b.m, b.k);
+    let t_cold = bench(&format!("cold screen x{BATCH} t={step}"), 15, || {
+        let _ = blended_golden_rows_batch(&backend, &ctxs, &xs, b.m, b.k, ds.h, ds.w, ds.c);
+    });
+
+    // seed with the previous sampling point's golden subsets, as the
+    // engine's tick loop would
+    let ctx_prev = StepContext {
+        ds,
+        sched,
+        step: step - 1,
+        class: None,
+    };
+    let ctxs_prev: Vec<&StepContext> = xs.iter().map(|_| &ctx_prev).collect();
+    let prev = blended_golden_rows_batch(
+        &backend, &ctxs_prev, &xs, b_prev.m, b_prev.k, ds.h, ds.w, ds.c,
+    );
+    let mut warm = WarmStart::new();
+    warm.record(step - 1, &prev);
+    let t_warm = bench(&format!("warm screen x{BATCH} t={step}"), 15, || {
+        let _ = blended_golden_rows_batch_warm(
+            &backend,
+            &ctxs,
+            &xs,
+            b.m,
+            b.k,
+            ds.h,
+            ds.w,
+            ds.c,
+            Some(&mut warm),
+        );
+    });
+    let speedup = t_cold / t_warm.max(1e-12);
+    let engaged = warm.hits as f64 / (warm.hits + warm.fallbacks).max(1) as f64;
+    println!(
+        "{:>58}  -> warm speedup {speedup:.2}x, {:.0}% screens seeded ({} hits / {} fallbacks)",
+        "",
+        engaged * 100.0,
+        warm.hits,
+        warm.fallbacks
+    );
+    benchlib::emit_bench(
+        "warm_start_vs_cold",
+        &[
+            ("batch", BATCH as f64),
+            ("m", b.m as f64),
+            ("k", b.k as f64),
+            ("n", ds.n as f64),
+            ("cold_secs", t_cold),
+            ("warm_secs", t_warm),
+            ("speedup", speedup),
+            ("warm_hits", warm.hits as f64),
+            ("warm_fallbacks", warm.fallbacks as f64),
+            ("engaged_frac", engaged),
+        ],
+    );
+}
+
 fn main() -> anyhow::Result<()> {
     // GOLDDIFF_BENCH_N shrinks the corpus for CI smoke runs (synthesised
     // directly, bypassing the on-disk store so sizes never conflict)
@@ -288,6 +462,9 @@ fn main() -> anyhow::Result<()> {
 
     // 0. pluggable retrieval backends (no runtime required)
     bench_retrieval_backends(&ds);
+
+    // 0b. concentration warm-start vs cold screening (no runtime required)
+    bench_warm_start(&ds, &sched);
 
     // 1. coarse scan vs threads
     for threads in [1usize, 2, 4, 8] {

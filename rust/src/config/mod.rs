@@ -7,6 +7,21 @@ use anyhow::Result;
 
 use crate::util::json::{parse, Json};
 
+/// Parse a boolean-ish flag value (CLI `--kernel off`, env `GOLDDIFF_*`).
+pub fn parse_flag(v: &str) -> bool {
+    matches!(v, "1" | "true" | "on" | "yes")
+}
+
+/// Boolean default with an environment override — the CI scalar-matrix leg
+/// runs the whole suite under `GOLDDIFF_KERNEL=0 GOLDDIFF_WARM_START=0` so
+/// every default-constructed path exercises the scalar references.
+pub fn env_flag(name: &str, default: bool) -> bool {
+    std::env::var(name)
+        .ok()
+        .map(|v| parse_flag(&v))
+        .unwrap_or(default)
+}
+
 /// Engine-level configuration (the launcher's config file).
 #[derive(Debug, Clone, PartialEq)]
 pub struct EngineConfig {
@@ -42,6 +57,14 @@ pub struct EngineConfig {
     /// route proxy scans through the register-tiled kernel (scalar paths
     /// remain available for reference runs / debugging)
     pub kernel: bool,
+    /// route the exact refine through the pre-blocked kernel ladder
+    /// (row-major reference behind `false`; moot when `kernel` is off)
+    pub refine_kernel: bool,
+    /// heap-aware block ordering for the batched / cluster scans
+    pub ordering: bool,
+    /// concentration warm-start: seed each tick group's coarse screen from
+    /// the previous sampling point's golden subsets (exactness preserved)
+    pub warm_start: bool,
     /// queries per kernel register tile (clamped to 1..=8 at build)
     pub kernel_tile_q: usize,
     /// rng seed
@@ -67,7 +90,10 @@ impl Default for EngineConfig {
             backend: "batched".into(),
             clusters: 64,
             nprobe: 0,
-            kernel: true,
+            kernel: env_flag("GOLDDIFF_KERNEL", true),
+            refine_kernel: env_flag("GOLDDIFF_KERNEL", true),
+            ordering: true,
+            warm_start: env_flag("GOLDDIFF_WARM_START", true),
             kernel_tile_q: crate::index::kernel::TILE_Q,
             seed: 0,
         }
@@ -97,6 +123,9 @@ impl EngineConfig {
             .set("clusters", self.clusters)
             .set("nprobe", self.nprobe)
             .set("kernel", self.kernel)
+            .set("refine_kernel", self.refine_kernel)
+            .set("ordering", self.ordering)
+            .set("warm_start", self.warm_start)
             .set("kernel_tile_q", self.kernel_tile_q)
             .set("seed", self.seed);
         j
@@ -135,6 +164,18 @@ impl EngineConfig {
                 .get("kernel")
                 .and_then(Json::as_bool)
                 .unwrap_or(def.kernel),
+            refine_kernel: j
+                .get("refine_kernel")
+                .and_then(Json::as_bool)
+                .unwrap_or(def.refine_kernel),
+            ordering: j
+                .get("ordering")
+                .and_then(Json::as_bool)
+                .unwrap_or(def.ordering),
+            warm_start: j
+                .get("warm_start")
+                .and_then(Json::as_bool)
+                .unwrap_or(def.warm_start),
             kernel_tile_q: n("kernel_tile_q", def.kernel_tile_q as f64) as usize,
             seed: n("seed", def.seed as f64) as u64,
         })
@@ -176,7 +217,16 @@ impl EngineConfig {
         self.clusters = args.usize_or("clusters", self.clusters);
         self.nprobe = args.usize_or("nprobe", self.nprobe);
         if let Some(v) = args.get("kernel") {
-            self.kernel = matches!(v, "1" | "true" | "on" | "yes");
+            self.kernel = parse_flag(v);
+        }
+        if let Some(v) = args.get("refine-kernel") {
+            self.refine_kernel = parse_flag(v);
+        }
+        if let Some(v) = args.get("ordering") {
+            self.ordering = parse_flag(v);
+        }
+        if let Some(v) = args.get("warm-start") {
+            self.warm_start = parse_flag(v);
         }
         self.kernel_tile_q = args.usize_or("kernel-tile-q", self.kernel_tile_q);
         self.steps = args.usize_or("steps", self.steps);
@@ -198,6 +248,8 @@ impl EngineConfig {
             nprobe: self.nprobe,
             seed: self.seed,
             kernel: self.kernel,
+            refine_kernel: self.refine_kernel,
+            ordering: self.ordering,
             tile_q: self.kernel_tile_q,
         }
     }
@@ -217,6 +269,9 @@ mod tests {
         c.clusters = 128;
         c.nprobe = 4;
         c.kernel = false;
+        c.refine_kernel = false;
+        c.ordering = false;
+        c.warm_start = false;
         c.kernel_tile_q = 2;
         let rt = EngineConfig::from_json(&parse(&c.to_json().to_string_compact()).unwrap())
             .unwrap();
@@ -252,12 +307,18 @@ mod tests {
         assert_eq!(c.backend, "batched");
         assert_eq!(c.clusters, 64);
         assert_eq!(c.nprobe, 0);
-        assert!(c.kernel, "the tiled kernel is on by default");
+        // kernel / warm-start defaults follow the env so the CI scalar leg
+        // can flip every default-constructed path at once
+        assert_eq!(c.kernel, env_flag("GOLDDIFF_KERNEL", true));
+        assert_eq!(c.refine_kernel, env_flag("GOLDDIFF_KERNEL", true));
+        assert_eq!(c.warm_start, env_flag("GOLDDIFF_WARM_START", true));
+        assert!(c.ordering, "heap-aware ordering is on by default");
         assert_eq!(c.kernel_tile_q, crate::index::kernel::TILE_Q);
         assert!(crate::index::backend::RetrievalBackendKind::parse(&c.backend).is_some());
         let mut c = EngineConfig::default();
         let raw: Vec<String> = [
             "--backend", "cluster", "--clusters", "32", "--nprobe", "2", "--kernel", "off",
+            "--refine-kernel", "off", "--ordering", "off", "--warm-start", "off",
             "--kernel-tile-q", "4",
         ]
         .iter()
@@ -267,12 +328,32 @@ mod tests {
         assert_eq!(c.backend, "cluster");
         assert_eq!(c.clusters, 32);
         assert_eq!(c.nprobe, 2);
-        assert!(!c.kernel);
+        assert!(!c.kernel && !c.refine_kernel && !c.ordering && !c.warm_start);
         assert_eq!(c.kernel_tile_q, 4);
         let opts = c.backend_opts();
-        assert!(!opts.kernel);
+        assert!(!opts.kernel && !opts.refine_kernel && !opts.ordering);
         assert_eq!(opts.tile_q, 4);
         assert_eq!(opts.clusters, 32);
+    }
+
+    #[test]
+    fn flag_parsing_accepts_the_usual_spellings() {
+        for v in ["1", "true", "on", "yes"] {
+            assert!(parse_flag(v), "{v}");
+        }
+        for v in ["0", "false", "off", "no", ""] {
+            assert!(!parse_flag(v), "{v}");
+        }
+        // unset → the default wins
+        assert!(env_flag("GOLDDIFF_TEST_FLAG_THAT_IS_NEVER_SET", true));
+        assert!(!env_flag("GOLDDIFF_TEST_FLAG_THAT_IS_NEVER_SET", false));
+        // set → the env wins over either default (a var name only this
+        // test touches, so parallel tests cannot race on it)
+        std::env::set_var("GOLDDIFF_TEST_FLAG_PARSE_ONLY", "off");
+        assert!(!env_flag("GOLDDIFF_TEST_FLAG_PARSE_ONLY", true));
+        std::env::set_var("GOLDDIFF_TEST_FLAG_PARSE_ONLY", "on");
+        assert!(env_flag("GOLDDIFF_TEST_FLAG_PARSE_ONLY", false));
+        std::env::remove_var("GOLDDIFF_TEST_FLAG_PARSE_ONLY");
     }
 
     #[test]

@@ -233,6 +233,7 @@ fn executor_loop(
     stats: Arc<Mutex<EngineStats>>,
 ) {
     let rt = std::rc::Rc::new(runtime.0);
+    let warm_start = cfg.warm_start;
     let mut denoisers: HashMap<DenoiserKind, XlaDenoiser> = HashMap::new();
     let mut active: Vec<ActiveSeq> = Vec::new();
     let buckets = rt.manifest.buckets("golden_step", &ds.name);
@@ -296,6 +297,7 @@ fn executor_loop(
                     .expect("denoiser init")
                     .with_budget(budget.clone())
                     .with_retrieval(Arc::clone(&backend))
+                    .with_warm_start(warm_start)
             });
             // one batched retrieval for the whole group, then dispatch —
             // every sequence here shares (method, step, k-bucket)

@@ -34,6 +34,10 @@ pub struct EngineStats {
     pub tiles_evaluated: u64,
     pub kernel_exits: u64,
     pub refine_rows: u64,
+    /// heap-aware ordering telemetry: blocks visited out of storage order,
+    /// and the (query, row) evaluations the strip exits cut short
+    pub blocks_reordered: u64,
+    pub exit_gain_rows: u64,
 }
 
 impl Default for EngineStats {
@@ -58,6 +62,8 @@ impl Default for EngineStats {
             tiles_evaluated: 0,
             kernel_exits: 0,
             refine_rows: 0,
+            blocks_reordered: 0,
+            exit_gain_rows: 0,
         }
     }
 }
@@ -95,6 +101,8 @@ impl EngineStats {
         self.tiles_evaluated = snap.tiles_evaluated;
         self.kernel_exits = snap.kernel_exits;
         self.refine_rows = snap.refine_rows;
+        self.blocks_reordered = snap.blocks_reordered;
+        self.exit_gain_rows = snap.exit_gain_rows;
     }
 
     /// Proxy rows evaluated per full table traversal (≈ n for a batched
@@ -132,7 +140,9 @@ impl EngineStats {
             .set("clusters_pruned", self.clusters_pruned as usize)
             .set("tiles_evaluated", self.tiles_evaluated as usize)
             .set("kernel_exits", self.kernel_exits as usize)
-            .set("refine_rows", self.refine_rows as usize);
+            .set("refine_rows", self.refine_rows as usize)
+            .set("blocks_reordered", self.blocks_reordered as usize)
+            .set("exit_gain_rows", self.exit_gain_rows as usize);
         j
     }
 }
@@ -169,6 +179,8 @@ mod tests {
             tiles_evaluated: 96,
             kernel_exits: 7,
             refine_rows: 320,
+            blocks_reordered: 18,
+            exit_gain_rows: 224,
         });
         let j = s.to_json();
         assert_eq!(j.get("clusters_pruned").unwrap().as_f64(), Some(24.0));
@@ -176,6 +188,8 @@ mod tests {
         assert_eq!(j.get("tiles_evaluated").unwrap().as_f64(), Some(96.0));
         assert_eq!(j.get("kernel_exits").unwrap().as_f64(), Some(7.0));
         assert_eq!(j.get("refine_rows").unwrap().as_f64(), Some(320.0));
+        assert_eq!(j.get("blocks_reordered").unwrap().as_f64(), Some(18.0));
+        assert_eq!(j.get("exit_gain_rows").unwrap().as_f64(), Some(224.0));
         assert_eq!(j.get("rows_per_pass").unwrap().as_f64(), Some(250.0));
         assert_eq!(
             j.get("retrieval_backend").unwrap().as_str(),

@@ -31,7 +31,7 @@ use std::sync::Arc;
 use anyhow::{Context, Result};
 
 use crate::data::dataset::Dataset;
-use crate::denoiser::golddiff::{blended_golden_rows, blended_golden_rows_batch};
+use crate::denoiser::golddiff::{blended_golden_rows_batch_warm, WarmStart};
 use crate::denoiser::{DenoiseResult, Denoiser, DenoiserKind, PosteriorStats, StepContext};
 use crate::index::backend::{FlatScan, RetrievalBackend};
 use crate::runtime::{DeviceTensor, Runtime, StepOutput};
@@ -54,6 +54,10 @@ pub struct XlaDenoiser {
     budget: BudgetSchedule,
     /// pluggable coarse-retrieval backend (shared engine-wide)
     backend: Arc<dyn RetrievalBackend>,
+    /// concentration warm-start: previous sampling point's golden subsets
+    /// seed the next coarse screen (exact — see `golddiff::WarmStart`)
+    warm_start: bool,
+    warm: WarmStart,
     /// device-resident full-scan candidates (+ mask), lazily built
     resident_full: Option<(usize, Rc<DeviceTensor>, Rc<DeviceTensor>)>,
     /// device-resident Wiener stats
@@ -72,12 +76,21 @@ impl XlaDenoiser {
             "no golden_step artifacts for preset {} — rerun `make artifacts`",
             ds.name
         );
+        let threads = crate::util::threadpool::default_threads();
+        let backend: Arc<dyn RetrievalBackend> =
+            if crate::config::env_flag("GOLDDIFF_KERNEL", true) {
+                Arc::new(FlatScan::new(threads))
+            } else {
+                Arc::new(FlatScan::scalar(threads))
+            };
         Ok(XlaDenoiser {
             rt,
             kind,
             preset: ds.name.clone(),
             budget: BudgetSchedule::paper_defaults(ds.n, &buckets),
-            backend: Arc::new(FlatScan::new(crate::util::threadpool::default_threads())),
+            backend,
+            warm_start: crate::config::env_flag("GOLDDIFF_WARM_START", true),
+            warm: WarmStart::new(),
             resident_full: None,
             resident_wiener: None,
             gather_buf: Vec::new(),
@@ -96,6 +109,13 @@ impl XlaDenoiser {
     /// across all its denoisers so telemetry aggregates in one place).
     pub fn with_retrieval(mut self, backend: Arc<dyn RetrievalBackend>) -> Self {
         self.backend = backend;
+        self
+    }
+
+    /// Toggle the concentration warm-start (`EngineConfig::warm_start`).
+    /// Exactness is preserved either way.
+    pub fn with_warm_start(mut self, on: bool) -> Self {
+        self.warm_start = on;
         self
     }
 
@@ -199,16 +219,20 @@ impl XlaDenoiser {
         }
         if self.is_golddiff() {
             let b = self.budget.at(ctx.sched, ctx.step);
-            let rows = blended_golden_rows(
+            let warm = self.warm_start.then_some(&mut self.warm);
+            let rows = blended_golden_rows_batch_warm(
                 self.backend.as_ref(),
-                ctx,
-                x_t,
+                &[ctx],
+                &[x_t],
                 b.m,
                 b.k,
                 ds.h,
                 ds.w,
                 ds.c,
-            );
+                warm,
+            )
+            .pop()
+            .unwrap_or_default();
             return Ok(Some(self.bucket_plan(rows, b.m, b.k)?));
         }
         if let Some(y) = ctx.class {
@@ -318,7 +342,8 @@ impl XlaDenoiser {
         let ds = ctxs[0].ds;
         let t_scan = std::time::Instant::now();
         let b = self.budget.at(ctxs[0].sched, ctxs[0].step);
-        let rows_batch = blended_golden_rows_batch(
+        let warm = self.warm_start.then_some(&mut self.warm);
+        let rows_batch = blended_golden_rows_batch_warm(
             self.backend.as_ref(),
             ctxs,
             xs,
@@ -327,6 +352,7 @@ impl XlaDenoiser {
             ds.h,
             ds.w,
             ds.c,
+            warm,
         );
         let scan_each = t_scan.elapsed().as_secs_f64() / xs.len() as f64;
 

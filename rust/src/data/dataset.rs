@@ -2,10 +2,12 @@
 //! engine needs (proxy table, class shards, clusters, local PCA bases,
 //! global Gaussian stats, and the population GMM for the oracle).
 
+use std::sync::OnceLock;
+
 use super::cluster::{kmeans, local_pca};
 use super::gmm::GmmSpec;
 use super::synthetic::{build_population, proxy_embed_all, PresetSpec};
-use crate::index::kernel::ProxyBlocks;
+use crate::index::kernel::{ProxyBlocks, RowBlocks};
 use crate::util::rng::Pcg64;
 
 /// Number of local-PCA clusters.
@@ -75,6 +77,13 @@ pub struct Dataset {
     /// resident layout the tiled scan kernel reads (built once here so
     /// every backend shares one copy)
     pub proxy_blocks: ProxyBlocks,
+    /// the full-resolution corpus in the same dim-major block layout — the
+    /// table the pre-blocked exact refine ladder scans (the row-major
+    /// `data` stays the reference the scalar refine reads). Built lazily on
+    /// first use via [`Dataset::row_blocks`] so scalar-only runs (the
+    /// `refine_kernel = false` reference paths) never pay the duplicated
+    /// corpus residency.
+    pub(crate) row_blocks: OnceLock<RowBlocks>,
     /// per-class row indices (conditional scans)
     pub class_rows: Vec<Vec<u32>>,
     /// persisted IVF partition, if the `.gds` store carried one
@@ -193,6 +202,7 @@ impl Dataset {
             labels,
             proxies,
             proxy_blocks,
+            row_blocks: OnceLock::new(),
             class_rows,
             ivf: None,
             mean,
@@ -213,6 +223,13 @@ impl Dataset {
     #[inline]
     pub fn proxy_row(&self, i: usize) -> &[f32] {
         &self.proxies[i * self.proxy_d..(i + 1) * self.proxy_d]
+    }
+
+    /// The pre-blocked full-resolution corpus, transposed on first use
+    /// (thread-safe; every subsequent call returns the same resident copy).
+    pub fn row_blocks(&self) -> &RowBlocks {
+        self.row_blocks
+            .get_or_init(|| RowBlocks::build(&self.data, self.n, self.d))
     }
 
     /// Gather rows into a caller-provided padded buffer [bucket × d]; rows
@@ -336,6 +353,30 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn row_blocks_mirror_the_full_resolution_corpus() {
+        use crate::index::kernel::BLOCK_ROWS;
+        let ds = tiny();
+        // lazy: nothing resident until the first accessor call
+        assert!(ds.row_blocks.get().is_none(), "row blocks must build lazily");
+        let rb = ds.row_blocks();
+        assert_eq!(rb.rows, ds.n);
+        assert_eq!(rb.dim, ds.d);
+        for i in [0usize, 31, 32, 63, 299] {
+            let (b, lane) = (i / BLOCK_ROWS, i % BLOCK_ROWS);
+            assert_eq!(rb.id(b, lane), i as u32);
+            for j in (0..ds.d).step_by(17) {
+                assert_eq!(
+                    rb.block(b)[j * BLOCK_ROWS + lane],
+                    ds.row(i)[j],
+                    "row {i} dim {j}"
+                );
+            }
+        }
+        // the accessor memoises one copy
+        assert!(std::ptr::eq(rb, ds.row_blocks()));
     }
 
     #[test]

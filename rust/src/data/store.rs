@@ -265,6 +265,7 @@ pub fn load(path: &Path) -> Result<Dataset> {
         labels,
         proxies,
         proxy_blocks,
+        row_blocks: std::sync::OnceLock::new(),
         class_rows,
         ivf,
         mean,
@@ -316,6 +317,10 @@ mod tests {
         assert_eq!(rt.gmm.n_components(), ds.gmm.n_components());
         assert_eq!(rt.gmm.components[3].mean, ds.gmm.components[3].mean);
         assert_eq!(rt.class_rows, ds.class_rows);
+        // derived block layouts rebuild identically from the sections
+        assert_eq!(rt.row_blocks().rows, ds.row_blocks().rows);
+        assert_eq!(rt.row_blocks().dim, ds.row_blocks().dim);
+        assert_eq!(rt.row_blocks().block(0), ds.row_blocks().block(0));
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -18,7 +18,7 @@
 //! the Kamb patch weighting (Tab. 5). The base denoisers are built once and
 //! cached in the `GoldDiff` struct — the seed rebuilt them every step.
 
-use std::collections::HashSet;
+use std::collections::{HashMap, HashSet};
 use std::sync::Arc;
 
 use super::kamb::KambDenoiser;
@@ -28,6 +28,8 @@ use super::{descale, sqdist, DenoiseResult, Denoiser, StepContext};
 use crate::data::dataset::Dataset;
 use crate::data::synthetic::proxy_embed;
 use crate::index::backend::{FlatScan, ProxyQuery, RetrievalBackend};
+use crate::index::scan::{sqdist_early_exit, sqdist_flat};
+use crate::index::topk::BoundedMaxHeap;
 use crate::schedule::budget::BudgetSchedule;
 use crate::schedule::noise::NoiseSchedule;
 
@@ -81,6 +83,40 @@ pub fn blended_golden_rows_batch(
     w: usize,
     c: usize,
 ) -> Vec<Vec<u32>> {
+    blended_golden_rows_batch_warm(backend, ctxs, xs, m, k, h, w, c, None)
+}
+
+/// [`blended_golden_rows_batch`] with concentration-aware warm-starting.
+///
+/// Posterior Progressive Concentration says the golden support shrinks
+/// monotonically as SNR rises, and adjacent sampling points share most of
+/// their high-noise structure (arxiv 2412.09726, 2206.05173) — so the
+/// previous sampling point's golden subsets are an excellent candidate pool
+/// for this one. When `warm` carries rows recorded at `step − 1`, each
+/// query's coarse screen seeds its top-m heap from those rows and then
+/// verifies every proxy block against the exact centroid bound
+/// `(d(q, c_b) − r_b)² ≥ worst`: blocks that pass provably hold no better
+/// row and are skipped outright; blocks that fail are scanned — the
+/// "fallback to a full screen" happens per block, so the result is the
+/// *identical* top-m row set the cold scan produces (exactness preserved;
+/// f32 distance ties remain the only divergence surface, as everywhere in
+/// `index`). A query whose eligible seed rows cannot even fill its heap
+/// falls back to the cold batched screen entirely.
+///
+/// Every call records its final golden subsets into `warm` for the next
+/// sampling point; the seeds are only ever an accelerator, never a filter,
+/// so stale or foreign rows (other sequences in the tick group) are sound.
+pub fn blended_golden_rows_batch_warm(
+    backend: &dyn RetrievalBackend,
+    ctxs: &[&StepContext],
+    xs: &[&[f32]],
+    m: usize,
+    k: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    mut warm: Option<&mut WarmStart>,
+) -> Vec<Vec<u32>> {
     assert_eq!(ctxs.len(), xs.len());
     if ctxs.is_empty() {
         return Vec::new();
@@ -90,7 +126,8 @@ pub fn blended_golden_rows_batch(
         "a batch group must share one sampling point"
     );
     let ds = ctxs[0].ds;
-    let g = ctxs[0].sched.g(ctxs[0].step) as f64;
+    let step = ctxs[0].step;
+    let g = ctxs[0].sched.g(step) as f64;
     let k_breadth = ((k as f64) * g) as usize;
     let k_precise = k - k_breadth;
 
@@ -102,15 +139,38 @@ pub fn blended_golden_rows_batch(
 
     let mut per_query: Vec<Vec<u32>> = if k_precise > 0 {
         let proxies: Vec<Vec<f32>> = qs.iter().map(|q| proxy_embed(q, h, w, c)).collect();
-        let queries: Vec<ProxyQuery> = proxies
-            .iter()
-            .zip(ctxs)
-            .map(|(p, ctx)| ProxyQuery {
-                proxy: p,
-                class: ctx.class,
-            })
-            .collect();
-        let cands = backend.top_m_batch(ds, &queries, m);
+        // the seeded screen is exact, so it may only stand in for a backend
+        // whose own screen is exact — over an approximate backend (cluster
+        // nprobe > 0) it would *change* results, not just accelerate them
+        let seeds: Option<Vec<u32>> = if backend.is_exact() {
+            warm.as_ref()
+                .and_then(|w| w.seed_for(step))
+                .map(<[u32]>::to_vec)
+        } else {
+            None
+        };
+        let cands = match seeds {
+            Some(seed_rows) if !seed_rows.is_empty() => warm_top_m_batch(
+                backend,
+                ds,
+                &proxies,
+                ctxs,
+                m,
+                &seed_rows,
+                warm.as_deref_mut(),
+            ),
+            _ => {
+                let queries: Vec<ProxyQuery> = proxies
+                    .iter()
+                    .zip(ctxs)
+                    .map(|(p, ctx)| ProxyQuery {
+                        proxy: p,
+                        class: ctx.class,
+                    })
+                    .collect();
+                backend.top_m_batch(ds, &queries, m)
+            }
+        };
         // the batched refine ladder: one scan of the group's candidate-pool
         // union per tick, each full-resolution row loaded once and scored
         // against every query whose pool holds it, one bounded heap per
@@ -125,7 +185,150 @@ pub fn blended_golden_rows_batch(
     for (rows, ctx) in per_query.iter_mut().zip(ctxs) {
         breadth_fill(ctx, rows, k, k_breadth);
     }
+    if let Some(w) = warm {
+        w.record(step, &per_query);
+    }
     per_query
+}
+
+/// Cross-timestep warm-start state: golden-subset unions keyed by sampling
+/// point, plus engagement telemetry. Owned by whoever drives a trajectory
+/// (`GoldDiff` on the CPU path, `XlaDenoiser` in the engine); sound to
+/// share across the sequences of a tick group since seeds never filter.
+#[derive(Debug, Default)]
+pub struct WarmStart {
+    /// step → sorted distinct union of that step's golden subsets (latest
+    /// tick group wins; continuous batching keeps one entry per live step)
+    prev: HashMap<usize, Vec<u32>>,
+    /// queries served by the seeded screen
+    pub hits: u64,
+    /// queries that fell back to the cold screen (insufficient seeds)
+    pub fallbacks: u64,
+}
+
+impl WarmStart {
+    pub fn new() -> WarmStart {
+        WarmStart::default()
+    }
+
+    /// Seed rows for a screen at `step` — the union recorded at `step − 1`.
+    pub fn seed_for(&self, step: usize) -> Option<&[u32]> {
+        step.checked_sub(1)
+            .and_then(|prev| self.prev.get(&prev))
+            .map(Vec::as_slice)
+    }
+
+    /// Record a tick group's golden subsets for the next sampling point.
+    pub fn record(&mut self, step: usize, subsets: &[Vec<u32>]) {
+        let mut union: Vec<u32> = subsets.iter().flatten().copied().collect();
+        union.sort_unstable();
+        union.dedup();
+        self.prev.insert(step, union);
+    }
+}
+
+/// The seeded exact screen: per query, fill the top-m heap from the seed
+/// rows, then sweep the proxy blocks nearest-centroid-first, skipping every
+/// block whose exact lower bound `(d(q, c_b) − r_b)²` already exceeds the
+/// heap's worst retained distance. Queries whose eligible seeds cannot fill
+/// the heap are batched through the backend's cold screen instead.
+fn warm_top_m_batch(
+    backend: &dyn RetrievalBackend,
+    ds: &Dataset,
+    proxies: &[Vec<f32>],
+    ctxs: &[&StepContext],
+    m: usize,
+    seeds: &[u32],
+    warm: Option<&mut WarmStart>,
+) -> Vec<Vec<u32>> {
+    let mut out: Vec<Option<Vec<u32>>> = proxies
+        .iter()
+        .zip(ctxs)
+        .map(|(qp, ctx)| warm_screen_query(ds, qp, ctx.class, m, seeds))
+        .collect();
+    let cold_idx: Vec<usize> = (0..out.len()).filter(|&i| out[i].is_none()).collect();
+    if !cold_idx.is_empty() {
+        let queries: Vec<ProxyQuery> = cold_idx
+            .iter()
+            .map(|&i| ProxyQuery {
+                proxy: &proxies[i],
+                class: ctxs[i].class,
+            })
+            .collect();
+        let cold = backend.top_m_batch(ds, &queries, m);
+        for (&i, rows) in cold_idx.iter().zip(cold) {
+            out[i] = Some(rows);
+        }
+    }
+    if let Some(w) = warm {
+        w.fallbacks += cold_idx.len() as u64;
+        w.hits += (out.len() - cold_idx.len()) as u64;
+    }
+    out.into_iter().map(|rows| rows.unwrap_or_default()).collect()
+}
+
+/// One seeded screen. Returns `None` when the class-eligible seeds cannot
+/// fill the heap (the sufficiency precondition for the bound to engage).
+fn warm_screen_query(
+    ds: &Dataset,
+    qp: &[f32],
+    class: Option<u32>,
+    m: usize,
+    seeds: &[u32],
+) -> Option<Vec<u32>> {
+    let cap = m.max(1).min(ds.n.max(1));
+    let mut heap = BoundedMaxHeap::new(cap);
+    let mut eligible = 0usize;
+    for &gid in seeds {
+        if let Some(y) = class {
+            if ds.labels[gid as usize] != y {
+                continue;
+            }
+        }
+        eligible += 1;
+        heap.push(sqdist_flat(qp, ds.proxy_row(gid as usize)), gid);
+    }
+    if eligible < cap {
+        return None;
+    }
+
+    // nearest-centroid-first sweep: the bound is checked against the
+    // heap's *current* worst, which only tightens as near blocks land
+    // (distances are computed once and reused for both the order and
+    // the bound; ties break by block id, like `kernel::block_order`)
+    let pb = &ds.proxy_blocks;
+    let mut order: Vec<(f32, u32)> = (0..pb.n_blocks())
+        .map(|b| {
+            let c = pb.centroid(b);
+            let d2: f32 = c.iter().zip(qp).map(|(a, b)| (a - b) * (a - b)).sum();
+            (d2, b as u32)
+        })
+        .collect();
+    order.sort_unstable_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+    for &(d2, b) in &order {
+        let b = b as usize;
+        let lb = (d2.sqrt() - pb.radius(b)).max(0.0);
+        if lb * lb >= heap.worst() {
+            // every member row is provably ≥ the worst retained distance
+            continue;
+        }
+        for lane in 0..pb.rows_in(b) {
+            let gid = pb.id(b, lane);
+            if seeds.binary_search(&gid).is_ok() {
+                continue; // already scored in the seed pass
+            }
+            if let Some(y) = class {
+                if ds.labels[gid as usize] != y {
+                    continue;
+                }
+            }
+            let d = sqdist_early_exit(qp, ds.proxy_row(gid as usize), heap.worst());
+            if d.is_finite() {
+                heap.push(d, gid);
+            }
+        }
+    }
+    Some(heap.into_sorted().into_iter().map(|(_, i)| i).collect())
 }
 
 /// Stratified breadth fill over the (class-restricted) support.
@@ -194,6 +397,11 @@ pub struct GoldDiff {
     pub budget: BudgetSchedule,
     /// pluggable coarse-retrieval backend (shared with the engine)
     pub backend: Arc<dyn RetrievalBackend>,
+    /// concentration-aware warm-starting of the coarse screen (exact; off
+    /// by default on the CPU path — single trajectories rarely carry
+    /// enough seed mass, the engine's tick groups are where it pays)
+    pub warm_start: bool,
+    warm: WarmStart,
     h: usize,
     w: usize,
     c: usize,
@@ -223,10 +431,21 @@ impl GoldDiff {
             BaseWeighting::Kamb => Some(KambDenoiser::new(ds)),
             _ => None,
         };
+        let threads = crate::util::threadpool::default_threads();
+        // the GOLDDIFF_KERNEL env leg (CI scalar matrix) flips the default
+        // backend to the row-major reference paths
+        let backend: Arc<dyn RetrievalBackend> =
+            if crate::config::env_flag("GOLDDIFF_KERNEL", true) {
+                Arc::new(FlatScan::new(threads))
+            } else {
+                Arc::new(FlatScan::scalar(threads))
+            };
         GoldDiff {
             base,
             budget,
-            backend: Arc::new(FlatScan::new(crate::util::threadpool::default_threads())),
+            backend,
+            warm_start: false,
+            warm: WarmStart::new(),
             h: ds.h,
             w: ds.w,
             c: ds.c,
@@ -241,6 +460,18 @@ impl GoldDiff {
     pub fn with_backend(mut self, backend: Arc<dyn RetrievalBackend>) -> Self {
         self.backend = backend;
         self
+    }
+
+    /// Toggle the concentration warm-start (exactness is preserved either
+    /// way — see [`blended_golden_rows_batch_warm`]).
+    pub fn with_warm_start(mut self, on: bool) -> Self {
+        self.warm_start = on;
+        self
+    }
+
+    /// Warm-start engagement telemetry: (seeded screens, cold fallbacks).
+    pub fn warm_counts(&self) -> (u64, u64) {
+        (self.warm.hits, self.warm.fallbacks)
     }
 
     /// The coarse→fine retrieval: returns the golden subset S_t (row ids,
@@ -259,7 +490,8 @@ impl GoldDiff {
         let b = self.budget.at(ctxs[0].sched, ctxs[0].step);
         self.last_m = b.m;
         self.last_k = b.k;
-        blended_golden_rows_batch(
+        let warm = self.warm_start.then_some(&mut self.warm);
+        blended_golden_rows_batch_warm(
             self.backend.as_ref(),
             ctxs,
             xs,
@@ -268,6 +500,7 @@ impl GoldDiff {
             self.h,
             self.w,
             self.c,
+            warm,
         )
     }
 }
@@ -555,6 +788,202 @@ mod tests {
                 assert_eq!(batch[i], solo, "step {step} seq {i}");
             }
         }
+    }
+
+    #[test]
+    fn warm_start_matches_cold_across_a_group_trajectory() {
+        // exactness: a tick group stepped 0..steps with warm-starting on
+        // must produce byte-identical golden subsets to the cold run, and
+        // the seeded screen must actually engage somewhere along the way
+        let (ds, sched) = setup();
+        let xs_data: Vec<Vec<f32>> = (0..8)
+            .map(|i| {
+                let mut rng = crate::util::rng::Pcg64::new(300 + i);
+                (0..ds.d).map(|_| rng.normal()).collect()
+            })
+            .collect();
+        let run = |warm_on: bool| -> (Vec<Vec<Vec<u32>>>, (u64, u64)) {
+            let mut gd = GoldDiff::paper_defaults(&ds, &sched, BaseWeighting::Golden)
+                .with_backend(Arc::new(BatchedScan::new(2)))
+                .with_warm_start(warm_on);
+            let mut all = Vec::new();
+            for step in 0..sched.steps {
+                let ctx = StepContext {
+                    ds: &ds,
+                    sched: &sched,
+                    step,
+                    class: None,
+                };
+                let xs: Vec<&[f32]> = xs_data.iter().map(|x| x.as_slice()).collect();
+                let ctxs: Vec<&StepContext> = xs.iter().map(|_| &ctx).collect();
+                all.push(gd.golden_subsets(&xs, &ctxs));
+            }
+            (all, gd.warm_counts())
+        };
+        let (cold, cold_counts) = run(false);
+        let (warm, warm_counts) = run(true);
+        assert_eq!(cold, warm, "warm-starting must never change the subsets");
+        assert_eq!(cold_counts, (0, 0), "cold run must never consult seeds");
+        assert!(
+            warm_counts.0 + warm_counts.1 > 0,
+            "warm run must at least attempt seeded screens"
+        );
+    }
+
+    #[test]
+    fn warm_screen_engages_when_group_seeds_cover_the_budget() {
+        // an explicit seed pool ≥ m: the seeded screen must serve the query
+        // without falling back AND return the exact cold top-m
+        let (ds, sched) = setup();
+        let backend = BatchedScan::new(1);
+        let mut warm = WarmStart::new();
+        let step = sched.steps - 1; // largest m of the trajectory
+        let b = crate::schedule::budget::BudgetSchedule::paper_defaults(
+            ds.n,
+            &[1usize << 17],
+        )
+        .at(&sched, step);
+        // seed with every row id — trivially sufficient and sound
+        warm.record(step - 1, &[(0..ds.n as u32).collect::<Vec<u32>>()]);
+        let mut rng = crate::util::rng::Pcg64::new(17);
+        let x: Vec<f32> = (0..ds.d).map(|_| rng.normal()).collect();
+        let ctx = StepContext {
+            ds: &ds,
+            sched: &sched,
+            step,
+            class: None,
+        };
+        let warm_rows = blended_golden_rows_batch_warm(
+            &backend,
+            &[&ctx],
+            &[x.as_slice()],
+            b.m,
+            b.k,
+            ds.h,
+            ds.w,
+            ds.c,
+            Some(&mut warm),
+        );
+        assert_eq!(warm.hits, 1, "full-corpus seeds must serve the screen");
+        assert_eq!(warm.fallbacks, 0);
+        let cold_rows = blended_golden_rows(&backend, &ctx, &x, b.m, b.k, ds.h, ds.w, ds.c);
+        assert_eq!(warm_rows[0], cold_rows);
+        // the recorder replaced this step's entry for the next tick
+        assert!(warm.seed_for(step + 1).is_some());
+    }
+
+    #[test]
+    fn warm_screen_falls_back_on_insufficient_or_missing_seeds() {
+        let (ds, sched) = setup();
+        let backend = BatchedScan::new(1);
+        let mut warm = WarmStart::new();
+        warm.record(4, &[vec![1, 2, 3]]); // far too few for m
+        let x = vec![0.1f32; ds.d];
+        let ctx = StepContext {
+            ds: &ds,
+            sched: &sched,
+            step: 5,
+            class: None,
+        };
+        let rows = blended_golden_rows_batch_warm(
+            &backend,
+            &[&ctx],
+            &[x.as_slice()],
+            ds.n / 4,
+            ds.n / 20,
+            ds.h,
+            ds.w,
+            ds.c,
+            Some(&mut warm),
+        );
+        assert_eq!(warm.fallbacks, 1, "3 seeds cannot fill an m = n/4 heap");
+        assert_eq!(
+            rows[0],
+            blended_golden_rows(&backend, &ctx, &x, ds.n / 4, ds.n / 20, ds.h, ds.w, ds.c)
+        );
+        // no entry for the requested step at all → cold path, no counters
+        let mut fresh = WarmStart::new();
+        let _ = blended_golden_rows_batch_warm(
+            &backend,
+            &[&ctx],
+            &[x.as_slice()],
+            8,
+            4,
+            ds.h,
+            ds.w,
+            ds.c,
+            Some(&mut fresh),
+        );
+        assert_eq!((fresh.hits, fresh.fallbacks), (0, 0));
+    }
+
+    #[test]
+    fn warm_screen_never_engages_over_an_approximate_backend() {
+        // cluster with nprobe > 0 is approximate: the exact seeded screen
+        // would CHANGE its results, so the warm path must stand down and
+        // the output must equal the backend's own (cold) screen
+        let (ds, sched) = setup();
+        let approx = crate::index::backend::ClusterPruned::build_with_threads(&ds, 12, 2, 3, 1);
+        assert!(!approx.is_exact());
+        let mut warm = WarmStart::new();
+        warm.record(8, &[(0..ds.n as u32).collect::<Vec<u32>>()]);
+        let x = vec![0.1f32; ds.d];
+        let ctx = StepContext {
+            ds: &ds,
+            sched: &sched,
+            step: 9,
+            class: None,
+        };
+        let rows = blended_golden_rows_batch_warm(
+            &approx,
+            &[&ctx],
+            &[x.as_slice()],
+            ds.n / 4,
+            ds.n / 20,
+            ds.h,
+            ds.w,
+            ds.c,
+            Some(&mut warm),
+        );
+        assert_eq!((warm.hits, warm.fallbacks), (0, 0), "warm must stand down");
+        let cold = blended_golden_rows(&approx, &ctx, &x, ds.n / 4, ds.n / 20, ds.h, ds.w, ds.c);
+        assert_eq!(rows[0], cold);
+        // exact backends still pass the gate
+        assert!(BatchedScan::new(1).is_exact());
+        assert!(crate::index::backend::ClusterPruned::build_with_threads(&ds, 12, 0, 3, 1)
+            .is_exact());
+    }
+
+    #[test]
+    fn warm_screen_respects_class_restrictions() {
+        let (ds, sched) = setup();
+        let class = (0..ds.classes)
+            .max_by_key(|&c| ds.class_rows[c].len())
+            .unwrap() as u32;
+        let support = ds.class_rows[class as usize].len();
+        let m = (support / 2).max(1);
+        let mut warm = WarmStart::new();
+        warm.record(8, &[(0..ds.n as u32).collect::<Vec<u32>>()]);
+        let backend = BatchedScan::new(1);
+        let x = vec![0.05f32; ds.d];
+        let ctx = StepContext {
+            ds: &ds,
+            sched: &sched,
+            step: 9,
+            class: Some(class),
+        };
+        let rows = blended_golden_rows_batch_warm(
+            &backend,
+            &[&ctx],
+            &[x.as_slice()],
+            m,
+            m.min(4).max(1),
+            ds.h,
+            ds.w,
+            ds.c,
+            Some(&mut warm),
+        );
+        assert!(rows[0].iter().all(|&r| ds.labels[r as usize] == class));
     }
 
     #[test]

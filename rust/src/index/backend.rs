@@ -28,19 +28,30 @@
 //!
 //! All backends share the exact full-resolution refine (Eq. 5). Groups go
 //! through [`RetrievalBackend::refine_top_k_batch`] — the batched refine
-//! ladder ([`batched_refine`]): the union of the group's candidate pools is
-//! scanned once, each full-resolution row is loaded once and scored against
-//! every query whose pool contains it, and one bounded heap per query
-//! collects the top-k. Backends expose atomic telemetry counters
-//! (`proxy_passes`, `rows_scanned`, `tiles_evaluated`, `clusters_pruned`,
-//! …) that the engine's stats and the perf benches scrape. See
-//! `index/README.md` for when each backend wins.
+//! ladder: the union of the group's candidate pools is scanned once, each
+//! full-resolution row is loaded once and scored against every query whose
+//! pool contains it, and one bounded heap per query collects the top-k. By
+//! default the ladder runs **pre-blocked** ([`batched_refine_kernel`]):
+//! candidate blocks of the dataset's resident `row_blocks` stream through
+//! the masked register-tile kernel (`kernel::refine_scan_masked`), with the
+//! row-major union scan ([`batched_refine`]) kept as the bit-stable
+//! reference behind `refine_kernel = false`. The batched and cluster scans
+//! also visit proxy blocks in **heap-aware order** (ascending block-centroid
+//! distance to the query group) so early-exit bounds tighten early; the
+//! `ordering` knob falls back to storage order. Backends expose atomic
+//! telemetry counters (`proxy_passes`, `rows_scanned`, `tiles_evaluated`,
+//! `clusters_pruned`, `blocks_reordered`, `exit_gain_rows`, …) that the
+//! engine's stats and the perf benches scrape. See `index/README.md` for
+//! when each backend wins.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
-use super::kernel::{self, KernelScan, KernelStats, ProxyBlocks};
+use super::kernel::{
+    self, block_order, build_refine_plan, refine_scan_masked, KernelScan, KernelStats,
+    ProxyBlocks,
+};
 use super::scan::ProxyIndex;
 use super::topk::BoundedMaxHeap;
 use crate::data::dataset::{Dataset, IvfPartition};
@@ -74,6 +85,11 @@ pub struct RetrievalStats {
     pub kernel_exits: u64,
     /// full-resolution rows visited by the batched refine ladder
     pub refine_rows: u64,
+    /// blocks visited out of storage order by heap-aware scan ordering
+    pub blocks_reordered: u64,
+    /// (query, row) distance evaluations the strip exits cut short — the
+    /// work the ordering exists to grow
+    pub exit_gain_rows: u64,
 }
 
 #[derive(Debug, Default)]
@@ -86,6 +102,8 @@ struct Counters {
     tiles_evaluated: AtomicU64,
     kernel_exits: AtomicU64,
     refine_rows: AtomicU64,
+    blocks_reordered: AtomicU64,
+    exit_gain_rows: AtomicU64,
 }
 
 impl Counters {
@@ -99,6 +117,8 @@ impl Counters {
             tiles_evaluated: self.tiles_evaluated.load(Ordering::Relaxed),
             kernel_exits: self.kernel_exits.load(Ordering::Relaxed),
             refine_rows: self.refine_rows.load(Ordering::Relaxed),
+            blocks_reordered: self.blocks_reordered.load(Ordering::Relaxed),
+            exit_gain_rows: self.exit_gain_rows.load(Ordering::Relaxed),
         }
     }
 
@@ -106,6 +126,26 @@ impl Counters {
         self.rows_scanned.fetch_add(st.rows, Ordering::Relaxed);
         self.tiles_evaluated.fetch_add(st.tiles, Ordering::Relaxed);
         self.kernel_exits.fetch_add(st.strip_exits, Ordering::Relaxed);
+        self.exit_gain_rows.fetch_add(st.exit_gain_rows, Ordering::Relaxed);
+    }
+
+    /// Record a kernel refine-ladder pass: `refine_rows` keeps its distinct
+    /// full-resolution row semantics; `rows_scanned` stays proxy-only.
+    fn record_refine(&self, rows: u64, st: &KernelStats) {
+        self.refine_rows.fetch_add(rows, Ordering::Relaxed);
+        self.tiles_evaluated.fetch_add(st.tiles, Ordering::Relaxed);
+        self.kernel_exits.fetch_add(st.strip_exits, Ordering::Relaxed);
+        self.exit_gain_rows.fetch_add(st.exit_gain_rows, Ordering::Relaxed);
+    }
+
+    /// Record a heap-aware visit order: blocks whose visit position moved.
+    fn record_order(&self, order: &[u32]) {
+        let moved = order
+            .iter()
+            .enumerate()
+            .filter(|&(i, &b)| i as u32 != b)
+            .count() as u64;
+        self.blocks_reordered.fetch_add(moved, Ordering::Relaxed);
     }
 
     fn reset(&self) {
@@ -117,6 +157,8 @@ impl Counters {
         self.tiles_evaluated.store(0, Ordering::Relaxed);
         self.kernel_exits.store(0, Ordering::Relaxed);
         self.refine_rows.store(0, Ordering::Relaxed);
+        self.blocks_reordered.store(0, Ordering::Relaxed);
+        self.exit_gain_rows.store(0, Ordering::Relaxed);
     }
 }
 
@@ -143,8 +185,23 @@ pub trait RetrievalBackend: Send + Sync {
             .collect()
     }
 
+    /// Does this backend's coarse screen return the *exact* top-m (every
+    /// default does)? `ClusterPruned` with `nprobe > 0` is the approximate
+    /// exception. Exactness-preserving shortcuts elsewhere (the warm-start
+    /// screen) must not engage over an approximate backend — an exact
+    /// result would *differ* from the backend's own.
+    fn is_exact(&self) -> bool {
+        true
+    }
+
     /// Exact full-resolution top-k inside a candidate pool (Eq. 5). Shared
     /// CPU reference used by every backend.
+    ///
+    /// Candidate pools are expected to hold distinct row ids (coarse
+    /// `top_m` output always does). On duplicate ids the paths differ by
+    /// construction: the row-major reference scores each occurrence, while
+    /// the ladder/kernel paths collapse duplicates via their membership
+    /// masks.
     fn refine_top_k(&self, ds: &Dataset, q: &[f32], cands: &[u32], k: usize) -> Vec<u32> {
         exact_refine(ds, q, cands, k, crate::util::threadpool::default_threads())
     }
@@ -174,10 +231,28 @@ pub trait RetrievalBackend: Send + Sync {
     fn reset_stats(&self);
 }
 
-/// Exact top-k of ||q − x_i||² over `cands`, sorted ascending — the shared
-/// refine every backend uses (same algorithm as `ProxyIndex::refine_top_k`).
+/// Exact top-k of ||q − x_i||² over `cands`, sorted ascending — the
+/// row-major reference refine (same algorithm as `ProxyIndex::refine_top_k`;
+/// the `refine_kernel = false` knob and the parity property tests pin the
+/// backends to this path).
 pub fn exact_refine(ds: &Dataset, q: &[f32], cands: &[u32], k: usize, threads: usize) -> Vec<u32> {
     ProxyIndex { threads }.refine_top_k(ds, q, cands, k)
+}
+
+/// [`exact_refine`] through the pre-blocked kernel: a one-query masked tile
+/// scan of `Dataset::row_blocks`. Duplicate candidate ids collapse via the
+/// membership mask (exactly like the refine ladders); `exact_refine` scores
+/// a duplicate once per occurrence instead, so hand it distinct pools when
+/// comparing the two — coarse `top_m` output always is.
+pub fn exact_refine_kernel(
+    ds: &Dataset,
+    q: &[f32],
+    cands: &[u32],
+    k: usize,
+    threads: usize,
+) -> Vec<u32> {
+    let (mut out, _, _) = batched_refine_kernel(ds, &[q], &[cands], k, threads);
+    out.pop().unwrap_or_default()
 }
 
 // ---------------------------------------------------------------------------
@@ -212,6 +287,21 @@ pub fn batched_refine(
     (out, rows_visited)
 }
 
+/// Elementwise mean of a query group — the anchor heap-aware ordering
+/// ranks blocks against (tick-group queries share a sampling point, so
+/// their mean tracks the shared neighbourhood).
+fn group_mean(qs: &[&[f32]], dim: usize) -> Vec<f32> {
+    let mut mean = vec![0.0f32; dim];
+    for q in qs {
+        for (m, &v) in mean.iter_mut().zip(*q) {
+            *m += v;
+        }
+    }
+    let n = qs.len().max(1) as f32;
+    mean.iter_mut().for_each(|m| *m /= n);
+    mean
+}
+
 fn batched_refine_group(
     ds: &Dataset,
     qs: &[&[f32]],
@@ -231,12 +321,8 @@ fn batched_refine_group(
     union.sort_unstable_by_key(|e| e.0);
 
     // per-query caps mirror the per-query refine's clamp exactly
-    let caps: Vec<usize> = pools.iter().map(|p| k.max(1).min(p.len().max(1))).collect();
-    let threads = if union.len() * ds.d < 2_000_000 {
-        1
-    } else {
-        threads.max(1)
-    };
+    let caps = refine_caps(pools, k);
+    let threads = refine_threads(union.len(), ds.d, threads);
     let shards = parallel_chunks(union.len(), threads, |_, s, e| {
         let mut heaps: Vec<BoundedMaxHeap> =
             caps.iter().map(|&c| BoundedMaxHeap::new(c)).collect();
@@ -270,6 +356,115 @@ fn batched_refine_group(
     )
 }
 
+/// Per-query heap caps for a refine group — the per-query refine's clamp.
+fn refine_caps(pools: &[&[u32]], k: usize) -> Vec<usize> {
+    pools.iter().map(|p| k.max(1).min(p.len().max(1))).collect()
+}
+
+/// Same spawn-overhead threshold as the row-major ladder.
+fn refine_threads(union_rows: usize, d: usize, threads: usize) -> usize {
+    if union_rows * d < 2_000_000 {
+        1
+    } else {
+        threads.max(1)
+    }
+}
+
+/// The refine ladder through the pre-blocked kernel: the same union scan as
+/// [`batched_refine`], but each visited block of the full-resolution
+/// [`kernel::RowBlocks`] streams through [`refine_scan_masked`] — dim-major
+/// column loads shared by a register tile of up to [`kernel::TILE_Q`]
+/// queries, candidate membership applied at harvest, and the strip
+/// early-exit retiring (query, block) tiles whose member lanes are already
+/// past the heap bound.
+///
+/// Per-query results equal [`batched_refine`]'s (and therefore the
+/// per-query [`exact_refine`]'s) row sets; the kernel accumulates each
+/// distance in dimension order while the row-major path sums 8-lane
+/// chunks, so rows whose distances collide within final-ulp rounding are
+/// the only divergence surface — same contract as the coarse kernel
+/// (`index/README.md`). Returns (per-query top-k, distinct rows visited,
+/// merged kernel counters).
+pub fn batched_refine_kernel(
+    ds: &Dataset,
+    qs: &[&[f32]],
+    pools: &[&[u32]],
+    k: usize,
+    threads: usize,
+) -> (Vec<Vec<u32>>, u64, KernelStats) {
+    assert_eq!(qs.len(), pools.len());
+    let mut out = Vec::with_capacity(qs.len());
+    let mut rows_visited = 0u64;
+    let mut stats = KernelStats::default();
+    // ≤64-wide membership masks, exactly like the row-major ladder; each
+    // 64-query group then splits into TILE_Q-wide register tiles
+    for (qc, pc) in qs.chunks(64).zip(pools.chunks(64)) {
+        let (res, rows, st) = batched_refine_kernel_group(ds, qc, pc, k, threads);
+        out.extend(res);
+        rows_visited += rows;
+        stats.add(&st);
+    }
+    (out, rows_visited, stats)
+}
+
+fn batched_refine_kernel_group(
+    ds: &Dataset,
+    qs: &[&[f32]],
+    pools: &[&[u32]],
+    k: usize,
+    threads: usize,
+) -> (Vec<Vec<u32>>, u64, KernelStats) {
+    // union of the pools with per-row membership bits, ascending row id —
+    // duplicate ids inside a pool collapse onto one bit, like batched_refine
+    let mut mask: HashMap<u32, u64> = HashMap::new();
+    for (j, pool) in pools.iter().enumerate() {
+        for &gid in *pool {
+            *mask.entry(gid).or_insert(0) |= 1u64 << j;
+        }
+    }
+    let mut union: Vec<(u32, u64)> = mask.into_iter().collect();
+    union.sort_unstable_by_key(|e| e.0);
+
+    let caps = refine_caps(pools, k);
+    let threads = refine_threads(union.len(), ds.d, threads);
+    // force the lazy blocked corpus once, outside the sharded region
+    let row_blocks = ds.row_blocks();
+    let mut out: Vec<Vec<u32>> = Vec::with_capacity(qs.len());
+    let mut stats = KernelStats::default();
+    for (tile, (qt, ct)) in qs.chunks(kernel::TILE_Q).zip(caps.chunks(kernel::TILE_Q)).enumerate() {
+        // this tile's slice of the 64-wide masks, as 8-bit lane masks
+        let rows: Vec<(u32, u8)> = union
+            .iter()
+            .filter_map(|&(gid, bits)| {
+                let byte = ((bits >> (tile * kernel::TILE_Q)) & 0xff) as u8;
+                (byte != 0).then_some((gid, byte))
+            })
+            .collect();
+        let plan = build_refine_plan(&rows);
+        let shards = parallel_chunks(plan.len(), threads, |_, s, e| {
+            let mut heaps: Vec<BoundedMaxHeap> =
+                ct.iter().map(|&c| BoundedMaxHeap::new(c)).collect();
+            let mut st = KernelStats::default();
+            refine_scan_masked(row_blocks, qt, &plan[s..e], &mut heaps, &mut st);
+            (heaps, st)
+        });
+        let mut merged: Vec<BoundedMaxHeap> =
+            ct.iter().map(|&c| BoundedMaxHeap::new(c)).collect();
+        for (heaps, st) in shards {
+            stats.add(&st);
+            for (m, h) in merged.iter_mut().zip(heaps) {
+                m.merge(h);
+            }
+        }
+        out.extend(
+            merged
+                .into_iter()
+                .map(|h| h.into_sorted().into_iter().map(|(_, i)| i).collect::<Vec<u32>>()),
+        );
+    }
+    (out, union.len() as u64, stats)
+}
+
 // ---------------------------------------------------------------------------
 // FlatScan
 // ---------------------------------------------------------------------------
@@ -283,6 +478,7 @@ fn batched_refine_group(
 pub struct FlatScan {
     inner: ProxyIndex,
     use_kernel: bool,
+    refine_kernel: bool,
     counters: Counters,
 }
 
@@ -292,17 +488,27 @@ impl FlatScan {
         FlatScan {
             inner: ProxyIndex { threads },
             use_kernel: true,
+            refine_kernel: true,
             counters: Counters::default(),
         }
     }
 
     /// The seed-semantics scalar scan (reference for parity tests and the
-    /// `kernel = false` engine knob).
+    /// `kernel = false` engine knob): row-major coarse scan AND row-major
+    /// refine.
     pub fn scalar(threads: usize) -> FlatScan {
         FlatScan {
             use_kernel: false,
+            refine_kernel: false,
             ..FlatScan::new(threads)
         }
+    }
+
+    /// Route the exact refine through the pre-blocked kernel (default on
+    /// the kernel path) or the row-major reference.
+    pub fn with_refine_kernel(mut self, on: bool) -> Self {
+        self.refine_kernel = on;
+        self
     }
 
     fn effective_threads(&self, work: usize) -> usize {
@@ -358,7 +564,31 @@ impl RetrievalBackend for FlatScan {
     }
 
     fn refine_top_k(&self, ds: &Dataset, q: &[f32], cands: &[u32], k: usize) -> Vec<u32> {
+        if self.refine_kernel {
+            let (out, rows, st) =
+                batched_refine_kernel(ds, &[q], &[cands], k, self.inner.threads);
+            self.counters.record_refine(rows, &st);
+            return out.into_iter().next().unwrap_or_default();
+        }
         self.inner.refine_top_k(ds, q, cands, k)
+    }
+
+    fn refine_top_k_batch(
+        &self,
+        ds: &Dataset,
+        qs: &[&[f32]],
+        pools: &[&[u32]],
+        k: usize,
+    ) -> Vec<Vec<u32>> {
+        if self.refine_kernel {
+            let (out, rows, st) = batched_refine_kernel(ds, qs, pools, k, self.inner.threads);
+            self.counters.record_refine(rows, &st);
+            return out;
+        }
+        qs.iter()
+            .zip(pools)
+            .map(|(q, pool)| self.inner.refine_top_k(ds, q, pool, k))
+            .collect()
     }
 
     fn stats(&self) -> RetrievalStats {
@@ -384,6 +614,10 @@ impl RetrievalBackend for FlatScan {
 pub struct BatchedScan {
     pub threads: usize,
     use_kernel: bool,
+    refine_kernel: bool,
+    /// heap-aware block ordering: visit proxy blocks in ascending centroid
+    /// distance to the query-group mean (default on; kernel path only)
+    ordered: bool,
     tile_q: usize,
     counters: Counters,
 }
@@ -399,6 +633,8 @@ impl BatchedScan {
         BatchedScan {
             threads,
             use_kernel: true,
+            refine_kernel: true,
+            ordered: true,
             tile_q: kernel::TILE_Q,
             counters: Counters::default(),
         }
@@ -408,6 +644,8 @@ impl BatchedScan {
     pub fn scalar(threads: usize) -> BatchedScan {
         BatchedScan {
             use_kernel: false,
+            refine_kernel: false,
+            ordered: false,
             ..BatchedScan::new(threads)
         }
     }
@@ -415,6 +653,19 @@ impl BatchedScan {
     /// Override the queries-per-tile width (clamped to 1..=[`kernel::TILE_Q`]).
     pub fn with_tile(mut self, tile_q: usize) -> Self {
         self.tile_q = tile_q.clamp(1, kernel::TILE_Q);
+        self
+    }
+
+    /// Toggle heap-aware block ordering (order-invariance reference runs).
+    pub fn with_ordering(mut self, on: bool) -> Self {
+        self.ordered = on;
+        self
+    }
+
+    /// Route the exact refine through the pre-blocked kernel (default on
+    /// the kernel path) or the row-major reference ladder.
+    pub fn with_refine_kernel(mut self, on: bool) -> Self {
+        self.refine_kernel = on;
         self
     }
 
@@ -429,7 +680,12 @@ impl BatchedScan {
     }
 
     /// The tiled pass: queries are split into `tile_q`-wide register
-    /// groups; each group shares every block-column load.
+    /// groups; each group shares every block-column load. With ordering on
+    /// (default), each group's blocks are visited in ascending centroid
+    /// distance to the group-mean proxy, so the per-query heap bounds
+    /// tighten while most of the pass is still ahead — the strip early-exit
+    /// then retires far tiles after one strip instead of never engaging
+    /// until the storage-order scan stumbles onto the neighbourhood.
     fn kernel_top_m_batch(&self, ds: &Dataset, queries: &[ProxyQuery], m: usize) -> Vec<Vec<u32>> {
         let cap = m.max(1).min(ds.n.max(1));
         let threads = self.effective_threads(ds.n * ds.proxy_d);
@@ -443,7 +699,14 @@ impl BatchedScan {
                 classes: &classes,
                 labels: Some(&ds.labels),
             };
-            let (res, st) = scan.top_m(cap, threads);
+            let (res, st) = if self.ordered && ds.proxy_blocks.n_blocks() > 1 {
+                let mean = group_mean(&qs, ds.proxy_d);
+                let order = block_order(&ds.proxy_blocks, &mean);
+                self.counters.record_order(&order);
+                scan.top_m_ordered(cap, threads, &order)
+            } else {
+                scan.top_m(cap, threads)
+            };
             self.counters.record_kernel(&st);
             out.extend(res);
         }
@@ -529,6 +792,11 @@ impl RetrievalBackend for BatchedScan {
     }
 
     fn refine_top_k(&self, ds: &Dataset, q: &[f32], cands: &[u32], k: usize) -> Vec<u32> {
+        if self.refine_kernel {
+            let (out, rows, st) = batched_refine_kernel(ds, &[q], &[cands], k, self.threads);
+            self.counters.record_refine(rows, &st);
+            return out.into_iter().next().unwrap_or_default();
+        }
         exact_refine(ds, q, cands, k, self.threads)
     }
 
@@ -539,6 +807,11 @@ impl RetrievalBackend for BatchedScan {
         pools: &[&[u32]],
         k: usize,
     ) -> Vec<Vec<u32>> {
+        if self.refine_kernel {
+            let (out, rows, st) = batched_refine_kernel(ds, qs, pools, k, self.threads);
+            self.counters.record_refine(rows, &st);
+            return out;
+        }
         let (out, rows) = batched_refine(ds, qs, pools, k, self.threads);
         self.counters.refine_rows.fetch_add(rows, Ordering::Relaxed);
         out
@@ -599,6 +872,9 @@ pub struct ClusterPruned {
     blocks: Vec<ProxyBlocks>,
     class_blocks: Vec<Vec<ProxyBlocks>>,
     use_kernel: bool,
+    refine_kernel: bool,
+    /// heap-aware ordering of each scanned list's blocks (kernel path)
+    ordered: bool,
     counters: Counters,
 }
 
@@ -713,6 +989,8 @@ impl ClusterPruned {
             blocks,
             class_blocks,
             use_kernel,
+            refine_kernel: use_kernel,
+            ordered: use_kernel,
             counters: Counters::default(),
         }
     }
@@ -725,7 +1003,22 @@ impl ClusterPruned {
         if !self.use_kernel {
             self.blocks = Vec::new();
             self.class_blocks = Vec::new();
+            self.refine_kernel = false;
+            self.ordered = false;
         }
+        self
+    }
+
+    /// Toggle heap-aware ordering of each scanned list's blocks.
+    pub fn with_ordering(mut self, on: bool) -> Self {
+        self.ordered = on && self.use_kernel;
+        self
+    }
+
+    /// Route the exact refine through the pre-blocked kernel or the
+    /// row-major reference ladder.
+    pub fn with_refine_kernel(mut self, on: bool) -> Self {
+        self.refine_kernel = on;
         self
     }
 
@@ -737,6 +1030,12 @@ impl ClusterPruned {
 impl RetrievalBackend for ClusterPruned {
     fn name(&self) -> &'static str {
         "cluster"
+    }
+
+    fn is_exact(&self) -> bool {
+        // nprobe > 0 caps the scanned lists past what the centroid bound
+        // justifies — the approximate knob
+        self.nprobe == 0
     }
 
     fn top_m(&self, ds: &Dataset, query_proxy: &[f32], m: usize, class: Option<u32>) -> Vec<u32> {
@@ -800,12 +1099,21 @@ impl RetrievalBackend for ClusterPruned {
                     classes: &[None],
                     labels: None,
                 };
-                scan.scan_into(
-                    0,
-                    blocks.n_blocks(),
-                    std::slice::from_mut(&mut heap),
-                    &mut kstats,
-                );
+                if self.ordered && blocks.n_blocks() > 1 {
+                    // lists are already visited nearest-first; ordering the
+                    // blocks *inside* each list lets the strip bound retire
+                    // the list's far tail too
+                    let order = block_order(blocks, query_proxy);
+                    self.counters.record_order(&order);
+                    scan.scan_list_into(&order, std::slice::from_mut(&mut heap), &mut kstats);
+                } else {
+                    scan.scan_into(
+                        0,
+                        blocks.n_blocks(),
+                        std::slice::from_mut(&mut heap),
+                        &mut kstats,
+                    );
+                }
             } else {
                 let rows = match class {
                     Some(y) if !self.class_members.is_empty() => &self.class_members[cl][y as usize],
@@ -838,6 +1146,11 @@ impl RetrievalBackend for ClusterPruned {
     }
 
     fn refine_top_k(&self, ds: &Dataset, q: &[f32], cands: &[u32], k: usize) -> Vec<u32> {
+        if self.refine_kernel {
+            let (out, rows, st) = batched_refine_kernel(ds, &[q], &[cands], k, self.threads);
+            self.counters.record_refine(rows, &st);
+            return out.into_iter().next().unwrap_or_default();
+        }
         exact_refine(ds, q, cands, k, self.threads)
     }
 
@@ -848,6 +1161,11 @@ impl RetrievalBackend for ClusterPruned {
         pools: &[&[u32]],
         k: usize,
     ) -> Vec<Vec<u32>> {
+        if self.refine_kernel {
+            let (out, rows, st) = batched_refine_kernel(ds, qs, pools, k, self.threads);
+            self.counters.record_refine(rows, &st);
+            return out;
+        }
         let (out, rows) = batched_refine(ds, qs, pools, k, self.threads);
         self.counters.refine_rows.fetch_add(rows, Ordering::Relaxed);
         out
@@ -877,6 +1195,12 @@ pub struct BackendOpts {
     pub seed: u64,
     /// route scans through the tiled kernel (default) or the scalar paths
     pub kernel: bool,
+    /// route the exact refine through the pre-blocked kernel (default);
+    /// only effective when `kernel` is on — `false` pins the refine to the
+    /// row-major reference ladder
+    pub refine_kernel: bool,
+    /// heap-aware block ordering for the batched / cluster scans (default)
+    pub ordering: bool,
     /// queries per register tile, clamped to 1..=[`kernel::TILE_Q`]
     pub tile_q: usize,
 }
@@ -889,6 +1213,8 @@ impl Default for BackendOpts {
             nprobe: 0,
             seed: 0,
             kernel: true,
+            refine_kernel: true,
+            ordering: true,
             tile_q: kernel::TILE_Q,
         }
     }
@@ -931,25 +1257,34 @@ impl RetrievalBackendKind {
     /// Build a shareable backend for a dataset. `opts.clusters`/`opts.nprobe`
     /// only apply to the cluster-pruned backend.
     pub fn build(&self, ds: &Dataset, opts: BackendOpts) -> Arc<dyn RetrievalBackend> {
+        // the scalar reference disables every kernel-path refinement
+        let refine = opts.kernel && opts.refine_kernel;
         match self {
             RetrievalBackendKind::Flat => Arc::new(if opts.kernel {
-                FlatScan::new(opts.threads)
+                FlatScan::new(opts.threads).with_refine_kernel(refine)
             } else {
                 FlatScan::scalar(opts.threads)
             }),
             RetrievalBackendKind::Batched => Arc::new(if opts.kernel {
-                BatchedScan::new(opts.threads).with_tile(opts.tile_q)
+                BatchedScan::new(opts.threads)
+                    .with_tile(opts.tile_q)
+                    .with_ordering(opts.ordering)
+                    .with_refine_kernel(refine)
             } else {
                 BatchedScan::scalar(opts.threads)
             }),
-            RetrievalBackendKind::ClusterPruned => Arc::new(ClusterPruned::build_inner(
-                ds,
-                opts.clusters.max(1),
-                opts.nprobe,
-                opts.seed,
-                opts.threads,
-                opts.kernel,
-            )),
+            RetrievalBackendKind::ClusterPruned => Arc::new(
+                ClusterPruned::build_inner(
+                    ds,
+                    opts.clusters.max(1),
+                    opts.nprobe,
+                    opts.seed,
+                    opts.threads,
+                    opts.kernel,
+                )
+                .with_ordering(opts.kernel && opts.ordering)
+                .with_refine_kernel(refine),
+            ),
         }
     }
 }
@@ -974,7 +1309,9 @@ mod tests {
             Box::new(FlatScan::new(2)),
             Box::new(BatchedScan::scalar(2)),
             Box::new(BatchedScan::new(2)),
+            Box::new(BatchedScan::new(2).with_ordering(false)),
             Box::new(ClusterPruned::build_with_threads(ds, 12, 0, 7, 2)),
+            Box::new(ClusterPruned::build_with_threads(ds, 12, 0, 7, 2).with_ordering(false)),
             Box::new(ClusterPruned::build_with_threads(ds, 12, 0, 7, 2).with_kernel(false)),
             // pruning disabled: every list within nprobe and bounds can
             // never exclude (radius covers all members, nprobe = lists)
@@ -1134,6 +1471,96 @@ mod tests {
             Ok(())
         });
         assert!(batched.stats().refine_rows > 0, "refine telemetry counts");
+    }
+
+    #[test]
+    fn ordered_batched_scan_matches_unordered_and_counts_reorders() {
+        let ds = tiny(500, 27);
+        let ordered = BatchedScan::new(1);
+        let unordered = BatchedScan::new(1).with_ordering(false);
+        let mut rng = Pcg64::new(3);
+        let qs: Vec<Vec<f32>> = (0..8)
+            .map(|i| {
+                // near-corpus queries so the heap bound actually bites
+                let base = ds.proxy_row(rng.below(ds.n)).to_vec();
+                base.iter().map(|&v| v + rng.normal() * 0.1 * i as f32).collect()
+            })
+            .collect();
+        let queries: Vec<ProxyQuery> = qs
+            .iter()
+            .map(|q| ProxyQuery {
+                proxy: q,
+                class: None,
+            })
+            .collect();
+        let a = ordered.top_m_batch(&ds, &queries, 20);
+        let b = unordered.top_m_batch(&ds, &queries, 20);
+        assert_eq!(a, b, "ordering must never change results");
+        let so = ordered.stats();
+        assert!(so.blocks_reordered > 0, "a 500-row corpus must reorder blocks");
+        assert_eq!(unordered.stats().blocks_reordered, 0);
+    }
+
+    #[test]
+    fn refine_kernel_matches_rowmajor_ladder_and_per_query() {
+        // pre-blocked refine (default) vs the row-major reference ladder vs
+        // the scalar per-query refine — identical id lists on random pools
+        let ds = tiny(450, 33);
+        let blocked = BatchedScan::new(2);
+        let rowmajor = BatchedScan::new(2).with_refine_kernel(false);
+        let flat = FlatScan::scalar(2);
+        forall(91, 15, |rng| {
+            let nq = gen::usize_in(rng, 1, 10);
+            let k = gen::usize_in(rng, 1, 20);
+            let qs_data: Vec<Vec<f32>> =
+                (0..nq).map(|_| gen::vec_normal(rng, ds.d, 1.0)).collect();
+            let pools_data: Vec<Vec<u32>> = (0..nq)
+                .map(|i| match i % 4 {
+                    0 => Vec::new(),
+                    1 => vec![rng.below(ds.n) as u32],
+                    _ => rng
+                        .choose_k(ds.n, gen::usize_in(rng, 1, 70).min(ds.n))
+                        .into_iter()
+                        .map(|i| i as u32)
+                        .collect(),
+                })
+                .collect();
+            let qs: Vec<&[f32]> = qs_data.iter().map(|q| q.as_slice()).collect();
+            let pools: Vec<&[u32]> = pools_data.iter().map(|p| p.as_slice()).collect();
+            let got = blocked.refine_top_k_batch(&ds, &qs, &pools, k);
+            let row = rowmajor.refine_top_k_batch(&ds, &qs, &pools, k);
+            for i in 0..nq {
+                crate::prop_assert!(
+                    got[i] == row[i],
+                    "preblocked != rowmajor ladder (query {i}, k={k})"
+                );
+                let per = flat.refine_top_k(&ds, qs[i], pools[i], k);
+                crate::prop_assert!(got[i] == per, "preblocked != per-query (query {i})");
+                // the free-fn single-query entry shares the masked path
+                let free = exact_refine_kernel(&ds, qs[i], pools[i], k, 2);
+                crate::prop_assert!(got[i] == free, "free-fn refine diverged (query {i})");
+            }
+            Ok(())
+        });
+        let s = blocked.stats();
+        assert!(s.refine_rows > 0 && s.tiles_evaluated > 0, "refine telemetry");
+    }
+
+    #[test]
+    fn refine_kernel_dedups_duplicate_candidates_like_the_ladder() {
+        let ds = tiny(300, 35);
+        let blocked = BatchedScan::new(1);
+        let rowmajor = BatchedScan::new(1).with_refine_kernel(false);
+        let q: Vec<f32> = ds.row(7).to_vec();
+        let pool: Vec<u32> = vec![7, 7, 12, 12, 12, 99, 7];
+        let qs = [q.as_slice()];
+        let pools = [pool.as_slice()];
+        let a = blocked.refine_top_k_batch(&ds, &qs, &pools, 5);
+        let b = rowmajor.refine_top_k_batch(&ds, &qs, &pools, 5);
+        assert_eq!(a, b);
+        assert_eq!(a[0][0], 7, "self row first");
+        let distinct: std::collections::HashSet<u32> = a[0].iter().copied().collect();
+        assert_eq!(distinct.len(), a[0].len(), "duplicates must collapse");
     }
 
     #[test]

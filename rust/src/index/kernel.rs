@@ -31,8 +31,26 @@
 //! `index/README.md`).
 //!
 //! The kernel is layout-generic: the whole proxy table (`Dataset`'s
-//! resident [`ProxyBlocks`]), an IVF list, or a class-filtered member list
+//! resident [`ProxyBlocks`]), an IVF list, a class-filtered member list, or
+//! the full-resolution corpus ([`RowBlocks`], the refine ladder's table)
 //! all scan through the same code path via the optional row-id map.
+//!
+//! Two extensions ride on the same layout:
+//!
+//! * **Heap-aware block ordering** — each block carries its centroid and
+//!   covering radius (computed once at build). A scan may visit blocks in
+//!   ascending centroid distance to the query group ([`block_order`],
+//!   [`KernelScan::top_m_ordered`]): near blocks fill the heaps first, so
+//!   the strip early-exit bound is tight for the bulk of the pass instead
+//!   of only its tail. Ordering never changes *which* distances are
+//!   computed or their values — only the visit order — so results are
+//!   identical to the unordered scan (exact f32 ties are the only
+//!   divergence surface, as everywhere in `index`).
+//! * **Masked refine tiles** ([`refine_scan_masked`]) — the exact refine
+//!   stage scans only the blocks that hold candidate rows, with a
+//!   per-(row, query) membership bitmask applied at harvest, so the
+//!   full-resolution pass reuses the same dim-major column loads and strip
+//!   early-exit as the coarse kernel.
 
 use super::topk::BoundedMaxHeap;
 use crate::util::threadpool::parallel_chunks;
@@ -54,6 +72,11 @@ const STRIP_DIMS: usize = 16;
 /// of rows `b*BLOCK_ROWS + lane`. The final block is zero-padded; padded
 /// lanes are never harvested. `ids` optionally maps block lanes back to
 /// global row ids (IVF lists); `None` means the identity (the whole table).
+///
+/// Each block also carries its centroid (mean of the valid lanes) and the
+/// covering radius (max member→centroid Euclidean distance): the substrate
+/// for heap-aware block ordering and for exact per-block lower bounds
+/// (`(d(q, c) − r)² ≤ d(q, x)²` for every member x).
 #[derive(Debug, Clone, Default)]
 pub struct ProxyBlocks {
     /// valid rows (excluding padding)
@@ -62,7 +85,15 @@ pub struct ProxyBlocks {
     pub dim: usize,
     ids: Option<Vec<u32>>,
     data: Vec<f32>,
+    /// per-block centroids [n_blocks × dim]
+    centroids: Vec<f32>,
+    /// per-block covering radii [n_blocks]
+    radii: Vec<f32>,
 }
+
+/// The full-resolution corpus in the same dim-major block layout — what the
+/// pre-blocked refine ladder scans (`Dataset::row_blocks`).
+pub type RowBlocks = ProxyBlocks;
 
 impl ProxyBlocks {
     /// Block the whole `rows × dim` table with identity row ids.
@@ -91,12 +122,35 @@ impl ProxyBlocks {
                 data[base + j * BLOCK_ROWS] = v;
             }
         }
-        ProxyBlocks {
+        let mut out = ProxyBlocks {
             rows,
             dim,
             ids,
             data,
+            centroids: vec![0.0f32; nb * dim],
+            radii: vec![0.0f32; nb],
+        };
+        for b in 0..nb {
+            let n_valid = out.rows_in(b);
+            let block = &out.data[b * dim * BLOCK_ROWS..(b + 1) * dim * BLOCK_ROWS];
+            for j in 0..dim {
+                let col = &block[j * BLOCK_ROWS..j * BLOCK_ROWS + n_valid];
+                out.centroids[b * dim + j] = col.iter().sum::<f32>() / n_valid.max(1) as f32;
+            }
+            let c = &out.centroids[b * dim..(b + 1) * dim];
+            let mut worst = 0.0f32;
+            for lane in 0..n_valid {
+                let d2: f32 = (0..dim)
+                    .map(|j| {
+                        let d = block[j * BLOCK_ROWS + lane] - c[j];
+                        d * d
+                    })
+                    .sum();
+                worst = worst.max(d2);
+            }
+            out.radii[b] = worst.sqrt();
         }
+        out
     }
 
     #[inline]
@@ -127,10 +181,38 @@ impl ProxyBlocks {
         }
     }
 
+    /// Centroid of block `b` (mean of its valid lanes).
+    #[inline]
+    pub fn centroid(&self, b: usize) -> &[f32] {
+        &self.centroids[b * self.dim..(b + 1) * self.dim]
+    }
+
+    /// Covering radius of block `b`: max member→centroid Euclidean distance.
+    #[inline]
+    pub fn radius(&self, b: usize) -> f32 {
+        self.radii[b]
+    }
+
     /// Resident bytes of the blocked copy (telemetry / working-set math).
     pub fn bytes(&self) -> u64 {
-        self.data.len() as u64 * 4
+        (self.data.len() + self.centroids.len() + self.radii.len()) as u64 * 4
     }
+}
+
+/// Heap-aware visit order: block ids sorted ascending by squared centroid
+/// distance to `q` (ties broken by block id so the order is deterministic).
+/// Scanning near blocks first fills the per-query heaps with small
+/// distances early, so the strip early-exit retires far tiles sooner.
+pub fn block_order(blocks: &ProxyBlocks, q: &[f32]) -> Vec<u32> {
+    let mut order: Vec<(f32, u32)> = (0..blocks.n_blocks())
+        .map(|b| {
+            let c = blocks.centroid(b);
+            let d: f32 = c.iter().zip(q).map(|(a, b)| (a - b) * (a - b)).sum();
+            (d, b as u32)
+        })
+        .collect();
+    order.sort_unstable_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+    order.into_iter().map(|(_, b)| b).collect()
 }
 
 /// Cumulative kernel counters for one scan (merged across shards).
@@ -142,6 +224,10 @@ pub struct KernelStats {
     pub rows: u64,
     /// (query, block) pairs retired by the strip early-exit bound
     pub strip_exits: u64,
+    /// (query, row) distance evaluations cut short by those retirements —
+    /// the work the early exit actually saved (heap-aware ordering exists
+    /// to push this number up)
+    pub exit_gain_rows: u64,
 }
 
 impl KernelStats {
@@ -149,6 +235,7 @@ impl KernelStats {
         self.tiles += other.tiles;
         self.rows += other.rows;
         self.strip_exits += other.strip_exits;
+        self.exit_gain_rows += other.exit_gain_rows;
     }
 }
 
@@ -177,88 +264,111 @@ impl KernelScan<'_> {
         heaps: &mut [BoundedMaxHeap],
         stats: &mut KernelStats,
     ) {
+        self.check_group(heaps);
+        for b in b0..b1 {
+            self.scan_block(b, heaps, stats);
+        }
+    }
+
+    /// Scan an explicit block visit list (heap-aware ordering, IVF lists).
+    /// Identical distances to [`scan_into`] — only the visit order differs.
+    pub fn scan_list_into(
+        &self,
+        list: &[u32],
+        heaps: &mut [BoundedMaxHeap],
+        stats: &mut KernelStats,
+    ) {
+        self.check_group(heaps);
+        for &b in list {
+            self.scan_block(b as usize, heaps, stats);
+        }
+    }
+
+    fn check_group(&self, heaps: &[BoundedMaxHeap]) {
         let nq = self.queries.len();
         assert!(nq > 0 && nq <= TILE_Q, "query group of {nq} exceeds TILE_Q");
         assert_eq!(nq, heaps.len());
         assert_eq!(nq, self.classes.len());
+        debug_assert!(self.queries.iter().all(|q| q.len() == self.blocks.dim));
+    }
+
+    fn scan_block(&self, b: usize, heaps: &mut [BoundedMaxHeap], stats: &mut KernelStats) {
+        let nq = self.queries.len();
         let dim = self.blocks.dim;
-        debug_assert!(self.queries.iter().all(|q| q.len() == dim));
+        let rows = self.blocks.rows_in(b);
+        let data = self.blocks.block(b);
+        let mut acc = [[0.0f32; BLOCK_ROWS]; TILE_Q];
+        let mut alive = [false; TILE_Q];
+        alive[..nq].fill(true);
+        let mut n_alive = nq;
 
-        for b in b0..b1 {
-            let rows = self.blocks.rows_in(b);
-            let data = self.blocks.block(b);
-            let mut acc = [[0.0f32; BLOCK_ROWS]; TILE_Q];
-            let mut alive = [false; TILE_Q];
-            alive[..nq].fill(true);
-            let mut n_alive = nq;
-
-            let mut j = 0;
-            while j < dim {
-                let jend = (j + STRIP_DIMS).min(dim);
-                for jj in j..jend {
-                    let col = &data[jj * BLOCK_ROWS..(jj + 1) * BLOCK_ROWS];
-                    for (qi, q) in self.queries.iter().enumerate() {
-                        if !alive[qi] {
-                            continue;
-                        }
-                        let qv = q[jj];
-                        // one column load serves every live query: the
-                        // lane loop is contiguous and branch-free, so it
-                        // vectorises across the block's rows
-                        for (a, &v) in acc[qi].iter_mut().zip(col) {
-                            let d = qv - v;
-                            *a += d * d;
-                        }
-                    }
-                }
-                j = jend;
-                if j >= dim {
-                    break;
-                }
-                // partial sums only grow: once even the nearest row of the
-                // tile exceeds a query's worst retained distance, no row of
-                // this block can enter that query's heap
-                for qi in 0..nq {
+        let mut j = 0;
+        while j < dim {
+            let jend = (j + STRIP_DIMS).min(dim);
+            for jj in j..jend {
+                let col = &data[jj * BLOCK_ROWS..(jj + 1) * BLOCK_ROWS];
+                for (qi, q) in self.queries.iter().enumerate() {
                     if !alive[qi] {
                         continue;
                     }
-                    let cutoff = heaps[qi].worst();
-                    if !cutoff.is_finite() {
-                        continue;
+                    let qv = q[jj];
+                    // one column load serves every live query: the
+                    // lane loop is contiguous and branch-free, so it
+                    // vectorises across the block's rows
+                    for (a, &v) in acc[qi].iter_mut().zip(col) {
+                        let d = qv - v;
+                        *a += d * d;
                     }
-                    let best = acc[qi][..rows]
-                        .iter()
-                        .fold(f32::INFINITY, |m, &v| m.min(v));
-                    if best >= cutoff {
-                        alive[qi] = false;
-                        n_alive -= 1;
-                        stats.strip_exits += 1;
-                    }
-                }
-                if n_alive == 0 {
-                    break;
                 }
             }
-            stats.tiles += 1;
-            stats.rows += rows as u64;
-
-            // harvest: only queries that survived every strip hold full
-            // distances; retired queries provably gain nothing here
+            j = jend;
+            if j >= dim {
+                break;
+            }
+            // partial sums only grow: once even the nearest row of the
+            // tile exceeds a query's worst retained distance, no row of
+            // this block can enter that query's heap
             for qi in 0..nq {
                 if !alive[qi] {
                     continue;
                 }
-                let heap = &mut heaps[qi];
-                let class = self.classes[qi];
-                for (lane, &d) in acc[qi][..rows].iter().enumerate() {
-                    let gid = self.blocks.id(b, lane);
-                    if let (Some(y), Some(labels)) = (class, self.labels) {
-                        if labels[gid as usize] != y {
-                            continue;
-                        }
-                    }
-                    heap.push(d, gid);
+                let cutoff = heaps[qi].worst();
+                if !cutoff.is_finite() {
+                    continue;
                 }
+                let best = acc[qi][..rows]
+                    .iter()
+                    .fold(f32::INFINITY, |m, &v| m.min(v));
+                if best >= cutoff {
+                    alive[qi] = false;
+                    n_alive -= 1;
+                    stats.strip_exits += 1;
+                    stats.exit_gain_rows += rows as u64;
+                }
+            }
+            if n_alive == 0 {
+                break;
+            }
+        }
+        stats.tiles += 1;
+        stats.rows += rows as u64;
+
+        // harvest: only queries that survived every strip hold full
+        // distances; retired queries provably gain nothing here
+        for qi in 0..nq {
+            if !alive[qi] {
+                continue;
+            }
+            let heap = &mut heaps[qi];
+            let class = self.classes[qi];
+            for (lane, &d) in acc[qi][..rows].iter().enumerate() {
+                let gid = self.blocks.id(b, lane);
+                if let (Some(y), Some(labels)) = (class, self.labels) {
+                    if labels[gid as usize] != y {
+                        continue;
+                    }
+                }
+                heap.push(d, gid);
             }
         }
     }
@@ -268,16 +378,50 @@ impl KernelScan<'_> {
     /// the scalar backends use). Returns ids sorted ascending by distance
     /// per query, plus the merged kernel counters.
     pub fn top_m(&self, cap: usize, threads: usize) -> (Vec<Vec<u32>>, KernelStats) {
-        let nq = self.queries.len();
         let cap = cap.max(1);
         let nb = self.blocks.n_blocks();
         let shards = parallel_chunks(nb, threads.max(1), |_, s, e| {
-            let mut heaps: Vec<BoundedMaxHeap> = (0..nq).map(|_| BoundedMaxHeap::new(cap)).collect();
+            let mut heaps = self.fresh_heaps(cap);
             let mut st = KernelStats::default();
             self.scan_into(s, e, &mut heaps, &mut st);
             (heaps, st)
         });
-        let mut merged: Vec<BoundedMaxHeap> = (0..nq).map(|_| BoundedMaxHeap::new(cap)).collect();
+        self.merge_shards(cap, shards)
+    }
+
+    /// [`top_m`] under an explicit block visit order (see [`block_order`]):
+    /// shards take contiguous chunks of the ordered list, so the shard that
+    /// owns the nearest blocks tightens its bounds first. Results are
+    /// identical to the unordered scan — same rows, same distances, only
+    /// the visit (and therefore exit) pattern changes.
+    pub fn top_m_ordered(
+        &self,
+        cap: usize,
+        threads: usize,
+        order: &[u32],
+    ) -> (Vec<Vec<u32>>, KernelStats) {
+        let cap = cap.max(1);
+        let shards = parallel_chunks(order.len(), threads.max(1), |_, s, e| {
+            let mut heaps = self.fresh_heaps(cap);
+            let mut st = KernelStats::default();
+            self.scan_list_into(&order[s..e], &mut heaps, &mut st);
+            (heaps, st)
+        });
+        self.merge_shards(cap, shards)
+    }
+
+    fn fresh_heaps(&self, cap: usize) -> Vec<BoundedMaxHeap> {
+        (0..self.queries.len())
+            .map(|_| BoundedMaxHeap::new(cap))
+            .collect()
+    }
+
+    fn merge_shards(
+        &self,
+        cap: usize,
+        shards: Vec<(Vec<BoundedMaxHeap>, KernelStats)>,
+    ) -> (Vec<Vec<u32>>, KernelStats) {
+        let mut merged = self.fresh_heaps(cap);
         let mut stats = KernelStats::default();
         for (heaps, st) in shards {
             stats.add(&st);
@@ -292,6 +436,139 @@ impl KernelScan<'_> {
                 .collect(),
             stats,
         )
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Masked refine tiles (the pre-blocked exact refine ladder)
+// ---------------------------------------------------------------------------
+
+/// One work item of a masked refine scan: a block of the full-resolution
+/// [`RowBlocks`] plus the candidate lanes inside it. `lanes[i] = (lane,
+/// bits)` where bit `qi` of `bits` says lane `lane` belongs to query `qi`'s
+/// candidate pool (≤ [`TILE_Q`] queries per plan).
+#[derive(Debug, Clone)]
+pub struct MaskedBlock {
+    pub block: u32,
+    pub lanes: Vec<(u8, u8)>,
+}
+
+/// Group `(row id, query bits)` pairs — ascending distinct row ids — into
+/// per-block work items for [`refine_scan_masked`].
+pub fn build_refine_plan(rows: &[(u32, u8)]) -> Vec<MaskedBlock> {
+    let mut plan: Vec<MaskedBlock> = Vec::new();
+    for &(gid, bits) in rows {
+        let block = gid / BLOCK_ROWS as u32;
+        let lane = (gid % BLOCK_ROWS as u32) as u8;
+        match plan.last_mut() {
+            Some(mb) if mb.block == block => mb.lanes.push((lane, bits)),
+            _ => plan.push(MaskedBlock {
+                block,
+                lanes: vec![(lane, bits)],
+            }),
+        }
+    }
+    plan
+}
+
+/// The exact refine as register tiles: scan only the blocks that hold
+/// candidate rows, sharing each dim-major column load across the tile's
+/// queries, and apply the per-(row, query) membership bits at harvest.
+///
+/// Distances are full squared sums exactly as in [`KernelScan`]; the strip
+/// early-exit bounds each query against the minimum partial sum over *its
+/// member lanes only* (non-member lanes can never enter that query's heap,
+/// so excluding them keeps the bound tight and the retirement provable).
+/// `blocks` must be the identity-id layout (`Dataset::row_blocks`).
+pub fn refine_scan_masked(
+    blocks: &RowBlocks,
+    queries: &[&[f32]],
+    plan: &[MaskedBlock],
+    heaps: &mut [BoundedMaxHeap],
+    stats: &mut KernelStats,
+) {
+    let nq = queries.len();
+    assert!(nq > 0 && nq <= TILE_Q, "refine tile of {nq} exceeds TILE_Q");
+    assert_eq!(nq, heaps.len());
+    let dim = blocks.dim;
+    debug_assert!(queries.iter().all(|q| q.len() == dim));
+
+    for mb in plan {
+        let b = mb.block as usize;
+        let data = blocks.block(b);
+        let mut acc = [[0.0f32; BLOCK_ROWS]; TILE_Q];
+        let mut member = [0u64; TILE_Q]; // lanes of each query, as counts
+        let mut alive = [false; TILE_Q];
+        let mut n_alive = 0usize;
+        for &(_, bits) in &mb.lanes {
+            for (qi, m) in member.iter_mut().enumerate().take(nq) {
+                if bits & (1 << qi) != 0 {
+                    *m += 1;
+                }
+            }
+        }
+        for qi in 0..nq {
+            if member[qi] > 0 {
+                alive[qi] = true;
+                n_alive += 1;
+            }
+        }
+
+        let mut j = 0;
+        while j < dim && n_alive > 0 {
+            let jend = (j + STRIP_DIMS).min(dim);
+            for jj in j..jend {
+                let col = &data[jj * BLOCK_ROWS..(jj + 1) * BLOCK_ROWS];
+                for (qi, q) in queries.iter().enumerate() {
+                    if !alive[qi] {
+                        continue;
+                    }
+                    let qv = q[jj];
+                    // whole-column accumulation stays branch-free; the
+                    // membership filter applies at harvest, like the
+                    // coarse kernel's class filter
+                    for (a, &v) in acc[qi].iter_mut().zip(col) {
+                        let d = qv - v;
+                        *a += d * d;
+                    }
+                }
+            }
+            j = jend;
+            if j >= dim {
+                break;
+            }
+            for qi in 0..nq {
+                if !alive[qi] {
+                    continue;
+                }
+                let cutoff = heaps[qi].worst();
+                if !cutoff.is_finite() {
+                    continue;
+                }
+                let best = mb
+                    .lanes
+                    .iter()
+                    .filter(|&&(_, bits)| bits & (1 << qi) != 0)
+                    .fold(f32::INFINITY, |m, &(lane, _)| m.min(acc[qi][lane as usize]));
+                if best >= cutoff {
+                    alive[qi] = false;
+                    n_alive -= 1;
+                    stats.strip_exits += 1;
+                    stats.exit_gain_rows += member[qi];
+                }
+            }
+        }
+        stats.tiles += 1;
+        stats.rows += mb.lanes.len() as u64;
+
+        for &(lane, bits) in &mb.lanes {
+            let gid = blocks.id(b, lane as usize);
+            for (qi, heap) in heaps.iter_mut().enumerate().take(nq) {
+                if alive[qi] && bits & (1 << qi) != 0 {
+                    heap.push(acc[qi][lane as usize], gid);
+                }
+            }
+        }
     }
 }
 
@@ -481,5 +758,179 @@ mod tests {
         };
         let (got, _) = scan.top_m(3, 2);
         assert_eq!(got[0], vec![0]);
+    }
+
+    #[test]
+    fn block_centroids_cover_their_members() {
+        let mut rng = Pcg64::new(13);
+        for (rows, dim) in [(1usize, 3usize), (33, 7), (100, 16)] {
+            let table = random_table(&mut rng, rows, dim);
+            let blocks = ProxyBlocks::build(&table, rows, dim);
+            for b in 0..blocks.n_blocks() {
+                let c = blocks.centroid(b);
+                let r = blocks.radius(b);
+                for lane in 0..blocks.rows_in(b) {
+                    let gid = blocks.id(b, lane) as usize;
+                    let d: f32 = table[gid * dim..(gid + 1) * dim]
+                        .iter()
+                        .zip(c)
+                        .map(|(a, b)| (a - b) * (a - b))
+                        .sum();
+                    assert!(
+                        d.sqrt() <= r + 1e-4,
+                        "rows={rows} dim={dim} b={b} lane={lane}: {} > {r}",
+                        d.sqrt()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ordered_scan_matches_unordered_scan_exactly() {
+        // heap-aware ordering changes the visit pattern, never the result:
+        // identical ids AND identical f32 distances for every visit order
+        forall(89, 20, |rng| {
+            let dim = [3usize, 16, 17, 48][rng.below(4)];
+            let rows = gen::usize_in(rng, 1, 140);
+            let table = random_table(rng, rows, dim);
+            let blocks = ProxyBlocks::build(&table, rows, dim);
+            let nq = gen::usize_in(rng, 1, TILE_Q);
+            let m = gen::usize_in(rng, 1, rows);
+            let qs_data: Vec<Vec<f32>> =
+                (0..nq).map(|_| gen::vec_normal(rng, dim, 1.0)).collect();
+            let qs: Vec<&[f32]> = qs_data.iter().map(|q| q.as_slice()).collect();
+            let classes = vec![None; nq];
+            let scan = KernelScan {
+                blocks: &blocks,
+                queries: &qs,
+                classes: &classes,
+                labels: None,
+            };
+            let (plain, _) = scan.top_m(m, 2);
+            // centroid order AND a reversed order must both agree
+            let near = block_order(&blocks, qs[0]);
+            let far: Vec<u32> = near.iter().rev().copied().collect();
+            for order in [&near, &far] {
+                let (got, _) = scan.top_m_ordered(m, 2, order);
+                for qi in 0..nq {
+                    crate::prop_assert!(
+                        got[qi] == plain[qi],
+                        "rows={rows} dim={dim} qi={qi}: order changed the result"
+                    );
+                    // rank-by-rank distances bit-identical, not just ids
+                    let da: Vec<f32> =
+                        got[qi].iter().map(|&g| naive_dist(&table, dim, qs[qi], g)).collect();
+                    let db: Vec<f32> =
+                        plain[qi].iter().map(|&g| naive_dist(&table, dim, qs[qi], g)).collect();
+                    crate::prop_assert!(da == db, "ordered scan changed a distance");
+                }
+            }
+            Ok(())
+        });
+    }
+
+    fn naive_dist(table: &[f32], dim: usize, q: &[f32], gid: u32) -> f32 {
+        table[gid as usize * dim..(gid as usize + 1) * dim]
+            .iter()
+            .zip(q)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum()
+    }
+
+    /// Reference refine: exact top-k of a pool (dedup'd), sorted ascending.
+    fn naive_refine(table: &[f32], dim: usize, q: &[f32], pool: &[u32], k: usize) -> Vec<u32> {
+        let mut distinct: Vec<u32> = pool.to_vec();
+        distinct.sort_unstable();
+        distinct.dedup();
+        let mut dists: Vec<(f32, u32)> = distinct
+            .iter()
+            .map(|&gid| (naive_dist(table, dim, q, gid), gid))
+            .collect();
+        dists.sort_by(|a, b| a.0.total_cmp(&b.0));
+        dists.truncate(k.max(1).min(pool.len().max(1)));
+        dists.into_iter().map(|(_, i)| i).collect()
+    }
+
+    #[test]
+    fn masked_refine_matches_naive_across_ragged_dims_and_pool_edges() {
+        // Satellite: pre-blocked refine parity for dims off the strip/lane
+        // grid and pool sizes around the powers the masks chunk at —
+        // 0/1/63/64/65 — plus duplicate candidate ids (dedup'd like the
+        // row-major refine ladder's union mask).
+        let mut rng = Pcg64::new(31);
+        for &dim in &[1usize, 7, 15, 16, 17, 31, 33, 96] {
+            let rows = 130usize;
+            let table = random_table(&mut rng, rows, dim);
+            let blocks = ProxyBlocks::build(&table, rows, dim);
+            for &pool_len in &[0usize, 1, 63, 64, 65] {
+                let nq = 1 + (pool_len % TILE_Q);
+                let qs_data: Vec<Vec<f32>> =
+                    (0..nq).map(|_| gen::vec_normal(&mut rng, dim, 1.0)).collect();
+                let qs: Vec<&[f32]> = qs_data.iter().map(|q| q.as_slice()).collect();
+                let pools: Vec<Vec<u32>> = (0..nq)
+                    .map(|_| {
+                        let mut p: Vec<u32> =
+                            (0..pool_len).map(|_| rng.below(rows) as u32).collect();
+                        if pool_len > 2 {
+                            p[1] = p[0]; // force a duplicate id
+                        }
+                        p
+                    })
+                    .collect();
+                let k = (pool_len / 2).max(1);
+
+                // union mask over the tile's queries
+                let mut mask = std::collections::HashMap::new();
+                for (qi, pool) in pools.iter().enumerate() {
+                    for &gid in pool {
+                        *mask.entry(gid).or_insert(0u8) |= 1 << qi;
+                    }
+                }
+                let mut union: Vec<(u32, u8)> = mask.into_iter().collect();
+                union.sort_unstable_by_key(|e| e.0);
+                let plan = build_refine_plan(&union);
+                let mut heaps: Vec<BoundedMaxHeap> = pools
+                    .iter()
+                    .map(|p| BoundedMaxHeap::new(k.max(1).min(p.len().max(1))))
+                    .collect();
+                let mut st = KernelStats::default();
+                refine_scan_masked(&blocks, &qs, &plan, &mut heaps, &mut st);
+                assert_eq!(st.rows, union.len() as u64, "dim={dim} pool={pool_len}");
+                for (qi, heap) in heaps.into_iter().enumerate() {
+                    let got: Vec<u32> =
+                        heap.into_sorted().into_iter().map(|(_, i)| i).collect();
+                    let want = if pools[qi].is_empty() {
+                        Vec::new()
+                    } else {
+                        naive_refine(&table, dim, qs[qi], &pools[qi], k)
+                    };
+                    assert_eq!(got, want, "dim={dim} pool={pool_len} qi={qi}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn masked_refine_early_exits_on_concentrated_pools() {
+        // self-query pools with many far rows: the member-lane bound must
+        // retire tiles without changing the result
+        let mut rng = Pcg64::new(77);
+        let (rows, dim) = (128usize, 96usize);
+        let table = random_table(&mut rng, rows, dim);
+        let blocks = ProxyBlocks::build(&table, rows, dim);
+        let q = table[5 * dim..6 * dim].to_vec();
+        let pool: Vec<u32> = (0..rows as u32).collect();
+        let union: Vec<(u32, u8)> = pool.iter().map(|&gid| (gid, 1u8)).collect();
+        let plan = build_refine_plan(&union);
+        let queries = [q.as_slice()];
+        let mut heaps = vec![BoundedMaxHeap::new(3)];
+        let mut st = KernelStats::default();
+        refine_scan_masked(&blocks, &queries, &plan, &mut heaps, &mut st);
+        let got: Vec<u32> = heaps.remove(0).into_sorted().into_iter().map(|(_, i)| i).collect();
+        assert_eq!(got, naive_refine(&table, dim, &q, &pool, 3));
+        assert_eq!(got[0], 5);
+        assert!(st.strip_exits > 0, "concentrated pool must retire tiles");
+        assert!(st.exit_gain_rows > 0, "retirements must bank row gains");
     }
 }

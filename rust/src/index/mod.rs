@@ -19,9 +19,12 @@ pub mod scan;
 pub mod topk;
 
 pub use backend::{
-    batched_refine, BackendOpts, BatchedScan, ClusterPruned, FlatScan, ProxyQuery,
-    RetrievalBackend, RetrievalBackendKind, RetrievalStats,
+    batched_refine, batched_refine_kernel, exact_refine, exact_refine_kernel, BackendOpts,
+    BatchedScan, ClusterPruned, FlatScan, ProxyQuery, RetrievalBackend, RetrievalBackendKind,
+    RetrievalStats,
 };
-pub use kernel::{KernelScan, KernelStats, ProxyBlocks, BLOCK_ROWS, TILE_Q};
+pub use kernel::{
+    block_order, KernelScan, KernelStats, ProxyBlocks, RowBlocks, BLOCK_ROWS, TILE_Q,
+};
 pub use scan::ProxyIndex;
 pub use topk::{top_k_smallest, BoundedMaxHeap};

@@ -17,9 +17,19 @@ pub fn default_threads() -> usize {
 }
 
 /// Split `[0, len)` into `chunks` half-open ranges of near-equal size.
+///
+/// Edge cases: `chunks == 0` yields no ranges (nothing can run the work);
+/// `len == 0` with `chunks > 0` yields one empty range `(0, 0)` so
+/// `parallel_chunks` still invokes the closure exactly once through its
+/// single-range fast path — callers get a result of consistent shape (one
+/// shard of empty output) whether the input is empty or merely small,
+/// instead of a zero-shard special case.
 pub fn split_ranges(len: usize, chunks: usize) -> Vec<(usize, usize)> {
-    if len == 0 || chunks == 0 {
+    if chunks == 0 {
         return vec![];
+    }
+    if len == 0 {
+        return vec![(0, 0)];
     }
     let chunks = chunks.min(len);
     let base = len / chunks;
@@ -173,6 +183,34 @@ mod tests {
                 assert_eq!(w[0].1, w[1].0); // contiguous
             }
         }
+    }
+
+    #[test]
+    fn ranges_edge_cases_len_vs_chunks() {
+        // Satellite: len < chunks never yields empty ranges — chunks clamp
+        assert_eq!(split_ranges(3, 16), vec![(0, 1), (1, 2), (2, 3)]);
+        assert_eq!(split_ranges(1, 2), vec![(0, 1)]);
+        // len == 0 yields exactly one empty range (the single-range fast
+        // path of parallel_chunks runs it inline, no threads spawned)
+        assert_eq!(split_ranges(0, 1), vec![(0, 0)]);
+        assert_eq!(split_ranges(0, 8), vec![(0, 0)]);
+        // chunks == 0 yields nothing — there is no worker to run it
+        assert_eq!(split_ranges(0, 0), Vec::<(usize, usize)>::new());
+        assert_eq!(split_ranges(5, 0), Vec::<(usize, usize)>::new());
+    }
+
+    #[test]
+    fn parallel_chunks_empty_input_invokes_closure_once() {
+        // consistent shape: one shard of empty output, not zero shards
+        let calls = AtomicU64::new(0);
+        let out = parallel_chunks(0, 4, |i, s, e| {
+            calls.fetch_add(1, Ordering::Relaxed);
+            assert_eq!((i, s, e), (0, 0, 0));
+            Vec::<u32>::new()
+        });
+        assert_eq!(out.len(), 1);
+        assert!(out[0].is_empty());
+        assert_eq!(calls.load(Ordering::Relaxed), 1);
     }
 
     #[test]

@@ -300,6 +300,119 @@ fn prop_batched_group_scan_matches_per_query_scans() {
 }
 
 #[test]
+fn prop_preblocked_refine_matches_rowmajor_refine() {
+    // Satellite: the pre-blocked (masked kernel tile) refine equals the
+    // row-major reference refine across ragged full-resolution dims is
+    // covered by kernel.rs unit tests; here the two ladders must agree on
+    // the pool shapes the engine actually produces — sizes straddling the
+    // mask widths (0 / 1 / 63 / 64 / 65) and pools carrying duplicates.
+    let mut spec = preset("mnist-sim").unwrap().clone();
+    spec.n = 320;
+    let ds = Dataset::synthesize(&spec, 47);
+    let preblocked = BatchedScan::new(2);
+    let rowmajor = BatchedScan::new(2).with_refine_kernel(false);
+    let per_query = FlatScan::scalar(2);
+    forall(97, 12, |rng| {
+        let k = gen::usize_in(rng, 1, 40);
+        let sizes = [0usize, 1, 63, 64, 65];
+        let nq = gen::usize_in(rng, 1, sizes.len());
+        let qs_data: Vec<Vec<f32>> = (0..nq).map(|_| gen::vec_normal(rng, ds.d, 1.0)).collect();
+        let pools_data: Vec<Vec<u32>> = (0..nq)
+            .map(|i| {
+                let len = sizes[i].min(ds.n);
+                let mut p: Vec<u32> = rng
+                    .choose_k(ds.n, len)
+                    .into_iter()
+                    .map(|i| i as u32)
+                    .collect();
+                if p.len() > 3 && rng.below(2) == 0 {
+                    p[2] = p[0]; // duplicates collapse in both ladders
+                    p[3] = p[0];
+                }
+                p
+            })
+            .collect();
+        let dup: Vec<bool> = pools_data
+            .iter()
+            .map(|p| {
+                let distinct: std::collections::HashSet<&u32> = p.iter().collect();
+                distinct.len() != p.len()
+            })
+            .collect();
+        let qs: Vec<&[f32]> = qs_data.iter().map(|q| q.as_slice()).collect();
+        let pools: Vec<&[u32]> = pools_data.iter().map(|p| p.as_slice()).collect();
+        let got = preblocked.refine_top_k_batch(&ds, &qs, &pools, k);
+        let want = rowmajor.refine_top_k_batch(&ds, &qs, &pools, k);
+        for i in 0..nq {
+            prop_assert!(
+                got[i] == want[i],
+                "preblocked != rowmajor (pool {} k={k})",
+                pools[i].len()
+            );
+            // distinct pools additionally pin both ladders to the scalar
+            // per-query refine (duplicate scoring is the known divergence
+            // of the non-ladder path — see backend.rs docs)
+            if !dup[i] {
+                let per = per_query.refine_top_k(&ds, qs[i], pools[i], k);
+                prop_assert!(got[i] == per, "ladder != per-query (pool {})", pools[i].len());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_heap_aware_ordering_is_order_invariant() {
+    // Satellite: for seeds 0..8, the ordered scan returns identical top-k
+    // ids AND identical f32 distances to the unordered scan, for every
+    // backend that orders (batched, cluster) plus the flat reference.
+    let mut spec = preset("mnist-sim").unwrap().clone();
+    spec.n = 360;
+    for seed in 0..8u64 {
+        let ds = Dataset::synthesize(&spec, seed);
+        let flat = FlatScan::scalar(2);
+        let ordered: Vec<(&str, Box<dyn RetrievalBackend>)> = vec![
+            ("batched", Box::new(BatchedScan::new(2))),
+            ("cluster", Box::new(ClusterPruned::build(&ds, 10, 0, seed))),
+        ];
+        let unordered: Vec<(&str, Box<dyn RetrievalBackend>)> = vec![
+            ("batched", Box::new(BatchedScan::new(2).with_ordering(false))),
+            (
+                "cluster",
+                Box::new(ClusterPruned::build(&ds, 10, 0, seed).with_ordering(false)),
+            ),
+        ];
+        let mut rng = golddiff::util::rng::Pcg64::new(1000 + seed);
+        for case in 0..6 {
+            let m = 1 + rng.below(96);
+            let q: Vec<f32> = (0..ds.proxy_d).map(|_| rng.normal()).collect();
+            let class = if case % 3 == 2 {
+                Some(rng.below(ds.classes) as u32)
+            } else {
+                None
+            };
+            let pdist = |gid: u32| -> f32 {
+                ds.proxy_row(gid as usize)
+                    .iter()
+                    .zip(&q)
+                    .map(|(a, b)| (a - b) * (a - b))
+                    .sum()
+            };
+            let reference = flat.top_m(&ds, &q, m, class);
+            for ((name, ord), (_, unord)) in ordered.iter().zip(&unordered) {
+                let a = ord.top_m(&ds, &q, m, class);
+                let b = unord.top_m(&ds, &q, m, class);
+                assert_eq!(a, b, "{name} seed={seed} m={m} class={class:?}: ids");
+                let da: Vec<f32> = a.iter().map(|&g| pdist(g)).collect();
+                let db: Vec<f32> = b.iter().map(|&g| pdist(g)).collect();
+                assert_eq!(da, db, "{name} seed={seed}: distances");
+                assert_eq!(a, reference, "{name} seed={seed}: vs flat reference");
+            }
+        }
+    }
+}
+
+#[test]
 fn prop_conditional_scan_never_leaks_other_classes() {
     let mut spec = preset("cifar-sim").unwrap().clone();
     spec.n = 300;
