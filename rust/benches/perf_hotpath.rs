@@ -4,9 +4,12 @@
 //!      the register-tiled kernel vs the scalar batched pass
 //!      (`kernel_tiled_vs_scalar`, with rows-per-pass and tiles-evaluated
 //!      telemetry), the batched refine ladder vs per-query refines, and
-//!      cluster-pruned-vs-flat screening (runs without the XLA runtime;
-//!      emits machine-readable `BENCH {json}` lines and *verifies* the
-//!      one-pass-per-group invariant via the backend pass counter);
+//!      cluster-pruned-vs-flat screening, and shard-parallel retrieval vs
+//!      the monolithic scan (`shard_scan_scaling` / `sharded_vs_monolithic`,
+//!      exact-merge parity asserted before timing) — all run without the
+//!      XLA runtime, emit machine-readable `BENCH {json}` lines and
+//!      *verify* the one-pass-per-group invariant via the backend pass
+//!      counter;
 //!   1. coarse proxy scan throughput (rows/s) vs thread count;
 //!   2. exact refine top-k inside the candidate pool;
 //!   3. gather + upload of the golden subset;
@@ -25,9 +28,11 @@ use std::time::Instant;
 use golddiff::benchlib;
 use golddiff::denoiser::StepContext;
 use golddiff::index::backend::{
-    BatchedScan, ClusterPruned, FlatScan, ProxyQuery, RetrievalBackend,
+    BackendOpts, BatchedScan, ClusterPruned, FlatScan, ProxyQuery, RetrievalBackend,
+    RetrievalBackendKind,
 };
 use golddiff::index::scan::ProxyIndex;
+use golddiff::index::shard::ShardedBackend;
 use golddiff::schedule::noise::{NoiseSchedule, ScheduleKind};
 use golddiff::util::timer::TimingStats;
 
@@ -345,6 +350,96 @@ fn bench_retrieval_backends(ds: &golddiff::Dataset) {
     }
 }
 
+/// Section 0c: shard-parallel retrieval vs the monolithic batched scan (no
+/// runtime required). Each shard count runs the identical query group; the
+/// spot-check pins the exact-merge contract (byte-identical ids) before
+/// any timing is trusted.
+fn bench_sharded(ds: &golddiff::Dataset) {
+    const BATCH: usize = 8;
+    let m = (ds.n / 10).max(1);
+    let mut rng = golddiff::util::rng::Pcg64::new(23);
+    let queries_data: Vec<Vec<f32>> = (0..BATCH)
+        .map(|_| {
+            let row = ds.proxy_row(rng.below(ds.n)).to_vec();
+            row.iter().map(|&v| v + rng.normal() * 0.3).collect()
+        })
+        .collect();
+    let queries: Vec<ProxyQuery> = queries_data
+        .iter()
+        .map(|q| ProxyQuery {
+            proxy: q,
+            class: None,
+        })
+        .collect();
+
+    println!("-- sharded retrieval (batch={BATCH}, m={m}) --");
+    let mono = BatchedScan::default();
+    let t_mono = bench(&format!("monolithic batched scan x{BATCH}"), 15, || {
+        let _ = mono.top_m_batch(ds, &queries, m);
+    });
+    let want = mono.top_m_batch(ds, &queries, m);
+
+    let mut t_one = f64::NAN;
+    for shards in [1usize, 2, 4, 8] {
+        let sb = ShardedBackend::build(
+            ds,
+            RetrievalBackendKind::Batched,
+            BackendOpts {
+                shards,
+                ..BackendOpts::default()
+            },
+            None,
+        );
+        // exact-merge contract: identical ids for every shard count
+        assert_eq!(
+            sb.top_m_batch(ds, &queries, m),
+            want,
+            "sharded scan must match the monolithic scan at shards={shards}"
+        );
+        sb.reset_stats();
+        let t = bench(&format!("sharded batched scan x{BATCH} (shards={shards})"), 15, || {
+            let _ = sb.top_m_batch(ds, &queries, m);
+        });
+        if shards == 1 {
+            t_one = t;
+        }
+        let snap = sb.stats();
+        println!(
+            "{:>58}  -> {:.2}x vs 1 shard, {} (query,shard) scans",
+            "",
+            t_one / t.max(1e-12),
+            snap.shards_scanned
+        );
+        benchlib::emit_bench(
+            "shard_scan_scaling",
+            &[
+                ("shards", shards as f64),
+                ("batch", BATCH as f64),
+                ("m", m as f64),
+                ("n", ds.n as f64),
+                ("secs", t),
+                ("speedup_vs_1shard", t_one / t.max(1e-12)),
+                ("shards_scanned", snap.shards_scanned as f64),
+                ("shards_skipped", snap.shards_skipped as f64),
+            ],
+        );
+        if shards == 4 {
+            benchlib::emit_bench(
+                "sharded_vs_monolithic",
+                &[
+                    ("shards", shards as f64),
+                    ("batch", BATCH as f64),
+                    ("m", m as f64),
+                    ("n", ds.n as f64),
+                    ("monolithic_secs", t_mono),
+                    ("sharded_secs", t),
+                    ("speedup", t_mono / t.max(1e-12)),
+                ],
+            );
+        }
+    }
+}
+
 /// Section 0b: the concentration warm-start vs the cold screen (no runtime
 /// required). A tick group's golden subsets at sampling point t−1 seed the
 /// screens at t; the seeded screen skips every proxy block the exact
@@ -465,6 +560,10 @@ fn main() -> anyhow::Result<()> {
 
     // 0b. concentration warm-start vs cold screening (no runtime required)
     bench_warm_start(&ds, &sched);
+
+    // 0c. shard-parallel retrieval vs the monolithic scan (no runtime
+    // required; pins the exact-merge contract before timing)
+    bench_sharded(&ds);
 
     // 1. coarse scan vs threads
     for threads in [1usize, 2, 4, 8] {

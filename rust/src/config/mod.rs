@@ -22,6 +22,17 @@ pub fn env_flag(name: &str, default: bool) -> bool {
         .unwrap_or(default)
 }
 
+/// Numeric default with an environment override — the CI `tier1-sharded`
+/// leg runs the suite under `GOLDDIFF_SHARDS=4` so every
+/// default-constructed retrieval path exercises the shard-parallel merge
+/// layer end to end.
+pub fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
 /// Engine-level configuration (the launcher's config file).
 #[derive(Debug, Clone, PartialEq)]
 pub struct EngineConfig {
@@ -67,6 +78,13 @@ pub struct EngineConfig {
     pub warm_start: bool,
     /// queries per kernel register tile (clamped to 1..=8 at build)
     pub kernel_tile_q: usize,
+    /// corpus shards: `> 1` scans shard-parallel with exact heap merges
+    /// (`index::shard`); `1` keeps the monolithic backends
+    pub shards: usize,
+    /// memory budget (MiB) for resident cold-shard row blocks; `0` =
+    /// unbounded. With `shards > 1` a positive budget also attaches the
+    /// `.gds` shard reader so evicted shards stream back from disk
+    pub mem_budget_mb: usize,
     /// rng seed
     pub seed: u64,
 }
@@ -95,6 +113,8 @@ impl Default for EngineConfig {
             ordering: true,
             warm_start: env_flag("GOLDDIFF_WARM_START", true),
             kernel_tile_q: crate::index::kernel::TILE_Q,
+            shards: env_usize("GOLDDIFF_SHARDS", 1),
+            mem_budget_mb: 0,
             seed: 0,
         }
     }
@@ -127,6 +147,8 @@ impl EngineConfig {
             .set("ordering", self.ordering)
             .set("warm_start", self.warm_start)
             .set("kernel_tile_q", self.kernel_tile_q)
+            .set("shards", self.shards)
+            .set("mem_budget_mb", self.mem_budget_mb)
             .set("seed", self.seed);
         j
     }
@@ -177,6 +199,8 @@ impl EngineConfig {
                 .and_then(Json::as_bool)
                 .unwrap_or(def.warm_start),
             kernel_tile_q: n("kernel_tile_q", def.kernel_tile_q as f64) as usize,
+            shards: n("shards", def.shards as f64) as usize,
+            mem_budget_mb: n("mem_budget_mb", def.mem_budget_mb as f64) as usize,
             seed: n("seed", def.seed as f64) as u64,
         })
     }
@@ -229,6 +253,8 @@ impl EngineConfig {
             self.warm_start = parse_flag(v);
         }
         self.kernel_tile_q = args.usize_or("kernel-tile-q", self.kernel_tile_q);
+        self.shards = args.usize_or("shards", self.shards);
+        self.mem_budget_mb = args.usize_or("mem-budget-mb", self.mem_budget_mb);
         self.steps = args.usize_or("steps", self.steps);
         self.workers = args.usize_or("workers", self.workers);
         self.scan_threads = args.usize_or("scan-threads", self.scan_threads);
@@ -251,6 +277,8 @@ impl EngineConfig {
             refine_kernel: self.refine_kernel,
             ordering: self.ordering,
             tile_q: self.kernel_tile_q,
+            shards: self.shards,
+            mem_budget_mb: self.mem_budget_mb,
         }
     }
 }
@@ -273,6 +301,8 @@ mod tests {
         c.ordering = false;
         c.warm_start = false;
         c.kernel_tile_q = 2;
+        c.shards = 6;
+        c.mem_budget_mb = 512;
         let rt = EngineConfig::from_json(&parse(&c.to_json().to_string_compact()).unwrap())
             .unwrap();
         assert_eq!(rt, c);
@@ -314,12 +344,16 @@ mod tests {
         assert_eq!(c.warm_start, env_flag("GOLDDIFF_WARM_START", true));
         assert!(c.ordering, "heap-aware ordering is on by default");
         assert_eq!(c.kernel_tile_q, crate::index::kernel::TILE_Q);
+        // shard count follows the env so the CI sharded leg can flip every
+        // default-constructed retrieval path at once; budget is unbounded
+        assert_eq!(c.shards, env_usize("GOLDDIFF_SHARDS", 1));
+        assert_eq!(c.mem_budget_mb, 0);
         assert!(crate::index::backend::RetrievalBackendKind::parse(&c.backend).is_some());
         let mut c = EngineConfig::default();
         let raw: Vec<String> = [
             "--backend", "cluster", "--clusters", "32", "--nprobe", "2", "--kernel", "off",
             "--refine-kernel", "off", "--ordering", "off", "--warm-start", "off",
-            "--kernel-tile-q", "4",
+            "--kernel-tile-q", "4", "--shards", "8", "--mem-budget-mb", "256",
         ]
         .iter()
         .map(|s| s.to_string())
@@ -330,10 +364,14 @@ mod tests {
         assert_eq!(c.nprobe, 2);
         assert!(!c.kernel && !c.refine_kernel && !c.ordering && !c.warm_start);
         assert_eq!(c.kernel_tile_q, 4);
+        assert_eq!(c.shards, 8);
+        assert_eq!(c.mem_budget_mb, 256);
         let opts = c.backend_opts();
         assert!(!opts.kernel && !opts.refine_kernel && !opts.ordering);
         assert_eq!(opts.tile_q, 4);
         assert_eq!(opts.clusters, 32);
+        assert_eq!(opts.shards, 8);
+        assert_eq!(opts.mem_budget_mb, 256);
     }
 
     #[test]
@@ -354,6 +392,13 @@ mod tests {
         std::env::set_var("GOLDDIFF_TEST_FLAG_PARSE_ONLY", "on");
         assert!(env_flag("GOLDDIFF_TEST_FLAG_PARSE_ONLY", false));
         std::env::remove_var("GOLDDIFF_TEST_FLAG_PARSE_ONLY");
+        // numeric env override (again a var only this test touches)
+        assert_eq!(env_usize("GOLDDIFF_TEST_USIZE_THAT_IS_NEVER_SET", 3), 3);
+        std::env::set_var("GOLDDIFF_TEST_USIZE_PARSE_ONLY", "7");
+        assert_eq!(env_usize("GOLDDIFF_TEST_USIZE_PARSE_ONLY", 1), 7);
+        std::env::set_var("GOLDDIFF_TEST_USIZE_PARSE_ONLY", "not-a-number");
+        assert_eq!(env_usize("GOLDDIFF_TEST_USIZE_PARSE_ONLY", 1), 1);
+        std::env::remove_var("GOLDDIFF_TEST_USIZE_PARSE_ONLY");
     }
 
     #[test]

@@ -70,17 +70,22 @@ impl Engine {
     /// Load (or synthesise) the dataset, open the runtime, spawn the
     /// executor thread.
     pub fn start(cfg: EngineConfig) -> Result<Engine> {
-        let mut ds = store::load_or_synthesize(&cfg.data_dir, &cfg.preset, cfg.seed)
-            .context("loading dataset")?;
+        // a freshly synthesised store is saved with the engine's shard
+        // plan so the streaming path can seek per-shard sections
+        let mut ds =
+            store::load_or_synthesize_sharded(&cfg.data_dir, &cfg.preset, cfg.seed, cfg.shards)
+                .context("loading dataset")?;
         let kind = ScheduleKind::parse(&cfg.schedule)
             .with_context(|| format!("unknown schedule {}", cfg.schedule))?;
         let sched = NoiseSchedule::new(kind, cfg.steps);
         let backend_kind = RetrievalBackendKind::parse(&cfg.backend)
             .with_context(|| format!("unknown retrieval backend {}", cfg.backend))?;
-        if backend_kind == RetrievalBackendKind::ClusterPruned {
+        if backend_kind == RetrievalBackendKind::ClusterPruned && cfg.shards <= 1 {
             // the IVF partition persists in the .gds store; only a config
             // mismatch (lists/seed) pays the k-means here, and the result
-            // is written back (best-effort) so the next start skips it
+            // is written back (best-effort) so the next start skips it.
+            // (A sharded cluster backend partitions per shard instead, so
+            // the global partition is neither needed nor computed.)
             let lists = cfg.clusters.clamp(1, ds.n.max(1));
             let stale = ds
                 .ivf
@@ -94,13 +99,23 @@ impl Engine {
         let ds = Arc::new(ds);
         // built once per engine (cluster-pruned reuses the persisted IVF
         // partition here) and shared by every denoiser so telemetry
-        // aggregates in one place
-        let backend: Arc<dyn RetrievalBackend> = backend_kind.build(&ds, cfg.backend_opts());
+        // aggregates in one place. A sharded backend under a memory budget
+        // streams evicted shards back from the .gds store.
+        let store_path = store::store_path(&cfg.data_dir, &cfg.preset);
+        let backend: Arc<dyn RetrievalBackend> = backend_kind.build_with_store(
+            &ds,
+            cfg.backend_opts(),
+            (cfg.shards > 1 && cfg.mem_budget_mb > 0).then_some(store_path.as_path()),
+        );
         let runtime = SendRuntime(Runtime::new(&cfg.artifacts_dir)?);
 
         let queue = Arc::new(BoundedQueue::<Submission>::new(cfg.queue_depth));
         let stats = Arc::new(Mutex::new(EngineStats::new()));
-        stats.lock().unwrap().backend = backend_kind.name().to_string();
+        {
+            let mut st = stats.lock().unwrap();
+            st.backend = backend_kind.name().to_string();
+            st.shards = cfg.shards.max(1);
+        }
         let d = ds.d;
         let preset = cfg.preset.clone();
         let steps = cfg.steps;
@@ -518,6 +533,47 @@ mod tests {
         assert_eq!(again.sample, resp.sample);
         eng2.shutdown();
         std::fs::remove_dir_all(&data_dir).ok();
+    }
+
+    #[test]
+    fn sharded_engine_serves_identical_samples_and_reports_telemetry() {
+        // the sharded merge layer is exact, so a sharded + memory-budgeted
+        // engine must serve byte-identical samples to the monolithic one,
+        // while the stats surface the shard telemetry end to end
+        if !std::path::Path::new("artifacts/manifest.json").exists() {
+            return;
+        }
+        let mut samples: Vec<Vec<f32>> = Vec::new();
+        for shards in [1usize, 4] {
+            let cfg = EngineConfig {
+                preset: "moons".into(),
+                data_dir: std::env::temp_dir().join("golddiff_engine_shard_test"),
+                backend: "batched".into(),
+                shards,
+                mem_budget_mb: if shards > 1 { 1 } else { 0 },
+                ..Default::default()
+            };
+            let eng = Engine::start(cfg).unwrap();
+            let resp = eng.generate(DenoiserKind::GoldDiff, 77, None).unwrap();
+            assert!(resp.sample.iter().all(|v| v.is_finite()), "shards={shards}");
+            let j = eng.stats_json();
+            assert_eq!(
+                j.get("shards").unwrap().as_f64(),
+                Some(shards as f64),
+                "config shard count surfaces"
+            );
+            if shards > 1 {
+                let scanned = j.get("shards_scanned").unwrap().as_f64().unwrap();
+                let skipped = j.get("shards_skipped").unwrap().as_f64().unwrap();
+                assert!(
+                    scanned + skipped > 0.0,
+                    "sharded serving must record shard scans"
+                );
+            }
+            samples.push(resp.sample);
+            eng.shutdown();
+        }
+        assert_eq!(samples[0], samples[1], "shards=1 vs shards=4");
     }
 
     #[test]

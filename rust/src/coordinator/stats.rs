@@ -38,6 +38,13 @@ pub struct EngineStats {
     /// and the (query, row) evaluations the strip exits cut short
     pub blocks_reordered: u64,
     pub exit_gain_rows: u64,
+    /// configured corpus shard count (1 = monolithic backends)
+    pub shards: usize,
+    /// sharded-retrieval telemetry: (query, shard) scans executed vs
+    /// avoided, and cold-shard row-block LRU evictions
+    pub shards_scanned: u64,
+    pub shards_skipped: u64,
+    pub shard_evictions: u64,
 }
 
 impl Default for EngineStats {
@@ -64,6 +71,10 @@ impl Default for EngineStats {
             refine_rows: 0,
             blocks_reordered: 0,
             exit_gain_rows: 0,
+            shards: 1,
+            shards_scanned: 0,
+            shards_skipped: 0,
+            shard_evictions: 0,
         }
     }
 }
@@ -103,6 +114,9 @@ impl EngineStats {
         self.refine_rows = snap.refine_rows;
         self.blocks_reordered = snap.blocks_reordered;
         self.exit_gain_rows = snap.exit_gain_rows;
+        self.shards_scanned = snap.shards_scanned;
+        self.shards_skipped = snap.shards_skipped;
+        self.shard_evictions = snap.shard_evictions;
     }
 
     /// Proxy rows evaluated per full table traversal (≈ n for a batched
@@ -142,7 +156,11 @@ impl EngineStats {
             .set("kernel_exits", self.kernel_exits as usize)
             .set("refine_rows", self.refine_rows as usize)
             .set("blocks_reordered", self.blocks_reordered as usize)
-            .set("exit_gain_rows", self.exit_gain_rows as usize);
+            .set("exit_gain_rows", self.exit_gain_rows as usize)
+            .set("shards", self.shards)
+            .set("shards_scanned", self.shards_scanned as usize)
+            .set("shards_skipped", self.shards_skipped as usize)
+            .set("shard_evictions", self.shard_evictions as usize);
         j
     }
 }
@@ -164,12 +182,20 @@ mod tests {
         assert!(j.get("throughput_rps").unwrap().as_f64().unwrap() > 0.0);
         assert!(j.get("retrieval_backend").is_some());
         assert_eq!(j.get("proxy_passes").unwrap().as_f64(), Some(0.0));
+        // shard telemetry is always present (the server's `stats` op
+        // forwards this json verbatim, so operators see it without a
+        // debugger even on a monolithic engine)
+        assert_eq!(j.get("shards").unwrap().as_f64(), Some(1.0));
+        assert_eq!(j.get("shards_scanned").unwrap().as_f64(), Some(0.0));
+        assert_eq!(j.get("shards_skipped").unwrap().as_f64(), Some(0.0));
+        assert_eq!(j.get("shard_evictions").unwrap().as_f64(), Some(0.0));
     }
 
     #[test]
     fn backend_snapshot_is_reflected() {
         let mut s = EngineStats::new();
         s.backend = "cluster".into();
+        s.shards = 4;
         s.record_backend(crate::index::backend::RetrievalStats {
             proxy_passes: 4,
             queries: 12,
@@ -181,6 +207,9 @@ mod tests {
             refine_rows: 320,
             blocks_reordered: 18,
             exit_gain_rows: 224,
+            shards_scanned: 44,
+            shards_skipped: 4,
+            shard_evictions: 2,
         });
         let j = s.to_json();
         assert_eq!(j.get("clusters_pruned").unwrap().as_f64(), Some(24.0));
@@ -191,6 +220,10 @@ mod tests {
         assert_eq!(j.get("blocks_reordered").unwrap().as_f64(), Some(18.0));
         assert_eq!(j.get("exit_gain_rows").unwrap().as_f64(), Some(224.0));
         assert_eq!(j.get("rows_per_pass").unwrap().as_f64(), Some(250.0));
+        assert_eq!(j.get("shards").unwrap().as_f64(), Some(4.0));
+        assert_eq!(j.get("shards_scanned").unwrap().as_f64(), Some(44.0));
+        assert_eq!(j.get("shards_skipped").unwrap().as_f64(), Some(4.0));
+        assert_eq!(j.get("shard_evictions").unwrap().as_f64(), Some(2.0));
         assert_eq!(
             j.get("retrieval_backend").unwrap().as_str(),
             Some("cluster")

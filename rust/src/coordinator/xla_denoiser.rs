@@ -33,7 +33,7 @@ use anyhow::{Context, Result};
 use crate::data::dataset::Dataset;
 use crate::denoiser::golddiff::{blended_golden_rows_batch_warm, WarmStart};
 use crate::denoiser::{DenoiseResult, Denoiser, DenoiserKind, PosteriorStats, StepContext};
-use crate::index::backend::{FlatScan, RetrievalBackend};
+use crate::index::backend::{BackendOpts, RetrievalBackend, RetrievalBackendKind};
 use crate::runtime::{DeviceTensor, Runtime, StepOutput};
 use crate::schedule::budget::BudgetSchedule;
 
@@ -76,13 +76,18 @@ impl XlaDenoiser {
             "no golden_step artifacts for preset {} — rerun `make artifacts`",
             ds.name
         );
-        let threads = crate::util::threadpool::default_threads();
-        let backend: Arc<dyn RetrievalBackend> =
-            if crate::config::env_flag("GOLDDIFF_KERNEL", true) {
-                Arc::new(FlatScan::new(threads))
-            } else {
-                Arc::new(FlatScan::scalar(threads))
-            };
+        // env-sensitive defaults: the CI scalar leg flips GOLDDIFF_KERNEL,
+        // the sharded leg flips GOLDDIFF_SHARDS — both route every
+        // default-constructed denoiser through the matching path. The
+        // engine normally replaces this with its shared backend.
+        let kernel = crate::config::env_flag("GOLDDIFF_KERNEL", true);
+        let opts = BackendOpts {
+            kernel,
+            refine_kernel: kernel,
+            shards: crate::config::env_usize("GOLDDIFF_SHARDS", 1),
+            ..BackendOpts::default()
+        };
+        let backend: Arc<dyn RetrievalBackend> = RetrievalBackendKind::Flat.build(ds, opts);
         Ok(XlaDenoiser {
             rt,
             kind,

@@ -6,8 +6,11 @@
 pub mod cluster;
 pub mod dataset;
 pub mod gmm;
+pub mod shard;
 pub mod store;
 pub mod synthetic;
 
 pub use dataset::{Dataset, IvfPartition};
 pub use gmm::GmmSpec;
+pub use shard::{CorpusShards, ShardCacheStats, ShardPlan};
+pub use store::ShardReader;

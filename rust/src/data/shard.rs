@@ -1,0 +1,486 @@
+//! The sharded corpus layer: `CorpusShards` splits a dataset's rows, proxy
+//! table and (lazily) full-resolution row blocks into `shards` independent,
+//! contiguous shards so retrieval can scan shard-parallel and the blocked
+//! working set can be memory-bounded.
+//!
+//! * [`ShardPlan`] is the pure partition — near-equal contiguous row ranges
+//!   (the same `split_ranges` discipline the thread-sharded scans already
+//!   use), deterministic in `(n, shards)` so a store writer and a reader
+//!   always agree on shard boundaries.
+//! * Each shard owns its proxy rows as a pre-blocked kernel table
+//!   ([`ProxyBlocks`] with global row ids at harvest), plus a shard-level
+//!   centroid + covering radius (the substrate for whole-shard exact skips
+//!   in the warm-started screen) and per-class row counts (so conditional
+//!   scans skip shards with no support outright).
+//! * Full-resolution [`RowBlocks`] are built per shard on first refine use
+//!   and cached in an LRU bounded by `mem_budget` bytes: cold shards are
+//!   evicted least-recently-used and rebuilt on the next touch — from the
+//!   `.gds` store via a [`ShardReader`] when one is attached (the v3
+//!   streaming path), or by re-gathering the resident corpus otherwise.
+//!
+//! On every exact path the layer never changes *what* is computed — every
+//! consumer (`index::shard::ShardedBackend`) merges per-shard results
+//! exactly — so shard count and memory budget are pure
+//! performance/residency knobs. The one exception is the cluster
+//! backend's approximate mode (`nprobe > 0`, `is_exact() == false`),
+//! whose per-shard IVF partitions necessarily depend on the plan.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::data::dataset::Dataset;
+use crate::data::store::ShardReader;
+use crate::index::kernel::{ProxyBlocks, RowBlocks};
+use crate::util::threadpool::split_ranges;
+
+/// The pure corpus partition: near-equal contiguous row ranges.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardPlan {
+    /// total corpus rows
+    pub n: usize,
+    ranges: Vec<(usize, usize)>,
+}
+
+impl ShardPlan {
+    /// Split `n` rows into (up to) `shards` contiguous ranges. `shards`
+    /// clamps to `n` (no shard is ever empty when rows exist); `n == 0`
+    /// yields one empty shard so every consumer keeps its single-shard
+    /// shape on an empty corpus, mirroring `split_ranges`.
+    pub fn new(n: usize, shards: usize) -> ShardPlan {
+        ShardPlan {
+            n,
+            ranges: split_ranges(n, shards.max(1)),
+        }
+    }
+
+    #[inline]
+    pub fn count(&self) -> usize {
+        self.ranges.len()
+    }
+
+    /// Half-open global row range `[start, end)` of shard `i`.
+    #[inline]
+    pub fn range(&self, i: usize) -> (usize, usize) {
+        self.ranges[i]
+    }
+
+    #[inline]
+    pub fn rows_in(&self, i: usize) -> usize {
+        let (s, e) = self.ranges[i];
+        e - s
+    }
+
+    pub fn ranges(&self) -> &[(usize, usize)] {
+        &self.ranges
+    }
+
+    /// Shard owning global row `row` (ranges are contiguous ascending).
+    pub fn shard_of(&self, row: usize) -> usize {
+        debug_assert!(row < self.n.max(1));
+        self.ranges
+            .binary_search_by(|&(s, e)| {
+                if row < s {
+                    std::cmp::Ordering::Greater
+                } else if row >= e {
+                    std::cmp::Ordering::Less
+                } else {
+                    std::cmp::Ordering::Equal
+                }
+            })
+            .unwrap_or(self.ranges.len() - 1)
+    }
+}
+
+/// One shard's resident coarse-screen structures.
+#[derive(Debug)]
+pub struct ShardProxy {
+    /// the shard's proxy rows as a pre-blocked kernel table; lanes harvest
+    /// global row ids
+    pub blocks: ProxyBlocks,
+    /// mean of the shard's proxy rows
+    pub centroid: Vec<f32>,
+    /// max member→centroid Euclidean distance — `(d(q, c) − r)²` lower-
+    /// bounds every member's distance, so a full heap can skip the shard
+    pub radius: f32,
+    /// rows per class inside the shard (conditional-scan skip test)
+    pub class_counts: Vec<u32>,
+}
+
+#[derive(Debug, Default)]
+struct Lru {
+    resident: HashMap<usize, Arc<RowBlocks>>,
+    /// front = least recently used
+    order: VecDeque<usize>,
+    bytes: u64,
+}
+
+/// Snapshot of the row-block cache (telemetry).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ShardCacheStats {
+    pub shards: usize,
+    pub resident: usize,
+    pub resident_bytes: u64,
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    /// row-block builds fed from the `.gds` store (streamed path)
+    pub streamed_loads: u64,
+}
+
+/// The sharded corpus: per-shard proxy tables (resident) plus LRU-cached,
+/// optionally disk-streamed full-resolution row blocks.
+#[derive(Debug)]
+pub struct CorpusShards {
+    plan: ShardPlan,
+    proxy: Vec<ShardProxy>,
+    /// LRU budget in bytes for resident row blocks; 0 = unbounded
+    budget_bytes: u64,
+    lru: Mutex<Lru>,
+    reader: Option<Mutex<ShardReader>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+    streamed_loads: AtomicU64,
+}
+
+impl CorpusShards {
+    /// Build the shard plan + per-shard proxy structures (one pass over the
+    /// proxy table). Row blocks stay cold until [`CorpusShards::row_blocks`].
+    pub fn build(ds: &Dataset, shards: usize, mem_budget_mb: usize) -> CorpusShards {
+        let plan = ShardPlan::new(ds.n, shards);
+        let pd = ds.proxy_d;
+        let nclass = ds.classes.max(1);
+        let proxy = plan
+            .ranges()
+            .iter()
+            .map(|&(s, e)| {
+                let rows = e - s;
+                let ids: Vec<u32> = (s as u32..e as u32).collect();
+                let blocks = ProxyBlocks::build_subset(&ds.proxies, pd, &ids);
+                let mut centroid = vec![0.0f32; pd];
+                for r in s..e {
+                    for (c, &v) in centroid.iter_mut().zip(ds.proxy_row(r)) {
+                        *c += v;
+                    }
+                }
+                centroid.iter_mut().for_each(|c| *c /= rows.max(1) as f32);
+                let mut worst = 0.0f32;
+                for r in s..e {
+                    let d2: f32 = ds
+                        .proxy_row(r)
+                        .iter()
+                        .zip(&centroid)
+                        .map(|(a, b)| (a - b) * (a - b))
+                        .sum();
+                    worst = worst.max(d2);
+                }
+                let mut class_counts = vec![0u32; nclass];
+                for r in s..e {
+                    class_counts[ds.labels[r] as usize] += 1;
+                }
+                ShardProxy {
+                    blocks,
+                    centroid,
+                    radius: worst.sqrt(),
+                    class_counts,
+                }
+            })
+            .collect();
+        CorpusShards {
+            plan,
+            proxy,
+            budget_bytes: mem_budget_mb as u64 * 1024 * 1024,
+            lru: Mutex::new(Lru::default()),
+            reader: None,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            streamed_loads: AtomicU64::new(0),
+        }
+    }
+
+    /// Attach a `.gds` shard reader: evicted shards rebuild their row
+    /// blocks from the store file instead of the resident corpus.
+    pub fn with_reader(mut self, reader: ShardReader) -> Self {
+        self.reader = Some(Mutex::new(reader));
+        self
+    }
+
+    #[inline]
+    pub fn plan(&self) -> &ShardPlan {
+        &self.plan
+    }
+
+    #[inline]
+    pub fn proxy(&self, shard: usize) -> &ShardProxy {
+        &self.proxy[shard]
+    }
+
+    /// Is the streamed (disk-backed) rebuild path attached?
+    pub fn is_streamed(&self) -> bool {
+        self.reader.is_some()
+    }
+
+    /// The shard's full-resolution row blocks: LRU-cached, built on first
+    /// touch (streamed from the store when a reader is attached, gathered
+    /// from the resident corpus otherwise) and evicted least-recently-used
+    /// once resident bytes exceed the budget.
+    pub fn row_blocks(&self, shard: usize, ds: &Dataset) -> Arc<RowBlocks> {
+        if let Some(rb) = self.touch(shard) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return rb;
+        }
+        // build OUTSIDE the lock so shard-parallel refines construct cold
+        // shards concurrently instead of convoying on the cache mutex; a
+        // racing builder may duplicate the (deterministic) work, in which
+        // case the first insert wins and the duplicate is dropped
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let built = Arc::new(self.build_row_blocks(shard, ds));
+        let mut lru = self.lru.lock().unwrap();
+        if let Some(rb) = lru.resident.get(&shard) {
+            return Arc::clone(rb); // lost the race — byte-identical copy
+        }
+        lru.bytes += built.bytes();
+        lru.resident.insert(shard, Arc::clone(&built));
+        lru.order.push_back(shard);
+        if self.budget_bytes > 0 {
+            // keep at least the shard just requested resident — a budget
+            // smaller than one shard must not thrash the current user
+            while lru.bytes > self.budget_bytes && lru.order.len() > 1 {
+                let victim = lru.order.pop_front().unwrap();
+                if victim == shard {
+                    lru.order.push_back(victim);
+                    continue;
+                }
+                if let Some(old) = lru.resident.remove(&victim) {
+                    lru.bytes -= old.bytes();
+                    self.evictions.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+        built
+    }
+
+    /// Cache lookup: on a hit, move the shard to the MRU position.
+    fn touch(&self, shard: usize) -> Option<Arc<RowBlocks>> {
+        let mut lru = self.lru.lock().unwrap();
+        let rb = Arc::clone(lru.resident.get(&shard)?);
+        if let Some(pos) = lru.order.iter().position(|&x| x == shard) {
+            lru.order.remove(pos);
+        }
+        lru.order.push_back(shard);
+        Some(rb)
+    }
+
+    fn build_row_blocks(&self, shard: usize, ds: &Dataset) -> RowBlocks {
+        let (s, e) = self.plan.range(shard);
+        let ids: Vec<u32> = (s as u32..e as u32).collect();
+        if let Some(reader) = &self.reader {
+            // best-effort streaming: a read failure falls back to the
+            // resident corpus (always available) rather than erroring the
+            // retrieval path
+            if let Ok(table) = reader.lock().unwrap().read_shard_rows(shard) {
+                if table.len() == ids.len() * ds.d {
+                    self.streamed_loads.fetch_add(1, Ordering::Relaxed);
+                    return RowBlocks::build_local(&table, ds.d, ids);
+                }
+            }
+        }
+        RowBlocks::build_subset(&ds.data, ds.d, &ids)
+    }
+
+    pub fn cache_stats(&self) -> ShardCacheStats {
+        let lru = self.lru.lock().unwrap();
+        ShardCacheStats {
+            shards: self.plan.count(),
+            resident: lru.resident.len(),
+            resident_bytes: lru.bytes,
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            streamed_loads: self.streamed_loads.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Zero the monotonic cache counters (bench harness hook); resident
+    /// blocks stay resident.
+    pub fn reset_counters(&self) {
+        self.hits.store(0, Ordering::Relaxed);
+        self.misses.store(0, Ordering::Relaxed);
+        self.evictions.store(0, Ordering::Relaxed);
+        self.streamed_loads.store(0, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::store;
+    use crate::data::synthetic::preset;
+    use crate::index::kernel::BLOCK_ROWS;
+    use crate::util::prop::{forall, gen};
+
+    fn tiny(n: usize, seed: u64) -> Dataset {
+        let mut spec = preset("cifar-sim").unwrap().clone();
+        spec.n = n;
+        Dataset::synthesize(&spec, seed)
+    }
+
+    #[test]
+    fn plan_degenerate_splits() {
+        // Satellite: n < shards clamps to n single-row shards; n == 0
+        // yields exactly one empty shard; shards == 0 behaves like 1.
+        let p = ShardPlan::new(3, 16);
+        assert_eq!(p.count(), 3);
+        assert_eq!(p.ranges(), &[(0, 1), (1, 2), (2, 3)]);
+        let empty = ShardPlan::new(0, 4);
+        assert_eq!(empty.count(), 1);
+        assert_eq!(empty.range(0), (0, 0));
+        assert_eq!(empty.rows_in(0), 0);
+        assert_eq!(ShardPlan::new(5, 0).count(), 1);
+        let single = ShardPlan::new(1, 7);
+        assert_eq!(single.count(), 1);
+        assert_eq!(single.range(0), (0, 1));
+    }
+
+    #[test]
+    fn plan_partitions_exactly_and_shard_of_agrees() {
+        forall(41, 40, |rng| {
+            let n = gen::usize_in(rng, 1, 500);
+            let shards = gen::usize_in(rng, 1, 20);
+            let p = ShardPlan::new(n, shards);
+            let total: usize = p.ranges().iter().map(|(s, e)| e - s).sum();
+            crate::prop_assert!(total == n, "partition covers all rows");
+            crate::prop_assert!(p.count() == shards.min(n), "count clamps");
+            for i in 0..p.count() {
+                let (s, e) = p.range(i);
+                crate::prop_assert!(s < e, "no empty shard when n > 0");
+                for row in [s, e - 1] {
+                    crate::prop_assert!(p.shard_of(row) == i, "shard_of({row}) != {i}");
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn shard_proxies_mirror_the_table_with_global_ids() {
+        let ds = tiny(130, 3);
+        let cs = CorpusShards::build(&ds, 4, 0);
+        assert_eq!(cs.plan().count(), 4);
+        let mut seen = 0usize;
+        for sh in 0..cs.plan().count() {
+            let (s, e) = cs.plan().range(sh);
+            let sp = cs.proxy(sh);
+            assert_eq!(sp.blocks.rows, e - s);
+            for local in 0..(e - s) {
+                let gid = s + local;
+                let (b, lane) = (local / BLOCK_ROWS, local % BLOCK_ROWS);
+                assert_eq!(sp.blocks.id(b, lane), gid as u32);
+                for j in 0..ds.proxy_d {
+                    assert_eq!(
+                        sp.blocks.block(b)[j * BLOCK_ROWS + lane],
+                        ds.proxy_row(gid)[j],
+                        "shard {sh} row {gid} dim {j}"
+                    );
+                }
+                seen += 1;
+            }
+            // covering radius actually covers every member
+            for r in s..e {
+                let d2: f32 = ds
+                    .proxy_row(r)
+                    .iter()
+                    .zip(&sp.centroid)
+                    .map(|(a, b)| (a - b) * (a - b))
+                    .sum();
+                assert!(d2.sqrt() <= sp.radius + 1e-4, "shard {sh} row {r}");
+            }
+            assert_eq!(
+                sp.class_counts.iter().sum::<u32>() as usize,
+                e - s,
+                "class counts partition the shard"
+            );
+        }
+        assert_eq!(seen, ds.n);
+    }
+
+    #[test]
+    fn row_blocks_match_corpus_and_cache_hits() {
+        let ds = tiny(100, 5);
+        let cs = CorpusShards::build(&ds, 3, 0);
+        for sh in 0..3 {
+            let rb = cs.row_blocks(sh, &ds);
+            let (s, e) = cs.plan().range(sh);
+            assert_eq!(rb.rows, e - s);
+            for local in 0..(e - s) {
+                let gid = s + local;
+                let (b, lane) = (local / BLOCK_ROWS, local % BLOCK_ROWS);
+                assert_eq!(rb.id(b, lane), gid as u32);
+                for j in (0..ds.d).step_by(13) {
+                    assert_eq!(rb.block(b)[j * BLOCK_ROWS + lane], ds.row(gid)[j]);
+                }
+            }
+            // second touch is a hit on the same resident copy
+            let again = cs.row_blocks(sh, &ds);
+            assert!(Arc::ptr_eq(&rb, &again));
+        }
+        let st = cs.cache_stats();
+        assert_eq!(st.misses, 3);
+        assert_eq!(st.hits, 3);
+        assert_eq!(st.evictions, 0, "unbounded budget never evicts");
+        assert_eq!(st.resident, 3);
+    }
+
+    #[test]
+    fn lru_evicts_cold_shards_under_budget_and_rebuilds_identically() {
+        let ds = tiny(200, 7);
+        // budget of ~1 shard: every new shard touch evicts the coldest
+        let shard_bytes = {
+            let probe = CorpusShards::build(&ds, 4, 0);
+            probe.row_blocks(0, &ds).bytes()
+        };
+        let budget_mb = (shard_bytes as usize).div_ceil(1024 * 1024); // ≥ 1 shard
+        let cs = CorpusShards::build(&ds, 4, budget_mb.max(1));
+        let first = cs.row_blocks(0, &ds);
+        let b0 = first.block(0).to_vec();
+        for sh in 0..4 {
+            let _ = cs.row_blocks(sh, &ds);
+        }
+        let st = cs.cache_stats();
+        assert!(st.evictions > 0, "tiny budget must evict cold shards");
+        assert!(
+            st.resident < 4,
+            "resident set stays bounded: {} shards",
+            st.resident
+        );
+        // an evicted shard rebuilds byte-identically
+        let rebuilt = cs.row_blocks(0, &ds);
+        assert_eq!(rebuilt.block(0), b0.as_slice());
+        assert!(cs.cache_stats().misses > 4, "rebuild counts as a miss");
+    }
+
+    #[test]
+    fn streamed_row_blocks_equal_resident_builds() {
+        let ds = tiny(90, 11);
+        let dir = std::env::temp_dir().join("golddiff_shard_stream_test");
+        std::fs::remove_dir_all(&dir).ok();
+        let path = store::store_path(&dir, "cifar-sim");
+        store::save_sharded(&ds, &path, 3).unwrap();
+        let reader = store::ShardReader::open(&path, 3).unwrap();
+        let streamed = CorpusShards::build(&ds, 3, 0).with_reader(reader);
+        let resident = CorpusShards::build(&ds, 3, 0);
+        assert!(streamed.is_streamed() && !resident.is_streamed());
+        for sh in 0..3 {
+            let a = streamed.row_blocks(sh, &ds);
+            let b = resident.row_blocks(sh, &ds);
+            assert_eq!(a.rows, b.rows, "shard {sh}");
+            for blk in 0..a.n_blocks() {
+                assert_eq!(a.block(blk), b.block(blk), "shard {sh} block {blk}");
+            }
+        }
+        assert_eq!(streamed.cache_stats().streamed_loads, 3);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -27,9 +27,9 @@ use super::softmax::{ss_aggregate, PosteriorStats};
 use super::{descale, sqdist, DenoiseResult, Denoiser, StepContext};
 use crate::data::dataset::Dataset;
 use crate::data::synthetic::proxy_embed;
-use crate::index::backend::{FlatScan, ProxyQuery, RetrievalBackend};
-use crate::index::scan::{sqdist_early_exit, sqdist_flat};
-use crate::index::topk::BoundedMaxHeap;
+use crate::index::backend::{
+    BackendOpts, ProxyQuery, RetrievalBackend, RetrievalBackendKind,
+};
 use crate::schedule::budget::BudgetSchedule;
 use crate::schedule::noise::NoiseSchedule;
 
@@ -228,10 +228,11 @@ impl WarmStart {
 }
 
 /// The seeded exact screen: per query, fill the top-m heap from the seed
-/// rows, then sweep the proxy blocks nearest-centroid-first, skipping every
-/// block whose exact lower bound `(d(q, c_b) − r_b)²` already exceeds the
-/// heap's worst retained distance. Queries whose eligible seeds cannot fill
-/// the heap are batched through the backend's cold screen instead.
+/// rows, then run the backend's [`RetrievalBackend::warm_top_m`] sweep —
+/// the global nearest-block sweep by default, or the shard-local sweep
+/// (with whole-shard bound skips) over a sharded backend. Queries whose
+/// eligible seeds cannot fill the heap are batched through the backend's
+/// cold screen instead.
 fn warm_top_m_batch(
     backend: &dyn RetrievalBackend,
     ds: &Dataset,
@@ -244,7 +245,7 @@ fn warm_top_m_batch(
     let mut out: Vec<Option<Vec<u32>>> = proxies
         .iter()
         .zip(ctxs)
-        .map(|(qp, ctx)| warm_screen_query(ds, qp, ctx.class, m, seeds))
+        .map(|(qp, ctx)| backend.warm_top_m(ds, qp, ctx.class, m, seeds))
         .collect();
     let cold_idx: Vec<usize> = (0..out.len()).filter(|&i| out[i].is_none()).collect();
     if !cold_idx.is_empty() {
@@ -265,70 +266,6 @@ fn warm_top_m_batch(
         w.hits += (out.len() - cold_idx.len()) as u64;
     }
     out.into_iter().map(|rows| rows.unwrap_or_default()).collect()
-}
-
-/// One seeded screen. Returns `None` when the class-eligible seeds cannot
-/// fill the heap (the sufficiency precondition for the bound to engage).
-fn warm_screen_query(
-    ds: &Dataset,
-    qp: &[f32],
-    class: Option<u32>,
-    m: usize,
-    seeds: &[u32],
-) -> Option<Vec<u32>> {
-    let cap = m.max(1).min(ds.n.max(1));
-    let mut heap = BoundedMaxHeap::new(cap);
-    let mut eligible = 0usize;
-    for &gid in seeds {
-        if let Some(y) = class {
-            if ds.labels[gid as usize] != y {
-                continue;
-            }
-        }
-        eligible += 1;
-        heap.push(sqdist_flat(qp, ds.proxy_row(gid as usize)), gid);
-    }
-    if eligible < cap {
-        return None;
-    }
-
-    // nearest-centroid-first sweep: the bound is checked against the
-    // heap's *current* worst, which only tightens as near blocks land
-    // (distances are computed once and reused for both the order and
-    // the bound; ties break by block id, like `kernel::block_order`)
-    let pb = &ds.proxy_blocks;
-    let mut order: Vec<(f32, u32)> = (0..pb.n_blocks())
-        .map(|b| {
-            let c = pb.centroid(b);
-            let d2: f32 = c.iter().zip(qp).map(|(a, b)| (a - b) * (a - b)).sum();
-            (d2, b as u32)
-        })
-        .collect();
-    order.sort_unstable_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
-    for &(d2, b) in &order {
-        let b = b as usize;
-        let lb = (d2.sqrt() - pb.radius(b)).max(0.0);
-        if lb * lb >= heap.worst() {
-            // every member row is provably ≥ the worst retained distance
-            continue;
-        }
-        for lane in 0..pb.rows_in(b) {
-            let gid = pb.id(b, lane);
-            if seeds.binary_search(&gid).is_ok() {
-                continue; // already scored in the seed pass
-            }
-            if let Some(y) = class {
-                if ds.labels[gid as usize] != y {
-                    continue;
-                }
-            }
-            let d = sqdist_early_exit(qp, ds.proxy_row(gid as usize), heap.worst());
-            if d.is_finite() {
-                heap.push(d, gid);
-            }
-        }
-    }
-    Some(heap.into_sorted().into_iter().map(|(_, i)| i).collect())
 }
 
 /// Stratified breadth fill over the (class-restricted) support.
@@ -431,15 +368,17 @@ impl GoldDiff {
             BaseWeighting::Kamb => Some(KambDenoiser::new(ds)),
             _ => None,
         };
-        let threads = crate::util::threadpool::default_threads();
         // the GOLDDIFF_KERNEL env leg (CI scalar matrix) flips the default
-        // backend to the row-major reference paths
-        let backend: Arc<dyn RetrievalBackend> =
-            if crate::config::env_flag("GOLDDIFF_KERNEL", true) {
-                Arc::new(FlatScan::new(threads))
-            } else {
-                Arc::new(FlatScan::scalar(threads))
-            };
+        // backend to the row-major reference paths; GOLDDIFF_SHARDS routes
+        // it through the shard-parallel merge layer (tier1-sharded leg)
+        let kernel = crate::config::env_flag("GOLDDIFF_KERNEL", true);
+        let opts = BackendOpts {
+            kernel,
+            refine_kernel: kernel,
+            shards: crate::config::env_usize("GOLDDIFF_SHARDS", 1),
+            ..BackendOpts::default()
+        };
+        let backend: Arc<dyn RetrievalBackend> = RetrievalBackendKind::Flat.build(ds, opts);
         GoldDiff {
             base,
             budget,
@@ -568,7 +507,7 @@ impl Denoiser for GoldDiff {
 mod tests {
     use super::*;
     use crate::data::synthetic::preset;
-    use crate::index::backend::BatchedScan;
+    use crate::index::backend::{BatchedScan, FlatScan};
     use crate::schedule::noise::ScheduleKind;
 
     fn setup() -> (Dataset, NoiseSchedule) {

@@ -90,24 +90,35 @@ pub struct RetrievalStats {
     /// (query, row) distance evaluations the strip exits cut short — the
     /// work the ordering exists to grow
     pub exit_gain_rows: u64,
+    /// (query, shard) coarse scans executed (sharded backend only; for a
+    /// cold sharded screen `shards_scanned + shards_skipped` equals
+    /// `queries × shard count`)
+    pub shards_scanned: u64,
+    /// (query, shard) scans avoided outright — class-absent shards and
+    /// whole shards cleared by the warm-start centroid bound
+    pub shards_skipped: u64,
+    /// cold-shard `RowBlocks` evicted by the corpus LRU under `mem_budget`
+    pub shard_evictions: u64,
 }
 
 #[derive(Debug, Default)]
-struct Counters {
-    proxy_passes: AtomicU64,
-    queries: AtomicU64,
-    rows_scanned: AtomicU64,
-    clusters_scanned: AtomicU64,
-    clusters_pruned: AtomicU64,
-    tiles_evaluated: AtomicU64,
-    kernel_exits: AtomicU64,
-    refine_rows: AtomicU64,
-    blocks_reordered: AtomicU64,
-    exit_gain_rows: AtomicU64,
+pub(crate) struct Counters {
+    pub(crate) proxy_passes: AtomicU64,
+    pub(crate) queries: AtomicU64,
+    pub(crate) rows_scanned: AtomicU64,
+    pub(crate) clusters_scanned: AtomicU64,
+    pub(crate) clusters_pruned: AtomicU64,
+    pub(crate) tiles_evaluated: AtomicU64,
+    pub(crate) kernel_exits: AtomicU64,
+    pub(crate) refine_rows: AtomicU64,
+    pub(crate) blocks_reordered: AtomicU64,
+    pub(crate) exit_gain_rows: AtomicU64,
+    pub(crate) shards_scanned: AtomicU64,
+    pub(crate) shards_skipped: AtomicU64,
 }
 
 impl Counters {
-    fn snapshot(&self) -> RetrievalStats {
+    pub(crate) fn snapshot(&self) -> RetrievalStats {
         RetrievalStats {
             proxy_passes: self.proxy_passes.load(Ordering::Relaxed),
             queries: self.queries.load(Ordering::Relaxed),
@@ -119,10 +130,13 @@ impl Counters {
             refine_rows: self.refine_rows.load(Ordering::Relaxed),
             blocks_reordered: self.blocks_reordered.load(Ordering::Relaxed),
             exit_gain_rows: self.exit_gain_rows.load(Ordering::Relaxed),
+            shards_scanned: self.shards_scanned.load(Ordering::Relaxed),
+            shards_skipped: self.shards_skipped.load(Ordering::Relaxed),
+            shard_evictions: 0,
         }
     }
 
-    fn record_kernel(&self, st: &KernelStats) {
+    pub(crate) fn record_kernel(&self, st: &KernelStats) {
         self.rows_scanned.fetch_add(st.rows, Ordering::Relaxed);
         self.tiles_evaluated.fetch_add(st.tiles, Ordering::Relaxed);
         self.kernel_exits.fetch_add(st.strip_exits, Ordering::Relaxed);
@@ -131,7 +145,7 @@ impl Counters {
 
     /// Record a kernel refine-ladder pass: `refine_rows` keeps its distinct
     /// full-resolution row semantics; `rows_scanned` stays proxy-only.
-    fn record_refine(&self, rows: u64, st: &KernelStats) {
+    pub(crate) fn record_refine(&self, rows: u64, st: &KernelStats) {
         self.refine_rows.fetch_add(rows, Ordering::Relaxed);
         self.tiles_evaluated.fetch_add(st.tiles, Ordering::Relaxed);
         self.kernel_exits.fetch_add(st.strip_exits, Ordering::Relaxed);
@@ -139,16 +153,12 @@ impl Counters {
     }
 
     /// Record a heap-aware visit order: blocks whose visit position moved.
-    fn record_order(&self, order: &[u32]) {
-        let moved = order
-            .iter()
-            .enumerate()
-            .filter(|&(i, &b)| i as u32 != b)
-            .count() as u64;
-        self.blocks_reordered.fetch_add(moved, Ordering::Relaxed);
+    pub(crate) fn record_order(&self, order: &[u32]) {
+        self.blocks_reordered
+            .fetch_add(moved_blocks(order), Ordering::Relaxed);
     }
 
-    fn reset(&self) {
+    pub(crate) fn reset(&self) {
         self.proxy_passes.store(0, Ordering::Relaxed);
         self.queries.store(0, Ordering::Relaxed);
         self.rows_scanned.store(0, Ordering::Relaxed);
@@ -159,6 +169,8 @@ impl Counters {
         self.refine_rows.store(0, Ordering::Relaxed);
         self.blocks_reordered.store(0, Ordering::Relaxed);
         self.exit_gain_rows.store(0, Ordering::Relaxed);
+        self.shards_scanned.store(0, Ordering::Relaxed);
+        self.shards_skipped.store(0, Ordering::Relaxed);
     }
 }
 
@@ -224,11 +236,144 @@ pub trait RetrievalBackend: Send + Sync {
             .collect()
     }
 
+    /// The seeded exact coarse screen (concentration warm-start): fill a
+    /// top-m heap from `seeds` (sorted distinct row ids), then sweep the
+    /// proxy blocks nearest-centroid-first, skipping every block whose
+    /// exact lower bound `(d(q, c_b) − r_b)²` already exceeds the heap's
+    /// worst retained distance. Returns `None` when the class-eligible
+    /// seeds cannot fill the heap (the sufficiency precondition for the
+    /// bound to engage) — callers fall back to the cold screen.
+    ///
+    /// Only sound over backends whose own screen is exact
+    /// ([`RetrievalBackend::is_exact`]); callers gate on that. The default
+    /// sweeps the dataset's global [`ProxyBlocks`]; the sharded backend
+    /// overrides it with a shard-local sweep that skips whole shards via
+    /// per-shard centroid bounds.
+    fn warm_top_m(
+        &self,
+        ds: &Dataset,
+        query_proxy: &[f32],
+        class: Option<u32>,
+        m: usize,
+        seeds: &[u32],
+    ) -> Option<Vec<u32>> {
+        warm_screen_global(ds, query_proxy, class, m, seeds)
+    }
+
     /// Cumulative telemetry since construction (or the last reset).
     fn stats(&self) -> RetrievalStats;
 
     /// Zero the telemetry counters (bench harness hook).
     fn reset_stats(&self);
+}
+
+// ---------------------------------------------------------------------------
+// Warm-start screen (shared by the default backends; `index::shard` overrides
+// with the shard-local sweep)
+// ---------------------------------------------------------------------------
+
+/// Blocks whose visit position moved under a heap-aware order — the one
+/// definition of the `blocks_reordered` metric shared by the monolithic
+/// and sharded backends.
+pub(crate) fn moved_blocks(order: &[u32]) -> u64 {
+    order
+        .iter()
+        .enumerate()
+        .filter(|&(i, &b)| i as u32 != b)
+        .count() as u64
+}
+
+/// The seed pass of a warm screen: score every class-eligible seed row into
+/// a fresh heap of capacity `cap`. Returns `None` when the eligible seeds
+/// cannot fill the heap — the bound below would never engage, so the caller
+/// should run the cold screen instead.
+pub(crate) fn warm_seed_heap(
+    ds: &Dataset,
+    qp: &[f32],
+    class: Option<u32>,
+    cap: usize,
+    seeds: &[u32],
+) -> Option<BoundedMaxHeap> {
+    let mut heap = BoundedMaxHeap::new(cap);
+    let mut eligible = 0usize;
+    for &gid in seeds {
+        if let Some(y) = class {
+            if ds.labels[gid as usize] != y {
+                continue;
+            }
+        }
+        eligible += 1;
+        heap.push(
+            super::scan::sqdist_flat(qp, ds.proxy_row(gid as usize)),
+            gid,
+        );
+    }
+    (eligible >= cap).then_some(heap)
+}
+
+/// The block sweep of a seeded screen: visit `pb`'s blocks in ascending
+/// centroid distance to the query (ties by block id, like
+/// [`kernel::block_order`]), skip every block whose exact lower bound
+/// `(d(q, c_b) − r_b)²` clears the heap's *current* worst — which only
+/// tightens as near blocks land — and score surviving rows (seed rows
+/// skipped, classes filtered). One definition of the sweep, shared by the
+/// global warm screen and the sharded backend's per-shard sweeps so the
+/// two can never silently diverge.
+pub(crate) fn warm_sweep_blocks(
+    ds: &Dataset,
+    pb: &ProxyBlocks,
+    qp: &[f32],
+    class: Option<u32>,
+    seeds: &[u32],
+    heap: &mut BoundedMaxHeap,
+) {
+    let mut order: Vec<(f32, u32)> = (0..pb.n_blocks())
+        .map(|b| {
+            let c = pb.centroid(b);
+            let d2: f32 = c.iter().zip(qp).map(|(a, b)| (a - b) * (a - b)).sum();
+            (d2, b as u32)
+        })
+        .collect();
+    order.sort_unstable_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+    for &(d2, b) in &order {
+        let b = b as usize;
+        let lb = (d2.sqrt() - pb.radius(b)).max(0.0);
+        if lb * lb >= heap.worst() {
+            // every member row is provably ≥ the worst retained distance
+            continue;
+        }
+        for lane in 0..pb.rows_in(b) {
+            let gid = pb.id(b, lane);
+            if seeds.binary_search(&gid).is_ok() {
+                continue; // already scored in the seed pass
+            }
+            if let Some(y) = class {
+                if ds.labels[gid as usize] != y {
+                    continue;
+                }
+            }
+            let d = super::scan::sqdist_early_exit(qp, ds.proxy_row(gid as usize), heap.worst());
+            if d.is_finite() {
+                heap.push(d, gid);
+            }
+        }
+    }
+}
+
+/// One seeded screen over the dataset's global proxy blocks (the
+/// [`RetrievalBackend::warm_top_m`] default). Returns `None` when the
+/// class-eligible seeds cannot fill the heap.
+pub fn warm_screen_global(
+    ds: &Dataset,
+    qp: &[f32],
+    class: Option<u32>,
+    m: usize,
+    seeds: &[u32],
+) -> Option<Vec<u32>> {
+    let cap = m.max(1).min(ds.n.max(1));
+    let mut heap = warm_seed_heap(ds, qp, class, cap, seeds)?;
+    warm_sweep_blocks(ds, &ds.proxy_blocks, qp, class, seeds, &mut heap);
+    Some(heap.into_sorted().into_iter().map(|(_, i)| i).collect())
 }
 
 /// Exact top-k of ||q − x_i||² over `cands`, sorted ascending — the
@@ -290,7 +435,7 @@ pub fn batched_refine(
 /// Elementwise mean of a query group — the anchor heap-aware ordering
 /// ranks blocks against (tick-group queries share a sampling point, so
 /// their mean tracks the shared neighbourhood).
-fn group_mean(qs: &[&[f32]], dim: usize) -> Vec<f32> {
+pub(crate) fn group_mean(qs: &[&[f32]], dim: usize) -> Vec<f32> {
     let mut mean = vec![0.0f32; dim];
     for q in qs {
         for (m, &v) in mean.iter_mut().zip(*q) {
@@ -357,7 +502,7 @@ fn batched_refine_group(
 }
 
 /// Per-query heap caps for a refine group — the per-query refine's clamp.
-fn refine_caps(pools: &[&[u32]], k: usize) -> Vec<usize> {
+pub(crate) fn refine_caps(pools: &[&[u32]], k: usize) -> Vec<usize> {
     pools.iter().map(|p| k.max(1).min(p.len().max(1))).collect()
 }
 
@@ -1203,6 +1348,13 @@ pub struct BackendOpts {
     pub ordering: bool,
     /// queries per register tile, clamped to 1..=[`kernel::TILE_Q`]
     pub tile_q: usize,
+    /// corpus shards: `> 1` wraps the selected backend kind in the
+    /// shard-parallel merge layer (`index::shard::ShardedBackend`); `1`
+    /// (default) keeps the monolithic backends byte-for-byte as before
+    pub shards: usize,
+    /// memory budget (MiB) for resident cold-shard `RowBlocks`; `0` means
+    /// unbounded (no LRU eviction). Only meaningful when `shards > 1`.
+    pub mem_budget_mb: usize,
 }
 
 impl Default for BackendOpts {
@@ -1216,6 +1368,8 @@ impl Default for BackendOpts {
             refine_kernel: true,
             ordering: true,
             tile_q: kernel::TILE_Q,
+            shards: 1,
+            mem_budget_mb: 0,
         }
     }
 }
@@ -1255,8 +1409,27 @@ impl RetrievalBackendKind {
     }
 
     /// Build a shareable backend for a dataset. `opts.clusters`/`opts.nprobe`
-    /// only apply to the cluster-pruned backend.
+    /// only apply to the cluster-pruned backend. With `opts.shards > 1` the
+    /// kind is wrapped in the shard-parallel merge layer.
     pub fn build(&self, ds: &Dataset, opts: BackendOpts) -> Arc<dyn RetrievalBackend> {
+        self.build_with_store(ds, opts, None)
+    }
+
+    /// [`RetrievalBackendKind::build`] with an optional `.gds` store path:
+    /// a sharded backend under a `mem_budget` streams evicted shards' row
+    /// blocks back from the store instead of re-gathering the resident
+    /// corpus (best-effort — an unopenable store falls back to resident).
+    pub fn build_with_store(
+        &self,
+        ds: &Dataset,
+        opts: BackendOpts,
+        store: Option<&std::path::Path>,
+    ) -> Arc<dyn RetrievalBackend> {
+        if opts.shards > 1 {
+            return Arc::new(crate::index::shard::ShardedBackend::build(
+                ds, *self, opts, store,
+            ));
+        }
         // the scalar reference disables every kernel-path refinement
         let refine = opts.kernel && opts.refine_kernel;
         match self {

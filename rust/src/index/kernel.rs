@@ -99,22 +99,37 @@ impl ProxyBlocks {
     /// Block the whole `rows × dim` table with identity row ids.
     pub fn build(table: &[f32], rows: usize, dim: usize) -> ProxyBlocks {
         assert_eq!(table.len(), rows * dim);
-        Self::build_inner(table, dim, rows, None)
+        Self::build_inner(table, dim, rows, None, false)
     }
 
     /// Block a row subset (e.g. an IVF member list); lane `l` of the result
     /// holds `table` row `ids[l]` and harvests as global id `ids[l]`.
     pub fn build_subset(table: &[f32], dim: usize, ids: &[u32]) -> ProxyBlocks {
-        Self::build_inner(table, dim, ids.len(), Some(ids.to_vec()))
+        Self::build_inner(table, dim, ids.len(), Some(ids.to_vec()), true)
     }
 
-    fn build_inner(table: &[f32], dim: usize, rows: usize, ids: Option<Vec<u32>>) -> ProxyBlocks {
+    /// Block a *local* `ids.len() × dim` table whose lane `l` harvests as
+    /// global id `ids[l]` — the layout a streamed corpus shard builds from
+    /// rows read off disk: the table holds exactly the shard's rows in
+    /// shard order, but results must carry global row ids.
+    pub fn build_local(table: &[f32], dim: usize, ids: Vec<u32>) -> ProxyBlocks {
+        assert_eq!(table.len(), ids.len() * dim);
+        Self::build_inner(table, dim, ids.len(), Some(ids), false)
+    }
+
+    fn build_inner(
+        table: &[f32],
+        dim: usize,
+        rows: usize,
+        ids: Option<Vec<u32>>,
+        gather_by_ids: bool,
+    ) -> ProxyBlocks {
         let nb = rows.div_ceil(BLOCK_ROWS);
         let mut data = vec![0.0f32; nb * dim * BLOCK_ROWS];
         for r in 0..rows {
             let src_row = match &ids {
-                Some(map) => map[r] as usize,
-                None => r,
+                Some(map) if gather_by_ids => map[r] as usize,
+                _ => r,
             };
             let src = &table[src_row * dim..(src_row + 1) * dim];
             let base = (r / BLOCK_ROWS) * dim * BLOCK_ROWS + (r % BLOCK_ROWS);
@@ -479,7 +494,12 @@ pub fn build_refine_plan(rows: &[(u32, u8)]) -> Vec<MaskedBlock> {
 /// early-exit bounds each query against the minimum partial sum over *its
 /// member lanes only* (non-member lanes can never enter that query's heap,
 /// so excluding them keeps the bound tight and the retirement provable).
-/// `blocks` must be the identity-id layout (`Dataset::row_blocks`).
+///
+/// The plan's row values are *positions* in `blocks` (`pos / BLOCK_ROWS`,
+/// `pos % BLOCK_ROWS`); harvested ids come from `blocks.id(..)`. For the
+/// identity layout (`Dataset::row_blocks`) positions are global row ids;
+/// a corpus shard passes shard-local positions and its id map translates
+/// them back to global ids at harvest.
 pub fn refine_scan_masked(
     blocks: &RowBlocks,
     queries: &[&[f32]],
@@ -709,6 +729,32 @@ mod tests {
         dists.sort_by(|a, b| a.0.total_cmp(&b.0));
         let want: Vec<u32> = dists.into_iter().take(5).map(|(_, i)| i).collect();
         assert_eq!(got[0], want);
+    }
+
+    #[test]
+    fn local_blocks_match_subset_blocks() {
+        // a shard's streamed build (local table + global id map) must be
+        // byte-identical to the resident gather over the full table
+        let mut rng = Pcg64::new(17);
+        let (rows, dim) = (77usize, 12usize);
+        let table = random_table(&mut rng, rows, dim);
+        let ids: Vec<u32> = (20u32..53).collect(); // a contiguous shard range
+        let local: Vec<f32> = ids
+            .iter()
+            .flat_map(|&gid| table[gid as usize * dim..(gid as usize + 1) * dim].to_vec())
+            .collect();
+        let a = ProxyBlocks::build_subset(&table, dim, &ids);
+        let b = ProxyBlocks::build_local(&local, dim, ids.clone());
+        assert_eq!(a.rows, b.rows);
+        assert_eq!(a.n_blocks(), b.n_blocks());
+        for blk in 0..a.n_blocks() {
+            assert_eq!(a.block(blk), b.block(blk), "block {blk}");
+            assert_eq!(a.centroid(blk), b.centroid(blk));
+            assert_eq!(a.radius(blk), b.radius(blk));
+            for lane in 0..a.rows_in(blk) {
+                assert_eq!(a.id(blk, lane), b.id(blk, lane));
+            }
+        }
     }
 
     #[test]

@@ -16,13 +16,15 @@
 pub mod backend;
 pub mod kernel;
 pub mod scan;
+pub mod shard;
 pub mod topk;
 
 pub use backend::{
-    batched_refine, batched_refine_kernel, exact_refine, exact_refine_kernel, BackendOpts,
-    BatchedScan, ClusterPruned, FlatScan, ProxyQuery, RetrievalBackend, RetrievalBackendKind,
-    RetrievalStats,
+    batched_refine, batched_refine_kernel, exact_refine, exact_refine_kernel, warm_screen_global,
+    BackendOpts, BatchedScan, ClusterPruned, FlatScan, ProxyQuery, RetrievalBackend,
+    RetrievalBackendKind, RetrievalStats,
 };
+pub use shard::ShardedBackend;
 pub use kernel::{
     block_order, KernelScan, KernelStats, ProxyBlocks, RowBlocks, BLOCK_ROWS, TILE_Q,
 };

@@ -1,0 +1,1045 @@
+//! Shard-parallel retrieval with exact heap merges — the index layer over
+//! [`CorpusShards`].
+//!
+//! [`ShardedBackend`] wraps any [`RetrievalBackendKind`] and runs its
+//! coarse screen **per shard** on the scoped worker pool: each shard scans
+//! its own pre-blocked proxy table (kernel register tiles or the scalar
+//! reference, heap-aware block ordering per shard) into per-query bounded
+//! heaps, and the per-shard results are merged **exactly** — every
+//! candidate keeps its scan distance, the merged list is sorted ascending
+//! by `(distance, row id)` and truncated to the budget. Because each
+//! (query, row) distance is a pure function of the query and the row
+//! (kernel: dimension-order accumulation; scalar: strip sums), the merged
+//! result is byte-identical for *any* shard count; exact f32 distance ties
+//! — broken by row id at the merge — remain the only divergence surface,
+//! exactly as everywhere else in `index` (see `index/README.md`).
+//!
+//! The exact refine runs shard-locally too: each tick group's candidate
+//! union is split by owning shard and streamed through the masked refine
+//! kernel against that shard's [`RowBlocks`] — built lazily, LRU-cached
+//! under the corpus `mem_budget`, and (when a `.gds` [`ShardReader`] is
+//! attached) rebuilt from disk after eviction. The concentration
+//! warm-start also goes shard-local: once the seed pass fills the heap, a
+//! whole shard is skipped when its covering-radius bound
+//! `(d(q, c_S) − r_S)²` already exceeds the heap's worst retained
+//! distance — the shard-level tier of the block bound, still provably
+//! exact. Conditional queries skip shards with zero rows of their class
+//! outright.
+//!
+//! Telemetry: `shards_scanned` / `shards_skipped` count (query, shard)
+//! scans executed vs avoided (for a cold screen the two always sum to
+//! `queries × shard count`), and `shard_evictions` surfaces the corpus
+//! LRU; all flow through [`RetrievalStats`] into `EngineStats` and the
+//! server's `stats` op.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+use super::backend::{
+    batched_refine, group_mean, moved_blocks, refine_caps, warm_seed_heap, warm_sweep_blocks,
+    BackendOpts, Counters, ProxyQuery, RetrievalBackend, RetrievalBackendKind, RetrievalStats,
+};
+use super::kernel::{
+    self, block_order, build_refine_plan, refine_scan_masked, KernelScan, KernelStats,
+    ProxyBlocks,
+};
+use super::scan::{sqdist_early_exit, sqdist_flat};
+use super::topk::BoundedMaxHeap;
+use crate::data::dataset::Dataset;
+use crate::data::shard::CorpusShards;
+use crate::data::store::ShardReader;
+use crate::util::rng::Pcg64;
+use crate::util::threadpool::parallel_chunks;
+
+/// Scored candidates: ascending `(squared distance, row id)`.
+type Scored = Vec<(f32, u32)>;
+
+/// Per-shard IVF substrate for the sharded cluster-pruned screen: a fresh
+/// deterministic k-means over the shard's proxy rows (the dataset's
+/// persisted global partition cannot be reused shard-wise), with the
+/// `clusters` budget divided across shards so operator intuition about the
+/// knob carries over.
+struct ShardIvf {
+    lists: usize,
+    /// [lists × proxy_d]
+    centroids: Vec<f32>,
+    /// member row ids per list (global)
+    members: Vec<Vec<u32>>,
+    /// max member→centroid Euclidean distance per list
+    radius: Vec<f32>,
+    /// pre-blocked kernel tables per list (kernel path only)
+    blocks: Vec<ProxyBlocks>,
+}
+
+/// Fold of one shard scan's local telemetry (merged into the shared
+/// counters after the parallel region).
+#[derive(Debug, Default, Clone, Copy)]
+struct ScanTel {
+    kst: KernelStats,
+    rows_scalar: u64,
+    reorders: u64,
+    scanned: u64,
+    skipped: u64,
+    clusters_scanned: u64,
+    clusters_pruned: u64,
+}
+
+impl ScanTel {
+    fn add(&mut self, o: &ScanTel) {
+        self.kst.add(&o.kst);
+        self.rows_scalar += o.rows_scalar;
+        self.reorders += o.reorders;
+        self.scanned += o.scanned;
+        self.skipped += o.skipped;
+        self.clusters_scanned += o.clusters_scanned;
+        self.clusters_pruned += o.clusters_pruned;
+    }
+}
+
+/// Any backend kind, scanned shard-parallel and merged exactly.
+pub struct ShardedBackend {
+    corpus: Arc<CorpusShards>,
+    kind: RetrievalBackendKind,
+    threads: usize,
+    use_kernel: bool,
+    refine_kernel: bool,
+    ordered: bool,
+    tile_q: usize,
+    nprobe: usize,
+    /// one entry per shard when `kind == ClusterPruned`, empty otherwise
+    ivf: Vec<ShardIvf>,
+    counters: Counters,
+}
+
+impl ShardedBackend {
+    /// Build the sharded wrapper for `kind`. `store` optionally attaches a
+    /// `.gds` [`ShardReader`] so evicted shards' row blocks stream back
+    /// from disk (best-effort: an unopenable store stays resident).
+    pub fn build(
+        ds: &Dataset,
+        kind: RetrievalBackendKind,
+        opts: BackendOpts,
+        store: Option<&Path>,
+    ) -> ShardedBackend {
+        let mut corpus = CorpusShards::build(ds, opts.shards, opts.mem_budget_mb);
+        if let Some(path) = store {
+            if let Ok(reader) = ShardReader::open(path, corpus.plan().count()) {
+                corpus = corpus.with_reader(reader);
+            }
+        }
+        let corpus = Arc::new(corpus);
+        let ivf = if kind == RetrievalBackendKind::ClusterPruned {
+            build_shard_ivf(ds, &corpus, &opts)
+        } else {
+            Vec::new()
+        };
+        // like `clusters`, the approximate probe budget divides across
+        // shards so the total scanned lists stay ≈ nprobe. Approximate
+        // mode (`nprobe > 0`) is the one knob whose *results* depend on
+        // the shard count — the per-shard partitions themselves do — which
+        // is exactly what `is_exact() == false` already signals.
+        let ns = corpus.plan().count();
+        let nprobe = if opts.nprobe > 0 {
+            opts.nprobe.div_ceil(ns).max(1)
+        } else {
+            0
+        };
+        ShardedBackend {
+            corpus,
+            kind,
+            threads: opts.threads,
+            use_kernel: opts.kernel,
+            refine_kernel: opts.kernel && opts.refine_kernel,
+            ordered: opts.kernel && opts.ordering,
+            tile_q: opts.tile_q.clamp(1, kernel::TILE_Q),
+            nprobe,
+            ivf,
+            counters: Counters::default(),
+        }
+    }
+
+    /// The sharded corpus (telemetry / bench introspection).
+    pub fn corpus(&self) -> &CorpusShards {
+        &self.corpus
+    }
+
+    fn cap(&self, ds: &Dataset, m: usize) -> usize {
+        m.max(1).min(ds.n.max(1))
+    }
+
+    /// Is query `q` eligible in shard `sh` (conditional queries skip
+    /// shards holding zero rows of their class)?
+    fn eligible(&self, sh: usize, q: &ProxyQuery) -> bool {
+        match q.class {
+            Some(y) => self
+                .corpus
+                .proxy(sh)
+                .class_counts
+                .get(y as usize)
+                .is_some_and(|&c| c > 0),
+            None => true,
+        }
+    }
+
+    /// Coarse screen of one shard for a query group through kernel tiles
+    /// (or the scalar reference): `tile_w = 1` is the flat discipline, the
+    /// batched discipline shares each block-column load across the tile.
+    fn scan_shard_tiled(
+        &self,
+        ds: &Dataset,
+        sh: usize,
+        queries: &[ProxyQuery],
+        cap: usize,
+        tile_w: usize,
+    ) -> (Vec<Scored>, ScanTel) {
+        let sp = self.corpus.proxy(sh);
+        let mut tel = ScanTel::default();
+        let mut out: Vec<Scored> = vec![Vec::new(); queries.len()];
+        let eligible: Vec<usize> = (0..queries.len())
+            .filter(|&qi| self.eligible(sh, &queries[qi]))
+            .collect();
+        tel.skipped += (queries.len() - eligible.len()) as u64;
+        if sp.blocks.rows == 0 {
+            tel.skipped += eligible.len() as u64;
+            return (out, tel);
+        }
+        tel.scanned += eligible.len() as u64;
+        for group in eligible.chunks(tile_w.max(1)) {
+            let qs: Vec<&[f32]> = group.iter().map(|&qi| queries[qi].proxy).collect();
+            let mut heaps: Vec<BoundedMaxHeap> =
+                (0..group.len()).map(|_| BoundedMaxHeap::new(cap)).collect();
+            if self.use_kernel {
+                let classes: Vec<Option<u32>> =
+                    group.iter().map(|&qi| queries[qi].class).collect();
+                let scan = KernelScan {
+                    blocks: &sp.blocks,
+                    queries: &qs,
+                    classes: &classes,
+                    labels: Some(&ds.labels),
+                };
+                if self.ordered && sp.blocks.n_blocks() > 1 {
+                    let mean = group_mean(&qs, ds.proxy_d);
+                    let order = block_order(&sp.blocks, &mean);
+                    tel.reorders += moved_blocks(&order);
+                    scan.scan_list_into(&order, &mut heaps, &mut tel.kst);
+                } else {
+                    scan.scan_into(0, sp.blocks.n_blocks(), &mut heaps, &mut tel.kst);
+                }
+            } else {
+                let (s, e) = self.corpus.plan().range(sh);
+                tel.rows_scalar += (e - s) as u64;
+                for i in s..e {
+                    let row = ds.proxy_row(i);
+                    for (j, &qi) in group.iter().enumerate() {
+                        if let Some(y) = queries[qi].class {
+                            if ds.labels[i] != y {
+                                continue;
+                            }
+                        }
+                        let d = sqdist_early_exit(queries[qi].proxy, row, heaps[j].worst());
+                        if d.is_finite() {
+                            heaps[j].push(d, i as u32);
+                        }
+                    }
+                }
+            }
+            for (&qi, heap) in group.iter().zip(heaps) {
+                out[qi] = sorted_scored(heap);
+            }
+        }
+        (out, tel)
+    }
+
+    /// Coarse screen of one shard through its local IVF lists: lists are
+    /// visited nearest-centroid-first and skipped under the exact
+    /// triangle-inequality bound once the heap is full. In approximate
+    /// mode the build-time per-shard probe budget (`⌈nprobe/shards⌉`)
+    /// caps the scanned lists of each shard, keeping the total ≈ the
+    /// configured `nprobe`.
+    fn scan_shard_cluster(
+        &self,
+        ds: &Dataset,
+        sh: usize,
+        queries: &[ProxyQuery],
+        cap: usize,
+    ) -> (Vec<Scored>, ScanTel) {
+        let ivf = &self.ivf[sh];
+        let pd = ds.proxy_d;
+        let mut tel = ScanTel::default();
+        let out = queries
+            .iter()
+            .map(|q| {
+                if ivf.lists == 0 || !self.eligible(sh, q) {
+                    tel.skipped += 1;
+                    return Vec::new();
+                }
+                tel.scanned += 1;
+                let mut order: Vec<(f32, usize)> = (0..ivf.lists)
+                    .map(|cl| {
+                        (
+                            sqdist_flat(q.proxy, &ivf.centroids[cl * pd..(cl + 1) * pd]),
+                            cl,
+                        )
+                    })
+                    .collect();
+                order.sort_by(|a, b| a.0.total_cmp(&b.0));
+                let mut heap = BoundedMaxHeap::new(cap);
+                let mut scanned_lists = 0u64;
+                for &(c_d2, cl) in &order {
+                    // pruning only ever applies once the heap is full —
+                    // small classes / small shards never under-deliver
+                    if heap.len() >= cap {
+                        let lb = (c_d2.sqrt() - ivf.radius[cl]).max(0.0);
+                        if lb * lb >= heap.worst() {
+                            tel.clusters_pruned += 1;
+                            continue;
+                        }
+                        if self.nprobe > 0 && scanned_lists >= self.nprobe as u64 {
+                            tel.clusters_pruned += 1;
+                            continue;
+                        }
+                    }
+                    scanned_lists += 1;
+                    if self.use_kernel {
+                        let blocks = &ivf.blocks[cl];
+                        let queries1 = [q.proxy];
+                        let classes1 = [q.class];
+                        let scan = KernelScan {
+                            blocks,
+                            queries: &queries1,
+                            classes: &classes1,
+                            labels: Some(&ds.labels),
+                        };
+                        if self.ordered && blocks.n_blocks() > 1 {
+                            let bo = block_order(blocks, q.proxy);
+                            tel.reorders += moved_blocks(&bo);
+                            scan.scan_list_into(&bo, std::slice::from_mut(&mut heap), &mut tel.kst);
+                        } else {
+                            scan.scan_into(
+                                0,
+                                blocks.n_blocks(),
+                                std::slice::from_mut(&mut heap),
+                                &mut tel.kst,
+                            );
+                        }
+                    } else {
+                        for &gid in &ivf.members[cl] {
+                            if let Some(y) = q.class {
+                                if ds.labels[gid as usize] != y {
+                                    continue;
+                                }
+                            }
+                            tel.rows_scalar += 1;
+                            let d =
+                                sqdist_early_exit(q.proxy, ds.proxy_row(gid as usize), heap.worst());
+                            if d.is_finite() {
+                                heap.push(d, gid);
+                            }
+                        }
+                    }
+                }
+                tel.clusters_scanned += scanned_lists;
+                sorted_scored(heap)
+            })
+            .collect();
+        (out, tel)
+    }
+
+    /// Shard-parallel coarse screen + exact `(distance, row id)` merge.
+    fn top_m_batch_scored(&self, ds: &Dataset, queries: &[ProxyQuery], m: usize) -> Vec<Scored> {
+        let cap = self.cap(ds, m);
+        let ns = self.corpus.plan().count();
+        let chunks = parallel_chunks(ns, self.threads.max(1).min(ns.max(1)), |_, s, e| {
+            let mut tel = ScanTel::default();
+            let mut acc: Vec<Vec<Scored>> = Vec::with_capacity(e - s);
+            for sh in s..e {
+                let (res, t) = match self.kind {
+                    RetrievalBackendKind::ClusterPruned => {
+                        self.scan_shard_cluster(ds, sh, queries, cap)
+                    }
+                    RetrievalBackendKind::Flat => self.scan_shard_tiled(ds, sh, queries, cap, 1),
+                    RetrievalBackendKind::Batched => {
+                        self.scan_shard_tiled(ds, sh, queries, cap, self.tile_q)
+                    }
+                };
+                acc.push(res);
+                tel.add(&t);
+            }
+            (acc, tel)
+        });
+        let mut tel = ScanTel::default();
+        let mut shard_lists: Vec<Vec<Scored>> = Vec::with_capacity(ns);
+        for (acc, t) in chunks {
+            shard_lists.extend(acc);
+            tel.add(&t);
+        }
+        self.record(&tel);
+        (0..queries.len())
+            .map(|qi| {
+                let mut all: Scored = shard_lists
+                    .iter()
+                    .flat_map(|s| s[qi].iter().copied())
+                    .collect();
+                all.sort_unstable_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+                all.truncate(cap);
+                all
+            })
+            .collect()
+    }
+
+    /// The shard-local masked refine: the tick group's candidate union is
+    /// split by owning shard, each shard streams its (LRU-cached, possibly
+    /// disk-rebuilt) row blocks through [`refine_scan_masked`], and the
+    /// per-shard heaps merge exactly by `(distance, row id)`.
+    fn refine_sharded(
+        &self,
+        ds: &Dataset,
+        qs: &[&[f32]],
+        pools: &[&[u32]],
+        k: usize,
+    ) -> Vec<Vec<u32>> {
+        let caps = refine_caps(pools, k);
+        let plan = self.corpus.plan();
+        let ns = plan.count();
+        let mut out: Vec<Vec<u32>> = Vec::with_capacity(qs.len());
+        for ((qt, pt), ct) in qs
+            .chunks(kernel::TILE_Q)
+            .zip(pools.chunks(kernel::TILE_Q))
+            .zip(caps.chunks(kernel::TILE_Q))
+        {
+            // union membership mask over the tile's queries — duplicate
+            // ids collapse onto one bit, exactly like the refine ladders
+            let mut mask: HashMap<u32, u8> = HashMap::new();
+            for (j, pool) in pt.iter().enumerate() {
+                for &gid in *pool {
+                    *mask.entry(gid).or_insert(0) |= 1 << j;
+                }
+            }
+            let mut union: Vec<(u32, u8)> = mask.into_iter().collect();
+            union.sort_unstable_by_key(|e| e.0);
+            // shard-local (position, bits) lists: positions are local so
+            // the refine plan tiles the shard's own blocks; harvest maps
+            // back to global ids through the blocks' id table
+            let mut per_shard: Vec<Vec<(u32, u8)>> = vec![Vec::new(); ns];
+            for &(gid, bits) in &union {
+                let sh = plan.shard_of(gid as usize);
+                let (s, _) = plan.range(sh);
+                per_shard[sh].push((gid - s as u32, bits));
+            }
+            let touched: Vec<usize> = (0..ns).filter(|&sh| !per_shard[sh].is_empty()).collect();
+            let shard_heaps: Vec<(Vec<BoundedMaxHeap>, KernelStats)> =
+                parallel_chunks(touched.len(), self.threads.max(1), |_, s, e| {
+                    (s..e)
+                        .map(|ti| {
+                            let sh = touched[ti];
+                            let rb = self.corpus.row_blocks(sh, ds);
+                            let block_plan = build_refine_plan(&per_shard[sh]);
+                            let mut heaps: Vec<BoundedMaxHeap> =
+                                ct.iter().map(|&c| BoundedMaxHeap::new(c)).collect();
+                            let mut st = KernelStats::default();
+                            refine_scan_masked(&rb, qt, &block_plan, &mut heaps, &mut st);
+                            (heaps, st)
+                        })
+                        .collect::<Vec<_>>()
+                })
+                .into_iter()
+                .flatten()
+                .collect();
+            let mut kst = KernelStats::default();
+            let mut shard_lists: Vec<Vec<Scored>> = Vec::with_capacity(shard_heaps.len());
+            for (heaps, st) in shard_heaps {
+                kst.add(&st);
+                shard_lists.push(heaps.into_iter().map(sorted_scored).collect());
+            }
+            self.counters.record_refine(union.len() as u64, &kst);
+            for (qi, &c) in ct.iter().enumerate() {
+                let mut all: Scored = shard_lists
+                    .iter()
+                    .flat_map(|l| l[qi].iter().copied())
+                    .collect();
+                all.sort_unstable_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+                all.truncate(c);
+                out.push(all.into_iter().map(|(_, i)| i).collect());
+            }
+        }
+        out
+    }
+
+    /// The shard-local seeded screen: once the seed pass fills the heap,
+    /// whole shards are skipped under `(d(q, c_S) − r_S)² ≥ worst`, and a
+    /// scanned shard sweeps its blocks nearest-first under the block-level
+    /// bound — the same exactness argument, one more tier.
+    fn warm_sharded(
+        &self,
+        ds: &Dataset,
+        qp: &[f32],
+        class: Option<u32>,
+        m: usize,
+        seeds: &[u32],
+    ) -> Option<Vec<u32>> {
+        let cap = self.cap(ds, m);
+        let mut heap = warm_seed_heap(ds, qp, class, cap, seeds)?;
+        let mut scanned = 0u64;
+        let mut skipped = 0u64;
+        // visit shards nearest-centroid-first (ties by shard id) so near
+        // shards tighten the cutoff before far shards face the bound —
+        // without this the whole-shard skip would rarely engage when the
+        // query's neighbourhood lives in a late shard
+        let mut shard_order: Vec<(f32, u32)> = (0..self.corpus.plan().count())
+            .map(|sh| {
+                let c = &self.corpus.proxy(sh).centroid;
+                let d2: f32 = c.iter().zip(qp).map(|(a, b)| (a - b) * (a - b)).sum();
+                (d2, sh as u32)
+            })
+            .collect();
+        shard_order.sort_unstable_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        for &(sh_d2, sh) in &shard_order {
+            let sh = sh as usize;
+            let sp = self.corpus.proxy(sh);
+            if sp.blocks.rows == 0 {
+                skipped += 1;
+                continue;
+            }
+            if let Some(y) = class {
+                if sp.class_counts.get(y as usize).is_none_or(|&c| c == 0) {
+                    skipped += 1;
+                    continue;
+                }
+            }
+            let lb = (sh_d2.sqrt() - sp.radius).max(0.0);
+            if lb * lb >= heap.worst() {
+                // every row of the shard is provably ≥ the worst retained
+                skipped += 1;
+                continue;
+            }
+            scanned += 1;
+            // the same nearest-block-first bounded sweep the global warm
+            // screen runs, over this shard's blocks only
+            warm_sweep_blocks(ds, &sp.blocks, qp, class, seeds, &mut heap);
+        }
+        self.counters.shards_scanned.fetch_add(scanned, Ordering::Relaxed);
+        self.counters.shards_skipped.fetch_add(skipped, Ordering::Relaxed);
+        Some(sorted_scored(heap).into_iter().map(|(_, i)| i).collect())
+    }
+
+    fn record(&self, tel: &ScanTel) {
+        self.counters.record_kernel(&tel.kst);
+        self.counters
+            .rows_scanned
+            .fetch_add(tel.rows_scalar, Ordering::Relaxed);
+        self.counters
+            .blocks_reordered
+            .fetch_add(tel.reorders, Ordering::Relaxed);
+        self.counters
+            .shards_scanned
+            .fetch_add(tel.scanned, Ordering::Relaxed);
+        self.counters
+            .shards_skipped
+            .fetch_add(tel.skipped, Ordering::Relaxed);
+        self.counters
+            .clusters_scanned
+            .fetch_add(tel.clusters_scanned, Ordering::Relaxed);
+        self.counters
+            .clusters_pruned
+            .fetch_add(tel.clusters_pruned, Ordering::Relaxed);
+    }
+}
+
+/// Heap → ascending `(distance, row id)` — the deterministic order every
+/// shard contributes to the merge in.
+fn sorted_scored(heap: BoundedMaxHeap) -> Scored {
+    let mut v = heap.into_sorted();
+    v.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+    v
+}
+
+fn build_shard_ivf(ds: &Dataset, corpus: &CorpusShards, opts: &BackendOpts) -> Vec<ShardIvf> {
+    let pd = ds.proxy_d;
+    let ns = corpus.plan().count();
+    let per_shard = opts.clusters.max(1).div_ceil(ns).max(1);
+    (0..ns)
+        .map(|sh| {
+            let (s, e) = corpus.plan().range(sh);
+            let rows = e - s;
+            if rows == 0 {
+                return ShardIvf {
+                    lists: 0,
+                    centroids: Vec::new(),
+                    members: Vec::new(),
+                    radius: Vec::new(),
+                    blocks: Vec::new(),
+                };
+            }
+            let lists = per_shard.clamp(1, rows);
+            // deterministic per-shard stream: shard 0 of a 1-shard plan
+            // reproduces the global IvfPartition's k-means verbatim
+            let mut rng = Pcg64::with_stream(
+                opts.seed ^ (sh as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15),
+                0x1f5,
+            );
+            let (centroids, assign) =
+                crate::data::cluster::kmeans(&ds.proxies[s * pd..e * pd], rows, pd, lists, 8, &mut rng);
+            let mut members: Vec<Vec<u32>> = vec![Vec::new(); lists];
+            for (local, &a) in assign.iter().enumerate() {
+                members[a as usize].push((s + local) as u32);
+            }
+            let mut radius = vec![0.0f32; lists];
+            for (cl, rows_) in members.iter().enumerate() {
+                let c = &centroids[cl * pd..(cl + 1) * pd];
+                let mut worst = 0.0f32;
+                for &gid in rows_ {
+                    worst = worst.max(sqdist_flat(ds.proxy_row(gid as usize), c));
+                }
+                radius[cl] = worst.sqrt();
+            }
+            let blocks: Vec<ProxyBlocks> = if opts.kernel {
+                members
+                    .iter()
+                    .map(|m| ProxyBlocks::build_subset(&ds.proxies, pd, m))
+                    .collect()
+            } else {
+                Vec::new()
+            };
+            ShardIvf {
+                lists,
+                centroids,
+                members,
+                radius,
+                blocks,
+            }
+        })
+        .collect()
+}
+
+impl RetrievalBackend for ShardedBackend {
+    fn name(&self) -> &'static str {
+        match self.kind {
+            RetrievalBackendKind::Flat => "sharded-flat",
+            RetrievalBackendKind::Batched => "sharded-batched",
+            RetrievalBackendKind::ClusterPruned => "sharded-cluster",
+        }
+    }
+
+    fn is_exact(&self) -> bool {
+        !(self.kind == RetrievalBackendKind::ClusterPruned && self.nprobe > 0)
+    }
+
+    fn top_m(&self, ds: &Dataset, query_proxy: &[f32], m: usize, class: Option<u32>) -> Vec<u32> {
+        self.top_m_batch(
+            ds,
+            &[ProxyQuery {
+                proxy: query_proxy,
+                class,
+            }],
+            m,
+        )
+        .pop()
+        .unwrap_or_default()
+    }
+
+    fn top_m_batch(&self, ds: &Dataset, queries: &[ProxyQuery], m: usize) -> Vec<Vec<u32>> {
+        if queries.is_empty() {
+            return Vec::new();
+        }
+        // pass accounting mirrors the monolithic kinds: flat pays one
+        // logical table pass per query, batched one per group, cluster none
+        match self.kind {
+            RetrievalBackendKind::Flat => {
+                self.counters
+                    .proxy_passes
+                    .fetch_add(queries.len() as u64, Ordering::Relaxed);
+            }
+            RetrievalBackendKind::Batched => {
+                self.counters.proxy_passes.fetch_add(1, Ordering::Relaxed);
+            }
+            RetrievalBackendKind::ClusterPruned => {}
+        }
+        self.counters
+            .queries
+            .fetch_add(queries.len() as u64, Ordering::Relaxed);
+        self.top_m_batch_scored(ds, queries, m)
+            .into_iter()
+            .map(|sc| sc.into_iter().map(|(_, i)| i).collect())
+            .collect()
+    }
+
+    fn refine_top_k(&self, ds: &Dataset, q: &[f32], cands: &[u32], k: usize) -> Vec<u32> {
+        self.refine_top_k_batch(ds, &[q], &[cands], k)
+            .pop()
+            .unwrap_or_default()
+    }
+
+    fn refine_top_k_batch(
+        &self,
+        ds: &Dataset,
+        qs: &[&[f32]],
+        pools: &[&[u32]],
+        k: usize,
+    ) -> Vec<Vec<u32>> {
+        assert_eq!(qs.len(), pools.len());
+        if qs.is_empty() {
+            return Vec::new();
+        }
+        if !self.refine_kernel {
+            // the row-major reference ladder is shard-agnostic and exact
+            let (out, rows) = batched_refine(ds, qs, pools, k, self.threads);
+            self.counters.refine_rows.fetch_add(rows, Ordering::Relaxed);
+            return out;
+        }
+        self.refine_sharded(ds, qs, pools, k)
+    }
+
+    fn warm_top_m(
+        &self,
+        ds: &Dataset,
+        query_proxy: &[f32],
+        class: Option<u32>,
+        m: usize,
+        seeds: &[u32],
+    ) -> Option<Vec<u32>> {
+        self.warm_sharded(ds, query_proxy, class, m, seeds)
+    }
+
+    fn stats(&self) -> RetrievalStats {
+        let mut s = self.counters.snapshot();
+        s.shard_evictions = self.corpus.cache_stats().evictions;
+        s
+    }
+
+    fn reset_stats(&self) {
+        self.counters.reset();
+        self.corpus.reset_counters();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::dataset::IvfPartition;
+    use crate::data::store;
+    use crate::data::synthetic::preset;
+    use crate::index::backend::FlatScan;
+    use crate::util::prop::{forall, gen};
+
+    fn tiny(n: usize, seed: u64) -> Dataset {
+        let mut spec = preset("cifar-sim").unwrap().clone();
+        spec.n = n;
+        Dataset::synthesize(&spec, seed)
+    }
+
+    fn opts(shards: usize, kernel: bool) -> BackendOpts {
+        BackendOpts {
+            threads: 2,
+            clusters: 10,
+            shards,
+            kernel,
+            refine_kernel: kernel,
+            ..BackendOpts::default()
+        }
+    }
+
+    /// Permute a dataset so rows group by proxy-space cluster — shards
+    /// become spatially coherent, which is what makes whole-shard bounds
+    /// (and, in production, locality-aware ingest) actually bite.
+    fn clustered(ds: &Dataset) -> Dataset {
+        let part = IvfPartition::compute(ds, 8, 5);
+        let mut order: Vec<usize> = (0..ds.n).collect();
+        order.sort_by_key(|&i| (part.assignments[i], i as u32));
+        let (d, pd) = (ds.d, ds.proxy_d);
+        let mut out = ds.clone();
+        for (new, &old) in order.iter().enumerate() {
+            out.data[new * d..(new + 1) * d].copy_from_slice(ds.row(old));
+            out.proxies[new * pd..(new + 1) * pd].copy_from_slice(ds.proxy_row(old));
+            out.labels[new] = ds.labels[old];
+        }
+        out.proxy_blocks = ProxyBlocks::build(&out.proxies, out.n, pd);
+        out.row_blocks = std::sync::OnceLock::new();
+        out.class_rows = vec![Vec::new(); out.classes];
+        for (i, &y) in out.labels.iter().enumerate() {
+            out.class_rows[y as usize].push(i as u32);
+        }
+        out
+    }
+
+    #[test]
+    fn sharded_top_m_matches_flat_reference_across_kinds_and_counts() {
+        // Satellite: every kind × kernel/scalar × shard count returns the
+        // scalar FlatScan reference's exact row ids, conditional included —
+        // single-row shards (shards ≥ n would clamp) ride along via 7.
+        let ds = tiny(260, 3);
+        let flat = FlatScan::scalar(2);
+        for &kind in RetrievalBackendKind::all() {
+            for kernel in [true, false] {
+                for shards in [1usize, 2, 7] {
+                    let sb = ShardedBackend::build(&ds, kind, opts(shards, kernel), None);
+                    forall(97 + shards as u64, 6, |rng| {
+                        let m = gen::usize_in(rng, 1, 70);
+                        let q = gen::vec_normal(rng, ds.proxy_d, 1.0);
+                        let class = if rng.below(2) == 0 {
+                            None
+                        } else {
+                            Some(rng.below(ds.classes) as u32)
+                        };
+                        let got = sb.top_m(&ds, &q, m, class);
+                        let want = flat.top_m(&ds, &q, m, class);
+                        crate::prop_assert!(
+                            got == want,
+                            "{} shards={shards} kernel={kernel} m={m} class={class:?}",
+                            sb.name()
+                        );
+                        Ok(())
+                    });
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn results_are_byte_identical_across_shard_counts() {
+        let ds = tiny(300, 9);
+        let mut rng = Pcg64::new(21);
+        let qs_data: Vec<Vec<f32>> = (0..6)
+            .map(|_| (0..ds.proxy_d).map(|_| rng.normal()).collect())
+            .collect();
+        let queries: Vec<ProxyQuery> = qs_data
+            .iter()
+            .enumerate()
+            .map(|(i, q)| ProxyQuery {
+                proxy: q,
+                class: (i % 3 == 0).then_some((i % 4) as u32),
+            })
+            .collect();
+        for &kind in RetrievalBackendKind::all() {
+            let mut reference: Option<Vec<Vec<u32>>> = None;
+            for shards in [1usize, 2, 7] {
+                let sb = ShardedBackend::build(&ds, kind, opts(shards, true), None);
+                let got = sb.top_m_batch(&ds, &queries, 40);
+                match &reference {
+                    None => reference = Some(got),
+                    Some(want) => {
+                        assert_eq!(&got, want, "{} shards={shards}", sb.name());
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_refine_matches_exact_refine_and_dedups() {
+        let ds = tiny(280, 17);
+        let flat = FlatScan::scalar(2);
+        for shards in [2usize, 5] {
+            let sb = ShardedBackend::build(
+                &ds,
+                RetrievalBackendKind::Batched,
+                opts(shards, true),
+                None,
+            );
+            forall(61 + shards as u64, 10, |rng| {
+                let nq = gen::usize_in(rng, 1, 10);
+                let k = gen::usize_in(rng, 1, 20);
+                let qs_data: Vec<Vec<f32>> =
+                    (0..nq).map(|_| gen::vec_normal(rng, ds.d, 1.0)).collect();
+                let pools_data: Vec<Vec<u32>> = (0..nq)
+                    .map(|i| match i % 4 {
+                        0 => Vec::new(),
+                        1 => vec![rng.below(ds.n) as u32],
+                        _ => rng
+                            .choose_k(ds.n, gen::usize_in(rng, 1, 60).min(ds.n))
+                            .into_iter()
+                            .map(|i| i as u32)
+                            .collect(),
+                    })
+                    .collect();
+                let qs: Vec<&[f32]> = qs_data.iter().map(|q| q.as_slice()).collect();
+                let pools: Vec<&[u32]> = pools_data.iter().map(|p| p.as_slice()).collect();
+                let got = sb.refine_top_k_batch(&ds, &qs, &pools, k);
+                for i in 0..nq {
+                    let want = flat.refine_top_k(&ds, qs[i], pools[i], k);
+                    crate::prop_assert!(
+                        got[i] == want,
+                        "shards={shards} query {i}/{nq} k={k}: {:?} vs {want:?}",
+                        got[i]
+                    );
+                }
+                Ok(())
+            });
+            // duplicate candidate ids collapse via the membership mask
+            let q: Vec<f32> = ds.row(7).to_vec();
+            let pool: Vec<u32> = vec![7, 7, 12, 12, 99, 7, 200];
+            let got = sb.refine_top_k(&ds, &q, &pool, 5);
+            assert_eq!(got[0], 7);
+            let distinct: std::collections::HashSet<u32> = got.iter().copied().collect();
+            assert_eq!(distinct.len(), got.len(), "duplicates must collapse");
+            assert!(sb.stats().refine_rows > 0);
+        }
+    }
+
+    #[test]
+    fn cold_scan_accounting_covers_every_query_shard_pair() {
+        let ds = tiny(200, 7);
+        let sb = ShardedBackend::build(&ds, RetrievalBackendKind::Batched, opts(4, true), None);
+        let q = vec![0.1f32; ds.proxy_d];
+        let queries: Vec<ProxyQuery> = (0..6)
+            .map(|_| ProxyQuery {
+                proxy: &q,
+                class: None,
+            })
+            .collect();
+        let _ = sb.top_m_batch(&ds, &queries, 16);
+        let s = sb.stats();
+        assert_eq!(s.proxy_passes, 1, "batched sharded group shares one pass");
+        assert_eq!(s.queries, 6);
+        assert_eq!(
+            s.shards_scanned + s.shards_skipped,
+            6 * 4,
+            "every (query, shard) pair is scanned or skipped"
+        );
+        assert_eq!(s.shards_skipped, 0, "unconditional queries skip nothing");
+    }
+
+    #[test]
+    fn conditional_queries_skip_class_absent_shards() {
+        // single-row shards: most shards lack any given class, so the
+        // class-count skip must fire (and results stay in class)
+        let mut spec = preset("moons").unwrap().clone();
+        spec.n = 40;
+        let ds = Dataset::synthesize(&spec, 2);
+        let sb = ShardedBackend::build(&ds, RetrievalBackendKind::Flat, opts(40, true), None);
+        let flat = FlatScan::scalar(1);
+        let class = (0..ds.classes)
+            .max_by_key(|&c| ds.class_rows[c].len())
+            .unwrap() as u32;
+        let q = vec![0.2f32; ds.proxy_d];
+        let got = sb.top_m(&ds, &q, 8, Some(class));
+        assert_eq!(got, flat.top_m(&ds, &q, 8, Some(class)));
+        assert!(got.iter().all(|&i| ds.labels[i as usize] == class));
+        let s = sb.stats();
+        assert!(s.shards_skipped > 0, "class-absent shards must be skipped");
+        assert_eq!(s.shards_scanned + s.shards_skipped, ds.n as u64);
+    }
+
+    #[test]
+    fn warm_sharded_matches_cold_and_skips_far_shards() {
+        // spatially coherent shards + full-corpus seeds: the seeded screen
+        // must return the cold screen's exact rows while skipping whole
+        // shards under the covering-radius bound
+        let ds = clustered(&tiny(320, 23));
+        let sb = ShardedBackend::build(&ds, RetrievalBackendKind::Batched, opts(8, true), None);
+        let seeds: Vec<u32> = (0..ds.n as u32).collect();
+        let q = ds.proxy_row(10).to_vec();
+        // m = 1 on a self-query: the seed pass retains distance 0, so the
+        // covering-radius bound (≥ 0) must clear every single shard
+        let cold1 = sb.top_m(&ds, &q, 1, None);
+        sb.reset_stats();
+        let warm1 = sb.warm_top_m(&ds, &q, None, 1, &seeds).expect("seeds fill");
+        assert_eq!(warm1, cold1, "warm screen must equal the cold screen");
+        let s = sb.stats();
+        assert_eq!(s.shards_skipped, 8, "zero cutoff must skip every shard");
+        assert_eq!(s.shards_scanned, 0);
+        // a broad budget still matches cold exactly (skips now optional)
+        let cold40 = sb.top_m(&ds, &q, 40, None);
+        let warm40 = sb.warm_top_m(&ds, &q, None, 40, &seeds).expect("seeds fill");
+        assert_eq!(warm40, cold40);
+        // insufficient seeds stand down
+        assert!(sb.warm_top_m(&ds, &q, None, 50, &[1, 2, 3]).is_none());
+    }
+
+    #[test]
+    fn sharded_nprobe_divides_across_shards_and_fills_the_heap() {
+        // approximate mode: the probe budget splits across shards
+        // (⌈4/4⌉ = 1 list per shard once a heap is full), results may
+        // differ from exact but the heap must never under-deliver
+        let ds = tiny(300, 4);
+        let sb = ShardedBackend::build(
+            &ds,
+            RetrievalBackendKind::ClusterPruned,
+            BackendOpts {
+                threads: 1,
+                clusters: 16,
+                nprobe: 4,
+                shards: 4,
+                ..BackendOpts::default()
+            },
+            None,
+        );
+        assert!(!sb.is_exact(), "nprobe > 0 stays the approximate knob");
+        let q = ds.proxy_row(7).to_vec();
+        let got = sb.top_m(&ds, &q, 32, None);
+        assert_eq!(got.len(), 32, "approximate mode still returns m rows");
+        let distinct: std::collections::HashSet<u32> = got.iter().copied().collect();
+        assert_eq!(distinct.len(), 32);
+        // and nprobe = 0 stays exact
+        assert!(
+            ShardedBackend::build(
+                &ds,
+                RetrievalBackendKind::ClusterPruned,
+                opts(4, true),
+                None
+            )
+            .is_exact()
+        );
+    }
+
+    #[test]
+    fn streamed_budgeted_backend_matches_resident_and_evicts() {
+        let ds = tiny(220, 31);
+        let dir = std::env::temp_dir().join("golddiff_sharded_stream_test");
+        std::fs::remove_dir_all(&dir).ok();
+        let path = store::store_path(&dir, "cifar-sim");
+        store::save_sharded(&ds, &path, 4).unwrap();
+        // budget of ~1 MiB < the blocked corpus (220 × 3072 × 4 B ≈ 2.7 MiB
+        // across 4 shards), so refines must evict and re-stream shards
+        let streamed = ShardedBackend::build(
+            &ds,
+            RetrievalBackendKind::Batched,
+            BackendOpts {
+                shards: 4,
+                mem_budget_mb: 1,
+                threads: 1,
+                ..BackendOpts::default()
+            },
+            Some(&path),
+        );
+        assert!(streamed.corpus().is_streamed());
+        let resident = ShardedBackend::build(
+            &ds,
+            RetrievalBackendKind::Batched,
+            opts(4, true),
+            None,
+        );
+        let mut rng = Pcg64::new(4);
+        for round in 0..3 {
+            let q: Vec<f32> = (0..ds.d).map(|_| rng.normal()).collect();
+            let pool: Vec<u32> = rng
+                .choose_k(ds.n, 120)
+                .into_iter()
+                .map(|i| i as u32)
+                .collect();
+            let a = streamed.refine_top_k(&ds, &q, &pool, 12);
+            let b = resident.refine_top_k(&ds, &q, &pool, 12);
+            assert_eq!(a, b, "round {round}");
+        }
+        let cache = streamed.corpus().cache_stats();
+        assert!(cache.evictions > 0, "1 MiB budget must evict: {cache:?}");
+        assert!(cache.streamed_loads > 0, "rebuilds must stream from disk");
+        assert!(streamed.stats().shard_evictions > 0, "telemetry flows");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn kind_build_routes_through_sharding_only_above_one() {
+        let ds = tiny(150, 1);
+        let sharded = RetrievalBackendKind::Batched.build(&ds, opts(3, true));
+        assert_eq!(sharded.name(), "sharded-batched");
+        let plain = RetrievalBackendKind::Batched.build(&ds, opts(1, true));
+        assert_eq!(plain.name(), "batched");
+        let q = ds.proxy_row(0).to_vec();
+        assert_eq!(
+            sharded.top_m(&ds, &q, 9, None),
+            plain.top_m(&ds, &q, 9, None)
+        );
+    }
+}

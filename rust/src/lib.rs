@@ -9,7 +9,10 @@
 //!
 //! * [`util`] — offline-friendly substrates (JSON, RNG, threadpool, CLI, …).
 //! * [`config`] — typed configuration for datasets, schedules and the engine.
-//! * [`data`] — synthetic hierarchical-GMM datasets + the `.gds` store.
+//! * [`data`] — synthetic hierarchical-GMM datasets, the `.gds` store
+//!   (v3: per-shard sections + streaming `ShardReader`), and the sharded
+//!   corpus layer (`data::shard::CorpusShards`: memory-bounded, LRU-cached
+//!   per-shard row blocks).
 //! * [`schedule`] — noise schedules and the paper's counter-monotonic
 //!   (m_t, k_t) budget schedules (Eqs. 4 & 6).
 //! * [`index`] — Adaptive Coarse Screening behind pluggable
@@ -18,8 +21,11 @@
 //!   IVF-style cluster-pruned screening with exact centroid bounds; all
 //!   three scan through the register-tiled SoA kernel (`index::kernel`)
 //!   by default, and tick groups refine through the batched union-scan
-//!   ladder (`index/README.md` documents the trait, the kernel layout,
-//!   knobs and guarantees).
+//!   ladder. `index::shard` wraps any backend kind in the shard-parallel
+//!   merge layer: per-shard coarse screens merged exactly by
+//!   (distance, row id), shard-local refine and warm-start
+//!   (`index/README.md` documents the trait, the kernel layout, the
+//!   merge-exactness argument, knobs and guarantees).
 //! * [`oracle`] — closed-form population denoiser (the neural-oracle stand-in).
 //! * [`denoiser`] — Optimal / Wiener / Kamb / PCA baselines + the GoldDiff
 //!   coarse→fine wrapper; streaming softmax (SS) and biased WSS.

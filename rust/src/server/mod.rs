@@ -39,6 +39,21 @@ impl Server {
             .spawn(move || {
                 let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
                 while !sd.load(std::sync::atomic::Ordering::Relaxed) {
+                    // reap finished connection handles each iteration — a
+                    // long-lived server would otherwise grow `conns` by one
+                    // JoinHandle per client forever (joining a finished
+                    // thread cannot block)
+                    conns = conns
+                        .into_iter()
+                        .filter_map(|c| {
+                            if c.is_finished() {
+                                let _ = c.join();
+                                None
+                            } else {
+                                Some(c)
+                            }
+                        })
+                        .collect();
                     match listener.accept() {
                         Ok((stream, _)) => {
                             let eng = Arc::clone(&engine);

@@ -150,11 +150,13 @@ fn xla_and_cpu_paths_agree_on_image_preset() {
 fn determinism_matrix_backend_kernel_warmstart() {
     // Satellite: one seeded synthetic dataset stepped through the full
     // retrieval matrix — backend ∈ {flat, batched, cluster} × kernel ∈
-    // {on, off} × warm_start ∈ {on, off} — must produce byte-identical
-    // golden subsets for a tick group at every sampling point, and
-    // byte-identical samples for a full single-sequence trajectory. This
-    // is the engine's exactness contract: every knob is a performance
-    // lever, never a result lever.
+    // {on, off} × warm_start ∈ {on, off} × shards ∈ {1, 2, 7} — must
+    // produce byte-identical golden subsets for a tick group at every
+    // sampling point, and byte-identical samples for a full
+    // single-sequence trajectory. This is the engine's exactness contract:
+    // every knob — including the corpus shard count, whose per-shard heaps
+    // merge with a deterministic (distance, row id) tie-break — is a
+    // performance lever, never a result lever.
     let ds = small("mnist-sim", 260, 11);
     let sched = NoiseSchedule::new(ScheduleKind::DdpmLinear, 10);
     let xs_data: Vec<Vec<f32>> = (0..6)
@@ -168,48 +170,56 @@ fn determinism_matrix_backend_kernel_warmstart() {
     for &backend in RetrievalBackendKind::all() {
         for kernel in [true, false] {
             for warm in [true, false] {
-                let opts = BackendOpts {
-                    threads: 2,
-                    clusters: 8,
-                    kernel,
-                    ..BackendOpts::default()
-                };
-                let build = || {
-                    GoldDiff::paper_defaults(&ds, &sched, BaseWeighting::Golden)
-                        .with_backend(backend.build(&ds, opts))
-                        .with_warm_start(warm)
-                };
-                // (a) a 6-sequence tick group stepped 0..steps — the warm
-                // screen sees the previous step's subsets, as in serving
-                let mut gd = build();
-                let mut subsets = Vec::new();
-                for step in 0..sched.steps {
-                    let ctx = StepContext {
-                        ds: &ds,
-                        sched: &sched,
-                        step,
-                        class: None,
+                for shards in [1usize, 2, 7] {
+                    let opts = BackendOpts {
+                        threads: 2,
+                        clusters: 8,
+                        kernel,
+                        shards,
+                        ..BackendOpts::default()
                     };
-                    let xs: Vec<&[f32]> = xs_data.iter().map(|x| x.as_slice()).collect();
-                    let ctxs: Vec<&StepContext> = xs.iter().map(|_| &ctx).collect();
-                    subsets.push(gd.golden_subsets(&xs, &ctxs));
-                }
-                // (b) a full single-sequence reverse trajectory
-                let mut den = build();
-                let traj = sampler::sample(
-                    &mut den as &mut dyn Denoiser,
-                    &ds,
-                    &sched,
-                    5,
-                    sampler::SamplerOpts::default(),
-                );
-                let sample = traj.final_sample().to_vec();
-                let label = format!("{}/kernel={kernel}/warm={warm}", backend.name());
-                match &reference {
-                    None => reference = Some((subsets, sample)),
-                    Some((ref_subsets, ref_sample)) => {
-                        assert_eq!(ref_subsets, &subsets, "{label}: golden subsets diverged");
-                        assert_eq!(ref_sample, &sample, "{label}: samples diverged");
+                    let build = || {
+                        GoldDiff::paper_defaults(&ds, &sched, BaseWeighting::Golden)
+                            .with_backend(backend.build(&ds, opts))
+                            .with_warm_start(warm)
+                    };
+                    // (a) a 6-sequence tick group stepped 0..steps — the
+                    // warm screen sees the previous step's subsets, as in
+                    // serving
+                    let mut gd = build();
+                    let mut subsets = Vec::new();
+                    for step in 0..sched.steps {
+                        let ctx = StepContext {
+                            ds: &ds,
+                            sched: &sched,
+                            step,
+                            class: None,
+                        };
+                        let xs: Vec<&[f32]> = xs_data.iter().map(|x| x.as_slice()).collect();
+                        let ctxs: Vec<&StepContext> = xs.iter().map(|_| &ctx).collect();
+                        subsets.push(gd.golden_subsets(&xs, &ctxs));
+                    }
+                    // (b) a full single-sequence reverse trajectory
+                    let mut den = build();
+                    let traj = sampler::sample(
+                        &mut den as &mut dyn Denoiser,
+                        &ds,
+                        &sched,
+                        5,
+                        sampler::SamplerOpts::default(),
+                    );
+                    let sample = traj.final_sample().to_vec();
+                    let label =
+                        format!("{}/kernel={kernel}/warm={warm}/shards={shards}", backend.name());
+                    match &reference {
+                        None => reference = Some((subsets, sample)),
+                        Some((ref_subsets, ref_sample)) => {
+                            assert_eq!(
+                                ref_subsets, &subsets,
+                                "{label}: golden subsets diverged"
+                            );
+                            assert_eq!(ref_sample, &sample, "{label}: samples diverged");
+                        }
                     }
                 }
             }
