@@ -388,7 +388,6 @@ fn bench_sharded(ds: &golddiff::Dataset) {
                 shards,
                 ..BackendOpts::default()
             },
-            None,
         );
         // exact-merge contract: identical ids for every shard count
         assert_eq!(
@@ -531,6 +530,98 @@ fn bench_warm_start(ds: &golddiff::Dataset, sched: &NoiseSchedule) {
     );
 }
 
+/// Section 0d: out-of-core serving — the streamed (`open_streaming`,
+/// bounded LRU) corpus vs the resident one on the identical retrieval
+/// work (no runtime required). Byte-equality is asserted before timing;
+/// the BENCH line carries the residency telemetry.
+fn bench_streamed(ds: &golddiff::Dataset) {
+    use golddiff::data::store;
+
+    const BATCH: usize = 8;
+    let shards = 8;
+    let dir = std::env::temp_dir().join("golddiff_bench_streamed");
+    std::fs::remove_dir_all(&dir).ok();
+    let path = store::store_path(&dir, "bench-corpus");
+    store::save_sharded(ds, &path, shards).unwrap();
+    // budget ≈ a quarter of the blocked corpus so the LRU actually cycles
+    let budget_mb = ((ds.n * ds.d * 4) / (1024 * 1024) / 4).max(1);
+    let streamed = store::open_streaming(&path, shards, budget_mb).unwrap();
+
+    let m = (ds.n / 10).max(1);
+    let k = (ds.n / 20).max(1);
+    let mut rng = golddiff::util::rng::Pcg64::new(41);
+    let queries_data: Vec<Vec<f32>> = (0..BATCH)
+        .map(|_| {
+            let row = ds.proxy_row(rng.below(ds.n)).to_vec();
+            row.iter().map(|&v| v + rng.normal() * 0.3).collect()
+        })
+        .collect();
+    let queries: Vec<ProxyQuery> = queries_data
+        .iter()
+        .map(|q| ProxyQuery {
+            proxy: q,
+            class: None,
+        })
+        .collect();
+    let full_queries: Vec<Vec<f32>> = (0..BATCH as u64)
+        .map(|i| {
+            let mut r = golddiff::util::rng::Pcg64::new(600 + i);
+            (0..ds.d).map(|_| r.normal()).collect()
+        })
+        .collect();
+
+    println!("-- streamed vs resident corpus (shards={shards}, budget={budget_mb} MiB) --");
+    let resident_backend = BatchedScan::default();
+    let streamed_backend = BatchedScan::default();
+    // the coarse screen reads the resident proxies either way; pools are
+    // identical, so the refine comparison is apples-to-apples
+    let pools = resident_backend.top_m_batch(ds, &queries, m);
+    assert_eq!(
+        streamed_backend.top_m_batch(&streamed, &queries, m),
+        pools,
+        "streamed coarse screen must equal resident"
+    );
+    let qrefs: Vec<&[f32]> = full_queries.iter().map(|q| q.as_slice()).collect();
+    let poolrefs: Vec<&[u32]> = pools.iter().map(|p| p.as_slice()).collect();
+    assert_eq!(
+        streamed_backend.refine_top_k_batch(&streamed, &qrefs, &poolrefs, k),
+        resident_backend.refine_top_k_batch(ds, &qrefs, &poolrefs, k),
+        "streamed refine must equal resident byte-for-byte"
+    );
+    let t_res = bench(&format!("refine x{BATCH} top-{k} (resident corpus)"), 15, || {
+        let _ = resident_backend.refine_top_k_batch(ds, &qrefs, &poolrefs, k);
+    });
+    let t_str = bench(&format!("refine x{BATCH} top-{k} (streamed, LRU-bounded)"), 15, || {
+        let _ = streamed_backend.refine_top_k_batch(&streamed, &qrefs, &poolrefs, k);
+    });
+    let src = streamed.source_stats().unwrap();
+    println!(
+        "{:>58}  -> {:.2}x of resident, {} rows streamed, peak {} KiB resident",
+        "",
+        t_str / t_res.max(1e-12),
+        src.rows_streamed,
+        src.peak_row_bytes / 1024
+    );
+    benchlib::emit_bench(
+        "streamed_vs_resident",
+        &[
+            ("batch", BATCH as f64),
+            ("m", m as f64),
+            ("k", k as f64),
+            ("n", ds.n as f64),
+            ("shards", shards as f64),
+            ("budget_mb", budget_mb as f64),
+            ("resident_secs", t_res),
+            ("streamed_secs", t_str),
+            ("slowdown", t_str / t_res.max(1e-12)),
+            ("rows_streamed", src.rows_streamed as f64),
+            ("peak_row_bytes", src.peak_row_bytes as f64),
+            ("evictions", src.evictions as f64),
+        ],
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
 fn main() -> anyhow::Result<()> {
     // GOLDDIFF_BENCH_N shrinks the corpus for CI smoke runs (synthesised
     // directly, bypassing the on-disk store so sizes never conflict)
@@ -564,6 +655,10 @@ fn main() -> anyhow::Result<()> {
     // 0c. shard-parallel retrieval vs the monolithic scan (no runtime
     // required; pins the exact-merge contract before timing)
     bench_sharded(&ds);
+
+    // 0d. out-of-core corpus: streamed (LRU-bounded) vs resident serving
+    // (no runtime required; byte-equality asserted before timing)
+    bench_streamed(&ds);
 
     // 1. coarse scan vs threads
     for threads in [1usize, 2, 4, 8] {

@@ -82,9 +82,15 @@ pub struct EngineConfig {
     /// (`index::shard`); `1` keeps the monolithic backends
     pub shards: usize,
     /// memory budget (MiB) for resident cold-shard row blocks; `0` =
-    /// unbounded. With `shards > 1` a positive budget also attaches the
-    /// `.gds` shard reader so evicted shards stream back from disk
+    /// unbounded. With `shards > 1` a positive budget implies the
+    /// out-of-core mode: the engine serves the corpus data-free off the
+    /// `.gds` store (see `resident`)
     pub mem_budget_mb: usize,
+    /// keep the full-resolution corpus resident (default). `false` — or
+    /// `shards > 1 && mem_budget_mb > 0`, which implies it — serves
+    /// data-free: the store is opened via `store::open_streaming` and rows
+    /// stream shard-at-a-time through the LRU budget, byte-identically
+    pub resident: bool,
     /// rng seed
     pub seed: u64,
 }
@@ -114,7 +120,8 @@ impl Default for EngineConfig {
             warm_start: env_flag("GOLDDIFF_WARM_START", true),
             kernel_tile_q: crate::index::kernel::TILE_Q,
             shards: env_usize("GOLDDIFF_SHARDS", 1),
-            mem_budget_mb: 0,
+            mem_budget_mb: env_usize("GOLDDIFF_MEM_BUDGET_MB", 0),
+            resident: env_flag("GOLDDIFF_RESIDENT", true),
             seed: 0,
         }
     }
@@ -149,6 +156,7 @@ impl EngineConfig {
             .set("kernel_tile_q", self.kernel_tile_q)
             .set("shards", self.shards)
             .set("mem_budget_mb", self.mem_budget_mb)
+            .set("resident", self.resident)
             .set("seed", self.seed);
         j
     }
@@ -201,6 +209,10 @@ impl EngineConfig {
             kernel_tile_q: n("kernel_tile_q", def.kernel_tile_q as f64) as usize,
             shards: n("shards", def.shards as f64) as usize,
             mem_budget_mb: n("mem_budget_mb", def.mem_budget_mb as f64) as usize,
+            resident: j
+                .get("resident")
+                .and_then(Json::as_bool)
+                .unwrap_or(def.resident),
             seed: n("seed", def.seed as f64) as u64,
         })
     }
@@ -255,6 +267,9 @@ impl EngineConfig {
         self.kernel_tile_q = args.usize_or("kernel-tile-q", self.kernel_tile_q);
         self.shards = args.usize_or("shards", self.shards);
         self.mem_budget_mb = args.usize_or("mem-budget-mb", self.mem_budget_mb);
+        if let Some(v) = args.get("resident") {
+            self.resident = parse_flag(v);
+        }
         self.steps = args.usize_or("steps", self.steps);
         self.workers = args.usize_or("workers", self.workers);
         self.scan_threads = args.usize_or("scan-threads", self.scan_threads);
@@ -303,6 +318,7 @@ mod tests {
         c.kernel_tile_q = 2;
         c.shards = 6;
         c.mem_budget_mb = 512;
+        c.resident = false;
         let rt = EngineConfig::from_json(&parse(&c.to_json().to_string_compact()).unwrap())
             .unwrap();
         assert_eq!(rt, c);
@@ -344,16 +360,19 @@ mod tests {
         assert_eq!(c.warm_start, env_flag("GOLDDIFF_WARM_START", true));
         assert!(c.ordering, "heap-aware ordering is on by default");
         assert_eq!(c.kernel_tile_q, crate::index::kernel::TILE_Q);
-        // shard count follows the env so the CI sharded leg can flip every
-        // default-constructed retrieval path at once; budget is unbounded
+        // shard count / budget / residency follow the env so the CI
+        // sharded and streamed legs can flip every default-constructed
+        // retrieval path at once
         assert_eq!(c.shards, env_usize("GOLDDIFF_SHARDS", 1));
-        assert_eq!(c.mem_budget_mb, 0);
+        assert_eq!(c.mem_budget_mb, env_usize("GOLDDIFF_MEM_BUDGET_MB", 0));
+        assert_eq!(c.resident, env_flag("GOLDDIFF_RESIDENT", true));
         assert!(crate::index::backend::RetrievalBackendKind::parse(&c.backend).is_some());
         let mut c = EngineConfig::default();
         let raw: Vec<String> = [
             "--backend", "cluster", "--clusters", "32", "--nprobe", "2", "--kernel", "off",
             "--refine-kernel", "off", "--ordering", "off", "--warm-start", "off",
             "--kernel-tile-q", "4", "--shards", "8", "--mem-budget-mb", "256",
+            "--resident", "off",
         ]
         .iter()
         .map(|s| s.to_string())
@@ -366,6 +385,7 @@ mod tests {
         assert_eq!(c.kernel_tile_q, 4);
         assert_eq!(c.shards, 8);
         assert_eq!(c.mem_budget_mb, 256);
+        assert!(!c.resident, "--resident off flips the out-of-core mode");
         let opts = c.backend_opts();
         assert!(!opts.kernel && !opts.refine_kernel && !opts.ordering);
         assert_eq!(opts.tile_q, 4);

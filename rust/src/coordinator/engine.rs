@@ -29,7 +29,8 @@ use super::request::{GenRequest, GenResponse, StepTelemetry};
 use super::stats::EngineStats;
 use super::xla_denoiser::XlaDenoiser;
 use crate::config::EngineConfig;
-use crate::data::dataset::{Dataset, IvfPartition};
+use crate::data::dataset::{Dataset, IvfPartition, ShardIvfPartition};
+use crate::data::shard::ShardPlan;
 use crate::data::store;
 use crate::denoiser::{DenoiserKind, StepContext};
 use crate::index::backend::{RetrievalBackend, RetrievalBackendKind};
@@ -69,12 +70,28 @@ pub struct Engine {
 impl Engine {
     /// Load (or synthesise) the dataset, open the runtime, spawn the
     /// executor thread.
+    ///
+    /// Corpus residency: `cfg.resident = false` — or `shards > 1` with a
+    /// positive `mem_budget_mb`, which implies the out-of-core mode —
+    /// serves the corpus **data-free**: the `.gds` store is opened via
+    /// [`store::open_streaming`] (headers, proxies, shard bounds and stats
+    /// only; the `data` section never loads) and rows stream
+    /// shard-at-a-time through a budget-bounded LRU. Output is
+    /// byte-identical to a resident engine.
     pub fn start(cfg: EngineConfig) -> Result<Engine> {
+        let resident = cfg.resident && !(cfg.shards > 1 && cfg.mem_budget_mb > 0);
+        let store_path = store::store_path(&cfg.data_dir, &cfg.preset);
         // a freshly synthesised store is saved with the engine's shard
         // plan so the streaming path can seek per-shard sections
-        let mut ds =
+        let mut ds = if resident {
             store::load_or_synthesize_sharded(&cfg.data_dir, &cfg.preset, cfg.seed, cfg.shards)
-                .context("loading dataset")?;
+                .context("loading dataset")?
+        } else {
+            store::ensure_store(&cfg.data_dir, &cfg.preset, cfg.seed, cfg.shards.max(1))
+                .context("materialising the store to stream from")?;
+            store::open_streaming(&store_path, cfg.shards.max(1), cfg.mem_budget_mb)
+                .context("opening dataset for streaming")?
+        };
         let kind = ScheduleKind::parse(&cfg.schedule)
             .with_context(|| format!("unknown schedule {}", cfg.schedule))?;
         let sched = NoiseSchedule::new(kind, cfg.steps);
@@ -83,9 +100,10 @@ impl Engine {
         if backend_kind == RetrievalBackendKind::ClusterPruned && cfg.shards <= 1 {
             // the IVF partition persists in the .gds store; only a config
             // mismatch (lists/seed) pays the k-means here, and the result
-            // is written back (best-effort) so the next start skips it.
-            // (A sharded cluster backend partitions per shard instead, so
-            // the global partition is neither needed nor computed.)
+            // is written back (best-effort, resident corpora only — a
+            // streamed dataset cannot rewrite its own backing store) so
+            // the next start skips it. (A sharded cluster backend
+            // partitions per shard instead — see below.)
             let lists = cfg.clusters.clamp(1, ds.n.max(1));
             let stale = ds
                 .ivf
@@ -93,20 +111,37 @@ impl Engine {
                 .is_none_or(|p| !p.matches(lists, cfg.seed));
             if stale {
                 ds.ivf = Some(IvfPartition::compute(&ds, lists, cfg.seed));
-                let _ = store::save(&ds, &store::store_path(&cfg.data_dir, &cfg.preset));
+                if ds.is_resident() {
+                    let _ = store::save(&ds, &store_path);
+                }
+            }
+        }
+        if backend_kind == RetrievalBackendKind::ClusterPruned && cfg.shards > 1 {
+            // satellite: the *per-shard* partitions persist too, so a
+            // sharded cluster engine stops paying per-shard k-means on
+            // every start. k-means runs over the proxies (always
+            // resident), so streamed datasets compute — they just skip
+            // the write-back.
+            let ns = ShardPlan::new(ds.n, cfg.shards).count();
+            let per_shard = cfg.clusters.max(1).div_ceil(ns).max(1);
+            let stale = ds
+                .shard_ivf
+                .as_ref()
+                .is_none_or(|p| !p.matches(ns, per_shard, cfg.seed));
+            if stale {
+                ds.shard_ivf =
+                    Some(ShardIvfPartition::compute(&ds, cfg.shards, per_shard, cfg.seed));
+                if ds.is_resident() {
+                    let _ = store::save_sharded(&ds, &store_path, cfg.shards);
+                }
             }
         }
         let ds = Arc::new(ds);
         // built once per engine (cluster-pruned reuses the persisted IVF
-        // partition here) and shared by every denoiser so telemetry
-        // aggregates in one place. A sharded backend under a memory budget
-        // streams evicted shards back from the .gds store.
-        let store_path = store::store_path(&cfg.data_dir, &cfg.preset);
-        let backend: Arc<dyn RetrievalBackend> = backend_kind.build_with_store(
-            &ds,
-            cfg.backend_opts(),
-            (cfg.shards > 1 && cfg.mem_budget_mb > 0).then_some(store_path.as_path()),
-        );
+        // partitions here) and shared by every denoiser so telemetry
+        // aggregates in one place; row residency routes through the
+        // dataset's source, so a streamed corpus serves every backend kind
+        let backend: Arc<dyn RetrievalBackend> = backend_kind.build(&ds, cfg.backend_opts());
         let runtime = SendRuntime(Runtime::new(&cfg.artifacts_dir)?);
 
         let queue = Arc::new(BoundedQueue::<Submission>::new(cfg.queue_depth));
@@ -115,6 +150,7 @@ impl Engine {
             let mut st = stats.lock().unwrap();
             st.backend = backend_kind.name().to_string();
             st.shards = cfg.shards.max(1);
+            st.resident = ds.is_resident();
         }
         let d = ds.d;
         let preset = cfg.preset.clone();
@@ -366,6 +402,10 @@ fn executor_loop(
             let mut st = stats.lock().unwrap();
             st.retrieval_time.record_secs(group_scan);
             st.record_backend(backend.stats());
+            // streamed corpora additionally surface the row source's own
+            // residency counters (the authoritative record when the
+            // monolithic backends stream without a shard layer)
+            st.record_source(ds.source_stats());
         }
 
         // ---- completions -------------------------------------------------
@@ -574,6 +614,45 @@ mod tests {
             eng.shutdown();
         }
         assert_eq!(samples[0], samples[1], "shards=1 vs shards=4");
+    }
+
+    #[test]
+    fn streamed_engine_serves_byte_identical_samples() {
+        // the out-of-core engine (resident = false, bounded budget) must
+        // serve byte-identical samples to the resident one and surface the
+        // streaming telemetry through the stats op
+        if !std::path::Path::new("artifacts/manifest.json").exists() {
+            return;
+        }
+        let data_dir = std::env::temp_dir().join("golddiff_engine_streamed_test");
+        let mut samples: Vec<Vec<f32>> = Vec::new();
+        for resident in [true, false] {
+            let cfg = EngineConfig {
+                preset: "moons".into(),
+                data_dir: data_dir.clone(),
+                backend: "batched".into(),
+                shards: 4,
+                mem_budget_mb: if resident { 0 } else { 1 },
+                resident,
+                ..Default::default()
+            };
+            let eng = Engine::start(cfg).unwrap();
+            let resp = eng.generate(DenoiserKind::GoldDiff, 321, None).unwrap();
+            assert!(resp.sample.iter().all(|v| v.is_finite()));
+            let j = eng.stats_json();
+            assert_eq!(
+                j.get("resident").unwrap().as_bool(),
+                Some(resident),
+                "the stats op must surface the serving mode"
+            );
+            if !resident {
+                let streamed = j.get("rows_streamed").unwrap().as_f64().unwrap();
+                assert!(streamed > 0.0, "streamed serving must stream rows");
+            }
+            samples.push(resp.sample);
+            eng.shutdown();
+        }
+        assert_eq!(samples[0], samples[1], "resident vs streamed");
     }
 
     #[test]

@@ -45,6 +45,12 @@ pub struct EngineStats {
     pub shards_scanned: u64,
     pub shards_skipped: u64,
     pub shard_evictions: u64,
+    /// is the full-resolution corpus resident (false = streamed serving)
+    pub resident: bool,
+    /// out-of-core telemetry: rows read off the `.gds` store, and the
+    /// high-water mark of resident row-block bytes under the LRU budget
+    pub rows_streamed: u64,
+    pub peak_row_bytes: u64,
 }
 
 impl Default for EngineStats {
@@ -75,6 +81,9 @@ impl Default for EngineStats {
             shards_scanned: 0,
             shards_skipped: 0,
             shard_evictions: 0,
+            resident: true,
+            rows_streamed: 0,
+            peak_row_bytes: 0,
         }
     }
 }
@@ -117,6 +126,18 @@ impl EngineStats {
         self.shards_scanned = snap.shards_scanned;
         self.shards_skipped = snap.shards_skipped;
         self.shard_evictions = snap.shard_evictions;
+        self.rows_streamed = snap.rows_streamed;
+        self.peak_row_bytes = snap.peak_row_bytes;
+    }
+
+    /// Record the row source's residency snapshot — the authoritative
+    /// out-of-core counters for a streamed corpus (`None` = resident, a
+    /// no-op so backend-layer numbers stand).
+    pub fn record_source(&mut self, snap: Option<crate::data::rows::RowSourceStats>) {
+        if let Some(s) = snap {
+            self.rows_streamed = s.rows_streamed;
+            self.peak_row_bytes = s.peak_row_bytes;
+        }
     }
 
     /// Proxy rows evaluated per full table traversal (≈ n for a batched
@@ -160,7 +181,10 @@ impl EngineStats {
             .set("shards", self.shards)
             .set("shards_scanned", self.shards_scanned as usize)
             .set("shards_skipped", self.shards_skipped as usize)
-            .set("shard_evictions", self.shard_evictions as usize);
+            .set("shard_evictions", self.shard_evictions as usize)
+            .set("resident", self.resident)
+            .set("rows_streamed", self.rows_streamed as usize)
+            .set("peak_row_bytes", self.peak_row_bytes as usize);
         j
     }
 }
@@ -189,6 +213,10 @@ mod tests {
         assert_eq!(j.get("shards_scanned").unwrap().as_f64(), Some(0.0));
         assert_eq!(j.get("shards_skipped").unwrap().as_f64(), Some(0.0));
         assert_eq!(j.get("shard_evictions").unwrap().as_f64(), Some(0.0));
+        // out-of-core telemetry is always present too
+        assert_eq!(j.get("resident").unwrap().as_bool(), Some(true));
+        assert_eq!(j.get("rows_streamed").unwrap().as_f64(), Some(0.0));
+        assert_eq!(j.get("peak_row_bytes").unwrap().as_f64(), Some(0.0));
     }
 
     #[test]
@@ -210,6 +238,8 @@ mod tests {
             shards_scanned: 44,
             shards_skipped: 4,
             shard_evictions: 2,
+            rows_streamed: 880,
+            peak_row_bytes: 4096,
         });
         let j = s.to_json();
         assert_eq!(j.get("clusters_pruned").unwrap().as_f64(), Some(24.0));
@@ -224,6 +254,17 @@ mod tests {
         assert_eq!(j.get("shards_scanned").unwrap().as_f64(), Some(44.0));
         assert_eq!(j.get("shards_skipped").unwrap().as_f64(), Some(4.0));
         assert_eq!(j.get("shard_evictions").unwrap().as_f64(), Some(2.0));
+        assert_eq!(j.get("rows_streamed").unwrap().as_f64(), Some(880.0));
+        assert_eq!(j.get("peak_row_bytes").unwrap().as_f64(), Some(4096.0));
+        // the source snapshot overrides the backend copy when streamed
+        s.record_source(Some(crate::data::rows::RowSourceStats {
+            rows_streamed: 1000,
+            peak_row_bytes: 9000,
+            ..Default::default()
+        }));
+        assert_eq!(s.rows_streamed, 1000);
+        s.record_source(None);
+        assert_eq!(s.rows_streamed, 1000, "resident snapshot is a no-op");
         assert_eq!(
             j.get("retrieval_backend").unwrap().as_str(),
             Some("cluster")

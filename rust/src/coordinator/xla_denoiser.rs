@@ -140,7 +140,11 @@ impl XlaDenoiser {
         if self.resident_full.is_none() {
             let bucket = self.full_bucket();
             let mut data = vec![0.0f32; bucket * ds.d];
-            data[..ds.n * ds.d].copy_from_slice(&ds.data);
+            // staged shard-at-a-time through the row source: a streamed
+            // corpus fills the upload buffer off the LRU (budget-bounded
+            // host residency beyond this one staging buffer) with the
+            // exact bytes the resident copy would supply
+            ds.copy_all_rows_into(&mut data[..ds.n * ds.d]);
             let mut mask = vec![0.0f32; bucket];
             mask[..ds.n].fill(1.0);
             let cand = Rc::new(self.rt.upload(&data, &[bucket, ds.d])?);

@@ -1,11 +1,16 @@
-//! The in-memory dataset: raw corpus + every derived structure the serving
-//! engine needs (proxy table, class shards, clusters, local PCA bases,
-//! global Gaussian stats, and the population GMM for the oracle).
+//! The dataset: full-resolution rows behind a pluggable [`RowSource`]
+//! (resident corpus or `.gds`-streamed shards) + every derived structure
+//! the serving engine needs (proxy table, class shards, clusters, local
+//! PCA bases, global Gaussian stats, and the population GMM for the
+//! oracle). Everything except the rows themselves is always resident —
+//! the streamed mode trades only the `n × d` corpus for an LRU budget.
 
 use std::sync::OnceLock;
 
 use super::cluster::{kmeans, local_pca};
 use super::gmm::GmmSpec;
+use super::rows::{RowCursor, RowSource, RowSourceStats, StreamedRows};
+use super::shard::ShardPlan;
 use super::synthetic::{build_population, proxy_embed_all, PresetSpec};
 use crate::index::kernel::{ProxyBlocks, RowBlocks};
 use crate::util::rng::Pcg64;
@@ -55,6 +60,70 @@ impl IvfPartition {
     }
 }
 
+/// The *per-shard* IVF partitions of a sharded cluster engine, keyed by
+/// `(shards, lists-per-shard, seed)` and persisted in the `.gds` store
+/// (v3 `ivf_shard_i_*` sections) so a sharded cluster engine start stops
+/// paying per-shard k-means every time. Assignments are shard-local row
+/// indices; shard `i` of a 1-shard plan reproduces the global
+/// [`IvfPartition`] k-means verbatim (same rng stream discipline).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardIvfPartition {
+    /// shard count the partitions were built for
+    pub shards: usize,
+    /// per-shard list budget (the `⌈clusters/shards⌉` figure; each shard
+    /// clamps it to its own row count)
+    pub lists: usize,
+    /// rng seed every shard's k-means stream derives from
+    pub seed: u64,
+    /// per shard: centroids `[lists_i × proxy_d]`
+    pub centroids: Vec<Vec<f32>>,
+    /// per shard: list assignment per *local* row `[rows_i]`
+    pub assignments: Vec<Vec<u32>>,
+}
+
+impl ShardIvfPartition {
+    /// Deterministic per-shard k-means over the proxy table — the single
+    /// source of truth the sharded cluster backend reuses verbatim
+    /// (`index::shard::build_shard_ivf` derives members/radii/blocks from
+    /// these assignments, so a persisted partition is bit-identical to a
+    /// fresh one).
+    pub fn compute(ds: &Dataset, shards: usize, lists: usize, seed: u64) -> ShardIvfPartition {
+        let plan = ShardPlan::new(ds.n, shards);
+        let pd = ds.proxy_d;
+        let mut centroids = Vec::with_capacity(plan.count());
+        let mut assignments = Vec::with_capacity(plan.count());
+        for sh in 0..plan.count() {
+            let (s, e) = plan.range(sh);
+            let rows = e - s;
+            if rows == 0 {
+                centroids.push(Vec::new());
+                assignments.push(Vec::new());
+                continue;
+            }
+            let k = lists.clamp(1, rows);
+            let mut rng = Pcg64::with_stream(
+                seed ^ (sh as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15),
+                0x1f5,
+            );
+            let (c, a) = kmeans(&ds.proxies[s * pd..e * pd], rows, pd, k, 8, &mut rng);
+            centroids.push(c);
+            assignments.push(a);
+        }
+        ShardIvfPartition {
+            shards: plan.count(),
+            lists,
+            seed,
+            centroids,
+            assignments,
+        }
+    }
+
+    /// Does this partition serve a `(shards, lists, seed)` config verbatim?
+    pub fn matches(&self, shards: usize, lists: usize, seed: u64) -> bool {
+        self.shards == shards && self.lists == lists && self.seed == seed
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct Dataset {
     pub name: String,
@@ -67,8 +136,12 @@ pub struct Dataset {
     pub classes: usize,
     pub conditional: bool,
 
-    /// flat corpus [n × d]
-    pub data: Vec<f32>,
+    /// full-resolution row storage — resident corpus or `.gds`-streamed
+    /// shards. Nothing outside the source/store internals touches the raw
+    /// rows; every consumer goes through [`Dataset::row`],
+    /// [`Dataset::row_cursor`] / [`Dataset::visit_rows`] /
+    /// [`Dataset::gather_rows`], or the blocked accessors.
+    pub(crate) rows: RowSource,
     /// class labels [n]
     pub labels: Vec<u32>,
     /// s=1/4 proxy table [n × proxy_d]
@@ -88,6 +161,8 @@ pub struct Dataset {
     pub class_rows: Vec<Vec<u32>>,
     /// persisted IVF partition, if the `.gds` store carried one
     pub ivf: Option<IvfPartition>,
+    /// persisted per-shard IVF partitions, if the `.gds` store carried them
+    pub shard_ivf: Option<ShardIvfPartition>,
 
     /// global Gaussian stats (Wiener)
     pub mean: Vec<f32>,
@@ -198,13 +273,14 @@ impl Dataset {
             proxy_d: spec.proxy_d(),
             classes: spec.classes,
             conditional: spec.conditional,
-            data,
+            rows: RowSource::Resident(data),
             labels,
             proxies,
             proxy_blocks,
             row_blocks: OnceLock::new(),
             class_rows,
             ivf: None,
+            shard_ivf: None,
             mean,
             var,
             centroids,
@@ -215,9 +291,68 @@ impl Dataset {
         }
     }
 
+    /// Zero-copy borrow of row `i` — **resident sources only**. Production
+    /// paths that may serve a streamed corpus use [`Dataset::row_cursor`] /
+    /// [`Dataset::visit_rows`] instead; this accessor stays for the
+    /// synthesis/ingest path, tests and bench harnesses, and panics loudly
+    /// if a streamed path ever slips through to it.
     #[inline]
     pub fn row(&self, i: usize) -> &[f32] {
-        &self.data[i * self.d..(i + 1) * self.d]
+        match &self.rows {
+            RowSource::Resident(data) => &data[i * self.d..(i + 1) * self.d],
+            RowSource::Streamed(_) => panic!(
+                "Dataset::row({i}) on a streamed corpus — route row access \
+                 through Dataset::row_cursor / visit_rows / gather_rows"
+            ),
+        }
+    }
+
+    /// Is the full-resolution corpus resident in RAM?
+    pub fn is_resident(&self) -> bool {
+        matches!(self.rows, RowSource::Resident(_))
+    }
+
+    /// The flat resident corpus, when there is one (`None` when streamed).
+    pub fn resident_rows(&self) -> Option<&[f32]> {
+        match &self.rows {
+            RowSource::Resident(data) => Some(data),
+            RowSource::Streamed(_) => None,
+        }
+    }
+
+    /// The streamed row source, when the corpus is disk-backed.
+    pub fn streamed(&self) -> Option<&std::sync::Arc<StreamedRows>> {
+        match &self.rows {
+            RowSource::Resident(_) => None,
+            RowSource::Streamed(src) => Some(src),
+        }
+    }
+
+    /// Residency telemetry of a streamed source (`None` when resident).
+    pub fn source_stats(&self) -> Option<RowSourceStats> {
+        self.streamed().map(|src| src.stats())
+    }
+
+    /// Source-agnostic sequential row access (see [`RowCursor`]): resident
+    /// rows borrow straight from the corpus, streamed rows pin one shard's
+    /// blocks at a time through the LRU.
+    pub fn row_cursor(&self) -> RowCursor<'_> {
+        RowCursor::new(&self.rows, self.d)
+    }
+
+    /// Visit rows `ids` **in the given order**, calling `f(gid, row)` for
+    /// each. Bit-identical values across sources; on a streamed corpus
+    /// consecutive ids inside one shard share a single LRU probe, so
+    /// ascending visits degrade gracefully to shard-at-a-time passes.
+    pub fn visit_rows(
+        &self,
+        ids: impl IntoIterator<Item = u32>,
+        mut f: impl FnMut(u32, &[f32]),
+    ) {
+        let mut cur = self.row_cursor();
+        for gid in ids {
+            f(gid, cur.row(gid));
+        }
     }
 
     #[inline]
@@ -227,21 +362,127 @@ impl Dataset {
 
     /// The pre-blocked full-resolution corpus, transposed on first use
     /// (thread-safe; every subsequent call returns the same resident copy).
+    /// Resident sources only — a streamed corpus never materialises the
+    /// whole blocked table; its consumers go shard-at-a-time through
+    /// [`StreamedRows::shard_blocks`] instead.
     pub fn row_blocks(&self) -> &RowBlocks {
-        self.row_blocks
-            .get_or_init(|| RowBlocks::build(&self.data, self.n, self.d))
+        self.row_blocks.get_or_init(|| match &self.rows {
+            RowSource::Resident(data) => RowBlocks::build(data, self.n, self.d),
+            RowSource::Streamed(_) => panic!(
+                "Dataset::row_blocks on a streamed corpus — refine paths \
+                 stream per-shard blocks through the row source instead"
+            ),
+        })
+    }
+
+    /// Rows `[s, e)` as a pre-blocked kernel table harvesting global ids —
+    /// the build a (possibly evicted) corpus shard rebuilds from. Resident:
+    /// gathered from the corpus; streamed: read off the store (bit-identical
+    /// either way).
+    pub fn build_range_blocks(&self, s: usize, e: usize) -> RowBlocks {
+        let ids: Vec<u32> = (s as u32..e as u32).collect();
+        match &self.rows {
+            RowSource::Resident(data) => RowBlocks::build_subset(data, self.d, &ids),
+            RowSource::Streamed(src) => {
+                RowBlocks::build_local(&src.read_range(s, e), self.d, ids)
+            }
+        }
+    }
+
+    /// Fill `out` (`n × d`) with the whole corpus, shard-at-a-time through
+    /// the row source — the staging path for whole-corpus device uploads.
+    /// A streamed source never holds more than the LRU budget beyond `out`
+    /// itself; the bytes are identical to the resident copy.
+    pub fn copy_all_rows_into(&self, out: &mut [f32]) {
+        assert_eq!(out.len(), self.n * self.d);
+        match &self.rows {
+            RowSource::Resident(data) => out.copy_from_slice(data),
+            RowSource::Streamed(src) => {
+                for sh in 0..src.plan().count() {
+                    let (s, e) = src.plan().range(sh);
+                    let blocks = src.shard_blocks(sh);
+                    for r in s..e {
+                        blocks
+                            .copy_row_into(r - s, &mut out[r * self.d..(r + 1) * self.d]);
+                    }
+                }
+            }
+        }
     }
 
     /// Gather rows into a caller-provided padded buffer [bucket × d]; rows
-    /// beyond `idx.len()` are zero-filled. Returns the validity mask length.
+    /// beyond `idx.len()` are zero-filled. Routed through the row source,
+    /// so streamed corpora gather through the shard LRU.
     pub fn gather_rows(&self, idx: &[u32], bucket: usize, out: &mut Vec<f32>, mask: &mut Vec<f32>) {
         out.clear();
         out.resize(bucket * self.d, 0.0);
         mask.clear();
         mask.resize(bucket, 0.0);
+        let mut cur = self.row_cursor();
         for (slot, &i) in idx.iter().take(bucket).enumerate() {
-            out[slot * self.d..(slot + 1) * self.d].copy_from_slice(self.row(i as usize));
+            out[slot * self.d..(slot + 1) * self.d].copy_from_slice(cur.row(i));
             mask[slot] = 1.0;
+        }
+    }
+
+    /// Shard-aware ingest: a copy of this dataset with rows permuted so
+    /// proxy-space k-means cluster members are contiguous. Contiguous
+    /// shards then become spatially coherent, which is what lets the warm
+    /// screen's whole-shard covering-radius bound actually skip shards on
+    /// real corpora. Deterministic in `(lists, seed)`; ingest-time only
+    /// (requires a resident corpus). Row-order-keyed derived structures
+    /// (labels, class rows, per-row cluster assignments, proxy blocks) are
+    /// permuted/rebuilt; order-free global stats (mean/var, PCA bases,
+    /// GMM) carry over; persisted IVF partitions are dropped (keyed to the
+    /// old order).
+    pub fn with_clustered_rows(&self, lists: usize, seed: u64) -> Dataset {
+        let data = self
+            .resident_rows()
+            .expect("clustered ingest needs a resident corpus");
+        let part = IvfPartition::compute(self, lists, seed);
+        let mut order: Vec<usize> = (0..self.n).collect();
+        order.sort_by_key(|&i| (part.assignments[i], i as u32));
+        let (d, pd) = (self.d, self.proxy_d);
+        let mut new_data = vec![0.0f32; self.n * d];
+        let mut new_proxies = vec![0.0f32; self.n * pd];
+        let mut new_labels = vec![0u32; self.n];
+        let mut new_assign = vec![0u32; self.n];
+        for (new, &old) in order.iter().enumerate() {
+            new_data[new * d..(new + 1) * d].copy_from_slice(&data[old * d..(old + 1) * d]);
+            new_proxies[new * pd..(new + 1) * pd]
+                .copy_from_slice(&self.proxies[old * pd..(old + 1) * pd]);
+            new_labels[new] = self.labels[old];
+            new_assign[new] = self.assignments[old];
+        }
+        let mut class_rows = vec![Vec::new(); self.classes];
+        for (i, &y) in new_labels.iter().enumerate() {
+            class_rows[y as usize].push(i as u32);
+        }
+        Dataset {
+            name: self.name.clone(),
+            n: self.n,
+            h: self.h,
+            w: self.w,
+            c: self.c,
+            d,
+            proxy_d: pd,
+            classes: self.classes,
+            conditional: self.conditional,
+            rows: RowSource::Resident(new_data),
+            labels: new_labels,
+            proxy_blocks: ProxyBlocks::build(&new_proxies, self.n, pd),
+            proxies: new_proxies,
+            row_blocks: OnceLock::new(),
+            class_rows,
+            ivf: None,
+            shard_ivf: None,
+            mean: self.mean.clone(),
+            var: self.var.clone(),
+            centroids: self.centroids.clone(),
+            assignments: new_assign,
+            pca_bases: self.pca_bases.clone(),
+            pca_centers: self.pca_centers.clone(),
+            gmm: self.gmm.clone(),
         }
     }
 
@@ -268,8 +509,11 @@ impl Dataset {
         (b, c)
     }
 
+    /// Logical corpus bytes (the paper's Memory-column attribution): the
+    /// full `n × d` rows plus the resident side tables, independent of
+    /// whether the rows are actually resident or streamed.
     pub fn bytes(&self) -> u64 {
-        (self.data.len() + self.proxies.len() + self.mean.len() + self.var.len()) as u64 * 4
+        (self.n * self.d + self.proxies.len() + self.mean.len() + self.var.len()) as u64 * 4
     }
 }
 
@@ -287,7 +531,8 @@ mod tests {
     #[test]
     fn synthesis_produces_consistent_shapes() {
         let ds = tiny();
-        assert_eq!(ds.data.len(), 300 * 256);
+        assert!(ds.is_resident());
+        assert_eq!(ds.resident_rows().unwrap().len(), 300 * 256);
         assert_eq!(ds.proxies.len(), 300 * 16);
         assert_eq!(ds.labels.len(), 300);
         assert_eq!(ds.class_rows.iter().map(Vec::len).sum::<usize>(), 300);
@@ -303,10 +548,10 @@ mod tests {
         };
         let a = Dataset::synthesize(&spec, 7);
         let b = Dataset::synthesize(&spec, 7);
-        assert_eq!(a.data, b.data);
+        assert_eq!(a.resident_rows(), b.resident_rows());
         assert_eq!(a.labels, b.labels);
         let c = Dataset::synthesize(&spec, 8);
-        assert_ne!(a.data, c.data);
+        assert_ne!(a.resident_rows(), c.resident_rows());
     }
 
     #[test]
@@ -377,6 +622,97 @@ mod tests {
         }
         // the accessor memoises one copy
         assert!(std::ptr::eq(rb, ds.row_blocks()));
+    }
+
+    #[test]
+    fn visit_rows_preserves_order_and_values() {
+        let ds = tiny();
+        let ids = [7u32, 0, 299, 7, 150];
+        let mut seen = Vec::new();
+        ds.visit_rows(ids.iter().copied(), |gid, row| {
+            assert_eq!(row, ds.row(gid as usize));
+            seen.push(gid);
+        });
+        assert_eq!(seen, ids, "visit order must be the given order");
+        let mut cur = ds.row_cursor();
+        assert_eq!(cur.row(42), ds.row(42));
+    }
+
+    #[test]
+    fn copy_all_rows_matches_resident_corpus() {
+        let ds = tiny();
+        let mut out = vec![0.0f32; ds.n * ds.d];
+        ds.copy_all_rows_into(&mut out);
+        assert_eq!(out.as_slice(), ds.resident_rows().unwrap());
+        let rb = ds.build_range_blocks(10, 45);
+        assert_eq!(rb.rows, 35);
+        assert_eq!(rb.id(0, 0), 10);
+        let mut row = vec![0.0f32; ds.d];
+        rb.copy_row_into(5, &mut row);
+        assert_eq!(row.as_slice(), ds.row(15));
+    }
+
+    #[test]
+    fn clustered_ingest_permutes_coherently() {
+        // Satellite: shard-aware ingest — cluster members become contiguous
+        // while every row-keyed structure stays consistent
+        let ds = tiny();
+        let cl = ds.with_clustered_rows(8, 5);
+        assert_eq!(cl.n, ds.n);
+        // same multiset of rows: sort both corpora row-wise via first dims
+        let key = |d: &Dataset, i: usize| -> Vec<u32> {
+            d.row(i).iter().take(4).map(|v| v.to_bits()).collect()
+        };
+        let mut a: Vec<Vec<u32>> = (0..ds.n).map(|i| key(&ds, i)).collect();
+        let mut b: Vec<Vec<u32>> = (0..cl.n).map(|i| key(&cl, i)).collect();
+        a.sort();
+        b.sort();
+        assert_eq!(a, b, "ingest must permute, not alter, the rows");
+        // proxies/labels/class_rows follow their row
+        for i in [0usize, 1, 150, 299] {
+            assert_eq!(
+                &cl.proxies[i * cl.proxy_d..(i + 1) * cl.proxy_d],
+                crate::data::synthetic::proxy_embed(cl.row(i), cl.h, cl.w, cl.c).as_slice(),
+                "proxy row {i} must match its permuted row"
+            );
+        }
+        assert_eq!(cl.class_rows.iter().map(Vec::len).sum::<usize>(), cl.n);
+        for (y, rows) in cl.class_rows.iter().enumerate() {
+            assert!(rows.iter().all(|&i| cl.labels[i as usize] == y as u32));
+        }
+        // the permutation is exactly "sorted by (cluster assignment, id)" of
+        // the same deterministic partition — cluster members are contiguous
+        let part = IvfPartition::compute(&ds, 8, 5);
+        let mut order: Vec<usize> = (0..ds.n).collect();
+        order.sort_by_key(|&i| (part.assignments[i], i as u32));
+        for (new, &old) in order.iter().enumerate().step_by(37) {
+            assert_eq!(cl.row(new), ds.row(old), "row {new} must come from {old}");
+            assert_eq!(cl.labels[new], ds.labels[old]);
+        }
+        let permuted_assign: Vec<u32> = order.iter().map(|&i| part.assignments[i]).collect();
+        assert!(
+            permuted_assign.windows(2).all(|w| w[0] <= w[1]),
+            "cluster members must be contiguous after ingest ordering"
+        );
+        // determinism + ivf caches dropped
+        let again = ds.with_clustered_rows(8, 5);
+        assert_eq!(cl.resident_rows(), again.resident_rows());
+        assert!(cl.ivf.is_none() && cl.shard_ivf.is_none());
+    }
+
+    #[test]
+    fn shard_ivf_partition_is_deterministic_and_keyed() {
+        let ds = tiny();
+        let a = ShardIvfPartition::compute(&ds, 4, 3, 9);
+        let b = ShardIvfPartition::compute(&ds, 4, 3, 9);
+        assert_eq!(a, b);
+        assert!(a.matches(4, 3, 9) && !a.matches(4, 3, 10) && !a.matches(5, 3, 9));
+        assert_eq!(a.centroids.len(), 4);
+        let plan = ShardPlan::new(ds.n, 4);
+        for sh in 0..4 {
+            assert_eq!(a.assignments[sh].len(), plan.rows_in(sh));
+            assert_eq!(a.centroids[sh].len() % ds.proxy_d, 0);
+        }
     }
 
     #[test]

@@ -6,11 +6,13 @@
 pub mod cluster;
 pub mod dataset;
 pub mod gmm;
+pub mod rows;
 pub mod shard;
 pub mod store;
 pub mod synthetic;
 
-pub use dataset::{Dataset, IvfPartition};
+pub use dataset::{Dataset, IvfPartition, ShardIvfPartition};
 pub use gmm::GmmSpec;
+pub use rows::{RowCursor, RowSource, RowSourceStats, StreamedRows};
 pub use shard::{CorpusShards, ShardCacheStats, ShardPlan};
 pub use store::ShardReader;

@@ -1,0 +1,388 @@
+//! `RowSource` — pluggable full-resolution row storage behind [`Dataset`].
+//!
+//! The engine's oldest assumption was that the whole corpus lives in one
+//! resident `Vec<f32>`; memory, not compute, capped the dataset size. This
+//! module inverts that: row storage is a two-variant source —
+//!
+//! * [`RowSource::Resident`] — the seed behaviour: the flat `[n × d]`
+//!   corpus in RAM, zero-copy row borrows, the monolithic pre-blocked
+//!   refine table built lazily on top.
+//! * [`RowSource::Streamed`] — the out-of-core mode: the `.gds` store is
+//!   the corpus. Rows are served shard-at-a-time as [`RowBlocks`] through
+//!   an LRU bounded by `mem_budget_mb`; a cold shard streams off disk via
+//!   [`ShardReader`], a hot shard is a cache hit, and the budget (not the
+//!   corpus) is the resident ceiling.
+//!
+//! **Exactness contract.** Streaming changes *where* a row's bytes come
+//! from, never their values: the store holds the exact little-endian f32s
+//! the resident corpus would, the blocked transpose is a verbatim copy,
+//! and every consumer visits rows in the same order either way — so a
+//! `mem_budget_mb`-bounded engine produces byte-identical output to the
+//! resident one (pinned by the `resident ∈ {true, false}` axis of the
+//! determinism matrix in `tests/integration_pipeline.rs`).
+//!
+//! Consumers never read the source directly; they go through the
+//! [`Dataset`] surface (`row` for resident-only borrows, [`RowCursor`] /
+//! `visit_rows` / `gather_rows` for source-agnostic access, and
+//! `build_range_blocks` / `shard_blocks` for the blocked refine tables).
+//!
+//! [`Dataset`]: crate::data::dataset::Dataset
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::data::shard::ShardPlan;
+use crate::data::store::ShardReader;
+use crate::index::kernel::RowBlocks;
+
+/// Full-resolution row storage: resident corpus or disk-streamed shards.
+#[derive(Debug, Clone)]
+pub enum RowSource {
+    /// the flat `[n × d]` corpus resident in RAM (the seed behaviour)
+    Resident(Vec<f32>),
+    /// disk-backed: shard-at-a-time row blocks through a bounded LRU.
+    /// Shared (`Arc`) so the retrieval layer can delegate its own shard
+    /// residency to the one source LRU — one budget, no double caching.
+    Streamed(Arc<StreamedRows>),
+}
+
+/// Snapshot of a streamed source's residency telemetry.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RowSourceStats {
+    /// shards currently resident in the LRU
+    pub resident_shards: usize,
+    /// bytes of resident row blocks right now
+    pub resident_bytes: u64,
+    /// high-water mark of `resident_bytes` over the source's lifetime
+    pub peak_row_bytes: u64,
+    /// full-resolution rows read off disk (cold loads + re-streams)
+    pub rows_streamed: u64,
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+}
+
+#[derive(Debug, Default)]
+struct BlockLru {
+    resident: HashMap<usize, Arc<RowBlocks>>,
+    /// front = least recently used
+    order: VecDeque<usize>,
+    bytes: u64,
+}
+
+/// The streamed row source: a `.gds`-backed corpus served shard-at-a-time
+/// under a byte budget. All methods are `&self` (internally synchronised)
+/// so one source can feed shard-parallel refines.
+#[derive(Debug)]
+pub struct StreamedRows {
+    n: usize,
+    d: usize,
+    plan: ShardPlan,
+    /// LRU budget in bytes for resident row blocks; 0 = unbounded
+    budget_bytes: u64,
+    reader: Mutex<ShardReader>,
+    lru: Mutex<BlockLru>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+    rows_streamed: AtomicU64,
+    peak_bytes: AtomicU64,
+}
+
+impl StreamedRows {
+    /// Wrap an open [`ShardReader`]: the reader's plan is the shard
+    /// granularity rows stream at, `mem_budget_mb` bounds the resident
+    /// blocked working set (0 = unbounded).
+    pub fn new(reader: ShardReader, n: usize, d: usize, mem_budget_mb: usize) -> StreamedRows {
+        StreamedRows {
+            n,
+            d,
+            plan: reader.plan().clone(),
+            budget_bytes: mem_budget_mb as u64 * 1024 * 1024,
+            reader: Mutex::new(reader),
+            lru: Mutex::new(BlockLru::default()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            rows_streamed: AtomicU64::new(0),
+            peak_bytes: AtomicU64::new(0),
+        }
+    }
+
+    #[inline]
+    pub fn n_rows(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    pub fn dim(&self) -> usize {
+        self.d
+    }
+
+    #[inline]
+    pub fn plan(&self) -> &ShardPlan {
+        &self.plan
+    }
+
+    /// The LRU budget in bytes (0 = unbounded) — consumers deciding
+    /// whether to delegate their residency here compare against it.
+    #[inline]
+    pub fn budget_bytes(&self) -> u64 {
+        self.budget_bytes
+    }
+
+    /// Shard `shard`'s rows as a pre-blocked kernel table with global row
+    /// ids: LRU hit, or a cold stream off the store. The returned `Arc`
+    /// keeps the blocks alive past any eviction, so callers may hold it
+    /// across a whole scan.
+    ///
+    /// Panics when the store read fails mid-serve: a streamed corpus has
+    /// no resident fallback, so a vanished/corrupt store is fatal by
+    /// design (the open-time validation in `ShardReader::open` makes this
+    /// unreachable short of the file changing underneath us).
+    pub fn shard_blocks(&self, shard: usize) -> Arc<RowBlocks> {
+        if let Some(rb) = self.touch(shard) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return rb;
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        // stream + transpose OUTSIDE the lru lock so shard-parallel
+        // refines fault cold shards concurrently; a racing builder may
+        // duplicate the (deterministic) work — first insert wins
+        let (s, e) = self.plan.range(shard);
+        let table = self
+            .reader
+            .lock()
+            .unwrap()
+            .read_shard_rows(shard)
+            .unwrap_or_else(|err| {
+                panic!("streamed corpus: reading shard {shard} failed: {err:#}")
+            });
+        self.rows_streamed.fetch_add((e - s) as u64, Ordering::Relaxed);
+        let ids: Vec<u32> = (s as u32..e as u32).collect();
+        let built = Arc::new(RowBlocks::build_local(&table, self.d, ids));
+        drop(table);
+
+        let mut lru = self.lru.lock().unwrap();
+        if let Some(rb) = lru.resident.get(&shard) {
+            return Arc::clone(rb); // lost the race — byte-identical copy
+        }
+        let incoming = built.bytes();
+        if self.budget_bytes > 0 {
+            // evict BEFORE inserting so resident bytes never exceed the
+            // budget — the invariant the debug assert below pins. A shard
+            // larger than the whole budget still gets its one slot.
+            while lru.bytes + incoming > self.budget_bytes && !lru.order.is_empty() {
+                let victim = lru.order.pop_front().unwrap();
+                if let Some(old) = lru.resident.remove(&victim) {
+                    lru.bytes -= old.bytes();
+                    self.evictions.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+        lru.bytes += incoming;
+        lru.resident.insert(shard, Arc::clone(&built));
+        lru.order.push_back(shard);
+        self.peak_bytes.fetch_max(lru.bytes, Ordering::Relaxed);
+        debug_assert!(
+            self.budget_bytes == 0
+                || lru.bytes <= self.budget_bytes
+                || lru.resident.len() == 1,
+            "streamed residency {} exceeds the {}-byte budget with {} shards resident",
+            lru.bytes,
+            self.budget_bytes,
+            lru.resident.len()
+        );
+        built
+    }
+
+    /// Cache lookup: on a hit, move the shard to the MRU position.
+    fn touch(&self, shard: usize) -> Option<Arc<RowBlocks>> {
+        let mut lru = self.lru.lock().unwrap();
+        let rb = Arc::clone(lru.resident.get(&shard)?);
+        if let Some(pos) = lru.order.iter().position(|&x| x == shard) {
+            lru.order.remove(pos);
+        }
+        lru.order.push_back(shard);
+        Some(rb)
+    }
+
+    /// Read an arbitrary row range `[s, e)` straight off the store,
+    /// bypassing the LRU (plan-mismatched consumers — e.g. a backend
+    /// sharded at a different count than the source).
+    pub fn read_range(&self, s: usize, e: usize) -> Vec<f32> {
+        let table = self
+            .reader
+            .lock()
+            .unwrap()
+            .read_row_range(s, e)
+            .unwrap_or_else(|err| {
+                panic!("streamed corpus: reading rows {s}..{e} failed: {err:#}")
+            });
+        self.rows_streamed.fetch_add((e - s) as u64, Ordering::Relaxed);
+        table
+    }
+
+    pub fn stats(&self) -> RowSourceStats {
+        let lru = self.lru.lock().unwrap();
+        RowSourceStats {
+            resident_shards: lru.resident.len(),
+            resident_bytes: lru.bytes,
+            peak_row_bytes: self.peak_bytes.load(Ordering::Relaxed),
+            rows_streamed: self.rows_streamed.load(Ordering::Relaxed),
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Zero the monotonic counters (bench harness hook); resident blocks
+    /// and the peak high-water mark stay.
+    pub fn reset_counters(&self) {
+        self.hits.store(0, Ordering::Relaxed);
+        self.misses.store(0, Ordering::Relaxed);
+        self.evictions.store(0, Ordering::Relaxed);
+        self.rows_streamed.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Source-agnostic sequential row access: resident rows borrow straight
+/// from the corpus; streamed rows pin their shard's blocks (one `Arc` held
+/// at a time, so consecutive ids in one shard pay a single LRU probe) and
+/// copy the lane out into an internal scratch row.
+///
+/// The returned slice is valid until the next `row` call — exactly the
+/// shape every scan loop already has.
+pub struct RowCursor<'a> {
+    source: &'a RowSource,
+    d: usize,
+    cached: Option<(usize, Arc<RowBlocks>)>,
+    scratch: Vec<f32>,
+}
+
+impl<'a> RowCursor<'a> {
+    pub(crate) fn new(source: &'a RowSource, d: usize) -> RowCursor<'a> {
+        RowCursor {
+            source,
+            d,
+            cached: None,
+            scratch: Vec::new(),
+        }
+    }
+
+    /// Row `gid`'s full-resolution values. Bit-identical across sources.
+    #[inline]
+    pub fn row(&mut self, gid: u32) -> &[f32] {
+        match self.source {
+            RowSource::Resident(data) => {
+                let i = gid as usize * self.d;
+                &data[i..i + self.d]
+            }
+            RowSource::Streamed(src) => {
+                let sh = src.plan().shard_of(gid as usize);
+                if !matches!(&self.cached, Some((cached, _)) if *cached == sh) {
+                    self.cached = Some((sh, src.shard_blocks(sh)));
+                }
+                let (start, _) = src.plan().range(sh);
+                let (_, blocks) = self.cached.as_ref().unwrap();
+                self.scratch.resize(self.d, 0.0);
+                blocks.copy_row_into(gid as usize - start, &mut self.scratch);
+                &self.scratch
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::dataset::Dataset;
+    use crate::data::store;
+    use crate::data::synthetic::preset;
+
+    fn saved(n: usize, seed: u64, shards: usize, dir: &str) -> (Dataset, std::path::PathBuf) {
+        let mut spec = preset("cifar-sim").unwrap().clone();
+        spec.n = n;
+        let ds = Dataset::synthesize(&spec, seed);
+        let dir = std::env::temp_dir().join(dir);
+        std::fs::remove_dir_all(&dir).ok();
+        let path = store::store_path(&dir, "cifar-sim");
+        store::save_sharded(&ds, &path, shards).unwrap();
+        (ds, path)
+    }
+
+    #[test]
+    fn cursor_serves_identical_rows_across_sources() {
+        let (ds, path) = saved(90, 3, 4, "golddiff_rows_cursor_test");
+        let streamed = store::open_streaming(&path, 4, 0).unwrap();
+        assert!(!streamed.is_resident() && ds.is_resident());
+        let mut cur = streamed.row_cursor();
+        // in-order, out-of-order and repeated ids all match the resident row
+        for gid in [0u32, 1, 89, 3, 45, 45, 88, 0] {
+            assert_eq!(cur.row(gid), ds.row(gid as usize), "row {gid}");
+        }
+        std::fs::remove_dir_all(path.parent().unwrap()).ok();
+    }
+
+    #[test]
+    fn lru_respects_budget_and_tracks_peak() {
+        // cifar-sim rows are 3072 f32s; 200 rows ≈ 2.4 MiB across 4 shards,
+        // so a 1 MiB budget must evict while serving every shard
+        let (ds, path) = saved(200, 7, 4, "golddiff_rows_lru_test");
+        let streamed = store::open_streaming(&path, 4, 1).unwrap();
+        let src = streamed.streamed().expect("streamed source");
+        let shard_bytes = src.shard_blocks(0).bytes();
+        for round in 0..2 {
+            for sh in 0..4 {
+                let blocks = src.shard_blocks(sh);
+                let (s, e) = src.plan().range(sh);
+                assert_eq!(blocks.rows, e - s, "round {round} shard {sh}");
+            }
+        }
+        let st = src.stats();
+        assert!(st.evictions > 0, "1 MiB budget must evict: {st:?}");
+        assert!(st.resident_bytes <= 1024 * 1024, "budget holds: {st:?}");
+        assert!(
+            st.peak_row_bytes >= shard_bytes && st.peak_row_bytes <= 1024 * 1024,
+            "peak within (shard, budget): {st:?}"
+        );
+        assert!(st.rows_streamed >= ds.n as u64, "cold loads stream rows");
+        assert!(st.hits + st.misses >= 8, "every touch is accounted");
+        std::fs::remove_dir_all(path.parent().unwrap()).ok();
+    }
+
+    #[test]
+    fn unbounded_budget_keeps_every_shard_and_hits() {
+        let (_ds, path) = saved(80, 11, 3, "golddiff_rows_unbounded_test");
+        let streamed = store::open_streaming(&path, 3, 0).unwrap();
+        let src = streamed.streamed().unwrap();
+        for sh in 0..3 {
+            let a = src.shard_blocks(sh);
+            let b = src.shard_blocks(sh);
+            assert!(Arc::ptr_eq(&a, &b), "second touch is the same copy");
+        }
+        let st = src.stats();
+        assert_eq!(st.misses, 3);
+        assert_eq!(st.hits, 3);
+        assert_eq!(st.evictions, 0);
+        assert_eq!(st.resident_shards, 3);
+        std::fs::remove_dir_all(path.parent().unwrap()).ok();
+    }
+
+    #[test]
+    fn read_range_matches_resident_rows_across_shard_boundaries() {
+        let (ds, path) = saved(70, 13, 4, "golddiff_rows_range_test");
+        let streamed = store::open_streaming(&path, 4, 0).unwrap();
+        let src = streamed.streamed().unwrap();
+        for (s, e) in [(0usize, 5usize), (10, 40), (0, 70), (69, 70)] {
+            let got = src.read_range(s, e);
+            let mut want = Vec::new();
+            for i in s..e {
+                want.extend_from_slice(ds.row(i));
+            }
+            assert_eq!(got, want, "range {s}..{e}");
+        }
+        std::fs::remove_dir_all(path.parent().unwrap()).ok();
+    }
+}

@@ -14,9 +14,12 @@
 //!   scans skip shards with no support outright).
 //! * Full-resolution [`RowBlocks`] are built per shard on first refine use
 //!   and cached in an LRU bounded by `mem_budget` bytes: cold shards are
-//!   evicted least-recently-used and rebuilt on the next touch — from the
-//!   `.gds` store via a [`ShardReader`] when one is attached (the v3
-//!   streaming path), or by re-gathering the resident corpus otherwise.
+//!   evicted least-recently-used and rebuilt on the next touch through the
+//!   dataset's [`RowSource`](crate::data::rows::RowSource) — re-gathered
+//!   from the resident corpus, or streamed off the `.gds` store when the
+//!   corpus is disk-backed. When the dataset's streamed source shares this
+//!   layer's shard plan, residency **delegates** to the source's own LRU
+//!   outright: one budget, one cache, no duplicated blocks.
 //!
 //! On every exact path the layer never changes *what* is computed — every
 //! consumer (`index::shard::ShardedBackend`) merges per-shard results
@@ -30,7 +33,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::data::dataset::Dataset;
-use crate::data::store::ShardReader;
+use crate::data::rows::StreamedRows;
 use crate::index::kernel::{ProxyBlocks, RowBlocks};
 use crate::util::threadpool::split_ranges;
 
@@ -121,11 +124,15 @@ pub struct ShardCacheStats {
     pub shards: usize,
     pub resident: usize,
     pub resident_bytes: u64,
+    /// high-water mark of `resident_bytes` over the cache's lifetime
+    pub peak_row_bytes: u64,
     pub hits: u64,
     pub misses: u64,
     pub evictions: u64,
     /// row-block builds fed from the `.gds` store (streamed path)
     pub streamed_loads: u64,
+    /// full-resolution rows read off disk (0 for a resident corpus)
+    pub rows_streamed: u64,
 }
 
 /// The sharded corpus: per-shard proxy tables (resident) plus LRU-cached,
@@ -137,11 +144,17 @@ pub struct CorpusShards {
     /// LRU budget in bytes for resident row blocks; 0 = unbounded
     budget_bytes: u64,
     lru: Mutex<Lru>,
-    reader: Option<Mutex<ShardReader>>,
+    /// the dataset's streamed row source when its shard plan matches ours —
+    /// row-block residency then delegates to the source's LRU (one budget,
+    /// no double caching). `None` for resident corpora and for the rare
+    /// plan-mismatched streamed case (which builds through its own LRU via
+    /// range reads instead).
+    source: Option<Arc<StreamedRows>>,
     hits: AtomicU64,
     misses: AtomicU64,
     evictions: AtomicU64,
     streamed_loads: AtomicU64,
+    peak_bytes: AtomicU64,
 }
 
 impl CorpusShards {
@@ -187,24 +200,33 @@ impl CorpusShards {
                 }
             })
             .collect();
+        // delegate row-block residency to a plan-matched streamed source:
+        // the dataset's LRU (and budget) is then the single cache. Only
+        // sound when the source's budget honours ours (in the engine both
+        // knobs are cfg.mem_budget_mb, so delegation always engages); a
+        // direct-API mismatch keeps this layer's own bounded LRU — still
+        // streamed, via range reads — so `mem_budget_mb` always binds.
+        let own_budget = mem_budget_mb as u64 * 1024 * 1024;
+        let source = ds
+            .streamed()
+            .filter(|src| *src.plan() == plan)
+            .filter(|src| {
+                own_budget == 0
+                    || (src.budget_bytes() > 0 && src.budget_bytes() <= own_budget)
+            })
+            .cloned();
         CorpusShards {
             plan,
             proxy,
             budget_bytes: mem_budget_mb as u64 * 1024 * 1024,
             lru: Mutex::new(Lru::default()),
-            reader: None,
+            source,
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
             streamed_loads: AtomicU64::new(0),
+            peak_bytes: AtomicU64::new(0),
         }
-    }
-
-    /// Attach a `.gds` shard reader: evicted shards rebuild their row
-    /// blocks from the store file instead of the resident corpus.
-    pub fn with_reader(mut self, reader: ShardReader) -> Self {
-        self.reader = Some(Mutex::new(reader));
-        self
     }
 
     #[inline]
@@ -217,16 +239,20 @@ impl CorpusShards {
         &self.proxy[shard]
     }
 
-    /// Is the streamed (disk-backed) rebuild path attached?
+    /// Does row-block residency delegate to the dataset's streamed source?
     pub fn is_streamed(&self) -> bool {
-        self.reader.is_some()
+        self.source.is_some()
     }
 
-    /// The shard's full-resolution row blocks: LRU-cached, built on first
-    /// touch (streamed from the store when a reader is attached, gathered
-    /// from the resident corpus otherwise) and evicted least-recently-used
-    /// once resident bytes exceed the budget.
+    /// The shard's full-resolution row blocks: served by the dataset's
+    /// streamed source when its plan matches (one shared LRU), otherwise
+    /// LRU-cached here — built on first touch through the dataset's row
+    /// source and evicted least-recently-used once resident bytes exceed
+    /// the budget.
     pub fn row_blocks(&self, shard: usize, ds: &Dataset) -> Arc<RowBlocks> {
+        if let Some(src) = &self.source {
+            return src.shard_blocks(shard);
+        }
         if let Some(rb) = self.touch(shard) {
             self.hits.fetch_add(1, Ordering::Relaxed);
             return rb;
@@ -244,6 +270,7 @@ impl CorpusShards {
         lru.bytes += built.bytes();
         lru.resident.insert(shard, Arc::clone(&built));
         lru.order.push_back(shard);
+        self.peak_bytes.fetch_max(lru.bytes, Ordering::Relaxed);
         if self.budget_bytes > 0 {
             // keep at least the shard just requested resident — a budget
             // smaller than one shard must not thrash the current user
@@ -274,38 +301,53 @@ impl CorpusShards {
     }
 
     fn build_row_blocks(&self, shard: usize, ds: &Dataset) -> RowBlocks {
-        let (s, e) = self.plan.range(shard);
-        let ids: Vec<u32> = (s as u32..e as u32).collect();
-        if let Some(reader) = &self.reader {
-            // best-effort streaming: a read failure falls back to the
-            // resident corpus (always available) rather than erroring the
-            // retrieval path
-            if let Ok(table) = reader.lock().unwrap().read_shard_rows(shard) {
-                if table.len() == ids.len() * ds.d {
-                    self.streamed_loads.fetch_add(1, Ordering::Relaxed);
-                    return RowBlocks::build_local(&table, ds.d, ids);
-                }
-            }
+        // route the rebuild through the dataset's row source: resident
+        // corpora gather in RAM, a (plan-mismatched) streamed corpus reads
+        // the row range off the store
+        if !ds.is_resident() {
+            self.streamed_loads.fetch_add(1, Ordering::Relaxed);
         }
-        RowBlocks::build_subset(&ds.data, ds.d, &ids)
+        let (s, e) = self.plan.range(shard);
+        ds.build_range_blocks(s, e)
     }
 
     pub fn cache_stats(&self) -> ShardCacheStats {
+        if let Some(src) = &self.source {
+            // delegated residency: the source's LRU is the cache
+            let s = src.stats();
+            return ShardCacheStats {
+                shards: self.plan.count(),
+                resident: s.resident_shards,
+                resident_bytes: s.resident_bytes,
+                peak_row_bytes: s.peak_row_bytes,
+                hits: s.hits,
+                misses: s.misses,
+                evictions: s.evictions,
+                // every cold load of a streamed source comes off disk
+                streamed_loads: s.misses,
+                rows_streamed: s.rows_streamed,
+            };
+        }
         let lru = self.lru.lock().unwrap();
         ShardCacheStats {
             shards: self.plan.count(),
             resident: lru.resident.len(),
             resident_bytes: lru.bytes,
+            peak_row_bytes: self.peak_bytes.load(Ordering::Relaxed),
             hits: self.hits.load(Ordering::Relaxed),
             misses: self.misses.load(Ordering::Relaxed),
             evictions: self.evictions.load(Ordering::Relaxed),
             streamed_loads: self.streamed_loads.load(Ordering::Relaxed),
+            rows_streamed: 0,
         }
     }
 
     /// Zero the monotonic cache counters (bench harness hook); resident
     /// blocks stay resident.
     pub fn reset_counters(&self) {
+        if let Some(src) = &self.source {
+            src.reset_counters();
+        }
         self.hits.store(0, Ordering::Relaxed);
         self.misses.store(0, Ordering::Relaxed);
         self.evictions.store(0, Ordering::Relaxed);
@@ -463,24 +505,46 @@ mod tests {
 
     #[test]
     fn streamed_row_blocks_equal_resident_builds() {
+        // a streamed dataset's shard layer delegates to the source LRU and
+        // serves byte-identical blocks to the resident build
         let ds = tiny(90, 11);
         let dir = std::env::temp_dir().join("golddiff_shard_stream_test");
         std::fs::remove_dir_all(&dir).ok();
         let path = store::store_path(&dir, "cifar-sim");
         store::save_sharded(&ds, &path, 3).unwrap();
-        let reader = store::ShardReader::open(&path, 3).unwrap();
-        let streamed = CorpusShards::build(&ds, 3, 0).with_reader(reader);
+        let ds_streamed = store::open_streaming(&path, 3, 0).unwrap();
+        let streamed = CorpusShards::build(&ds_streamed, 3, 0);
         let resident = CorpusShards::build(&ds, 3, 0);
-        assert!(streamed.is_streamed() && !resident.is_streamed());
+        assert!(streamed.is_streamed(), "plan-matched source must delegate");
+        assert!(!resident.is_streamed());
         for sh in 0..3 {
-            let a = streamed.row_blocks(sh, &ds);
+            let a = streamed.row_blocks(sh, &ds_streamed);
             let b = resident.row_blocks(sh, &ds);
             assert_eq!(a.rows, b.rows, "shard {sh}");
             for blk in 0..a.n_blocks() {
                 assert_eq!(a.block(blk), b.block(blk), "shard {sh} block {blk}");
             }
         }
-        assert_eq!(streamed.cache_stats().streamed_loads, 3);
+        let st = streamed.cache_stats();
+        assert_eq!(st.streamed_loads, 3, "every cold shard streams");
+        assert_eq!(st.rows_streamed, ds.n as u64);
+        assert!(st.peak_row_bytes > 0);
+        // the delegated cache and the source are one — same counters
+        assert_eq!(st.misses, ds_streamed.source_stats().unwrap().misses);
+
+        // plan mismatch: the shard layer keeps its own LRU but still reads
+        // through the source's range reader, byte-identically
+        let mismatched = CorpusShards::build(&ds_streamed, 2, 0);
+        assert!(!mismatched.is_streamed());
+        let resident2 = CorpusShards::build(&ds, 2, 0);
+        for sh in 0..2 {
+            let a = mismatched.row_blocks(sh, &ds_streamed);
+            let b = resident2.row_blocks(sh, &ds);
+            for blk in 0..a.n_blocks() {
+                assert_eq!(a.block(blk), b.block(blk), "mismatch shard {sh}");
+            }
+        }
+        assert_eq!(mismatched.cache_stats().streamed_loads, 2);
         std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -23,6 +23,14 @@
 //! derived from the `data` section and the deterministic
 //! [`ShardPlan`](crate::data::shard::ShardPlan), so v1/v2 stores load —
 //! and shard — exactly as a single-section v3 store would.
+//!
+//! Two optional v3 additions ride the same ignore-unknown-sections rule:
+//! per-shard IVF partitions (`ivf_shard_i_centroids` / `ivf_shard_i_assign`
+//! keyed by the `shard_ivf_*` header fields — a sharded cluster engine
+//! start skips per-shard k-means), and the **data-free open path**
+//! ([`open_streaming`]): every section except `data` loads, the section
+//! table is bounds-validated up front, and rows stream through a
+//! budget-bounded [`StreamedRows`] source instead of materialising.
 
 use std::fs::File;
 use std::io::{BufReader, BufWriter, Read, Seek, SeekFrom, Write};
@@ -30,8 +38,9 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
-use super::dataset::{Dataset, IvfPartition};
+use super::dataset::{Dataset, IvfPartition, ShardIvfPartition};
 use super::gmm::GmmSpec;
+use super::rows::{RowSource, StreamedRows};
 use crate::data::shard::ShardPlan;
 use crate::index::kernel::ProxyBlocks;
 use crate::util::json::{parse, Json};
@@ -55,6 +64,11 @@ pub fn save(ds: &Dataset, path: &Path) -> Result<()> {
 /// plan and per-shard alias sections so a [`ShardReader`] can stream one
 /// shard's rows without touching the rest of the file.
 pub fn save_sharded(ds: &Dataset, path: &Path, shards: usize) -> Result<()> {
+    anyhow::ensure!(
+        ds.is_resident(),
+        "cannot save a streamed dataset — the full corpus is not resident \
+         (the store it streams from already is the persisted form)"
+    );
     if let Some(parent) = path.parent() {
         std::fs::create_dir_all(parent)?;
     }
@@ -85,6 +99,12 @@ fn write_store(ds: &Dataset, path: &Path, shards: usize) -> Result<()> {
             .set("ivf_lists", ivf.lists)
             .set("ivf_seed", ivf.seed.to_string());
     }
+    if let Some(si) = &ds.shard_ivf {
+        header
+            .set("shard_ivf_shards", si.shards)
+            .set("shard_ivf_lists", si.lists)
+            .set("shard_ivf_seed", si.seed.to_string());
+    }
 
     // We need section offsets before writing the header, so write sections
     // to a temp buffer plan first: compute sizes, then emit.
@@ -100,27 +120,38 @@ fn write_store(ds: &Dataset, path: &Path, shards: usize) -> Result<()> {
     }
 
     enum Sec<'a> {
-        F(&'a str, &'a [f32]),
-        U(&'a str, &'a [u32]),
+        F(String, &'a [f32]),
+        U(String, &'a [u32]),
     }
+    let data = ds
+        .resident_rows()
+        .expect("write_store is resident-gated by save_sharded");
     let mut plan = vec![
-        Sec::F("data", &ds.data),
-        Sec::U("labels", &ds.labels),
-        Sec::F("proxies", &ds.proxies),
-        Sec::F("mean", &ds.mean),
-        Sec::F("var", &ds.var),
-        Sec::F("centroids", &ds.centroids),
-        Sec::U("assignments", &ds.assignments),
-        Sec::F("pca_bases", &ds.pca_bases),
-        Sec::F("pca_centers", &ds.pca_centers),
-        Sec::F("gmm_weights", &gmm_weights),
-        Sec::U("gmm_classes", &gmm_classes),
-        Sec::F("gmm_means", &gmm_means),
-        Sec::F("gmm_vars", &gmm_vars),
+        Sec::F("data".into(), data),
+        Sec::U("labels".into(), &ds.labels),
+        Sec::F("proxies".into(), &ds.proxies),
+        Sec::F("mean".into(), &ds.mean),
+        Sec::F("var".into(), &ds.var),
+        Sec::F("centroids".into(), &ds.centroids),
+        Sec::U("assignments".into(), &ds.assignments),
+        Sec::F("pca_bases".into(), &ds.pca_bases),
+        Sec::F("pca_centers".into(), &ds.pca_centers),
+        Sec::F("gmm_weights".into(), &gmm_weights),
+        Sec::U("gmm_classes".into(), &gmm_classes),
+        Sec::F("gmm_means".into(), &gmm_means),
+        Sec::F("gmm_vars".into(), &gmm_vars),
     ];
     if let Some(ivf) = &ds.ivf {
-        plan.push(Sec::F("ivf_centroids", &ivf.centroids));
-        plan.push(Sec::U("ivf_assign", &ivf.assignments));
+        plan.push(Sec::F("ivf_centroids".into(), &ivf.centroids));
+        plan.push(Sec::U("ivf_assign".into(), &ivf.assignments));
+    }
+    if let Some(si) = &ds.shard_ivf {
+        // per-shard IVF partitions (v3): a sharded cluster engine start
+        // reuses these instead of paying per-shard k-means every time
+        for (i, (c, a)) in si.centroids.iter().zip(&si.assignments).enumerate() {
+            plan.push(Sec::F(format!("ivf_shard_{i}_centroids"), c));
+            plan.push(Sec::U(format!("ivf_shard_{i}_assign"), a));
+        }
     }
 
     // First pass: build section metadata assuming offsets start at 0 (we
@@ -131,8 +162,8 @@ fn write_store(ds: &Dataset, path: &Path, shards: usize) -> Result<()> {
     let mut proxies_offset = 0u64;
     for sec in &plan {
         let (name, dtype, len) = match sec {
-            Sec::F(n, v) => (*n, "f32", v.len()),
-            Sec::U(n, v) => (*n, "u32", v.len()),
+            Sec::F(n, v) => (n.as_str(), "f32", v.len()),
+            Sec::U(n, v) => (n.as_str(), "u32", v.len()),
         };
         match name {
             "data" => data_offset = offset,
@@ -201,85 +232,144 @@ fn write_store(ds: &Dataset, path: &Path, shards: usize) -> Result<()> {
     Ok(())
 }
 
-/// Load a dataset from a `.gds` file.
-pub fn load(path: &Path) -> Result<Dataset> {
-    let file = File::open(path).with_context(|| format!("open {path:?}"))?;
-    let file_len = file.metadata()?.len();
-    let mut rd = BufReader::new(file);
-    let mut magic = [0u8; 4];
-    rd.read_exact(&mut magic)?;
-    if &magic != MAGIC {
-        bail!("{path:?}: not a GDS1 file");
+/// Parsed store header + bounds-checked section readers — shared by
+/// [`load`] (full read) and [`open_streaming`] (data-free read).
+struct StoreFile {
+    rd: BufReader<File>,
+    header: Json,
+    data_start: u64,
+    file_len: u64,
+    path: std::path::PathBuf,
+}
+
+impl StoreFile {
+    fn open(path: &Path) -> Result<StoreFile> {
+        let file = File::open(path).with_context(|| format!("open {path:?}"))?;
+        let file_len = file.metadata()?.len();
+        let mut rd = BufReader::new(file);
+        let mut magic = [0u8; 4];
+        rd.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("{path:?}: not a GDS1 file");
+        }
+        let mut len4 = [0u8; 4];
+        rd.read_exact(&mut len4)?;
+        let hlen = u32::from_le_bytes(len4) as usize;
+        let mut hbytes = vec![0u8; hlen];
+        rd.read_exact(&mut hbytes)?;
+        let header = parse(std::str::from_utf8(&hbytes)?)?;
+        header
+            .get("sections")
+            .and_then(Json::as_arr)
+            .context("missing sections")?;
+        Ok(StoreFile {
+            rd,
+            header,
+            data_start: 8 + hlen as u64,
+            file_len,
+            path: path.to_path_buf(),
+        })
     }
-    let mut len4 = [0u8; 4];
-    rd.read_exact(&mut len4)?;
-    let hlen = u32::from_le_bytes(len4) as usize;
-    let mut hbytes = vec![0u8; hlen];
-    rd.read_exact(&mut hbytes)?;
-    let header = parse(std::str::from_utf8(&hbytes)?)?;
-    let data_start = 8 + hlen as u64;
 
-    let n = header.num_field("n")? as usize;
-    let d = header.num_field("d")? as usize;
-    let sections = header
-        .get("sections")
-        .and_then(Json::as_arr)
-        .context("missing sections")?;
-
-    // every section is bounds-checked against the real file size before
-    // any seek, so a truncated store fails with the section's name instead
-    // of a raw IO error from deep inside the byte loop
-    let locate = |name: &str| -> Result<(u64, usize)> {
+    /// Locate a section, bounds-checked against the real file size before
+    /// any seek, so a truncated store fails with the section's name instead
+    /// of a raw IO error from deep inside the byte loop.
+    fn locate(&self, name: &str) -> Result<(u64, usize)> {
+        let sections = self.header.get("sections").and_then(Json::as_arr).unwrap();
         let sec = sections
             .iter()
             .find(|s| s.get("name").and_then(Json::as_str) == Some(name))
             .with_context(|| format!("section {name} missing"))?;
         let off = sec.num_field("offset")? as u64;
         let len = sec.num_field("len")? as usize;
-        let end = data_start + off + len as u64 * 4;
-        if end > file_len {
+        let end = self.data_start + off + len as u64 * 4;
+        if end > self.file_len {
             bail!(
-                "{path:?}: section `{name}` (offset {off}, {len} elements) \
-                 ends at byte {end} past the {file_len}-byte file — \
-                 truncated or corrupt store"
+                "{:?}: section `{name}` (offset {off}, {len} elements) \
+                 ends at byte {end} past the {}-byte file — \
+                 truncated or corrupt store",
+                self.path,
+                self.file_len
             );
         }
         Ok((off, len))
-    };
-    let read_f32 = |rd: &mut BufReader<File>, name: &str| -> Result<Vec<f32>> {
-        let (off, len) = locate(name)?;
-        rd.seek(SeekFrom::Start(data_start + off))?;
+    }
+
+    fn read_bytes(&mut self, name: &str) -> Result<Vec<u8>> {
+        let (off, len) = self.locate(name)?;
+        self.rd.seek(SeekFrom::Start(self.data_start + off))?;
         let mut bytes = vec![0u8; len * 4];
-        rd.read_exact(&mut bytes)?;
-        Ok(bytes
+        self.rd.read_exact(&mut bytes)?;
+        Ok(bytes)
+    }
+
+    fn read_f32(&mut self, name: &str) -> Result<Vec<f32>> {
+        Ok(self
+            .read_bytes(name)?
             .chunks_exact(4)
             .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
             .collect())
-    };
-    let read_u32 = |rd: &mut BufReader<File>, name: &str| -> Result<Vec<u32>> {
-        let (off, len) = locate(name)?;
-        rd.seek(SeekFrom::Start(data_start + off))?;
-        let mut bytes = vec![0u8; len * 4];
-        rd.read_exact(&mut bytes)?;
-        Ok(bytes
+    }
+
+    fn read_u32(&mut self, name: &str) -> Result<Vec<u32>> {
+        Ok(self
+            .read_bytes(name)?
             .chunks_exact(4)
             .map(|b| u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
             .collect())
-    };
+    }
+}
 
-    let data = read_f32(&mut rd, "data")?;
-    let labels = read_u32(&mut rd, "labels")?;
-    let proxies = read_f32(&mut rd, "proxies")?;
-    let mean = read_f32(&mut rd, "mean")?;
-    let var = read_f32(&mut rd, "var")?;
-    let centroids = read_f32(&mut rd, "centroids")?;
-    let assignments = read_u32(&mut rd, "assignments")?;
-    let pca_bases = read_f32(&mut rd, "pca_bases")?;
-    let pca_centers = read_f32(&mut rd, "pca_centers")?;
-    let gmm_weights = read_f32(&mut rd, "gmm_weights")?;
-    let gmm_classes = read_u32(&mut rd, "gmm_classes")?;
-    let gmm_means = read_f32(&mut rd, "gmm_means")?;
-    let gmm_vars = read_f32(&mut rd, "gmm_vars")?;
+/// Load a dataset from a `.gds` file (fully resident, the seed behaviour).
+pub fn load(path: &Path) -> Result<Dataset> {
+    let mut sf = StoreFile::open(path)?;
+    let data = sf.read_f32("data")?;
+    finish_dataset(sf, RowSource::Resident(data))
+}
+
+/// Open a `.gds` store **without materialising the corpus**: headers,
+/// proxies, shard bounds and stats load as usual, but the `data` section
+/// stays on disk and rows stream shard-at-a-time through a
+/// `mem_budget_mb`-bounded LRU ([`StreamedRows`]). The section table is
+/// still fully bounds-validated up front, so a truncated or corrupt store
+/// fails here — loudly, naming the section — not mid-serve.
+///
+/// Any valid store streams under any `shards` count: v3 stores saved with
+/// a matching plan seek via their per-shard alias sections, everything
+/// else derives offsets from the contiguous `data` section (see
+/// [`ShardReader`]).
+pub fn open_streaming(path: &Path, shards: usize, mem_budget_mb: usize) -> Result<Dataset> {
+    let sf = StoreFile::open(path)?;
+    let n = sf.header.num_field("n")? as usize;
+    let d = sf.header.num_field("d")? as usize;
+    // validate the data section's bounds without reading a byte of it
+    let (_, data_len) = sf.locate("data")?;
+    anyhow::ensure!(
+        data_len == n * d,
+        "{path:?}: data section holds {data_len} values, expected {n}×{d}"
+    );
+    let reader = ShardReader::open(path, shards)?;
+    let src = std::sync::Arc::new(StreamedRows::new(reader, n, d, mem_budget_mb));
+    finish_dataset(sf, RowSource::Streamed(src))
+}
+
+/// Everything after the row payload: the shared tail of [`load`] and
+/// [`open_streaming`] — side tables, stats, GMM, persisted partitions.
+fn finish_dataset(mut sf: StoreFile, rows: RowSource) -> Result<Dataset> {
+    let n = sf.header.num_field("n")? as usize;
+    let d = sf.header.num_field("d")? as usize;
+    let labels = sf.read_u32("labels")?;
+    let proxies = sf.read_f32("proxies")?;
+    let mean = sf.read_f32("mean")?;
+    let var = sf.read_f32("var")?;
+    let centroids = sf.read_f32("centroids")?;
+    let assignments = sf.read_u32("assignments")?;
+    let pca_bases = sf.read_f32("pca_bases")?;
+    let pca_centers = sf.read_f32("pca_centers")?;
+    let gmm_weights = sf.read_f32("gmm_weights")?;
+    let gmm_classes = sf.read_u32("gmm_classes")?;
+    let gmm_means = sf.read_f32("gmm_means")?;
+    let gmm_vars = sf.read_f32("gmm_vars")?;
 
     let mut gmm = GmmSpec::new(d);
     for (i, (&w, &cls)) in gmm_weights.iter().zip(&gmm_classes).enumerate() {
@@ -291,19 +381,19 @@ pub fn load(path: &Path) -> Result<Dataset> {
         );
     }
 
-    let classes = header.num_field("classes")? as usize;
+    let classes = sf.header.num_field("classes")? as usize;
     let mut class_rows = vec![Vec::new(); classes];
     for (i, &y) in labels.iter().enumerate() {
         class_rows[y as usize].push(i as u32);
     }
 
-    let proxy_d = header.num_field("proxy_d")? as usize;
+    let proxy_d = sf.header.num_field("proxy_d")? as usize;
 
     // version-2 stores may carry the IVF partition; anything older (or a
     // store saved before a cluster engine ran) yields None → k-means rebuild
     let ivf = match (
-        header.get("ivf_lists").and_then(Json::as_f64),
-        header
+        sf.header.get("ivf_lists").and_then(Json::as_f64),
+        sf.header
             .get("ivf_seed")
             .and_then(Json::as_str)
             .and_then(|s| s.parse::<u64>().ok()),
@@ -311,30 +401,64 @@ pub fn load(path: &Path) -> Result<Dataset> {
         (Some(lists), Some(seed)) => Some(IvfPartition {
             lists: lists as usize,
             seed,
-            centroids: read_f32(&mut rd, "ivf_centroids")?,
-            assignments: read_u32(&mut rd, "ivf_assign")?,
+            centroids: sf.read_f32("ivf_centroids")?,
+            assignments: sf.read_u32("ivf_assign")?,
         }),
+        _ => None,
+    };
+
+    // v3 stores may additionally carry the *per-shard* IVF partitions a
+    // sharded cluster engine persisted; legacy stores simply yield None
+    let shard_ivf = match (
+        sf.header.get("shard_ivf_shards").and_then(Json::as_f64),
+        sf.header.get("shard_ivf_lists").and_then(Json::as_f64),
+        sf.header
+            .get("shard_ivf_seed")
+            .and_then(Json::as_str)
+            .and_then(|s| s.parse::<u64>().ok()),
+    ) {
+        (Some(sh), Some(lists), Some(seed)) => {
+            let sh = sh as usize;
+            let mut centroids = Vec::with_capacity(sh);
+            let mut shard_assign = Vec::with_capacity(sh);
+            for i in 0..sh {
+                centroids.push(sf.read_f32(&format!("ivf_shard_{i}_centroids"))?);
+                shard_assign.push(sf.read_u32(&format!("ivf_shard_{i}_assign"))?);
+            }
+            Some(ShardIvfPartition {
+                shards: sh,
+                lists: lists as usize,
+                seed,
+                centroids,
+                assignments: shard_assign,
+            })
+        }
         _ => None,
     };
 
     let proxy_blocks = ProxyBlocks::build(&proxies, n, proxy_d);
     Ok(Dataset {
-        name: header.str_field("name")?.to_string(),
+        name: sf.header.str_field("name")?.to_string(),
         n,
-        h: header.num_field("h")? as usize,
-        w: header.num_field("w")? as usize,
-        c: header.num_field("c")? as usize,
+        h: sf.header.num_field("h")? as usize,
+        w: sf.header.num_field("w")? as usize,
+        c: sf.header.num_field("c")? as usize,
         d,
         proxy_d,
         classes,
-        conditional: header.get("conditional").and_then(Json::as_bool).unwrap_or(false),
-        data,
+        conditional: sf
+            .header
+            .get("conditional")
+            .and_then(Json::as_bool)
+            .unwrap_or(false),
+        rows,
         labels,
         proxies,
         proxy_blocks,
         row_blocks: std::sync::OnceLock::new(),
         class_rows,
         ivf,
+        shard_ivf,
         mean,
         var,
         centroids,
@@ -362,6 +486,9 @@ pub struct ShardReader {
     plan: ShardPlan,
     /// absolute byte offset of each shard's first row
     offsets: Vec<u64>,
+    /// absolute byte offset of the contiguous `data` section (row 0) —
+    /// arbitrary row-range reads seek from here
+    data_abs: u64,
 }
 
 impl ShardReader {
@@ -401,6 +528,12 @@ impl ShardReader {
             data_len == n * d,
             "{path:?}: data section holds {data_len} values, expected {n}×{d}"
         );
+        let data_abs = data_start + data_off;
+        anyhow::ensure!(
+            data_abs + data_len as u64 * 4 <= file_len,
+            "{path:?}: data section ends past the {file_len}-byte file — \
+             truncated store"
+        );
 
         let plan = ShardPlan::new(n, shards);
         let header_shards = header.get("shards").and_then(Json::as_f64).map(|v| v as usize);
@@ -431,6 +564,7 @@ impl ShardReader {
             d,
             plan,
             offsets,
+            data_abs,
         })
     }
 
@@ -449,6 +583,23 @@ impl ShardReader {
             .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
             .collect())
     }
+
+    /// Read an arbitrary global row range `[s, e)` (`(e−s) × d`, row-major)
+    /// straight out of the contiguous `data` section — rows are stored
+    /// contiguously whatever shard plan the store was saved with, so this
+    /// serves plan-agnostic consumers (a backend sharded at a different
+    /// count than the source).
+    pub fn read_row_range(&mut self, s: usize, e: usize) -> Result<Vec<f32>> {
+        anyhow::ensure!(s <= e && e <= self.plan.n, "row range {s}..{e} out of bounds");
+        self.file
+            .seek(SeekFrom::Start(self.data_abs + (s * self.d) as u64 * 4))?;
+        let mut bytes = vec![0u8; (e - s) * self.d * 4];
+        self.file.read_exact(&mut bytes)?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect())
+    }
 }
 
 /// Conventional on-disk path for a preset's store.
@@ -459,6 +610,25 @@ pub fn store_path(dir: &Path, preset: &str) -> std::path::PathBuf {
 /// Load a preset from `dir`, synthesising (and saving) it when missing.
 pub fn load_or_synthesize(dir: &Path, preset_name: &str, seed: u64) -> Result<Dataset> {
     load_or_synthesize_sharded(dir, preset_name, seed, 1)
+}
+
+/// Make sure a preset's store exists on disk (synthesise + save when
+/// missing) *without* loading it — the precursor to [`open_streaming`],
+/// which then serves the corpus data-free off that file.
+pub fn ensure_store(
+    dir: &Path,
+    preset_name: &str,
+    seed: u64,
+    shards: usize,
+) -> Result<std::path::PathBuf> {
+    let path = store_path(dir, preset_name);
+    if !path.exists() {
+        let spec = super::synthetic::preset(preset_name)
+            .with_context(|| format!("unknown preset {preset_name}"))?;
+        let ds = Dataset::synthesize(spec, seed);
+        save_sharded(&ds, &path, shards)?;
+    }
+    Ok(path)
 }
 
 /// [`load_or_synthesize`] with a shard count: a freshly synthesised store
@@ -487,6 +657,12 @@ mod tests {
     use super::*;
     use crate::data::synthetic::preset;
 
+    /// The resident corpus of a test dataset (all stores here are saved
+    /// from resident synthesis).
+    fn corpus(ds: &Dataset) -> &[f32] {
+        ds.resident_rows().expect("test datasets are resident")
+    }
+
     #[test]
     fn roundtrip_preserves_everything() {
         let mut spec = preset("moons").unwrap().clone();
@@ -497,7 +673,7 @@ mod tests {
         save(&ds, &path).unwrap();
         let rt = load(&path).unwrap();
         assert_eq!(rt.name, ds.name);
-        assert_eq!(rt.data, ds.data);
+        assert_eq!(rt.resident_rows(), ds.resident_rows());
         assert_eq!(rt.labels, ds.labels);
         assert_eq!(rt.proxies, ds.proxies);
         assert_eq!(rt.gmm.n_components(), ds.gmm.n_components());
@@ -518,7 +694,7 @@ mod tests {
         let a = load_or_synthesize(&dir, "moons", 1).unwrap();
         assert!(store_path(&dir, "moons").exists());
         let b = load_or_synthesize(&dir, "moons", 999).unwrap(); // seed ignored on cache hit
-        assert_eq!(a.data, b.data);
+        assert_eq!(a.resident_rows(), b.resident_rows());
         std::fs::remove_dir_all(&dir).ok();
     }
 
@@ -545,7 +721,7 @@ mod tests {
         assert_eq!(got.centroids, want.centroids);
         assert_eq!(got.assignments, want.assignments);
         // the rest of the dataset is untouched by the new sections
-        assert_eq!(rt.data, ds.data);
+        assert_eq!(rt.resident_rows(), ds.resident_rows());
         assert_eq!(rt.proxies, ds.proxies);
         std::fs::remove_dir_all(&dir).ok();
     }
@@ -562,7 +738,7 @@ mod tests {
 
         // the alias sections never disturb a full load
         let rt = load(&path).unwrap();
-        assert_eq!(rt.data, ds.data);
+        assert_eq!(rt.resident_rows(), ds.resident_rows());
         assert_eq!(rt.proxies, ds.proxies);
 
         // streaming with the saved plan uses the per-shard sections
@@ -571,14 +747,14 @@ mod tests {
         for sh in 0..4 {
             let (s, e) = rd.plan().range(sh);
             let rows = rd.read_shard_rows(sh).unwrap();
-            assert_eq!(rows, ds.data[s * ds.d..e * ds.d], "shard {sh}");
+            assert_eq!(rows, corpus(&ds)[s * ds.d..e * ds.d], "shard {sh}");
         }
         // a different shard count still streams via derived offsets
         let mut rd7 = ShardReader::open(&path, 7).unwrap();
         for sh in 0..rd7.plan().count() {
             let (s, e) = rd7.plan().range(sh);
             let rows = rd7.read_shard_rows(sh).unwrap();
-            assert_eq!(rows, ds.data[s * ds.d..e * ds.d], "shard {sh}/7");
+            assert_eq!(rows, corpus(&ds)[s * ds.d..e * ds.d], "shard {sh}/7");
         }
         std::fs::remove_dir_all(&dir).ok();
     }
@@ -600,11 +776,15 @@ mod tests {
         let header = parse(std::str::from_utf8(&bytes[8..8 + hlen]).unwrap()).unwrap();
         assert!(header.get("shards").is_none(), "save() writes no shard plan");
 
-        assert_eq!(load(&path).unwrap().data, ds.data, "loads as one corpus");
+        assert_eq!(
+            load(&path).unwrap().resident_rows(),
+            ds.resident_rows(),
+            "loads as one corpus"
+        );
         let mut rd = ShardReader::open(&path, 3).unwrap();
         for sh in 0..3 {
             let (s, e) = rd.plan().range(sh);
-            assert_eq!(rd.read_shard_rows(sh).unwrap(), ds.data[s * ds.d..e * ds.d]);
+            assert_eq!(rd.read_shard_rows(sh).unwrap(), corpus(&ds)[s * ds.d..e * ds.d]);
         }
         std::fs::remove_dir_all(&dir).ok();
     }
@@ -642,6 +822,139 @@ mod tests {
         let path = dir.join("bad.gds");
         std::fs::write(&path, b"NOPE1234").unwrap();
         assert!(load(&path).is_err());
+        assert!(open_streaming(&path, 2, 0).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn open_streaming_serves_the_corpus_data_free() {
+        // Tentpole: everything except the data section loads; rows stream
+        // bit-identically through the source
+        let mut spec = preset("moons").unwrap().clone();
+        spec.n = 120;
+        let mut ds = Dataset::synthesize(&spec, 31);
+        ds.ivf = Some(IvfPartition::compute(&ds, 5, 77));
+        let dir = std::env::temp_dir().join("golddiff_store_stream_open_test");
+        std::fs::remove_dir_all(&dir).ok();
+        let path = dir.join("moons.gds");
+        save_sharded(&ds, &path, 4).unwrap();
+
+        let st = open_streaming(&path, 4, 0).unwrap();
+        assert!(!st.is_resident() && st.resident_rows().is_none());
+        // side tables + stats + persisted partitions all load
+        assert_eq!(st.labels, ds.labels);
+        assert_eq!(st.proxies, ds.proxies);
+        assert_eq!(st.mean, ds.mean);
+        assert_eq!(st.var, ds.var);
+        assert_eq!(st.class_rows, ds.class_rows);
+        assert_eq!(st.pca_bases, ds.pca_bases);
+        assert_eq!(st.ivf.as_ref().unwrap().centroids, ds.ivf.as_ref().unwrap().centroids);
+        // nothing of the corpus is resident until a row is touched
+        assert_eq!(st.source_stats().unwrap().rows_streamed, 0);
+        assert_eq!(st.source_stats().unwrap().peak_row_bytes, 0);
+        // every row streams back byte-identical, via cursor and gather
+        let mut cur = st.row_cursor();
+        for i in 0..ds.n {
+            assert_eq!(cur.row(i as u32), ds.row(i), "row {i}");
+        }
+        let (mut a, mut am) = (Vec::new(), Vec::new());
+        let (mut b, mut bm) = (Vec::new(), Vec::new());
+        st.gather_rows(&[5, 99, 0], 4, &mut a, &mut am);
+        ds.gather_rows(&[5, 99, 0], 4, &mut b, &mut bm);
+        assert_eq!((a, am), (b, bm));
+        // a whole-corpus staging pass matches the resident copy
+        let mut full = vec![0.0f32; ds.n * ds.d];
+        st.copy_all_rows_into(&mut full);
+        assert_eq!(full.as_slice(), corpus(&ds));
+        assert!(st.source_stats().unwrap().rows_streamed >= ds.n as u64);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn open_streaming_handles_legacy_stores_and_any_shard_count() {
+        // a v1-shape store (no shard sections) still streams under any plan
+        let mut spec = preset("moons").unwrap().clone();
+        spec.n = 64;
+        let ds = Dataset::synthesize(&spec, 5);
+        let dir = std::env::temp_dir().join("golddiff_store_stream_legacy_test");
+        std::fs::remove_dir_all(&dir).ok();
+        let path = dir.join("moons.gds");
+        save(&ds, &path).unwrap();
+        for shards in [1usize, 3, 7] {
+            let st = open_streaming(&path, shards, 0).unwrap();
+            assert!(st.shard_ivf.is_none(), "legacy stores carry no partitions");
+            let mut cur = st.row_cursor();
+            for i in [0usize, 20, 63] {
+                assert_eq!(cur.row(i as u32), ds.row(i), "shards={shards} row {i}");
+            }
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn open_streaming_rejects_truncated_stores_up_front() {
+        // Satellite: the section table is validated at open, so a truncated
+        // store fails loudly before any serving starts
+        let mut spec = preset("moons").unwrap().clone();
+        spec.n = 48;
+        let ds = Dataset::synthesize(&spec, 8);
+        let dir = std::env::temp_dir().join("golddiff_store_stream_trunc_test");
+        std::fs::remove_dir_all(&dir).ok();
+        let path = dir.join("moons.gds");
+        save(&ds, &path).unwrap();
+        let full = std::fs::metadata(&path).unwrap().len();
+        let f = std::fs::OpenOptions::new().write(true).open(&path).unwrap();
+        f.set_len(full - 16).unwrap();
+        drop(f);
+        let err = format!("{:#}", open_streaming(&path, 3, 0).unwrap_err());
+        assert!(
+            err.contains("section") && err.contains("truncated"),
+            "error must name the problem: {err}"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn save_refuses_a_streamed_dataset() {
+        let mut spec = preset("moons").unwrap().clone();
+        spec.n = 40;
+        let ds = Dataset::synthesize(&spec, 3);
+        let dir = std::env::temp_dir().join("golddiff_store_stream_save_test");
+        std::fs::remove_dir_all(&dir).ok();
+        let path = dir.join("moons.gds");
+        save(&ds, &path).unwrap();
+        let st = open_streaming(&path, 2, 0).unwrap();
+        let err = format!("{:#}", save(&st, &dir.join("copy.gds")).unwrap_err());
+        assert!(err.contains("streamed"), "error must explain the gate: {err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn shard_ivf_partitions_roundtrip_and_legacy_stores_load_without_them() {
+        // Satellite: per-shard IVF partitions persist in v3 sections and
+        // reload verbatim; stores saved without them yield None
+        let mut spec = preset("moons").unwrap().clone();
+        spec.n = 90;
+        let mut ds = Dataset::synthesize(&spec, 13);
+        let dir = std::env::temp_dir().join("golddiff_store_shard_ivf_test");
+        std::fs::remove_dir_all(&dir).ok();
+        let path = dir.join("moons.gds");
+        save_sharded(&ds, &path, 3).unwrap();
+        assert!(load(&path).unwrap().shard_ivf.is_none());
+
+        ds.shard_ivf = Some(ShardIvfPartition::compute(&ds, 3, 4, 0xfeed_beef_0099));
+        save_sharded(&ds, &path, 3).unwrap();
+        let rt = load(&path).unwrap();
+        let got = rt.shard_ivf.expect("partitions must roundtrip");
+        let want = ds.shard_ivf.as_ref().unwrap();
+        assert_eq!(&got, want, "u64 seed + all shards survive the header");
+        assert!(got.matches(3, 4, 0xfeed_beef_0099));
+        // the streaming open loads them too (it never touches data)
+        let st = open_streaming(&path, 3, 0).unwrap();
+        assert_eq!(st.shard_ivf.as_ref(), Some(want));
+        // the rest of the dataset is untouched by the new sections
+        assert_eq!(rt.resident_rows(), ds.resident_rows());
+        assert_eq!(rt.proxies, ds.proxies);
         std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -23,7 +23,7 @@ use std::sync::Arc;
 
 use super::kamb::KambDenoiser;
 use super::pca::PcaDenoiser;
-use super::softmax::{ss_aggregate, PosteriorStats};
+use super::softmax::{PosteriorStats, StreamingSoftmax};
 use super::{descale, sqdist, DenoiseResult, Denoiser, StepContext};
 use crate::data::dataset::Dataset;
 use crate::data::synthetic::proxy_embed;
@@ -462,13 +462,14 @@ impl Denoiser for GoldDiff {
             BaseWeighting::Golden => {
                 let q = descale(x_t, ctx.alpha_bar());
                 let scale = ctx.logit_scale();
-                let (f_hat, stats): (Vec<f32>, PosteriorStats) = ss_aggregate(
-                    ds.d,
-                    golden.iter().map(|&gid| {
-                        let row = ds.row(gid as usize);
-                        (-sqdist(&q, row) * scale, row)
-                    }),
-                );
+                // golden rows stream through the source in subset order —
+                // identical pushes to the resident gather, so the softmax
+                // aggregate is bit-identical on a streamed corpus
+                let mut acc = StreamingSoftmax::new(ds.d);
+                ds.visit_rows(golden.iter().copied(), |_, row| {
+                    acc.push(-sqdist(&q, row) * scale, row);
+                });
+                let (f_hat, stats): (Vec<f32>, PosteriorStats) = acc.finish();
                 DenoiseResult {
                     f_hat,
                     stats,
@@ -930,5 +931,54 @@ mod tests {
         let (ds, sched) = setup();
         let gd = GoldDiff::paper_defaults(&ds, &sched, BaseWeighting::Golden);
         assert!(gd.working_set_bytes(&ds) < ds.bytes());
+    }
+
+    #[test]
+    fn streamed_corpus_produces_byte_identical_subsets_and_outputs() {
+        // Satellite: a data-free GoldDiff trajectory — subsets AND posterior
+        // means — equals the resident one bit-for-bit, across every base
+        // weighting, with a budget tight enough to force LRU cycling
+        let (ds, sched) = setup();
+        let dir = std::env::temp_dir().join("golddiff_denoiser_stream_test");
+        std::fs::remove_dir_all(&dir).ok();
+        let path = crate::data::store::store_path(&dir, "cifar-sim");
+        crate::data::store::save_sharded(&ds, &path, 4).unwrap();
+        let st = crate::data::store::open_streaming(&path, 4, 1).unwrap();
+        assert!(!st.is_resident());
+        let x: Vec<f32> = {
+            let mut rng = crate::util::rng::Pcg64::new(77);
+            (0..ds.d).map(|_| rng.normal()).collect()
+        };
+        for base in [
+            BaseWeighting::Golden,
+            BaseWeighting::PcaSubspace { unbiased: true },
+            BaseWeighting::PcaSubspace { unbiased: false },
+            BaseWeighting::Kamb,
+        ] {
+            let mut a = GoldDiff::paper_defaults(&ds, &sched, base);
+            let mut b = GoldDiff::paper_defaults(&st, &sched, base);
+            for step in [0usize, 5, 9] {
+                let ctx_r = StepContext {
+                    ds: &ds,
+                    sched: &sched,
+                    step,
+                    class: None,
+                };
+                let ctx_s = StepContext {
+                    ds: &st,
+                    sched: &sched,
+                    step,
+                    class: None,
+                };
+                let sa = a.golden_subset(&x, &ctx_r);
+                let sb = b.golden_subset(&x, &ctx_s);
+                assert_eq!(sa, sb, "{base:?} step {step}: subsets diverged");
+                let fa = a.denoise(&x, &ctx_r).f_hat;
+                let fb = b.denoise(&x, &ctx_s).f_hat;
+                assert_eq!(fa, fb, "{base:?} step {step}: outputs diverged");
+            }
+        }
+        assert!(st.source_stats().unwrap().rows_streamed > 0);
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -107,8 +107,11 @@ impl Denoiser for KambDenoiser {
             Some(s) => s.clone(),
             None => ctx.rows().collect(),
         };
-        for &gid in &rows {
-            let cand = ds.row(gid as usize);
+        // source-routed candidate pass: a streamed corpus serves the full
+        // support as chunked shard-at-a-time reads and golden subsets via
+        // the same cursor — per-pixel updates happen in the identical row
+        // order, so the output matches the resident pass bit-for-bit
+        ds.visit_rows(rows.iter().copied(), |_, cand| {
             // channel-summed squared diff map
             for pix in 0..hw {
                 let mut acc2 = 0.0f32;
@@ -145,7 +148,7 @@ impl Denoiser for KambDenoiser {
                     centre_s += pw * logit;
                 }
             }
-        }
+        });
 
         let mut f_hat = vec![0.0f32; hw * c];
         for pix in 0..hw {

@@ -26,11 +26,13 @@ impl Denoiser for OptimalDenoiser {
         let scale = ctx.logit_scale();
         let mut acc = StreamingSoftmax::new(ds.d);
         let mut support = 0usize;
-        for i in ctx.rows() {
-            let row = ds.row(i as usize);
+        // ascending support ids: on a streamed corpus this is a chunked
+        // shard-at-a-time pass through the LRU, same push order — the
+        // aggregate is bit-identical to the resident scan
+        ds.visit_rows(ctx.rows(), |_, row| {
             acc.push(-sqdist(&q, row) * scale, row);
             support += 1;
-        }
+        });
         let (f_hat, stats) = acc.finish();
         DenoiseResult {
             f_hat,

@@ -16,7 +16,7 @@
 //! Projections are recomputed per step (basis and centring depend on the
 //! query), keeping the published O(N·R·D)-per-step cost shape of Tab. 1.
 
-use super::softmax::{ss_aggregate, wss_aggregate, PosteriorStats};
+use super::softmax::{PosteriorStats, StreamingSoftmax, WssAccum};
 use super::{descale, DenoiseResult, Denoiser, StepContext};
 use crate::data::dataset::Dataset;
 
@@ -40,47 +40,41 @@ impl PcaDenoiser {
         }
     }
 
-    /// Subspace logits for a set of rows: ℓ_i = -||B(q-μ) - B(x_i-μ)||²·scale.
-    fn subspace_logits(
-        &self,
-        ds: &Dataset,
-        q: &[f32],
-        rows: &[u32],
-        scale: f32,
-    ) -> (Vec<f32>, usize) {
-        let cluster = ds.nearest_cluster(q);
-        let (basis, center) = ds.pca_basis(cluster);
-        let r = self.rank;
-        let d = ds.d;
-
+    /// The query's subspace coordinates: z_q = B(q − μ).
+    fn project_query(basis: &[f32], center: &[f32], q: &[f32], r: usize, d: usize) -> Vec<f32> {
         let mut zq = vec![0.0f32; r];
-        for rr in 0..r {
+        for (rr, z) in zq.iter_mut().enumerate() {
             let b = &basis[rr * d..(rr + 1) * d];
             let mut acc = 0.0f32;
             for j in 0..d {
                 acc += (q[j] - center[j]) * b[j];
             }
-            zq[rr] = acc;
+            *z = acc;
         }
+        zq
+    }
 
-        let logits: Vec<f32> = rows
-            .iter()
-            .map(|&gid| {
-                let row = ds.row(gid as usize);
-                let mut dist = 0.0f32;
-                for rr in 0..r {
-                    let b = &basis[rr * d..(rr + 1) * d];
-                    let mut zc = 0.0f32;
-                    for j in 0..d {
-                        zc += (row[j] - center[j]) * b[j];
-                    }
-                    let dd = zq[rr] - zc;
-                    dist += dd * dd;
-                }
-                -dist * scale
-            })
-            .collect();
-        (logits, cluster)
+    /// One row's subspace logit: ℓ_i = -||z_q - B(x_i - μ)||² · scale.
+    #[inline]
+    fn row_logit(
+        basis: &[f32],
+        center: &[f32],
+        zq: &[f32],
+        row: &[f32],
+        scale: f32,
+        d: usize,
+    ) -> f32 {
+        let mut dist = 0.0f32;
+        for (rr, &z) in zq.iter().enumerate() {
+            let b = &basis[rr * d..(rr + 1) * d];
+            let mut zc = 0.0f32;
+            for j in 0..d {
+                zc += (row[j] - center[j]) * b[j];
+            }
+            let dd = z - zc;
+            dist += dd * dd;
+        }
+        -dist * scale
     }
 }
 
@@ -100,17 +94,29 @@ impl Denoiser for PcaDenoiser {
             Some(s) => s.clone(),
             None => ctx.rows().collect(),
         };
-        let (logits, _) = self.subspace_logits(ds, &q, &rows, ctx.logit_scale());
+        let scale = ctx.logit_scale();
+        let cluster = ds.nearest_cluster(&q);
+        let (basis, center) = ds.pca_basis(cluster);
+        let (r, d) = (self.rank, ds.d);
+        let zq = Self::project_query(basis, center, &q, r, d);
 
-        let items: Vec<(f32, &[f32])> = logits
-            .iter()
-            .zip(&rows)
-            .map(|(&lg, &gid)| (lg, ds.row(gid as usize)))
-            .collect();
+        // one fused pass over the support: project, logit, aggregate —
+        // same per-row math and push order as the old logits-then-items
+        // two-pass, so the output is bit-identical while the rows stream
+        // through the source once (the streamed PCA fit never holds more
+        // than the LRU budget resident)
         let (f_hat, stats): (Vec<f32>, PosteriorStats) = if self.unbiased {
-            ss_aggregate(ds.d, items.iter().copied())
+            let mut acc = StreamingSoftmax::new(d);
+            ds.visit_rows(rows.iter().copied(), |_, row| {
+                acc.push(Self::row_logit(basis, center, &zq, row, scale, d), row);
+            });
+            acc.finish()
         } else {
-            wss_aggregate(ds.d, &items, WSS_BLOCKS)
+            let mut acc = WssAccum::new(d, rows.len().max(1), WSS_BLOCKS);
+            ds.visit_rows(rows.iter().copied(), |_, row| {
+                acc.push(Self::row_logit(basis, center, &zq, row, scale, d), row);
+            });
+            acc.finish()
         };
         DenoiseResult {
             f_hat,

@@ -109,39 +109,88 @@ pub fn ss_aggregate<'a>(
     acc.finish()
 }
 
+/// Streaming form of the biased Weighted Streaming Softmax: push
+/// `(logit, row)` pairs **in order**; a block boundary lands every
+/// `⌈n/blocks⌉` pushes — exactly where the sliced [`wss_aggregate`] cuts —
+/// so the result is bit-identical while rows stream through one pass (no
+/// resident item list; what the out-of-core PCA arm aggregates with).
+pub struct WssAccum {
+    d: usize,
+    per: usize,
+    in_block: usize,
+    block: StreamingSoftmax,
+    /// exact global stats for telemetry come from a parallel SS pass
+    global: StreamingSoftmax,
+    /// running sum of finished block means, accumulated in block order
+    sum: Vec<f32>,
+    blocks_done: usize,
+}
+
+impl WssAccum {
+    /// `n` is the total number of pushes to come (the support size) —
+    /// needed up front to place the block boundaries like the sliced form.
+    pub fn new(d: usize, n: usize, blocks: usize) -> WssAccum {
+        assert!(n > 0, "no rows to aggregate");
+        let blocks = blocks.clamp(1, n);
+        WssAccum {
+            d,
+            per: n.div_ceil(blocks),
+            in_block: 0,
+            block: StreamingSoftmax::new(d),
+            global: StreamingSoftmax::new(d),
+            sum: vec![0.0f32; d],
+            blocks_done: 0,
+        }
+    }
+
+    pub fn push(&mut self, logit: f32, row: &[f32]) {
+        self.block.push(logit, row);
+        self.global.push(logit, row);
+        self.in_block += 1;
+        if self.in_block == self.per {
+            self.flush_block();
+        }
+    }
+
+    fn flush_block(&mut self) {
+        let block = std::mem::replace(&mut self.block, StreamingSoftmax::new(self.d));
+        let (mean, _) = block.finish();
+        for (o, &v) in self.sum.iter_mut().zip(&mean) {
+            *o += v;
+        }
+        self.blocks_done += 1;
+        self.in_block = 0;
+    }
+
+    pub fn finish(mut self) -> (Vec<f32>, PosteriorStats) {
+        if self.in_block > 0 {
+            self.flush_block();
+        }
+        let inv = 1.0 / self.blocks_done as f32;
+        let mut out = self.sum;
+        for v in out.iter_mut() {
+            *v *= inv;
+        }
+        let (_, stats) = self.global.finish();
+        (out, stats)
+    }
+}
+
 /// Biased Weighted Streaming Softmax with batch-level averaging over
 /// `blocks` equal batches (the PCA baseline's flattening heuristic).
+/// Implemented on [`WssAccum`] so the sliced and streaming forms are one
+/// code path.
 pub fn wss_aggregate<'a>(
     d: usize,
     items: &[(f32, &'a [f32])],
     blocks: usize,
 ) -> (Vec<f32>, PosteriorStats) {
     assert!(!items.is_empty());
-    let blocks = blocks.clamp(1, items.len());
-    let per = items.len().div_ceil(blocks);
-    let mut means: Vec<Vec<f32>> = Vec::new();
-    // exact global stats for telemetry come from a parallel SS pass
-    let mut global = StreamingSoftmax::new(d);
-    for chunk in items.chunks(per) {
-        let mut block = StreamingSoftmax::new(d);
-        for &(logit, row) in chunk {
-            block.push(logit, row);
-            global.push(logit, row);
-        }
-        means.push(block.finish().0);
+    let mut acc = WssAccum::new(d, items.len(), blocks);
+    for &(logit, row) in items {
+        acc.push(logit, row);
     }
-    let mut out = vec![0.0f32; d];
-    for m in &means {
-        for (o, &v) in out.iter_mut().zip(m) {
-            *o += v;
-        }
-    }
-    let inv = 1.0 / means.len() as f32;
-    for v in out.iter_mut() {
-        *v *= inv;
-    }
-    let (_, stats) = global.finish();
-    (out, stats)
+    acc.finish()
 }
 
 /// Exact (two-pass) normalised weights of a logit slice — test oracle and

@@ -50,11 +50,12 @@ use std::sync::Arc;
 
 use super::kernel::{
     self, block_order, build_refine_plan, refine_scan_masked, KernelScan, KernelStats,
-    ProxyBlocks,
+    ProxyBlocks, RowBlocks,
 };
 use super::scan::ProxyIndex;
 use super::topk::BoundedMaxHeap;
 use crate::data::dataset::{Dataset, IvfPartition};
+use crate::data::shard::ShardPlan;
 use crate::util::threadpool::parallel_chunks;
 
 /// One coarse query of a batch: the s=1/4 proxy embedding plus the optional
@@ -99,6 +100,11 @@ pub struct RetrievalStats {
     pub shards_skipped: u64,
     /// cold-shard `RowBlocks` evicted by the corpus LRU under `mem_budget`
     pub shard_evictions: u64,
+    /// full-resolution rows read off the `.gds` store (streamed serving;
+    /// 0 for a resident corpus)
+    pub rows_streamed: u64,
+    /// high-water mark of resident row-block bytes under the LRU budget
+    pub peak_row_bytes: u64,
 }
 
 #[derive(Debug, Default)]
@@ -133,6 +139,8 @@ impl Counters {
             shards_scanned: self.shards_scanned.load(Ordering::Relaxed),
             shards_skipped: self.shards_skipped.load(Ordering::Relaxed),
             shard_evictions: 0,
+            rows_streamed: 0,
+            peak_row_bytes: 0,
         }
     }
 
@@ -471,8 +479,11 @@ fn batched_refine_group(
     let shards = parallel_chunks(union.len(), threads, |_, s, e| {
         let mut heaps: Vec<BoundedMaxHeap> =
             caps.iter().map(|&c| BoundedMaxHeap::new(c)).collect();
+        // source-agnostic row access: ascending union ids turn a streamed
+        // corpus into shard-at-a-time passes through the LRU
+        let mut cur = ds.row_cursor();
         for &(gid, bits) in &union[s..e] {
-            let row = ds.row(gid as usize);
+            let row = cur.row(gid);
             let mut bits = bits;
             while bits != 0 {
                 let j = bits.trailing_zeros() as usize;
@@ -538,6 +549,21 @@ pub fn batched_refine_kernel(
     threads: usize,
 ) -> (Vec<Vec<u32>>, u64, KernelStats) {
     assert_eq!(qs.len(), pools.len());
+    if let Some(src) = ds.streamed() {
+        // the monolithic ladder needs the whole corpus blocked resident;
+        // a streamed corpus refines shard-at-a-time through the source LRU
+        // instead — the same masked tiles and exact `(distance, row id)`
+        // merge the sharded backend uses, so results stay byte-identical
+        // (index/README.md, "Out-of-core corpus")
+        return refine_masked_by_shard(
+            src.plan(),
+            &|sh| src.shard_blocks(sh),
+            qs,
+            pools,
+            k,
+            threads,
+        );
+    }
     let mut out = Vec::with_capacity(qs.len());
     let mut rows_visited = 0u64;
     let mut stats = KernelStats::default();
@@ -548,6 +574,111 @@ pub fn batched_refine_kernel(
         out.extend(res);
         rows_visited += rows;
         stats.add(&st);
+    }
+    (out, rows_visited, stats)
+}
+
+/// The shard-local masked refine shared by the sharded backend and the
+/// streamed monolithic path: each ≤[`kernel::TILE_Q`]-query tile's
+/// candidate union is split by owning shard, every touched shard streams
+/// its row blocks (however `blocks_for` sources them — the corpus-shard
+/// LRU or the streamed row source) through [`refine_scan_masked`], and the
+/// per-shard heaps merge **exactly** by ascending `(distance, row id)`.
+/// Per-(query, row) distances are pure functions of query and row, so the
+/// merged result equals the monolithic ladder's byte-for-byte — the
+/// merge-exactness argument of `index/README.md`.
+///
+/// Returns (per-query top-k, distinct rows visited, merged kernel stats).
+pub(crate) fn refine_masked_by_shard(
+    plan: &ShardPlan,
+    blocks_for: &(dyn Fn(usize) -> Arc<RowBlocks> + Sync),
+    qs: &[&[f32]],
+    pools: &[&[u32]],
+    k: usize,
+    threads: usize,
+) -> (Vec<Vec<u32>>, u64, KernelStats) {
+    assert_eq!(qs.len(), pools.len());
+    let caps = refine_caps(pools, k);
+    let ns = plan.count();
+    let mut out: Vec<Vec<u32>> = Vec::with_capacity(qs.len());
+    // `refine_rows` keeps the monolithic ladder's accounting — distinct
+    // rows per ≤64-query group — so resident and streamed/sharded runs of
+    // the same tick group report comparable telemetry
+    let mut rows_visited = 0u64;
+    for pc in pools.chunks(64) {
+        let mut ids: Vec<u32> = pc.iter().flat_map(|p| p.iter().copied()).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        rows_visited += ids.len() as u64;
+    }
+    let mut stats = KernelStats::default();
+    for ((qt, pt), ct) in qs
+        .chunks(kernel::TILE_Q)
+        .zip(pools.chunks(kernel::TILE_Q))
+        .zip(caps.chunks(kernel::TILE_Q))
+    {
+        // union membership mask over the tile's queries — duplicate ids
+        // collapse onto one bit, exactly like the refine ladders
+        let mut mask: HashMap<u32, u8> = HashMap::new();
+        for (j, pool) in pt.iter().enumerate() {
+            for &gid in *pool {
+                *mask.entry(gid).or_insert(0) |= 1 << j;
+            }
+        }
+        let mut union: Vec<(u32, u8)> = mask.into_iter().collect();
+        union.sort_unstable_by_key(|e| e.0);
+        // shard-local (position, bits) lists: positions are local so the
+        // refine plan tiles the shard's own blocks; harvest maps back to
+        // global ids through the blocks' id table
+        let mut per_shard: Vec<Vec<(u32, u8)>> = vec![Vec::new(); ns];
+        for &(gid, bits) in &union {
+            let sh = plan.shard_of(gid as usize);
+            let (s, _) = plan.range(sh);
+            per_shard[sh].push((gid - s as u32, bits));
+        }
+        let touched: Vec<usize> =
+            (0..ns).filter(|&sh| !per_shard[sh].is_empty()).collect();
+        let shard_heaps: Vec<(Vec<BoundedMaxHeap>, KernelStats)> =
+            parallel_chunks(touched.len(), threads.max(1), |_, s, e| {
+                (s..e)
+                    .map(|ti| {
+                        let sh = touched[ti];
+                        let rb = blocks_for(sh);
+                        let block_plan = build_refine_plan(&per_shard[sh]);
+                        let mut heaps: Vec<BoundedMaxHeap> =
+                            ct.iter().map(|&c| BoundedMaxHeap::new(c)).collect();
+                        let mut st = KernelStats::default();
+                        refine_scan_masked(&rb, qt, &block_plan, &mut heaps, &mut st);
+                        (heaps, st)
+                    })
+                    .collect::<Vec<_>>()
+            })
+            .into_iter()
+            .flatten()
+            .collect();
+        let mut shard_lists: Vec<Vec<Vec<(f32, u32)>>> = Vec::with_capacity(shard_heaps.len());
+        for (heaps, st) in shard_heaps {
+            stats.add(&st);
+            shard_lists.push(
+                heaps
+                    .into_iter()
+                    .map(|h| {
+                        let mut v = h.into_sorted();
+                        v.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+                        v
+                    })
+                    .collect(),
+            );
+        }
+        for (qi, &c) in ct.iter().enumerate() {
+            let mut all: Vec<(f32, u32)> = shard_lists
+                .iter()
+                .flat_map(|l| l[qi].iter().copied())
+                .collect();
+            all.sort_unstable_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+            all.truncate(c);
+            out.push(all.into_iter().map(|(_, i)| i).collect());
+        }
     }
     (out, rows_visited, stats)
 }
@@ -1354,6 +1485,9 @@ pub struct BackendOpts {
     pub shards: usize,
     /// memory budget (MiB) for resident cold-shard `RowBlocks`; `0` means
     /// unbounded (no LRU eviction). Only meaningful when `shards > 1`.
+    /// Over a plan-matched streamed dataset whose own budget already
+    /// honours this one, residency delegates to the source LRU (one
+    /// cache); otherwise this layer's own LRU enforces the bound.
     pub mem_budget_mb: usize,
 }
 
@@ -1410,25 +1544,12 @@ impl RetrievalBackendKind {
 
     /// Build a shareable backend for a dataset. `opts.clusters`/`opts.nprobe`
     /// only apply to the cluster-pruned backend. With `opts.shards > 1` the
-    /// kind is wrapped in the shard-parallel merge layer.
+    /// kind is wrapped in the shard-parallel merge layer. Row residency —
+    /// resident corpus or `.gds`-streamed shards — comes from the dataset's
+    /// own row source, so every kind serves a streamed dataset unchanged.
     pub fn build(&self, ds: &Dataset, opts: BackendOpts) -> Arc<dyn RetrievalBackend> {
-        self.build_with_store(ds, opts, None)
-    }
-
-    /// [`RetrievalBackendKind::build`] with an optional `.gds` store path:
-    /// a sharded backend under a `mem_budget` streams evicted shards' row
-    /// blocks back from the store instead of re-gathering the resident
-    /// corpus (best-effort — an unopenable store falls back to resident).
-    pub fn build_with_store(
-        &self,
-        ds: &Dataset,
-        opts: BackendOpts,
-        store: Option<&std::path::Path>,
-    ) -> Arc<dyn RetrievalBackend> {
         if opts.shards > 1 {
-            return Arc::new(crate::index::shard::ShardedBackend::build(
-                ds, *self, opts, store,
-            ));
+            return Arc::new(crate::index::shard::ShardedBackend::build(ds, *self, opts));
         }
         // the scalar reference disables every kernel-path refinement
         let refine = opts.kernel && opts.refine_kernel;
@@ -1823,6 +1944,53 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn streamed_dataset_serves_every_backend_byte_identically() {
+        // Tentpole: the monolithic backends serve a data-free corpus —
+        // coarse screens read the resident proxies, refines stream
+        // shard-at-a-time — with the exact resident results, across the
+        // kernel and the row-major reference ladders
+        let ds = tiny(260, 41);
+        let dir = std::env::temp_dir().join("golddiff_backend_stream_test");
+        std::fs::remove_dir_all(&dir).ok();
+        let path = crate::data::store::store_path(&dir, "cifar-sim");
+        crate::data::store::save_sharded(&ds, &path, 4).unwrap();
+        // a tight budget so the LRU actually cycles during refines
+        let st = crate::data::store::open_streaming(&path, 4, 1).unwrap();
+        assert!(st.streamed().is_some());
+        let mut rng = Pcg64::new(7);
+        for kernel in [true, false] {
+            let opts = BackendOpts {
+                threads: 2,
+                clusters: 8,
+                kernel,
+                refine_kernel: kernel,
+                ..BackendOpts::default()
+            };
+            for &kind in RetrievalBackendKind::all() {
+                let res = kind.build(&ds, opts);
+                let str_ = kind.build(&st, opts);
+                for round in 0..4 {
+                    let m = 1 + rng.below(64);
+                    let k = 1 + rng.below(20);
+                    let qp: Vec<f32> = (0..ds.proxy_d).map(|_| rng.normal()).collect();
+                    let q: Vec<f32> = (0..ds.d).map(|_| rng.normal()).collect();
+                    let a = res.top_m(&ds, &qp, m, None);
+                    let b = str_.top_m(&st, &qp, m, None);
+                    assert_eq!(a, b, "{} kernel={kernel} coarse round {round}", res.name());
+                    let ra = res.refine_top_k(&ds, &q, &a, k);
+                    let rb = str_.refine_top_k(&st, &q, &b, k);
+                    assert_eq!(ra, rb, "{} kernel={kernel} refine round {round}", res.name());
+                }
+            }
+        }
+        assert!(
+            st.source_stats().unwrap().rows_streamed > 0,
+            "refines must actually stream"
+        );
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

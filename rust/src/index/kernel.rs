@@ -208,6 +208,22 @@ impl ProxyBlocks {
         self.radii[b]
     }
 
+    /// Copy local row `r` (block-lane addressed) out of the dim-major
+    /// layout into `out[..dim]` — the streamed row source's path from a
+    /// blocked shard back to a flat row. The values are the exact f32s the
+    /// build transposed in, so a blocked roundtrip is bit-identical to the
+    /// row-major original.
+    #[inline]
+    pub fn copy_row_into(&self, r: usize, out: &mut [f32]) {
+        debug_assert!(r < self.rows);
+        debug_assert!(out.len() >= self.dim);
+        let (b, lane) = (r / BLOCK_ROWS, r % BLOCK_ROWS);
+        let block = self.block(b);
+        for (j, o) in out.iter_mut().enumerate().take(self.dim) {
+            *o = block[j * BLOCK_ROWS + lane];
+        }
+    }
+
     /// Resident bytes of the blocked copy (telemetry / working-set math).
     pub fn bytes(&self) -> u64 {
         (self.data.len() + self.centroids.len() + self.radii.len()) as u64 * 4
@@ -636,6 +652,20 @@ mod tests {
                         "rows={rows} dim={dim} r={r} j={j}"
                     );
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn copy_row_into_roundtrips_the_row_major_table() {
+        let mut rng = Pcg64::new(21);
+        for (rows, dim) in [(1usize, 5usize), (33, 17), (100, 96)] {
+            let table = random_table(&mut rng, rows, dim);
+            let blocks = ProxyBlocks::build(&table, rows, dim);
+            let mut out = vec![0.0f32; dim];
+            for r in [0, rows / 2, rows - 1] {
+                blocks.copy_row_into(r, &mut out);
+                assert_eq!(out, table[r * dim..(r + 1) * dim], "rows={rows} r={r}");
             }
         }
     }

@@ -135,8 +135,15 @@ impl ProxyIndex {
         let threads = self.effective_threads(cands.len() * ds.d);
         let shards = parallel_chunks(cands.len(), threads, |_, s, e| {
             let mut heap = BoundedMaxHeap::new(k);
+            // source-agnostic row access. The pool arrives in coarse
+            // -distance order and MUST be visited in that order (the
+            // bit-stable reference contract: visit order resolves exact
+            // f32 ties), so on a streamed corpus the cursor re-pins a
+            // shard whenever consecutive candidates hop shards — the LRU
+            // absorbs the hops while the budget holds a few shards
+            let mut cur = ds.row_cursor();
             for &gid in &cands[s..e] {
-                let row = ds.row(gid as usize);
+                let row = cur.row(gid);
                 let d = sqdist_early_exit(q, row, heap.worst());
                 if d.is_finite() {
                     heap.push(d, gid);

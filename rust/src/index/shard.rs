@@ -32,24 +32,19 @@
 //! LRU; all flow through [`RetrievalStats`] into `EngineStats` and the
 //! server's `stats` op.
 
-use std::collections::HashMap;
-use std::path::Path;
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
 
 use super::backend::{
-    batched_refine, group_mean, moved_blocks, refine_caps, warm_seed_heap, warm_sweep_blocks,
-    BackendOpts, Counters, ProxyQuery, RetrievalBackend, RetrievalBackendKind, RetrievalStats,
+    batched_refine, group_mean, moved_blocks, refine_masked_by_shard, warm_seed_heap,
+    warm_sweep_blocks, BackendOpts, Counters, ProxyQuery, RetrievalBackend,
+    RetrievalBackendKind, RetrievalStats,
 };
-use super::kernel::{
-    self, block_order, build_refine_plan, refine_scan_masked, KernelScan, KernelStats,
-    ProxyBlocks,
-};
+use super::kernel::{self, block_order, KernelScan, KernelStats, ProxyBlocks};
 use super::scan::{sqdist_early_exit, sqdist_flat};
 use super::topk::BoundedMaxHeap;
 use crate::data::dataset::Dataset;
 use crate::data::shard::CorpusShards;
-use crate::data::store::ShardReader;
 use crate::util::rng::Pcg64;
 use crate::util::threadpool::parallel_chunks;
 
@@ -114,22 +109,11 @@ pub struct ShardedBackend {
 }
 
 impl ShardedBackend {
-    /// Build the sharded wrapper for `kind`. `store` optionally attaches a
-    /// `.gds` [`ShardReader`] so evicted shards' row blocks stream back
-    /// from disk (best-effort: an unopenable store stays resident).
-    pub fn build(
-        ds: &Dataset,
-        kind: RetrievalBackendKind,
-        opts: BackendOpts,
-        store: Option<&Path>,
-    ) -> ShardedBackend {
-        let mut corpus = CorpusShards::build(ds, opts.shards, opts.mem_budget_mb);
-        if let Some(path) = store {
-            if let Ok(reader) = ShardReader::open(path, corpus.plan().count()) {
-                corpus = corpus.with_reader(reader);
-            }
-        }
-        let corpus = Arc::new(corpus);
+    /// Build the sharded wrapper for `kind`. Row residency (and, for a
+    /// streamed dataset, the disk-backed rebuilds) routes through the
+    /// dataset's row source — see [`CorpusShards::row_blocks`].
+    pub fn build(ds: &Dataset, kind: RetrievalBackendKind, opts: BackendOpts) -> ShardedBackend {
+        let corpus = Arc::new(CorpusShards::build(ds, opts.shards, opts.mem_budget_mb));
         let ivf = if kind == RetrievalBackendKind::ClusterPruned {
             build_shard_ivf(ds, &corpus, &opts)
         } else {
@@ -391,8 +375,10 @@ impl ShardedBackend {
 
     /// The shard-local masked refine: the tick group's candidate union is
     /// split by owning shard, each shard streams its (LRU-cached, possibly
-    /// disk-rebuilt) row blocks through [`refine_scan_masked`], and the
-    /// per-shard heaps merge exactly by `(distance, row id)`.
+    /// disk-rebuilt) row blocks through the masked refine kernel, and the
+    /// per-shard heaps merge exactly by `(distance, row id)`. One shared
+    /// implementation with the streamed monolithic path —
+    /// [`refine_masked_by_shard`] — so the two can never silently diverge.
     fn refine_sharded(
         &self,
         ds: &Dataset,
@@ -400,70 +386,15 @@ impl ShardedBackend {
         pools: &[&[u32]],
         k: usize,
     ) -> Vec<Vec<u32>> {
-        let caps = refine_caps(pools, k);
-        let plan = self.corpus.plan();
-        let ns = plan.count();
-        let mut out: Vec<Vec<u32>> = Vec::with_capacity(qs.len());
-        for ((qt, pt), ct) in qs
-            .chunks(kernel::TILE_Q)
-            .zip(pools.chunks(kernel::TILE_Q))
-            .zip(caps.chunks(kernel::TILE_Q))
-        {
-            // union membership mask over the tile's queries — duplicate
-            // ids collapse onto one bit, exactly like the refine ladders
-            let mut mask: HashMap<u32, u8> = HashMap::new();
-            for (j, pool) in pt.iter().enumerate() {
-                for &gid in *pool {
-                    *mask.entry(gid).or_insert(0) |= 1 << j;
-                }
-            }
-            let mut union: Vec<(u32, u8)> = mask.into_iter().collect();
-            union.sort_unstable_by_key(|e| e.0);
-            // shard-local (position, bits) lists: positions are local so
-            // the refine plan tiles the shard's own blocks; harvest maps
-            // back to global ids through the blocks' id table
-            let mut per_shard: Vec<Vec<(u32, u8)>> = vec![Vec::new(); ns];
-            for &(gid, bits) in &union {
-                let sh = plan.shard_of(gid as usize);
-                let (s, _) = plan.range(sh);
-                per_shard[sh].push((gid - s as u32, bits));
-            }
-            let touched: Vec<usize> = (0..ns).filter(|&sh| !per_shard[sh].is_empty()).collect();
-            let shard_heaps: Vec<(Vec<BoundedMaxHeap>, KernelStats)> =
-                parallel_chunks(touched.len(), self.threads.max(1), |_, s, e| {
-                    (s..e)
-                        .map(|ti| {
-                            let sh = touched[ti];
-                            let rb = self.corpus.row_blocks(sh, ds);
-                            let block_plan = build_refine_plan(&per_shard[sh]);
-                            let mut heaps: Vec<BoundedMaxHeap> =
-                                ct.iter().map(|&c| BoundedMaxHeap::new(c)).collect();
-                            let mut st = KernelStats::default();
-                            refine_scan_masked(&rb, qt, &block_plan, &mut heaps, &mut st);
-                            (heaps, st)
-                        })
-                        .collect::<Vec<_>>()
-                })
-                .into_iter()
-                .flatten()
-                .collect();
-            let mut kst = KernelStats::default();
-            let mut shard_lists: Vec<Vec<Scored>> = Vec::with_capacity(shard_heaps.len());
-            for (heaps, st) in shard_heaps {
-                kst.add(&st);
-                shard_lists.push(heaps.into_iter().map(sorted_scored).collect());
-            }
-            self.counters.record_refine(union.len() as u64, &kst);
-            for (qi, &c) in ct.iter().enumerate() {
-                let mut all: Scored = shard_lists
-                    .iter()
-                    .flat_map(|l| l[qi].iter().copied())
-                    .collect();
-                all.sort_unstable_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
-                all.truncate(c);
-                out.push(all.into_iter().map(|(_, i)| i).collect());
-            }
-        }
+        let (out, rows, kst) = refine_masked_by_shard(
+            self.corpus.plan(),
+            &|sh| self.corpus.row_blocks(sh, ds),
+            qs,
+            pools,
+            k,
+            self.threads,
+        );
+        self.counters.record_refine(rows, &kst);
         out
     }
 
@@ -559,6 +490,15 @@ fn build_shard_ivf(ds: &Dataset, corpus: &CorpusShards, opts: &BackendOpts) -> V
     let pd = ds.proxy_d;
     let ns = corpus.plan().count();
     let per_shard = opts.clusters.max(1).div_ceil(ns).max(1);
+    // reuse the persisted per-shard partitions when the `.gds` store
+    // carried a matching set (satellite: a sharded cluster engine stops
+    // paying per-shard k-means on every start); the members/radii/blocks
+    // derived below are pure functions of (centroids, assignments), so a
+    // persisted partition yields the bit-identical backend
+    let persisted = ds
+        .shard_ivf
+        .as_ref()
+        .filter(|p| p.matches(ns, per_shard, opts.seed));
     (0..ns)
         .map(|sh| {
             let (s, e) = corpus.plan().range(sh);
@@ -573,14 +513,26 @@ fn build_shard_ivf(ds: &Dataset, corpus: &CorpusShards, opts: &BackendOpts) -> V
                 };
             }
             let lists = per_shard.clamp(1, rows);
-            // deterministic per-shard stream: shard 0 of a 1-shard plan
-            // reproduces the global IvfPartition's k-means verbatim
-            let mut rng = Pcg64::with_stream(
-                opts.seed ^ (sh as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15),
-                0x1f5,
-            );
-            let (centroids, assign) =
-                crate::data::cluster::kmeans(&ds.proxies[s * pd..e * pd], rows, pd, lists, 8, &mut rng);
+            let (centroids, assign) = match persisted {
+                Some(p) => (p.centroids[sh].clone(), p.assignments[sh].clone()),
+                None => {
+                    // deterministic per-shard stream: shard 0 of a 1-shard
+                    // plan reproduces the global IvfPartition's k-means
+                    // verbatim (and ShardIvfPartition::compute this stream)
+                    let mut rng = Pcg64::with_stream(
+                        opts.seed ^ (sh as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15),
+                        0x1f5,
+                    );
+                    crate::data::cluster::kmeans(
+                        &ds.proxies[s * pd..e * pd],
+                        rows,
+                        pd,
+                        lists,
+                        8,
+                        &mut rng,
+                    )
+                }
+            };
             let mut members: Vec<Vec<u32>> = vec![Vec::new(); lists];
             for (local, &a) in assign.iter().enumerate() {
                 members[a as usize].push((s + local) as u32);
@@ -704,7 +656,10 @@ impl RetrievalBackend for ShardedBackend {
 
     fn stats(&self) -> RetrievalStats {
         let mut s = self.counters.snapshot();
-        s.shard_evictions = self.corpus.cache_stats().evictions;
+        let cache = self.corpus.cache_stats();
+        s.shard_evictions = cache.evictions;
+        s.rows_streamed = cache.rows_streamed;
+        s.peak_row_bytes = cache.peak_row_bytes;
         s
     }
 
@@ -717,7 +672,6 @@ impl RetrievalBackend for ShardedBackend {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::data::dataset::IvfPartition;
     use crate::data::store;
     use crate::data::synthetic::preset;
     use crate::index::backend::FlatScan;
@@ -740,27 +694,11 @@ mod tests {
         }
     }
 
-    /// Permute a dataset so rows group by proxy-space cluster — shards
-    /// become spatially coherent, which is what makes whole-shard bounds
-    /// (and, in production, locality-aware ingest) actually bite.
+    /// The shard-aware ingest ordering (production `with_clustered_rows`):
+    /// rows grouped by proxy-space cluster so shards become spatially
+    /// coherent — what makes whole-shard bounds actually bite.
     fn clustered(ds: &Dataset) -> Dataset {
-        let part = IvfPartition::compute(ds, 8, 5);
-        let mut order: Vec<usize> = (0..ds.n).collect();
-        order.sort_by_key(|&i| (part.assignments[i], i as u32));
-        let (d, pd) = (ds.d, ds.proxy_d);
-        let mut out = ds.clone();
-        for (new, &old) in order.iter().enumerate() {
-            out.data[new * d..(new + 1) * d].copy_from_slice(ds.row(old));
-            out.proxies[new * pd..(new + 1) * pd].copy_from_slice(ds.proxy_row(old));
-            out.labels[new] = ds.labels[old];
-        }
-        out.proxy_blocks = ProxyBlocks::build(&out.proxies, out.n, pd);
-        out.row_blocks = std::sync::OnceLock::new();
-        out.class_rows = vec![Vec::new(); out.classes];
-        for (i, &y) in out.labels.iter().enumerate() {
-            out.class_rows[y as usize].push(i as u32);
-        }
-        out
+        ds.with_clustered_rows(8, 5)
     }
 
     #[test]
@@ -773,7 +711,7 @@ mod tests {
         for &kind in RetrievalBackendKind::all() {
             for kernel in [true, false] {
                 for shards in [1usize, 2, 7] {
-                    let sb = ShardedBackend::build(&ds, kind, opts(shards, kernel), None);
+                    let sb = ShardedBackend::build(&ds, kind, opts(shards, kernel));
                     forall(97 + shards as u64, 6, |rng| {
                         let m = gen::usize_in(rng, 1, 70);
                         let q = gen::vec_normal(rng, ds.proxy_d, 1.0);
@@ -814,7 +752,7 @@ mod tests {
         for &kind in RetrievalBackendKind::all() {
             let mut reference: Option<Vec<Vec<u32>>> = None;
             for shards in [1usize, 2, 7] {
-                let sb = ShardedBackend::build(&ds, kind, opts(shards, true), None);
+                let sb = ShardedBackend::build(&ds, kind, opts(shards, true));
                 let got = sb.top_m_batch(&ds, &queries, 40);
                 match &reference {
                     None => reference = Some(got),
@@ -831,12 +769,7 @@ mod tests {
         let ds = tiny(280, 17);
         let flat = FlatScan::scalar(2);
         for shards in [2usize, 5] {
-            let sb = ShardedBackend::build(
-                &ds,
-                RetrievalBackendKind::Batched,
-                opts(shards, true),
-                None,
-            );
+            let sb = ShardedBackend::build(&ds, RetrievalBackendKind::Batched, opts(shards, true));
             forall(61 + shards as u64, 10, |rng| {
                 let nq = gen::usize_in(rng, 1, 10);
                 let k = gen::usize_in(rng, 1, 20);
@@ -880,7 +813,7 @@ mod tests {
     #[test]
     fn cold_scan_accounting_covers_every_query_shard_pair() {
         let ds = tiny(200, 7);
-        let sb = ShardedBackend::build(&ds, RetrievalBackendKind::Batched, opts(4, true), None);
+        let sb = ShardedBackend::build(&ds, RetrievalBackendKind::Batched, opts(4, true));
         let q = vec![0.1f32; ds.proxy_d];
         let queries: Vec<ProxyQuery> = (0..6)
             .map(|_| ProxyQuery {
@@ -907,7 +840,7 @@ mod tests {
         let mut spec = preset("moons").unwrap().clone();
         spec.n = 40;
         let ds = Dataset::synthesize(&spec, 2);
-        let sb = ShardedBackend::build(&ds, RetrievalBackendKind::Flat, opts(40, true), None);
+        let sb = ShardedBackend::build(&ds, RetrievalBackendKind::Flat, opts(40, true));
         let flat = FlatScan::scalar(1);
         let class = (0..ds.classes)
             .max_by_key(|&c| ds.class_rows[c].len())
@@ -927,7 +860,7 @@ mod tests {
         // must return the cold screen's exact rows while skipping whole
         // shards under the covering-radius bound
         let ds = clustered(&tiny(320, 23));
-        let sb = ShardedBackend::build(&ds, RetrievalBackendKind::Batched, opts(8, true), None);
+        let sb = ShardedBackend::build(&ds, RetrievalBackendKind::Batched, opts(8, true));
         let seeds: Vec<u32> = (0..ds.n as u32).collect();
         let q = ds.proxy_row(10).to_vec();
         // m = 1 on a self-query: the seed pass retains distance 0, so the
@@ -963,7 +896,6 @@ mod tests {
                 shards: 4,
                 ..BackendOpts::default()
             },
-            None,
         );
         assert!(!sb.is_exact(), "nprobe > 0 stays the approximate knob");
         let q = ds.proxy_row(7).to_vec();
@@ -973,18 +905,15 @@ mod tests {
         assert_eq!(distinct.len(), 32);
         // and nprobe = 0 stays exact
         assert!(
-            ShardedBackend::build(
-                &ds,
-                RetrievalBackendKind::ClusterPruned,
-                opts(4, true),
-                None
-            )
+            ShardedBackend::build(&ds, RetrievalBackendKind::ClusterPruned, opts(4, true))
             .is_exact()
         );
     }
 
     #[test]
     fn streamed_budgeted_backend_matches_resident_and_evicts() {
+        // a data-free (open_streaming) corpus with a tight budget serves
+        // the exact resident results while evicting and re-streaming shards
         let ds = tiny(220, 31);
         let dir = std::env::temp_dir().join("golddiff_sharded_stream_test");
         std::fs::remove_dir_all(&dir).ok();
@@ -992,8 +921,9 @@ mod tests {
         store::save_sharded(&ds, &path, 4).unwrap();
         // budget of ~1 MiB < the blocked corpus (220 × 3072 × 4 B ≈ 2.7 MiB
         // across 4 shards), so refines must evict and re-stream shards
+        let ds_streamed = store::open_streaming(&path, 4, 1).unwrap();
         let streamed = ShardedBackend::build(
-            &ds,
+            &ds_streamed,
             RetrievalBackendKind::Batched,
             BackendOpts {
                 shards: 4,
@@ -1001,15 +931,9 @@ mod tests {
                 threads: 1,
                 ..BackendOpts::default()
             },
-            Some(&path),
         );
         assert!(streamed.corpus().is_streamed());
-        let resident = ShardedBackend::build(
-            &ds,
-            RetrievalBackendKind::Batched,
-            opts(4, true),
-            None,
-        );
+        let resident = ShardedBackend::build(&ds, RetrievalBackendKind::Batched, opts(4, true));
         let mut rng = Pcg64::new(4);
         for round in 0..3 {
             let q: Vec<f32> = (0..ds.d).map(|_| rng.normal()).collect();
@@ -1018,15 +942,78 @@ mod tests {
                 .into_iter()
                 .map(|i| i as u32)
                 .collect();
-            let a = streamed.refine_top_k(&ds, &q, &pool, 12);
+            let a = streamed.refine_top_k(&ds_streamed, &q, &pool, 12);
             let b = resident.refine_top_k(&ds, &q, &pool, 12);
             assert_eq!(a, b, "round {round}");
         }
         let cache = streamed.corpus().cache_stats();
         assert!(cache.evictions > 0, "1 MiB budget must evict: {cache:?}");
         assert!(cache.streamed_loads > 0, "rebuilds must stream from disk");
-        assert!(streamed.stats().shard_evictions > 0, "telemetry flows");
+        assert!(cache.rows_streamed > ds.n as u64, "re-streams count rows");
+        assert!(
+            cache.peak_row_bytes > 0 && cache.peak_row_bytes <= 1024 * 1024,
+            "peak residency bounded by the budget: {cache:?}"
+        );
+        let stats = streamed.stats();
+        assert!(stats.shard_evictions > 0, "telemetry flows");
+        assert!(stats.rows_streamed > 0 && stats.peak_row_bytes > 0);
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn persisted_shard_ivf_is_reused_and_serves_identically() {
+        // Satellite: a matching ds.shard_ivf short-circuits per-shard
+        // k-means and the backend serves the bit-identical results
+        use crate::data::dataset::ShardIvfPartition;
+        let mut ds = tiny(240, 13);
+        let fresh = ShardedBackend::build(&ds, RetrievalBackendKind::ClusterPruned, opts(4, true));
+        // persist the partitions the backend would compute (same key:
+        // shards=4, per-shard lists = ceil(10/4) = 3, seed = opts default 0)
+        ds.shard_ivf = Some(ShardIvfPartition::compute(&ds, 4, 3, 0));
+        let reused = ShardedBackend::build(&ds, RetrievalBackendKind::ClusterPruned, opts(4, true));
+        for sh in 0..4 {
+            assert_eq!(
+                reused.ivf[sh].centroids, fresh.ivf[sh].centroids,
+                "shard {sh}: persisted partition must be reused verbatim"
+            );
+        }
+        let mut rng = Pcg64::new(9);
+        for _ in 0..5 {
+            let q: Vec<f32> = (0..ds.proxy_d).map(|_| rng.normal()).collect();
+            assert_eq!(
+                reused.top_m(&ds, &q, 24, None),
+                fresh.top_m(&ds, &q, 24, None)
+            );
+        }
+        // a mismatched key (different seed) must NOT reuse
+        ds.shard_ivf = Some(ShardIvfPartition::compute(&ds, 4, 3, 999));
+        let other = ShardedBackend::build(&ds, RetrievalBackendKind::ClusterPruned, opts(4, true));
+        let q = ds.proxy_row(5).to_vec();
+        assert_eq!(
+            other.top_m(&ds, &q, 16, None),
+            fresh.top_m(&ds, &q, 16, None),
+            "results stay exact regardless of partition provenance"
+        );
+    }
+
+    #[test]
+    fn clustered_ingest_makes_warm_screen_skip_shards() {
+        // Satellite: on the cluster-ordered corpus the warm screen's
+        // whole-shard covering-radius bound actually fires
+        let ds = clustered(&tiny(320, 29));
+        let sb = ShardedBackend::build(&ds, RetrievalBackendKind::Batched, opts(8, true));
+        let seeds: Vec<u32> = (0..ds.n as u32).collect();
+        let q = ds.proxy_row(40).to_vec();
+        let cold = sb.top_m(&ds, &q, 12, None);
+        sb.reset_stats();
+        let warm = sb.warm_top_m(&ds, &q, None, 12, &seeds).expect("seeds fill");
+        assert_eq!(warm, cold, "warm screen stays exact");
+        let s = sb.stats();
+        assert!(
+            s.shards_skipped > 0,
+            "spatially coherent shards must be skipped: {s:?}"
+        );
+        assert_eq!(s.shards_scanned + s.shards_skipped, 8);
     }
 
     #[test]

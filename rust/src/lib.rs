@@ -10,9 +10,12 @@
 //! * [`util`] — offline-friendly substrates (JSON, RNG, threadpool, CLI, …).
 //! * [`config`] — typed configuration for datasets, schedules and the engine.
 //! * [`data`] — synthetic hierarchical-GMM datasets, the `.gds` store
-//!   (v3: per-shard sections + streaming `ShardReader`), and the sharded
-//!   corpus layer (`data::shard::CorpusShards`: memory-bounded, LRU-cached
-//!   per-shard row blocks).
+//!   (v3: per-shard sections, persisted per-shard IVF partitions, and the
+//!   data-free `store::open_streaming` path), the pluggable row source
+//!   (`data::rows::RowSource`: resident corpus or `.gds`-streamed shards
+//!   under a `mem_budget_mb`-bounded LRU — out-of-core serving with
+//!   byte-identical output), and the sharded corpus layer
+//!   (`data::shard::CorpusShards`).
 //! * [`schedule`] — noise schedules and the paper's counter-monotonic
 //!   (m_t, k_t) budget schedules (Eqs. 4 & 6).
 //! * [`index`] — Adaptive Coarse Screening behind pluggable

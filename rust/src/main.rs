@@ -62,6 +62,12 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
 fn gen_data(args: &Args) -> Result<()> {
     let dir = std::path::PathBuf::from(args.get_or("out-dir", "data"));
     let seed = args.u64_or("seed", 0);
+    // shard-aware ingest: --cluster-order N permutes rows by proxy-space
+    // k-means cluster (N lists) before the shard split, so contiguous
+    // shards are spatially coherent and the warm screen's whole-shard
+    // skips fire; --shards saves the v3 per-shard sections for streaming
+    let order_lists = args.usize_or("cluster-order", 0);
+    let shards = args.usize_or("shards", 1);
     let names: Vec<&str> = if args.flag("all") {
         PRESETS.iter().map(|p| p.name).collect()
     } else {
@@ -75,13 +81,21 @@ fn gen_data(args: &Args) -> Result<()> {
             continue;
         }
         let t0 = std::time::Instant::now();
-        let ds = golddiff::Dataset::synthesize(spec, seed);
-        store::save(&ds, &path)?;
+        let mut ds = golddiff::Dataset::synthesize(spec, seed);
+        if order_lists > 0 {
+            ds = ds.with_clustered_rows(order_lists, seed);
+        }
+        store::save_sharded(&ds, &path, shards)?;
         println!(
-            "{name}: N={} D={} classes={} -> {path:?} ({:.1}s)",
+            "{name}: N={} D={} classes={}{} -> {path:?} ({:.1}s)",
             ds.n,
             ds.d,
             ds.classes,
+            if order_lists > 0 {
+                format!(" cluster-ordered({order_lists})")
+            } else {
+                String::new()
+            },
             t0.elapsed().as_secs_f64()
         );
     }

@@ -150,14 +150,20 @@ fn xla_and_cpu_paths_agree_on_image_preset() {
 fn determinism_matrix_backend_kernel_warmstart() {
     // Satellite: one seeded synthetic dataset stepped through the full
     // retrieval matrix — backend ∈ {flat, batched, cluster} × kernel ∈
-    // {on, off} × warm_start ∈ {on, off} × shards ∈ {1, 2, 7} — must
-    // produce byte-identical golden subsets for a tick group at every
-    // sampling point, and byte-identical samples for a full
-    // single-sequence trajectory. This is the engine's exactness contract:
-    // every knob — including the corpus shard count, whose per-shard heaps
-    // merge with a deterministic (distance, row id) tie-break — is a
-    // performance lever, never a result lever.
+    // {on, off} × warm_start ∈ {on, off} × shards ∈ {1, 2, 7} ×
+    // resident ∈ {true, false} — must produce byte-identical golden
+    // subsets for a tick group at every sampling point, and byte-identical
+    // samples for a full single-sequence trajectory. This is the engine's
+    // exactness contract: every knob — the corpus shard count (per-shard
+    // heaps merge with a deterministic (distance, row id) tie-break) and
+    // corpus residency (a streamed corpus serves the exact bytes the
+    // resident one holds) included — is a performance/residency lever,
+    // never a result lever.
     let ds = small("mnist-sim", 260, 11);
+    let dir = std::env::temp_dir().join("golddiff_it_matrix_streamed");
+    std::fs::remove_dir_all(&dir).ok();
+    let path = store::store_path(&dir, "mnist-sim");
+    store::save_sharded(&ds, &path, 4).unwrap();
     let sched = NoiseSchedule::new(ScheduleKind::DdpmLinear, 10);
     let xs_data: Vec<Vec<f32>> = (0..6)
         .map(|i| {
@@ -167,64 +173,195 @@ fn determinism_matrix_backend_kernel_warmstart() {
         .collect();
 
     let mut reference: Option<(Vec<Vec<Vec<u32>>>, Vec<f32>)> = None;
-    for &backend in RetrievalBackendKind::all() {
-        for kernel in [true, false] {
-            for warm in [true, false] {
-                for shards in [1usize, 2, 7] {
-                    let opts = BackendOpts {
-                        threads: 2,
-                        clusters: 8,
-                        kernel,
-                        shards,
-                        ..BackendOpts::default()
-                    };
-                    let build = || {
-                        GoldDiff::paper_defaults(&ds, &sched, BaseWeighting::Golden)
-                            .with_backend(backend.build(&ds, opts))
-                            .with_warm_start(warm)
-                    };
-                    // (a) a 6-sequence tick group stepped 0..steps — the
-                    // warm screen sees the previous step's subsets, as in
-                    // serving
-                    let mut gd = build();
-                    let mut subsets = Vec::new();
-                    for step in 0..sched.steps {
-                        let ctx = StepContext {
-                            ds: &ds,
-                            sched: &sched,
-                            step,
-                            class: None,
+    for resident in [true, false] {
+        for &backend in RetrievalBackendKind::all() {
+            for kernel in [true, false] {
+                for warm in [true, false] {
+                    for shards in [1usize, 2, 7] {
+                        // the streamed arm re-opens the store data-free per
+                        // combo (sources are stateful LRUs; a fresh one pins
+                        // cold-start determinism too)
+                        let ds_run = if resident {
+                            None
+                        } else {
+                            Some(store::open_streaming(&path, shards, 0).unwrap())
                         };
-                        let xs: Vec<&[f32]> = xs_data.iter().map(|x| x.as_slice()).collect();
-                        let ctxs: Vec<&StepContext> = xs.iter().map(|_| &ctx).collect();
-                        subsets.push(gd.golden_subsets(&xs, &ctxs));
-                    }
-                    // (b) a full single-sequence reverse trajectory
-                    let mut den = build();
-                    let traj = sampler::sample(
-                        &mut den as &mut dyn Denoiser,
-                        &ds,
-                        &sched,
-                        5,
-                        sampler::SamplerOpts::default(),
-                    );
-                    let sample = traj.final_sample().to_vec();
-                    let label =
-                        format!("{}/kernel={kernel}/warm={warm}/shards={shards}", backend.name());
-                    match &reference {
-                        None => reference = Some((subsets, sample)),
-                        Some((ref_subsets, ref_sample)) => {
-                            assert_eq!(
-                                ref_subsets, &subsets,
-                                "{label}: golden subsets diverged"
-                            );
-                            assert_eq!(ref_sample, &sample, "{label}: samples diverged");
+                        let ds_run: &Dataset = ds_run.as_ref().unwrap_or(&ds);
+                        let opts = BackendOpts {
+                            threads: 2,
+                            clusters: 8,
+                            kernel,
+                            shards,
+                            ..BackendOpts::default()
+                        };
+                        let build = || {
+                            GoldDiff::paper_defaults(ds_run, &sched, BaseWeighting::Golden)
+                                .with_backend(backend.build(ds_run, opts))
+                                .with_warm_start(warm)
+                        };
+                        // (a) a 6-sequence tick group stepped 0..steps — the
+                        // warm screen sees the previous step's subsets, as in
+                        // serving
+                        let mut gd = build();
+                        let mut subsets = Vec::new();
+                        for step in 0..sched.steps {
+                            let ctx = StepContext {
+                                ds: ds_run,
+                                sched: &sched,
+                                step,
+                                class: None,
+                            };
+                            let xs: Vec<&[f32]> =
+                                xs_data.iter().map(|x| x.as_slice()).collect();
+                            let ctxs: Vec<&StepContext> = xs.iter().map(|_| &ctx).collect();
+                            subsets.push(gd.golden_subsets(&xs, &ctxs));
+                        }
+                        // (b) a full single-sequence reverse trajectory
+                        let mut den = build();
+                        let traj = sampler::sample(
+                            &mut den as &mut dyn Denoiser,
+                            ds_run,
+                            &sched,
+                            5,
+                            sampler::SamplerOpts::default(),
+                        );
+                        let sample = traj.final_sample().to_vec();
+                        let label = format!(
+                            "{}/kernel={kernel}/warm={warm}/shards={shards}/resident={resident}",
+                            backend.name()
+                        );
+                        match &reference {
+                            None => reference = Some((subsets, sample)),
+                            Some((ref_subsets, ref_sample)) => {
+                                assert_eq!(
+                                    ref_subsets, &subsets,
+                                    "{label}: golden subsets diverged"
+                                );
+                                assert_eq!(ref_sample, &sample, "{label}: samples diverged");
+                            }
                         }
                     }
                 }
             }
         }
     }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn streamed_forced_eviction_serves_byte_identical_samples() {
+    // Satellite: the out-of-core engine contract end to end on the CPU
+    // path — a corpus larger than the LRU budget (cifar-sim rows are 3072
+    // f32s; 300 rows ≈ 3.7 MiB blocked vs a 1 MiB budget over 6 shards)
+    // serves full trajectories byte-identical to the resident engine while
+    // evicting and re-streaming shards throughout, and resident bytes
+    // never exceed the budget (debug-asserted inside the source, verified
+    // against the peak here).
+    let ds = small("cifar-sim", 300, 19);
+    let dir = std::env::temp_dir().join("golddiff_it_forced_eviction");
+    std::fs::remove_dir_all(&dir).ok();
+    let path = store::store_path(&dir, "cifar-sim");
+    store::save_sharded(&ds, &path, 6).unwrap();
+    let st = store::open_streaming(&path, 6, 1).unwrap();
+
+    let run = |ds_run: &Dataset| -> Vec<Vec<f32>> {
+        let sched = NoiseSchedule::new(ScheduleKind::DdpmLinear, 10);
+        let opts = BackendOpts {
+            threads: 2,
+            shards: 6,
+            mem_budget_mb: 1,
+            ..BackendOpts::default()
+        };
+        (0..3u64)
+            .map(|seed| {
+                let mut den =
+                    GoldDiff::paper_defaults(ds_run, &sched, BaseWeighting::Golden)
+                        .with_backend(RetrievalBackendKind::Batched.build(ds_run, opts))
+                        .with_warm_start(true);
+                sampler::sample(
+                    &mut den as &mut dyn Denoiser,
+                    ds_run,
+                    &sched,
+                    seed,
+                    sampler::SamplerOpts::default(),
+                )
+                .final_sample()
+                .to_vec()
+            })
+            .collect()
+    };
+    let resident_samples = run(&ds);
+    let streamed_samples = run(&st);
+    assert_eq!(
+        resident_samples, streamed_samples,
+        "streamed trajectories must be byte-identical to resident"
+    );
+    let src = st.source_stats().unwrap();
+    assert!(src.evictions > 0, "the 1 MiB budget must evict: {src:?}");
+    assert!(
+        src.rows_streamed > ds.n as u64,
+        "eviction must force re-streaming: {src:?}"
+    );
+    assert!(
+        src.peak_row_bytes <= 1024 * 1024,
+        "resident row bytes never exceed the budget: {src:?}"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn streamed_baseline_fits_match_resident() {
+    // Satellite: the full-support baseline denoisers (Optimal / PCA biased
+    // + unbiased / Kamb) produce bit-identical posterior means on a
+    // streamed corpus — the chunked shard-at-a-time passes preserve the
+    // exact aggregation order
+    let ds = small("mnist-sim", 220, 23);
+    let dir = std::env::temp_dir().join("golddiff_it_streamed_baselines");
+    std::fs::remove_dir_all(&dir).ok();
+    let path = store::store_path(&dir, "mnist-sim");
+    store::save_sharded(&ds, &path, 3).unwrap();
+    let st = store::open_streaming(&path, 3, 0).unwrap();
+    let sched = NoiseSchedule::new(ScheduleKind::DdpmLinear, 10);
+    let mut rng = golddiff::util::rng::Pcg64::new(3);
+    let x_t: Vec<f32> = (0..ds.d).map(|_| rng.normal()).collect();
+    // best-populated class so the conditional arm always has support
+    let cond = (0..ds.classes)
+        .max_by_key(|&c| ds.class_rows[c].len())
+        .unwrap() as u32;
+    for kind in [
+        DenoiserKind::Optimal,
+        DenoiserKind::Pca,
+        DenoiserKind::PcaUnbiased,
+        DenoiserKind::Kamb,
+        DenoiserKind::GoldDiff,
+    ] {
+        let mut a = kind.build(&ds, &sched);
+        let mut b = kind.build(&st, &sched);
+        for step in [0usize, 4, 9] {
+            for class in [None, Some(cond)] {
+                let ctx_r = StepContext {
+                    ds: &ds,
+                    sched: &sched,
+                    step,
+                    class,
+                };
+                let ctx_s = StepContext {
+                    ds: &st,
+                    sched: &sched,
+                    step,
+                    class,
+                };
+                let fa = a.denoise(&x_t, &ctx_r);
+                let fb = b.denoise(&x_t, &ctx_s);
+                assert_eq!(
+                    fa.f_hat, fb.f_hat,
+                    "{kind:?} step {step} class {class:?}: outputs diverged"
+                );
+                assert_eq!(fa.support, fb.support);
+            }
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
 }
 
 #[test]
