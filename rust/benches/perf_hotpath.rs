@@ -6,7 +6,10 @@
 //!      telemetry), the batched refine ladder vs per-query refines, and
 //!      cluster-pruned-vs-flat screening, and shard-parallel retrieval vs
 //!      the monolithic scan (`shard_scan_scaling` / `sharded_vs_monolithic`,
-//!      exact-merge parity asserted before timing) — all run without the
+//!      exact-merge parity asserted before timing), and the quantised
+//!      screen/refine tier vs the pure-f32 kernel plus SIMD-vs-scalar
+//!      accumulator lanes (`quant_screen_vs_f32` / `simd_vs_scalar`,
+//!      byte-equality asserted before timing) — all run without the
 //!      XLA runtime, emit machine-readable `BENCH {json}` lines and
 //!      *verify* the one-pass-per-group invariant via the backend pass
 //!      counter;
@@ -622,6 +625,151 @@ fn bench_streamed(ds: &golddiff::Dataset) {
     std::fs::remove_dir_all(&dir).ok();
 }
 
+/// Section 0e: the quantised screen/refine tier vs the pure-f32 kernel, and
+/// the SIMD lanes vs the scalar accumulators (no runtime required). Both
+/// comparisons assert byte-identical ids before any timing is trusted: the
+/// quant tier rescores every survivor through the exact f32 refine, and the
+/// AVX2 f32 accumulator carries no FMA so it is bit-identical to scalar.
+fn bench_quant_simd(ds: &golddiff::Dataset) {
+    use golddiff::index::kernel::simd;
+
+    const BATCH: usize = 8;
+    // precision budget: small m keeps the ub-threshold tight so the int8
+    // lower bound actually rejects rows instead of rescoring everything
+    let m = (ds.n / 20).max(1);
+    let k = (m / 2).max(1);
+    let mut rng = golddiff::util::rng::Pcg64::new(67);
+    let queries_data: Vec<Vec<f32>> = (0..BATCH)
+        .map(|_| {
+            let row = ds.proxy_row(rng.below(ds.n)).to_vec();
+            row.iter().map(|&v| v + rng.normal() * 0.3).collect()
+        })
+        .collect();
+    let queries: Vec<ProxyQuery> = queries_data
+        .iter()
+        .map(|q| ProxyQuery {
+            proxy: q,
+            class: None,
+        })
+        .collect();
+    let full_queries: Vec<Vec<f32>> = (0..BATCH as u64)
+        .map(|i| {
+            let mut r = golddiff::util::rng::Pcg64::new(700 + i);
+            let row = ds.row(r.below(ds.n)).to_vec();
+            row.iter().map(|&v| v + r.normal() * 0.2).collect()
+        })
+        .collect();
+    let qrefs: Vec<&[f32]> = full_queries.iter().map(|q| q.as_slice()).collect();
+
+    println!("-- quantised tier vs f32 kernel (batch={BATCH}, m={m}, k={k}) --");
+    let f32_backend = BatchedScan::default();
+    let quant_backend = BatchedScan::default().with_quant(true);
+    // exact-rescore contract: the quant screen must return byte-identical
+    // ids — every survivor is re-ranked on the f32 rows before emission
+    let want = f32_backend.top_m_batch(ds, &queries, m);
+    assert_eq!(
+        quant_backend.top_m_batch(ds, &queries, m),
+        want,
+        "quant screen must match the f32 kernel byte-for-byte"
+    );
+    let poolrefs: Vec<&[u32]> = want.iter().map(|p| p.as_slice()).collect();
+    assert_eq!(
+        quant_backend.refine_top_k_batch(ds, &qrefs, &poolrefs, k),
+        f32_backend.refine_top_k_batch(ds, &qrefs, &poolrefs, k),
+        "quant-prefiltered refine must match the f32 ladder byte-for-byte"
+    );
+    let t_f32 = bench(&format!("screen x{BATCH} top-{m} (f32 kernel)"), 15, || {
+        let _ = f32_backend.top_m_batch(ds, &queries, m);
+    });
+    let t_quant = bench(&format!("screen x{BATCH} top-{m} (int8 + f32 rescore)"), 15, || {
+        let _ = quant_backend.top_m_batch(ds, &queries, m);
+    });
+    // per-call telemetry: reset, run once, snapshot (the timed loop above
+    // accumulates the counters across every iteration)
+    quant_backend.reset_stats();
+    let _ = quant_backend.top_m_batch(ds, &queries, m);
+    let _ = quant_backend.refine_top_k_batch(ds, &qrefs, &poolrefs, k);
+    let qsnap = quant_backend.stats();
+    assert!(
+        qsnap.quant_rows_screened > 0,
+        "the quant backend must route the screen through the int8 tier"
+    );
+    assert_eq!(
+        qsnap.quant_rows_screened,
+        qsnap.bound_rejects + qsnap.rescore_rows,
+        "every screened row is either bound-rejected or exactly rescored"
+    );
+    let reject_frac = qsnap.bound_rejects as f64 / qsnap.quant_rows_screened.max(1) as f64;
+    let quant_speedup = t_f32 / t_quant.max(1e-12);
+    println!(
+        "{:>58}  -> quant speedup {quant_speedup:.2}x, {:.0}% rows bound-rejected, {} rescored",
+        "",
+        reject_frac * 100.0,
+        qsnap.rescore_rows
+    );
+    benchlib::emit_bench(
+        "quant_screen_vs_f32",
+        &[
+            ("batch", BATCH as f64),
+            ("m", m as f64),
+            ("k", k as f64),
+            ("n", ds.n as f64),
+            ("f32_secs", t_f32),
+            ("quant_secs", t_quant),
+            ("speedup", quant_speedup),
+            ("quant_rows_screened", qsnap.quant_rows_screened as f64),
+            ("bound_rejects", qsnap.bound_rejects as f64),
+            ("rescore_rows", qsnap.rescore_rows as f64),
+            ("reject_frac", reject_frac),
+        ],
+    );
+
+    // SIMD lanes vs the scalar accumulators: same kernel, same tile walk,
+    // only the inner accumulator differs. The f32 AVX2 path carries no FMA
+    // and the i8 path widens through exact integer conversion, so both are
+    // bit-identical to scalar — asserted on ids before timing.
+    println!(
+        "-- simd vs scalar accumulators (avx2 available: {}) --",
+        simd::available()
+    );
+    simd::set_enabled(false);
+    let want_scalar = f32_backend.top_m_batch(ds, &queries, m);
+    let want_scalar_q = quant_backend.top_m_batch(ds, &queries, m);
+    simd::set_enabled(true);
+    assert_eq!(
+        f32_backend.top_m_batch(ds, &queries, m),
+        want_scalar,
+        "simd f32 accumulators must be bit-identical to scalar"
+    );
+    assert_eq!(
+        quant_backend.top_m_batch(ds, &queries, m),
+        want_scalar_q,
+        "simd i8 accumulators must be bit-identical to scalar"
+    );
+    let t_simd = bench(&format!("screen x{BATCH} top-{m} (simd lanes)"), 15, || {
+        let _ = f32_backend.top_m_batch(ds, &queries, m);
+    });
+    simd::set_enabled(false);
+    let t_scalar = bench(&format!("screen x{BATCH} top-{m} (scalar lanes)"), 15, || {
+        let _ = f32_backend.top_m_batch(ds, &queries, m);
+    });
+    simd::set_enabled(true);
+    let simd_speedup = t_scalar / t_simd.max(1e-12);
+    println!("{:>58}  -> simd speedup {simd_speedup:.2}x over scalar", "");
+    benchlib::emit_bench(
+        "simd_vs_scalar",
+        &[
+            ("batch", BATCH as f64),
+            ("m", m as f64),
+            ("n", ds.n as f64),
+            ("avx2_available", simd::available() as u64 as f64),
+            ("simd_secs", t_simd),
+            ("scalar_secs", t_scalar),
+            ("speedup", simd_speedup),
+        ],
+    );
+}
+
 fn main() -> anyhow::Result<()> {
     // GOLDDIFF_BENCH_N shrinks the corpus for CI smoke runs (synthesised
     // directly, bypassing the on-disk store so sizes never conflict)
@@ -659,6 +807,10 @@ fn main() -> anyhow::Result<()> {
     // 0d. out-of-core corpus: streamed (LRU-bounded) vs resident serving
     // (no runtime required; byte-equality asserted before timing)
     bench_streamed(&ds);
+
+    // 0e. quantised screen/refine tier vs f32, and simd vs scalar lanes
+    // (no runtime required; byte-equality asserted before timing)
+    bench_quant_simd(&ds);
 
     // 1. coarse scan vs threads
     for threads in [1usize, 2, 4, 8] {

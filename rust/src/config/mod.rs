@@ -1,7 +1,9 @@
 //! Typed configuration for the serving engine and experiments, with JSON
 //! round-trip (config files + CLI overrides).
 
+use std::collections::HashSet;
 use std::path::{Path, PathBuf};
+use std::sync::{Mutex, OnceLock};
 
 use anyhow::Result;
 
@@ -9,28 +11,65 @@ use crate::util::json::{parse, Json};
 
 /// Parse a boolean-ish flag value (CLI `--kernel off`, env `GOLDDIFF_*`).
 pub fn parse_flag(v: &str) -> bool {
-    matches!(v, "1" | "true" | "on" | "yes")
+    parse_flag_strict(v).unwrap_or(false)
+}
+
+/// Strict flag parse: `None` for anything that is not a recognised
+/// spelling, so callers can tell "explicitly off" from "mistyped". The
+/// empty string counts as off (an `VAR=` export conventionally clears).
+pub fn parse_flag_strict(v: &str) -> Option<bool> {
+    match v {
+        "1" | "true" | "on" | "yes" => Some(true),
+        "0" | "false" | "off" | "no" | "" => Some(false),
+        _ => None,
+    }
+}
+
+/// Warn to stderr about a malformed env knob — once per variable name per
+/// process, so a misspelt `GOLDDIFF_SHARDS=four` surfaces loudly instead
+/// of silently serving the default, without spamming every config read.
+fn warn_env_once(name: &str, value: &str, expected: &str, fallback: &str) {
+    static WARNED: OnceLock<Mutex<HashSet<String>>> = OnceLock::new();
+    let mut seen = WARNED
+        .get_or_init(|| Mutex::new(HashSet::new()))
+        .lock()
+        .unwrap();
+    if seen.insert(name.to_string()) {
+        eprintln!(
+            "warning: ignoring {name}={value:?} — expected {expected}; \
+             using the default ({fallback})"
+        );
+    }
 }
 
 /// Boolean default with an environment override — the CI scalar-matrix leg
 /// runs the whole suite under `GOLDDIFF_KERNEL=0 GOLDDIFF_WARM_START=0` so
-/// every default-constructed path exercises the scalar references.
+/// every default-constructed path exercises the scalar references. A set
+/// but unrecognisable value warns once to stderr and serves the default.
 pub fn env_flag(name: &str, default: bool) -> bool {
-    std::env::var(name)
-        .ok()
-        .map(|v| parse_flag(&v))
-        .unwrap_or(default)
+    match std::env::var(name) {
+        Ok(v) => parse_flag_strict(&v).unwrap_or_else(|| {
+            let fallback = if default { "on" } else { "off" };
+            warn_env_once(name, &v, "a flag (1/true/on/yes or 0/false/off/no)", fallback);
+            default
+        }),
+        Err(_) => default,
+    }
 }
 
 /// Numeric default with an environment override — the CI `tier1-sharded`
 /// leg runs the suite under `GOLDDIFF_SHARDS=4` so every
 /// default-constructed retrieval path exercises the shard-parallel merge
-/// layer end to end.
+/// layer end to end. A set but unparsable value warns once to stderr and
+/// serves the default.
 pub fn env_usize(name: &str, default: usize) -> usize {
-    std::env::var(name)
-        .ok()
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(default)
+    match std::env::var(name) {
+        Ok(v) => v.parse().unwrap_or_else(|_| {
+            warn_env_once(name, &v, "an unsigned integer", &default.to_string());
+            default
+        }),
+        Err(_) => default,
+    }
 }
 
 /// Engine-level configuration (the launcher's config file).
@@ -71,6 +110,15 @@ pub struct EngineConfig {
     /// route the exact refine through the pre-blocked kernel ladder
     /// (row-major reference behind `false`; moot when `kernel` is off)
     pub refine_kernel: bool,
+    /// quantised screen/refine tiers: coarse screens and the refine
+    /// pre-rung run on int8 blocks with sound distance bounds, every
+    /// survivor is rescored in exact f32 — end results stay byte-identical
+    /// to the pure-f32 path (moot when `kernel` is off)
+    pub quant: bool,
+    /// explicit SIMD lanes in the tiled scan kernel (runtime-dispatched
+    /// AVX2, bit-identical to the scalar reference; scalar fallback
+    /// elsewhere)
+    pub simd: bool,
     /// heap-aware block ordering for the batched / cluster scans
     pub ordering: bool,
     /// concentration warm-start: seed each tick group's coarse screen from
@@ -116,6 +164,8 @@ impl Default for EngineConfig {
             nprobe: 0,
             kernel: env_flag("GOLDDIFF_KERNEL", true),
             refine_kernel: env_flag("GOLDDIFF_KERNEL", true),
+            quant: env_flag("GOLDDIFF_QUANT", false),
+            simd: env_flag("GOLDDIFF_SIMD", true),
             ordering: true,
             warm_start: env_flag("GOLDDIFF_WARM_START", true),
             kernel_tile_q: crate::index::kernel::TILE_Q,
@@ -151,6 +201,8 @@ impl EngineConfig {
             .set("nprobe", self.nprobe)
             .set("kernel", self.kernel)
             .set("refine_kernel", self.refine_kernel)
+            .set("quant", self.quant)
+            .set("simd", self.simd)
             .set("ordering", self.ordering)
             .set("warm_start", self.warm_start)
             .set("kernel_tile_q", self.kernel_tile_q)
@@ -198,6 +250,8 @@ impl EngineConfig {
                 .get("refine_kernel")
                 .and_then(Json::as_bool)
                 .unwrap_or(def.refine_kernel),
+            quant: j.get("quant").and_then(Json::as_bool).unwrap_or(def.quant),
+            simd: j.get("simd").and_then(Json::as_bool).unwrap_or(def.simd),
             ordering: j
                 .get("ordering")
                 .and_then(Json::as_bool)
@@ -258,6 +312,12 @@ impl EngineConfig {
         if let Some(v) = args.get("refine-kernel") {
             self.refine_kernel = parse_flag(v);
         }
+        if let Some(v) = args.get("quant") {
+            self.quant = parse_flag(v);
+        }
+        if let Some(v) = args.get("simd") {
+            self.simd = parse_flag(v);
+        }
         if let Some(v) = args.get("ordering") {
             self.ordering = parse_flag(v);
         }
@@ -290,6 +350,8 @@ impl EngineConfig {
             seed: self.seed,
             kernel: self.kernel,
             refine_kernel: self.refine_kernel,
+            quant: self.quant,
+            simd: self.simd,
             ordering: self.ordering,
             tile_q: self.kernel_tile_q,
             shards: self.shards,
@@ -313,6 +375,8 @@ mod tests {
         c.nprobe = 4;
         c.kernel = false;
         c.refine_kernel = false;
+        c.quant = true;
+        c.simd = false;
         c.ordering = false;
         c.warm_start = false;
         c.kernel_tile_q = 2;
@@ -366,13 +430,17 @@ mod tests {
         assert_eq!(c.shards, env_usize("GOLDDIFF_SHARDS", 1));
         assert_eq!(c.mem_budget_mb, env_usize("GOLDDIFF_MEM_BUDGET_MB", 0));
         assert_eq!(c.resident, env_flag("GOLDDIFF_RESIDENT", true));
+        // quant / simd follow the env so the CI tier1-quant leg can flip
+        // every default-constructed retrieval path at once
+        assert_eq!(c.quant, env_flag("GOLDDIFF_QUANT", false));
+        assert_eq!(c.simd, env_flag("GOLDDIFF_SIMD", true));
         assert!(crate::index::backend::RetrievalBackendKind::parse(&c.backend).is_some());
         let mut c = EngineConfig::default();
         let raw: Vec<String> = [
             "--backend", "cluster", "--clusters", "32", "--nprobe", "2", "--kernel", "off",
             "--refine-kernel", "off", "--ordering", "off", "--warm-start", "off",
             "--kernel-tile-q", "4", "--shards", "8", "--mem-budget-mb", "256",
-            "--resident", "off",
+            "--resident", "off", "--quant", "on", "--simd", "off",
         ]
         .iter()
         .map(|s| s.to_string())
@@ -386,8 +454,11 @@ mod tests {
         assert_eq!(c.shards, 8);
         assert_eq!(c.mem_budget_mb, 256);
         assert!(!c.resident, "--resident off flips the out-of-core mode");
+        assert!(c.quant, "--quant on enables the quantised tiers");
+        assert!(!c.simd, "--simd off pins the scalar kernel lanes");
         let opts = c.backend_opts();
         assert!(!opts.kernel && !opts.refine_kernel && !opts.ordering);
+        assert!(opts.quant && !opts.simd);
         assert_eq!(opts.tile_q, 4);
         assert_eq!(opts.clusters, 32);
         assert_eq!(opts.shards, 8);
@@ -419,6 +490,29 @@ mod tests {
         std::env::set_var("GOLDDIFF_TEST_USIZE_PARSE_ONLY", "not-a-number");
         assert_eq!(env_usize("GOLDDIFF_TEST_USIZE_PARSE_ONLY", 1), 1);
         std::env::remove_var("GOLDDIFF_TEST_USIZE_PARSE_ONLY");
+    }
+
+    #[test]
+    fn malformed_env_values_warn_and_serve_the_default() {
+        // Satellite: a mistyped knob (`GOLDDIFF_SHARDS=four`) must not
+        // silently pick a side — it warns once to stderr (not capturable
+        // here; the behavioural contract is the fallback) and serves the
+        // default. Recognised spellings never take the fallback path.
+        assert_eq!(parse_flag_strict("yes"), Some(true));
+        assert_eq!(parse_flag_strict("no"), Some(false));
+        assert_eq!(parse_flag_strict(""), Some(false), "VAR= clears");
+        assert_eq!(parse_flag_strict("four"), None);
+        assert_eq!(parse_flag_strict("ON"), None, "spellings are exact");
+        // vars only this test touches, so parallel tests cannot race
+        std::env::set_var("GOLDDIFF_TEST_BAD_FLAG_ONLY", "maybe");
+        assert!(env_flag("GOLDDIFF_TEST_BAD_FLAG_ONLY", true));
+        assert!(!env_flag("GOLDDIFF_TEST_BAD_FLAG_ONLY", false));
+        std::env::remove_var("GOLDDIFF_TEST_BAD_FLAG_ONLY");
+        std::env::set_var("GOLDDIFF_TEST_BAD_USIZE_ONLY", "four");
+        assert_eq!(env_usize("GOLDDIFF_TEST_BAD_USIZE_ONLY", 4), 4);
+        std::env::set_var("GOLDDIFF_TEST_BAD_USIZE_ONLY", "-3");
+        assert_eq!(env_usize("GOLDDIFF_TEST_BAD_USIZE_ONLY", 2), 2);
+        std::env::remove_var("GOLDDIFF_TEST_BAD_USIZE_ONLY");
     }
 
     #[test]

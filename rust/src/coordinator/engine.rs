@@ -151,6 +151,10 @@ impl Engine {
             st.backend = backend_kind.name().to_string();
             st.shards = cfg.shards.max(1);
             st.resident = ds.is_resident();
+            // config echo: what the quantised-tier counters mean depends
+            // on whether the tiers were on (the backend build gates them
+            // on `kernel` too, which the counters themselves reveal)
+            st.quant = cfg.quant;
         }
         let d = ds.d;
         let preset = cfg.preset.clone();

@@ -51,6 +51,14 @@ pub struct EngineStats {
     /// high-water mark of resident row-block bytes under the LRU budget
     pub rows_streamed: u64,
     pub peak_row_bytes: u64,
+    /// are the quantised screen/refine tiers enabled (config echo)
+    pub quant: bool,
+    /// quantised-tier telemetry: rows screened on int8 bounds, rows the
+    /// bound alone excluded, and survivors rescored in exact f32
+    /// (`quant_rows_screened == bound_rejects + rescore_rows`)
+    pub quant_rows_screened: u64,
+    pub rescore_rows: u64,
+    pub bound_rejects: u64,
 }
 
 impl Default for EngineStats {
@@ -84,6 +92,10 @@ impl Default for EngineStats {
             resident: true,
             rows_streamed: 0,
             peak_row_bytes: 0,
+            quant: false,
+            quant_rows_screened: 0,
+            rescore_rows: 0,
+            bound_rejects: 0,
         }
     }
 }
@@ -128,6 +140,9 @@ impl EngineStats {
         self.shard_evictions = snap.shard_evictions;
         self.rows_streamed = snap.rows_streamed;
         self.peak_row_bytes = snap.peak_row_bytes;
+        self.quant_rows_screened = snap.quant_rows_screened;
+        self.rescore_rows = snap.rescore_rows;
+        self.bound_rejects = snap.bound_rejects;
     }
 
     /// Record the row source's residency snapshot — the authoritative
@@ -184,7 +199,11 @@ impl EngineStats {
             .set("shard_evictions", self.shard_evictions as usize)
             .set("resident", self.resident)
             .set("rows_streamed", self.rows_streamed as usize)
-            .set("peak_row_bytes", self.peak_row_bytes as usize);
+            .set("peak_row_bytes", self.peak_row_bytes as usize)
+            .set("quant", self.quant)
+            .set("quant_rows_screened", self.quant_rows_screened as usize)
+            .set("rescore_rows", self.rescore_rows as usize)
+            .set("bound_rejects", self.bound_rejects as usize);
         j
     }
 }
@@ -217,6 +236,11 @@ mod tests {
         assert_eq!(j.get("resident").unwrap().as_bool(), Some(true));
         assert_eq!(j.get("rows_streamed").unwrap().as_f64(), Some(0.0));
         assert_eq!(j.get("peak_row_bytes").unwrap().as_f64(), Some(0.0));
+        // quantised-tier telemetry is always present (zero when off)
+        assert_eq!(j.get("quant").unwrap().as_bool(), Some(false));
+        assert_eq!(j.get("quant_rows_screened").unwrap().as_f64(), Some(0.0));
+        assert_eq!(j.get("rescore_rows").unwrap().as_f64(), Some(0.0));
+        assert_eq!(j.get("bound_rejects").unwrap().as_f64(), Some(0.0));
     }
 
     #[test]
@@ -240,6 +264,9 @@ mod tests {
             shard_evictions: 2,
             rows_streamed: 880,
             peak_row_bytes: 4096,
+            quant_rows_screened: 512,
+            rescore_rows: 64,
+            bound_rejects: 448,
         });
         let j = s.to_json();
         assert_eq!(j.get("clusters_pruned").unwrap().as_f64(), Some(24.0));
@@ -256,6 +283,9 @@ mod tests {
         assert_eq!(j.get("shard_evictions").unwrap().as_f64(), Some(2.0));
         assert_eq!(j.get("rows_streamed").unwrap().as_f64(), Some(880.0));
         assert_eq!(j.get("peak_row_bytes").unwrap().as_f64(), Some(4096.0));
+        assert_eq!(j.get("quant_rows_screened").unwrap().as_f64(), Some(512.0));
+        assert_eq!(j.get("rescore_rows").unwrap().as_f64(), Some(64.0));
+        assert_eq!(j.get("bound_rejects").unwrap().as_f64(), Some(448.0));
         // the source snapshot overrides the backend copy when streamed
         s.record_source(Some(crate::data::rows::RowSourceStats {
             rows_streamed: 1000,

@@ -12,7 +12,7 @@ use super::gmm::GmmSpec;
 use super::rows::{RowCursor, RowSource, RowSourceStats, StreamedRows};
 use super::shard::ShardPlan;
 use super::synthetic::{build_population, proxy_embed_all, PresetSpec};
-use crate::index::kernel::{ProxyBlocks, RowBlocks};
+use crate::index::kernel::{ProxyBlocks, QuantBlocks, QuantRows, RowBlocks};
 use crate::util::rng::Pcg64;
 
 /// Number of local-PCA clusters.
@@ -157,6 +157,16 @@ pub struct Dataset {
     /// `refine_kernel = false` reference paths) never pay the duplicated
     /// corpus residency.
     pub(crate) row_blocks: OnceLock<RowBlocks>,
+    /// int8 twin of `proxy_blocks` (per-row scales + correction norms),
+    /// built lazily on the first quantised screen — proxies are always
+    /// resident, so this tier is available for every residency mode
+    pub(crate) quant_proxy: OnceLock<QuantBlocks>,
+    /// row-tier int8 codes for the quantised refine pre-rung: preloaded
+    /// from the `.gds` `quant_*` sections when the store carries them
+    /// (both residencies — same bytes), else built from the resident
+    /// corpus on first use; `None` on a streamed legacy store, which
+    /// makes the pre-rung stand down
+    pub(crate) quant_row_tier: OnceLock<Option<QuantRows>>,
     /// per-class row indices (conditional scans)
     pub class_rows: Vec<Vec<u32>>,
     /// persisted IVF partition, if the `.gds` store carried one
@@ -278,6 +288,8 @@ impl Dataset {
             proxies,
             proxy_blocks,
             row_blocks: OnceLock::new(),
+            quant_proxy: OnceLock::new(),
+            quant_row_tier: OnceLock::new(),
             class_rows,
             ivf: None,
             shard_ivf: None,
@@ -373,6 +385,30 @@ impl Dataset {
                  stream per-shard blocks through the row source instead"
             ),
         })
+    }
+
+    /// The int8 twin of the proxy block table, quantised on the first
+    /// quantised screen (thread-safe; every subsequent call returns the
+    /// same resident copy). Proxies are always resident, so this tier is
+    /// available in both residency modes.
+    pub fn quant_proxy_blocks(&self) -> &QuantBlocks {
+        self.quant_proxy
+            .get_or_init(|| QuantBlocks::from_blocks(&self.proxy_blocks))
+    }
+
+    /// Row-tier int8 codes for the quantised refine pre-rung. Preloaded
+    /// from the `.gds` `quant_*` sections when the store carries them
+    /// (see `data::store`); otherwise built from the resident corpus on
+    /// first use. Returns `None` on a streamed legacy store that predates
+    /// the quant sections — the pre-rung stands down and the refine ladder
+    /// runs exactly as before.
+    pub fn quant_rows(&self) -> Option<&QuantRows> {
+        self.quant_row_tier
+            .get_or_init(|| match &self.rows {
+                RowSource::Resident(data) => Some(QuantRows::build(data, self.n, self.d)),
+                RowSource::Streamed(_) => None,
+            })
+            .as_ref()
     }
 
     /// Rows `[s, e)` as a pre-blocked kernel table harvesting global ids —
@@ -473,6 +509,8 @@ impl Dataset {
             proxy_blocks: ProxyBlocks::build(&new_proxies, self.n, pd),
             proxies: new_proxies,
             row_blocks: OnceLock::new(),
+            quant_proxy: OnceLock::new(),
+            quant_row_tier: OnceLock::new(),
             class_rows,
             ivf: None,
             shard_ivf: None,

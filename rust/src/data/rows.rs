@@ -26,6 +26,12 @@
 //! `visit_rows` / `gather_rows` for source-agnostic access, and
 //! `build_range_blocks` / `shard_blocks` for the blocked refine tables).
 //!
+//! The quantised refine pre-rung (`Dataset::quant_rows`, preloaded from a
+//! v4 store's `quant_*` sections) narrows candidate pools *before* the
+//! exact rungs touch this source, so on a streamed corpus it directly
+//! reduces how many shards the refine ladder has to page in — bound
+//! rejects here are disk reads that never happen.
+//!
 //! [`Dataset`]: crate::data::dataset::Dataset
 
 use std::collections::{HashMap, VecDeque};

@@ -30,11 +30,11 @@
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::data::dataset::Dataset;
 use crate::data::rows::StreamedRows;
-use crate::index::kernel::{ProxyBlocks, RowBlocks};
+use crate::index::kernel::{ProxyBlocks, QuantBlocks, RowBlocks};
 use crate::util::threadpool::split_ranges;
 
 /// The pure corpus partition: near-equal contiguous row ranges.
@@ -108,6 +108,18 @@ pub struct ShardProxy {
     pub radius: f32,
     /// rows per class inside the shard (conditional-scan skip test)
     pub class_counts: Vec<u32>,
+    /// int8 twin of `blocks` (per-row scales + correction norms), built
+    /// lazily on the shard's first quantised screen
+    quant: OnceLock<QuantBlocks>,
+}
+
+impl ShardProxy {
+    /// The shard's quantised proxy tier, built on first use (thread-safe;
+    /// subsequent calls return the same resident copy).
+    pub fn quant(&self) -> &QuantBlocks {
+        self.quant
+            .get_or_init(|| QuantBlocks::from_blocks(&self.blocks))
+    }
 }
 
 #[derive(Debug, Default)]
@@ -197,6 +209,7 @@ impl CorpusShards {
                     centroid,
                     radius: worst.sqrt(),
                     class_counts,
+                    quant: OnceLock::new(),
                 }
             })
             .collect();

@@ -31,6 +31,16 @@
 //! ([`open_streaming`]): every section except `data` loads, the section
 //! table is bounds-validated up front, and rows stream through a
 //! budget-bounded [`StreamedRows`] source instead of materialising.
+//!
+//! Version 4 appends the **quantised row tier**: `quant_codes` (per-row
+//! int8 codes packed four-per-u32, little-endian), `quant_scale` and
+//! `quant_err` (per-row f32 scale and correction norm). Both the resident
+//! and the streaming open preload these into the dataset's
+//! [`QuantRows`] tier so the quantised refine pre-rung works even when the
+//! corpus never materialises. The sections are optional under the same
+//! ignore-unknown rule: a v1–v3 store loads unchanged, a resident open
+//! rebuilds the tier from the corpus on first use, and a streamed legacy
+//! open simply reports no tier (the pre-rung stands down).
 
 use std::fs::File;
 use std::io::{BufReader, BufWriter, Read, Seek, SeekFrom, Write};
@@ -42,13 +52,44 @@ use super::dataset::{Dataset, IvfPartition, ShardIvfPartition};
 use super::gmm::GmmSpec;
 use super::rows::{RowSource, StreamedRows};
 use crate::data::shard::ShardPlan;
-use crate::index::kernel::ProxyBlocks;
+use crate::index::kernel::{ProxyBlocks, QuantRows};
 use crate::util::json::{parse, Json};
 
 const MAGIC: &[u8; 4] = b"GDS1";
 /// Header format version: 2 added the optional IVF partition sections; 3
-/// added the per-shard alias sections + `shards` header field.
-const VERSION: usize = 3;
+/// added the per-shard alias sections + `shards` header field; 4 added the
+/// optional quantised row tier (`quant_codes` / `quant_scale` /
+/// `quant_err`). Readers never gate on this — unknown sections are ignored
+/// and missing ones degrade per-feature — so it is documentation, not a
+/// compatibility switch.
+const VERSION: usize = 4;
+
+/// Pack int8 codes four-per-u32 (little-endian) so the quant tier rides
+/// the store's uniform 4-byte-element section machinery; the tail word is
+/// zero-padded.
+fn pack_i8(codes: &[i8]) -> Vec<u32> {
+    codes
+        .chunks(4)
+        .map(|c| {
+            let mut b = [0u8; 4];
+            for (dst, &v) in b.iter_mut().zip(c) {
+                *dst = v as u8;
+            }
+            u32::from_le_bytes(b)
+        })
+        .collect()
+}
+
+/// Inverse of [`pack_i8`]: the first `n` int8 codes out of the packed
+/// words (padding bytes dropped).
+fn unpack_i8(words: &[u32], n: usize) -> Vec<i8> {
+    words
+        .iter()
+        .flat_map(|w| w.to_le_bytes())
+        .take(n)
+        .map(|b| b as i8)
+        .collect()
+}
 
 /// Serialise a dataset (with its population GMM) to `path`.
 ///
@@ -126,6 +167,11 @@ fn write_store(ds: &Dataset, path: &Path, shards: usize) -> Result<()> {
     let data = ds
         .resident_rows()
         .expect("write_store is resident-gated by save_sharded");
+    // v4: the quantised row tier is recomputed at save (deterministic in
+    // the corpus bytes) rather than borrowed from the dataset's lazy cache,
+    // so every saved store carries it regardless of what the writer touched
+    let quant = QuantRows::build(data, ds.n, ds.d);
+    let quant_codes = pack_i8(quant.codes_flat());
     let mut plan = vec![
         Sec::F("data".into(), data),
         Sec::U("labels".into(), &ds.labels),
@@ -140,6 +186,9 @@ fn write_store(ds: &Dataset, path: &Path, shards: usize) -> Result<()> {
         Sec::U("gmm_classes".into(), &gmm_classes),
         Sec::F("gmm_means".into(), &gmm_means),
         Sec::F("gmm_vars".into(), &gmm_vars),
+        Sec::U("quant_codes".into(), &quant_codes),
+        Sec::F("quant_scale".into(), quant.scales_flat()),
+        Sec::F("quant_err".into(), quant.errs_flat()),
     ];
     if let Some(ivf) = &ds.ivf {
         plan.push(Sec::F("ivf_centroids".into(), &ivf.centroids));
@@ -436,6 +485,28 @@ fn finish_dataset(mut sf: StoreFile, rows: RowSource) -> Result<Dataset> {
         _ => None,
     };
 
+    // v4 stores carry the quantised row tier; preload it into the
+    // dataset's OnceLock so both residencies serve the same persisted
+    // bytes. Older stores leave the lock empty: a resident open rebuilds
+    // the (identical) tier on first use, a streamed open reports None and
+    // the quantised refine pre-rung stands down.
+    let quant_row_tier = std::sync::OnceLock::new();
+    if sf.locate("quant_codes").is_ok()
+        && sf.locate("quant_scale").is_ok()
+        && sf.locate("quant_err").is_ok()
+    {
+        let codes = unpack_i8(&sf.read_u32("quant_codes")?, n * d);
+        let scales = sf.read_f32("quant_scale")?;
+        let errs = sf.read_f32("quant_err")?;
+        let qr = QuantRows::from_parts(n, d, codes, scales, errs).with_context(|| {
+            format!(
+                "{:?}: quant sections disagree with the {n}×{d} corpus shape",
+                sf.path
+            )
+        })?;
+        let _ = quant_row_tier.set(Some(qr));
+    }
+
     let proxy_blocks = ProxyBlocks::build(&proxies, n, proxy_d);
     Ok(Dataset {
         name: sf.header.str_field("name")?.to_string(),
@@ -456,6 +527,8 @@ fn finish_dataset(mut sf: StoreFile, rows: RowSource) -> Result<Dataset> {
         proxies,
         proxy_blocks,
         row_blocks: std::sync::OnceLock::new(),
+        quant_proxy: std::sync::OnceLock::new(),
+        quant_row_tier,
         class_rows,
         ivf,
         shard_ivf,
@@ -811,7 +884,7 @@ mod tests {
             "error must name the problem: {err}"
         );
         // the last-written section is the one the cut lands in
-        assert!(err.contains("gmm_vars"), "error must name the section: {err}");
+        assert!(err.contains("quant_err"), "error must name the section: {err}");
         std::fs::remove_dir_all(&dir).ok();
     }
 
@@ -927,6 +1000,99 @@ mod tests {
         let err = format!("{:#}", save(&st, &dir.join("copy.gds")).unwrap_err());
         assert!(err.contains("streamed"), "error must explain the gate: {err}");
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Rewrite a store's header with the `quant_*` sections stripped —
+    /// simulates a v1–v3 store (the payload bytes stay; section offsets
+    /// are relative to the header end, so a shorter header stays valid).
+    fn strip_quant_sections(path: &Path) {
+        let bytes = std::fs::read(path).unwrap();
+        let hlen = u32::from_le_bytes([bytes[4], bytes[5], bytes[6], bytes[7]]) as usize;
+        let mut header = parse(std::str::from_utf8(&bytes[8..8 + hlen]).unwrap()).unwrap();
+        let kept: Vec<crate::util::json::Json> = header
+            .get("sections")
+            .and_then(crate::util::json::Json::as_arr)
+            .unwrap()
+            .iter()
+            .filter(|s| {
+                !s.get("name")
+                    .and_then(crate::util::json::Json::as_str)
+                    .is_some_and(|n| n.starts_with("quant_"))
+            })
+            .cloned()
+            .collect();
+        header.set("sections", crate::util::json::Json::Arr(kept));
+        let hb = header.to_string_compact().into_bytes();
+        let mut out = Vec::with_capacity(bytes.len());
+        out.extend_from_slice(b"GDS1");
+        out.extend_from_slice(&(hb.len() as u32).to_le_bytes());
+        out.extend_from_slice(&hb);
+        out.extend_from_slice(&bytes[8 + hlen..]);
+        std::fs::write(path, out).unwrap();
+    }
+
+    #[test]
+    fn quant_tier_roundtrips_resident_and_streaming() {
+        // Tentpole: the v4 quant sections reload bit-identical to a fresh
+        // build from the corpus, on both open paths
+        let mut spec = preset("moons").unwrap().clone();
+        spec.n = 77;
+        let ds = Dataset::synthesize(&spec, 17);
+        let want = QuantRows::build(corpus(&ds), ds.n, ds.d);
+        let dir = std::env::temp_dir().join("golddiff_store_quant_test");
+        std::fs::remove_dir_all(&dir).ok();
+        let path = dir.join("moons.gds");
+        save_sharded(&ds, &path, 3).unwrap();
+
+        for opened in [load(&path).unwrap(), open_streaming(&path, 3, 0).unwrap()] {
+            let got = opened.quant_rows().expect("v4 stores carry the tier");
+            assert_eq!(got.codes_flat(), want.codes_flat());
+            assert_eq!(got.scales_flat(), want.scales_flat());
+            assert_eq!(got.errs_flat(), want.errs_flat());
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn legacy_store_without_quant_sections_degrades_per_residency() {
+        // a v1–v3 shape store: the resident open rebuilds the tier from
+        // the corpus (identical bytes), the streamed open reports None
+        let mut spec = preset("moons").unwrap().clone();
+        spec.n = 60;
+        let ds = Dataset::synthesize(&spec, 23);
+        let dir = std::env::temp_dir().join("golddiff_store_quant_legacy_test");
+        std::fs::remove_dir_all(&dir).ok();
+        let path = dir.join("moons.gds");
+        save(&ds, &path).unwrap();
+        strip_quant_sections(&path);
+
+        let resident = load(&path).unwrap();
+        assert_eq!(resident.resident_rows(), ds.resident_rows());
+        let want = QuantRows::build(corpus(&ds), ds.n, ds.d);
+        let got = resident.quant_rows().expect("resident opens rebuild");
+        assert_eq!(got.codes_flat(), want.codes_flat());
+        assert_eq!(got.errs_flat(), want.errs_flat());
+
+        let streamed = open_streaming(&path, 2, 0).unwrap();
+        assert!(
+            streamed.quant_rows().is_none(),
+            "a streamed legacy store has no corpus to quantise from"
+        );
+        // ...and the rest of the dataset still serves
+        let mut cur = streamed.row_cursor();
+        assert_eq!(cur.row(7), ds.row(7));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn pack_unpack_i8_roundtrips_ragged_lengths() {
+        for n in [0usize, 1, 3, 4, 5, 8, 13] {
+            let codes: Vec<i8> = (0..n).map(|i| (i as i8).wrapping_mul(-37)).collect();
+            let packed = pack_i8(&codes);
+            assert_eq!(packed.len(), n.div_ceil(4));
+            assert_eq!(unpack_i8(&packed, n), codes, "n={n}");
+        }
+        assert_eq!(unpack_i8(&pack_i8(&[-128, 127, -1, 0, 42]), 5), [-128, 127, -1, 0, 42]);
     }
 
     #[test]

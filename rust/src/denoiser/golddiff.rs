@@ -375,6 +375,8 @@ impl GoldDiff {
         let opts = BackendOpts {
             kernel,
             refine_kernel: kernel,
+            quant: crate::config::env_flag("GOLDDIFF_QUANT", false),
+            simd: crate::config::env_flag("GOLDDIFF_SIMD", true),
             shards: crate::config::env_usize("GOLDDIFF_SHARDS", 1),
             ..BackendOpts::default()
         };

@@ -50,7 +50,7 @@ use std::sync::Arc;
 
 use super::kernel::{
     self, block_order, build_refine_plan, refine_scan_masked, KernelScan, KernelStats,
-    ProxyBlocks, RowBlocks,
+    ProxyBlocks, QuantScan, QuantStats, RowBlocks,
 };
 use super::scan::ProxyIndex;
 use super::topk::BoundedMaxHeap;
@@ -105,6 +105,15 @@ pub struct RetrievalStats {
     pub rows_streamed: u64,
     /// high-water mark of resident row-block bytes under the LRU budget
     pub peak_row_bytes: u64,
+    /// class-eligible rows whose distance bounds ran on the int8 tier
+    /// (quant screens + refine pre-rungs; 0 with `quant` off)
+    pub quant_rows_screened: u64,
+    /// quant-screened rows the sound bound could not exclude — re-scored
+    /// exactly on f32 (`quant_rows_screened = rescore_rows + bound_rejects`)
+    pub rescore_rows: u64,
+    /// quant-screened rows excluded by the lower bound without touching
+    /// f32 data — the quantised tier's saved work
+    pub bound_rejects: u64,
 }
 
 #[derive(Debug, Default)]
@@ -121,6 +130,9 @@ pub(crate) struct Counters {
     pub(crate) exit_gain_rows: AtomicU64,
     pub(crate) shards_scanned: AtomicU64,
     pub(crate) shards_skipped: AtomicU64,
+    pub(crate) quant_rows_screened: AtomicU64,
+    pub(crate) rescore_rows: AtomicU64,
+    pub(crate) bound_rejects: AtomicU64,
 }
 
 impl Counters {
@@ -141,7 +153,18 @@ impl Counters {
             shard_evictions: 0,
             rows_streamed: 0,
             peak_row_bytes: 0,
+            quant_rows_screened: self.quant_rows_screened.load(Ordering::Relaxed),
+            rescore_rows: self.rescore_rows.load(Ordering::Relaxed),
+            bound_rejects: self.bound_rejects.load(Ordering::Relaxed),
         }
+    }
+
+    /// Record a quantised-tier pass (coarse screen or refine pre-rung).
+    pub(crate) fn record_quant(&self, st: &QuantStats) {
+        self.quant_rows_screened
+            .fetch_add(st.rows_screened, Ordering::Relaxed);
+        self.rescore_rows.fetch_add(st.rescore_rows, Ordering::Relaxed);
+        self.bound_rejects.fetch_add(st.bound_rejects, Ordering::Relaxed);
     }
 
     pub(crate) fn record_kernel(&self, st: &KernelStats) {
@@ -179,6 +202,9 @@ impl Counters {
         self.exit_gain_rows.store(0, Ordering::Relaxed);
         self.shards_scanned.store(0, Ordering::Relaxed);
         self.shards_skipped.store(0, Ordering::Relaxed);
+        self.quant_rows_screened.store(0, Ordering::Relaxed);
+        self.rescore_rows.store(0, Ordering::Relaxed);
+        self.bound_rejects.store(0, Ordering::Relaxed);
     }
 }
 
@@ -741,6 +767,60 @@ fn batched_refine_kernel_group(
     (out, union.len() as u64, stats)
 }
 
+/// Quantised refine pre-rung: drop pool candidates whose int8 **lower**
+/// bound strictly exceeds the k-th smallest int8 **upper** bound over the
+/// pool — such a row is provably farther than k other candidates, so it
+/// cannot be a top-k member under any tie-break, and removing it cannot
+/// change the exact refine's result. Pools small enough that nothing can
+/// be excluded without shrinking the refine cap (`distinct ≤ k`) pass
+/// through untouched; when filtering does happen, at least k distinct
+/// candidates always survive (every threshold-heap member's lb ≤ ub ≤ T),
+/// so per-query refine caps are identical with the pre-rung on or off.
+/// Survivors keep their original order and multiplicity.
+///
+/// Returns `None` when the dataset carries no row-tier codes (a streamed
+/// legacy store) — the caller falls back to the plain f32 ladder.
+pub(crate) fn quant_prefilter(
+    ds: &Dataset,
+    qs: &[&[f32]],
+    pools: &[&[u32]],
+    k: usize,
+    counters: &Counters,
+) -> Option<Vec<Vec<u32>>> {
+    let qr = ds.quant_rows()?;
+    let k = k.max(1);
+    let mut qst = QuantStats::default();
+    let out = qs
+        .iter()
+        .zip(pools)
+        .map(|(q, pool)| {
+            let mut distinct: Vec<u32> = pool.to_vec();
+            distinct.sort_unstable();
+            distinct.dedup();
+            if distinct.len() <= k {
+                return pool.to_vec();
+            }
+            let mut th = BoundedMaxHeap::new(k);
+            let bounds: HashMap<u32, f32> = distinct
+                .iter()
+                .map(|&gid| {
+                    let (lb2, ub2) = qr.bounds2(q, gid);
+                    th.push(ub2, gid);
+                    (gid, lb2)
+                })
+                .collect();
+            let t = th.worst();
+            qst.rows_screened += distinct.len() as u64;
+            let kept_distinct = distinct.iter().filter(|gid| bounds[gid] <= t).count() as u64;
+            qst.rescore_rows += kept_distinct;
+            qst.bound_rejects += distinct.len() as u64 - kept_distinct;
+            pool.iter().copied().filter(|gid| bounds[gid] <= t).collect()
+        })
+        .collect();
+    counters.record_quant(&qst);
+    Some(out)
+}
+
 // ---------------------------------------------------------------------------
 // FlatScan
 // ---------------------------------------------------------------------------
@@ -755,6 +835,9 @@ pub struct FlatScan {
     inner: ProxyIndex,
     use_kernel: bool,
     refine_kernel: bool,
+    /// int8 screen + refine pre-rung with exact f32 rescore (kernel paths
+    /// only; results stay byte-identical to the f32 path)
+    quant: bool,
     counters: Counters,
 }
 
@@ -765,6 +848,7 @@ impl FlatScan {
             inner: ProxyIndex { threads },
             use_kernel: true,
             refine_kernel: true,
+            quant: false,
             counters: Counters::default(),
         }
     }
@@ -784,6 +868,12 @@ impl FlatScan {
     /// the kernel path) or the row-major reference.
     pub fn with_refine_kernel(mut self, on: bool) -> Self {
         self.refine_kernel = on;
+        self
+    }
+
+    /// Toggle the quantised tier (int8 screen + pre-rung, exact rescore).
+    pub fn with_quant(mut self, on: bool) -> Self {
+        self.quant = on;
         self
     }
 
@@ -812,13 +902,32 @@ impl RetrievalBackend for FlatScan {
         if self.use_kernel && class.is_none() {
             let cap = m.max(1).min(ds.n.max(1));
             let queries = [query_proxy];
+            let threads = self.effective_threads(ds.n * ds.proxy_d);
+            if self.quant {
+                let scan = QuantScan {
+                    blocks: &ds.proxy_blocks,
+                    quant: ds.quant_proxy_blocks(),
+                    queries: &queries,
+                    classes: &[None],
+                    labels: None,
+                };
+                let mut heaps = vec![BoundedMaxHeap::new(cap)];
+                let mut qst = QuantStats::default();
+                let mut kst = KernelStats::default();
+                scan.screen_into(cap, threads, None, &mut heaps, &mut qst, &mut kst);
+                self.counters.record_kernel(&kst);
+                self.counters.record_quant(&qst);
+                return heaps
+                    .pop()
+                    .map(|h| h.into_sorted().into_iter().map(|(_, i)| i).collect())
+                    .unwrap_or_default();
+            }
             let scan = KernelScan {
                 blocks: &ds.proxy_blocks,
                 queries: &queries,
                 classes: &[None],
                 labels: None,
             };
-            let threads = self.effective_threads(ds.n * ds.proxy_d);
             let (mut got, st) = scan.top_m(cap, threads);
             self.counters.record_kernel(&st);
             return got.pop().unwrap_or_default();
@@ -841,6 +950,15 @@ impl RetrievalBackend for FlatScan {
 
     fn refine_top_k(&self, ds: &Dataset, q: &[f32], cands: &[u32], k: usize) -> Vec<u32> {
         if self.refine_kernel {
+            if self.quant {
+                if let Some(filtered) = quant_prefilter(ds, &[q], &[cands], k, &self.counters) {
+                    let fp: Vec<&[u32]> = filtered.iter().map(Vec::as_slice).collect();
+                    let (out, rows, st) =
+                        batched_refine_kernel(ds, &[q], &fp, k, self.inner.threads);
+                    self.counters.record_refine(rows, &st);
+                    return out.into_iter().next().unwrap_or_default();
+                }
+            }
             let (out, rows, st) =
                 batched_refine_kernel(ds, &[q], &[cands], k, self.inner.threads);
             self.counters.record_refine(rows, &st);
@@ -857,6 +975,14 @@ impl RetrievalBackend for FlatScan {
         k: usize,
     ) -> Vec<Vec<u32>> {
         if self.refine_kernel {
+            if self.quant {
+                if let Some(filtered) = quant_prefilter(ds, qs, pools, k, &self.counters) {
+                    let fp: Vec<&[u32]> = filtered.iter().map(Vec::as_slice).collect();
+                    let (out, rows, st) = batched_refine_kernel(ds, qs, &fp, k, self.inner.threads);
+                    self.counters.record_refine(rows, &st);
+                    return out;
+                }
+            }
             let (out, rows, st) = batched_refine_kernel(ds, qs, pools, k, self.inner.threads);
             self.counters.record_refine(rows, &st);
             return out;
@@ -894,6 +1020,9 @@ pub struct BatchedScan {
     /// heap-aware block ordering: visit proxy blocks in ascending centroid
     /// distance to the query-group mean (default on; kernel path only)
     ordered: bool,
+    /// int8 screen + refine pre-rung with exact f32 rescore (kernel paths
+    /// only; results stay byte-identical to the f32 path)
+    quant: bool,
     tile_q: usize,
     counters: Counters,
 }
@@ -911,6 +1040,7 @@ impl BatchedScan {
             use_kernel: true,
             refine_kernel: true,
             ordered: true,
+            quant: false,
             tile_q: kernel::TILE_Q,
             counters: Counters::default(),
         }
@@ -945,6 +1075,12 @@ impl BatchedScan {
         self
     }
 
+    /// Toggle the quantised tier (int8 screen + pre-rung, exact rescore).
+    pub fn with_quant(mut self, on: bool) -> Self {
+        self.quant = on;
+        self
+    }
+
     /// Same spawn-overhead threshold as the flat scan (the batch multiplies
     /// the work, never shrinks it, so single-query sharding stays stable).
     fn effective_threads(&self, work: usize) -> usize {
@@ -969,19 +1105,45 @@ impl BatchedScan {
         for group in queries.chunks(self.tile_q.clamp(1, kernel::TILE_Q)) {
             let qs: Vec<&[f32]> = group.iter().map(|q| q.proxy).collect();
             let classes: Vec<Option<u32>> = group.iter().map(|q| q.class).collect();
+            let order = if self.ordered && ds.proxy_blocks.n_blocks() > 1 {
+                let mean = group_mean(&qs, ds.proxy_d);
+                let order = block_order(&ds.proxy_blocks, &mean);
+                self.counters.record_order(&order);
+                Some(order)
+            } else {
+                None
+            };
+            if self.quant {
+                let scan = QuantScan {
+                    blocks: &ds.proxy_blocks,
+                    quant: ds.quant_proxy_blocks(),
+                    queries: &qs,
+                    classes: &classes,
+                    labels: Some(&ds.labels),
+                };
+                let mut heaps: Vec<BoundedMaxHeap> =
+                    (0..qs.len()).map(|_| BoundedMaxHeap::new(cap)).collect();
+                let mut qst = QuantStats::default();
+                let mut kst = KernelStats::default();
+                scan.screen_into(cap, threads, order.as_deref(), &mut heaps, &mut qst, &mut kst);
+                self.counters.record_kernel(&kst);
+                self.counters.record_quant(&qst);
+                out.extend(
+                    heaps
+                        .into_iter()
+                        .map(|h| h.into_sorted().into_iter().map(|(_, i)| i).collect::<Vec<u32>>()),
+                );
+                continue;
+            }
             let scan = KernelScan {
                 blocks: &ds.proxy_blocks,
                 queries: &qs,
                 classes: &classes,
                 labels: Some(&ds.labels),
             };
-            let (res, st) = if self.ordered && ds.proxy_blocks.n_blocks() > 1 {
-                let mean = group_mean(&qs, ds.proxy_d);
-                let order = block_order(&ds.proxy_blocks, &mean);
-                self.counters.record_order(&order);
-                scan.top_m_ordered(cap, threads, &order)
-            } else {
-                scan.top_m(cap, threads)
+            let (res, st) = match &order {
+                Some(order) => scan.top_m_ordered(cap, threads, order),
+                None => scan.top_m(cap, threads),
             };
             self.counters.record_kernel(&st);
             out.extend(res);
@@ -1069,9 +1231,10 @@ impl RetrievalBackend for BatchedScan {
 
     fn refine_top_k(&self, ds: &Dataset, q: &[f32], cands: &[u32], k: usize) -> Vec<u32> {
         if self.refine_kernel {
-            let (out, rows, st) = batched_refine_kernel(ds, &[q], &[cands], k, self.threads);
-            self.counters.record_refine(rows, &st);
-            return out.into_iter().next().unwrap_or_default();
+            return self
+                .refine_top_k_batch(ds, &[q], &[cands], k)
+                .pop()
+                .unwrap_or_default();
         }
         exact_refine(ds, q, cands, k, self.threads)
     }
@@ -1084,6 +1247,14 @@ impl RetrievalBackend for BatchedScan {
         k: usize,
     ) -> Vec<Vec<u32>> {
         if self.refine_kernel {
+            if self.quant {
+                if let Some(filtered) = quant_prefilter(ds, qs, pools, k, &self.counters) {
+                    let fp: Vec<&[u32]> = filtered.iter().map(Vec::as_slice).collect();
+                    let (out, rows, st) = batched_refine_kernel(ds, qs, &fp, k, self.threads);
+                    self.counters.record_refine(rows, &st);
+                    return out;
+                }
+            }
             let (out, rows, st) = batched_refine_kernel(ds, qs, pools, k, self.threads);
             self.counters.record_refine(rows, &st);
             return out;
@@ -1489,6 +1660,14 @@ pub struct BackendOpts {
     /// honours this one, residency delegates to the source LRU (one
     /// cache); otherwise this layer's own LRU enforces the bound.
     pub mem_budget_mb: usize,
+    /// quantised tier: run coarse screens and the refine pre-rung on int8
+    /// codes with sound bounds, rescoring survivors exactly on f32
+    /// (kernel paths of Flat/Batched/Sharded; results byte-identical).
+    /// Default off.
+    pub quant: bool,
+    /// explicit SIMD lanes in the tile kernels (runtime-dispatched AVX2,
+    /// bit-identical to the scalar loops). Default on; a pure speed knob.
+    pub simd: bool,
 }
 
 impl Default for BackendOpts {
@@ -1504,6 +1683,8 @@ impl Default for BackendOpts {
             tile_q: kernel::TILE_Q,
             shards: 1,
             mem_budget_mb: 0,
+            quant: false,
+            simd: true,
         }
     }
 }
@@ -1547,15 +1728,25 @@ impl RetrievalBackendKind {
     /// kind is wrapped in the shard-parallel merge layer. Row residency —
     /// resident corpus or `.gds`-streamed shards — comes from the dataset's
     /// own row source, so every kind serves a streamed dataset unchanged.
+    /// `opts.quant` applies to the Flat/Batched/Sharded kernel paths;
+    /// ClusterPruned keeps its f32 per-list tables (its clusters already
+    /// prune on exact bounds, and quantising the many small list tables
+    /// buys little — results are identical either way by exactness).
     pub fn build(&self, ds: &Dataset, opts: BackendOpts) -> Arc<dyn RetrievalBackend> {
+        // the SIMD knob is process-wide: results are bit-identical either
+        // way, so backends built with different settings stay coherent
+        kernel::simd::set_enabled(opts.simd);
         if opts.shards > 1 {
             return Arc::new(crate::index::shard::ShardedBackend::build(ds, *self, opts));
         }
         // the scalar reference disables every kernel-path refinement
         let refine = opts.kernel && opts.refine_kernel;
+        let quant = opts.kernel && opts.quant;
         match self {
             RetrievalBackendKind::Flat => Arc::new(if opts.kernel {
-                FlatScan::new(opts.threads).with_refine_kernel(refine)
+                FlatScan::new(opts.threads)
+                    .with_refine_kernel(refine)
+                    .with_quant(quant)
             } else {
                 FlatScan::scalar(opts.threads)
             }),
@@ -1564,6 +1755,7 @@ impl RetrievalBackendKind {
                     .with_tile(opts.tile_q)
                     .with_ordering(opts.ordering)
                     .with_refine_kernel(refine)
+                    .with_quant(quant)
             } else {
                 BatchedScan::scalar(opts.threads)
             }),
@@ -2015,5 +2207,172 @@ mod tests {
             RetrievalBackendKind::parse("ivf"),
             Some(RetrievalBackendKind::ClusterPruned)
         );
+    }
+
+    #[test]
+    fn quant_tier_matches_f32_byte_for_byte() {
+        // Tentpole: quant on vs off returns identical ids for coarse
+        // screens (single, conditional and batched) and refines — the
+        // int8 bounds only ever exclude rows the exact path would too,
+        // and every survivor is rescored in exact f32.
+        let ds = tiny(420, 9);
+        let pairs: Vec<(Box<dyn RetrievalBackend>, Box<dyn RetrievalBackend>)> = vec![
+            (
+                Box::new(FlatScan::new(2)),
+                Box::new(FlatScan::new(2).with_quant(true)),
+            ),
+            (
+                Box::new(BatchedScan::new(2)),
+                Box::new(BatchedScan::new(2).with_quant(true)),
+            ),
+            (
+                Box::new(BatchedScan::new(2).with_ordering(false)),
+                Box::new(BatchedScan::new(2).with_ordering(false).with_quant(true)),
+            ),
+        ];
+        forall(83, 20, |rng| {
+            let m = gen::usize_in(rng, 1, 96);
+            let k = gen::usize_in(rng, 1, 24);
+            let qp = gen::vec_normal(rng, ds.proxy_d, 1.0);
+            let q = gen::vec_normal(rng, ds.d, 1.0);
+            let class = if rng.below(2) == 0 {
+                None
+            } else {
+                Some(rng.below(ds.classes) as u32)
+            };
+            for (base, quant) in &pairs {
+                let want = base.top_m(&ds, &qp, m, class);
+                let got = quant.top_m(&ds, &qp, m, class);
+                crate::prop_assert!(
+                    got == want,
+                    "{} quant screen (m={m} class={class:?})",
+                    base.name()
+                );
+                let rw = base.refine_top_k(&ds, &q, &want, k);
+                let rg = quant.refine_top_k(&ds, &q, &want, k);
+                crate::prop_assert!(rg == rw, "{} quant refine (k={k})", base.name());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn quant_batch_groups_match_reference() {
+        // batched group screens + group refines, quant vs the scalar flat
+        // reference, across ragged group sizes and mixed classes
+        let ds = tiny(350, 15);
+        let quant = BatchedScan::new(2).with_quant(true);
+        let flat = FlatScan::scalar(2);
+        let mut rng = Pcg64::new(29);
+        for b in [1usize, 5, 8, 9] {
+            let qs: Vec<Vec<f32>> = (0..b)
+                .map(|_| (0..ds.proxy_d).map(|_| rng.normal()).collect())
+                .collect();
+            let queries: Vec<ProxyQuery> = qs
+                .iter()
+                .enumerate()
+                .map(|(i, q)| ProxyQuery {
+                    proxy: q,
+                    class: if i % 3 == 1 { Some((i % 4) as u32) } else { None },
+                })
+                .collect();
+            let got = quant.top_m_batch(&ds, &queries, 21);
+            for (i, qq) in queries.iter().enumerate() {
+                let want = flat.top_m(&ds, qq.proxy, 21, qq.class);
+                assert_eq!(got[i], want, "group {b} query {i}");
+            }
+            // group refine over the screened pools
+            let fq: Vec<Vec<f32>> = (0..b)
+                .map(|_| (0..ds.d).map(|_| rng.normal()).collect())
+                .collect();
+            let fqs: Vec<&[f32]> = fq.iter().map(|v| v.as_slice()).collect();
+            let pools: Vec<&[u32]> = got.iter().map(|p| p.as_slice()).collect();
+            let rg = quant.refine_top_k_batch(&ds, &fqs, &pools, 9);
+            for i in 0..b {
+                let want = flat.refine_top_k(&ds, fqs[i], pools[i], 9);
+                assert_eq!(rg[i], want, "group {b} refine {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn quant_telemetry_counts_and_balances() {
+        // the invariant the counters advertise:
+        // quant_rows_screened == bound_rejects + rescore_rows, and all
+        // three stay zero with the tier off
+        let ds = tiny(400, 33);
+        let off = BatchedScan::new(2);
+        let on = BatchedScan::new(2).with_quant(true);
+        let q = ds.proxy_row(13).to_vec();
+        let fq = ds.row(13).to_vec();
+        for be in [&off, &on] {
+            let pool = be.top_m(&ds, &q, 64, None);
+            let _ = be.refine_top_k(&ds, &fq, &pool, 8);
+        }
+        let s_off = off.stats();
+        assert_eq!(s_off.quant_rows_screened, 0);
+        assert_eq!(s_off.rescore_rows, 0);
+        assert_eq!(s_off.bound_rejects, 0);
+        let s_on = on.stats();
+        assert!(s_on.quant_rows_screened > 0, "screen must count rows");
+        assert_eq!(
+            s_on.quant_rows_screened,
+            s_on.bound_rejects + s_on.rescore_rows,
+            "every screened row is either rejected by the bound or rescored"
+        );
+        on.reset_stats();
+        assert_eq!(on.stats().quant_rows_screened, 0, "reset zeroes the tier");
+    }
+
+    #[test]
+    fn kind_build_honours_quant_and_gates_cluster() {
+        // opts.quant flips Flat/Batched byte-identically; ClusterPruned
+        // ignores the knob (its lists already prune on exact bounds)
+        let ds = tiny(260, 41);
+        let mut rng = Pcg64::new(43);
+        for &kind in RetrievalBackendKind::all() {
+            let base = kind.build(
+                &ds,
+                BackendOpts {
+                    threads: 2,
+                    clusters: 8,
+                    ..BackendOpts::default()
+                },
+            );
+            let quant = kind.build(
+                &ds,
+                BackendOpts {
+                    threads: 2,
+                    clusters: 8,
+                    quant: true,
+                    ..BackendOpts::default()
+                },
+            );
+            for round in 0..4 {
+                let m = 1 + rng.below(48);
+                let k = 1 + rng.below(12);
+                let qp: Vec<f32> = (0..ds.proxy_d).map(|_| rng.normal()).collect();
+                let q: Vec<f32> = (0..ds.d).map(|_| rng.normal()).collect();
+                let a = base.top_m(&ds, &qp, m, None);
+                let b = quant.top_m(&ds, &qp, m, None);
+                assert_eq!(a, b, "{} round {round}", base.name());
+                assert_eq!(
+                    base.refine_top_k(&ds, &q, &a, k),
+                    quant.refine_top_k(&ds, &q, &a, k),
+                    "{} refine round {round}",
+                    base.name()
+                );
+            }
+            if kind == RetrievalBackendKind::ClusterPruned {
+                assert_eq!(
+                    quant.stats().quant_rows_screened,
+                    0,
+                    "cluster-pruned ignores the quant knob"
+                );
+            } else {
+                assert!(quant.stats().quant_rows_screened > 0, "{}", quant.name());
+            }
+            assert_eq!(base.stats().quant_rows_screened, 0);
+        }
     }
 }

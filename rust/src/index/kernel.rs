@@ -35,7 +35,22 @@
 //! the full-resolution corpus ([`RowBlocks`], the refine ladder's table)
 //! all scan through the same code path via the optional row-id map.
 //!
-//! Two extensions ride on the same layout:
+//! The tile inner loops run through explicit SIMD lanes when the CPU has
+//! them ([`simd`]): the scalar loop accumulates every lane independently
+//! (no horizontal reduction), so the AVX2 path performs the identical IEEE
+//! operations per lane and is **bit-identical** to the scalar fallback —
+//! the `simd` knob is a pure speed toggle.
+//!
+//! A quantised tier rides on the same layout ([`QuantBlocks`],
+//! [`QuantScan`]): int8 symmetric codes with per-row scales and per-row
+//! error-norm corrections give provably sound lower/upper distance bounds,
+//! so a coarse screen can visit 1-byte columns, exclude most rows with the
+//! bound, and re-stream only the bound-cleared survivors through the exact
+//! f32 masked tiles — final heap contents are exact f32 distances, so end
+//! results match the pure-f32 scan (see `index/README.md`, "Quantised
+//! tier").
+//!
+//! Two further extensions ride on the same layout:
 //!
 //! * **Heap-aware block ordering** — each block carries its centroid and
 //!   covering radius (computed once at build). A scan may visit blocks in
@@ -52,6 +67,8 @@
 //!   full-resolution pass reuses the same dim-major column loads and strip
 //!   early-exit as the coarse kernel.
 
+use std::collections::HashMap;
+
 use super::topk::BoundedMaxHeap;
 use crate::util::threadpool::parallel_chunks;
 
@@ -64,6 +81,155 @@ pub const TILE_Q: usize = 8;
 pub const BLOCK_ROWS: usize = 32;
 /// Dimensions accumulated between early-exit checks.
 const STRIP_DIMS: usize = 16;
+
+/// Runtime-dispatched SIMD lanes for the tile inner loops.
+///
+/// The scalar column loops accumulate each of the block's [`BLOCK_ROWS`]
+/// lanes independently (`acc[lane] += (qv − v)²`, no horizontal reduction
+/// and no fused multiply-add), so the AVX2 paths below perform the exact
+/// same IEEE-754 operations per lane in the same order and produce
+/// **bit-identical** accumulators. That is what makes the knob safe as a
+/// process-wide flag (`EngineConfig::simd` / `GOLDDIFF_SIMD`): toggling it
+/// can change speed, never results. Non-x86 targets (and CPUs without
+/// AVX2) fall back to the scalar loops transparently.
+pub mod simd {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    static ENABLED: AtomicBool = AtomicBool::new(true);
+
+    /// Toggle the SIMD lanes process-wide. Results are bit-identical
+    /// either way, so late or concurrent toggles are harmless.
+    pub fn set_enabled(on: bool) {
+        ENABLED.store(on, Ordering::Relaxed);
+    }
+
+    /// Is the knob on (regardless of CPU support)?
+    pub fn enabled() -> bool {
+        ENABLED.load(Ordering::Relaxed)
+    }
+
+    /// Does this CPU expose the AVX2 lanes the kernels target?
+    #[cfg(target_arch = "x86_64")]
+    pub fn available() -> bool {
+        is_x86_feature_detected!("avx2")
+    }
+
+    /// Does this CPU expose the AVX2 lanes the kernels target?
+    #[cfg(not(target_arch = "x86_64"))]
+    pub fn available() -> bool {
+        false
+    }
+
+    /// One dispatch decision per block scan (hoisted out of the column
+    /// loops; the feature probe is cached by std).
+    #[inline]
+    pub(super) fn active() -> bool {
+        enabled() && available()
+    }
+
+    /// `acc[lane] += (qv − col[lane])²` across the block's lanes.
+    ///
+    /// # Safety
+    /// Caller must have verified AVX2 support ([`available`]).
+    #[cfg(target_arch = "x86_64")]
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn accum_f32_avx2(
+        acc: &mut [f32; super::BLOCK_ROWS],
+        qv: f32,
+        col: &[f32],
+    ) {
+        use core::arch::x86_64::*;
+        debug_assert!(col.len() >= super::BLOCK_ROWS);
+        let q = _mm256_set1_ps(qv);
+        let ap = acc.as_mut_ptr();
+        let cp = col.as_ptr();
+        for i in 0..super::BLOCK_ROWS / 8 {
+            // sub/mul/add only — no FMA, so every lane matches the scalar
+            // `d = qv − v; a += d·d` bit-for-bit
+            let v = _mm256_loadu_ps(cp.add(i * 8));
+            let d = _mm256_sub_ps(q, v);
+            let a = _mm256_loadu_ps(ap.add(i * 8) as *const f32);
+            _mm256_storeu_ps(ap.add(i * 8), _mm256_add_ps(a, _mm256_mul_ps(d, d)));
+        }
+    }
+
+    /// `acc[lane] += (qv − scales[lane]·codes[lane])²` across the block's
+    /// lanes — the int8 column load is a quarter of the f32 footprint.
+    ///
+    /// # Safety
+    /// Caller must have verified AVX2 support ([`available`]).
+    #[cfg(target_arch = "x86_64")]
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn accum_i8_avx2(
+        acc: &mut [f32; super::BLOCK_ROWS],
+        qv: f32,
+        codes: &[i8],
+        scales: &[f32],
+    ) {
+        use core::arch::x86_64::*;
+        debug_assert!(codes.len() >= super::BLOCK_ROWS);
+        debug_assert!(scales.len() >= super::BLOCK_ROWS);
+        let q = _mm256_set1_ps(qv);
+        let ap = acc.as_mut_ptr();
+        for i in 0..super::BLOCK_ROWS / 8 {
+            // widen 8 i8 codes → i32 → f32 (exact), then mul/sub/mul/add
+            // mirrors the scalar `d = qv − s·(c as f32); a += d·d`
+            // lane-for-lane
+            let c8 = _mm_loadl_epi64(codes.as_ptr().add(i * 8) as *const __m128i);
+            let c = _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(c8));
+            let s = _mm256_loadu_ps(scales.as_ptr().add(i * 8));
+            let d = _mm256_sub_ps(q, _mm256_mul_ps(s, c));
+            let a = _mm256_loadu_ps(ap.add(i * 8) as *const f32);
+            _mm256_storeu_ps(ap.add(i * 8), _mm256_add_ps(a, _mm256_mul_ps(d, d)));
+        }
+    }
+}
+
+/// Scalar reference lanes for one f32 column (the `simd` fallback and the
+/// bit-identity baseline).
+#[inline(always)]
+fn accum_f32_scalar(acc: &mut [f32; BLOCK_ROWS], qv: f32, col: &[f32]) {
+    for (a, &v) in acc.iter_mut().zip(col) {
+        let d = qv - v;
+        *a += d * d;
+    }
+}
+
+/// Scalar reference lanes for one int8 column.
+#[inline(always)]
+fn accum_i8_scalar(acc: &mut [f32; BLOCK_ROWS], qv: f32, codes: &[i8], scales: &[f32]) {
+    for ((a, &c), &s) in acc.iter_mut().zip(codes).zip(scales) {
+        let d = qv - s * c as f32;
+        *a += d * d;
+    }
+}
+
+/// One f32 column through the dispatched lanes. `use_simd` is the hoisted
+/// per-scan [`simd::active`] decision.
+#[inline]
+fn accum_f32(use_simd: bool, acc: &mut [f32; BLOCK_ROWS], qv: f32, col: &[f32]) {
+    #[cfg(target_arch = "x86_64")]
+    if use_simd {
+        // SAFETY: `use_simd` implies `simd::available()` returned true
+        unsafe { simd::accum_f32_avx2(acc, qv, col) };
+        return;
+    }
+    let _ = use_simd;
+    accum_f32_scalar(acc, qv, col);
+}
+
+/// One int8 column through the dispatched lanes.
+#[inline]
+fn accum_i8(use_simd: bool, acc: &mut [f32; BLOCK_ROWS], qv: f32, codes: &[i8], scales: &[f32]) {
+    #[cfg(target_arch = "x86_64")]
+    if use_simd {
+        // SAFETY: `use_simd` implies `simd::available()` returned true
+        unsafe { simd::accum_i8_avx2(acc, qv, codes, scales) };
+        return;
+    }
+    let _ = use_simd;
+    accum_i8_scalar(acc, qv, codes, scales);
+}
 
 /// The proxy table transposed into fixed-width, dim-major row blocks.
 ///
@@ -328,6 +494,7 @@ impl KernelScan<'_> {
         let dim = self.blocks.dim;
         let rows = self.blocks.rows_in(b);
         let data = self.blocks.block(b);
+        let use_simd = simd::active();
         let mut acc = [[0.0f32; BLOCK_ROWS]; TILE_Q];
         let mut alive = [false; TILE_Q];
         alive[..nq].fill(true);
@@ -342,14 +509,10 @@ impl KernelScan<'_> {
                     if !alive[qi] {
                         continue;
                     }
-                    let qv = q[jj];
                     // one column load serves every live query: the
-                    // lane loop is contiguous and branch-free, so it
-                    // vectorises across the block's rows
-                    for (a, &v) in acc[qi].iter_mut().zip(col) {
-                        let d = qv - v;
-                        *a += d * d;
-                    }
+                    // lane update is contiguous and branch-free, either
+                    // auto-vectorised (scalar path) or explicit AVX2
+                    accum_f32(use_simd, &mut acc[qi], q[jj], col);
                 }
             }
             j = jend;
@@ -528,6 +691,7 @@ pub fn refine_scan_masked(
     assert_eq!(nq, heaps.len());
     let dim = blocks.dim;
     debug_assert!(queries.iter().all(|q| q.len() == dim));
+    let use_simd = simd::active();
 
     for mb in plan {
         let b = mb.block as usize;
@@ -559,14 +723,10 @@ pub fn refine_scan_masked(
                     if !alive[qi] {
                         continue;
                     }
-                    let qv = q[jj];
                     // whole-column accumulation stays branch-free; the
                     // membership filter applies at harvest, like the
                     // coarse kernel's class filter
-                    for (a, &v) in acc[qi].iter_mut().zip(col) {
-                        let d = qv - v;
-                        *a += d * d;
-                    }
+                    accum_f32(use_simd, &mut acc[qi], q[jj], col);
                 }
             }
             j = jend;
@@ -603,6 +763,487 @@ pub fn refine_scan_masked(
                 if alive[qi] && bits & (1 << qi) != 0 {
                     heap.push(acc[qi][lane as usize], gid);
                 }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Quantised tier: int8 codes with per-row scales and error corrections.
+//
+// Each row x is coded symmetrically: `scale = max|x_j| / 127` (1.0 for the
+// all-zero row), `code_j = round(x_j / scale)` clamped to ±127, and the
+// correction term `err = ‖x − scale·code‖₂` — the exact L2 norm of the
+// rounding residual. For any query q, with d̂ = ‖q − scale·code‖₂ the
+// triangle inequality gives the sandwich
+//
+//     max(0, d̂ − err)  ≤  ‖q − x‖₂  ≤  d̂ + err
+//
+// so squared bounds follow by squaring the non-negative ends. The screen
+// rejects a row only when its *lower* bound already exceeds an *upper*
+// -bound threshold on the k-th best candidate, so no true top-k member can
+// ever be excluded; every survivor is re-scored on the f32 rows, making
+// the end-to-end result byte-identical to the f32 path (see
+// `index/README.md`, "Quantised tier" for the full argument).
+//
+// Scales are per ROW, not per block — strictly tighter than a shared
+// block scale (one outlier row cannot inflate its 31 neighbours' grids)
+// and layout-independent, so the same codes serve any shard plan.
+// ---------------------------------------------------------------------------
+
+/// Quantise one row into `codes`; returns `(scale, err)` where `err` is
+/// the L2 norm of the rounding residual.
+pub fn quantise_row(row: &[f32], codes: &mut [i8]) -> (f32, f32) {
+    assert_eq!(row.len(), codes.len());
+    let maxab = row.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+    let scale = if maxab > 0.0 { maxab / 127.0 } else { 1.0 };
+    let mut err2 = 0.0f32;
+    for (c, &v) in codes.iter_mut().zip(row) {
+        // clamp before the cast: round(v/scale) can land on ±128 when
+        // v == ±max|x| and the division rounds up
+        let q = (v / scale).round().clamp(-127.0, 127.0);
+        *c = q as i8;
+        let r = v - scale * q;
+        err2 += r * r;
+    }
+    (scale, err2.sqrt())
+}
+
+/// Int8 twin of a [`ProxyBlocks`] table: same dim-major `BLOCK_ROWS`-lane
+/// layout (so the tile kernels walk it with the same stride math), plus
+/// per-lane scales and correction norms. Padding lanes carry code 0,
+/// scale 1.0, err 0.0 and are never harvested.
+#[derive(Debug, Clone, Default)]
+pub struct QuantBlocks {
+    pub rows: usize,
+    pub dim: usize,
+    /// `n_blocks × dim × BLOCK_ROWS` codes, dim-major within each block.
+    codes: Vec<i8>,
+    /// `n_blocks × BLOCK_ROWS` per-lane scales.
+    scales: Vec<f32>,
+    /// `n_blocks × BLOCK_ROWS` per-lane residual norms.
+    errs: Vec<f32>,
+}
+
+impl QuantBlocks {
+    /// Quantise every row of an existing f32 block table. Rows are read
+    /// back through the blocked layout, so this works for identity,
+    /// subset and shard-local tables alike (positions, not global ids).
+    pub fn from_blocks(blocks: &ProxyBlocks) -> Self {
+        let (rows, dim) = (blocks.rows, blocks.dim);
+        let nb = blocks.n_blocks();
+        let mut codes = vec![0i8; nb * dim * BLOCK_ROWS];
+        let mut scales = vec![1.0f32; nb * BLOCK_ROWS];
+        let mut errs = vec![0.0f32; nb * BLOCK_ROWS];
+        let mut row = vec![0.0f32; dim];
+        let mut code = vec![0i8; dim];
+        for b in 0..nb {
+            let data = blocks.block(b);
+            let boff = b * dim * BLOCK_ROWS;
+            for lane in 0..blocks.rows_in(b) {
+                for (j, r) in row.iter_mut().enumerate() {
+                    *r = data[j * BLOCK_ROWS + lane];
+                }
+                let (s, e) = quantise_row(&row, &mut code);
+                scales[b * BLOCK_ROWS + lane] = s;
+                errs[b * BLOCK_ROWS + lane] = e;
+                for (j, &c) in code.iter().enumerate() {
+                    codes[boff + j * BLOCK_ROWS + lane] = c;
+                }
+            }
+        }
+        QuantBlocks {
+            rows,
+            dim,
+            codes,
+            scales,
+            errs,
+        }
+    }
+
+    pub fn n_blocks(&self) -> usize {
+        self.rows.div_ceil(BLOCK_ROWS)
+    }
+
+    pub fn rows_in(&self, b: usize) -> usize {
+        (self.rows - b * BLOCK_ROWS).min(BLOCK_ROWS)
+    }
+
+    /// Dim-major code slab of block `b` (`dim × BLOCK_ROWS` entries).
+    pub fn codes(&self, b: usize) -> &[i8] {
+        let w = self.dim * BLOCK_ROWS;
+        &self.codes[b * w..(b + 1) * w]
+    }
+
+    /// Per-lane scales of block `b` (`BLOCK_ROWS` entries).
+    pub fn scales(&self, b: usize) -> &[f32] {
+        &self.scales[b * BLOCK_ROWS..(b + 1) * BLOCK_ROWS]
+    }
+
+    /// Per-lane residual norms of block `b` (`BLOCK_ROWS` entries).
+    pub fn errs(&self, b: usize) -> &[f32] {
+        &self.errs[b * BLOCK_ROWS..(b + 1) * BLOCK_ROWS]
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.codes.len() + (self.scales.len() + self.errs.len()) * 4
+    }
+}
+
+/// Row-major int8 tier over the full-resolution table — the form the
+/// `.gds` store persists and the refine pre-rung consumes (random access
+/// by global row id, no blocking).
+#[derive(Debug, Clone, Default)]
+pub struct QuantRows {
+    pub n: usize,
+    pub d: usize,
+    codes: Vec<i8>,
+    scales: Vec<f32>,
+    errs: Vec<f32>,
+}
+
+impl QuantRows {
+    /// Quantise a resident row-major table.
+    pub fn build(table: &[f32], n: usize, d: usize) -> Self {
+        assert_eq!(table.len(), n * d);
+        let mut codes = vec![0i8; n * d];
+        let mut scales = vec![1.0f32; n];
+        let mut errs = vec![0.0f32; n];
+        for i in 0..n {
+            let (s, e) = quantise_row(&table[i * d..(i + 1) * d], &mut codes[i * d..(i + 1) * d]);
+            scales[i] = s;
+            errs[i] = e;
+        }
+        QuantRows {
+            n,
+            d,
+            codes,
+            scales,
+            errs,
+        }
+    }
+
+    /// Reassemble from persisted sections; `None` when the lengths are
+    /// inconsistent (a corrupt or foreign store — caller falls back to
+    /// the f32-only path).
+    pub fn from_parts(
+        n: usize,
+        d: usize,
+        codes: Vec<i8>,
+        scales: Vec<f32>,
+        errs: Vec<f32>,
+    ) -> Option<Self> {
+        if codes.len() != n * d || scales.len() != n || errs.len() != n {
+            return None;
+        }
+        Some(QuantRows {
+            n,
+            d,
+            codes,
+            scales,
+            errs,
+        })
+    }
+
+    pub fn codes_row(&self, i: usize) -> &[i8] {
+        &self.codes[i * self.d..(i + 1) * self.d]
+    }
+
+    pub fn scale(&self, i: usize) -> f32 {
+        self.scales[i]
+    }
+
+    pub fn err(&self, i: usize) -> f32 {
+        self.errs[i]
+    }
+
+    /// Flat views for persistence.
+    pub fn codes_flat(&self) -> &[i8] {
+        &self.codes
+    }
+
+    pub fn scales_flat(&self) -> &[f32] {
+        &self.scales
+    }
+
+    pub fn errs_flat(&self) -> &[f32] {
+        &self.errs
+    }
+
+    /// Sound squared-distance sandwich `(lb², ub²)` on `‖q − x_gid‖²`.
+    pub fn bounds2(&self, q: &[f32], gid: u32) -> (f32, f32) {
+        let i = gid as usize;
+        let d2 = crate::index::scan::quant_sqdist(q, self.codes_row(i), self.scales[i]);
+        let dhat = d2.sqrt();
+        let err = self.errs[i];
+        let lb = (dhat - err).max(0.0);
+        (lb * lb, (dhat + err) * (dhat + err))
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.codes.len() + (self.scales.len() + self.errs.len()) * 4
+    }
+}
+
+/// Telemetry from the quantised tier (per-query-group, mergeable).
+/// Invariant: `rows_screened == bound_rejects + rescore_rows` — every
+/// class-eligible row a quant pass touches lands in exactly one bucket.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct QuantStats {
+    /// Class-eligible rows whose bounds were evaluated on int8 codes.
+    pub rows_screened: u64,
+    /// Rows the bound could not exclude — re-scored on f32.
+    pub rescore_rows: u64,
+    /// Rows excluded by the sound lower bound (never touched f32 data).
+    pub bound_rejects: u64,
+}
+
+impl QuantStats {
+    pub fn add(&mut self, o: &QuantStats) {
+        self.rows_screened += o.rows_screened;
+        self.rescore_rows += o.rescore_rows;
+        self.bound_rejects += o.bound_rejects;
+    }
+}
+
+/// Coarse screen over the int8 tier with exact f32 rescore.
+///
+/// The screen runs the same 8-query register tile as [`KernelScan`], but on
+/// quarter-width int8 columns. Per query it maintains an *upper-bound
+/// threshold heap* (capacity = the requested cap) of survivor ub²s; a row
+/// is excluded at visit time only when its lb² is already ≥ the heap's
+/// worst retained ub². The heap's worst over ingested rows always upper
+/// -bounds the cap-th smallest *true* distance over those rows, so an
+/// excluded row is provably outside the true top-cap — the exclusion is
+/// sound irrespective of visit order or sharding. After the parallel
+/// chunks merge, survivors are filtered once more against the merged
+/// threshold, then re-streamed through [`refine_scan_masked`] on the f32
+/// twin blocks, so harvested distances are *exactly* the f32 kernel's.
+///
+/// Strip early-exit re-uses the f32 kernel's retirement discipline with
+/// the bound made err-aware: partial sums only grow and the full-row
+/// residual norm over-covers any dim prefix, so
+/// `(√acc_partial − err).max(0)²` lower-bounds the full true distance.
+///
+/// Conditional queries participate: only class-eligible rows are ingested
+/// into a query's threshold heap (mixing classes would tighten the
+/// threshold unsoundly for the conditional query).
+pub struct QuantScan<'a> {
+    /// f32 twin — supplies ids and the exact rescore data.
+    pub blocks: &'a ProxyBlocks,
+    pub quant: &'a QuantBlocks,
+    pub queries: &'a [&'a [f32]],
+    pub classes: &'a [Option<u32>],
+    pub labels: Option<&'a [u32]>,
+}
+
+impl<'a> QuantScan<'a> {
+    fn check_group(&self, heaps: &[BoundedMaxHeap]) {
+        let nq = self.queries.len();
+        assert!(nq > 0 && nq <= TILE_Q, "query group of {nq} exceeds TILE_Q");
+        assert_eq!(nq, heaps.len());
+        assert_eq!(nq, self.classes.len());
+        assert_eq!(self.quant.rows, self.blocks.rows);
+        assert_eq!(self.quant.dim, self.blocks.dim);
+        debug_assert!(self.queries.iter().all(|q| q.len() == self.blocks.dim));
+    }
+
+    /// Class-eligible lanes of block `b` for one query.
+    fn eligible_rows(&self, b: usize, rows: usize, class: Option<u32>) -> u64 {
+        match (class, self.labels) {
+            (Some(y), Some(labels)) => (0..rows)
+                .filter(|&lane| labels[self.blocks.id(b, lane) as usize] == y)
+                .count() as u64,
+            _ => rows as u64,
+        }
+    }
+
+    /// Quant tile pass over one block: accumulate d̂² per lane, retire
+    /// queries whose err-aware lower bound clears their threshold heap,
+    /// harvest bounds for the surviving eligible lanes.
+    #[allow(clippy::too_many_arguments)]
+    fn quant_block(
+        &self,
+        b: usize,
+        use_simd: bool,
+        ubheaps: &mut [BoundedMaxHeap],
+        surv: &mut [Vec<(u32, f32)>],
+        qst: &mut QuantStats,
+        kst: &mut KernelStats,
+    ) {
+        let nq = self.queries.len();
+        let dim = self.quant.dim;
+        let rows = self.quant.rows_in(b);
+        let codes = self.quant.codes(b);
+        let scales = self.quant.scales(b);
+        let errs = self.quant.errs(b);
+        let mut acc = [[0.0f32; BLOCK_ROWS]; TILE_Q];
+        let mut alive = [false; TILE_Q];
+        alive[..nq].fill(true);
+        let mut n_alive = nq;
+
+        let mut j = 0;
+        while j < dim {
+            let jend = (j + STRIP_DIMS).min(dim);
+            for jj in j..jend {
+                let ccol = &codes[jj * BLOCK_ROWS..(jj + 1) * BLOCK_ROWS];
+                for (qi, q) in self.queries.iter().enumerate() {
+                    if !alive[qi] {
+                        continue;
+                    }
+                    accum_i8(use_simd, &mut acc[qi], q[jj], ccol, scales);
+                }
+            }
+            j = jend;
+            if j >= dim {
+                break;
+            }
+            for qi in 0..nq {
+                if !alive[qi] {
+                    continue;
+                }
+                let cutoff = ubheaps[qi].worst();
+                if !cutoff.is_finite() {
+                    continue;
+                }
+                // (√acc − err).max(0)² lower-bounds the full true
+                // distance even on a partial sum: acc only grows and the
+                // full-row err over-covers any prefix residual
+                let best = (0..rows).fold(f32::INFINITY, |m, lane| {
+                    let lb = (acc[qi][lane].sqrt() - errs[lane]).max(0.0);
+                    m.min(lb * lb)
+                });
+                if best >= cutoff {
+                    alive[qi] = false;
+                    n_alive -= 1;
+                    kst.strip_exits += 1;
+                    kst.exit_gain_rows += rows as u64;
+                    // every eligible row of this block is excluded by
+                    // the bound without touching f32 data
+                    let n_elig = self.eligible_rows(b, rows, self.classes[qi]);
+                    qst.rows_screened += n_elig;
+                    qst.bound_rejects += n_elig;
+                }
+            }
+            if n_alive == 0 {
+                break;
+            }
+        }
+        kst.tiles += 1;
+        kst.rows += rows as u64;
+
+        for qi in 0..nq {
+            if !alive[qi] {
+                continue;
+            }
+            let class = self.classes[qi];
+            for lane in 0..rows {
+                if let (Some(y), Some(labels)) = (class, self.labels) {
+                    if labels[self.blocks.id(b, lane) as usize] != y {
+                        continue;
+                    }
+                }
+                let dhat = acc[qi][lane].sqrt();
+                let err = errs[lane];
+                let lb = (dhat - err).max(0.0);
+                let lb2 = lb * lb;
+                qst.rows_screened += 1;
+                if lb2 >= ubheaps[qi].worst() {
+                    // cannot beat the cap-th best upper bound: provably
+                    // outside the true top-cap (rejection accounted now;
+                    // the heap is full whenever worst() is finite, and
+                    // ub² ≥ lb² ≥ worst means a push would be a no-op)
+                    qst.bound_rejects += 1;
+                } else {
+                    let pos = (b * BLOCK_ROWS + lane) as u32;
+                    let ub = dhat + err;
+                    ubheaps[qi].push(ub * ub, pos);
+                    surv[qi].push((pos, lb2));
+                }
+            }
+        }
+    }
+
+    /// Screen all blocks (optionally in an explicit visit `order`) on the
+    /// int8 tier, then rescore every survivor on the f32 twin into
+    /// `heaps` (fresh, capacity = `cap`). On tie-free data the harvested
+    /// ids and distances are byte-identical to [`KernelScan::top_m`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn screen_into(
+        &self,
+        cap: usize,
+        threads: usize,
+        order: Option<&[u32]>,
+        heaps: &mut [BoundedMaxHeap],
+        qst: &mut QuantStats,
+        kst: &mut KernelStats,
+    ) {
+        self.check_group(heaps);
+        let cap = cap.max(1);
+        let nq = self.queries.len();
+        let nb = self.quant.n_blocks();
+        let n_items = order.map_or(nb, <[u32]>::len);
+        let use_simd = simd::active();
+
+        let chunks = parallel_chunks(n_items, threads.max(1), |_, s, e| {
+            let mut ubheaps: Vec<BoundedMaxHeap> =
+                (0..nq).map(|_| BoundedMaxHeap::new(cap)).collect();
+            let mut surv: Vec<Vec<(u32, f32)>> = vec![Vec::new(); nq];
+            let mut q = QuantStats::default();
+            let mut k = KernelStats::default();
+            for pos in s..e {
+                let b = order.map_or(pos, |o| o[pos] as usize);
+                self.quant_block(b, use_simd, &mut ubheaps, &mut surv, &mut q, &mut k);
+            }
+            (ubheaps, surv, q, k)
+        });
+
+        // merged upper-bound threshold: the cap-th smallest survivor ub²
+        // across all chunks still upper-bounds the true cap-th distance,
+        // so one more (tighter) filter pass over survivors stays sound
+        let mut merged: Vec<BoundedMaxHeap> = (0..nq).map(|_| BoundedMaxHeap::new(cap)).collect();
+        for (ubheaps, _, q, k) in &chunks {
+            qst.add(q);
+            kst.add(k);
+            for (m, h) in merged.iter_mut().zip(ubheaps) {
+                m.merge(h.clone());
+            }
+        }
+        let t_final: Vec<f32> = merged.iter().map(BoundedMaxHeap::worst).collect();
+
+        let mut bits: HashMap<u32, u8> = HashMap::new();
+        for (_, surv, _, _) in &chunks {
+            for qi in 0..nq {
+                for &(pos, lb2) in &surv[qi] {
+                    if lb2 >= t_final[qi] {
+                        qst.bound_rejects += 1;
+                    } else {
+                        *bits.entry(pos).or_insert(0) |= 1 << qi;
+                        qst.rescore_rows += 1;
+                    }
+                }
+            }
+        }
+
+        // exact rescore: survivors re-streamed through the f32 masked
+        // tiles in ascending position order (= block order), so the
+        // harvested distances are the f32 kernel's own
+        let mut rows: Vec<(u32, u8)> = bits.into_iter().collect();
+        rows.sort_unstable_by_key(|&(pos, _)| pos);
+        let plan = build_refine_plan(&rows);
+        if plan.is_empty() {
+            return;
+        }
+        let shards = parallel_chunks(plan.len(), threads.max(1), |_, s, e| {
+            let mut hs: Vec<BoundedMaxHeap> = (0..nq).map(|_| BoundedMaxHeap::new(cap)).collect();
+            let mut st = KernelStats::default();
+            refine_scan_masked(self.blocks, self.queries, &plan[s..e], &mut hs, &mut st);
+            (hs, st)
+        });
+        for (hs, st) in shards {
+            kst.add(&st);
+            for (h, hh) in heaps.iter_mut().zip(hs) {
+                h.merge(hh);
             }
         }
     }
@@ -1008,5 +1649,235 @@ mod tests {
         assert_eq!(got[0], 5);
         assert!(st.strip_exits > 0, "concentrated pool must retire tiles");
         assert!(st.exit_gain_rows > 0, "retirements must bank row gains");
+    }
+
+    #[test]
+    fn simd_dispatch_is_bit_identical_to_scalar() {
+        // the AVX2 lanes perform the same IEEE ops per lane as the scalar
+        // loop, so accumulators must match to the bit — on machines
+        // without AVX2 this degenerates to scalar vs scalar and still
+        // guards the dispatch plumbing
+        let mut rng = Pcg64::new(91);
+        for _ in 0..50 {
+            let qv = rng.normal() * 10f32.powi(gen::usize_in(&mut rng, 0, 6) as i32 - 3);
+            let col: Vec<f32> = (0..BLOCK_ROWS).map(|_| rng.normal()).collect();
+            let codes: Vec<i8> = (0..BLOCK_ROWS)
+                .map(|_| (rng.below(255) as i32 - 127) as i8)
+                .collect();
+            let scales: Vec<f32> = (0..BLOCK_ROWS).map(|_| rng.f32() + 0.01).collect();
+            let mut a = [0.5f32; BLOCK_ROWS];
+            let mut b = [0.5f32; BLOCK_ROWS];
+            accum_f32(simd::available(), &mut a, qv, &col);
+            accum_f32(false, &mut b, qv, &col);
+            assert!(
+                a.iter().zip(&b).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "f32 lanes diverge from scalar"
+            );
+            let mut a = [0.25f32; BLOCK_ROWS];
+            let mut b = [0.25f32; BLOCK_ROWS];
+            accum_i8(simd::available(), &mut a, qv, &codes, &scales);
+            accum_i8(false, &mut b, qv, &codes, &scales);
+            assert!(
+                a.iter().zip(&b).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "i8 lanes diverge from scalar"
+            );
+        }
+    }
+
+    #[test]
+    fn quantise_row_bounds_sandwich_true_distance() {
+        // lb ≤ ‖q−x‖ ≤ ub across magnitudes from 1e-6 to 1e6, plus
+        // constant and all-zero rows (scale degeneracies)
+        let mut rng = Pcg64::new(17);
+        for _ in 0..200 {
+            let dim = gen::usize_in(&mut rng, 1, 97);
+            let mag = 10f32.powi(gen::usize_in(&mut rng, 0, 12) as i32 - 6);
+            let row: Vec<f32> = match rng.below(8) {
+                0 => vec![0.0; dim],                       // zero row: scale 1, err 0
+                1 => vec![mag * rng.normal().signum(); dim], // constant row: err 0
+                _ => (0..dim).map(|_| mag * rng.normal()).collect(),
+            };
+            let mut codes = vec![0i8; dim];
+            let (scale, err) = quantise_row(&row, &mut codes);
+            assert!(scale > 0.0 && err >= 0.0);
+            if row.iter().all(|&v| v == 0.0) {
+                assert_eq!(scale, 1.0);
+                assert_eq!(err, 0.0);
+            }
+            if row.iter().all(|&v| v == row[0]) {
+                // symmetric grid hits a constant row exactly
+                assert!(err <= 1e-3 * row[0].abs().max(1e-30), "constant row err={err}");
+            }
+            let q: Vec<f32> = (0..dim).map(|_| mag * rng.normal()).collect();
+            let true_d: f32 = row
+                .iter()
+                .zip(&q)
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum::<f32>()
+                .sqrt();
+            let dhat: f32 = codes
+                .iter()
+                .zip(&q)
+                .map(|(&c, &b)| {
+                    let d = b - scale * c as f32;
+                    d * d
+                })
+                .sum::<f32>()
+                .sqrt();
+            let lb = (dhat - err).max(0.0);
+            let ub = dhat + err;
+            // small f32 headroom: the sandwich is exact in reals
+            let slack = 1e-4 * (true_d + err + 1e-6);
+            assert!(lb <= true_d + slack, "lb={lb} true={true_d} dim={dim} mag={mag}");
+            assert!(ub >= true_d - slack, "ub={ub} true={true_d} dim={dim} mag={mag}");
+        }
+    }
+
+    #[test]
+    fn quant_blocks_agree_with_quant_rows() {
+        // the blocked twin must carry the exact same codes/scales/errs as
+        // the row-major tier — positions through the lane layout
+        let mut rng = Pcg64::new(23);
+        for (rows, dim) in [(1usize, 3usize), (31, 7), (33, 16), (100, 5)] {
+            let table = random_table(&mut rng, rows, dim);
+            let blocks = ProxyBlocks::build(&table, rows, dim);
+            let qb = QuantBlocks::from_blocks(&blocks);
+            let qr = QuantRows::build(&table, rows, dim);
+            assert_eq!(qb.n_blocks(), blocks.n_blocks());
+            for r in 0..rows {
+                let (b, lane) = (r / BLOCK_ROWS, r % BLOCK_ROWS);
+                assert_eq!(qb.scales(b)[lane], qr.scale(r), "r={r}");
+                assert_eq!(qb.errs(b)[lane], qr.err(r), "r={r}");
+                for j in 0..dim {
+                    assert_eq!(
+                        qb.codes(b)[j * BLOCK_ROWS + lane],
+                        qr.codes_row(r)[j],
+                        "r={r} j={j}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn quant_bound_never_excludes_true_topk() {
+        // the refine pre-rung's exclusion rule (lb² > k-th smallest ub²)
+        // must keep every true top-k member, across ragged dims, extreme
+        // scales and constant rows
+        forall(41, 40, |rng| {
+            let rows = gen::usize_in(rng, 2, 150);
+            let dim = gen::usize_in(rng, 1, 50);
+            let mag = 10f32.powi(gen::usize_in(rng, 0, 8) as i32 - 4);
+            let mut table = random_table(rng, rows, dim);
+            for v in table.iter_mut() {
+                *v *= mag;
+            }
+            if rows > 4 {
+                // a few constant rows in the mix
+                for r in 0..3 {
+                    let c = mag * rng.normal();
+                    table[r * dim..(r + 1) * dim].fill(c);
+                }
+            }
+            let qr = QuantRows::build(&table, rows, dim);
+            let k = gen::usize_in(rng, 1, rows);
+            let q: Vec<f32> = (0..dim).map(|_| mag * rng.normal()).collect();
+            let want = naive_top_m(&table, rows, dim, &q, k);
+
+            let mut th = BoundedMaxHeap::new(k);
+            let bounds: Vec<(f32, f32)> = (0..rows as u32)
+                .map(|gid| {
+                    let (lb2, ub2) = qr.bounds2(&q, gid);
+                    assert!(lb2 <= ub2);
+                    th.push(ub2, gid);
+                    (lb2, ub2)
+                })
+                .collect();
+            let t = th.worst();
+            for &gid in &want {
+                crate::prop_assert!(
+                    bounds[gid as usize].0 <= t,
+                    "true top-{k} member {gid} excluded: lb2={} > T={t} rows={rows} dim={dim} mag={mag}",
+                    bounds[gid as usize].0
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn quant_scan_matches_f32_kernel_byte_for_byte() {
+        // end-to-end: int8 screen + exact f32 rescore must reproduce the
+        // f32 kernel's ids exactly on tie-free data — unconditional and
+        // conditional queries, ordered and natural visit order, 1–2
+        // threads, and the telemetry invariant must hold
+        let mut rng = Pcg64::new(53);
+        for &(rows, dim, nclass) in &[(90usize, 24usize, 0u32), (260, 48, 3), (33, 16, 2)] {
+            let table = random_table(&mut rng, rows, dim);
+            let labels: Vec<u32> = (0..rows)
+                .map(|_| if nclass == 0 { 0 } else { rng.below(nclass as usize) as u32 })
+                .collect();
+            let blocks = ProxyBlocks::build(&table, rows, dim);
+            let quant = QuantBlocks::from_blocks(&blocks);
+            let nq = 5usize;
+            let qs_data: Vec<Vec<f32>> = (0..nq)
+                .map(|_| gen::vec_normal(&mut rng, dim, 1.0))
+                .collect();
+            let qs: Vec<&[f32]> = qs_data.iter().map(|q| q.as_slice()).collect();
+            let classes: Vec<Option<u32>> = (0..nq)
+                .map(|qi| {
+                    if nclass > 0 && qi % 2 == 1 {
+                        Some((qi as u32) % nclass)
+                    } else {
+                        None
+                    }
+                })
+                .collect();
+            let cap = 9usize;
+            let f32_scan = KernelScan {
+                blocks: &blocks,
+                queries: &qs,
+                classes: &classes,
+                labels: Some(&labels),
+            };
+            let (want, _) = f32_scan.top_m(cap, 2);
+
+            let qscan = QuantScan {
+                blocks: &blocks,
+                quant: &quant,
+                queries: &qs,
+                classes: &classes,
+                labels: Some(&labels),
+            };
+            let order = block_order(&blocks, qs[0]);
+            for threads in [1usize, 2] {
+                for ord in [None, Some(order.as_slice())] {
+                    let mut heaps: Vec<BoundedMaxHeap> =
+                        (0..nq).map(|_| BoundedMaxHeap::new(cap)).collect();
+                    let mut qst = QuantStats::default();
+                    let mut kst = KernelStats::default();
+                    qscan.screen_into(cap, threads, ord, &mut heaps, &mut qst, &mut kst);
+                    let got: Vec<Vec<u32>> = heaps
+                        .into_iter()
+                        .map(|h| h.into_sorted().into_iter().map(|(_, i)| i).collect())
+                        .collect();
+                    assert_eq!(
+                        got, want,
+                        "rows={rows} dim={dim} nclass={nclass} threads={threads} ordered={}",
+                        ord.is_some()
+                    );
+                    assert_eq!(
+                        qst.rows_screened,
+                        qst.bound_rejects + qst.rescore_rows,
+                        "telemetry invariant"
+                    );
+                    assert!(qst.rows_screened > 0);
+                    assert!(
+                        qst.rescore_rows < qst.rows_screened || rows <= cap,
+                        "screen should reject something on rows={rows}"
+                    );
+                }
+            }
+        }
     }
 }

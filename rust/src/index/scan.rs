@@ -46,6 +46,28 @@ pub(crate) fn sqdist_flat(a: &[f32], b: &[f32]) -> f32 {
     total
 }
 
+/// Squared distance between an f32 query and a per-row-scaled int8 code
+/// vector (`d̂² = Σ (q_j − scale·code_j)²`) — the quantised-tier analogue
+/// of [`sqdist_flat`], same 8-lane accumulator idiom so it vectorises.
+#[inline]
+pub(crate) fn quant_sqdist(q: &[f32], codes: &[i8], scale: f32) -> f32 {
+    let mut acc = [0.0f32; 8];
+    let chunks = q.len() / 8;
+    for s in 0..chunks {
+        let i = s * 8;
+        for j in 0..8 {
+            let d = q[i + j] - scale * codes[i + j] as f32;
+            acc[j] += d * d;
+        }
+    }
+    let mut total: f32 = acc.iter().sum();
+    for i in chunks * 8..q.len() {
+        let d = q[i] - scale * codes[i] as f32;
+        total += d * d;
+    }
+    total
+}
+
 #[inline]
 pub(crate) fn sqdist_early_exit(a: &[f32], b: &[f32], cutoff: f32) -> f32 {
     // 64-element strips with a cutoff check between strips: in the

@@ -36,11 +36,11 @@ use std::sync::atomic::Ordering;
 use std::sync::Arc;
 
 use super::backend::{
-    batched_refine, group_mean, moved_blocks, refine_masked_by_shard, warm_seed_heap,
-    warm_sweep_blocks, BackendOpts, Counters, ProxyQuery, RetrievalBackend,
+    batched_refine, group_mean, moved_blocks, quant_prefilter, refine_masked_by_shard,
+    warm_seed_heap, warm_sweep_blocks, BackendOpts, Counters, ProxyQuery, RetrievalBackend,
     RetrievalBackendKind, RetrievalStats,
 };
-use super::kernel::{self, block_order, KernelScan, KernelStats, ProxyBlocks};
+use super::kernel::{self, block_order, KernelScan, KernelStats, ProxyBlocks, QuantScan, QuantStats};
 use super::scan::{sqdist_early_exit, sqdist_flat};
 use super::topk::BoundedMaxHeap;
 use crate::data::dataset::Dataset;
@@ -73,6 +73,7 @@ struct ShardIvf {
 #[derive(Debug, Default, Clone, Copy)]
 struct ScanTel {
     kst: KernelStats,
+    qst: QuantStats,
     rows_scalar: u64,
     reorders: u64,
     scanned: u64,
@@ -84,6 +85,7 @@ struct ScanTel {
 impl ScanTel {
     fn add(&mut self, o: &ScanTel) {
         self.kst.add(&o.kst);
+        self.qst.add(&o.qst);
         self.rows_scalar += o.rows_scalar;
         self.reorders += o.reorders;
         self.scanned += o.scanned;
@@ -101,6 +103,9 @@ pub struct ShardedBackend {
     use_kernel: bool,
     refine_kernel: bool,
     ordered: bool,
+    /// int8 screen per shard + refine pre-rung (kernel Flat/Batched only;
+    /// exact f32 rescore keeps results byte-identical)
+    quant: bool,
     tile_q: usize,
     nprobe: usize,
     /// one entry per shard when `kind == ClusterPruned`, empty otherwise
@@ -137,6 +142,7 @@ impl ShardedBackend {
             use_kernel: opts.kernel,
             refine_kernel: opts.kernel && opts.refine_kernel,
             ordered: opts.kernel && opts.ordering,
+            quant: opts.kernel && opts.quant && kind != RetrievalBackendKind::ClusterPruned,
             tile_q: opts.tile_q.clamp(1, kernel::TILE_Q),
             nprobe,
             ivf,
@@ -197,19 +203,44 @@ impl ShardedBackend {
             if self.use_kernel {
                 let classes: Vec<Option<u32>> =
                     group.iter().map(|&qi| queries[qi].class).collect();
-                let scan = KernelScan {
-                    blocks: &sp.blocks,
-                    queries: &qs,
-                    classes: &classes,
-                    labels: Some(&ds.labels),
-                };
-                if self.ordered && sp.blocks.n_blocks() > 1 {
+                let order = if self.ordered && sp.blocks.n_blocks() > 1 {
                     let mean = group_mean(&qs, ds.proxy_d);
                     let order = block_order(&sp.blocks, &mean);
                     tel.reorders += moved_blocks(&order);
-                    scan.scan_list_into(&order, &mut heaps, &mut tel.kst);
+                    Some(order)
                 } else {
-                    scan.scan_into(0, sp.blocks.n_blocks(), &mut heaps, &mut tel.kst);
+                    None
+                };
+                if self.quant {
+                    // int8 screen over this shard's lazily-built quant
+                    // twin; threads = 1 — we are already inside the
+                    // shard-parallel region
+                    let scan = QuantScan {
+                        blocks: &sp.blocks,
+                        quant: sp.quant(),
+                        queries: &qs,
+                        classes: &classes,
+                        labels: Some(&ds.labels),
+                    };
+                    scan.screen_into(
+                        cap,
+                        1,
+                        order.as_deref(),
+                        &mut heaps,
+                        &mut tel.qst,
+                        &mut tel.kst,
+                    );
+                } else {
+                    let scan = KernelScan {
+                        blocks: &sp.blocks,
+                        queries: &qs,
+                        classes: &classes,
+                        labels: Some(&ds.labels),
+                    };
+                    match &order {
+                        Some(order) => scan.scan_list_into(order, &mut heaps, &mut tel.kst),
+                        None => scan.scan_into(0, sp.blocks.n_blocks(), &mut heaps, &mut tel.kst),
+                    }
                 }
             } else {
                 let (s, e) = self.corpus.plan().range(sh);
@@ -457,6 +488,7 @@ impl ShardedBackend {
 
     fn record(&self, tel: &ScanTel) {
         self.counters.record_kernel(&tel.kst);
+        self.counters.record_quant(&tel.qst);
         self.counters
             .rows_scanned
             .fetch_add(tel.rows_scalar, Ordering::Relaxed);
@@ -639,6 +671,15 @@ impl RetrievalBackend for ShardedBackend {
             let (out, rows) = batched_refine(ds, qs, pools, k, self.threads);
             self.counters.refine_rows.fetch_add(rows, Ordering::Relaxed);
             return out;
+        }
+        if self.quant {
+            // pre-rung on the persisted row-tier codes: shards left with
+            // zero surviving candidates are never touched, so a streamed
+            // corpus skips whole `.gds` block loads
+            if let Some(filtered) = quant_prefilter(ds, qs, pools, k, &self.counters) {
+                let fp: Vec<&[u32]> = filtered.iter().map(Vec::as_slice).collect();
+                return self.refine_sharded(ds, qs, &fp, k);
+            }
         }
         self.refine_sharded(ds, qs, pools, k)
     }
@@ -1028,5 +1069,104 @@ mod tests {
             sharded.top_m(&ds, &q, 9, None),
             plain.top_m(&ds, &q, 9, None)
         );
+    }
+
+    #[test]
+    fn sharded_quant_matches_f32_across_kinds_and_counts() {
+        // Tentpole: the quantised tier composes with shard-parallel
+        // screens + refines byte-identically, conditional included
+        let ds = tiny(280, 51);
+        let flat = FlatScan::scalar(2);
+        for &kind in [RetrievalBackendKind::Flat, RetrievalBackendKind::Batched].iter() {
+            for shards in [2usize, 5] {
+                let qopts = BackendOpts {
+                    quant: true,
+                    ..opts(shards, true)
+                };
+                let sb = ShardedBackend::build(&ds, kind, qopts);
+                assert!(sb.quant, "kernel non-cluster builds take the knob");
+                forall(131 + shards as u64, 8, |rng| {
+                    let m = gen::usize_in(rng, 1, 70);
+                    let k = gen::usize_in(rng, 1, 16);
+                    let qp = gen::vec_normal(rng, ds.proxy_d, 1.0);
+                    let q = gen::vec_normal(rng, ds.d, 1.0);
+                    let class = if rng.below(2) == 0 {
+                        None
+                    } else {
+                        Some(rng.below(ds.classes) as u32)
+                    };
+                    let want = flat.top_m(&ds, &qp, m, class);
+                    let got = sb.top_m(&ds, &qp, m, class);
+                    crate::prop_assert!(
+                        got == want,
+                        "{} shards={shards} quant screen (m={m} class={class:?})",
+                        sb.name()
+                    );
+                    let rw = flat.refine_top_k(&ds, &q, &want, k);
+                    let rg = sb.refine_top_k(&ds, &q, &want, k);
+                    crate::prop_assert!(
+                        rg == rw,
+                        "{} shards={shards} quant refine (k={k})",
+                        sb.name()
+                    );
+                    Ok(())
+                });
+                let s = sb.stats();
+                assert!(s.quant_rows_screened > 0);
+                assert_eq!(s.quant_rows_screened, s.bound_rejects + s.rescore_rows);
+            }
+        }
+        // the cluster kind ignores the knob even sharded
+        let cb = ShardedBackend::build(
+            &ds,
+            RetrievalBackendKind::ClusterPruned,
+            BackendOpts {
+                quant: true,
+                ..opts(3, true)
+            },
+        );
+        assert!(!cb.quant, "cluster lists keep their exact f32 tables");
+    }
+
+    #[test]
+    fn streamed_quant_backend_serves_off_the_persisted_tier() {
+        // a data-free corpus + quant: the refine pre-rung runs on the
+        // store's persisted int8 sections and results stay byte-identical
+        // to the resident f32 path
+        let ds = tiny(220, 57);
+        let dir = std::env::temp_dir().join("golddiff_sharded_quant_stream_test");
+        std::fs::remove_dir_all(&dir).ok();
+        let path = store::store_path(&dir, "cifar-sim");
+        store::save_sharded(&ds, &path, 4).unwrap();
+        let st = store::open_streaming(&path, 4, 1).unwrap();
+        assert!(st.quant_rows().is_some(), "v4 stores preload the tier");
+        let resident = ShardedBackend::build(&ds, RetrievalBackendKind::Batched, opts(4, true));
+        let streamed = ShardedBackend::build(
+            &st,
+            RetrievalBackendKind::Batched,
+            BackendOpts {
+                quant: true,
+                mem_budget_mb: 1,
+                ..opts(4, true)
+            },
+        );
+        let mut rng = Pcg64::new(61);
+        for round in 0..4 {
+            let m = 1 + rng.below(64);
+            let k = 1 + rng.below(16);
+            let qp: Vec<f32> = (0..ds.proxy_d).map(|_| rng.normal()).collect();
+            let q: Vec<f32> = (0..ds.d).map(|_| rng.normal()).collect();
+            let a = resident.top_m(&ds, &qp, m, None);
+            let b = streamed.top_m(&st, &qp, m, None);
+            assert_eq!(a, b, "coarse round {round}");
+            assert_eq!(
+                resident.refine_top_k(&ds, &q, &a, k),
+                streamed.refine_top_k(&st, &q, &b, k),
+                "refine round {round}"
+            );
+        }
+        let s = streamed.stats();
+        assert!(s.quant_rows_screened > 0, "quant tier engaged: {s:?}");
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -151,14 +151,19 @@ fn determinism_matrix_backend_kernel_warmstart() {
     // Satellite: one seeded synthetic dataset stepped through the full
     // retrieval matrix — backend ∈ {flat, batched, cluster} × kernel ∈
     // {on, off} × warm_start ∈ {on, off} × shards ∈ {1, 2, 7} ×
-    // resident ∈ {true, false} — must produce byte-identical golden
-    // subsets for a tick group at every sampling point, and byte-identical
-    // samples for a full single-sequence trajectory. This is the engine's
-    // exactness contract: every knob — the corpus shard count (per-shard
-    // heaps merge with a deterministic (distance, row id) tie-break) and
-    // corpus residency (a streamed corpus serves the exact bytes the
-    // resident one holds) included — is a performance/residency lever,
-    // never a result lever.
+    // resident ∈ {true, false} × quant ∈ {on, off} × simd ∈ {on, off} —
+    // must produce byte-identical golden subsets for a tick group at every
+    // sampling point, and byte-identical samples for a full
+    // single-sequence trajectory. This is the engine's exactness contract:
+    // every knob — the corpus shard count (per-shard heaps merge with a
+    // deterministic (distance, row id) tie-break), corpus residency (a
+    // streamed corpus serves the exact bytes the resident one holds), the
+    // int8 screen tier (sound bounds + exact f32 rescore), and the SIMD
+    // lanes (no FMA in the f32 accumulator, exact integer widening in the
+    // i8 one) included — is a performance/residency lever, never a result
+    // lever. The quant/simd axes vary on a representative slice (kernel
+    // on, warm on, shards=2) so the matrix stays bounded; every other
+    // cell runs the default (quant off, simd on).
     let ds = small("mnist-sim", 260, 11);
     let dir = std::env::temp_dir().join("golddiff_it_matrix_streamed");
     std::fs::remove_dir_all(&dir).ok();
@@ -177,7 +182,21 @@ fn determinism_matrix_backend_kernel_warmstart() {
         for &backend in RetrievalBackendKind::all() {
             for kernel in [true, false] {
                 for warm in [true, false] {
-                    for shards in [1usize, 2, 7] {
+                    for (shards, quant, simd) in [
+                        (1usize, false, true),
+                        (2, false, true),
+                        (7, false, true),
+                        (2, true, true),
+                        (2, true, false),
+                        (2, false, false),
+                    ] {
+                        // the non-default quant/simd cells (the last three)
+                        // run on a representative shards=2 slice with the
+                        // kernel and the warm screen on; the default cells
+                        // run everywhere
+                        if (quant || !simd) && !(kernel && warm) {
+                            continue;
+                        }
                         // the streamed arm re-opens the store data-free per
                         // combo (sources are stateful LRUs; a fresh one pins
                         // cold-start determinism too)
@@ -192,6 +211,8 @@ fn determinism_matrix_backend_kernel_warmstart() {
                             clusters: 8,
                             kernel,
                             shards,
+                            quant,
+                            simd,
                             ..BackendOpts::default()
                         };
                         let build = || {
@@ -227,7 +248,7 @@ fn determinism_matrix_backend_kernel_warmstart() {
                         );
                         let sample = traj.final_sample().to_vec();
                         let label = format!(
-                            "{}/kernel={kernel}/warm={warm}/shards={shards}/resident={resident}",
+                            "{}/kernel={kernel}/warm={warm}/shards={shards}/resident={resident}/quant={quant}/simd={simd}",
                             backend.name()
                         );
                         match &reference {
