@@ -786,6 +786,17 @@ pub fn refine_scan_masked(
 // the end-to-end result byte-identical to the f32 path (see
 // `index/README.md`, "Quantised tier" for the full argument).
 //
+// Two f32-arithmetic details keep the exclusions sound in practice, not
+// just in reals: bounds are formed through `quant_lb2`/`quant_ub2`, which
+// widen the sandwich by the `quant_guard` margin (the d̂² summation, the
+// sqrts and the subtraction each round, so a near-tight computed lb can
+// otherwise overshoot the true distance by accumulated ulps), and the
+// post-merge survivor refilter rejects only on *strict* `lb² > T` — a
+// threshold-heap member has lb² ≤ ub² ≤ T by construction, with equality
+// exactly when err == 0 (zero, constant and duplicate rows quantise
+// exactly), so rejecting on equality would self-reject the very rows the
+// threshold is made of.
+//
 // Scales are per ROW, not per block — strictly tighter than a shared
 // block scale (one outlier row cannot inflate its 31 neighbours' grids)
 // and layout-independent, so the same codes serve any shard plan.
@@ -807,6 +818,36 @@ pub fn quantise_row(row: &[f32], codes: &mut [i8]) -> (f32, f32) {
         err2 += r * r;
     }
     (scale, err2.sqrt())
+}
+
+/// Relative rounding margin for the sandwich bounds. The triangle
+/// inequality holds in real arithmetic, but `d̂²` is a `dim`-term f32
+/// summation and `d̂`, `err` and the subtraction each round — when a
+/// bound is near-tight the computed lb can exceed the true distance by
+/// accumulated ulps and wrongly exclude a row. `O(dim·ε)` covers the
+/// worst-case relative summation error plus slack for the scalar
+/// roundings; near-boundary rows are kept instead of dropped, costing
+/// one extra exact f32 rescore and never changing results.
+#[inline]
+pub(crate) fn quant_guard(dim: usize) -> f32 {
+    (dim as f32 + 8.0) * f32::EPSILON
+}
+
+/// Guarded squared lower bound from accumulated `d̂²` (full or partial —
+/// a partial sum only shrinks the bound) and the row's residual norm:
+/// deflate d̂ and inflate err by the margin before subtracting.
+#[inline]
+pub(crate) fn quant_lb2(acc: f32, err: f32, margin: f32) -> f32 {
+    let lb = (acc.sqrt() * (1.0 - margin) - err * (1.0 + margin)).max(0.0);
+    lb * lb
+}
+
+/// Guarded squared upper bound: inflate the sum by the margin so the
+/// threshold side of the sandwich stays an upper bound under rounding.
+#[inline]
+pub(crate) fn quant_ub2(acc: f32, err: f32, margin: f32) -> f32 {
+    let ub = (acc.sqrt() + err) * (1.0 + margin);
+    ub * ub
 }
 
 /// Int8 twin of a [`ProxyBlocks`] table: same dim-major `BLOCK_ROWS`-lane
@@ -970,14 +1011,14 @@ impl QuantRows {
         &self.errs
     }
 
-    /// Sound squared-distance sandwich `(lb², ub²)` on `‖q − x_gid‖²`.
+    /// Sound squared-distance sandwich `(lb², ub²)` on `‖q − x_gid‖²`,
+    /// rounding-guarded (see [`quant_guard`]).
     pub fn bounds2(&self, q: &[f32], gid: u32) -> (f32, f32) {
         let i = gid as usize;
         let d2 = crate::index::scan::quant_sqdist(q, self.codes_row(i), self.scales[i]);
-        let dhat = d2.sqrt();
+        let m = quant_guard(self.d);
         let err = self.errs[i];
-        let lb = (dhat - err).max(0.0);
-        (lb * lb, (dhat + err) * (dhat + err))
+        (quant_lb2(d2, err, m), quant_ub2(d2, err, m))
     }
 
     pub fn bytes(&self) -> usize {
@@ -1017,8 +1058,10 @@ impl QuantStats {
 /// excluded row is provably outside the true top-cap — the exclusion is
 /// sound irrespective of visit order or sharding. After the parallel
 /// chunks merge, survivors are filtered once more against the merged
-/// threshold, then re-streamed through [`refine_scan_masked`] on the f32
-/// twin blocks, so harvested distances are *exactly* the f32 kernel's.
+/// threshold (strictly — a heap member's lb² equals its own ub² when
+/// err == 0 and must still reach the rescore), then re-streamed through
+/// [`refine_scan_masked`] on the f32 twin blocks, so harvested distances
+/// are *exactly* the f32 kernel's.
 ///
 /// Strip early-exit re-uses the f32 kernel's retirement discipline with
 /// the bound made err-aware: partial sums only grow and the full-row
@@ -1077,6 +1120,7 @@ impl<'a> QuantScan<'a> {
         let codes = self.quant.codes(b);
         let scales = self.quant.scales(b);
         let errs = self.quant.errs(b);
+        let margin = quant_guard(dim);
         let mut acc = [[0.0f32; BLOCK_ROWS]; TILE_Q];
         let mut alive = [false; TILE_Q];
         alive[..nq].fill(true);
@@ -1108,10 +1152,10 @@ impl<'a> QuantScan<'a> {
                 }
                 // (√acc − err).max(0)² lower-bounds the full true
                 // distance even on a partial sum: acc only grows and the
-                // full-row err over-covers any prefix residual
-                let best = (0..rows).fold(f32::INFINITY, |m, lane| {
-                    let lb = (acc[qi][lane].sqrt() - errs[lane]).max(0.0);
-                    m.min(lb * lb)
+                // full-row err over-covers any prefix residual (guarded
+                // against f32 rounding, see `quant_guard`)
+                let best = (0..rows).fold(f32::INFINITY, |best, lane| {
+                    best.min(quant_lb2(acc[qi][lane], errs[lane], margin))
                 });
                 if best >= cutoff {
                     alive[qi] = false;
@@ -1143,21 +1187,20 @@ impl<'a> QuantScan<'a> {
                         continue;
                     }
                 }
-                let dhat = acc[qi][lane].sqrt();
+                let a = acc[qi][lane];
                 let err = errs[lane];
-                let lb = (dhat - err).max(0.0);
-                let lb2 = lb * lb;
+                let lb2 = quant_lb2(a, err, margin);
                 qst.rows_screened += 1;
                 if lb2 >= ubheaps[qi].worst() {
                     // cannot beat the cap-th best upper bound: provably
                     // outside the true top-cap (rejection accounted now;
-                    // the heap is full whenever worst() is finite, and
-                    // ub² ≥ lb² ≥ worst means a push would be a no-op)
+                    // the heap holds only *other* rows at this point and
+                    // is full whenever worst() is finite, so ≥ cap rows
+                    // are at least as close and a push would be a no-op)
                     qst.bound_rejects += 1;
                 } else {
                     let pos = (b * BLOCK_ROWS + lane) as u32;
-                    let ub = dhat + err;
-                    ubheaps[qi].push(ub * ub, pos);
+                    ubheaps[qi].push(quant_ub2(a, err, margin), pos);
                     surv[qi].push((pos, lb2));
                 }
             }
@@ -1215,7 +1258,15 @@ impl<'a> QuantScan<'a> {
         for (_, surv, _, _) in &chunks {
             for qi in 0..nq {
                 for &(pos, lb2) in &surv[qi] {
-                    if lb2 >= t_final[qi] {
+                    // strict: a threshold-heap member has lb² ≤ ub² ≤
+                    // t_final (its own ub² sits *in* the merged heap),
+                    // with equality exactly when err == 0 — zero,
+                    // constant and duplicate rows quantise exactly — so
+                    // rejecting on `>=` would self-reject heap members
+                    // and could empty the refine plan (e.g. cap = 1 with
+                    // an exactly-quantisable nearest row). Keep on
+                    // equality, matching quant_prefilter's `lb ≤ T` rule
+                    if lb2 > t_final[qi] {
                         qst.bound_rejects += 1;
                     } else {
                         *bits.entry(pos).or_insert(0) |= 1 << qi;
@@ -1656,7 +1707,15 @@ mod tests {
         // the AVX2 lanes perform the same IEEE ops per lane as the scalar
         // loop, so accumulators must match to the bit — on machines
         // without AVX2 this degenerates to scalar vs scalar and still
-        // guards the dispatch plumbing
+        // guards the dispatch plumbing. CI sets GOLDDIFF_REQUIRE_SIMD=1
+        // on AVX2-capable runners so that degeneration fails loudly there
+        // instead of silently skipping the bit-identity check
+        if std::env::var("GOLDDIFF_REQUIRE_SIMD").as_deref() == Ok("1") {
+            assert!(
+                simd::available(),
+                "GOLDDIFF_REQUIRE_SIMD=1 but AVX2 is unavailable — SIMD lanes were not exercised"
+            );
+        }
         let mut rng = Pcg64::new(91);
         for _ in 0..50 {
             let qv = rng.normal() * 10f32.powi(gen::usize_in(&mut rng, 0, 6) as i32 - 3);
@@ -1779,6 +1838,14 @@ mod tests {
                     table[r * dim..(r + 1) * dim].fill(c);
                 }
             }
+            if rows > 6 {
+                // exactly-quantisable degeneracies: an all-zero row and
+                // an exact duplicate pair (err == 0 ⇒ lb² == ub², the
+                // equality edge the keep-on-`lb ≤ T` rule must survive)
+                table[3 * dim..4 * dim].fill(0.0);
+                let dup: Vec<f32> = table[4 * dim..5 * dim].to_vec();
+                table[5 * dim..6 * dim].copy_from_slice(&dup);
+            }
             let qr = QuantRows::build(&table, rows, dim);
             let k = gen::usize_in(rng, 1, rows);
             let q: Vec<f32> = (0..dim).map(|_| mag * rng.normal()).collect();
@@ -1803,6 +1870,112 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn quant_screen_keeps_exactly_quantised_rows() {
+        // REVIEW regression: rows with err == 0 (all-zero, constant and
+        // exact-duplicate rows quantise exactly) have lb² bit-equal to
+        // ub², so with cap = 1 the nearest such row IS the merged
+        // threshold — a `>=` survivor refilter self-rejected it,
+        // emptying the refine plan and returning nothing at all.
+        let dim = 24usize;
+
+        // sharpest form: a 1-row corpus of one exactly-quantisable row
+        let one = vec![0.0f32; dim];
+        let blocks1 = ProxyBlocks::build(&one, 1, dim);
+        let quant1 = QuantBlocks::from_blocks(&blocks1);
+        let q1: Vec<&[f32]> = vec![&one[..]];
+        let classes1 = vec![None];
+        let qscan1 = QuantScan {
+            blocks: &blocks1,
+            quant: &quant1,
+            queries: &q1,
+            classes: &classes1,
+            labels: None,
+        };
+        let mut heaps = vec![BoundedMaxHeap::new(1)];
+        let mut qst = QuantStats::default();
+        let mut kst = KernelStats::default();
+        qscan1.screen_into(1, 1, None, &mut heaps, &mut qst, &mut kst);
+        let got: Vec<(f32, u32)> = heaps.remove(0).into_sorted();
+        assert_eq!(got, vec![(0.0, 0)], "exact-quantisable nearest row self-rejected");
+
+        // mixed corpus: zero row, constant row, an exact duplicate pair
+        // straddling blocks, Gaussian filler — queries sit exactly on
+        // the err == 0 rows so their own bound is the threshold
+        let mut rng = Pcg64::new(71);
+        let rows = 3 * BLOCK_ROWS + 5;
+        let mut table = random_table(&mut rng, rows, dim);
+        table[..dim].fill(0.0);
+        table[3 * dim..4 * dim].fill(0.75);
+        let dup: Vec<f32> = (0..dim).map(|_| rng.normal()).collect();
+        table[dim..2 * dim].copy_from_slice(&dup);
+        let far = (BLOCK_ROWS + 2) * dim;
+        table[far..far + dim].copy_from_slice(&dup);
+
+        let blocks = ProxyBlocks::build(&table, rows, dim);
+        let quant = QuantBlocks::from_blocks(&blocks);
+        let zero = vec![0.0f32; dim];
+        let consts = vec![0.75f32; dim];
+        let qs: Vec<&[f32]> = vec![&zero[..], &dup[..], &consts[..]];
+        let classes = vec![None; qs.len()];
+        let f32_scan = KernelScan {
+            blocks: &blocks,
+            queries: &qs,
+            classes: &classes,
+            labels: None,
+        };
+        let qscan = QuantScan {
+            blocks: &blocks,
+            quant: &quant,
+            queries: &qs,
+            classes: &classes,
+            labels: None,
+        };
+
+        // cap = 1 is tie-free per query (first-seen wins among exact
+        // duplicates in both paths): compare ids exactly
+        let (want1, _) = f32_scan.top_m(1, 1);
+        assert_eq!(want1[0], vec![0], "zero query must find the zero row");
+        assert_eq!(want1[1], vec![1], "dup query must find the first duplicate");
+        assert_eq!(want1[2], vec![3], "const query must find the constant row");
+
+        for cap in [1usize, 2, 5] {
+            let (want, _) = f32_scan.top_m(cap, 2);
+            for threads in [1usize, 3] {
+                let mut heaps: Vec<BoundedMaxHeap> =
+                    (0..qs.len()).map(|_| BoundedMaxHeap::new(cap)).collect();
+                let mut qst = QuantStats::default();
+                let mut kst = KernelStats::default();
+                qscan.screen_into(cap, threads, None, &mut heaps, &mut qst, &mut kst);
+                let got: Vec<Vec<u32>> = heaps
+                    .into_iter()
+                    .map(|h| h.into_sorted().into_iter().map(|(_, i)| i).collect())
+                    .collect();
+                for (qi, ids) in got.iter().enumerate() {
+                    assert_eq!(
+                        ids.len(),
+                        cap.min(rows),
+                        "cap={cap} threads={threads} qi={qi}: refine plan lost rows"
+                    );
+                }
+                // the duplicate pair ties in distance, so rank order at
+                // the tie is heap-shape dependent — compare id *sets*
+                // (membership is unambiguous on this corpus)
+                let sort = |v: &[Vec<u32>]| -> Vec<Vec<u32>> {
+                    v.iter()
+                        .map(|ids| {
+                            let mut s = ids.clone();
+                            s.sort_unstable();
+                            s
+                        })
+                        .collect()
+                };
+                assert_eq!(sort(&got), sort(&want), "cap={cap} threads={threads}");
+                assert_eq!(qst.rows_screened, qst.bound_rejects + qst.rescore_rows);
+            }
+        }
     }
 
     #[test]
