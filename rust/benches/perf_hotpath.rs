@@ -770,6 +770,50 @@ fn bench_quant_simd(ds: &golddiff::Dataset) {
     );
 }
 
+/// Section 0f: what the v5 per-section checksums cost — `store::load`
+/// (which verifies every section on read) against the raw CRC-32 pass over
+/// the same bytes, so the verify share of a load is priced explicitly. No
+/// runtime required.
+fn bench_checksum(ds: &golddiff::Dataset) {
+    use golddiff::data::store;
+    use golddiff::util::crc::crc32;
+
+    let dir = std::env::temp_dir().join("golddiff_bench_checksum");
+    std::fs::remove_dir_all(&dir).ok();
+    let path = store::store_path(&dir, "bench-corpus");
+    store::save_sharded(ds, &path, 4).unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+
+    println!(
+        "-- v5 checksum overhead ({:.1} MiB store) --",
+        bytes.len() as f64 / (1024.0 * 1024.0)
+    );
+    let t_crc = bench("raw crc32 over the store bytes", 10, || {
+        let _ = std::hint::black_box(crc32(&bytes));
+    });
+    let t_load = bench("store::load (verifies every section)", 10, || {
+        let _ = std::hint::black_box(store::load(&path).unwrap());
+    });
+    let gb_per_s = bytes.len() as f64 / t_crc.max(1e-12) / 1e9;
+    println!(
+        "{:>58}  -> {gb_per_s:.2} GB/s crc; verify ≈ {:.1}% of a full load",
+        "",
+        100.0 * t_crc / t_load.max(1e-12)
+    );
+    benchlib::emit_bench(
+        "checksum_overhead",
+        &[
+            ("n", ds.n as f64),
+            ("bytes", bytes.len() as f64),
+            ("crc_secs", t_crc),
+            ("crc_gb_per_s", gb_per_s),
+            ("load_secs", t_load),
+            ("overhead_frac", t_crc / t_load.max(1e-12)),
+        ],
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
 fn main() -> anyhow::Result<()> {
     // GOLDDIFF_BENCH_N shrinks the corpus for CI smoke runs (synthesised
     // directly, bypassing the on-disk store so sizes never conflict)
@@ -811,6 +855,10 @@ fn main() -> anyhow::Result<()> {
     // 0e. quantised screen/refine tier vs f32, and simd vs scalar lanes
     // (no runtime required; byte-equality asserted before timing)
     bench_quant_simd(&ds);
+
+    // 0f. v5 per-section checksum verification overhead (no runtime
+    // required)
+    bench_checksum(&ds);
 
     // 1. coarse scan vs threads
     for threads in [1usize, 2, 4, 8] {

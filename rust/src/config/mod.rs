@@ -72,6 +72,33 @@ pub fn env_usize(name: &str, default: usize) -> usize {
     }
 }
 
+/// Float default with an environment override — the CI `tier1-faults` leg
+/// runs the suite under `GOLDDIFF_FAULT_RATE=0.05` so every streamed read
+/// exercises the transient-fault retry path. A set but unparsable value
+/// warns once to stderr and serves the default.
+pub fn env_f64(name: &str, default: f64) -> f64 {
+    match std::env::var(name) {
+        Ok(v) => v.parse().unwrap_or_else(|_| {
+            warn_env_once(name, &v, "a number", &default.to_string());
+            default
+        }),
+        Err(_) => default,
+    }
+}
+
+/// u64 default with an environment override — `GOLDDIFF_FAULT_SEED` keys
+/// the deterministic fault schedule. A set but unparsable value warns once
+/// to stderr and serves the default.
+pub fn env_u64(name: &str, default: u64) -> u64 {
+    match std::env::var(name) {
+        Ok(v) => v.parse().unwrap_or_else(|_| {
+            warn_env_once(name, &v, "an unsigned integer", &default.to_string());
+            default
+        }),
+        Err(_) => default,
+    }
+}
+
 /// Engine-level configuration (the launcher's config file).
 #[derive(Debug, Clone, PartialEq)]
 pub struct EngineConfig {
@@ -513,6 +540,24 @@ mod tests {
         std::env::set_var("GOLDDIFF_TEST_BAD_USIZE_ONLY", "-3");
         assert_eq!(env_usize("GOLDDIFF_TEST_BAD_USIZE_ONLY", 2), 2);
         std::env::remove_var("GOLDDIFF_TEST_BAD_USIZE_ONLY");
+    }
+
+    #[test]
+    fn env_f64_and_u64_parse_and_fall_back() {
+        // unset → defaults win
+        assert_eq!(env_f64("GOLDDIFF_TEST_F64_THAT_IS_NEVER_SET", 0.25), 0.25);
+        assert_eq!(env_u64("GOLDDIFF_TEST_U64_THAT_IS_NEVER_SET", 7), 7);
+        // vars only this test touches, so parallel tests cannot race
+        std::env::set_var("GOLDDIFF_TEST_F64_PARSE_ONLY", "0.05");
+        assert_eq!(env_f64("GOLDDIFF_TEST_F64_PARSE_ONLY", 0.0), 0.05);
+        std::env::set_var("GOLDDIFF_TEST_F64_PARSE_ONLY", "not-a-rate");
+        assert_eq!(env_f64("GOLDDIFF_TEST_F64_PARSE_ONLY", 0.5), 0.5);
+        std::env::remove_var("GOLDDIFF_TEST_F64_PARSE_ONLY");
+        std::env::set_var("GOLDDIFF_TEST_U64_PARSE_ONLY", "42");
+        assert_eq!(env_u64("GOLDDIFF_TEST_U64_PARSE_ONLY", 0), 42);
+        std::env::set_var("GOLDDIFF_TEST_U64_PARSE_ONLY", "-1");
+        assert_eq!(env_u64("GOLDDIFF_TEST_U64_PARSE_ONLY", 9), 9);
+        std::env::remove_var("GOLDDIFF_TEST_U64_PARSE_ONLY");
     }
 
     #[test]

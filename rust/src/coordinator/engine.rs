@@ -16,6 +16,7 @@
 //! "decode-like" small-k steps.
 
 use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -23,7 +24,7 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-use super::batcher::{group_tick, SeqKey};
+use super::batcher::{group_tick, Group, SeqKey};
 use super::queue::{BoundedQueue, SubmitError};
 use super::request::{GenRequest, GenResponse, StepTelemetry};
 use super::stats::EngineStats;
@@ -55,6 +56,15 @@ struct ActiveSeq {
     telemetry: Vec<StepTelemetry>,
     submitted: Instant,
     started: Instant,
+    /// set when this sequence's group tick failed or panicked; the
+    /// completion sweep answers it with `"error":<reason>` and drops it
+    failed: Option<&'static str>,
+}
+
+/// Poison-tolerant stats lock: a recovered panic inside a worker tick must
+/// not wedge telemetry for the rest of the process.
+fn lock_stats(stats: &Mutex<EngineStats>) -> std::sync::MutexGuard<'_, EngineStats> {
+    stats.lock().unwrap_or_else(|p| p.into_inner())
 }
 
 pub struct Engine {
@@ -147,7 +157,7 @@ impl Engine {
         let queue = Arc::new(BoundedQueue::<Submission>::new(cfg.queue_depth));
         let stats = Arc::new(Mutex::new(EngineStats::new()));
         {
-            let mut st = stats.lock().unwrap();
+            let mut st = lock_stats(&stats);
             st.backend = backend_kind.name().to_string();
             st.shards = cfg.shards.max(1);
             st.resident = ds.is_resident();
@@ -155,6 +165,12 @@ impl Engine {
             // on whether the tiers were on (the backend build gates them
             // on `kernel` too, which the counters themselves reveal)
             st.quant = cfg.quant;
+            // load-time integrity outcome: tiers that stood down on a
+            // checksum mismatch, and the mismatch count itself (streamed
+            // read failures add on top via record_source)
+            st.degraded_tiers = ds.degraded.clone();
+            st.checksum_failures_load = ds.checksum_failures;
+            st.checksum_failures = ds.checksum_failures;
         }
         let d = ds.d;
         let preset = cfg.preset.clone();
@@ -187,14 +203,28 @@ impl Engine {
         seed: u64,
         class: Option<u32>,
     ) -> Result<mpsc::Receiver<GenResponse>> {
+        self.submit_with_deadline(method, seed, class, None)
+    }
+
+    /// `submit` with a per-request deadline: a request still queued when
+    /// `deadline_ms` elapses is dropped at dequeue — before any retrieval
+    /// work — and answered `"error":"deadline_exceeded"`.
+    pub fn submit_with_deadline(
+        &self,
+        method: DenoiserKind,
+        seed: u64,
+        class: Option<u32>,
+        deadline_ms: Option<u64>,
+    ) -> Result<mpsc::Receiver<GenResponse>> {
         let id = self
             .next_id
             .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         let mut req = GenRequest::new(id, method, seed);
         req.class = class;
+        req.deadline_ms = deadline_ms;
         let (tx, rx) = mpsc::channel();
         {
-            let mut st = self.stats.lock().unwrap();
+            let mut st = lock_stats(&self.stats);
             st.submitted += 1;
         }
         self.queue
@@ -214,14 +244,26 @@ impl Engine {
         seed: u64,
         class: Option<u32>,
     ) -> Result<mpsc::Receiver<GenResponse>, SubmitError> {
+        self.try_submit_with_deadline(method, seed, class, None)
+    }
+
+    /// Fail-fast submit with an optional deadline (server path).
+    pub fn try_submit_with_deadline(
+        &self,
+        method: DenoiserKind,
+        seed: u64,
+        class: Option<u32>,
+        deadline_ms: Option<u64>,
+    ) -> Result<mpsc::Receiver<GenResponse>, SubmitError> {
         let id = self
             .next_id
             .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         let mut req = GenRequest::new(id, method, seed);
         req.class = class;
+        req.deadline_ms = deadline_ms;
         let (tx, rx) = mpsc::channel();
         {
-            let mut st = self.stats.lock().unwrap();
+            let mut st = lock_stats(&self.stats);
             st.submitted += 1;
         }
         match self.queue.try_submit(Submission {
@@ -231,7 +273,7 @@ impl Engine {
         }) {
             Ok(()) => Ok(rx),
             Err(e) => {
-                self.stats.lock().unwrap().rejected += 1;
+                lock_stats(&self.stats).rejected += 1;
                 Err(e)
             }
         }
@@ -249,7 +291,14 @@ impl Engine {
     }
 
     pub fn stats_json(&self) -> crate::util::json::Json {
-        self.stats.lock().unwrap().to_json()
+        lock_stats(&self.stats).to_json()
+    }
+
+    /// Liveness + degradation summary (the `health` op): `ok` when every
+    /// optional tier loaded clean, `degraded` with the stood-down tiers
+    /// otherwise, plus the fault counters.
+    pub fn health_json(&self) -> crate::util::json::Json {
+        lock_stats(&self.stats).health_json()
     }
 
     pub fn queue_len(&self) -> usize {
@@ -315,6 +364,20 @@ fn executor_loop(
         };
         let now = Instant::now();
         for sub in newly {
+            // deadline gate: an expired request is answered here, before
+            // any noise init or retrieval work happens on its behalf
+            if let Some(dl) = sub.req.deadline_ms {
+                let waited = sub.submitted.elapsed();
+                if waited.as_millis() as u64 >= dl {
+                    lock_stats(&stats).deadline_expired += 1;
+                    let _ = sub.reply.send(GenResponse::failed(
+                        sub.req.id,
+                        "deadline_exceeded",
+                        waited.as_secs_f64(),
+                    ));
+                    continue;
+                }
+            }
             let mut rng = Pcg64::with_stream(sub.req.seed, 0x5a3);
             let x = sampler::init_noise(ds.d, &mut rng);
             active.push(ActiveSeq {
@@ -326,6 +389,7 @@ fn executor_loop(
                 telemetry: Vec::with_capacity(sched.steps),
                 submitted: sub.submitted,
                 started: now,
+                failed: None,
             });
         }
         if active.is_empty() {
@@ -347,81 +411,72 @@ fn executor_loop(
             })
             .collect();
         for group in group_tick(&keys) {
-            let den = denoisers.entry(group.method).or_insert_with(|| {
-                XlaDenoiser::new(std::rc::Rc::clone(&rt), &ds, group.method)
-                    .expect("denoiser init")
-                    .with_budget(budget.clone())
-                    .with_retrieval(Arc::clone(&backend))
-                    .with_warm_start(warm_start)
-            });
-            // one batched retrieval for the whole group, then dispatch —
-            // every sequence here shares (method, step, k-bucket)
-            let xs: Vec<&[f32]> = group.seqs.iter().map(|&si| active[si].x.as_slice()).collect();
-            let ctx_store: Vec<StepContext> = group
-                .seqs
-                .iter()
-                .map(|&si| StepContext {
-                    ds: &ds,
-                    sched: &sched,
-                    step: active[si].step,
-                    class: active[si].req.class,
-                })
-                .collect();
-            let ctxs: Vec<&StepContext> = ctx_store.iter().collect();
-            let results = den.step_group(&xs, &ctxs).expect("dispatch failed");
-            drop(ctxs);
-            drop(xs);
-            let group_scan: f64 = results.iter().map(|(_, tel)| tel.scan_secs).sum();
-            for (&si, (out, tel)) in group.seqs.iter().zip(results) {
-                let seq = &mut active[si];
-                seq.telemetry.push(StepTelemetry {
-                    k_bucket: tel.k_bucket,
-                    m_used: tel.m_used,
-                    k_used: tel.k_used,
-                    scan_secs: tel.scan_secs,
-                    dispatch_secs: tel.dispatch_secs,
-                    entropy: out.stats.entropy,
-                    top1_weight: out.stats.top1_weight,
-                });
-                // the graph already produced the deterministic DDIM update;
-                // apply ancestral noise on the host only when eta > 0
-                seq.x = if seq.req.eta > 0.0 {
-                    sampler::ddim_update(
-                        &seq.x,
-                        &out.f_hat,
-                        sched.alpha_bar(seq.step),
-                        sched.alpha_prev(seq.step),
-                        seq.req.eta,
-                        &mut seq.rng,
-                    )
-                } else {
-                    out.x_prev
-                };
-                seq.step += 1;
-                let mut st = stats.lock().unwrap();
-                st.steps_executed += 1;
-                st.scan_time.record_secs(tel.scan_secs);
-                st.dispatch_time.record_secs(tel.dispatch_secs);
+            // a failing (or panicking) group must not take the engine down:
+            // its sequences answer `"error":"internal"` and serving
+            // continues. AssertUnwindSafe is sound here because on any
+            // unwind the group's state is discarded wholesale — its
+            // sequences are failed and its denoiser is rebuilt fresh.
+            let ticked = catch_unwind(AssertUnwindSafe(|| {
+                step_group_once(
+                    &group,
+                    &mut denoisers,
+                    &rt,
+                    &ds,
+                    &sched,
+                    &budget,
+                    &backend,
+                    warm_start,
+                    &mut active,
+                    &stats,
+                )
+            }));
+            let failed = match ticked {
+                Ok(Ok(())) => false,
+                Ok(Err(err)) => {
+                    eprintln!(
+                        "golddiff: engine: group tick failed ({} seq(s)): {err:#}",
+                        group.seqs.len()
+                    );
+                    true
+                }
+                Err(_panic) => {
+                    // the panic payload already printed via the hook
+                    eprintln!(
+                        "golddiff: engine: recovered a panicking group tick ({} seq(s))",
+                        group.seqs.len()
+                    );
+                    lock_stats(&stats).panics_recovered += 1;
+                    true
+                }
+            };
+            if failed {
+                // the denoiser may hold half-updated caches — drop it and
+                // let the next request for this method rebuild it
+                denoisers.remove(&group.method);
+                for &si in &group.seqs {
+                    active[si].failed = Some("internal");
+                }
             }
-            let mut st = stats.lock().unwrap();
-            st.retrieval_time.record_secs(group_scan);
-            st.record_backend(backend.stats());
-            // streamed corpora additionally surface the row source's own
-            // residency counters (the authoritative record when the
-            // monolithic backends stream without a shard layer)
-            st.record_source(ds.source_stats());
         }
 
         // ---- completions -------------------------------------------------
         let total_steps = sched.steps;
         let mut i = 0;
         while i < active.len() {
+            if let Some(reason) = active[i].failed {
+                let seq = active.swap_remove(i);
+                let latency = seq.submitted.elapsed().as_secs_f64();
+                let _ = seq
+                    .reply
+                    .send(GenResponse::failed(seq.req.id, reason, latency));
+                continue;
+            }
             if active[i].step >= total_steps {
                 let seq = active.swap_remove(i);
                 let latency = seq.submitted.elapsed().as_secs_f64();
                 let queue_delay = seq.started.duration_since(seq.submitted).as_secs_f64();
                 {
-                    let mut st = stats.lock().unwrap();
+                    let mut st = lock_stats(&stats);
                     st.completed += 1;
                     st.latency.record_secs(latency);
                     st.queue_delay.record_secs(queue_delay);
@@ -432,12 +487,98 @@ fn executor_loop(
                     steps: seq.telemetry,
                     latency_secs: latency,
                     queue_secs: queue_delay,
+                    error: None,
                 });
             } else {
                 i += 1;
             }
         }
     }
+}
+
+/// One group's scheduler tick: ensure the denoiser exists, run one batched
+/// retrieval + dispatch for every sequence in the group, fold the results
+/// back into the live state. Any error propagates to the caller, which
+/// fails the group without killing the engine.
+#[allow(clippy::too_many_arguments)]
+fn step_group_once(
+    group: &Group,
+    denoisers: &mut HashMap<DenoiserKind, XlaDenoiser>,
+    rt: &std::rc::Rc<Runtime>,
+    ds: &Arc<Dataset>,
+    sched: &NoiseSchedule,
+    budget: &BudgetSchedule,
+    backend: &Arc<dyn RetrievalBackend>,
+    warm_start: bool,
+    active: &mut [ActiveSeq],
+    stats: &Arc<Mutex<EngineStats>>,
+) -> Result<()> {
+    if !denoisers.contains_key(&group.method) {
+        let den = XlaDenoiser::new(std::rc::Rc::clone(rt), ds, group.method)
+            .context("denoiser init")?
+            .with_budget(budget.clone())
+            .with_retrieval(Arc::clone(backend))
+            .with_warm_start(warm_start);
+        denoisers.insert(group.method, den);
+    }
+    let den = denoisers.get_mut(&group.method).expect("just inserted");
+    // one batched retrieval for the whole group, then dispatch —
+    // every sequence here shares (method, step, k-bucket)
+    let xs: Vec<&[f32]> = group.seqs.iter().map(|&si| active[si].x.as_slice()).collect();
+    let ctx_store: Vec<StepContext> = group
+        .seqs
+        .iter()
+        .map(|&si| StepContext {
+            ds,
+            sched,
+            step: active[si].step,
+            class: active[si].req.class,
+        })
+        .collect();
+    let ctxs: Vec<&StepContext> = ctx_store.iter().collect();
+    let results = den.step_group(&xs, &ctxs).context("dispatch failed")?;
+    drop(ctxs);
+    drop(xs);
+    let group_scan: f64 = results.iter().map(|(_, tel)| tel.scan_secs).sum();
+    for (&si, (out, tel)) in group.seqs.iter().zip(results) {
+        let seq = &mut active[si];
+        seq.telemetry.push(StepTelemetry {
+            k_bucket: tel.k_bucket,
+            m_used: tel.m_used,
+            k_used: tel.k_used,
+            scan_secs: tel.scan_secs,
+            dispatch_secs: tel.dispatch_secs,
+            entropy: out.stats.entropy,
+            top1_weight: out.stats.top1_weight,
+        });
+        // the graph already produced the deterministic DDIM update;
+        // apply ancestral noise on the host only when eta > 0
+        seq.x = if seq.req.eta > 0.0 {
+            sampler::ddim_update(
+                &seq.x,
+                &out.f_hat,
+                sched.alpha_bar(seq.step),
+                sched.alpha_prev(seq.step),
+                seq.req.eta,
+                &mut seq.rng,
+            )
+        } else {
+            out.x_prev
+        };
+        seq.step += 1;
+        let mut st = lock_stats(stats);
+        st.steps_executed += 1;
+        st.scan_time.record_secs(tel.scan_secs);
+        st.dispatch_time.record_secs(tel.dispatch_secs);
+    }
+    let mut st = lock_stats(stats);
+    st.retrieval_time.record_secs(group_scan);
+    st.record_backend(backend.stats());
+    // streamed corpora additionally surface the row source's own
+    // residency counters (the authoritative record when the
+    // monolithic backends stream without a shard layer)
+    st.record_source(ds.source_stats());
+    Ok(())
 }
 
 #[cfg(test)]
@@ -668,6 +809,123 @@ mod tests {
             ..Default::default()
         };
         assert!(Engine::start(cfg).is_err());
+    }
+
+    #[test]
+    fn expired_deadline_is_dropped_before_any_retrieval() {
+        let Some(eng) = engine() else { return };
+        // deadline 0: already expired when the executor dequeues it
+        let rx = eng
+            .submit_with_deadline(DenoiserKind::GoldDiff, 7, None, Some(0))
+            .unwrap();
+        let resp = rx.recv().unwrap();
+        assert_eq!(resp.error.as_deref(), Some("deadline_exceeded"));
+        assert!(resp.sample.is_empty() && resp.steps.is_empty());
+        let j = eng.stats_json();
+        assert_eq!(j.get("deadline_expired").unwrap().as_f64(), Some(1.0));
+        assert_eq!(
+            j.get("retrieval_queries").unwrap().as_f64(),
+            Some(0.0),
+            "an expired request must trigger zero retrieval work"
+        );
+        assert_eq!(j.get("steps_executed").unwrap().as_f64(), Some(0.0));
+        // the engine still serves after the drop
+        let ok = eng.generate(DenoiserKind::GoldDiff, 7, None).unwrap();
+        assert!(ok.error.is_none());
+        assert_eq!(ok.sample.len(), 2);
+        eng.shutdown();
+    }
+
+    #[test]
+    fn panicking_request_answers_internal_and_engine_keeps_serving() {
+        let Some(eng) = engine() else { return };
+        // moons has 2 classes: class 9999 indexes class_rows out of range
+        // inside the retrieval step and panics on the executor thread — the
+        // request must answer "internal" and the engine must stay up
+        let resp = eng.generate(DenoiserKind::GoldDiff, 11, Some(9999)).unwrap();
+        assert_eq!(resp.error.as_deref(), Some("internal"));
+        assert!(resp.sample.is_empty());
+        let j = eng.stats_json();
+        assert!(j.get("panics_recovered").unwrap().as_f64().unwrap() >= 1.0);
+        // same engine, fresh denoiser, clean request
+        let ok = eng.generate(DenoiserKind::GoldDiff, 11, None).unwrap();
+        assert!(ok.error.is_none());
+        assert!(ok.sample.iter().all(|v| v.is_finite()));
+        eng.shutdown();
+    }
+
+    /// Flip one payload byte in the middle of a named store section.
+    fn corrupt_section(path: &std::path::Path, section: &str) {
+        use crate::util::json::Json;
+        let mut bytes = std::fs::read(path).unwrap();
+        let hlen = u32::from_le_bytes([bytes[4], bytes[5], bytes[6], bytes[7]]) as usize;
+        let header =
+            crate::util::json::parse(std::str::from_utf8(&bytes[8..8 + hlen]).unwrap()).unwrap();
+        let sections = header.get("sections").and_then(Json::as_arr).unwrap();
+        let sec = sections
+            .iter()
+            .find(|s| s.get("name").and_then(Json::as_str) == Some(section))
+            .unwrap_or_else(|| panic!("no section `{section}`"));
+        let off = sec.get("offset").and_then(Json::as_f64).unwrap() as usize;
+        let len = sec.get("len").and_then(Json::as_f64).unwrap() as usize * 4;
+        bytes[8 + hlen + off + len / 2] ^= 0x40;
+        std::fs::write(path, bytes).unwrap();
+    }
+
+    #[test]
+    fn corrupt_quant_tier_degrades_health_and_serves_identically() {
+        // Tentpole acceptance: a store with a corrupted optional section
+        // still starts, health reports the stood-down tier, and the output
+        // is byte-identical to the quant-off exact path
+        if !std::path::Path::new("artifacts/manifest.json").exists() {
+            return;
+        }
+        let data_dir = std::env::temp_dir().join("golddiff_engine_degraded_test");
+        std::fs::remove_dir_all(&data_dir).ok();
+        let cfg = EngineConfig {
+            preset: "moons".into(),
+            data_dir: data_dir.clone(),
+            ..Default::default()
+        };
+        // clean start synthesises + persists the store, gives the baseline
+        let eng = Engine::start(cfg.clone()).unwrap();
+        let want = eng.generate(DenoiserKind::GoldDiff, 99, None).unwrap();
+        eng.shutdown();
+
+        corrupt_section(&store::store_path(&data_dir, "moons"), "quant_err");
+        let eng = Engine::start(cfg).unwrap();
+        let h = eng.health_json();
+        assert_eq!(
+            h.get("status").and_then(crate::util::json::Json::as_str),
+            Some("degraded")
+        );
+        let tiers = h.get("degraded_tiers").unwrap().as_arr().unwrap();
+        assert!(
+            tiers
+                .iter()
+                .any(|t| t.as_str() == Some("quant")),
+            "health must name the stood-down tier"
+        );
+        assert!(h.get("checksum_failures").unwrap().as_f64().unwrap() >= 1.0);
+        let got = eng.generate(DenoiserKind::GoldDiff, 99, None).unwrap();
+        assert!(got.error.is_none());
+        assert_eq!(got.sample, want.sample, "exact f32 path, byte-identical");
+        eng.shutdown();
+        std::fs::remove_dir_all(&data_dir).ok();
+    }
+
+    #[test]
+    fn health_starts_ok() {
+        let Some(eng) = engine() else { return };
+        let h = eng.health_json();
+        assert_eq!(h.get("status").and_then(crate::util::json::Json::as_str), Some("ok"));
+        assert!(h
+            .get("degraded_tiers")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .is_empty());
+        eng.shutdown();
     }
 
     #[test]

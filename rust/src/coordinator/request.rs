@@ -14,6 +14,11 @@ pub struct GenRequest {
     pub class: Option<u32>,
     /// DDIM stochasticity
     pub eta: f32,
+    /// per-request deadline, measured from submission: a request still
+    /// queued when it expires is dropped at dequeue — before any retrieval
+    /// work — and answered `"error":"deadline_exceeded"`. `None` = no
+    /// deadline (the seed behaviour).
+    pub deadline_ms: Option<u64>,
 }
 
 impl GenRequest {
@@ -24,11 +29,17 @@ impl GenRequest {
             seed,
             class: None,
             eta: 0.0,
+            deadline_ms: None,
         }
     }
 
     pub fn with_class(mut self, class: u32) -> Self {
         self.class = Some(class);
+        self
+    }
+
+    pub fn with_deadline_ms(mut self, ms: u64) -> Self {
+        self.deadline_ms = Some(ms);
         self
     }
 
@@ -40,6 +51,9 @@ impl GenRequest {
             .set("eta", self.eta as f64);
         if let Some(c) = self.class {
             j.set("class", c as usize);
+        }
+        if let Some(dl) = self.deadline_ms {
+            j.set("deadline_ms", dl);
         }
         j
     }
@@ -56,6 +70,7 @@ impl GenRequest {
             seed: j.get("seed").and_then(Json::as_f64).unwrap_or(0.0) as u64,
             class: j.get("class").and_then(Json::as_f64).map(|c| c as u32),
             eta: j.get("eta").and_then(Json::as_f64).unwrap_or(0.0) as f32,
+            deadline_ms: j.get("deadline_ms").and_then(Json::as_f64).map(|v| v as u64),
         })
     }
 }
@@ -72,7 +87,9 @@ pub struct StepTelemetry {
     pub top1_weight: f32,
 }
 
-/// The finished generation.
+/// The finished generation — or its failure. `error` is `None` on
+/// success; a failed request carries the machine-readable reason
+/// (`"deadline_exceeded"`, `"internal"`) with an empty sample.
 #[derive(Debug, Clone)]
 pub struct GenResponse {
     pub id: u64,
@@ -82,9 +99,23 @@ pub struct GenResponse {
     pub latency_secs: f64,
     /// queueing delay before the first step
     pub queue_secs: f64,
+    /// failure reason; `None` = the request completed
+    pub error: Option<String>,
 }
 
 impl GenResponse {
+    /// A failure reply: empty sample, no steps, the reason attached.
+    pub fn failed(id: u64, error: &str, latency_secs: f64) -> GenResponse {
+        GenResponse {
+            id,
+            sample: Vec::new(),
+            steps: Vec::new(),
+            latency_secs,
+            queue_secs: latency_secs,
+            error: Some(error.to_string()),
+        }
+    }
+
     pub fn to_json(&self) -> Json {
         let mut j = Json::obj();
         j.set("id", self.id)
@@ -92,6 +123,9 @@ impl GenResponse {
             .set("queue_secs", self.queue_secs)
             .set("steps", self.steps.len())
             .set("sample", self.sample.as_slice());
+        if let Some(e) = &self.error {
+            j.set("error", e.as_str());
+        }
         j
     }
 }
@@ -108,6 +142,14 @@ mod tests {
         assert_eq!(rt.method, DenoiserKind::GoldDiff);
         assert_eq!(rt.seed, 7);
         assert_eq!(rt.class, Some(3));
+        assert_eq!(rt.deadline_ms, None, "no deadline unless requested");
+    }
+
+    #[test]
+    fn deadline_roundtrips_through_json() {
+        let r = GenRequest::new(1, DenoiserKind::GoldDiff, 2).with_deadline_ms(250);
+        let rt = GenRequest::from_json(&r.to_json()).unwrap();
+        assert_eq!(rt.deadline_ms, Some(250));
     }
 
     #[test]
@@ -124,8 +166,21 @@ mod tests {
             steps: vec![],
             latency_secs: 0.1,
             queue_secs: 0.01,
+            error: None,
         };
         let j = r.to_json();
         assert_eq!(j.get("sample").unwrap().as_arr().unwrap().len(), 2);
+        assert!(j.get("error").is_none(), "success replies carry no error");
+    }
+
+    #[test]
+    fn failed_response_carries_the_reason() {
+        let r = GenResponse::failed(9, "deadline_exceeded", 0.05);
+        assert!(r.sample.is_empty() && r.steps.is_empty());
+        let j = r.to_json();
+        assert_eq!(
+            j.get("error").and_then(Json::as_str),
+            Some("deadline_exceeded")
+        );
     }
 }

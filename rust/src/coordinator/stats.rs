@@ -59,6 +59,25 @@ pub struct EngineStats {
     pub quant_rows_screened: u64,
     pub rescore_rows: u64,
     pub bound_rejects: u64,
+    /// optional tiers that stood down at store load ("quant", "ivf",
+    /// "shard_ivf") because their sections were corrupt — the `health` op
+    /// reports `degraded` while this is non-empty
+    pub degraded_tiers: Vec<String>,
+    /// checksum mismatches seen while loading the store (optional
+    /// sections; required-section mismatches fail the start instead)
+    pub checksum_failures_load: u64,
+    /// checksum mismatches on streamed reads (each retried; persistent
+    /// corruption fails the request, never serves rows)
+    pub checksum_failures: u64,
+    /// transient streamed-read failures recovered by the bounded retry
+    pub retries: u64,
+    /// faults the deterministic injector put into streamed reads
+    pub faults_injected: u64,
+    /// requests dropped at dequeue because their deadline had expired
+    pub deadline_expired: u64,
+    /// panicking request groups caught by the worker's `catch_unwind`
+    /// (each answered `"error":"internal"`; the engine keeps serving)
+    pub panics_recovered: u64,
 }
 
 impl Default for EngineStats {
@@ -96,6 +115,13 @@ impl Default for EngineStats {
             quant_rows_screened: 0,
             rescore_rows: 0,
             bound_rejects: 0,
+            degraded_tiers: Vec::new(),
+            checksum_failures_load: 0,
+            checksum_failures: 0,
+            retries: 0,
+            faults_injected: 0,
+            deadline_expired: 0,
+            panics_recovered: 0,
         }
     }
 }
@@ -143,16 +169,52 @@ impl EngineStats {
         self.quant_rows_screened = snap.quant_rows_screened;
         self.rescore_rows = snap.rescore_rows;
         self.bound_rejects = snap.bound_rejects;
+        self.retries = snap.retries;
+        self.checksum_failures = self.checksum_failures_load + snap.checksum_failures;
+        self.faults_injected = snap.faults_injected;
     }
 
     /// Record the row source's residency snapshot — the authoritative
     /// out-of-core counters for a streamed corpus (`None` = resident, a
-    /// no-op so backend-layer numbers stand).
+    /// no-op so backend-layer numbers stand). Runs after `record_backend`
+    /// in the engine loop, so these assignments win for monolithic
+    /// streamed backends whose cache stats carry no source counters.
     pub fn record_source(&mut self, snap: Option<crate::data::rows::RowSourceStats>) {
         if let Some(s) = snap {
             self.rows_streamed = s.rows_streamed;
             self.peak_row_bytes = s.peak_row_bytes;
+            self.retries = s.retries;
+            self.checksum_failures = self.checksum_failures_load + s.checksum_failures;
+            self.faults_injected = s.faults_injected;
         }
+    }
+
+    /// The `{"op":"health"}` payload: `ok` while every tier runs at full
+    /// fidelity, `degraded` when optional tiers stood down at load —
+    /// serving continues either way (on the exact f32 path), which is the
+    /// point: degradation is a telemetry state, not an outage.
+    pub fn health_json(&self) -> Json {
+        let mut j = Json::obj();
+        let status = if self.degraded_tiers.is_empty() {
+            "ok"
+        } else {
+            "degraded"
+        };
+        j.set("status", status)
+            .set(
+                "degraded_tiers",
+                Json::Arr(
+                    self.degraded_tiers
+                        .iter()
+                        .map(|t| Json::Str(t.clone()))
+                        .collect(),
+                ),
+            )
+            .set("checksum_failures", self.checksum_failures as usize)
+            .set("retries", self.retries as usize)
+            .set("deadline_expired", self.deadline_expired as usize)
+            .set("panics_recovered", self.panics_recovered as usize);
+        j
     }
 
     /// Proxy rows evaluated per full table traversal (≈ n for a batched
@@ -203,7 +265,21 @@ impl EngineStats {
             .set("quant", self.quant)
             .set("quant_rows_screened", self.quant_rows_screened as usize)
             .set("rescore_rows", self.rescore_rows as usize)
-            .set("bound_rejects", self.bound_rejects as usize);
+            .set("bound_rejects", self.bound_rejects as usize)
+            .set(
+                "degraded_tiers",
+                Json::Arr(
+                    self.degraded_tiers
+                        .iter()
+                        .map(|t| Json::Str(t.clone()))
+                        .collect(),
+                ),
+            )
+            .set("checksum_failures", self.checksum_failures as usize)
+            .set("retries", self.retries as usize)
+            .set("faults_injected", self.faults_injected as usize)
+            .set("deadline_expired", self.deadline_expired as usize)
+            .set("panics_recovered", self.panics_recovered as usize);
         j
     }
 }
@@ -241,6 +317,37 @@ mod tests {
         assert_eq!(j.get("quant_rows_screened").unwrap().as_f64(), Some(0.0));
         assert_eq!(j.get("rescore_rows").unwrap().as_f64(), Some(0.0));
         assert_eq!(j.get("bound_rejects").unwrap().as_f64(), Some(0.0));
+        // fault-tolerance telemetry is always present (zero when clean)
+        assert_eq!(j.get("checksum_failures").unwrap().as_f64(), Some(0.0));
+        assert_eq!(j.get("retries").unwrap().as_f64(), Some(0.0));
+        assert_eq!(j.get("faults_injected").unwrap().as_f64(), Some(0.0));
+        assert_eq!(j.get("deadline_expired").unwrap().as_f64(), Some(0.0));
+        assert_eq!(j.get("panics_recovered").unwrap().as_f64(), Some(0.0));
+        assert_eq!(
+            j.get("degraded_tiers").unwrap().as_arr().unwrap().len(),
+            0,
+            "clean load degrades nothing"
+        );
+    }
+
+    #[test]
+    fn health_json_reflects_degraded_tiers() {
+        let mut s = EngineStats::new();
+        let h = s.health_json();
+        assert_eq!(h.get("status").and_then(Json::as_str), Some("ok"));
+        s.degraded_tiers = vec!["quant".to_string()];
+        s.checksum_failures_load = 1;
+        s.checksum_failures = 1;
+        s.deadline_expired = 2;
+        s.panics_recovered = 1;
+        let h = s.health_json();
+        assert_eq!(h.get("status").and_then(Json::as_str), Some("degraded"));
+        let tiers = h.get("degraded_tiers").unwrap().as_arr().unwrap();
+        assert_eq!(tiers.len(), 1);
+        assert_eq!(tiers[0].as_str(), Some("quant"));
+        assert_eq!(h.get("checksum_failures").unwrap().as_f64(), Some(1.0));
+        assert_eq!(h.get("deadline_expired").unwrap().as_f64(), Some(2.0));
+        assert_eq!(h.get("panics_recovered").unwrap().as_f64(), Some(1.0));
     }
 
     #[test]
@@ -267,6 +374,9 @@ mod tests {
             quant_rows_screened: 512,
             rescore_rows: 64,
             bound_rejects: 448,
+            retries: 3,
+            checksum_failures: 1,
+            faults_injected: 5,
         });
         let j = s.to_json();
         assert_eq!(j.get("clusters_pruned").unwrap().as_f64(), Some(24.0));
@@ -286,15 +396,31 @@ mod tests {
         assert_eq!(j.get("quant_rows_screened").unwrap().as_f64(), Some(512.0));
         assert_eq!(j.get("rescore_rows").unwrap().as_f64(), Some(64.0));
         assert_eq!(j.get("bound_rejects").unwrap().as_f64(), Some(448.0));
+        assert_eq!(j.get("retries").unwrap().as_f64(), Some(3.0));
+        assert_eq!(j.get("checksum_failures").unwrap().as_f64(), Some(1.0));
+        assert_eq!(j.get("faults_injected").unwrap().as_f64(), Some(5.0));
         // the source snapshot overrides the backend copy when streamed
         s.record_source(Some(crate::data::rows::RowSourceStats {
             rows_streamed: 1000,
             peak_row_bytes: 9000,
+            retries: 4,
+            checksum_failures: 2,
+            faults_injected: 6,
             ..Default::default()
         }));
         assert_eq!(s.rows_streamed, 1000);
+        assert_eq!(s.retries, 4, "source counters are authoritative");
+        assert_eq!(s.faults_injected, 6);
+        assert_eq!(s.checksum_failures, 2);
         s.record_source(None);
         assert_eq!(s.rows_streamed, 1000, "resident snapshot is a no-op");
+        // load-time failures add on top of streamed-read failures
+        s.checksum_failures_load = 3;
+        s.record_source(Some(crate::data::rows::RowSourceStats {
+            checksum_failures: 2,
+            ..Default::default()
+        }));
+        assert_eq!(s.checksum_failures, 5, "load + streamed totals");
         assert_eq!(
             j.get("retrieval_backend").unwrap().as_str(),
             Some("cluster")

@@ -173,6 +173,14 @@ pub struct Dataset {
     pub ivf: Option<IvfPartition>,
     /// persisted per-shard IVF partitions, if the `.gds` store carried them
     pub shard_ivf: Option<ShardIvfPartition>,
+    /// optional tiers that stood down at load because their sections were
+    /// present but unreadable (truncated / checksum-corrupt): `"quant"`,
+    /// `"ivf"`, `"shard_ivf"`. Empty on a clean or legacy load; the engine
+    /// surfaces these through the `health` op
+    pub degraded: Vec<String>,
+    /// checksum mismatches seen while loading optional sections (required-
+    /// section mismatches fail the load instead of counting here)
+    pub checksum_failures: u64,
 
     /// global Gaussian stats (Wiener)
     pub mean: Vec<f32>,
@@ -293,6 +301,8 @@ impl Dataset {
             class_rows,
             ivf: None,
             shard_ivf: None,
+            degraded: Vec::new(),
+            checksum_failures: 0,
             mean,
             var,
             centroids,
@@ -514,6 +524,8 @@ impl Dataset {
             class_rows,
             ivf: None,
             shard_ivf: None,
+            degraded: Vec::new(),
+            checksum_failures: 0,
             mean: self.mean.clone(),
             var: self.var.clone(),
             centroids: self.centroids.clone(),

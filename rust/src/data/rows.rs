@@ -39,8 +39,34 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::data::shard::ShardPlan;
-use crate::data::store::ShardReader;
+use crate::data::store::{ChecksumMismatch, ShardReader};
 use crate::index::kernel::RowBlocks;
+use crate::util::fault::FaultInjector;
+
+/// Retry budget for a transient streamed-read failure: the first attempt
+/// plus six retries, with doubling backoff (1 ms → 16 ms cap). Exhausting
+/// the budget panics — a streamed corpus has no resident fallback, and
+/// corrupt rows must never be served (the engine's per-request
+/// `catch_unwind` turns the panic into an `"internal"` error reply).
+const MAX_READ_ATTEMPTS: u32 = 7;
+
+/// Transient = worth re-reading: interrupted-style IO errors (real or
+/// injected), and checksum mismatches — in-flight corruption re-reads
+/// clean, while persistent on-disk corruption keeps failing and exhausts
+/// the retry budget.
+fn is_transient(err: &anyhow::Error) -> bool {
+    if err.downcast_ref::<ChecksumMismatch>().is_some() {
+        return true;
+    }
+    err.downcast_ref::<std::io::Error>().is_some_and(|io| {
+        matches!(
+            io.kind(),
+            std::io::ErrorKind::Interrupted
+                | std::io::ErrorKind::WouldBlock
+                | std::io::ErrorKind::TimedOut
+        )
+    })
+}
 
 /// Full-resolution row storage: resident corpus or disk-streamed shards.
 #[derive(Debug, Clone)]
@@ -67,6 +93,13 @@ pub struct RowSourceStats {
     pub hits: u64,
     pub misses: u64,
     pub evictions: u64,
+    /// transient read failures recovered by the bounded retry
+    pub retries: u64,
+    /// shard checksum mismatches observed (each is retried; persistent
+    /// corruption exhausts the retry budget and fails hard)
+    pub checksum_failures: u64,
+    /// faults the configured [`FaultInjector`] injected (0 without one)
+    pub faults_injected: u64,
 }
 
 #[derive(Debug, Default)]
@@ -94,6 +127,10 @@ pub struct StreamedRows {
     evictions: AtomicU64,
     rows_streamed: AtomicU64,
     peak_bytes: AtomicU64,
+    retries: AtomicU64,
+    checksum_failures: AtomicU64,
+    /// shared with the reader so stats can report `faults_injected`
+    fault: Option<Arc<FaultInjector>>,
 }
 
 impl StreamedRows {
@@ -106,6 +143,7 @@ impl StreamedRows {
             d,
             plan: reader.plan().clone(),
             budget_bytes: mem_budget_mb as u64 * 1024 * 1024,
+            fault: reader.fault().cloned(),
             reader: Mutex::new(reader),
             lru: Mutex::new(BlockLru::default()),
             hits: AtomicU64::new(0),
@@ -113,7 +151,47 @@ impl StreamedRows {
             evictions: AtomicU64::new(0),
             rows_streamed: AtomicU64::new(0),
             peak_bytes: AtomicU64::new(0),
+            retries: AtomicU64::new(0),
+            checksum_failures: AtomicU64::new(0),
         }
+    }
+
+    /// Run one reader operation under the transient-retry policy: up to
+    /// [`MAX_READ_ATTEMPTS`] attempts with doubling backoff. The reader
+    /// lock is held only for the op itself — never across a backoff sleep
+    /// or the final panic — so concurrent readers keep moving and a fatal
+    /// failure cannot poison the mutex out from under the panic handler's
+    /// telemetry. Lock acquisition itself is poison-tolerant for the same
+    /// reason (the data under the mutex is a seek cursor, not an invariant).
+    fn read_with_retry<T>(
+        &self,
+        what: &str,
+        op: impl Fn(&mut ShardReader) -> anyhow::Result<T>,
+    ) -> T {
+        let mut backoff_ms = 1u64;
+        for attempt in 1..=MAX_READ_ATTEMPTS {
+            let result = {
+                let mut rd = self.reader.lock().unwrap_or_else(|p| p.into_inner());
+                op(&mut rd)
+            };
+            match result {
+                Ok(v) => return v,
+                Err(err) => {
+                    if err.downcast_ref::<ChecksumMismatch>().is_some() {
+                        self.checksum_failures.fetch_add(1, Ordering::Relaxed);
+                    }
+                    if attempt == MAX_READ_ATTEMPTS || !is_transient(&err) {
+                        panic!(
+                            "streamed corpus: {what} failed after {attempt} attempt(s): {err:#}"
+                        );
+                    }
+                    self.retries.fetch_add(1, Ordering::Relaxed);
+                    std::thread::sleep(std::time::Duration::from_millis(backoff_ms));
+                    backoff_ms = (backoff_ms * 2).min(16);
+                }
+            }
+        }
+        unreachable!("the retry loop either returns or panics")
     }
 
     #[inline]
@@ -143,10 +221,12 @@ impl StreamedRows {
     /// keeps the blocks alive past any eviction, so callers may hold it
     /// across a whole scan.
     ///
-    /// Panics when the store read fails mid-serve: a streamed corpus has
-    /// no resident fallback, so a vanished/corrupt store is fatal by
-    /// design (the open-time validation in `ShardReader::open` makes this
-    /// unreachable short of the file changing underneath us).
+    /// Transient read failures (interrupted-style IO errors, checksum
+    /// mismatches) retry with bounded backoff; anything else — or an
+    /// exhausted retry budget — panics: a streamed corpus has no resident
+    /// fallback, and serving corrupt rows is never an option (the engine's
+    /// per-request `catch_unwind` converts the panic to an `"internal"`
+    /// reply instead of killing the worker).
     pub fn shard_blocks(&self, shard: usize) -> Arc<RowBlocks> {
         if let Some(rb) = self.touch(shard) {
             self.hits.fetch_add(1, Ordering::Relaxed);
@@ -157,20 +237,15 @@ impl StreamedRows {
         // refines fault cold shards concurrently; a racing builder may
         // duplicate the (deterministic) work — first insert wins
         let (s, e) = self.plan.range(shard);
-        let table = self
-            .reader
-            .lock()
-            .unwrap()
-            .read_shard_rows(shard)
-            .unwrap_or_else(|err| {
-                panic!("streamed corpus: reading shard {shard} failed: {err:#}")
-            });
+        let table = self.read_with_retry(&format!("reading shard {shard}"), |rd| {
+            rd.read_shard_rows(shard)
+        });
         self.rows_streamed.fetch_add((e - s) as u64, Ordering::Relaxed);
         let ids: Vec<u32> = (s as u32..e as u32).collect();
         let built = Arc::new(RowBlocks::build_local(&table, self.d, ids));
         drop(table);
 
-        let mut lru = self.lru.lock().unwrap();
+        let mut lru = self.lru.lock().unwrap_or_else(|p| p.into_inner());
         if let Some(rb) = lru.resident.get(&shard) {
             return Arc::clone(rb); // lost the race — byte-identical copy
         }
@@ -205,7 +280,7 @@ impl StreamedRows {
 
     /// Cache lookup: on a hit, move the shard to the MRU position.
     fn touch(&self, shard: usize) -> Option<Arc<RowBlocks>> {
-        let mut lru = self.lru.lock().unwrap();
+        let mut lru = self.lru.lock().unwrap_or_else(|p| p.into_inner());
         let rb = Arc::clone(lru.resident.get(&shard)?);
         if let Some(pos) = lru.order.iter().position(|&x| x == shard) {
             lru.order.remove(pos);
@@ -218,20 +293,15 @@ impl StreamedRows {
     /// bypassing the LRU (plan-mismatched consumers — e.g. a backend
     /// sharded at a different count than the source).
     pub fn read_range(&self, s: usize, e: usize) -> Vec<f32> {
-        let table = self
-            .reader
-            .lock()
-            .unwrap()
-            .read_row_range(s, e)
-            .unwrap_or_else(|err| {
-                panic!("streamed corpus: reading rows {s}..{e} failed: {err:#}")
-            });
+        let table = self.read_with_retry(&format!("reading rows {s}..{e}"), |rd| {
+            rd.read_row_range(s, e)
+        });
         self.rows_streamed.fetch_add((e - s) as u64, Ordering::Relaxed);
         table
     }
 
     pub fn stats(&self) -> RowSourceStats {
-        let lru = self.lru.lock().unwrap();
+        let lru = self.lru.lock().unwrap_or_else(|p| p.into_inner());
         RowSourceStats {
             resident_shards: lru.resident.len(),
             resident_bytes: lru.bytes,
@@ -240,16 +310,21 @@ impl StreamedRows {
             hits: self.hits.load(Ordering::Relaxed),
             misses: self.misses.load(Ordering::Relaxed),
             evictions: self.evictions.load(Ordering::Relaxed),
+            retries: self.retries.load(Ordering::Relaxed),
+            checksum_failures: self.checksum_failures.load(Ordering::Relaxed),
+            faults_injected: self.fault.as_ref().map_or(0, |f| f.injected()),
         }
     }
 
-    /// Zero the monotonic counters (bench harness hook); resident blocks
-    /// and the peak high-water mark stay.
+    /// Zero the monotonic counters (bench harness hook); resident blocks,
+    /// the peak high-water mark and the injector's own fault tally stay.
     pub fn reset_counters(&self) {
         self.hits.store(0, Ordering::Relaxed);
         self.misses.store(0, Ordering::Relaxed);
         self.evictions.store(0, Ordering::Relaxed);
         self.rows_streamed.store(0, Ordering::Relaxed);
+        self.retries.store(0, Ordering::Relaxed);
+        self.checksum_failures.store(0, Ordering::Relaxed);
     }
 }
 
@@ -373,6 +448,82 @@ mod tests {
         assert_eq!(st.hits, 3);
         assert_eq!(st.evictions, 0);
         assert_eq!(st.resident_shards, 3);
+        std::fs::remove_dir_all(path.parent().unwrap()).ok();
+    }
+
+    #[test]
+    fn transient_faults_retry_and_stay_byte_identical() {
+        // Tentpole: with the deterministic injector faulting the first 5
+        // positioned reads (5 < the 6-retry budget, so every read
+        // eventually lands), streamed rows are byte-identical to the
+        // resident corpus and the retry telemetry accounts every fault
+        let (ds, path) = saved(90, 19, 3, "golddiff_rows_fault_transient_test");
+        let fault = Arc::new(FaultInjector::transient(42, 1.0).with_limit(5));
+        let streamed = store::open_streaming_with(&path, 3, 0, Some(Arc::clone(&fault))).unwrap();
+        let mut cur = streamed.row_cursor();
+        for i in 0..ds.n {
+            assert_eq!(cur.row(i as u32), ds.row(i), "row {i}");
+        }
+        let st = streamed.source_stats().unwrap();
+        assert_eq!(st.faults_injected, 5);
+        assert_eq!(fault.injected(), 5);
+        assert_eq!(st.retries, 5, "every injected fault cost one retry");
+        assert_eq!(st.checksum_failures, 0, "transient faults corrupt nothing");
+        std::fs::remove_dir_all(path.parent().unwrap()).ok();
+    }
+
+    #[test]
+    fn bit_flips_are_caught_by_checksums_and_rereads_stay_byte_identical() {
+        // Tentpole: a flipped bit in a streamed buffer trips the shard
+        // checksum (v5 store, matching plan, unbounded LRU → every read is
+        // a verified first touch), the retry re-reads clean, and rows stay
+        // byte-identical to the resident corpus
+        let (ds, path) = saved(90, 23, 3, "golddiff_rows_fault_bitflip_test");
+        let fault = Arc::new(FaultInjector::bit_flips(7, 1.0).with_limit(2));
+        let streamed = store::open_streaming_with(&path, 3, 0, Some(fault)).unwrap();
+        let mut cur = streamed.row_cursor();
+        for i in 0..ds.n {
+            assert_eq!(cur.row(i as u32), ds.row(i), "row {i}");
+        }
+        let st = streamed.source_stats().unwrap();
+        assert_eq!(st.faults_injected, 2);
+        assert_eq!(st.checksum_failures, 2, "every flip tripped the checksum");
+        assert_eq!(st.retries, 2, "every flip cost one re-read");
+        std::fs::remove_dir_all(path.parent().unwrap()).ok();
+    }
+
+    #[test]
+    fn persistent_on_disk_corruption_exhausts_retries_and_fails_hard() {
+        // checksum mismatches retry (in-flight corruption re-reads clean),
+        // but corruption that is actually on the medium keeps failing —
+        // after MAX_READ_ATTEMPTS the source refuses to serve, naming the
+        // checksum, instead of handing out corrupt rows
+        let (_ds, path) = saved(60, 29, 2, "golddiff_rows_fault_persist_test");
+        let mut bytes = std::fs::read(&path).unwrap();
+        let hlen = u32::from_le_bytes([bytes[4], bytes[5], bytes[6], bytes[7]]) as usize;
+        // `data` is the first section: its payload starts right after the
+        // header, so this lands inside shard 0's rows
+        bytes[8 + hlen + 101] ^= 0x40;
+        std::fs::write(&path, bytes).unwrap();
+        // injector pinned to None: the exact attempt counts below must not
+        // wobble when the suite runs under the GOLDDIFF_FAULT_* env leg
+        let streamed = store::open_streaming_with(&path, 2, 0, None).unwrap();
+        let src = streamed.streamed().unwrap();
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            src.shard_blocks(0)
+        }))
+        .expect_err("corrupt shard must not serve");
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_else(|| "non-string panic".to_string());
+        assert!(msg.contains("checksum"), "panic must name the cause: {msg}");
+        let st = src.stats();
+        assert_eq!(st.checksum_failures, MAX_READ_ATTEMPTS as u64);
+        assert_eq!(st.retries, (MAX_READ_ATTEMPTS - 1) as u64);
+        // shard 1 is clean and still serves after the failure
+        let (s, e) = src.plan().range(1);
+        assert_eq!(src.shard_blocks(1).rows, e - s);
         std::fs::remove_dir_all(path.parent().unwrap()).ok();
     }
 

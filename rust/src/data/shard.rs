@@ -145,6 +145,12 @@ pub struct ShardCacheStats {
     pub streamed_loads: u64,
     /// full-resolution rows read off disk (0 for a resident corpus)
     pub rows_streamed: u64,
+    /// transient streamed-read failures recovered by the bounded retry
+    pub retries: u64,
+    /// shard checksum mismatches the streamed source observed
+    pub checksum_failures: u64,
+    /// faults the configured injector put into streamed reads
+    pub faults_injected: u64,
 }
 
 /// The sharded corpus: per-shard proxy tables (resident) plus LRU-cached,
@@ -339,6 +345,9 @@ impl CorpusShards {
                 // every cold load of a streamed source comes off disk
                 streamed_loads: s.misses,
                 rows_streamed: s.rows_streamed,
+                retries: s.retries,
+                checksum_failures: s.checksum_failures,
+                faults_injected: s.faults_injected,
             };
         }
         let lru = self.lru.lock().unwrap();
@@ -352,6 +361,9 @@ impl CorpusShards {
             evictions: self.evictions.load(Ordering::Relaxed),
             streamed_loads: self.streamed_loads.load(Ordering::Relaxed),
             rows_streamed: 0,
+            retries: 0,
+            checksum_failures: 0,
+            faults_injected: 0,
         }
     }
 

@@ -41,10 +41,24 @@
 //! ignore-unknown rule: a v1–v3 store loads unchanged, a resident open
 //! rebuilds the tier from the corpus on first use, and a streamed legacy
 //! open simply reports no tier (the pre-rung stands down).
+//!
+//! Version 5 adds **integrity**: every section's metadata carries a
+//! `crc32` (IEEE) over its on-disk bytes, including the per-shard alias
+//! sections (checksummed over their subrange so a [`ShardReader`] can
+//! verify one shard without touching the rest). Readers verify a section's
+//! checksum on first touch and fail with [`ChecksumMismatch`] naming the
+//! section. A corrupt *required* section fails the load; a corrupt
+//! *optional* section (`quant_*`, `ivf_*`, per-shard IVF) stands its tier
+//! down exactly like a legacy load — serving continues on the exact f32
+//! path and the degradation is surfaced in `Dataset::degraded` /
+//! `checksum_failures`. Writes were already atomic (`*.tmp` + rename);
+//! v5 also fsyncs the payload and the parent directory so the rename is
+//! durable. v≤4 stores carry no checksums and load exactly as before.
 
 use std::fs::File;
 use std::io::{BufReader, BufWriter, Read, Seek, SeekFrom, Write};
 use std::path::Path;
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
@@ -53,16 +67,46 @@ use super::gmm::GmmSpec;
 use super::rows::{RowSource, StreamedRows};
 use crate::data::shard::ShardPlan;
 use crate::index::kernel::{ProxyBlocks, QuantRows};
+use crate::util::crc::{crc32, crc32_f32, crc32_u32};
+use crate::util::fault::{FaultInjector, FaultKind};
 use crate::util::json::{parse, Json};
 
 const MAGIC: &[u8; 4] = b"GDS1";
 /// Header format version: 2 added the optional IVF partition sections; 3
 /// added the per-shard alias sections + `shards` header field; 4 added the
 /// optional quantised row tier (`quant_codes` / `quant_scale` /
-/// `quant_err`). Readers never gate on this — unknown sections are ignored
-/// and missing ones degrade per-feature — so it is documentation, not a
-/// compatibility switch.
-const VERSION: usize = 4;
+/// `quant_err`); 5 added the per-section `crc32` checksums. Readers never
+/// gate on this — unknown sections are ignored, missing ones degrade
+/// per-feature, and sections without a `crc32` field simply skip
+/// verification — so it is documentation, not a compatibility switch.
+const VERSION: usize = 5;
+
+/// A section's stored checksum disagrees with its bytes: the store is
+/// corrupt (bit rot, torn write, flaky medium). Carried as the typed root
+/// cause under anyhow context so callers can classify integrity failures
+/// (`err.downcast_ref::<ChecksumMismatch>()`) apart from plain IO errors —
+/// the streamed-read retry treats it as transient (an in-flight corruption
+/// re-reads clean), the optional-tier loader counts it in
+/// `checksum_failures` telemetry.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ChecksumMismatch {
+    pub section: String,
+    pub want: u32,
+    pub got: u32,
+}
+
+impl std::fmt::Display for ChecksumMismatch {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "section `{}` checksum mismatch: stored {:08x}, computed {:08x} — \
+             corrupt store",
+            self.section, self.want, self.got
+        )
+    }
+}
+
+impl std::error::Error for ChecksumMismatch {}
 
 /// Pack int8 codes four-per-u32 (little-endian) so the quant tier rides
 /// the store's uniform 4-byte-element section machinery; the tail word is
@@ -116,6 +160,13 @@ pub fn save_sharded(ds: &Dataset, path: &Path, shards: usize) -> Result<()> {
     let tmp = path.with_extension("gds.tmp");
     write_store(ds, &tmp, shards)?;
     std::fs::rename(&tmp, path).with_context(|| format!("rename {tmp:?} -> {path:?}"))?;
+    // make the rename itself durable: fsync the parent directory (best
+    // effort — not every filesystem supports opening a directory)
+    if let Some(parent) = path.parent() {
+        if let Ok(dir) = File::open(parent) {
+            let _ = dir.sync_all();
+        }
+    }
     Ok(())
 }
 
@@ -219,11 +270,18 @@ fn write_store(ds: &Dataset, path: &Path, shards: usize) -> Result<()> {
             "proxies" => proxies_offset = offset,
             _ => {}
         }
+        // v5: checksum over the exact little-endian bytes this section
+        // puts on disk, so readers can verify payloads on first touch
+        let crc = match sec {
+            Sec::F(_, v) => crc32_f32(v),
+            Sec::U(_, v) => crc32_u32(v),
+        };
         let mut meta = Json::obj();
         meta.set("name", name)
             .set("dtype", dtype)
             .set("offset", offset)
-            .set("len", len);
+            .set("len", len)
+            .set("crc32", crc);
         sections.push(meta);
         offset += len as u64 * 4;
     }
@@ -241,17 +299,24 @@ fn write_store(ds: &Dataset, path: &Path, shards: usize) -> Result<()> {
         for i in 0..splan.count() {
             let (s, e) = splan.range(i);
             let rows = e - s;
+            // v5: alias sections are checksummed over their *subrange* so
+            // a ShardReader can verify one shard's bytes in isolation
             let mut meta = Json::obj();
             meta.set("name", format!("data_shard_{i}"))
                 .set("dtype", "f32")
                 .set("offset", data_offset + (s * ds.d) as u64 * 4)
-                .set("len", rows * ds.d);
+                .set("len", rows * ds.d)
+                .set("crc32", crc32_f32(&data[s * ds.d..e * ds.d]));
             sections.push(meta);
             let mut meta = Json::obj();
             meta.set("name", format!("proxies_shard_{i}"))
                 .set("dtype", "f32")
                 .set("offset", proxies_offset + (s * ds.proxy_d) as u64 * 4)
-                .set("len", rows * ds.proxy_d);
+                .set("len", rows * ds.proxy_d)
+                .set(
+                    "crc32",
+                    crc32_f32(&ds.proxies[s * ds.proxy_d..e * ds.proxy_d]),
+                );
             sections.push(meta);
         }
     }
@@ -278,6 +343,9 @@ fn write_store(ds: &Dataset, path: &Path, shards: usize) -> Result<()> {
         }
     }
     out.flush()?;
+    // fsync before the caller renames over the live store: without it a
+    // crash could publish a name pointing at unwritten payload bytes
+    out.get_ref().sync_all()?;
     Ok(())
 }
 
@@ -344,11 +412,45 @@ impl StoreFile {
         Ok((off, len))
     }
 
+    /// Whether the header lists a section at all (no bounds or checksum
+    /// implications — "absent" is the legacy-degrade signal, distinct from
+    /// "present but unreadable" which is the corruption-degrade signal).
+    fn has_section(&self, name: &str) -> bool {
+        let sections = self.header.get("sections").and_then(Json::as_arr).unwrap();
+        sections
+            .iter()
+            .any(|s| s.get("name").and_then(Json::as_str) == Some(name))
+    }
+
+    /// The section's stored checksum, when the store carries one (v5+).
+    /// v≤4 stores have no `crc32` field → `None` → verification skips,
+    /// so legacy stores load exactly as before.
+    fn section_crc(&self, name: &str) -> Option<u32> {
+        let sections = self.header.get("sections").and_then(Json::as_arr)?;
+        let sec = sections
+            .iter()
+            .find(|s| s.get("name").and_then(Json::as_str) == Some(name))?;
+        sec.get("crc32").and_then(Json::as_f64).map(|v| v as u32)
+    }
+
     fn read_bytes(&mut self, name: &str) -> Result<Vec<u8>> {
         let (off, len) = self.locate(name)?;
         self.rd.seek(SeekFrom::Start(self.data_start + off))?;
         let mut bytes = vec![0u8; len * 4];
         self.rd.read_exact(&mut bytes)?;
+        // v5: first-touch integrity — every section read through here is
+        // read exactly once per open, so this verifies each on first touch
+        if let Some(want) = self.section_crc(name) {
+            let got = crc32(&bytes);
+            if got != want {
+                return Err(anyhow::Error::new(ChecksumMismatch {
+                    section: name.to_string(),
+                    want,
+                    got,
+                })
+                .context(format!("{:?}: verifying section `{name}`", self.path)));
+            }
+        }
         Ok(bytes)
     }
 
@@ -379,15 +481,31 @@ pub fn load(path: &Path) -> Result<Dataset> {
 /// Open a `.gds` store **without materialising the corpus**: headers,
 /// proxies, shard bounds and stats load as usual, but the `data` section
 /// stays on disk and rows stream shard-at-a-time through a
-/// `mem_budget_mb`-bounded LRU ([`StreamedRows`]). The section table is
-/// still fully bounds-validated up front, so a truncated or corrupt store
-/// fails here — loudly, naming the section — not mid-serve.
+/// `mem_budget_mb`-bounded LRU ([`StreamedRows`]). Every *required*
+/// section is still bounds-validated (and checksum-verified, v5+) up
+/// front, so a truncated or corrupt store fails here — loudly, naming the
+/// section — not mid-serve; unreadable *optional* tiers (`quant_*`,
+/// `ivf_*`) stand down instead, exactly as in [`load`].
 ///
 /// Any valid store streams under any `shards` count: v3 stores saved with
 /// a matching plan seek via their per-shard alias sections, everything
 /// else derives offsets from the contiguous `data` section (see
 /// [`ShardReader`]).
 pub fn open_streaming(path: &Path, shards: usize, mem_budget_mb: usize) -> Result<Dataset> {
+    open_streaming_with(path, shards, mem_budget_mb, FaultInjector::from_env())
+}
+
+/// [`open_streaming`] with an explicit fault injector behind the
+/// `ShardReader` I/O seam — tests wire a seeded one to prove the retry /
+/// checksum / degrade paths fire; `open_streaming` itself passes the
+/// env-configured default (`GOLDDIFF_FAULT_RATE` / `GOLDDIFF_FAULT_SEED`,
+/// off unless the rate is set nonzero).
+pub fn open_streaming_with(
+    path: &Path,
+    shards: usize,
+    mem_budget_mb: usize,
+    fault: Option<Arc<FaultInjector>>,
+) -> Result<Dataset> {
     let sf = StoreFile::open(path)?;
     let n = sf.header.num_field("n")? as usize;
     let d = sf.header.num_field("d")? as usize;
@@ -397,9 +515,19 @@ pub fn open_streaming(path: &Path, shards: usize, mem_budget_mb: usize) -> Resul
         data_len == n * d,
         "{path:?}: data section holds {data_len} values, expected {n}×{d}"
     );
-    let reader = ShardReader::open(path, shards)?;
+    let reader = ShardReader::open_with(path, shards, fault)?;
     let src = std::sync::Arc::new(StreamedRows::new(reader, n, d, mem_budget_mb));
     finish_dataset(sf, RowSource::Streamed(src))
+}
+
+/// Classify and log an optional-tier read failure: checksum mismatches
+/// count separately in telemetry; either way the tier stands down and
+/// serving continues on the exact f32 path.
+fn tier_degraded(path: &Path, tier: &str, err: &anyhow::Error, checksum_failures: &mut u64) {
+    if err.downcast_ref::<ChecksumMismatch>().is_some() {
+        *checksum_failures += 1;
+    }
+    eprintln!("warning: {path:?}: optional tier `{tier}` stands down — {err:#}");
 }
 
 /// Everything after the row payload: the shared tail of [`load`] and
@@ -407,6 +535,10 @@ pub fn open_streaming(path: &Path, shards: usize, mem_budget_mb: usize) -> Resul
 fn finish_dataset(mut sf: StoreFile, rows: RowSource) -> Result<Dataset> {
     let n = sf.header.num_field("n")? as usize;
     let d = sf.header.num_field("d")? as usize;
+    // optional tiers that failed verification stand down instead of
+    // failing the load; the engine surfaces them through `health`
+    let mut degraded: Vec<String> = Vec::new();
+    let mut checksum_failures: u64 = 0;
     let labels = sf.read_u32("labels")?;
     let proxies = sf.read_f32("proxies")?;
     let mean = sf.read_f32("mean")?;
@@ -439,7 +571,10 @@ fn finish_dataset(mut sf: StoreFile, rows: RowSource) -> Result<Dataset> {
     let proxy_d = sf.header.num_field("proxy_d")? as usize;
 
     // version-2 stores may carry the IVF partition; anything older (or a
-    // store saved before a cluster engine ran) yields None → k-means rebuild
+    // store saved before a cluster engine ran) yields None → k-means
+    // rebuild. A partition that is present but unreadable (truncated or
+    // checksum-corrupt sections) degrades to the same None — a cluster
+    // engine start pays the k-means rebuild instead of failing the load.
     let ivf = match (
         sf.header.get("ivf_lists").and_then(Json::as_f64),
         sf.header
@@ -447,12 +582,24 @@ fn finish_dataset(mut sf: StoreFile, rows: RowSource) -> Result<Dataset> {
             .and_then(Json::as_str)
             .and_then(|s| s.parse::<u64>().ok()),
     ) {
-        (Some(lists), Some(seed)) => Some(IvfPartition {
-            lists: lists as usize,
-            seed,
-            centroids: sf.read_f32("ivf_centroids")?,
-            assignments: sf.read_u32("ivf_assign")?,
-        }),
+        (Some(lists), Some(seed)) => {
+            let read = sf
+                .read_f32("ivf_centroids")
+                .and_then(|c| Ok((c, sf.read_u32("ivf_assign")?)));
+            match read {
+                Ok((centroids, assignments)) => Some(IvfPartition {
+                    lists: lists as usize,
+                    seed,
+                    centroids,
+                    assignments,
+                }),
+                Err(err) => {
+                    tier_degraded(&sf.path, "ivf", &err, &mut checksum_failures);
+                    degraded.push("ivf".to_string());
+                    None
+                }
+            }
+        }
         _ => None,
     };
 
@@ -468,19 +615,31 @@ fn finish_dataset(mut sf: StoreFile, rows: RowSource) -> Result<Dataset> {
     ) {
         (Some(sh), Some(lists), Some(seed)) => {
             let sh = sh as usize;
-            let mut centroids = Vec::with_capacity(sh);
-            let mut shard_assign = Vec::with_capacity(sh);
-            for i in 0..sh {
-                centroids.push(sf.read_f32(&format!("ivf_shard_{i}_centroids"))?);
-                shard_assign.push(sf.read_u32(&format!("ivf_shard_{i}_assign"))?);
+            let read = (|| -> Result<(Vec<Vec<f32>>, Vec<Vec<u32>>)> {
+                let mut centroids = Vec::with_capacity(sh);
+                let mut shard_assign = Vec::with_capacity(sh);
+                for i in 0..sh {
+                    centroids.push(sf.read_f32(&format!("ivf_shard_{i}_centroids"))?);
+                    shard_assign.push(sf.read_u32(&format!("ivf_shard_{i}_assign"))?);
+                }
+                Ok((centroids, shard_assign))
+            })();
+            match read {
+                Ok((centroids, shard_assign)) => Some(ShardIvfPartition {
+                    shards: sh,
+                    lists: lists as usize,
+                    seed,
+                    centroids,
+                    assignments: shard_assign,
+                }),
+                Err(err) => {
+                    // same degrade contract as the monolithic partition:
+                    // the sharded cluster start rebuilds its k-means
+                    tier_degraded(&sf.path, "shard_ivf", &err, &mut checksum_failures);
+                    degraded.push("shard_ivf".to_string());
+                    None
+                }
             }
-            Some(ShardIvfPartition {
-                shards: sh,
-                lists: lists as usize,
-                seed,
-                centroids,
-                assignments: shard_assign,
-            })
         }
         _ => None,
     };
@@ -491,20 +650,36 @@ fn finish_dataset(mut sf: StoreFile, rows: RowSource) -> Result<Dataset> {
     // the (identical) tier on first use, a streamed open reports None and
     // the quantised refine pre-rung stands down.
     let quant_row_tier = std::sync::OnceLock::new();
-    if sf.locate("quant_codes").is_ok()
-        && sf.locate("quant_scale").is_ok()
-        && sf.locate("quant_err").is_ok()
+    if sf.has_section("quant_codes")
+        && sf.has_section("quant_scale")
+        && sf.has_section("quant_err")
     {
-        let codes = unpack_i8(&sf.read_u32("quant_codes")?, n * d);
-        let scales = sf.read_f32("quant_scale")?;
-        let errs = sf.read_f32("quant_err")?;
-        let qr = QuantRows::from_parts(n, d, codes, scales, errs).with_context(|| {
-            format!(
-                "{:?}: quant sections disagree with the {n}×{d} corpus shape",
-                sf.path
-            )
-        })?;
-        let _ = quant_row_tier.set(Some(qr));
+        let built = (|| -> Result<QuantRows> {
+            let codes = unpack_i8(&sf.read_u32("quant_codes")?, n * d);
+            let scales = sf.read_f32("quant_scale")?;
+            let errs = sf.read_f32("quant_err")?;
+            QuantRows::from_parts(n, d, codes, scales, errs).with_context(|| {
+                format!(
+                    "{:?}: quant sections disagree with the {n}×{d} corpus shape",
+                    sf.path
+                )
+            })
+        })();
+        match built {
+            Ok(qr) => {
+                let _ = quant_row_tier.set(Some(qr));
+            }
+            Err(err) => {
+                tier_degraded(&sf.path, "quant", &err, &mut checksum_failures);
+                degraded.push("quant".to_string());
+                // pin the tier to None (not "unset"): a resident open
+                // would otherwise lazily rebuild from the corpus and mask
+                // the corruption of the persisted tier — degrading keeps
+                // the failure observable and the behaviour identical
+                // across residencies (quant-off, exact f32 path)
+                let _ = quant_row_tier.set(None);
+            }
+        }
     }
 
     let proxy_blocks = ProxyBlocks::build(&proxies, n, proxy_d);
@@ -532,6 +707,8 @@ fn finish_dataset(mut sf: StoreFile, rows: RowSource) -> Result<Dataset> {
         class_rows,
         ivf,
         shard_ivf,
+        degraded,
+        checksum_failures,
         mean,
         var,
         centroids,
@@ -562,10 +739,31 @@ pub struct ShardReader {
     /// absolute byte offset of the contiguous `data` section (row 0) —
     /// arbitrary row-range reads seek from here
     data_abs: u64,
+    /// per-shard stored checksums (v5 stores whose saved plan matches;
+    /// `None` entries skip verification — legacy stores, or a plan that
+    /// differs from the saved alias sections)
+    shard_crcs: Vec<Option<u32>>,
+    /// first-touch ledger: a shard is verified on its first *successful*
+    /// read, then re-streams skip the checksum pass (hot path stays clean)
+    verified: Vec<bool>,
+    /// deterministic fault source for every positioned read (tests + the
+    /// `GOLDDIFF_FAULT_*` env knobs); `None` = clean I/O
+    fault: Option<Arc<FaultInjector>>,
 }
 
 impl ShardReader {
     pub fn open(path: &Path, shards: usize) -> Result<ShardReader> {
+        Self::open_with(path, shards, None)
+    }
+
+    /// [`open`](Self::open) with a fault injector wired into the I/O seam:
+    /// every `read_shard_rows` / `read_row_range` consults it once per
+    /// positioned read. See [`FaultInjector`] for the fault kinds.
+    pub fn open_with(
+        path: &Path,
+        shards: usize,
+        fault: Option<Arc<FaultInjector>>,
+    ) -> Result<ShardReader> {
         let mut file = File::open(path).with_context(|| format!("open {path:?}"))?;
         let file_len = file.metadata()?.len();
         let mut magic = [0u8; 4];
@@ -608,20 +806,38 @@ impl ShardReader {
              truncated store"
         );
 
+        // stored per-section checksum, when the store carries one (v5+)
+        let find_crc = |name: &str| -> Option<u32> {
+            let sec = sections
+                .iter()
+                .find(|s| s.get("name").and_then(Json::as_str) == Some(name))?;
+            sec.get("crc32").and_then(Json::as_f64).map(|v| v as u32)
+        };
         let plan = ShardPlan::new(n, shards);
         let header_shards = header.get("shards").and_then(Json::as_f64).map(|v| v as usize);
         let mut offsets = Vec::with_capacity(plan.count());
+        let mut shard_crcs = Vec::with_capacity(plan.count());
         for i in 0..plan.count() {
             let (s, e) = plan.range(i);
             let rows = e - s;
             let derived = data_start + data_off + (s * d) as u64 * 4;
-            let abs = if header_shards == Some(plan.count()) {
+            // a shard's checksum only applies when it covers exactly the
+            // bytes we will read: the saved alias section with a matching
+            // plan, or the whole `data` section under a one-shard plan. A
+            // mismatched plan re-slices the contiguous payload, so per-
+            // shard verification stands down (reads still go through the
+            // retry path, and `store::load` still verifies `data` whole).
+            let (abs, crc) = if header_shards == Some(plan.count()) {
                 match find(&format!("data_shard_{i}")) {
-                    Some((off, len)) if len == rows * d => data_start + off,
-                    _ => derived,
+                    Some((off, len)) if len == rows * d => {
+                        (data_start + off, find_crc(&format!("data_shard_{i}")))
+                    }
+                    _ => (derived, None),
                 }
+            } else if plan.count() == 1 {
+                (derived, find_crc("data"))
             } else {
-                derived
+                (derived, None)
             };
             let end = abs + (rows * d) as u64 * 4;
             if end > file_len {
@@ -631,14 +847,66 @@ impl ShardReader {
                 );
             }
             offsets.push(abs);
+            shard_crcs.push(crc);
         }
+        let verified = vec![false; plan.count()];
         Ok(ShardReader {
             file,
             d,
             plan,
             offsets,
             data_abs,
+            shard_crcs,
+            verified,
+            fault,
         })
+    }
+
+    /// The injector wired at open (shared with [`StreamedRows`] so its
+    /// stats can report `faults_injected`).
+    pub fn fault(&self) -> Option<&Arc<FaultInjector>> {
+        self.fault.as_ref()
+    }
+
+    /// One fault-aware positioned read — the seam every streamed byte
+    /// crosses. Injected faults surface exactly like real ones: a
+    /// transient error fails before any bytes move, a short read delivers
+    /// part of the buffer then fails (the caller's retry must re-seek —
+    /// which it does, since every read is absolutely positioned), and a
+    /// bit flip corrupts the returned buffer (only the shard checksum can
+    /// catch it).
+    fn read_at(&mut self, abs: u64, len: usize) -> std::io::Result<Vec<u8>> {
+        match self.fault.as_ref().and_then(|f| f.roll()) {
+            Some(FaultKind::Transient) => {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::Interrupted,
+                    "injected transient read failure",
+                ));
+            }
+            Some(FaultKind::ShortRead) => {
+                self.file.seek(SeekFrom::Start(abs))?;
+                let mut partial = vec![0u8; len / 2];
+                self.file.read_exact(&mut partial)?;
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::Interrupted,
+                    "injected short read",
+                ));
+            }
+            Some(FaultKind::BitFlip) => {
+                self.file.seek(SeekFrom::Start(abs))?;
+                let mut bytes = vec![0u8; len];
+                self.file.read_exact(&mut bytes)?;
+                if let Some(f) = &self.fault {
+                    f.flip_bit(&mut bytes);
+                }
+                return Ok(bytes);
+            }
+            None => {}
+        }
+        self.file.seek(SeekFrom::Start(abs))?;
+        let mut bytes = vec![0u8; len];
+        self.file.read_exact(&mut bytes)?;
+        Ok(bytes)
     }
 
     pub fn plan(&self) -> &ShardPlan {
@@ -646,11 +914,30 @@ impl ShardReader {
     }
 
     /// Read shard `shard`'s full-resolution rows (`rows × d`, row-major).
+    /// The shard's checksum (v5 stores) is verified on the first successful
+    /// read — first touch — and skipped on re-streams of an evicted shard;
+    /// a mismatch surfaces as [`ChecksumMismatch`], which the streamed-read
+    /// retry treats as transient (a clean medium re-reads identical bytes,
+    /// in-flight corruption re-reads clean; persistent on-disk corruption
+    /// exhausts the retries and hard-fails — corrupt rows are never served).
     pub fn read_shard_rows(&mut self, shard: usize) -> Result<Vec<f32>> {
         let rows = self.plan.rows_in(shard);
-        self.file.seek(SeekFrom::Start(self.offsets[shard]))?;
-        let mut bytes = vec![0u8; rows * self.d * 4];
-        self.file.read_exact(&mut bytes)?;
+        let bytes = self
+            .read_at(self.offsets[shard], rows * self.d * 4)
+            .with_context(|| format!("reading shard {shard} rows"))?;
+        if !self.verified[shard] {
+            if let Some(want) = self.shard_crcs[shard] {
+                let got = crc32(&bytes);
+                if got != want {
+                    return Err(anyhow::Error::new(ChecksumMismatch {
+                        section: format!("data_shard_{shard}"),
+                        want,
+                        got,
+                    }));
+                }
+            }
+            self.verified[shard] = true;
+        }
         Ok(bytes
             .chunks_exact(4)
             .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
@@ -662,12 +949,17 @@ impl ShardReader {
     /// contiguously whatever shard plan the store was saved with, so this
     /// serves plan-agnostic consumers (a backend sharded at a different
     /// count than the source).
+    /// Arbitrary ranges cross shard boundaries, so no per-shard checksum
+    /// applies here — the read still goes through the fault-aware seam
+    /// (and therefore the caller's transient retry).
     pub fn read_row_range(&mut self, s: usize, e: usize) -> Result<Vec<f32>> {
         anyhow::ensure!(s <= e && e <= self.plan.n, "row range {s}..{e} out of bounds");
-        self.file
-            .seek(SeekFrom::Start(self.data_abs + (s * self.d) as u64 * 4))?;
-        let mut bytes = vec![0u8; (e - s) * self.d * 4];
-        self.file.read_exact(&mut bytes)?;
+        let bytes = self
+            .read_at(
+                self.data_abs + (s * self.d) as u64 * 4,
+                (e - s) * self.d * 4,
+            )
+            .with_context(|| format!("reading rows {s}..{e}"))?;
         Ok(bytes
             .chunks_exact(4)
             .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
@@ -866,7 +1158,9 @@ mod tests {
     fn truncated_store_fails_with_the_section_name() {
         // Satellite: offsets/lengths are validated against the file size
         // before any seek, so a truncated store names the broken section
-        // instead of surfacing a raw IO error
+        // instead of surfacing a raw IO error — unless the cut only
+        // removes *optional* tiers, which stand down instead (v5 degrade
+        // contract)
         let mut spec = preset("moons").unwrap().clone();
         spec.n = 48;
         let ds = Dataset::synthesize(&spec, 8);
@@ -874,17 +1168,29 @@ mod tests {
         std::fs::remove_dir_all(&dir).ok();
         let path = dir.join("moons.gds");
         save(&ds, &path).unwrap();
-        let full = std::fs::metadata(&path).unwrap().len();
+        let pristine = std::fs::read(&path).unwrap();
+
+        // a 16-byte tail cut lands in `quant_err` — optional, degrades
         let f = std::fs::OpenOptions::new().write(true).open(&path).unwrap();
-        f.set_len(full - 16).unwrap();
+        f.set_len(pristine.len() as u64 - 16).unwrap();
+        drop(f);
+        let rt = load(&path).unwrap();
+        assert_eq!(rt.degraded, vec!["quant".to_string()]);
+        assert!(rt.quant_rows().is_none(), "the torn tier must stand down");
+        assert_eq!(rt.resident_rows(), ds.resident_rows(), "corpus intact");
+
+        // a cut inside a *required* section fails, naming it
+        std::fs::write(&path, &pristine).unwrap();
+        let (start, len) = section_span(&path, "gmm_vars");
+        let f = std::fs::OpenOptions::new().write(true).open(&path).unwrap();
+        f.set_len((start + len / 2) as u64).unwrap();
         drop(f);
         let err = format!("{:#}", load(&path).unwrap_err());
         assert!(
             err.contains("section") && err.contains("truncated"),
             "error must name the problem: {err}"
         );
-        // the last-written section is the one the cut lands in
-        assert!(err.contains("quant_err"), "error must name the section: {err}");
+        assert!(err.contains("gmm_vars"), "error must name the section: {err}");
         std::fs::remove_dir_all(&dir).ok();
     }
 
@@ -966,8 +1272,9 @@ mod tests {
 
     #[test]
     fn open_streaming_rejects_truncated_stores_up_front() {
-        // Satellite: the section table is validated at open, so a truncated
-        // store fails loudly before any serving starts
+        // Satellite: required sections are validated at open, so a
+        // truncated store fails loudly before any serving starts; a cut
+        // that only removes optional tiers degrades instead
         let mut spec = preset("moons").unwrap().clone();
         spec.n = 48;
         let ds = Dataset::synthesize(&spec, 8);
@@ -975,9 +1282,23 @@ mod tests {
         std::fs::remove_dir_all(&dir).ok();
         let path = dir.join("moons.gds");
         save(&ds, &path).unwrap();
-        let full = std::fs::metadata(&path).unwrap().len();
+        let pristine = std::fs::read(&path).unwrap();
+
+        // tail cut into the optional quant tier: serving continues exact
         let f = std::fs::OpenOptions::new().write(true).open(&path).unwrap();
-        f.set_len(full - 16).unwrap();
+        f.set_len(pristine.len() as u64 - 16).unwrap();
+        drop(f);
+        let st = open_streaming(&path, 3, 0).unwrap();
+        assert_eq!(st.degraded, vec!["quant".to_string()]);
+        assert!(st.quant_rows().is_none());
+        let mut cur = st.row_cursor();
+        assert_eq!(cur.row(5), ds.row(5), "rows still stream");
+
+        // cut inside the data payload: hard failure naming the section
+        std::fs::write(&path, &pristine).unwrap();
+        let (start, len) = section_span(&path, "data");
+        let f = std::fs::OpenOptions::new().write(true).open(&path).unwrap();
+        f.set_len((start + len / 2) as u64).unwrap();
         drop(f);
         let err = format!("{:#}", open_streaming(&path, 3, 0).unwrap_err());
         assert!(
@@ -1000,6 +1321,41 @@ mod tests {
         let err = format!("{:#}", save(&st, &dir.join("copy.gds")).unwrap_err());
         assert!(err.contains("streamed"), "error must explain the gate: {err}");
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Byte span (start, byte_len) of `section`'s payload within the file.
+    fn section_span(path: &Path, section: &str) -> (usize, usize) {
+        let bytes = std::fs::read(path).unwrap();
+        let hlen = u32::from_le_bytes([bytes[4], bytes[5], bytes[6], bytes[7]]) as usize;
+        let header = parse(std::str::from_utf8(&bytes[8..8 + hlen]).unwrap()).unwrap();
+        let sections = header
+            .get("sections")
+            .and_then(crate::util::json::Json::as_arr)
+            .unwrap();
+        let sec = sections
+            .iter()
+            .find(|s| s.get("name").and_then(crate::util::json::Json::as_str) == Some(section))
+            .unwrap_or_else(|| panic!("store has no section `{section}`"));
+        let off = sec
+            .get("offset")
+            .and_then(crate::util::json::Json::as_f64)
+            .unwrap() as usize;
+        let len = sec
+            .get("len")
+            .and_then(crate::util::json::Json::as_f64)
+            .unwrap() as usize
+            * 4;
+        (8 + hlen + off, len)
+    }
+
+    /// Flip one payload bit in the middle of a named section — the
+    /// on-disk corruption the v5 checksums exist to catch.
+    fn flip_section_byte(path: &Path, section: &str) {
+        let (start, len) = section_span(path, section);
+        assert!(len > 0, "cannot corrupt empty section `{section}`");
+        let mut bytes = std::fs::read(path).unwrap();
+        bytes[start + len / 2] ^= 0x40;
+        std::fs::write(path, bytes).unwrap();
     }
 
     /// Rewrite a store's header with the `quant_*` sections stripped —
@@ -1093,6 +1449,200 @@ mod tests {
             assert_eq!(unpack_i8(&packed, n), codes, "n={n}");
         }
         assert_eq!(unpack_i8(&pack_i8(&[-128, 127, -1, 0, 42]), 5), [-128, 127, -1, 0, 42]);
+    }
+
+    #[test]
+    fn v5_stores_checksum_every_section() {
+        // Tentpole: every section the writer emits — including the alias
+        // subranges and the optional tiers — carries a crc32 in its header
+        // metadata, and a clean store loads with nothing degraded
+        let mut spec = preset("moons").unwrap().clone();
+        spec.n = 66;
+        let mut ds = Dataset::synthesize(&spec, 15);
+        ds.ivf = Some(IvfPartition::compute(&ds, 4, 31));
+        ds.shard_ivf = Some(ShardIvfPartition::compute(&ds, 3, 2, 32));
+        let dir = std::env::temp_dir().join("golddiff_store_crc_test");
+        std::fs::remove_dir_all(&dir).ok();
+        let path = dir.join("moons.gds");
+        save_sharded(&ds, &path, 3).unwrap();
+
+        let bytes = std::fs::read(&path).unwrap();
+        let hlen = u32::from_le_bytes([bytes[4], bytes[5], bytes[6], bytes[7]]) as usize;
+        let header = parse(std::str::from_utf8(&bytes[8..8 + hlen]).unwrap()).unwrap();
+        assert_eq!(header.get("version").and_then(Json::as_f64), Some(5.0));
+        let sections = header.get("sections").and_then(Json::as_arr).unwrap();
+        assert!(sections.len() >= 16 + 2 + 6 + 6, "full v1–v5 menu present");
+        for sec in sections {
+            let name = sec.get("name").and_then(Json::as_str).unwrap();
+            let crc = sec.get("crc32").and_then(Json::as_f64);
+            assert!(crc.is_some(), "section `{name}` must carry a checksum");
+        }
+        let rt = load(&path).unwrap();
+        assert!(rt.degraded.is_empty() && rt.checksum_failures == 0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corrupt_required_section_fails_naming_it() {
+        let mut spec = preset("moons").unwrap().clone();
+        spec.n = 54;
+        let ds = Dataset::synthesize(&spec, 19);
+        let dir = std::env::temp_dir().join("golddiff_store_corrupt_req_test");
+        std::fs::remove_dir_all(&dir).ok();
+        let path = dir.join("moons.gds");
+        save(&ds, &path).unwrap();
+        flip_section_byte(&path, "proxies");
+
+        let err = format!("{:#}", load(&path).unwrap_err());
+        assert!(
+            err.contains("proxies") && err.contains("checksum"),
+            "load must fail naming the corrupt section: {err}"
+        );
+        let err = format!("{:#}", open_streaming(&path, 2, 0).unwrap_err());
+        assert!(
+            err.contains("proxies") && err.contains("checksum"),
+            "the streaming open verifies the same sections: {err}"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corrupt_quant_tier_degrades_and_serving_continues() {
+        // Tentpole acceptance: a corrupt *optional* tier stands down like a
+        // legacy load — the exact f32 path serves, the degradation is
+        // surfaced on the dataset (and from there through `health`)
+        let mut spec = preset("moons").unwrap().clone();
+        spec.n = 58;
+        let ds = Dataset::synthesize(&spec, 29);
+        let dir = std::env::temp_dir().join("golddiff_store_corrupt_quant_test");
+        std::fs::remove_dir_all(&dir).ok();
+        let path = dir.join("moons.gds");
+        save_sharded(&ds, &path, 3).unwrap();
+        flip_section_byte(&path, "quant_err");
+
+        let rt = load(&path).unwrap();
+        assert_eq!(rt.degraded, vec!["quant".to_string()]);
+        assert_eq!(rt.checksum_failures, 1);
+        assert!(
+            rt.quant_rows().is_none(),
+            "the corrupt tier must pin off, not lazily rebuild from the corpus"
+        );
+        assert_eq!(rt.resident_rows(), ds.resident_rows(), "exact path intact");
+
+        let st = open_streaming(&path, 3, 0).unwrap();
+        assert_eq!(st.degraded, vec!["quant".to_string()]);
+        assert_eq!(st.checksum_failures, 1);
+        assert!(st.quant_rows().is_none());
+        let mut cur = st.row_cursor();
+        assert_eq!(cur.row(7), ds.row(7), "rows still stream byte-identical");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corrupt_ivf_partition_degrades_to_kmeans_rebuild() {
+        let mut spec = preset("moons").unwrap().clone();
+        spec.n = 62;
+        let mut ds = Dataset::synthesize(&spec, 37);
+        ds.ivf = Some(IvfPartition::compute(&ds, 5, 41));
+        let dir = std::env::temp_dir().join("golddiff_store_corrupt_ivf_test");
+        std::fs::remove_dir_all(&dir).ok();
+        let path = dir.join("moons.gds");
+        save(&ds, &path).unwrap();
+        flip_section_byte(&path, "ivf_centroids");
+
+        let rt = load(&path).unwrap();
+        assert!(rt.ivf.is_none(), "the corrupt partition must stand down");
+        assert!(rt.degraded.contains(&"ivf".to_string()));
+        assert_eq!(rt.checksum_failures, 1);
+        assert_eq!(rt.resident_rows(), ds.resident_rows());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn truncation_fuzz_every_section_fails_loudly_or_degrades() {
+        // Satellite: cut the file mid-payload at EVERY section the header
+        // lists (the full v1–v5 menu). Each cut must either fail naming a
+        // section, or — when only optional tiers are lost — load with the
+        // degradation recorded. No cut may load clean or crash raw.
+        let mut spec = preset("moons").unwrap().clone();
+        spec.n = 72;
+        let mut ds = Dataset::synthesize(&spec, 43);
+        ds.ivf = Some(IvfPartition::compute(&ds, 4, 51));
+        ds.shard_ivf = Some(ShardIvfPartition::compute(&ds, 3, 2, 52));
+        let dir = std::env::temp_dir().join("golddiff_store_trunc_fuzz_test");
+        std::fs::remove_dir_all(&dir).ok();
+        let path = dir.join("moons.gds");
+        save_sharded(&ds, &path, 3).unwrap();
+        let pristine = std::fs::read(&path).unwrap();
+        let hlen =
+            u32::from_le_bytes([pristine[4], pristine[5], pristine[6], pristine[7]]) as usize;
+        let header = parse(std::str::from_utf8(&pristine[8..8 + hlen]).unwrap()).unwrap();
+        let names: Vec<String> = header
+            .get("sections")
+            .and_then(Json::as_arr)
+            .unwrap()
+            .iter()
+            .map(|s| s.get("name").and_then(Json::as_str).unwrap().to_string())
+            .collect();
+        for name in &names {
+            std::fs::write(&path, &pristine).unwrap();
+            let (start, len) = section_span(&path, name);
+            if len == 0 {
+                continue;
+            }
+            let f = std::fs::OpenOptions::new().write(true).open(&path).unwrap();
+            f.set_len((start + len / 2) as u64).unwrap();
+            drop(f);
+            match load(&path) {
+                Err(e) => {
+                    let msg = format!("{e:#}");
+                    assert!(
+                        msg.contains("section"),
+                        "cut in `{name}`: the failure must name a section: {msg}"
+                    );
+                }
+                Ok(rt) => {
+                    assert!(
+                        !rt.degraded.is_empty(),
+                        "cut in `{name}` loaded clean — truncation must fail or degrade"
+                    );
+                }
+            }
+        }
+        // restored bytes load clean again
+        std::fs::write(&path, &pristine).unwrap();
+        let rt = load(&path).unwrap();
+        assert!(rt.degraded.is_empty());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn torn_tmp_write_never_corrupts_the_live_store() {
+        // Satellite: the writer goes `*.tmp` → fsync → rename, so a crash
+        // mid-write leaves a stale tmp file and an untouched live store
+        let mut spec = preset("moons").unwrap().clone();
+        spec.n = 44;
+        let ds = Dataset::synthesize(&spec, 53);
+        let dir = std::env::temp_dir().join("golddiff_store_torn_write_test");
+        std::fs::remove_dir_all(&dir).ok();
+        let path = dir.join("moons.gds");
+        save(&ds, &path).unwrap();
+        let good = std::fs::read(&path).unwrap();
+
+        // simulate the crash: half a store image under the tmp name,
+        // rename never reached
+        let tmp = path.with_extension("gds.tmp");
+        std::fs::write(&tmp, &good[..good.len() / 2]).unwrap();
+        let rt = load(&path).unwrap();
+        assert_eq!(rt.resident_rows(), ds.resident_rows(), "old store intact");
+        assert!(rt.degraded.is_empty() && rt.checksum_failures == 0);
+
+        // the next save publishes atomically over both: the tmp is
+        // consumed by the rename and the live store stays loadable
+        save(&ds, &path).unwrap();
+        assert!(!tmp.exists(), "save consumes its tmp via rename");
+        assert_eq!(load(&path).unwrap().resident_rows(), ds.resident_rows());
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

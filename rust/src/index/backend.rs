@@ -114,6 +114,15 @@ pub struct RetrievalStats {
     /// quant-screened rows excluded by the lower bound without touching
     /// f32 data — the quantised tier's saved work
     pub bound_rejects: u64,
+    /// transient streamed-read failures recovered by the bounded retry
+    /// (0 for a resident corpus)
+    pub retries: u64,
+    /// shard checksum mismatches observed on streamed reads (each retried;
+    /// persistent corruption fails the request instead of serving rows)
+    pub checksum_failures: u64,
+    /// faults the deterministic injector put into streamed reads (0
+    /// without `GOLDDIFF_FAULT_RATE` or a test-wired injector)
+    pub faults_injected: u64,
 }
 
 #[derive(Debug, Default)]
@@ -153,6 +162,9 @@ impl Counters {
             shard_evictions: 0,
             rows_streamed: 0,
             peak_row_bytes: 0,
+            retries: 0,
+            checksum_failures: 0,
+            faults_injected: 0,
             quant_rows_screened: self.quant_rows_screened.load(Ordering::Relaxed),
             rescore_rows: self.rescore_rows.load(Ordering::Relaxed),
             bound_rejects: self.bound_rejects.load(Ordering::Relaxed),

@@ -701,6 +701,9 @@ impl RetrievalBackend for ShardedBackend {
         s.shard_evictions = cache.evictions;
         s.rows_streamed = cache.rows_streamed;
         s.peak_row_bytes = cache.peak_row_bytes;
+        s.retries = cache.retries;
+        s.checksum_failures = cache.checksum_failures;
+        s.faults_injected = cache.faults_injected;
         s
     }
 

@@ -3,10 +3,14 @@
 //! Protocol:
 //!   → {"op":"ping"}                                  ← {"ok":true,"pong":true}
 //!   → {"op":"stats"}                                 ← {"ok":true,"stats":{…}}
-//!   → {"op":"generate","method":"golddiff","seed":1[,"class":3]}
+//!   → {"op":"health"}                                ← {"ok":true,"status":"ok"|"degraded",…}
+//!   → {"op":"generate","method":"golddiff","seed":1[,"class":3][,"deadline_ms":250]}
 //!                                                    ← {"ok":true,"id":…,"sample":[…],…}
 //! Queue-full responses carry `"ok":false,"error":"busy"` — the bounded
-//! queue's backpressure surfaced to clients (HTTP-429 analogue).
+//! queue's backpressure surfaced to clients (HTTP-429 analogue). A request
+//! that fails inside the engine answers `"ok":false` with the
+//! machine-readable reason (`"deadline_exceeded"`, `"internal"`) and the
+//! connection keeps serving.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -38,6 +42,7 @@ impl Server {
             .name("golddiff-server".into())
             .spawn(move || {
                 let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
+                let mut accept_err_logged = false;
                 while !sd.load(std::sync::atomic::Ordering::Relaxed) {
                     // reap finished connection handles each iteration — a
                     // long-lived server would otherwise grow `conns` by one
@@ -65,7 +70,16 @@ impl Server {
                         Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                             std::thread::sleep(std::time::Duration::from_millis(10));
                         }
-                        Err(_) => break,
+                        Err(e) => {
+                            // a transient accept failure (EMFILE, ECONNABORTED,
+                            // …) must not kill the listener: log the first
+                            // occurrence, back off briefly, keep accepting
+                            if !accept_err_logged {
+                                eprintln!("golddiff: server: accept failed ({e}); retrying");
+                                accept_err_logged = true;
+                            }
+                            std::thread::sleep(std::time::Duration::from_millis(50));
+                        }
                     }
                 }
                 for c in conns {
@@ -145,6 +159,11 @@ fn handle_line(line: &str, engine: &Engine) -> Result<Json> {
             j.set("ok", true).set("stats", engine.stats_json());
             Ok(j)
         }
+        "health" => {
+            let mut j = engine.health_json();
+            j.set("ok", true);
+            Ok(j)
+        }
         "generate" => {
             let method = req
                 .get("method")
@@ -153,10 +172,22 @@ fn handle_line(line: &str, engine: &Engine) -> Result<Json> {
                 .unwrap_or(DenoiserKind::GoldDiff);
             let seed = req.get("seed").and_then(Json::as_f64).unwrap_or(0.0) as u64;
             let class = req.get("class").and_then(Json::as_f64).map(|c| c as u32);
-            match engine.try_submit(method, seed, class) {
+            let deadline_ms = req
+                .get("deadline_ms")
+                .and_then(Json::as_f64)
+                .map(|v| v as u64);
+            match engine.try_submit_with_deadline(method, seed, class, deadline_ms) {
                 Ok(rx) => {
                     let resp = rx.recv().context("engine dropped request")?;
                     let mut j = Json::obj();
+                    if let Some(err) = &resp.error {
+                        // an engine-side failure is a clean protocol reply,
+                        // not a connection error — the stream keeps serving
+                        j.set("ok", false)
+                            .set("id", resp.id)
+                            .set("error", err.as_str());
+                        return Ok(j);
+                    }
                     j.set("ok", true)
                         .set("id", resp.id)
                         .set("latency_secs", resp.latency_secs)
@@ -177,18 +208,27 @@ fn handle_line(line: &str, engine: &Engine) -> Result<Json> {
     }
 }
 
-/// Blocking line-JSON client.
+/// Blocking line-JSON client with a read timeout (a wedged server surfaces
+/// as an error instead of hanging the caller forever) and an optional
+/// jittered-backoff retry for `"busy"` rejections.
 pub struct Client {
     reader: BufReader<TcpStream>,
     stream: TcpStream,
+    retry_rng: crate::util::rng::Pcg64,
 }
+
+/// Default client read timeout: generous enough for a cold engine start +
+/// a full trajectory, finite so a hung server cannot park the caller.
+const CLIENT_READ_TIMEOUT: std::time::Duration = std::time::Duration::from_secs(30);
 
 impl Client {
     pub fn connect(addr: &std::net::SocketAddr) -> Result<Client> {
         let stream = TcpStream::connect(addr)?;
+        stream.set_read_timeout(Some(CLIENT_READ_TIMEOUT))?;
         Ok(Client {
             reader: BufReader::new(stream.try_clone()?),
             stream,
+            retry_rng: crate::util::rng::Pcg64::new(0x601d),
         })
     }
 
@@ -196,7 +236,13 @@ impl Client {
         self.stream.write_all(req.to_string_compact().as_bytes())?;
         self.stream.write_all(b"\n")?;
         let mut line = String::new();
-        self.reader.read_line(&mut line)?;
+        let n = self
+            .reader
+            .read_line(&mut line)
+            .context("reading server reply")?;
+        if n == 0 {
+            anyhow::bail!("connection closed by server");
+        }
         parse(line.trim())
     }
 
@@ -207,17 +253,64 @@ impl Client {
     }
 
     pub fn generate(&mut self, method: &str, seed: u64, class: Option<u32>) -> Result<Json> {
+        self.generate_with_deadline(method, seed, class, None)
+    }
+
+    pub fn generate_with_deadline(
+        &mut self,
+        method: &str,
+        seed: u64,
+        class: Option<u32>,
+        deadline_ms: Option<u64>,
+    ) -> Result<Json> {
         let mut j = Json::obj();
         j.set("op", "generate").set("method", method).set("seed", seed);
         if let Some(c) = class {
             j.set("class", c as usize);
         }
+        if let Some(dl) = deadline_ms {
+            j.set("deadline_ms", dl);
+        }
         self.call(&j)
+    }
+
+    /// `generate`, retrying `"busy"` rejections up to `max_retries` times
+    /// with jittered exponential backoff (2ms doubling, capped at 500ms).
+    /// Any reply other than busy — success or a hard failure — returns
+    /// immediately.
+    pub fn generate_with_retry(
+        &mut self,
+        method: &str,
+        seed: u64,
+        class: Option<u32>,
+        max_retries: u32,
+    ) -> Result<Json> {
+        let mut backoff_ms: u64 = 2;
+        for attempt in 0..=max_retries {
+            let resp = self.generate(method, seed, class)?;
+            let busy = resp.get("ok").and_then(Json::as_bool) == Some(false)
+                && resp.get("error").and_then(Json::as_str) == Some("busy");
+            if !busy || attempt == max_retries {
+                return Ok(resp);
+            }
+            // full jitter: sleep uniformly in [0, backoff) so retrying
+            // clients spread out instead of re-colliding in lockstep
+            let jittered = self.retry_rng.below(backoff_ms.max(1) as usize) as u64;
+            std::thread::sleep(std::time::Duration::from_millis(jittered));
+            backoff_ms = (backoff_ms * 2).min(500);
+        }
+        unreachable!("loop returns on the last attempt")
     }
 
     pub fn stats(&mut self) -> Result<Json> {
         let mut j = Json::obj();
         j.set("op", "stats");
+        self.call(&j)
+    }
+
+    pub fn health(&mut self) -> Result<Json> {
+        let mut j = Json::obj();
+        j.set("op", "health");
         self.call(&j)
     }
 }
@@ -263,6 +356,53 @@ mod tests {
             .call(&crate::util::json::parse(r#"{"op":"wat"}"#).unwrap())
             .unwrap();
         assert_eq!(bad.get("ok").and_then(Json::as_bool), Some(false));
+
+        server.stop();
+    }
+
+    #[test]
+    fn health_deadline_and_panic_paths_over_tcp() {
+        if !std::path::Path::new("artifacts/manifest.json").exists() {
+            return;
+        }
+        let cfg = EngineConfig {
+            preset: "moons".into(),
+            data_dir: std::env::temp_dir().join("golddiff_server_fault_test"),
+            ..Default::default()
+        };
+        let engine = Arc::new(Engine::start(cfg).unwrap());
+        let server = Server::start(Arc::clone(&engine), "127.0.0.1:0").unwrap();
+        let mut client = Client::connect(&server.addr).unwrap();
+
+        // a clean start reports healthy with no degraded tiers
+        let h = client.health().unwrap();
+        assert_eq!(h.get("ok").and_then(Json::as_bool), Some(true));
+        assert_eq!(h.get("status").and_then(Json::as_str), Some("ok"));
+        assert!(h.get("degraded_tiers").unwrap().as_arr().unwrap().is_empty());
+
+        // an already-expired deadline answers deadline_exceeded, not a hang
+        let late = client
+            .generate_with_deadline("golddiff", 3, None, Some(0))
+            .unwrap();
+        assert_eq!(late.get("ok").and_then(Json::as_bool), Some(false));
+        assert_eq!(
+            late.get("error").and_then(Json::as_str),
+            Some("deadline_exceeded")
+        );
+
+        // a panicking request (out-of-range class) answers "internal" and
+        // the SAME connection keeps serving afterwards
+        let boom = client.generate("golddiff", 5, Some(9999)).unwrap();
+        assert_eq!(boom.get("ok").and_then(Json::as_bool), Some(false));
+        assert_eq!(boom.get("error").and_then(Json::as_str), Some("internal"));
+        let ok = client.generate_with_retry("golddiff", 5, None, 3).unwrap();
+        assert_eq!(ok.get("ok").and_then(Json::as_bool), Some(true));
+        assert_eq!(ok.get("sample").unwrap().as_arr().unwrap().len(), 2);
+
+        // the health op reflects the recovered panic + expired deadline
+        let h2 = client.health().unwrap();
+        assert!(h2.get("panics_recovered").unwrap().as_f64().unwrap() >= 1.0);
+        assert!(h2.get("deadline_expired").unwrap().as_f64().unwrap() >= 1.0);
 
         server.stop();
     }

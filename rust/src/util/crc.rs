@@ -1,0 +1,131 @@
+//! CRC32 (IEEE 802.3, polynomial `0xEDB88320`) over byte and typed slices.
+//!
+//! The `.gds` store (v5+) records one checksum per section so readers can
+//! verify payloads on first touch and name the corrupt section instead of
+//! serving garbage rows. A 256-entry table is built at compile time; the
+//! streaming [`Crc32`] form lets callers fold large payloads chunk by chunk
+//! without materialising a contiguous byte buffer.
+
+const fn make_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut crc = i as u32;
+        let mut bit = 0;
+        while bit < 8 {
+            crc = if crc & 1 != 0 {
+                (crc >> 1) ^ 0xEDB8_8320
+            } else {
+                crc >> 1
+            };
+            bit += 1;
+        }
+        table[i] = crc;
+        i += 1;
+    }
+    table
+}
+
+static TABLE: [u32; 256] = make_table();
+
+/// Streaming CRC32: `update` in any chunking, then `finish`.
+#[derive(Debug, Clone)]
+pub struct Crc32 {
+    state: u32,
+}
+
+impl Default for Crc32 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Crc32 {
+    pub fn new() -> Self {
+        Self { state: !0 }
+    }
+
+    pub fn update(&mut self, bytes: &[u8]) {
+        let mut crc = self.state;
+        for &b in bytes {
+            crc = (crc >> 8) ^ TABLE[((crc ^ b as u32) & 0xFF) as usize];
+        }
+        self.state = crc;
+    }
+
+    pub fn finish(&self) -> u32 {
+        !self.state
+    }
+}
+
+/// One-shot CRC32 of a byte slice.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = Crc32::new();
+    c.update(bytes);
+    c.finish()
+}
+
+/// CRC32 over the little-endian byte image of an f32 slice — exactly the
+/// bytes `write_store` puts on disk for an `f32` section.
+pub fn crc32_f32(vals: &[f32]) -> u32 {
+    let mut c = Crc32::new();
+    for v in vals {
+        c.update(&v.to_le_bytes());
+    }
+    c.finish()
+}
+
+/// CRC32 over the little-endian byte image of a u32 slice.
+pub fn crc32_u32(vals: &[u32]) -> u32 {
+    let mut c = Crc32::new();
+    for v in vals {
+        c.update(&v.to_le_bytes());
+    }
+    c.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_the_ieee_check_vector() {
+        // the canonical CRC32 test vector
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+    }
+
+    #[test]
+    fn empty_input_is_zero() {
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn streaming_chunks_match_one_shot() {
+        let data: Vec<u8> = (0..1024u32).map(|i| (i * 7 + 3) as u8).collect();
+        let whole = crc32(&data);
+        let mut c = Crc32::new();
+        for chunk in data.chunks(13) {
+            c.update(chunk);
+        }
+        assert_eq!(c.finish(), whole);
+    }
+
+    #[test]
+    fn typed_helpers_match_the_le_byte_image() {
+        let f = [1.5f32, -0.25, 3.0e7, f32::MIN_POSITIVE];
+        let bytes: Vec<u8> = f.iter().flat_map(|v| v.to_le_bytes()).collect();
+        assert_eq!(crc32_f32(&f), crc32(&bytes));
+
+        let u = [0u32, 1, 0xDEAD_BEEF, u32::MAX];
+        let bytes: Vec<u8> = u.iter().flat_map(|v| v.to_le_bytes()).collect();
+        assert_eq!(crc32_u32(&u), crc32(&bytes));
+    }
+
+    #[test]
+    fn single_bit_flip_changes_the_checksum() {
+        let mut data: Vec<u8> = (0..256u32).map(|i| i as u8).collect();
+        let clean = crc32(&data);
+        data[100] ^= 0x10;
+        assert_ne!(crc32(&data), clean);
+    }
+}

@@ -1,0 +1,229 @@
+//! Deterministic fault injection for the storage I/O seam.
+//!
+//! A seeded [`FaultInjector`] sits behind `ShardReader` (and therefore every
+//! streamed `RowSource` read) and decides, per I/O operation, whether to
+//! inject a failure. Faults are drawn from a PCG stream keyed by
+//! `GOLDDIFF_FAULT_SEED`, so a given seed + rate reproduces the exact same
+//! fault schedule across runs — tests can *prove* the retry / checksum /
+//! degrade paths fire and that results stay byte-identical to the no-fault
+//! run.
+//!
+//! Three fault kinds:
+//! - **Transient** — the read fails up front with an
+//!   `ErrorKind::Interrupted`-style error, before any bytes move. Models
+//!   EINTR / dropped NFS handles. Recoverable by retry.
+//! - **ShortRead** — the read returns fewer bytes than asked, then errors.
+//!   Models truncated reads off a flaky device. Recoverable by retry (the
+//!   reader re-seeks).
+//! - **BitFlip** — the read "succeeds" but one bit in the returned buffer
+//!   is flipped. Models silent media corruption; only the per-section
+//!   checksum (store v5+) can catch this. Test-only: `from_env` never
+//!   enables it, because without checksums (legacy stores) a flip would be
+//!   served as data.
+//!
+//! Env knobs (read once at source construction):
+//! - `GOLDDIFF_FAULT_RATE` — fraction of I/O ops that fault (0 disables).
+//! - `GOLDDIFF_FAULT_SEED` — PCG seed for the fault schedule (default 7).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::util::rng::Pcg64;
+
+/// What a faulted I/O operation does. See the module docs for semantics.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    Transient,
+    ShortRead,
+    BitFlip,
+}
+
+const KIND_TRANSIENT: u32 = 1 << 0;
+const KIND_SHORT: u32 = 1 << 1;
+const KIND_BITFLIP: u32 = 1 << 2;
+
+/// Seeded, thread-safe fault source. `roll()` is called once per I/O
+/// operation; the decision sequence depends only on (seed, call order), so
+/// single-threaded readers get a fully reproducible schedule.
+pub struct FaultInjector {
+    rng: Mutex<Pcg64>,
+    rate: f64,
+    kinds: u32,
+    /// stop injecting after this many faults (0 = unlimited). With
+    /// `rate = 1.0` this makes tests exactly deterministic: the first
+    /// `limit` ops fault, everything after runs clean.
+    limit: u64,
+    injected: AtomicU64,
+}
+
+impl std::fmt::Debug for FaultInjector {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("FaultInjector")
+            .field("rate", &self.rate)
+            .field("kinds", &self.kinds)
+            .field("limit", &self.limit)
+            .field("injected", &self.injected.load(Ordering::Relaxed))
+            .finish()
+    }
+}
+
+impl FaultInjector {
+    fn new(seed: u64, rate: f64, kinds: u32) -> Self {
+        Self {
+            rng: Mutex::new(Pcg64::new(seed)),
+            rate: rate.clamp(0.0, 1.0),
+            kinds,
+            limit: 0,
+            injected: AtomicU64::new(0),
+        }
+    }
+
+    /// Recoverable faults only (transient errors + short reads). Safe on
+    /// any store version: a retry reproduces the exact bytes, so results
+    /// stay byte-identical with or without checksums. This is what
+    /// `from_env` constructs.
+    pub fn transient(seed: u64, rate: f64) -> Self {
+        Self::new(seed, rate, KIND_TRANSIENT | KIND_SHORT)
+    }
+
+    /// Silent corruption (bit flips) only. Test-only: requires a v5+ store
+    /// whose section checksums turn the flip into a detectable, retryable
+    /// failure.
+    pub fn bit_flips(seed: u64, rate: f64) -> Self {
+        Self::new(seed, rate, KIND_BITFLIP)
+    }
+
+    /// Cap the number of injected faults. `rate = 1.0` + `with_limit(n)`
+    /// gives a fully deterministic schedule: ops 1..=n fault, the rest
+    /// run clean.
+    pub fn with_limit(mut self, n: u64) -> Self {
+        self.limit = n;
+        self
+    }
+
+    /// Per-op decision. `Some(kind)` means the caller must inject that
+    /// fault into this operation; the injected counter has already been
+    /// bumped.
+    pub fn roll(&self) -> Option<FaultKind> {
+        if self.rate <= 0.0 || self.kinds == 0 {
+            return None;
+        }
+        if self.limit != 0 && self.injected.load(Ordering::Relaxed) >= self.limit {
+            return None;
+        }
+        let mut rng = self.rng.lock().unwrap_or_else(|p| p.into_inner());
+        if rng.f64() >= self.rate {
+            return None;
+        }
+        // pick uniformly among the enabled kinds
+        let enabled: Vec<FaultKind> = [
+            (KIND_TRANSIENT, FaultKind::Transient),
+            (KIND_SHORT, FaultKind::ShortRead),
+            (KIND_BITFLIP, FaultKind::BitFlip),
+        ]
+        .iter()
+        .filter(|(bit, _)| self.kinds & bit != 0)
+        .map(|&(_, k)| k)
+        .collect();
+        let kind = enabled[rng.below(enabled.len())];
+        self.injected.fetch_add(1, Ordering::Relaxed);
+        Some(kind)
+    }
+
+    /// Flip one pseudo-random bit in `buf` (no-op on an empty buffer).
+    pub fn flip_bit(&self, buf: &mut [u8]) {
+        if buf.is_empty() {
+            return;
+        }
+        let mut rng = self.rng.lock().unwrap_or_else(|p| p.into_inner());
+        let byte = rng.below(buf.len());
+        let bit = (rng.next_u32() % 8) as u8;
+        buf[byte] ^= 1 << bit;
+    }
+
+    /// Total faults injected so far.
+    pub fn injected(&self) -> u64 {
+        self.injected.load(Ordering::Relaxed)
+    }
+
+    /// Build from `GOLDDIFF_FAULT_RATE` / `GOLDDIFF_FAULT_SEED`, or `None`
+    /// when the rate is unset/zero. Only recoverable kinds — running a
+    /// whole CI leg under this must leave every byte-equality assertion
+    /// intact.
+    pub fn from_env() -> Option<Arc<FaultInjector>> {
+        let rate = crate::config::env_f64("GOLDDIFF_FAULT_RATE", 0.0);
+        if rate <= 0.0 {
+            return None;
+        }
+        let seed = crate::config::env_u64("GOLDDIFF_FAULT_SEED", 7);
+        Some(Arc::new(FaultInjector::transient(seed, rate)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_seed_same_schedule() {
+        let a = FaultInjector::transient(11, 0.3);
+        let b = FaultInjector::transient(11, 0.3);
+        let seq_a: Vec<_> = (0..200).map(|_| a.roll()).collect();
+        let seq_b: Vec<_> = (0..200).map(|_| b.roll()).collect();
+        assert_eq!(seq_a, seq_b);
+        assert_eq!(a.injected(), b.injected());
+        assert!(a.injected() > 0, "rate 0.3 over 200 ops must fire");
+    }
+
+    #[test]
+    fn different_seed_different_schedule() {
+        let a = FaultInjector::transient(11, 0.3);
+        let b = FaultInjector::transient(12, 0.3);
+        let seq_a: Vec<_> = (0..200).map(|_| a.roll()).collect();
+        let seq_b: Vec<_> = (0..200).map(|_| b.roll()).collect();
+        assert_ne!(seq_a, seq_b);
+    }
+
+    #[test]
+    fn limit_caps_injection_then_runs_clean() {
+        let f = FaultInjector::transient(5, 1.0).with_limit(3);
+        let fired: Vec<_> = (0..10).map(|_| f.roll()).collect();
+        assert!(fired[..3].iter().all(|k| k.is_some()));
+        assert!(fired[3..].iter().all(|k| k.is_none()));
+        assert_eq!(f.injected(), 3);
+    }
+
+    #[test]
+    fn zero_rate_never_fires() {
+        let f = FaultInjector::transient(5, 0.0);
+        assert!((0..100).all(|_| f.roll().is_none()));
+        assert_eq!(f.injected(), 0);
+    }
+
+    #[test]
+    fn kinds_are_respected() {
+        let f = FaultInjector::bit_flips(9, 1.0);
+        for _ in 0..50 {
+            assert_eq!(f.roll(), Some(FaultKind::BitFlip));
+        }
+        let f = FaultInjector::transient(9, 1.0);
+        for _ in 0..50 {
+            let k = f.roll().unwrap();
+            assert!(k == FaultKind::Transient || k == FaultKind::ShortRead);
+        }
+    }
+
+    #[test]
+    fn flip_bit_changes_exactly_one_bit() {
+        let f = FaultInjector::bit_flips(3, 1.0);
+        let clean: Vec<u8> = (0..64u32).map(|i| i as u8).collect();
+        let mut buf = clean.clone();
+        f.flip_bit(&mut buf);
+        let diff_bits: u32 = clean
+            .iter()
+            .zip(&buf)
+            .map(|(a, b)| (a ^ b).count_ones())
+            .sum();
+        assert_eq!(diff_bits, 1);
+    }
+}

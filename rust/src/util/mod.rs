@@ -4,6 +4,8 @@
 //! pulled from crates.io. Each is small, documented and unit-tested.
 
 pub mod cli;
+pub mod crc;
+pub mod fault;
 pub mod json;
 pub mod mem;
 pub mod pgm;
