@@ -85,6 +85,11 @@ fn main() -> anyhow::Result<()> {
     println!("latency p95        : {:.3}s", all.percentile(0.95));
     println!("latency mean       : {:.3}s", all.mean());
     println!("\nengine stats: {}", engine.stats_json());
+    // degradation counters ride the health payload: `status` flips to
+    // "degraded" when a tier stood down, `workers_lost`/`remote_retries`
+    // account the distributed tier's fault history (stats carries
+    // `deadline_expired` and `degraded_tiers` alongside)
+    println!("engine health: {}", engine.health_json());
     println!("peak RSS           : {:.2} GiB", golddiff::util::mem::gib(golddiff::util::mem::peak_rss_bytes()));
 
     server.stop();

@@ -814,6 +814,110 @@ fn bench_checksum(ds: &golddiff::Dataset) {
     std::fs::remove_dir_all(&dir).ok();
 }
 
+/// Section 0g: the distributed shard-worker tier — identical screen +
+/// refine work through a loopback `RemoteShardBackend` fleet vs the
+/// in-process `ShardedBackend` it wraps. Byte-equality is asserted before
+/// timing (the merge-associativity contract from `index/README.md`), and
+/// the BENCH line carries the remote telemetry.
+fn bench_distributed(ds: &golddiff::Dataset) {
+    use std::sync::Arc;
+
+    use golddiff::index::RemoteShardBackend;
+
+    const BATCH: usize = 8;
+    let shards = 8;
+    let workers = 2;
+    let m = (ds.n / 10).max(1);
+    let k = (ds.n / 20).max(1);
+    let opts = BackendOpts {
+        shards,
+        ..BackendOpts::default()
+    };
+    let local = ShardedBackend::build(ds, RetrievalBackendKind::Batched, opts);
+    let remote = RemoteShardBackend::loopback(
+        Arc::new(ds.clone()),
+        RetrievalBackendKind::Batched,
+        opts,
+        workers,
+        true,
+        30_000,
+    )
+    .unwrap();
+
+    let mut rng = golddiff::util::rng::Pcg64::new(83);
+    let queries_data: Vec<Vec<f32>> = (0..BATCH)
+        .map(|_| {
+            let row = ds.proxy_row(rng.below(ds.n)).to_vec();
+            row.iter().map(|&v| v + rng.normal() * 0.3).collect()
+        })
+        .collect();
+    let queries: Vec<ProxyQuery> = queries_data
+        .iter()
+        .map(|q| ProxyQuery {
+            proxy: q,
+            class: None,
+        })
+        .collect();
+    let full_queries: Vec<Vec<f32>> = (0..BATCH as u64)
+        .map(|i| {
+            let mut r = golddiff::util::rng::Pcg64::new(800 + i);
+            (0..ds.d).map(|_| r.normal()).collect()
+        })
+        .collect();
+
+    println!("-- distributed loopback fleet vs in-process (shards={shards}, workers={workers}) --");
+    let pools = local.top_m_batch(ds, &queries, m);
+    assert_eq!(
+        remote.top_m_batch(ds, &queries, m),
+        pools,
+        "remote coarse screen must equal in-process byte-for-byte"
+    );
+    let qrefs: Vec<&[f32]> = full_queries.iter().map(|q| q.as_slice()).collect();
+    let poolrefs: Vec<&[u32]> = pools.iter().map(|p| p.as_slice()).collect();
+    assert_eq!(
+        remote.refine_top_k_batch(ds, &qrefs, &poolrefs, k),
+        local.refine_top_k_batch(ds, &qrefs, &poolrefs, k),
+        "remote refine must equal in-process byte-for-byte"
+    );
+    let t_local = bench(&format!("screen+refine x{BATCH} (in-process)"), 15, || {
+        let pools = local.top_m_batch(ds, &queries, m);
+        let poolrefs: Vec<&[u32]> = pools.iter().map(|p| p.as_slice()).collect();
+        let _ = local.refine_top_k_batch(ds, &qrefs, &poolrefs, k);
+    });
+    let t_remote = bench(&format!("screen+refine x{BATCH} (loopback workers)"), 15, || {
+        let pools = remote.top_m_batch(ds, &queries, m);
+        let poolrefs: Vec<&[u32]> = pools.iter().map(|p| p.as_slice()).collect();
+        let _ = remote.refine_top_k_batch(ds, &qrefs, &poolrefs, k);
+    });
+    let snap = remote.stats();
+    assert!(snap.remote_ops > 0, "the fleet must actually answer ops");
+    assert_eq!(snap.workers_lost, 0, "no worker may be lost in a clean run");
+    println!(
+        "{:>58}  -> {:.2}x of in-process, {} remote ops, {} retries",
+        "",
+        t_remote / t_local.max(1e-12),
+        snap.remote_ops,
+        snap.remote_retries
+    );
+    benchlib::emit_bench(
+        "distributed_vs_inprocess",
+        &[
+            ("batch", BATCH as f64),
+            ("m", m as f64),
+            ("k", k as f64),
+            ("n", ds.n as f64),
+            ("shards", shards as f64),
+            ("workers", workers as f64),
+            ("inprocess_secs", t_local),
+            ("remote_secs", t_remote),
+            ("overhead", t_remote / t_local.max(1e-12)),
+            ("remote_ops", snap.remote_ops as f64),
+            ("remote_retries", snap.remote_retries as f64),
+            ("workers_lost", snap.workers_lost as f64),
+        ],
+    );
+}
+
 fn main() -> anyhow::Result<()> {
     // GOLDDIFF_BENCH_N shrinks the corpus for CI smoke runs (synthesised
     // directly, bypassing the on-disk store so sizes never conflict)
@@ -859,6 +963,10 @@ fn main() -> anyhow::Result<()> {
     // 0f. v5 per-section checksum verification overhead (no runtime
     // required)
     bench_checksum(&ds);
+
+    // 0g. distributed shard-worker tier: loopback fleet vs in-process
+    // (no runtime required; byte-equality asserted before timing)
+    bench_distributed(&ds);
 
     // 1. coarse scan vs threads
     for threads in [1usize, 2, 4, 8] {

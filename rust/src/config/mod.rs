@@ -166,6 +166,22 @@ pub struct EngineConfig {
     /// data-free: the store is opened via `store::open_streaming` and rows
     /// stream shard-at-a-time through the LRU budget, byte-identically
     pub resident: bool,
+    /// loopback shard workers the engine spawns at start: `> 0` routes
+    /// retrieval through the distributed tier (`index::remote`) with the
+    /// workers in-process over 127.0.0.1 — the CI distributed leg, and the
+    /// smallest honest deployment. `0` (default) keeps retrieval
+    /// in-process — the byte-identical degenerate case
+    pub remote_workers: usize,
+    /// comma-separated `host:port` list of already-running external
+    /// `shard-worker` processes; non-empty wins over `remote_workers`
+    pub worker_addrs: String,
+    /// when a worker's retry budget is exhausted, stand the remote tier
+    /// down to the in-process path (byte-identical) instead of failing
+    /// requests; `false` surfaces the loss as request errors
+    pub remote_fallback: bool,
+    /// per-op ceiling (ms) a worker is given when the tick group carries
+    /// no tighter request deadline
+    pub remote_op_timeout_ms: u64,
     /// rng seed
     pub seed: u64,
 }
@@ -199,6 +215,10 @@ impl Default for EngineConfig {
             shards: env_usize("GOLDDIFF_SHARDS", 1),
             mem_budget_mb: env_usize("GOLDDIFF_MEM_BUDGET_MB", 0),
             resident: env_flag("GOLDDIFF_RESIDENT", true),
+            remote_workers: env_usize("GOLDDIFF_REMOTE_WORKERS", 0),
+            worker_addrs: String::new(),
+            remote_fallback: true,
+            remote_op_timeout_ms: 30_000,
             seed: 0,
         }
     }
@@ -236,6 +256,10 @@ impl EngineConfig {
             .set("shards", self.shards)
             .set("mem_budget_mb", self.mem_budget_mb)
             .set("resident", self.resident)
+            .set("remote_workers", self.remote_workers)
+            .set("worker_addrs", self.worker_addrs.as_str())
+            .set("remote_fallback", self.remote_fallback)
+            .set("remote_op_timeout_ms", self.remote_op_timeout_ms)
             .set("seed", self.seed);
         j
     }
@@ -294,6 +318,14 @@ impl EngineConfig {
                 .get("resident")
                 .and_then(Json::as_bool)
                 .unwrap_or(def.resident),
+            remote_workers: n("remote_workers", def.remote_workers as f64) as usize,
+            worker_addrs: s("worker_addrs", &def.worker_addrs),
+            remote_fallback: j
+                .get("remote_fallback")
+                .and_then(Json::as_bool)
+                .unwrap_or(def.remote_fallback),
+            remote_op_timeout_ms: n("remote_op_timeout_ms", def.remote_op_timeout_ms as f64)
+                as u64,
             seed: n("seed", def.seed as f64) as u64,
         })
     }
@@ -357,6 +389,14 @@ impl EngineConfig {
         if let Some(v) = args.get("resident") {
             self.resident = parse_flag(v);
         }
+        self.remote_workers = args.usize_or("remote-workers", self.remote_workers);
+        if let Some(v) = args.get("worker-addrs") {
+            self.worker_addrs = v.to_string();
+        }
+        if let Some(v) = args.get("remote-fallback") {
+            self.remote_fallback = parse_flag(v);
+        }
+        self.remote_op_timeout_ms = args.u64_or("remote-op-timeout-ms", self.remote_op_timeout_ms);
         self.steps = args.usize_or("steps", self.steps);
         self.workers = args.usize_or("workers", self.workers);
         self.scan_threads = args.usize_or("scan-threads", self.scan_threads);
@@ -410,6 +450,10 @@ mod tests {
         c.shards = 6;
         c.mem_budget_mb = 512;
         c.resident = false;
+        c.remote_workers = 3;
+        c.worker_addrs = "10.0.0.1:7401,10.0.0.2:7401".into();
+        c.remote_fallback = false;
+        c.remote_op_timeout_ms = 1500;
         let rt = EngineConfig::from_json(&parse(&c.to_json().to_string_compact()).unwrap())
             .unwrap();
         assert_eq!(rt, c);
@@ -457,6 +501,13 @@ mod tests {
         assert_eq!(c.shards, env_usize("GOLDDIFF_SHARDS", 1));
         assert_eq!(c.mem_budget_mb, env_usize("GOLDDIFF_MEM_BUDGET_MB", 0));
         assert_eq!(c.resident, env_flag("GOLDDIFF_RESIDENT", true));
+        // the distributed tier follows the env so the CI tier1-distrib leg
+        // can route every default-constructed engine through loopback
+        // shard workers at once
+        assert_eq!(c.remote_workers, env_usize("GOLDDIFF_REMOTE_WORKERS", 0));
+        assert!(c.worker_addrs.is_empty());
+        assert!(c.remote_fallback, "lost workers degrade, not fail");
+        assert_eq!(c.remote_op_timeout_ms, 30_000);
         // quant / simd follow the env so the CI tier1-quant leg can flip
         // every default-constructed retrieval path at once
         assert_eq!(c.quant, env_flag("GOLDDIFF_QUANT", false));
@@ -468,6 +519,8 @@ mod tests {
             "--refine-kernel", "off", "--ordering", "off", "--warm-start", "off",
             "--kernel-tile-q", "4", "--shards", "8", "--mem-budget-mb", "256",
             "--resident", "off", "--quant", "on", "--simd", "off",
+            "--remote-workers", "2", "--worker-addrs", "127.0.0.1:7401",
+            "--remote-fallback", "off", "--remote-op-timeout-ms", "500",
         ]
         .iter()
         .map(|s| s.to_string())
@@ -483,6 +536,10 @@ mod tests {
         assert!(!c.resident, "--resident off flips the out-of-core mode");
         assert!(c.quant, "--quant on enables the quantised tiers");
         assert!(!c.simd, "--simd off pins the scalar kernel lanes");
+        assert_eq!(c.remote_workers, 2);
+        assert_eq!(c.worker_addrs, "127.0.0.1:7401");
+        assert!(!c.remote_fallback);
+        assert_eq!(c.remote_op_timeout_ms, 500);
         let opts = c.backend_opts();
         assert!(!opts.kernel && !opts.refine_kernel && !opts.ordering);
         assert!(opts.quant && !opts.simd);

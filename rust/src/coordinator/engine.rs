@@ -35,6 +35,7 @@ use crate::data::shard::ShardPlan;
 use crate::data::store;
 use crate::denoiser::{DenoiserKind, StepContext};
 use crate::index::backend::{RetrievalBackend, RetrievalBackendKind};
+use crate::index::remote::RemoteShardBackend;
 use crate::runtime::{Runtime, SendRuntime};
 use crate::sampler;
 use crate::schedule::budget::BudgetSchedule;
@@ -150,8 +151,32 @@ impl Engine {
         // built once per engine (cluster-pruned reuses the persisted IVF
         // partitions here) and shared by every denoiser so telemetry
         // aggregates in one place; row residency routes through the
-        // dataset's source, so a streamed corpus serves every backend kind
-        let backend: Arc<dyn RetrievalBackend> = backend_kind.build(&ds, cfg.backend_opts());
+        // dataset's source, so a streamed corpus serves every backend kind.
+        // With worker addresses (external fleet) or `remote_workers > 0`
+        // (self-spawned loopback fleet) the retrieval tier goes
+        // distributed; `remote_workers = 0` is the byte-identical
+        // degenerate case — the plain in-process build below.
+        let backend: Arc<dyn RetrievalBackend> = if !cfg.worker_addrs.is_empty() {
+            Arc::new(RemoteShardBackend::connect(
+                &ds,
+                backend_kind,
+                cfg.backend_opts(),
+                &cfg.worker_addrs,
+                cfg.remote_fallback,
+                cfg.remote_op_timeout_ms,
+            )?)
+        } else if cfg.remote_workers > 0 {
+            Arc::new(RemoteShardBackend::loopback(
+                Arc::clone(&ds),
+                backend_kind,
+                cfg.backend_opts(),
+                cfg.remote_workers,
+                cfg.remote_fallback,
+                cfg.remote_op_timeout_ms,
+            )?)
+        } else {
+            backend_kind.build(&ds, cfg.backend_opts())
+        };
         let runtime = SendRuntime(Runtime::new(&cfg.artifacts_dir)?);
 
         let queue = Arc::new(BoundedQueue::<Submission>::new(cfg.queue_depth));
@@ -411,6 +436,39 @@ fn executor_loop(
             })
             .collect();
         for group in group_tick(&keys) {
+            // deadline re-check between tick groups: a request whose
+            // deadline elapsed mid-trajectory stops HERE — before its next
+            // retrieval pass — instead of burning the rest of a long
+            // trajectory it can no longer deliver. (The dequeue-time gate
+            // above only catches deadlines that expired while queued.)
+            // The completion sweep below answers the expired sequences.
+            let mut group = group;
+            group.seqs.retain(|&si| {
+                let seq = &mut active[si];
+                match seq.req.deadline_ms {
+                    Some(dl) if seq.submitted.elapsed().as_millis() as u64 >= dl => {
+                        seq.failed = Some("deadline_exceeded");
+                        lock_stats(&stats).deadline_expired += 1;
+                        false
+                    }
+                    _ => true,
+                }
+            });
+            if group.seqs.is_empty() {
+                continue;
+            }
+            // the group's tightest remaining budget rides to the retrieval
+            // tier, so a remote worker can refuse ops whose requester has
+            // already expired instead of burning the scan
+            let mut remaining: Option<u64> = None;
+            for &si in &group.seqs {
+                if let Some(dl) = active[si].req.deadline_ms {
+                    let waited = active[si].submitted.elapsed().as_millis() as u64;
+                    let left = dl.saturating_sub(waited);
+                    remaining = Some(remaining.map_or(left, |r| r.min(left)));
+                }
+            }
+            backend.set_deadline(remaining);
             // a failing (or panicking) group must not take the engine down:
             // its sequences answer `"error":"internal"` and serving
             // continues. AssertUnwindSafe is sound here because on any
@@ -834,6 +892,69 @@ mod tests {
         assert!(ok.error.is_none());
         assert_eq!(ok.sample.len(), 2);
         eng.shutdown();
+    }
+
+    #[test]
+    fn mid_trajectory_deadline_stops_between_tick_groups() {
+        if !std::path::Path::new("artifacts/manifest.json").exists() {
+            return;
+        }
+        let cfg = EngineConfig {
+            preset: "moons".into(),
+            data_dir: std::env::temp_dir().join("golddiff_engine_test"),
+            steps: 1000,
+            ..Default::default()
+        };
+        let eng = Engine::start(cfg).unwrap();
+        // tight but NOT already expired: the dequeue gate passes, at least
+        // the first tick group runs, and the between-group re-check stops
+        // the trajectory long before step 1000 (the PR-8 regression: this
+        // used to burn the whole schedule and only fail later arrivals)
+        let rx = eng
+            .submit_with_deadline(DenoiserKind::GoldDiff, 3, None, Some(50))
+            .unwrap();
+        let resp = rx.recv().unwrap();
+        assert_eq!(resp.error.as_deref(), Some("deadline_exceeded"));
+        let j = eng.stats_json();
+        assert_eq!(j.get("deadline_expired").unwrap().as_f64(), Some(1.0));
+        let steps = j.get("steps_executed").unwrap().as_f64().unwrap();
+        assert!(steps >= 1.0, "the request must have started its trajectory");
+        assert!(steps < 1000.0, "the expired request must stop early");
+        assert_eq!(j.get("completed").unwrap().as_f64(), Some(0.0));
+        eng.shutdown();
+    }
+
+    #[test]
+    fn remote_loopback_engine_serves_identical_samples() {
+        if !std::path::Path::new("artifacts/manifest.json").exists() {
+            return;
+        }
+        let mut samples = Vec::new();
+        for workers in [0usize, 2] {
+            let cfg = EngineConfig {
+                preset: "moons".into(),
+                data_dir: std::env::temp_dir().join("golddiff_engine_test"),
+                shards: 3,
+                remote_workers: workers,
+                ..Default::default()
+            };
+            let eng = Engine::start(cfg).unwrap();
+            let resp = eng.generate(DenoiserKind::GoldDiff, 23, None).unwrap();
+            assert!(resp.error.is_none());
+            let j = eng.stats_json();
+            if workers > 0 {
+                assert!(
+                    j.get("remote_ops").unwrap().as_f64().unwrap() > 0.0,
+                    "retrieval must have gone over the wire"
+                );
+                assert_eq!(j.get("workers_lost").unwrap().as_f64(), Some(0.0));
+                let h = eng.health_json();
+                assert_eq!(h.get("status").and_then(|s| s.as_str()), Some("ok"));
+            }
+            samples.push(resp.sample);
+            eng.shutdown();
+        }
+        assert_eq!(samples[0], samples[1], "loopback workers vs in-process");
     }
 
     #[test]

@@ -65,13 +65,47 @@ impl GenRequest {
             .and_then(DenoiserKind::parse)
             .ok_or_else(|| anyhow::anyhow!("bad or missing method"))?;
         Ok(GenRequest {
-            id: j.get("id").and_then(Json::as_f64).unwrap_or(0.0) as u64,
+            id: strict_u64_field(j, "id")?.unwrap_or(0),
             method,
-            seed: j.get("seed").and_then(Json::as_f64).unwrap_or(0.0) as u64,
-            class: j.get("class").and_then(Json::as_f64).map(|c| c as u32),
-            eta: j.get("eta").and_then(Json::as_f64).unwrap_or(0.0) as f32,
-            deadline_ms: j.get("deadline_ms").and_then(Json::as_f64).map(|v| v as u64),
+            seed: strict_u64_field(j, "seed")?.unwrap_or(0),
+            class: strict_u32_field(j, "class")?,
+            eta: match j.get("eta") {
+                None | Some(Json::Null) => 0.0,
+                Some(v) => v
+                    .as_f64()
+                    .filter(|e| e.is_finite())
+                    .ok_or_else(|| anyhow::anyhow!("bad_field:eta"))? as f32,
+            },
+            deadline_ms: strict_u64_field(j, "deadline_ms")?,
         })
+    }
+}
+
+/// Strictly-validated optional u64 protocol field: absent (or `null`) is
+/// `None`; present-but-malformed — negative, fractional, ≥ 2^53 (where an
+/// f64-backed number silently loses integer precision), or not a number at
+/// all — errors with the machine-readable `bad_field:<name>` reason instead
+/// of saturating through an `as` cast.
+pub fn strict_u64_field(j: &Json, name: &str) -> anyhow::Result<Option<u64>> {
+    match j.get(name) {
+        None | Some(Json::Null) => Ok(None),
+        Some(v) => v
+            .as_strict_u64()
+            .map(Some)
+            .ok_or_else(|| anyhow::anyhow!("bad_field:{name}")),
+    }
+}
+
+/// [`strict_u64_field`] additionally bounded to `u32` (class ids and other
+/// small protocol integers) — `{"class":-1}` answers `bad_field:class`
+/// instead of silently generating class 0.
+pub fn strict_u32_field(j: &Json, name: &str) -> anyhow::Result<Option<u32>> {
+    match j.get(name) {
+        None | Some(Json::Null) => Ok(None),
+        Some(v) => v
+            .as_strict_u32()
+            .map(Some)
+            .ok_or_else(|| anyhow::anyhow!("bad_field:{name}")),
     }
 }
 
@@ -156,6 +190,41 @@ mod tests {
     fn rejects_bad_method() {
         let j = crate::util::json::parse(r#"{"id":1,"method":"nope","seed":0}"#).unwrap();
         assert!(GenRequest::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn rejects_out_of_range_numeric_fields() {
+        // the PR-8 regression: {"class":-1} used to saturate to class 0
+        // through `as u32`; it must answer a clean bad_field error instead
+        let cases = [
+            (r#"{"method":"golddiff","class":-1}"#, "bad_field:class"),
+            (r#"{"method":"golddiff","class":1.5}"#, "bad_field:class"),
+            (r#"{"method":"golddiff","class":4294967296}"#, "bad_field:class"),
+            (r#"{"method":"golddiff","class":"0"}"#, "bad_field:class"),
+            (r#"{"method":"golddiff","seed":-3}"#, "bad_field:seed"),
+            // 2^53: the first integer an f64 JSON number cannot carry
+            // exactly — a seed this large would silently lose precision
+            (
+                r#"{"method":"golddiff","seed":9007199254740992}"#,
+                "bad_field:seed",
+            ),
+            (r#"{"method":"golddiff","id":2.25}"#, "bad_field:id"),
+            (r#"{"method":"golddiff","deadline_ms":-1}"#, "bad_field:deadline_ms"),
+            (r#"{"method":"golddiff","eta":"x"}"#, "bad_field:eta"),
+        ];
+        for (text, want) in cases {
+            let j = crate::util::json::parse(text).unwrap();
+            let err = GenRequest::from_json(&j).unwrap_err().to_string();
+            assert_eq!(err, want, "for {text}");
+        }
+        // the largest exactly-representable values still parse
+        let j = crate::util::json::parse(
+            r#"{"method":"golddiff","seed":9007199254740991,"class":4294967295}"#,
+        )
+        .unwrap();
+        let r = GenRequest::from_json(&j).unwrap();
+        assert_eq!(r.seed, 9_007_199_254_740_991);
+        assert_eq!(r.class, Some(u32::MAX));
     }
 
     #[test]

@@ -73,7 +73,15 @@ pub struct EngineStats {
     pub retries: u64,
     /// faults the deterministic injector put into streamed reads
     pub faults_injected: u64,
-    /// requests dropped at dequeue because their deadline had expired
+    /// remote-tier telemetry: ops answered by shard workers, worker
+    /// round-trips retried on transients, and workers whose retry budget
+    /// was exhausted (the remote tier stands down — `degraded_tiers`
+    /// gains `"remote"` — and serving continues in-process)
+    pub remote_ops: u64,
+    pub remote_retries: u64,
+    pub workers_lost: u64,
+    /// requests dropped because their deadline expired — at dequeue, or
+    /// between tick groups mid-trajectory
     pub deadline_expired: u64,
     /// panicking request groups caught by the worker's `catch_unwind`
     /// (each answered `"error":"internal"`; the engine keeps serving)
@@ -120,6 +128,9 @@ impl Default for EngineStats {
             checksum_failures: 0,
             retries: 0,
             faults_injected: 0,
+            remote_ops: 0,
+            remote_retries: 0,
+            workers_lost: 0,
             deadline_expired: 0,
             panics_recovered: 0,
         }
@@ -172,6 +183,15 @@ impl EngineStats {
         self.retries = snap.retries;
         self.checksum_failures = self.checksum_failures_load + snap.checksum_failures;
         self.faults_injected = snap.faults_injected;
+        self.remote_ops = snap.remote_ops;
+        self.remote_retries = snap.remote_retries;
+        self.workers_lost = snap.workers_lost;
+        // a lost worker degrades the remote tier exactly like a corrupt
+        // optional section degrades quant/ivf at load: serving continues
+        // (in-process), `health` reports it until restart
+        if snap.workers_lost > 0 && !self.degraded_tiers.iter().any(|t| t == "remote") {
+            self.degraded_tiers.push("remote".to_string());
+        }
     }
 
     /// Record the row source's residency snapshot — the authoritative
@@ -212,6 +232,8 @@ impl EngineStats {
             )
             .set("checksum_failures", self.checksum_failures as usize)
             .set("retries", self.retries as usize)
+            .set("workers_lost", self.workers_lost as usize)
+            .set("remote_retries", self.remote_retries as usize)
             .set("deadline_expired", self.deadline_expired as usize)
             .set("panics_recovered", self.panics_recovered as usize);
         j
@@ -278,6 +300,9 @@ impl EngineStats {
             .set("checksum_failures", self.checksum_failures as usize)
             .set("retries", self.retries as usize)
             .set("faults_injected", self.faults_injected as usize)
+            .set("remote_ops", self.remote_ops as usize)
+            .set("remote_retries", self.remote_retries as usize)
+            .set("workers_lost", self.workers_lost as usize)
             .set("deadline_expired", self.deadline_expired as usize)
             .set("panics_recovered", self.panics_recovered as usize);
         j
@@ -323,6 +348,10 @@ mod tests {
         assert_eq!(j.get("faults_injected").unwrap().as_f64(), Some(0.0));
         assert_eq!(j.get("deadline_expired").unwrap().as_f64(), Some(0.0));
         assert_eq!(j.get("panics_recovered").unwrap().as_f64(), Some(0.0));
+        // remote-tier telemetry is always present (zero on a single node)
+        assert_eq!(j.get("remote_ops").unwrap().as_f64(), Some(0.0));
+        assert_eq!(j.get("remote_retries").unwrap().as_f64(), Some(0.0));
+        assert_eq!(j.get("workers_lost").unwrap().as_f64(), Some(0.0));
         assert_eq!(
             j.get("degraded_tiers").unwrap().as_arr().unwrap().len(),
             0,
@@ -377,6 +406,9 @@ mod tests {
             retries: 3,
             checksum_failures: 1,
             faults_injected: 5,
+            remote_ops: 30,
+            remote_retries: 2,
+            workers_lost: 0,
         });
         let j = s.to_json();
         assert_eq!(j.get("clusters_pruned").unwrap().as_f64(), Some(24.0));
@@ -399,6 +431,31 @@ mod tests {
         assert_eq!(j.get("retries").unwrap().as_f64(), Some(3.0));
         assert_eq!(j.get("checksum_failures").unwrap().as_f64(), Some(1.0));
         assert_eq!(j.get("faults_injected").unwrap().as_f64(), Some(5.0));
+        assert_eq!(j.get("remote_ops").unwrap().as_f64(), Some(30.0));
+        assert_eq!(j.get("remote_retries").unwrap().as_f64(), Some(2.0));
+        assert!(
+            s.degraded_tiers.is_empty(),
+            "healthy workers degrade nothing"
+        );
+        // exhausting a worker's retry budget degrades the remote tier —
+        // once, idempotently across later snapshots
+        s.record_backend(crate::index::backend::RetrievalStats {
+            workers_lost: 1,
+            ..Default::default()
+        });
+        s.record_backend(crate::index::backend::RetrievalStats {
+            workers_lost: 1,
+            ..Default::default()
+        });
+        assert_eq!(s.workers_lost, 1);
+        assert_eq!(
+            s.degraded_tiers.iter().filter(|t| *t == "remote").count(),
+            1,
+            "remote degradation is recorded once"
+        );
+        let h = s.health_json();
+        assert_eq!(h.get("status").and_then(Json::as_str), Some("degraded"));
+        assert_eq!(h.get("workers_lost").unwrap().as_f64(), Some(1.0));
         // the source snapshot overrides the backend copy when streamed
         s.record_source(Some(crate::data::rows::RowSourceStats {
             rows_streamed: 1000,

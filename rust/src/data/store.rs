@@ -520,6 +520,32 @@ pub fn open_streaming_with(
     finish_dataset(sf, RowSource::Streamed(src))
 }
 
+/// [`open_streaming`] for a **shard worker** (`golddiff shard-worker`):
+/// the worker serves only its `assigned` shard subset, so this validates
+/// the assignment against the plan and pre-touches each assigned shard
+/// once — cold-stream cost (and any per-shard checksum failure) surfaces
+/// at open, not on the first remote op. An assignment id at or past the
+/// shard count is a coordinator routing bug and fails the open loudly
+/// rather than being silently ignored.
+pub fn open_worker(
+    path: &Path,
+    shards: usize,
+    mem_budget_mb: usize,
+    assigned: &[usize],
+) -> Result<Dataset> {
+    let ds = open_streaming(path, shards, mem_budget_mb)?;
+    let ns = shards.max(1);
+    for &sh in assigned {
+        anyhow::ensure!(sh < ns, "assigned shard {sh} out of range (store has {ns} shards)");
+    }
+    if let RowSource::Streamed(src) = &ds.rows {
+        for &sh in assigned {
+            let _ = src.shard_blocks(sh);
+        }
+    }
+    Ok(ds)
+}
+
 /// Classify and log an optional-tier read failure: checksum mismatches
 /// count separately in telemetry; either way the tier stands down and
 /// serving continues on the exact f32 path.
@@ -1048,6 +1074,26 @@ mod tests {
         assert_eq!(rt.row_blocks().rows, ds.row_blocks().rows);
         assert_eq!(rt.row_blocks().dim, ds.row_blocks().dim);
         assert_eq!(rt.row_blocks().block(0), ds.row_blocks().block(0));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn open_worker_pre_touches_assigned_shards_and_rejects_bad_ids() {
+        let mut spec = preset("moons").unwrap().clone();
+        spec.n = 96;
+        let ds = Dataset::synthesize(&spec, 5);
+        let dir = std::env::temp_dir().join("golddiff_store_worker_test");
+        std::fs::remove_dir_all(&dir).ok();
+        let path = dir.join("moons.gds");
+        save_sharded(&ds, &path, 4).unwrap();
+        let w = open_worker(&path, 4, 8, &[1, 3]).unwrap();
+        let st = w.source_stats().expect("worker opens a streamed source");
+        assert!(st.rows_streamed > 0, "assigned shards stream at open");
+        assert!(st.resident_shards >= 1);
+        assert!(
+            open_worker(&path, 4, 8, &[4]).is_err(),
+            "shard id past the plan fails the open"
+        );
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -123,6 +123,15 @@ pub struct RetrievalStats {
     /// faults the deterministic injector put into streamed reads (0
     /// without `GOLDDIFF_FAULT_RATE` or a test-wired injector)
     pub faults_injected: u64,
+    /// retrieval ops answered by remote shard workers (0 for the
+    /// in-process backends)
+    pub remote_ops: u64,
+    /// worker round-trips retried after a transient failure (each op
+    /// retries with backoff before its worker is declared lost)
+    pub remote_retries: u64,
+    /// workers whose retry budget was exhausted — the remote tier stood
+    /// down to the in-process path (or failed the op, with fallback off)
+    pub workers_lost: u64,
 }
 
 #[derive(Debug, Default)]
@@ -165,6 +174,9 @@ impl Counters {
             retries: 0,
             checksum_failures: 0,
             faults_injected: 0,
+            remote_ops: 0,
+            remote_retries: 0,
+            workers_lost: 0,
             quant_rows_screened: self.quant_rows_screened.load(Ordering::Relaxed),
             rescore_rows: self.rescore_rows.load(Ordering::Relaxed),
             bound_rejects: self.bound_rejects.load(Ordering::Relaxed),
@@ -311,6 +323,14 @@ pub trait RetrievalBackend: Send + Sync {
 
     /// Zero the telemetry counters (bench harness hook).
     fn reset_stats(&self);
+
+    /// Budget hint for the next retrieval op: the tightest remaining
+    /// request deadline in the tick group, or `None` when nothing in the
+    /// group carries one. In-process backends ignore it (a local scan
+    /// cannot be abandoned mid-flight without losing exactness); the
+    /// remote tier forwards it so a worker can refuse an op whose
+    /// requester has already expired instead of burning the scan.
+    fn set_deadline(&self, _remaining_ms: Option<u64>) {}
 }
 
 // ---------------------------------------------------------------------------
@@ -472,7 +492,36 @@ pub fn batched_refine(
     let mut rows_visited = 0u64;
     for (qc, pc) in qs.chunks(64).zip(pools.chunks(64)) {
         let (res, rows) = batched_refine_group(ds, qc, pc, k, threads);
-        out.extend(res);
+        out.extend(
+            res.into_iter()
+                .map(|l| l.into_iter().map(|(_, i)| i).collect::<Vec<u32>>()),
+        );
+        rows_visited += rows;
+    }
+    (out, rows_visited)
+}
+
+/// [`batched_refine`] keeping each survivor's exact f32 distance, each
+/// list canonicalised to ascending `(distance, row id)` — the form a shard
+/// worker ships so the coordinator's merge is deterministic regardless of
+/// heap order. Same row sets as [`batched_refine`]; only the order of
+/// exact-tie distances can differ (the id tiebreak vs heap order).
+pub(crate) fn batched_refine_scored(
+    ds: &Dataset,
+    qs: &[&[f32]],
+    pools: &[&[u32]],
+    k: usize,
+    threads: usize,
+) -> (Vec<Vec<(f32, u32)>>, u64) {
+    assert_eq!(qs.len(), pools.len());
+    let mut out = Vec::with_capacity(qs.len());
+    let mut rows_visited = 0u64;
+    for (qc, pc) in qs.chunks(64).zip(pools.chunks(64)) {
+        let (res, rows) = batched_refine_group(ds, qc, pc, k, threads);
+        out.extend(res.into_iter().map(|mut l| {
+            l.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+            l
+        }));
         rows_visited += rows;
     }
     (out, rows_visited)
@@ -499,7 +548,7 @@ fn batched_refine_group(
     pools: &[&[u32]],
     k: usize,
     threads: usize,
-) -> (Vec<Vec<u32>>, u64) {
+) -> (Vec<Vec<(f32, u32)>>, u64) {
     // union of the pools with a per-row membership mask, in deterministic
     // (ascending row id) order so shard merges stay reproducible
     let mut mask: HashMap<u32, u64> = HashMap::new();
@@ -541,13 +590,10 @@ fn batched_refine_group(
         }
     }
     let rows = union.len() as u64;
-    (
-        merged
-            .into_iter()
-            .map(|h| h.into_sorted().into_iter().map(|(_, i)| i).collect())
-            .collect(),
-        rows,
-    )
+    // lists stay in `into_sorted` (distance-only) order here so the
+    // id-mapping caller reproduces the seed bytes exactly; the scored
+    // caller canonicalises to `(distance, row id)` on top
+    (merged.into_iter().map(|h| h.into_sorted()).collect(), rows)
 }
 
 /// Per-query heap caps for a refine group — the per-query refine's clamp.
@@ -635,10 +681,35 @@ pub(crate) fn refine_masked_by_shard(
     k: usize,
     threads: usize,
 ) -> (Vec<Vec<u32>>, u64, KernelStats) {
+    let (scored, rows, stats) =
+        refine_masked_by_shard_scored(plan, blocks_for, qs, pools, k, threads);
+    (
+        scored
+            .into_iter()
+            .map(|l| l.into_iter().map(|(_, i)| i).collect())
+            .collect(),
+        rows,
+        stats,
+    )
+}
+
+/// [`refine_masked_by_shard`] keeping each survivor's exact f32 distance —
+/// the internal merge is already `(distance, row id)`-ordered, so this is
+/// the same computation with the final id projection left to the caller.
+/// Shard workers ship these scored lists; the coordinator's cross-worker
+/// merge then reproduces the in-process result byte for byte.
+pub(crate) fn refine_masked_by_shard_scored(
+    plan: &ShardPlan,
+    blocks_for: &(dyn Fn(usize) -> Arc<RowBlocks> + Sync),
+    qs: &[&[f32]],
+    pools: &[&[u32]],
+    k: usize,
+    threads: usize,
+) -> (Vec<Vec<(f32, u32)>>, u64, KernelStats) {
     assert_eq!(qs.len(), pools.len());
     let caps = refine_caps(pools, k);
     let ns = plan.count();
-    let mut out: Vec<Vec<u32>> = Vec::with_capacity(qs.len());
+    let mut out: Vec<Vec<(f32, u32)>> = Vec::with_capacity(qs.len());
     // `refine_rows` keeps the monolithic ladder's accounting — distinct
     // rows per ≤64-query group — so resident and streamed/sharded runs of
     // the same tick group report comparable telemetry
@@ -715,7 +786,7 @@ pub(crate) fn refine_masked_by_shard(
                 .collect();
             all.sort_unstable_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
             all.truncate(c);
-            out.push(all.into_iter().map(|(_, i)| i).collect());
+            out.push(all);
         }
     }
     (out, rows_visited, stats)

@@ -15,6 +15,7 @@
 
 pub mod backend;
 pub mod kernel;
+pub mod remote;
 pub mod scan;
 pub mod shard;
 pub mod topk;
@@ -24,6 +25,7 @@ pub use backend::{
     BackendOpts, BatchedScan, ClusterPruned, FlatScan, ProxyQuery, RetrievalBackend,
     RetrievalBackendKind, RetrievalStats,
 };
+pub use remote::RemoteShardBackend;
 pub use shard::ShardedBackend;
 pub use kernel::{
     block_order, KernelScan, KernelStats, ProxyBlocks, RowBlocks, BLOCK_ROWS, TILE_Q,

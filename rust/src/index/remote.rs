@@ -1,0 +1,779 @@
+//! Distributed retrieval tier: a coordinator that fans retrieval ops out
+//! to shard workers and merges their results **exactly**.
+//!
+//! [`RemoteShardBackend`] wraps an in-process [`ShardedBackend`] and a set
+//! of [`ShardWorker`] endpoints. Shard `s` routes to worker `s % W`; each
+//! op names its worker's explicit shard subset, so re-routing after a
+//! worker loss needs no rebalancing handshake. Because every per-(query,
+//! row) distance is a pure function of the query and the row, and the
+//! merge order `(distance, row id)` is a total order over distinct rows,
+//! the top-cap of a union is independent of how the union was grouped —
+//! worker-local merges followed by the coordinator merge reproduce the
+//! in-process screen byte for byte (`index/README.md` § Distributed).
+//!
+//! Failure discipline carries the PR-7 contract over the network:
+//!
+//! - transport errors retry per worker (bounded attempts, doubling
+//!   backoff, reconnect between attempts), counted in `remote_retries`;
+//! - a worker that stays unreachable marks the tier lost
+//!   (`workers_lost`), and every later op takes the in-process fallback —
+//!   byte-identical answers, degraded health (`degraded_tiers` gains
+//!   `"remote"`) — or panics the op when `remote_fallback` is off, which
+//!   the engine's catch-unwind answers as `"internal"`;
+//! - a worker refusing an op with `deadline_exceeded` is neither retried
+//!   nor fatal: the op computes in-process and the engine's between-group
+//!   deadline check expires the request.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::Result;
+
+use super::backend::{
+    BackendOpts, ProxyQuery, RetrievalBackend, RetrievalBackendKind, RetrievalStats,
+};
+use super::shard::{Scored, ShardedBackend};
+use crate::data::dataset::Dataset;
+use crate::server::worker::ShardWorker;
+use crate::util::json::{decode_scored, encode_f32s, encode_u32s, parse, Json};
+
+/// Transport retry budget per op: attempts beyond the first pay a
+/// doubling backoff (1 → 16 ms) and a fresh connection.
+const RETRY_ATTEMPTS: u32 = 7;
+const BACKOFF_CAP_MS: u64 = 16;
+
+/// `deadline_ms` sentinel for "no deadline set".
+const NO_DEADLINE: u64 = u64::MAX;
+
+/// One worker endpoint with its (lazily dialled, re-dialled on retry)
+/// connection.
+struct WorkerSlot {
+    addr: String,
+    conn: Mutex<Option<WireConn>>,
+}
+
+struct WireConn {
+    reader: BufReader<TcpStream>,
+    stream: TcpStream,
+}
+
+/// Outcome of one worker op after the retry loop.
+enum OpOutcome {
+    Ok(Json),
+    /// The worker refused: the requester's deadline already elapsed.
+    Deadline,
+    /// Transport exhausted or protocol breach — the tier stood down.
+    Lost,
+}
+
+/// The distributed retrieval tier (see module docs).
+pub struct RemoteShardBackend {
+    inner: Arc<ShardedBackend>,
+    workers: Vec<WorkerSlot>,
+    /// remaining request budget for the next ops (`u64::MAX` = none) —
+    /// written by the engine via [`RetrievalBackend::set_deadline`]
+    deadline_ms: AtomicU64,
+    remote_ops: AtomicU64,
+    remote_retries: AtomicU64,
+    workers_lost: AtomicU64,
+    /// once true every op takes the in-process path (graceful stand-down)
+    lost: AtomicBool,
+    fallback: bool,
+    op_timeout_ms: u64,
+    /// loopback workers this coordinator spawned (stopped on drop); empty
+    /// when connected to external workers
+    owned: Mutex<Vec<ShardWorker>>,
+}
+
+impl RemoteShardBackend {
+    /// Spawn `workers` loopback [`ShardWorker`]s over ONE shared
+    /// in-process backend and coordinate across them. Loopback is the
+    /// deterministic single-process harness: every byte still crosses a
+    /// real TCP socket and the real wire encoding, so it exercises the
+    /// full distributed path, while the shared backend keeps scan
+    /// telemetry (and the LRU row cache) unified.
+    pub fn loopback(
+        ds: Arc<Dataset>,
+        kind: RetrievalBackendKind,
+        opts: BackendOpts,
+        workers: usize,
+        fallback: bool,
+        op_timeout_ms: u64,
+    ) -> Result<RemoteShardBackend> {
+        let inner = Arc::new(ShardedBackend::build(&ds, kind, opts));
+        let mut owned = Vec::new();
+        let mut slots = Vec::new();
+        for _ in 0..workers.max(1) {
+            let w = ShardWorker::start(Arc::clone(&ds), Arc::clone(&inner), "127.0.0.1:0")?;
+            slots.push(WorkerSlot {
+                addr: w.addr.to_string(),
+                conn: Mutex::new(None),
+            });
+            owned.push(w);
+        }
+        Ok(RemoteShardBackend::assemble(inner, slots, owned, fallback, op_timeout_ms))
+    }
+
+    /// Coordinate across external workers at `addrs` (comma-separated
+    /// `host:port`). Workers must have been started over the same store
+    /// with the same backend options — identical per-shard structures are
+    /// what make the distributed merge exact. The in-process backend is
+    /// still built: it is the stand-down path, the warm/cold fallback and
+    /// the quant prefilter host.
+    pub fn connect(
+        ds: &Dataset,
+        kind: RetrievalBackendKind,
+        opts: BackendOpts,
+        addrs: &str,
+        fallback: bool,
+        op_timeout_ms: u64,
+    ) -> Result<RemoteShardBackend> {
+        let inner = Arc::new(ShardedBackend::build(ds, kind, opts));
+        let slots: Vec<WorkerSlot> = addrs
+            .split(',')
+            .map(str::trim)
+            .filter(|a| !a.is_empty())
+            .map(|a| WorkerSlot {
+                addr: a.to_string(),
+                conn: Mutex::new(None),
+            })
+            .collect();
+        if slots.is_empty() {
+            anyhow::bail!("remote backend needs at least one worker address");
+        }
+        Ok(RemoteShardBackend::assemble(inner, slots, Vec::new(), fallback, op_timeout_ms))
+    }
+
+    fn assemble(
+        inner: Arc<ShardedBackend>,
+        workers: Vec<WorkerSlot>,
+        owned: Vec<ShardWorker>,
+        fallback: bool,
+        op_timeout_ms: u64,
+    ) -> RemoteShardBackend {
+        RemoteShardBackend {
+            inner,
+            workers,
+            deadline_ms: AtomicU64::new(NO_DEADLINE),
+            remote_ops: AtomicU64::new(0),
+            remote_retries: AtomicU64::new(0),
+            workers_lost: AtomicU64::new(0),
+            lost: AtomicBool::new(false),
+            fallback,
+            op_timeout_ms,
+            owned: Mutex::new(owned),
+        }
+    }
+
+    /// The shared in-process backend (stand-down path / introspection).
+    pub fn inner(&self) -> &ShardedBackend {
+        &self.inner
+    }
+
+    /// Fault-injection hook: stop loopback worker `wi` — its listener
+    /// closes and live connections drain within the worker's read-timeout
+    /// tick, so the coordinator's next op to it exhausts its retries and
+    /// the tier stands down.
+    pub fn stop_worker(&self, wi: usize) {
+        if let Some(w) = self.owned.lock().unwrap().get_mut(wi) {
+            w.stop();
+        }
+    }
+
+    /// Is the remote tier still answering (never lost a worker)?
+    pub fn tier_up(&self) -> bool {
+        !self.lost.load(Ordering::Relaxed)
+    }
+
+    fn op_deadline(&self) -> Option<u64> {
+        let v = self.deadline_ms.load(Ordering::Relaxed);
+        (v != NO_DEADLINE).then_some(v)
+    }
+
+    /// `(worker, shard subset)` for every worker that owns ≥ 1 shard
+    /// under the `s % W` routing.
+    fn worker_subsets(&self) -> Vec<(usize, Vec<u32>)> {
+        let ns = self.inner.corpus().plan().count();
+        let w = self.workers.len();
+        (0..w)
+            .map(|wi| (wi, (wi..ns).step_by(w).map(|s| s as u32).collect::<Vec<u32>>()))
+            .filter(|(_, subset)| !subset.is_empty())
+            .collect()
+    }
+
+    /// Mark the tier lost. With `remote_fallback` off this panics the op
+    /// instead — the engine's catch-unwind answers `"internal"`, which is
+    /// the configured "loud" failure mode.
+    fn mark_lost(&self, why: &str) {
+        self.workers_lost.fetch_add(1, Ordering::Relaxed);
+        self.lost.store(true, Ordering::Relaxed);
+        eprintln!("golddiff: remote: {why}; tier standing down to in-process path");
+        assert!(self.fallback, "remote worker lost and remote_fallback is off: {why}");
+    }
+
+    fn dial(&self, addr: &str) -> std::io::Result<WireConn> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_read_timeout(Some(Duration::from_millis(self.op_timeout_ms.max(1))))?;
+        Ok(WireConn {
+            reader: BufReader::new(stream.try_clone()?),
+            stream,
+        })
+    }
+
+    /// One op against worker `wi`: bounded retry with doubling backoff
+    /// and a fresh connection per attempt. Only *transport* faults retry
+    /// — a parsed `{"ok":false}` reply is the worker speaking clearly,
+    /// and repeating the question would not change the answer.
+    fn call_worker(&self, wi: usize, req: &Json) -> OpOutcome {
+        self.remote_ops.fetch_add(1, Ordering::Relaxed);
+        let slot = &self.workers[wi];
+        let mut guard = slot.conn.lock().unwrap();
+        let mut backoff: u64 = 1;
+        for attempt in 0..RETRY_ATTEMPTS {
+            if attempt > 0 {
+                self.remote_retries.fetch_add(1, Ordering::Relaxed);
+                std::thread::sleep(Duration::from_millis(backoff));
+                backoff = (backoff * 2).min(BACKOFF_CAP_MS);
+            }
+            if guard.is_none() {
+                match self.dial(&slot.addr) {
+                    Ok(c) => *guard = Some(c),
+                    Err(_) => continue,
+                }
+            }
+            let conn = guard.as_mut().expect("connection dialled above");
+            match exchange(conn, req) {
+                Ok(j) => {
+                    if j.get("ok").and_then(Json::as_bool) == Some(true) {
+                        return OpOutcome::Ok(j);
+                    }
+                    let err = j.get("error").and_then(Json::as_str).unwrap_or("unknown");
+                    if err == "deadline_exceeded" {
+                        return OpOutcome::Deadline;
+                    }
+                    // a protocol rejection (bad_field, unknown op) means
+                    // the coordinator and worker disagree about the wire
+                    // contract — retrying cannot help, stand down
+                    self.mark_lost(&format!("worker {wi} rejected op: {err}"));
+                    return OpOutcome::Lost;
+                }
+                Err(_) => {
+                    // malformed frame / timeout / closed socket: drop the
+                    // connection and retry on a fresh one
+                    *guard = None;
+                }
+            }
+        }
+        self.mark_lost(&format!("worker {wi} unreachable after {RETRY_ATTEMPTS} attempts"));
+        OpOutcome::Lost
+    }
+
+    /// Fan one request-per-worker batch out on scoped threads and join.
+    fn fan_out(&self, reqs: Vec<(usize, Json)>) -> Vec<OpOutcome> {
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = reqs
+                .into_iter()
+                .map(|(wi, req)| scope.spawn(move || self.call_worker(wi, &req)))
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        })
+    }
+
+    /// Distributed coarse screen. `None` means "answer in-process" —
+    /// either the tier stood down or a worker refused on deadline.
+    fn remote_screen(&self, ds: &Dataset, queries: &[ProxyQuery], m: usize) -> Option<Vec<Scored>> {
+        let cap = screen_cap(ds, m);
+        let flat: Vec<f32> = queries.iter().flat_map(|q| q.proxy.iter().copied()).collect();
+        let classes: Vec<u32> = queries.iter().map(|q| q.class.unwrap_or(u32::MAX)).collect();
+        let reqs: Vec<(usize, Json)> = self
+            .worker_subsets()
+            .into_iter()
+            .map(|(wi, subset)| {
+                let mut req = Json::obj();
+                req.set("op", "coarse_screen")
+                    .set("queries", encode_f32s(&flat).as_str())
+                    .set("classes", encode_u32s(&classes).as_str())
+                    .set("m", m)
+                    .set("shards", encode_u32s(&subset).as_str());
+                if let Some(dl) = self.op_deadline() {
+                    req.set("deadline_ms", dl);
+                }
+                (wi, req)
+            })
+            .collect();
+        let mut per_worker: Vec<Vec<Scored>> = Vec::with_capacity(reqs.len());
+        for outcome in self.fan_out(reqs) {
+            match outcome {
+                OpOutcome::Ok(j) => match decode_results(&j, queries.len()) {
+                    Some(lists) => per_worker.push(lists),
+                    None => {
+                        self.mark_lost("worker sent a malformed screen reply");
+                        return None;
+                    }
+                },
+                OpOutcome::Deadline | OpOutcome::Lost => return None,
+            }
+        }
+        Some(
+            (0..queries.len())
+                .map(|qi| {
+                    let mut all: Scored =
+                        per_worker.iter().flat_map(|w| w[qi].iter().copied()).collect();
+                    all.sort_unstable_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+                    all.truncate(cap);
+                    all
+                })
+                .collect(),
+        )
+    }
+
+    /// Distributed warm screen. Outer `None` = answer in-process; inner
+    /// `None` = unanimous seed-miss, fall back to the cold screen (the
+    /// same contract as the in-process warm path, decided by a global
+    /// property every worker agrees on).
+    fn remote_warm(
+        &self,
+        ds: &Dataset,
+        qp: &[f32],
+        class: Option<u32>,
+        m: usize,
+        seeds: &[u32],
+    ) -> Option<Option<Scored>> {
+        let cap = screen_cap(ds, m);
+        let reqs: Vec<(usize, Json)> = self
+            .worker_subsets()
+            .into_iter()
+            .map(|(wi, subset)| {
+                let mut req = Json::obj();
+                req.set("op", "warm_screen")
+                    .set("query", encode_f32s(qp).as_str())
+                    .set("m", m)
+                    .set("seeds", encode_u32s(seeds).as_str())
+                    .set("shards", encode_u32s(&subset).as_str());
+                if let Some(y) = class {
+                    req.set("class", y as usize);
+                }
+                if let Some(dl) = self.op_deadline() {
+                    req.set("deadline_ms", dl);
+                }
+                (wi, req)
+            })
+            .collect();
+        let mut merged: Scored = Vec::new();
+        for outcome in self.fan_out(reqs) {
+            match outcome {
+                OpOutcome::Ok(j) => {
+                    if j.get("found").and_then(Json::as_bool) != Some(true) {
+                        // seed eligibility is a global property — every
+                        // worker reaches the same verdict
+                        return Some(None);
+                    }
+                    let sc = j.get("result").and_then(Json::as_str);
+                    match sc.and_then(|s| decode_scored(s).ok()) {
+                        Some(sc) => merged.extend(sc),
+                        None => {
+                            self.mark_lost("worker sent a malformed warm reply");
+                            return None;
+                        }
+                    }
+                }
+                OpOutcome::Deadline | OpOutcome::Lost => return None,
+            }
+        }
+        // seed rows appear in every worker's list (the seed pass is
+        // global); same id ⇒ same distance ⇒ adjacent after the sort,
+        // so the dedup is a plain adjacent-id collapse
+        merged.sort_unstable_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        merged.dedup_by(|a, b| a.1 == b.1);
+        merged.truncate(cap);
+        Some(Some(merged))
+    }
+
+    /// Distributed masked refine. `None` = answer in-process.
+    fn remote_refine(
+        &self,
+        ds: &Dataset,
+        qs: &[&[f32]],
+        pools: &[&[u32]],
+        k: usize,
+    ) -> Option<Vec<Vec<u32>>> {
+        // the int8 pre-rung needs each query's GLOBAL pool, so it runs
+        // here, before the shard split — workers never see pruned rows
+        let filtered = self.inner.quant_refine_prefilter(ds, qs, pools, k);
+        let eff: Vec<&[u32]> = match &filtered {
+            Some(f) => f.iter().map(Vec::as_slice).collect(),
+            None => pools.to_vec(),
+        };
+        // per-query budgets come from the pools actually refined
+        let caps: Vec<usize> = eff.iter().map(|p| k.max(1).min(p.len().max(1))).collect();
+        let w = self.workers.len();
+        let plan = self.inner.corpus().plan();
+        let mut sub: Vec<Vec<Vec<u32>>> = vec![vec![Vec::new(); qs.len()]; w];
+        for (qi, pool) in eff.iter().enumerate() {
+            for &id in *pool {
+                sub[plan.shard_of(id as usize) % w][qi].push(id);
+            }
+        }
+        let flat: Vec<f32> = qs.iter().flat_map(|q| q.iter().copied()).collect();
+        // a worker whose every sub-pool is empty has nothing to score —
+        // skip the round-trip entirely
+        let active: Vec<usize> =
+            (0..w).filter(|&wi| sub[wi].iter().any(|p| !p.is_empty())).collect();
+        if active.is_empty() {
+            return Some(vec![Vec::new(); qs.len()]);
+        }
+        let reqs: Vec<(usize, Json)> = active
+            .iter()
+            .map(|&wi| {
+                let mut req = Json::obj();
+                req.set("op", "masked_refine")
+                    .set("queries", encode_f32s(&flat).as_str())
+                    .set(
+                        "pools",
+                        Json::Arr(sub[wi].iter().map(|p| Json::Str(encode_u32s(p))).collect()),
+                    )
+                    .set("k", k);
+                if let Some(dl) = self.op_deadline() {
+                    req.set("deadline_ms", dl);
+                }
+                (wi, req)
+            })
+            .collect();
+        let mut per_worker: Vec<Vec<Scored>> = Vec::with_capacity(reqs.len());
+        for outcome in self.fan_out(reqs) {
+            match outcome {
+                OpOutcome::Ok(j) => match decode_results(&j, qs.len()) {
+                    Some(lists) => per_worker.push(lists),
+                    None => {
+                        self.mark_lost("worker sent a malformed refine reply");
+                        return None;
+                    }
+                },
+                OpOutcome::Deadline | OpOutcome::Lost => return None,
+            }
+        }
+        Some(
+            (0..qs.len())
+                .map(|qi| {
+                    let mut all: Scored =
+                        per_worker.iter().flat_map(|w| w[qi].iter().copied()).collect();
+                    all.sort_unstable_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+                    all.truncate(caps[qi]);
+                    all.into_iter().map(|(_, i)| i).collect()
+                })
+                .collect(),
+        )
+    }
+}
+
+/// One framed request/reply over a live connection. Any failure here —
+/// write, read, EOF, unparseable frame — is a transport fault the retry
+/// loop answers with a fresh connection.
+fn exchange(conn: &mut WireConn, req: &Json) -> Result<Json> {
+    conn.stream.write_all(req.to_string_compact().as_bytes())?;
+    conn.stream.write_all(b"\n")?;
+    let mut line = String::new();
+    let n = conn.reader.read_line(&mut line)?;
+    if n == 0 {
+        anyhow::bail!("worker closed connection");
+    }
+    parse(line.trim())
+}
+
+/// Coarse/warm budget clamp — the same clamp the in-process screen uses.
+fn screen_cap(ds: &Dataset, m: usize) -> usize {
+    m.max(1).min(ds.n.max(1))
+}
+
+/// Decode a worker's `results` array of scored payloads; `None` on any
+/// shape violation (a malformed *success* reply is a protocol breach).
+fn decode_results(j: &Json, nq: usize) -> Option<Vec<Scored>> {
+    let arr = j.get("results")?.as_arr()?;
+    if arr.len() != nq {
+        return None;
+    }
+    arr.iter().map(|r| r.as_str().and_then(|s| decode_scored(s).ok())).collect()
+}
+
+impl RetrievalBackend for RemoteShardBackend {
+    fn name(&self) -> &'static str {
+        "remote-sharded"
+    }
+
+    fn is_exact(&self) -> bool {
+        self.inner.is_exact()
+    }
+
+    fn top_m(&self, ds: &Dataset, query_proxy: &[f32], m: usize, class: Option<u32>) -> Vec<u32> {
+        self.top_m_batch(
+            ds,
+            &[ProxyQuery {
+                proxy: query_proxy,
+                class,
+            }],
+            m,
+        )
+        .pop()
+        .unwrap_or_default()
+    }
+
+    fn top_m_batch(&self, ds: &Dataset, queries: &[ProxyQuery], m: usize) -> Vec<Vec<u32>> {
+        if queries.is_empty() {
+            return Vec::new();
+        }
+        if self.tier_up() {
+            if let Some(scored) = self.remote_screen(ds, queries, m) {
+                // mirror the group's pass/query accounting onto the shared
+                // counters only on remote success — the in-process branch
+                // below does its own
+                self.inner.record_screen_pass(queries.len());
+                return scored
+                    .into_iter()
+                    .map(|sc| sc.into_iter().map(|(_, i)| i).collect())
+                    .collect();
+            }
+        }
+        self.inner.top_m_batch(ds, queries, m)
+    }
+
+    fn refine_top_k(&self, ds: &Dataset, q: &[f32], cands: &[u32], k: usize) -> Vec<u32> {
+        self.refine_top_k_batch(ds, &[q], &[cands], k)
+            .pop()
+            .unwrap_or_default()
+    }
+
+    fn refine_top_k_batch(
+        &self,
+        ds: &Dataset,
+        qs: &[&[f32]],
+        pools: &[&[u32]],
+        k: usize,
+    ) -> Vec<Vec<u32>> {
+        assert_eq!(qs.len(), pools.len());
+        if qs.is_empty() {
+            return Vec::new();
+        }
+        if self.tier_up() {
+            if let Some(out) = self.remote_refine(ds, qs, pools, k) {
+                return out;
+            }
+        }
+        self.inner.refine_top_k_batch(ds, qs, pools, k)
+    }
+
+    fn warm_top_m(
+        &self,
+        ds: &Dataset,
+        query_proxy: &[f32],
+        class: Option<u32>,
+        m: usize,
+        seeds: &[u32],
+    ) -> Option<Vec<u32>> {
+        // the workers' bounded sweep requires a sorted in-range seed list
+        // (the wire contract rejects anything else); a violation here is
+        // an upstream bug — answer in-process rather than standing the
+        // tier down over it
+        let seeds_wire_ok = seeds.windows(2).all(|w| w[0] < w[1])
+            && seeds.last().is_none_or(|&s| (s as usize) < ds.n);
+        if self.tier_up() && seeds_wire_ok {
+            if let Some(res) = self.remote_warm(ds, query_proxy, class, m, seeds) {
+                return res.map(|sc| sc.into_iter().map(|(_, i)| i).collect());
+            }
+        }
+        self.inner.warm_top_m(ds, query_proxy, class, m, seeds)
+    }
+
+    fn stats(&self) -> RetrievalStats {
+        let mut s = self.inner.stats();
+        s.remote_ops = self.remote_ops.load(Ordering::Relaxed);
+        s.remote_retries = self.remote_retries.load(Ordering::Relaxed);
+        s.workers_lost = self.workers_lost.load(Ordering::Relaxed);
+        s
+    }
+
+    fn reset_stats(&self) {
+        self.inner.reset_stats();
+        self.remote_ops.store(0, Ordering::Relaxed);
+        self.remote_retries.store(0, Ordering::Relaxed);
+        self.workers_lost.store(0, Ordering::Relaxed);
+        // `lost` deliberately survives a stats reset: a stood-down tier
+        // stays down — losing the *memory* of the loss on a bench-harness
+        // reset must not resurrect a dead path
+    }
+
+    fn set_deadline(&self, remaining_ms: Option<u64>) {
+        self.deadline_ms.store(remaining_ms.unwrap_or(NO_DEADLINE), Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::preset;
+    use crate::util::rng::Pcg64;
+
+    fn tiny(n: usize, seed: u64) -> Dataset {
+        let mut spec = preset("cifar-sim").unwrap().clone();
+        spec.n = n;
+        Dataset::synthesize(&spec, seed)
+    }
+
+    fn opts(shards: usize) -> BackendOpts {
+        BackendOpts {
+            threads: 2,
+            shards,
+            kernel: true,
+            refine_kernel: true,
+            ..BackendOpts::default()
+        }
+    }
+
+    fn queries(ds: &Dataset, nq: usize, seed: u64) -> (Vec<Vec<f32>>, Vec<Option<u32>>) {
+        let mut rng = Pcg64::new(seed);
+        let qs = (0..nq).map(|_| (0..ds.proxy_d).map(|_| rng.normal()).collect()).collect();
+        let classes = (0..nq)
+            .map(|i| (i % 3 == 0).then_some((i % 4) as u32))
+            .collect();
+        (qs, classes)
+    }
+
+    #[test]
+    fn loopback_screen_and_refine_match_in_process_bytes() {
+        let ds = Arc::new(tiny(240, 31));
+        let local = ShardedBackend::build(&ds, RetrievalBackendKind::Batched, opts(4));
+        for workers in [1usize, 2, 3] {
+            let remote = RemoteShardBackend::loopback(
+                Arc::clone(&ds),
+                RetrievalBackendKind::Batched,
+                opts(4),
+                workers,
+                true,
+                5_000,
+            )
+            .unwrap();
+            let (qdata, classes) = queries(&ds, 5, 7);
+            let pq: Vec<ProxyQuery> = qdata
+                .iter()
+                .zip(&classes)
+                .map(|(q, &class)| ProxyQuery { proxy: q, class })
+                .collect();
+            let got = remote.top_m_batch(&ds, &pq, 33);
+            let want = local.top_m_batch(&ds, &pq, 33);
+            assert_eq!(got, want, "screen workers={workers}");
+
+            let mut rng = Pcg64::new(5);
+            let full: Vec<Vec<f32>> =
+                (0..3).map(|_| (0..ds.d).map(|_| rng.normal()).collect()).collect();
+            let fq: Vec<&[f32]> = full.iter().map(Vec::as_slice).collect();
+            let fpools: Vec<&[u32]> = want[..3].iter().map(Vec::as_slice).collect();
+            let got_r = remote.refine_top_k_batch(&ds, &fq, &fpools, 9);
+            let want_r = local.refine_top_k_batch(&ds, &fq, &fpools, 9);
+            assert_eq!(got_r, want_r, "refine workers={workers}");
+            assert!(remote.stats().remote_ops > 0, "ops must have gone remote");
+            assert_eq!(remote.stats().workers_lost, 0);
+        }
+    }
+
+    #[test]
+    fn loopback_warm_screen_matches_in_process_bytes() {
+        let ds = Arc::new(tiny(200, 13));
+        let local = ShardedBackend::build(&ds, RetrievalBackendKind::Batched, opts(3));
+        let remote = RemoteShardBackend::loopback(
+            Arc::clone(&ds),
+            RetrievalBackendKind::Batched,
+            opts(3),
+            2,
+            true,
+            5_000,
+        )
+        .unwrap();
+        let mut rng = Pcg64::new(3);
+        let qp: Vec<f32> = (0..ds.proxy_d).map(|_| rng.normal()).collect();
+        // plenty of seeds → warm hit; 2 seeds with m=40 → unanimous miss
+        let many: Vec<u32> = (0..80).map(|i| i * 2).collect();
+        let few: Vec<u32> = vec![1, 5];
+        for (seeds, m) in [(&many, 25usize), (&few, 40)] {
+            let got = remote.warm_top_m(&ds, &qp, None, m, seeds);
+            let want = local.warm_top_m(&ds, &qp, None, m, seeds);
+            assert_eq!(got, want, "m={m}");
+        }
+        assert!(remote.stats().remote_ops > 0);
+    }
+
+    #[test]
+    fn expired_deadline_answers_in_process_without_losing_the_tier() {
+        let ds = Arc::new(tiny(150, 9));
+        let remote = RemoteShardBackend::loopback(
+            Arc::clone(&ds),
+            RetrievalBackendKind::Batched,
+            opts(2),
+            2,
+            true,
+            5_000,
+        )
+        .unwrap();
+        let local = ShardedBackend::build(&ds, RetrievalBackendKind::Batched, opts(2));
+        let (qdata, _) = queries(&ds, 2, 17);
+        let pq: Vec<ProxyQuery> = qdata
+            .iter()
+            .map(|q| ProxyQuery {
+                proxy: q,
+                class: None,
+            })
+            .collect();
+
+        // 0 is the deterministic always-expired hook: workers refuse the
+        // op, the coordinator answers in-process, the tier stays up
+        remote.set_deadline(Some(0));
+        let got = remote.top_m_batch(&ds, &pq, 12);
+        assert_eq!(got, local.top_m_batch(&ds, &pq, 12));
+        let after_refusal = remote.stats();
+        assert!(after_refusal.remote_ops > 0, "the refused ops still went out");
+        assert_eq!(after_refusal.workers_lost, 0, "a refusal is not a loss");
+        assert!(remote.tier_up());
+
+        // clearing the deadline restores the remote path
+        remote.set_deadline(None);
+        let before = remote.stats().remote_ops;
+        let again = remote.top_m_batch(&ds, &pq, 12);
+        assert_eq!(again, local.top_m_batch(&ds, &pq, 12));
+        assert!(remote.stats().remote_ops > before);
+    }
+
+    #[test]
+    fn dead_worker_degrades_to_in_process_with_identical_bytes() {
+        let ds = Arc::new(tiny(180, 23));
+        let local = ShardedBackend::build(&ds, RetrievalBackendKind::Batched, opts(3));
+        let remote = RemoteShardBackend::loopback(
+            Arc::clone(&ds),
+            RetrievalBackendKind::Batched,
+            opts(3),
+            2,
+            true,
+            400,
+        )
+        .unwrap();
+        let (qdata, classes) = queries(&ds, 4, 41);
+        let pq: Vec<ProxyQuery> = qdata
+            .iter()
+            .zip(&classes)
+            .map(|(q, &class)| ProxyQuery { proxy: q, class })
+            .collect();
+        // warm the remote path once, then kill a worker mid-tier
+        assert_eq!(remote.top_m_batch(&ds, &pq, 20), local.top_m_batch(&ds, &pq, 20));
+        remote.stop_worker(1);
+        let got = remote.top_m_batch(&ds, &pq, 20);
+        assert_eq!(got, local.top_m_batch(&ds, &pq, 20), "degraded answers stay byte-identical");
+        let s = remote.stats();
+        assert!(s.workers_lost >= 1, "the loss must be counted");
+        assert!(s.remote_retries >= 1, "the loss must have been retried first");
+        assert!(!remote.tier_up());
+        // once lost, ops stop going remote entirely
+        let ops_after_loss = remote.stats().remote_ops;
+        let _ = remote.top_m_batch(&ds, &pq, 20);
+        assert_eq!(remote.stats().remote_ops, ops_after_loss);
+    }
+}

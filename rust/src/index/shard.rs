@@ -36,9 +36,9 @@ use std::sync::atomic::Ordering;
 use std::sync::Arc;
 
 use super::backend::{
-    batched_refine, group_mean, moved_blocks, quant_prefilter, refine_masked_by_shard,
-    warm_seed_heap, warm_sweep_blocks, BackendOpts, Counters, ProxyQuery, RetrievalBackend,
-    RetrievalBackendKind, RetrievalStats,
+    batched_refine, batched_refine_scored, group_mean, moved_blocks, quant_prefilter,
+    refine_masked_by_shard, refine_masked_by_shard_scored, warm_seed_heap, warm_sweep_blocks,
+    BackendOpts, Counters, ProxyQuery, RetrievalBackend, RetrievalBackendKind, RetrievalStats,
 };
 use super::kernel::{self, block_order, KernelScan, KernelStats, ProxyBlocks, QuantScan, QuantStats};
 use super::scan::{sqdist_early_exit, sqdist_flat};
@@ -48,8 +48,10 @@ use crate::data::shard::CorpusShards;
 use crate::util::rng::Pcg64;
 use crate::util::threadpool::parallel_chunks;
 
-/// Scored candidates: ascending `(squared distance, row id)`.
-type Scored = Vec<(f32, u32)>;
+/// Scored candidates: ascending `(squared distance, row id)` — the unit
+/// of exchange between shard scans, and (in the distributed tier) between
+/// shard workers and the coordinator.
+pub type Scored = Vec<(f32, u32)>;
 
 /// Per-shard IVF substrate for the sharded cluster-pruned screen: a fresh
 /// deterministic k-means over the shard's proxy rows (the dataset's
@@ -364,28 +366,55 @@ impl ShardedBackend {
 
     /// Shard-parallel coarse screen + exact `(distance, row id)` merge.
     fn top_m_batch_scored(&self, ds: &Dataset, queries: &[ProxyQuery], m: usize) -> Vec<Scored> {
+        let all: Vec<usize> = (0..self.corpus.plan().count()).collect();
+        self.screen_scored(ds, queries, m, &all)
+    }
+
+    /// Worker-facing coarse screen over an explicit shard subset: scans
+    /// only `subset` (out-of-range shard ids are ignored) and returns
+    /// per-query ascending `(distance, row id)` lists truncated to the
+    /// cap. Because the merge is associative over shards, a coordinator
+    /// merging several workers' subset results by the same `(distance,
+    /// row id)` order reproduces the in-process full screen byte for
+    /// byte. The full-corpus screen is the `subset = 0..shards` special
+    /// case — one implementation, so the two can never silently diverge.
+    pub fn screen_scored(
+        &self,
+        ds: &Dataset,
+        queries: &[ProxyQuery],
+        m: usize,
+        subset: &[usize],
+    ) -> Vec<Scored> {
         let cap = self.cap(ds, m);
         let ns = self.corpus.plan().count();
-        let chunks = parallel_chunks(ns, self.threads.max(1).min(ns.max(1)), |_, s, e| {
-            let mut tel = ScanTel::default();
-            let mut acc: Vec<Vec<Scored>> = Vec::with_capacity(e - s);
-            for sh in s..e {
-                let (res, t) = match self.kind {
-                    RetrievalBackendKind::ClusterPruned => {
-                        self.scan_shard_cluster(ds, sh, queries, cap)
-                    }
-                    RetrievalBackendKind::Flat => self.scan_shard_tiled(ds, sh, queries, cap, 1),
-                    RetrievalBackendKind::Batched => {
-                        self.scan_shard_tiled(ds, sh, queries, cap, self.tile_q)
-                    }
-                };
-                acc.push(res);
-                tel.add(&t);
-            }
-            (acc, tel)
-        });
+        let shards: Vec<usize> = subset.iter().copied().filter(|&sh| sh < ns).collect();
+        if shards.is_empty() {
+            return vec![Vec::new(); queries.len()];
+        }
+        let chunks = parallel_chunks(
+            shards.len(),
+            self.threads.max(1).min(shards.len()),
+            |_, s, e| {
+                let mut tel = ScanTel::default();
+                let mut acc: Vec<Vec<Scored>> = Vec::with_capacity(e - s);
+                for &sh in &shards[s..e] {
+                    let (res, t) = match self.kind {
+                        RetrievalBackendKind::ClusterPruned => {
+                            self.scan_shard_cluster(ds, sh, queries, cap)
+                        }
+                        RetrievalBackendKind::Flat => self.scan_shard_tiled(ds, sh, queries, cap, 1),
+                        RetrievalBackendKind::Batched => {
+                            self.scan_shard_tiled(ds, sh, queries, cap, self.tile_q)
+                        }
+                    };
+                    acc.push(res);
+                    tel.add(&t);
+                }
+                (acc, tel)
+            },
+        );
         let mut tel = ScanTel::default();
-        let mut shard_lists: Vec<Vec<Scored>> = Vec::with_capacity(ns);
+        let mut shard_lists: Vec<Vec<Scored>> = Vec::with_capacity(shards.len());
         for (acc, t) in chunks {
             shard_lists.extend(acc);
             tel.add(&t);
@@ -441,15 +470,44 @@ impl ShardedBackend {
         m: usize,
         seeds: &[u32],
     ) -> Option<Vec<u32>> {
+        let all: Vec<usize> = (0..self.corpus.plan().count()).collect();
+        self.warm_scored(ds, qp, class, m, seeds, &all)
+            .map(|sc| sc.into_iter().map(|(_, i)| i).collect())
+    }
+
+    /// Worker-facing seeded screen over an explicit shard subset: the seed
+    /// pass runs over the *global* seed list (cheap, and it gives every
+    /// worker the same initial cutoff), then only `subset` shards are
+    /// swept. A subset heap's cutoff is weaker than the full sweep's — it
+    /// skips fewer shards, never more rows than exactness allows — so the
+    /// union of subset results over a shard partition is a superset of the
+    /// full sweep's survivors, and a `(distance, row id)` merge truncated
+    /// to the cap reproduces the in-process warm screen byte for byte
+    /// (seeds appear in every worker's list; the merge dedups by id).
+    /// `None` carries the same contract as the global warm screen: fewer
+    /// eligible seed rows than the cap — the caller falls back cold.
+    pub fn warm_scored(
+        &self,
+        ds: &Dataset,
+        qp: &[f32],
+        class: Option<u32>,
+        m: usize,
+        seeds: &[u32],
+        subset: &[usize],
+    ) -> Option<Scored> {
         let cap = self.cap(ds, m);
         let mut heap = warm_seed_heap(ds, qp, class, cap, seeds)?;
         let mut scanned = 0u64;
         let mut skipped = 0u64;
+        let ns = self.corpus.plan().count();
         // visit shards nearest-centroid-first (ties by shard id) so near
         // shards tighten the cutoff before far shards face the bound —
         // without this the whole-shard skip would rarely engage when the
         // query's neighbourhood lives in a late shard
-        let mut shard_order: Vec<(f32, u32)> = (0..self.corpus.plan().count())
+        let mut shard_order: Vec<(f32, u32)> = subset
+            .iter()
+            .copied()
+            .filter(|&sh| sh < ns)
             .map(|sh| {
                 let c = &self.corpus.proxy(sh).centroid;
                 let d2: f32 = c.iter().zip(qp).map(|(a, b)| (a - b) * (a - b)).sum();
@@ -483,7 +541,81 @@ impl ShardedBackend {
         }
         self.counters.shards_scanned.fetch_add(scanned, Ordering::Relaxed);
         self.counters.shards_skipped.fetch_add(skipped, Ordering::Relaxed);
-        Some(sorted_scored(heap).into_iter().map(|(_, i)| i).collect())
+        Some(sorted_scored(heap))
+    }
+
+    /// Worker-facing scored refine: the same shard-local (or row-major)
+    /// discipline as [`RetrievalBackend::refine_top_k_batch`], but keeping
+    /// each survivor's exact f32 distance so a coordinator can merge
+    /// workers' sub-pool results by `(distance, row id)`. The int8
+    /// pre-rung is deliberately absent here — quantisation needs the
+    /// *global* per-query pool, so the coordinator applies
+    /// [`quant_prefilter`] before splitting pools across workers.
+    pub fn refine_scored(
+        &self,
+        ds: &Dataset,
+        qs: &[&[f32]],
+        pools: &[&[u32]],
+        k: usize,
+    ) -> Vec<Scored> {
+        if qs.is_empty() {
+            return Vec::new();
+        }
+        if !self.refine_kernel {
+            let (out, rows) = batched_refine_scored(ds, qs, pools, k, self.threads);
+            self.counters.refine_rows.fetch_add(rows, Ordering::Relaxed);
+            return out;
+        }
+        let (out, rows, kst) = refine_masked_by_shard_scored(
+            self.corpus.plan(),
+            &|sh| self.corpus.row_blocks(sh, ds),
+            qs,
+            pools,
+            k,
+            self.threads,
+        );
+        self.counters.record_refine(rows, &kst);
+        out
+    }
+
+    /// The int8 refine pre-rung exactly as [`refine_top_k_batch`] applies
+    /// it — `None` when this backend would not run it (quant off, or the
+    /// row-major reference ladder). A distributing coordinator calls this
+    /// *before* splitting pools across workers: the bound needs each
+    /// query's global pool, and filtering first means workers whose shards
+    /// lose every candidate are never contacted.
+    ///
+    /// [`refine_top_k_batch`]: RetrievalBackend::refine_top_k_batch
+    pub fn quant_refine_prefilter(
+        &self,
+        ds: &Dataset,
+        qs: &[&[f32]],
+        pools: &[&[u32]],
+        k: usize,
+    ) -> Option<Vec<Vec<u32>>> {
+        if !(self.refine_kernel && self.quant) {
+            return None;
+        }
+        quant_prefilter(ds, qs, pools, k, &self.counters)
+    }
+
+    /// Record one coarse-screen group's pass/query accounting. Pass
+    /// accounting mirrors the monolithic kinds: flat pays one logical
+    /// table pass per query, batched one per group, cluster none. Shared
+    /// with the remote tier, whose coordinator records the group here on
+    /// a successful distributed screen so `stats()` stays comparable
+    /// whichever path answered.
+    pub(crate) fn record_screen_pass(&self, nq: usize) {
+        match self.kind {
+            RetrievalBackendKind::Flat => {
+                self.counters.proxy_passes.fetch_add(nq as u64, Ordering::Relaxed);
+            }
+            RetrievalBackendKind::Batched => {
+                self.counters.proxy_passes.fetch_add(1, Ordering::Relaxed);
+            }
+            RetrievalBackendKind::ClusterPruned => {}
+        }
+        self.counters.queries.fetch_add(nq as u64, Ordering::Relaxed);
     }
 
     fn record(&self, tel: &ScanTel) {
@@ -627,22 +759,7 @@ impl RetrievalBackend for ShardedBackend {
         if queries.is_empty() {
             return Vec::new();
         }
-        // pass accounting mirrors the monolithic kinds: flat pays one
-        // logical table pass per query, batched one per group, cluster none
-        match self.kind {
-            RetrievalBackendKind::Flat => {
-                self.counters
-                    .proxy_passes
-                    .fetch_add(queries.len() as u64, Ordering::Relaxed);
-            }
-            RetrievalBackendKind::Batched => {
-                self.counters.proxy_passes.fetch_add(1, Ordering::Relaxed);
-            }
-            RetrievalBackendKind::ClusterPruned => {}
-        }
-        self.counters
-            .queries
-            .fetch_add(queries.len() as u64, Ordering::Relaxed);
+        self.record_screen_pass(queries.len());
         self.top_m_batch_scored(ds, queries, m)
             .into_iter()
             .map(|sc| sc.into_iter().map(|(_, i)| i).collect())

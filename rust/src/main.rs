@@ -3,6 +3,7 @@
 //! Commands:
 //!   gen-data   synthesise + cache the benchmark dataset stores (.gds)
 //!   serve      start the TCP serving engine for one preset
+//!   shard-worker  serve shard retrieval ops for a distributed coordinator
 //!   generate   run generations locally through the engine and print stats
 //!   exp        regenerate a paper table/figure (table1..table7, fig1, fig3, fig6, all)
 //!   info       summarise artifacts + datasets
@@ -23,6 +24,8 @@ use golddiff::coordinator::Engine;
 use golddiff::data::store;
 use golddiff::data::synthetic::{preset, PRESETS};
 use golddiff::denoiser::DenoiserKind;
+use golddiff::index::{RetrievalBackendKind, ShardedBackend};
+use golddiff::server::worker::ShardWorker;
 use golddiff::server::Server;
 use golddiff::util::cli::{Args, Cli};
 
@@ -30,6 +33,7 @@ fn main() {
     let cli = Cli::new("golddiff", "Fast and Scalable Analytical Diffusion (GoldDiff)")
         .command("gen-data", "synthesise + cache benchmark datasets")
         .command("serve", "start the TCP serving engine")
+        .command("shard-worker", "serve shard retrieval ops for a distributed coordinator")
         .command("generate", "run local generations and print stats")
         .command("exp", "regenerate a paper table/figure")
         .command("info", "summarise artifacts and datasets");
@@ -52,6 +56,7 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
     match cmd {
         "gen-data" => gen_data(args),
         "serve" => serve(args),
+        "shard-worker" => shard_worker(args),
         "generate" => generate(args),
         "exp" => exp(args),
         "info" => info(args),
@@ -122,6 +127,47 @@ fn serve(args: &Args) -> Result<()> {
     loop {
         std::thread::sleep(std::time::Duration::from_secs(5));
         println!("stats: {}", engine.stats_json());
+    }
+}
+
+/// Run one shard-worker process: open the preset's store data-free with
+/// the assigned shards pre-touched, build the full sharded backend over it
+/// (ops name their shard subset explicitly, so the worker itself stays
+/// stateless), and answer retrieval ops over the line-JSON wire protocol
+/// until killed. `--assigned 1,3` restricts the warm-up to the shards a
+/// coordinator will actually route here; default warms every shard.
+fn shard_worker(args: &Args) -> Result<()> {
+    let mut cfg = EngineConfig::default();
+    if let Some(path) = args.get("config") {
+        cfg = EngineConfig::load(std::path::Path::new(path))?;
+    }
+    cfg.apply_args(args);
+    let shards = cfg.shards.max(1);
+    let assigned: Vec<usize> = match args.get("assigned") {
+        Some(list) => list
+            .split(',')
+            .filter(|s| !s.trim().is_empty())
+            .map(|s| {
+                s.trim()
+                    .parse::<usize>()
+                    .map_err(|_| anyhow::anyhow!("bad --assigned entry `{s}`"))
+            })
+            .collect::<Result<_>>()?,
+        None => (0..shards).collect(),
+    };
+    let path = store::ensure_store(&cfg.data_dir, &cfg.preset, cfg.seed, shards)?;
+    let ds = Arc::new(store::open_worker(&path, shards, cfg.mem_budget_mb, &assigned)?);
+    let kind = RetrievalBackendKind::parse(&cfg.backend)
+        .ok_or_else(|| anyhow::anyhow!("unknown backend {}", cfg.backend))?;
+    let backend = Arc::new(ShardedBackend::build(&ds, kind, cfg.backend_opts()));
+    let addr = args.get_or("addr", "127.0.0.1:7461");
+    let worker = ShardWorker::start(Arc::clone(&ds), backend, addr)?;
+    println!(
+        "golddiff shard-worker preset={} shards={shards} assigned={assigned:?} on {}",
+        cfg.preset, worker.addr
+    );
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(60));
     }
 }
 

@@ -19,9 +19,12 @@ use std::sync::Arc;
 use anyhow::{Context, Result};
 
 use crate::coordinator::queue::SubmitError;
+use crate::coordinator::request::{strict_u32_field, strict_u64_field};
 use crate::coordinator::Engine;
 use crate::denoiser::DenoiserKind;
 use crate::util::json::{parse, Json};
+
+pub mod worker;
 
 /// A running server (owns the accept thread).
 pub struct Server {
@@ -42,7 +45,7 @@ impl Server {
             .name("golddiff-server".into())
             .spawn(move || {
                 let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
-                let mut accept_err_logged = false;
+                let mut accept_errs_logged = std::collections::HashSet::new();
                 while !sd.load(std::sync::atomic::Ordering::Relaxed) {
                     // reap finished connection handles each iteration — a
                     // long-lived server would otherwise grow `conns` by one
@@ -73,10 +76,12 @@ impl Server {
                         Err(e) => {
                             // a transient accept failure (EMFILE, ECONNABORTED,
                             // …) must not kill the listener: log the first
-                            // occurrence, back off briefly, keep accepting
-                            if !accept_err_logged {
+                            // occurrence of each distinct ErrorKind — a
+                            // once-ever latch would swallow a *different*
+                            // failure cause hours later — back off briefly,
+                            // keep accepting
+                            if accept_errs_logged.insert(e.kind()) {
                                 eprintln!("golddiff: server: accept failed ({e}); retrying");
-                                accept_err_logged = true;
                             }
                             std::thread::sleep(std::time::Duration::from_millis(50));
                         }
@@ -170,12 +175,14 @@ fn handle_line(line: &str, engine: &Engine) -> Result<Json> {
                 .and_then(Json::as_str)
                 .and_then(DenoiserKind::parse)
                 .unwrap_or(DenoiserKind::GoldDiff);
-            let seed = req.get("seed").and_then(Json::as_f64).unwrap_or(0.0) as u64;
-            let class = req.get("class").and_then(Json::as_f64).map(|c| c as u32);
-            let deadline_ms = req
-                .get("deadline_ms")
-                .and_then(Json::as_f64)
-                .map(|v| v as u64);
+            // strict numeric validation: a malformed field answers the
+            // machine-readable {"ok":false,"error":"bad_field:<name>"}
+            // (via the handle_conn error path) instead of saturating —
+            // {"class":-1} used to silently generate class 0, and seeds
+            // ≥ 2^53 silently lost precision through the f64 cast
+            let seed = strict_u64_field(&req, "seed")?.unwrap_or(0);
+            let class = strict_u32_field(&req, "class")?;
+            let deadline_ms = strict_u64_field(&req, "deadline_ms")?;
             match engine.try_submit_with_deadline(method, seed, class, deadline_ms) {
                 Ok(rx) => {
                     let resp = rx.recv().context("engine dropped request")?;
@@ -356,6 +363,24 @@ mod tests {
             .call(&crate::util::json::parse(r#"{"op":"wat"}"#).unwrap())
             .unwrap();
         assert_eq!(bad.get("ok").and_then(Json::as_bool), Some(false));
+
+        // malformed numeric fields answer a clean bad_field error and the
+        // connection keeps serving (PR-8 validation regression)
+        for (raw, want) in [
+            (r#"{"op":"generate","class":-1}"#, "bad_field:class"),
+            (
+                r#"{"op":"generate","seed":9007199254740992}"#,
+                "bad_field:seed",
+            ),
+            (r#"{"op":"generate","deadline_ms":0.5}"#, "bad_field:deadline_ms"),
+        ] {
+            let resp = client
+                .call(&crate::util::json::parse(raw).unwrap())
+                .unwrap();
+            assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(false));
+            assert_eq!(resp.get("error").and_then(Json::as_str), Some(want));
+        }
+        assert!(client.ping().unwrap(), "stream survives rejected requests");
 
         server.stop();
     }

@@ -1,0 +1,589 @@
+//! Shard-worker server: the distributed tier's data-plane node.
+//!
+//! A worker owns a [`ShardedBackend`] over the full shard plan and answers
+//! retrieval ops for the **explicit shard subset named in each request** —
+//! the worker itself is stateless about shard assignment, so a coordinator
+//! can re-route shards after a worker loss without any rebalancing
+//! handshake. Payload vectors travel as base64 of little-endian 32-bit
+//! patterns ([`crate::util::json`]), so every f32 distance crosses the
+//! wire bit-exactly and the coordinator's `(distance, row id)` merge
+//! reproduces the in-process result byte for byte.
+//!
+//! Protocol (one JSON document per line, mirroring the front-end server):
+//!   → {"op":"ping"}                 ← {"ok":true,"pong":true,"shards":…}
+//!   → {"op":"health"}               ← {"ok":true,"status":"ok",…}
+//!   → {"op":"coarse_screen","queries":b64f32,"classes":b64u32,"m":…,
+//!      "shards":b64u32[,"deadline_ms":…]}
+//!                                   ← {"ok":true,"results":[b64scored,…]}
+//!   → {"op":"warm_screen","query":b64f32[,"class":…],"m":…,"seeds":b64u32,
+//!      "shards":b64u32[,"deadline_ms":…]}
+//!                                   ← {"ok":true,"found":bool[,"result":b64scored]}
+//!   → {"op":"masked_refine","queries":b64f32,"pools":[b64u32,…],"k":…
+//!      [,"deadline_ms":…]}          ← {"ok":true,"results":[b64scored,…]}
+//!
+//! `classes` carries one u32 per query with `u32::MAX` meaning
+//! unconditional. A malformed field answers the machine-readable
+//! `{"ok":false,"error":"bad_field:<name>"}` and the connection keeps
+//! serving — same validation discipline as the front end. An op whose
+//! `deadline_ms` has already elapsed at receipt (`0` is the deterministic
+//! always-expired hook) answers `{"ok":false,"error":"deadline_exceeded"}`
+//! *before* any scan work — the requester has already given up, so the
+//! worker refuses to burn the pass.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::coordinator::request::{strict_u32_field, strict_u64_field};
+use crate::data::dataset::Dataset;
+use crate::index::backend::{ProxyQuery, RetrievalBackend};
+use crate::index::shard::ShardedBackend;
+use crate::util::json::{decode_f32s, decode_u32s, encode_scored, parse, Json};
+
+/// A running shard worker (owns the accept thread).
+pub struct ShardWorker {
+    pub addr: std::net::SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ShardWorker {
+    /// Bind `addr` (e.g. "127.0.0.1:0") and serve retrieval ops against
+    /// `backend` until [`stop`](ShardWorker::stop). The accept loop
+    /// mirrors the front-end server: non-blocking accept with finished
+    /// connections reaped each pass, and transient accept failures logged
+    /// once per distinct [`std::io::ErrorKind`] instead of killing the
+    /// listener.
+    pub fn start(
+        ds: Arc<Dataset>,
+        backend: Arc<ShardedBackend>,
+        addr: &str,
+    ) -> Result<ShardWorker> {
+        let listener =
+            std::net::TcpListener::bind(addr).with_context(|| format!("binding worker {addr}"))?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let sd = Arc::clone(&shutdown);
+        let handle = std::thread::Builder::new()
+            .name("golddiff-worker".into())
+            .spawn(move || {
+                let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
+                let mut accept_errs_logged = std::collections::HashSet::new();
+                while !sd.load(Ordering::Relaxed) {
+                    conns = conns
+                        .into_iter()
+                        .filter_map(|c| {
+                            if c.is_finished() {
+                                let _ = c.join();
+                                None
+                            } else {
+                                Some(c)
+                            }
+                        })
+                        .collect();
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            let ds2 = Arc::clone(&ds);
+                            let be2 = Arc::clone(&backend);
+                            let sd2 = Arc::clone(&sd);
+                            conns.push(std::thread::spawn(move || {
+                                let _ = handle_conn(stream, ds2, be2, sd2);
+                            }));
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(std::time::Duration::from_millis(10));
+                        }
+                        Err(e) => {
+                            if accept_errs_logged.insert(e.kind()) {
+                                eprintln!("golddiff: worker: accept failed ({e}); retrying");
+                            }
+                            std::thread::sleep(std::time::Duration::from_millis(50));
+                        }
+                    }
+                }
+                for c in conns {
+                    let _ = c.join();
+                }
+            })?;
+        Ok(ShardWorker {
+            addr: local,
+            shutdown,
+            handle: Some(handle),
+        })
+    }
+
+    /// Signal shutdown and join the accept thread. Idempotent — the
+    /// coordinator's `Drop` and an explicit stop can both run.
+    pub fn stop(&mut self) {
+        self.shutdown.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ShardWorker {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    ds: Arc<Dataset>,
+    backend: Arc<ShardedBackend>,
+    shutdown: Arc<AtomicBool>,
+) -> Result<()> {
+    // periodic read timeout so connection threads observe shutdown instead
+    // of blocking forever in read_line
+    stream.set_read_timeout(Some(std::time::Duration::from_millis(200)))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut stream = stream;
+    let mut line = String::new();
+    loop {
+        match reader.read_line(&mut line) {
+            Ok(0) => return Ok(()), // coordinator closed
+            Ok(_) => {
+                let t0 = Instant::now();
+                let reply = match handle_line(line.trim(), &ds, &backend, t0) {
+                    Ok(j) => j,
+                    Err(e) => {
+                        // a malformed or expired op is a clean protocol
+                        // reply, not a connection error — the stream keeps
+                        // serving the coordinator's next op
+                        let mut j = Json::obj();
+                        j.set("ok", false).set("error", e.to_string());
+                        j
+                    }
+                };
+                line.clear();
+                stream.write_all(reply.to_string_compact().as_bytes())?;
+                stream.write_all(b"\n")?;
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                if shutdown.load(Ordering::Relaxed) {
+                    return Ok(());
+                }
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+}
+
+/// Refuse an op whose requester has already expired: `deadline_ms` is the
+/// remaining budget at send time, `t0` the op's receipt instant. `0` is
+/// the deterministic always-expired hook the tests lean on — in
+/// production the coordinator never sends an op it knows is dead, so a
+/// zero only arrives when the deadline collapsed in flight.
+fn deadline_gate(req: &Json, t0: Instant) -> Result<()> {
+    if let Some(dl) = strict_u64_field(req, "deadline_ms")? {
+        if dl == 0 || t0.elapsed().as_millis() as u64 >= dl {
+            anyhow::bail!("deadline_exceeded");
+        }
+    }
+    Ok(())
+}
+
+/// Decode a base64 payload field, mapping any decode failure to the
+/// field's `bad_field:<name>` protocol error.
+fn payload<T>(req: &Json, name: &str, decode: impl Fn(&str) -> Result<Vec<T>>) -> Result<Vec<T>> {
+    let text = req
+        .get(name)
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("bad_field:{name}"))?;
+    decode(text).map_err(|_| anyhow!("bad_field:{name}"))
+}
+
+/// Required strict unsigned field (`m`, `k`): absent or malformed answers
+/// the same `bad_field` error — a worker op without a budget is malformed.
+fn required_usize(req: &Json, name: &str) -> Result<usize> {
+    Ok(strict_u64_field(req, name)
+        .map_err(|_| anyhow!("bad_field:{name}"))?
+        .ok_or_else(|| anyhow!("bad_field:{name}"))? as usize)
+}
+
+/// Decode + validate the `shards` subset payload: every id must name a
+/// shard of the plan — the coordinator and worker must agree on the plan,
+/// and a stale id is a routing bug worth surfacing, not ignoring.
+fn shard_subset(req: &Json, ns: usize) -> Result<Vec<usize>> {
+    let raw = payload(req, "shards", decode_u32s)?;
+    if raw.iter().any(|&s| s as usize >= ns) {
+        anyhow::bail!("bad_field:shards");
+    }
+    Ok(raw.into_iter().map(|s| s as usize).collect())
+}
+
+fn handle_line(line: &str, ds: &Dataset, backend: &ShardedBackend, t0: Instant) -> Result<Json> {
+    let req = parse(line)?;
+    let op = req.str_field("op")?;
+    let ns = backend.corpus().plan().count();
+    match op {
+        "ping" => {
+            let mut j = Json::obj();
+            j.set("ok", true)
+                .set("pong", true)
+                .set("shards", ns)
+                .set("rows", ds.n)
+                .set("proxy_d", ds.proxy_d);
+            Ok(j)
+        }
+        "health" => {
+            let mut j = Json::obj();
+            j.set("ok", true)
+                .set("status", "ok")
+                .set("backend", backend.name())
+                .set("shards", ns);
+            Ok(j)
+        }
+        "coarse_screen" => {
+            let queries = payload(&req, "queries", decode_f32s)?;
+            if queries.is_empty() || queries.len() % ds.proxy_d.max(1) != 0 {
+                anyhow::bail!("bad_field:queries");
+            }
+            let nq = queries.len() / ds.proxy_d.max(1);
+            let classes = payload(&req, "classes", decode_u32s)?;
+            if classes.len() != nq {
+                anyhow::bail!("bad_field:classes");
+            }
+            let m = required_usize(&req, "m")?;
+            let subset = shard_subset(&req, ns)?;
+            deadline_gate(&req, t0)?;
+            let pq: Vec<ProxyQuery> = (0..nq)
+                .map(|i| ProxyQuery {
+                    proxy: &queries[i * ds.proxy_d..(i + 1) * ds.proxy_d],
+                    class: (classes[i] != u32::MAX).then_some(classes[i]),
+                })
+                .collect();
+            let res = backend.screen_scored(ds, &pq, m, &subset);
+            let mut j = Json::obj();
+            j.set("ok", true).set(
+                "results",
+                Json::Arr(res.iter().map(|l| Json::Str(encode_scored(l))).collect()),
+            );
+            Ok(j)
+        }
+        "warm_screen" => {
+            let query = payload(&req, "query", decode_f32s)?;
+            if query.len() != ds.proxy_d {
+                anyhow::bail!("bad_field:query");
+            }
+            let class = strict_u32_field(&req, "class")?;
+            let m = required_usize(&req, "m")?;
+            let seeds = payload(&req, "seeds", decode_u32s)?;
+            // the bounded sweep binary-searches the seed list, so the
+            // protocol requires it sorted strictly ascending (and in
+            // range) — a violation is a coordinator bug, not a fallback
+            if seeds.windows(2).any(|w| w[0] >= w[1])
+                || seeds.last().is_some_and(|&s| s as usize >= ds.n)
+            {
+                anyhow::bail!("bad_field:seeds");
+            }
+            let subset = shard_subset(&req, ns)?;
+            deadline_gate(&req, t0)?;
+            let mut j = Json::obj();
+            match backend.warm_scored(ds, &query, class, m, &seeds, &subset) {
+                Some(sc) => {
+                    j.set("ok", true)
+                        .set("found", true)
+                        .set("result", Json::Str(encode_scored(&sc)));
+                }
+                None => {
+                    // too few eligible seeds for the cap — a *global*
+                    // property every worker agrees on, so the coordinator
+                    // sees a unanimous miss and falls back cold
+                    j.set("ok", true).set("found", false);
+                }
+            }
+            Ok(j)
+        }
+        "masked_refine" => {
+            let queries = payload(&req, "queries", decode_f32s)?;
+            if queries.is_empty() || queries.len() % ds.d.max(1) != 0 {
+                anyhow::bail!("bad_field:queries");
+            }
+            let nq = queries.len() / ds.d.max(1);
+            let pools_json = req
+                .get("pools")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("bad_field:pools"))?;
+            if pools_json.len() != nq {
+                anyhow::bail!("bad_field:pools");
+            }
+            let pools: Vec<Vec<u32>> = pools_json
+                .iter()
+                .map(|p| {
+                    p.as_str()
+                        .ok_or_else(|| anyhow!("bad_field:pools"))
+                        .and_then(|s| decode_u32s(s).map_err(|_| anyhow!("bad_field:pools")))
+                })
+                .collect::<Result<_>>()?;
+            if pools.iter().flatten().any(|&id| id as usize >= ds.n) {
+                anyhow::bail!("bad_field:pools");
+            }
+            let k = required_usize(&req, "k")?;
+            deadline_gate(&req, t0)?;
+            let qs: Vec<&[f32]> = (0..nq).map(|i| &queries[i * ds.d..(i + 1) * ds.d]).collect();
+            let ps: Vec<&[u32]> = pools.iter().map(Vec::as_slice).collect();
+            let res = backend.refine_scored(ds, &qs, &ps, k);
+            let mut j = Json::obj();
+            j.set("ok", true).set(
+                "results",
+                Json::Arr(res.iter().map(|l| Json::Str(encode_scored(l))).collect()),
+            );
+            Ok(j)
+        }
+        other => anyhow::bail!("unknown op `{other}`"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::preset;
+    use crate::index::backend::{BackendOpts, RetrievalBackend, RetrievalBackendKind};
+    use crate::util::json::{decode_scored, encode_f32s, encode_u32s};
+
+    fn tiny(n: usize, seed: u64) -> Dataset {
+        let mut spec = preset("cifar-sim").unwrap().clone();
+        spec.n = n;
+        Dataset::synthesize(&spec, seed)
+    }
+
+    fn worker(ds: &Arc<Dataset>, shards: usize) -> (ShardWorker, Arc<ShardedBackend>) {
+        let opts = BackendOpts {
+            threads: 2,
+            shards,
+            kernel: true,
+            refine_kernel: true,
+            ..BackendOpts::default()
+        };
+        let be = Arc::new(ShardedBackend::build(ds, RetrievalBackendKind::Batched, opts));
+        let w = ShardWorker::start(Arc::clone(ds), Arc::clone(&be), "127.0.0.1:0").unwrap();
+        (w, be)
+    }
+
+    fn call(stream: &mut TcpStream, reader: &mut BufReader<TcpStream>, raw: &str) -> Json {
+        stream.write_all(raw.as_bytes()).unwrap();
+        stream.write_all(b"\n").unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        parse(line.trim()).unwrap()
+    }
+
+    fn connect(addr: &std::net::SocketAddr) -> (TcpStream, BufReader<TcpStream>) {
+        let stream = TcpStream::connect(addr).unwrap();
+        stream
+            .set_read_timeout(Some(std::time::Duration::from_secs(10)))
+            .unwrap();
+        let reader = BufReader::new(stream.try_clone().unwrap());
+        (stream, reader)
+    }
+
+    #[test]
+    fn coarse_screen_over_tcp_matches_in_process_subset_scan() {
+        let ds = Arc::new(tiny(180, 5));
+        let (mut w, be) = worker(&ds, 3);
+        let (mut stream, mut reader) = connect(&w.addr);
+
+        let pong = call(&mut stream, &mut reader, r#"{"op":"ping"}"#);
+        assert_eq!(pong.get("pong").and_then(Json::as_bool), Some(true));
+        assert_eq!(pong.get("shards").and_then(Json::as_f64), Some(3.0));
+
+        let mut rng = crate::util::rng::Pcg64::new(11);
+        let qdata: Vec<f32> = (0..2 * ds.proxy_d).map(|_| rng.normal()).collect();
+        let mut req = Json::obj();
+        req.set("op", "coarse_screen")
+            .set("queries", encode_f32s(&qdata).as_str())
+            .set("classes", encode_u32s(&[u32::MAX, 2]).as_str())
+            .set("m", 17_u64)
+            .set("shards", encode_u32s(&[0, 2]).as_str());
+        let resp = call(&mut stream, &mut reader, &req.to_string_compact());
+        assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true));
+        let results = resp.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(results.len(), 2);
+        let got: Vec<Vec<(f32, u32)>> = results
+            .iter()
+            .map(|r| decode_scored(r.as_str().unwrap()).unwrap())
+            .collect();
+
+        let pq = [
+            ProxyQuery {
+                proxy: &qdata[..ds.proxy_d],
+                class: None,
+            },
+            ProxyQuery {
+                proxy: &qdata[ds.proxy_d..],
+                class: Some(2),
+            },
+        ];
+        let want = be.screen_scored(&ds, &pq, 17, &[0, 2]);
+        assert_eq!(got, want, "wire round-trip must be bit-exact");
+        w.stop();
+    }
+
+    #[test]
+    fn malformed_and_truncated_frames_answer_bad_field_and_stream_survives() {
+        let ds = Arc::new(tiny(90, 7));
+        let (mut w, _be) = worker(&ds, 2);
+        let (mut stream, mut reader) = connect(&w.addr);
+
+        // truncated base64 (not a multiple of 4), wrong-length payloads,
+        // out-of-range ids, malformed numerics — each answers its field's
+        // bad_field error and the connection keeps serving
+        let m_ok = r#""m":5"#;
+        let cases: Vec<(String, &str)> = vec![
+            (
+                format!(
+                    r#"{{"op":"coarse_screen","queries":"AAA","classes":"{}",{m_ok},"shards":"{}"}}"#,
+                    encode_u32s(&[u32::MAX]),
+                    encode_u32s(&[0])
+                ),
+                "bad_field:queries",
+            ),
+            (
+                format!(
+                    r#"{{"op":"coarse_screen","queries":"{}","classes":"{}",{m_ok},"shards":"{}"}}"#,
+                    encode_f32s(&vec![0.5; ds.proxy_d]),
+                    encode_u32s(&[u32::MAX, 0]),
+                    encode_u32s(&[0])
+                ),
+                "bad_field:classes",
+            ),
+            (
+                format!(
+                    r#"{{"op":"coarse_screen","queries":"{}","classes":"{}","m":-3,"shards":"{}"}}"#,
+                    encode_f32s(&vec![0.5; ds.proxy_d]),
+                    encode_u32s(&[u32::MAX]),
+                    encode_u32s(&[0])
+                ),
+                "bad_field:m",
+            ),
+            (
+                format!(
+                    r#"{{"op":"coarse_screen","queries":"{}","classes":"{}",{m_ok},"shards":"{}"}}"#,
+                    encode_f32s(&vec![0.5; ds.proxy_d]),
+                    encode_u32s(&[u32::MAX]),
+                    encode_u32s(&[9])
+                ),
+                "bad_field:shards",
+            ),
+            (
+                format!(
+                    r#"{{"op":"warm_screen","query":"{}","class":1,{m_ok},"seeds":"{}","shards":"{}"}}"#,
+                    encode_f32s(&vec![0.5; ds.proxy_d]),
+                    encode_u32s(&[4, 4, 9]),
+                    encode_u32s(&[0])
+                ),
+                "bad_field:seeds",
+            ),
+            (
+                format!(
+                    r#"{{"op":"masked_refine","queries":"{}","pools":["{}"],"k":3}}"#,
+                    encode_f32s(&vec![0.5; ds.d]),
+                    encode_u32s(&[90])
+                ),
+                "bad_field:pools",
+            ),
+        ];
+        for (raw, want) in cases {
+            let resp = call(&mut stream, &mut reader, &raw);
+            assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(false), "{raw}");
+            assert_eq!(resp.get("error").and_then(Json::as_str), Some(want), "{raw}");
+        }
+        // non-JSON garbage is a parse error, not a dead stream
+        let garbage = call(&mut stream, &mut reader, "{{{not json");
+        assert_eq!(garbage.get("ok").and_then(Json::as_bool), Some(false));
+        let pong = call(&mut stream, &mut reader, r#"{"op":"ping"}"#);
+        assert_eq!(pong.get("pong").and_then(Json::as_bool), Some(true));
+        w.stop();
+    }
+
+    #[test]
+    fn expired_deadline_refuses_op_before_compute() {
+        let ds = Arc::new(tiny(80, 3));
+        let (mut w, be) = worker(&ds, 2);
+        let (mut stream, mut reader) = connect(&w.addr);
+
+        let scanned_before = be.stats().shards_scanned;
+        let mut req = Json::obj();
+        req.set("op", "coarse_screen")
+            .set("queries", encode_f32s(&vec![0.1; ds.proxy_d]).as_str())
+            .set("classes", encode_u32s(&[u32::MAX]).as_str())
+            .set("m", 5_u64)
+            .set("shards", encode_u32s(&[0, 1]).as_str())
+            .set("deadline_ms", 0_u64);
+        let resp = call(&mut stream, &mut reader, &req.to_string_compact());
+        assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(false));
+        assert_eq!(
+            resp.get("error").and_then(Json::as_str),
+            Some("deadline_exceeded")
+        );
+        assert_eq!(
+            be.stats().shards_scanned,
+            scanned_before,
+            "an expired op must not touch the scan path"
+        );
+
+        // without the deadline the same op succeeds on the same stream
+        let mut ok_req = req.clone();
+        if let Json::Obj(map) = &mut ok_req {
+            map.remove("deadline_ms");
+        }
+        let ok = call(&mut stream, &mut reader, &ok_req.to_string_compact());
+        assert_eq!(ok.get("ok").and_then(Json::as_bool), Some(true));
+        w.stop();
+    }
+
+    #[test]
+    fn warm_screen_and_masked_refine_round_trip_bit_exact() {
+        let ds = Arc::new(tiny(160, 13));
+        let (mut w, be) = worker(&ds, 4);
+        let (mut stream, mut reader) = connect(&w.addr);
+
+        let mut rng = crate::util::rng::Pcg64::new(29);
+        let qp: Vec<f32> = (0..ds.proxy_d).map(|_| rng.normal()).collect();
+        let seeds: Vec<u32> = (0..60).map(|i| i * 2).collect();
+        let mut req = Json::obj();
+        req.set("op", "warm_screen")
+            .set("query", encode_f32s(&qp).as_str())
+            .set("m", 12_u64)
+            .set("seeds", encode_u32s(&seeds).as_str())
+            .set("shards", encode_u32s(&[1, 3]).as_str());
+        let resp = call(&mut stream, &mut reader, &req.to_string_compact());
+        assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true));
+        let want = be.warm_scored(&ds, &qp, None, 12, &seeds, &[1, 3]);
+        match want {
+            Some(want) => {
+                assert_eq!(resp.get("found").and_then(Json::as_bool), Some(true));
+                let got = decode_scored(resp.get("result").unwrap().as_str().unwrap()).unwrap();
+                assert_eq!(got, want);
+            }
+            None => {
+                assert_eq!(resp.get("found").and_then(Json::as_bool), Some(false));
+            }
+        }
+
+        let q: Vec<f32> = (0..ds.d).map(|_| rng.normal()).collect();
+        let pool: Vec<u32> = (0..40u32).collect();
+        let mut rreq = Json::obj();
+        rreq.set("op", "masked_refine")
+            .set("queries", encode_f32s(&q).as_str())
+            .set("pools", Json::Arr(vec![Json::Str(encode_u32s(&pool))]))
+            .set("k", 7_u64);
+        let rresp = call(&mut stream, &mut reader, &rreq.to_string_compact());
+        assert_eq!(rresp.get("ok").and_then(Json::as_bool), Some(true));
+        let arr = rresp.get("results").unwrap().as_arr().unwrap();
+        let got = decode_scored(arr[0].as_str().unwrap()).unwrap();
+        let want = be.refine_scored(&ds, &[&q], &[&pool], 7);
+        assert_eq!(vec![got], want);
+        w.stop();
+    }
+}

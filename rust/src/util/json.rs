@@ -70,6 +70,32 @@ impl Json {
         }
     }
 
+    /// Strict unsigned integer: the value must be a JSON number that is
+    /// finite, integral, non-negative and below 2^53 (the largest range an
+    /// f64-backed number model can carry without silently losing
+    /// precision). Everything else — `-1`, `1.5`, `1e300`, strings,
+    /// booleans — returns `None`, so protocol fields can reject malformed
+    /// input instead of saturating through an `as` cast.
+    pub fn as_strict_u64(&self) -> Option<u64> {
+        match self {
+            Json::Num(n)
+                if n.is_finite()
+                    && n.fract() == 0.0
+                    && *n >= 0.0
+                    && *n < 9_007_199_254_740_992.0 =>
+            {
+                Some(*n as u64)
+            }
+            _ => None,
+        }
+    }
+
+    /// [`Json::as_strict_u64`] additionally bounded to `u32` — class ids,
+    /// shard indices and other small protocol integers.
+    pub fn as_strict_u32(&self) -> Option<u32> {
+        self.as_strict_u64().filter(|&n| n <= u32::MAX as u64).map(|n| n as u32)
+    }
+
     /// Convenience: `get(key)` then `as_str`, with a descriptive error.
     pub fn str_field(&self, key: &str) -> anyhow::Result<&str> {
         self.get(key)
@@ -367,6 +393,157 @@ fn parse_obj(b: &[u8], pos: &mut usize) -> anyhow::Result<Json> {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Compact binary payloads
+// ---------------------------------------------------------------------------
+//
+// The shard-worker wire protocol ships query vectors, candidate id lists
+// and scored `(f32 distance, u32 row id)` replies inside line-JSON frames.
+// Encoding each value as a decimal number would bloat frames ~4× and risk
+// a lossy text round-trip for f32s; instead the raw little-endian bytes are
+// carried as a base64 string — bit-exact by construction, so the remote
+// merge sees the same 32-bit patterns the in-process merge does.
+
+const B64_ALPHABET: &[u8; 64] =
+    b"ABCDEFGHIJKLMNOPQRSTUVWXYZabcdefghijklmnopqrstuvwxyz0123456789+/";
+
+/// Base64 (standard alphabet, `=` padding) of arbitrary bytes.
+pub fn b64_encode(bytes: &[u8]) -> String {
+    let mut out = String::with_capacity(bytes.len().div_ceil(3) * 4);
+    for chunk in bytes.chunks(3) {
+        let b0 = chunk[0] as u32;
+        let b1 = chunk.get(1).copied().unwrap_or(0) as u32;
+        let b2 = chunk.get(2).copied().unwrap_or(0) as u32;
+        let n = (b0 << 16) | (b1 << 8) | b2;
+        out.push(B64_ALPHABET[(n >> 18) as usize & 63] as char);
+        out.push(B64_ALPHABET[(n >> 12) as usize & 63] as char);
+        out.push(if chunk.len() > 1 {
+            B64_ALPHABET[(n >> 6) as usize & 63] as char
+        } else {
+            '='
+        });
+        out.push(if chunk.len() > 2 {
+            B64_ALPHABET[n as usize & 63] as char
+        } else {
+            '='
+        });
+    }
+    out
+}
+
+/// Inverse of [`b64_encode`]; rejects bad lengths, stray characters and
+/// misplaced padding so a truncated or corrupted frame fails loudly.
+pub fn b64_decode(text: &str) -> anyhow::Result<Vec<u8>> {
+    let b = text.as_bytes();
+    if b.len() % 4 != 0 {
+        anyhow::bail!("base64 length {} not a multiple of 4", b.len());
+    }
+    let mut out = Vec::with_capacity(b.len() / 4 * 3);
+    let val = |c: u8, pos: usize| -> anyhow::Result<u32> {
+        match c {
+            b'A'..=b'Z' => Ok((c - b'A') as u32),
+            b'a'..=b'z' => Ok((c - b'a') as u32 + 26),
+            b'0'..=b'9' => Ok((c - b'0') as u32 + 52),
+            b'+' => Ok(62),
+            b'/' => Ok(63),
+            _ => anyhow::bail!("bad base64 byte {c:#x} at {pos}"),
+        }
+    };
+    for (i, quad) in b.chunks(4).enumerate() {
+        let last = (i + 1) * 4 == b.len();
+        let pad = quad.iter().filter(|&&c| c == b'=').count();
+        if pad > 0 && (!last || pad > 2 || quad[..4 - pad].contains(&b'=')) {
+            anyhow::bail!("misplaced base64 padding in quad {i}");
+        }
+        let mut n = 0u32;
+        for (j, &c) in quad[..4 - pad].iter().enumerate() {
+            n |= val(c, i * 4 + j)? << (18 - 6 * j);
+        }
+        out.push((n >> 16) as u8);
+        if pad < 2 {
+            out.push((n >> 8) as u8);
+        }
+        if pad < 1 {
+            out.push(n as u8);
+        }
+    }
+    Ok(out)
+}
+
+/// f32 slice → base64 of its little-endian bytes (bit-exact round-trip).
+pub fn encode_f32s(values: &[f32]) -> String {
+    let mut bytes = Vec::with_capacity(values.len() * 4);
+    for v in values {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    b64_encode(&bytes)
+}
+
+/// Inverse of [`encode_f32s`]; errors when the payload is not a whole
+/// number of little-endian f32s.
+pub fn decode_f32s(text: &str) -> anyhow::Result<Vec<f32>> {
+    let bytes = b64_decode(text)?;
+    if bytes.len() % 4 != 0 {
+        anyhow::bail!("f32 payload holds {} bytes, not a multiple of 4", bytes.len());
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+        .collect())
+}
+
+/// u32 slice → base64 of its little-endian bytes.
+pub fn encode_u32s(values: &[u32]) -> String {
+    let mut bytes = Vec::with_capacity(values.len() * 4);
+    for v in values {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    b64_encode(&bytes)
+}
+
+/// Inverse of [`encode_u32s`].
+pub fn decode_u32s(text: &str) -> anyhow::Result<Vec<u32>> {
+    let bytes = b64_decode(text)?;
+    if bytes.len() % 4 != 0 {
+        anyhow::bail!("u32 payload holds {} bytes, not a multiple of 4", bytes.len());
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|b| u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+        .collect())
+}
+
+/// Scored `(f32 distance, u32 row id)` list → base64 of the interleaved
+/// little-endian 32-bit patterns — the shard-worker reply payload.
+pub fn encode_scored(list: &[(f32, u32)]) -> String {
+    let mut bytes = Vec::with_capacity(list.len() * 8);
+    for &(d, id) in list {
+        bytes.extend_from_slice(&d.to_le_bytes());
+        bytes.extend_from_slice(&id.to_le_bytes());
+    }
+    b64_encode(&bytes)
+}
+
+/// Inverse of [`encode_scored`].
+pub fn decode_scored(text: &str) -> anyhow::Result<Vec<(f32, u32)>> {
+    let bytes = b64_decode(text)?;
+    if bytes.len() % 8 != 0 {
+        anyhow::bail!(
+            "scored payload holds {} bytes, not a multiple of 8",
+            bytes.len()
+        );
+    }
+    Ok(bytes
+        .chunks_exact(8)
+        .map(|b| {
+            (
+                f32::from_le_bytes([b[0], b[1], b[2], b[3]]),
+                u32::from_le_bytes([b[4], b[5], b[6], b[7]]),
+            )
+        })
+        .collect())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -412,5 +589,72 @@ mod tests {
     #[test]
     fn unicode_escape() {
         assert_eq!(parse(r#""A""#).unwrap().as_str(), Some("A"));
+    }
+
+    #[test]
+    fn strict_ints_accept_exact_integers_only() {
+        assert_eq!(Json::Num(0.0).as_strict_u64(), Some(0));
+        assert_eq!(Json::Num(41.0).as_strict_u64(), Some(41));
+        let max = 9_007_199_254_740_991.0; // 2^53 - 1: the last exact f64 int
+        assert_eq!(Json::Num(max).as_strict_u64(), Some(max as u64));
+        // everything a saturating `as` cast would silently mangle rejects
+        assert_eq!(Json::Num(-1.0).as_strict_u64(), None);
+        assert_eq!(Json::Num(1.5).as_strict_u64(), None);
+        assert_eq!(Json::Num(9_007_199_254_740_992.0).as_strict_u64(), None);
+        assert_eq!(Json::Num(f64::NAN).as_strict_u64(), None);
+        assert_eq!(Json::Num(f64::INFINITY).as_strict_u64(), None);
+        assert_eq!(Json::Str("7".into()).as_strict_u64(), None);
+        assert_eq!(Json::Bool(true).as_strict_u64(), None);
+        assert_eq!(Json::Num(u32::MAX as f64).as_strict_u32(), Some(u32::MAX));
+        assert_eq!(Json::Num(u32::MAX as f64 + 1.0).as_strict_u32(), None);
+        assert_eq!(Json::Num(-0.0).as_strict_u32(), Some(0));
+    }
+
+    #[test]
+    fn base64_roundtrips_and_rejects_corruption() {
+        // all lengths mod 3, including empty
+        for len in 0..20usize {
+            let bytes: Vec<u8> = (0..len as u8).map(|i| i.wrapping_mul(37) ^ 0x5a).collect();
+            let enc = b64_encode(&bytes);
+            assert_eq!(b64_decode(&enc).unwrap(), bytes, "len {len}");
+        }
+        assert_eq!(b64_encode(b"Man"), "TWFu");
+        assert_eq!(b64_encode(b"Ma"), "TWE=");
+        assert_eq!(b64_encode(b"M"), "TQ==");
+        // truncation, stray bytes and misplaced padding all fail loudly
+        assert!(b64_decode("TWF").is_err());
+        assert!(b64_decode("TW!u").is_err());
+        assert!(b64_decode("TW==TWFu").is_err());
+        assert!(b64_decode("T===").is_err());
+    }
+
+    #[test]
+    fn f32_and_scored_payloads_are_bit_exact() {
+        let vals = [
+            0.0f32,
+            -0.0,
+            1.5,
+            f32::MIN_POSITIVE,
+            f32::MAX,
+            f32::NEG_INFINITY,
+            f32::NAN,
+            -123.456e-7,
+        ];
+        let back = decode_f32s(&encode_f32s(&vals)).unwrap();
+        assert_eq!(back.len(), vals.len());
+        for (a, b) in vals.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits(), "payload must be bit-exact");
+        }
+        let ids = [0u32, 1, u32::MAX, 41];
+        assert_eq!(decode_u32s(&encode_u32s(&ids)).unwrap(), ids);
+        let scored = [(0.25f32, 7u32), (f32::INFINITY, 0), (-0.0, u32::MAX)];
+        let back = decode_scored(&encode_scored(&scored)).unwrap();
+        for ((da, ia), (db, ib)) in scored.iter().zip(&back) {
+            assert_eq!(da.to_bits(), db.to_bits());
+            assert_eq!(ia, ib);
+        }
+        // a frame cut mid-value fails instead of decoding short
+        let enc = encode_scored(&scored);
+        assert!(decode_scored(&enc[..enc.len() - 8]).is_err());
     }
 }

@@ -2,11 +2,14 @@
 //! index → denoisers → sampler → oracle scoring, plus XLA-vs-CPU
 //! cross-validation on an image preset.
 
+use std::sync::Arc;
+
 use golddiff::data::store;
 use golddiff::data::synthetic::preset;
 use golddiff::denoiser::golddiff::{BaseWeighting, GoldDiff};
 use golddiff::denoiser::{Denoiser, DenoiserKind, StepContext};
-use golddiff::index::backend::{BackendOpts, RetrievalBackendKind};
+use golddiff::index::backend::{BackendOpts, RetrievalBackend, RetrievalBackendKind};
+use golddiff::index::RemoteShardBackend;
 use golddiff::metrics::EfficacyAccum;
 use golddiff::oracle::GmmOracle;
 use golddiff::sampler;
@@ -265,6 +268,109 @@ fn determinism_matrix_backend_kernel_warmstart() {
                 }
             }
         }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// One determinism-matrix cell over an arbitrary backend: the 4-sequence
+/// tick-group golden subsets at every step (warm screen seeing the
+/// previous step's subsets, as in serving) plus a full single-sequence
+/// trajectory.
+fn run_cell(
+    ds_run: &Dataset,
+    sched: &NoiseSchedule,
+    xs_data: &[Vec<f32>],
+    backend: Arc<dyn RetrievalBackend>,
+) -> (Vec<Vec<Vec<u32>>>, Vec<f32>) {
+    let mut gd = GoldDiff::paper_defaults(ds_run, sched, BaseWeighting::Golden)
+        .with_backend(Arc::clone(&backend))
+        .with_warm_start(true);
+    let mut subsets = Vec::new();
+    for step in 0..sched.steps {
+        let ctx = StepContext {
+            ds: ds_run,
+            sched,
+            step,
+            class: None,
+        };
+        let xs: Vec<&[f32]> = xs_data.iter().map(|x| x.as_slice()).collect();
+        let ctxs: Vec<&StepContext> = xs.iter().map(|_| &ctx).collect();
+        subsets.push(gd.golden_subsets(&xs, &ctxs));
+    }
+    let mut den = GoldDiff::paper_defaults(ds_run, sched, BaseWeighting::Golden)
+        .with_backend(backend)
+        .with_warm_start(true);
+    let traj = sampler::sample(
+        &mut den as &mut dyn Denoiser,
+        ds_run,
+        sched,
+        5,
+        sampler::SamplerOpts::default(),
+    );
+    (subsets, traj.final_sample().to_vec())
+}
+
+#[test]
+fn determinism_matrix_remote_axis_matches_in_process() {
+    // Tentpole: the distributed loopback tier is a transport, not a result
+    // lever — for shards ∈ {1, 2, 7} a worker fleet serves golden subsets
+    // and full trajectories byte-identical to the in-process backend built
+    // from the same options. The last cell re-runs shards=7 off a streamed
+    // store with seeded transient faults at the read seam (the
+    // GOLDDIFF_FAULT_SEED path): the bounded retry absorbs them without
+    // changing a byte on either side of the wire.
+    let base = Arc::new(small("mnist-sim", 240, 31));
+    let dir = std::env::temp_dir().join("golddiff_it_matrix_remote");
+    std::fs::remove_dir_all(&dir).ok();
+    let path = store::store_path(&dir, "mnist-sim");
+    store::save_sharded(&base, &path, 4).unwrap();
+    let sched = NoiseSchedule::new(ScheduleKind::DdpmLinear, 10);
+    let xs_data: Vec<Vec<f32>> = (0..4)
+        .map(|i| {
+            let mut rng = golddiff::util::rng::Pcg64::new(900 + i);
+            (0..base.d).map(|_| rng.normal()).collect()
+        })
+        .collect();
+
+    for (shards, workers, faulted) in
+        [(1usize, 1usize, false), (2, 2, false), (7, 3, false), (7, 2, true)]
+    {
+        let opts = BackendOpts {
+            threads: 2,
+            kernel: true,
+            shards,
+            ..BackendOpts::default()
+        };
+        // the faulted arm streams the corpus with the first 5 reads
+        // faulting (under the 6-retry budget, as in the rows-level fault
+        // tests); the clean arms share the resident corpus
+        let ds_run: Arc<Dataset> = if faulted {
+            let fault = golddiff::util::fault::FaultInjector::transient(31, 1.0).with_limit(5);
+            let st = store::open_streaming_with(&path, shards, 0, Some(Arc::new(fault)));
+            Arc::new(st.unwrap())
+        } else {
+            Arc::clone(&base)
+        };
+        let local = run_cell(
+            &ds_run,
+            &sched,
+            &xs_data,
+            RetrievalBackendKind::Batched.build(&ds_run, opts),
+        );
+        let fleet = RemoteShardBackend::loopback(
+            Arc::clone(&ds_run),
+            RetrievalBackendKind::Batched,
+            opts,
+            workers,
+            true,
+            2_000,
+        )
+        .unwrap();
+        let remote = run_cell(&ds_run, &sched, &xs_data, Arc::new(fleet));
+        assert_eq!(
+            local, remote,
+            "shards={shards} workers={workers} faulted={faulted}: remote tier diverged"
+        );
     }
     std::fs::remove_dir_all(&dir).ok();
 }
