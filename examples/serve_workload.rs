@@ -83,7 +83,36 @@ fn main() -> anyhow::Result<()> {
     println!("throughput         : {:.2} req/s", all.count() as f64 / wall);
     println!("latency p50        : {:.3}s", all.percentile(0.5));
     println!("latency p95        : {:.3}s", all.percentile(0.95));
+    println!("latency p99        : {:.3}s", all.percentile(0.99));
     println!("latency mean       : {:.3}s", all.mean());
+    // machine-greppable BENCH lines — whole-request percentiles plus the
+    // engine's per-stage distributions (scan = coarse screen + exact
+    // refine, dispatch = XLA aggregation, tick = one whole sequence
+    // step), so a regression in one stage can't hide behind the
+    // aggregate mean. The CI bench-smoke leg greps these.
+    let stats = engine.stats_json();
+    let stat = |key: String| {
+        stats
+            .get(&key)
+            .and_then(golddiff::util::json::Json::as_f64)
+            .unwrap_or(0.0)
+    };
+    println!(
+        "BENCH serve_workload requests={} throughput_rps={:.2} p50_s={:.4} p95_s={:.4} p99_s={:.4}",
+        all.count(),
+        all.count() as f64 / wall,
+        all.percentile(0.5),
+        all.percentile(0.95),
+        all.percentile(0.99)
+    );
+    for stage in ["scan", "dispatch", "tick"] {
+        println!(
+            "BENCH serve_stage stage={stage} p50_s={:.6} p95_s={:.6} p99_s={:.6}",
+            stat(format!("{stage}_p50_s")),
+            stat(format!("{stage}_p95_s")),
+            stat(format!("{stage}_p99_s"))
+        );
+    }
     println!("\nengine stats: {}", engine.stats_json());
     // degradation counters ride the health payload: `status` flips to
     // "degraded" when a tier stood down, `workers_lost`/`remote_retries`

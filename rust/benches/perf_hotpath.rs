@@ -12,7 +12,9 @@
 //!      byte-equality asserted before timing) — all run without the
 //!      XLA runtime, emit machine-readable `BENCH {json}` lines and
 //!      *verify* the one-pass-per-group invariant via the backend pass
-//!      counter;
+//!      counter; plus the Gaussian-score fast path vs the retrieval tick
+//!      it replaces (`gauss_vs_retrieval`, retrieval-segment byte-equality
+//!      asserted before timing);
 //!   1. coarse proxy scan throughput (rows/s) vs thread count;
 //!   2. exact refine top-k inside the candidate pool;
 //!   3. gather + upload of the golden subset;
@@ -533,6 +535,75 @@ fn bench_warm_start(ds: &golddiff::Dataset, sched: &NoiseSchedule) {
     );
 }
 
+/// Section 0h: the Gaussian-score fast path — a closed-form high-noise
+/// tick vs the full retrieval tick it replaces (no runtime required).
+/// Before timing, the retrieval-segment contract is asserted: with a
+/// forced switch point, every tick at or beyond the switch is
+/// byte-identical to the gauss-off cell.
+fn bench_gauss(ds: &golddiff::Dataset, sched: &NoiseSchedule) {
+    use golddiff::denoiser::golddiff::{BaseWeighting, GoldDiff};
+    use golddiff::denoiser::Denoiser;
+
+    const SWITCH: usize = 3;
+    let build = |switch: usize| {
+        GoldDiff::paper_defaults(ds, sched, BaseWeighting::Golden)
+            .with_backend(std::sync::Arc::new(BatchedScan::default()))
+            .with_warm_start(false)
+            .with_gauss(switch)
+    };
+    let mut rng = golddiff::util::rng::Pcg64::new(61);
+    let xs: Vec<Vec<f32>> = (0..sched.steps)
+        .map(|_| (0..ds.d).map(|_| rng.normal()).collect())
+        .collect();
+
+    // exactness first: the fast path substitutes the prefix and must not
+    // perturb a single retrieval tick at or beyond the switch
+    let mut off = build(0);
+    let mut on = build(SWITCH);
+    for step in SWITCH..sched.steps {
+        let ctx = StepContext {
+            ds,
+            sched,
+            step,
+            class: None,
+        };
+        let a = off.denoise(&xs[step], &ctx);
+        let b = on.denoise(&xs[step], &ctx);
+        assert_eq!(
+            a.f_hat, b.f_hat,
+            "step {step}: gauss must leave the retrieval segment byte-identical"
+        );
+    }
+
+    println!("-- gaussian fast path (switch={SWITCH}, n={}) --", ds.n);
+    let ctx0 = StepContext {
+        ds,
+        sched,
+        step: 0,
+        class: None,
+    };
+    let mut gauss = build(SWITCH);
+    let t_gauss = bench("gauss closed-form tick t=0", 30, || {
+        let _ = gauss.denoise(&xs[0], &ctx0);
+    });
+    let mut retr = build(0);
+    let t_retr = bench("full retrieval tick t=0", 30, || {
+        let _ = retr.denoise(&xs[0], &ctx0);
+    });
+    let speedup = t_retr / t_gauss.max(1e-12);
+    println!("{:>58}  -> gauss speedup {speedup:.2}x per tick", "");
+    benchlib::emit_bench(
+        "gauss_vs_retrieval",
+        &[
+            ("n", ds.n as f64),
+            ("switch", SWITCH as f64),
+            ("gauss_secs", t_gauss),
+            ("retrieval_secs", t_retr),
+            ("speedup", speedup),
+        ],
+    );
+}
+
 /// Section 0d: out-of-core serving — the streamed (`open_streaming`,
 /// bounded LRU) corpus vs the resident one on the identical retrieval
 /// work (no runtime required). Byte-equality is asserted before timing;
@@ -967,6 +1038,11 @@ fn main() -> anyhow::Result<()> {
     // 0g. distributed shard-worker tier: loopback fleet vs in-process
     // (no runtime required; byte-equality asserted before timing)
     bench_distributed(&ds);
+
+    // 0h. Gaussian closed-form tick vs the retrieval tick it replaces
+    // (no runtime required; retrieval-segment byte-equality asserted
+    // before timing)
+    bench_gauss(&ds, &sched);
 
     // 1. coarse scan vs threads
     for threads in [1usize, 2, 4, 8] {

@@ -86,6 +86,24 @@ pub fn env_f64(name: &str, default: f64) -> f64 {
     }
 }
 
+/// Switch-point policy string with an environment override —
+/// `GOLDDIFF_GAUSS_SWITCH` accepts `auto` (bound-driven) or an explicit
+/// unsigned tick count. A set but unrecognisable value warns once to
+/// stderr and serves the default, per the strict env-knob contract.
+pub fn env_gauss_switch(name: &str, default: &str) -> String {
+    match std::env::var(name) {
+        Ok(v) => {
+            if v == "auto" || v.parse::<usize>().is_ok() {
+                v
+            } else {
+                warn_env_once(name, &v, "`auto` or an unsigned tick count", default);
+                default.to_string()
+            }
+        }
+        Err(_) => default.to_string(),
+    }
+}
+
 /// u64 default with an environment override — `GOLDDIFF_FAULT_SEED` keys
 /// the deterministic fault schedule. A set but unparsable value warns once
 /// to stderr and serves the default.
@@ -151,6 +169,18 @@ pub struct EngineConfig {
     /// concentration warm-start: seed each tick group's coarse screen from
     /// the previous sampling point's golden subsets (exactness preserved)
     pub warm_start: bool,
+    /// Gaussian-score fast path: high-noise tick groups above the switch
+    /// point are served closed-form from the corpus moment tier (zero
+    /// coarse screens, zero refines) before retrieval takes over. Stands
+    /// down to full retrieval when the store carries no usable moment tier
+    pub gauss: bool,
+    /// switch-point policy: `auto` picks the longest high-noise prefix
+    /// whose per-tick error bound stays within `gauss_tol`; an explicit
+    /// unsigned integer pins the prefix length (pinning tests, forced
+    /// A/B runs)
+    pub gauss_switch: String,
+    /// per-tick error-bound tolerance the `auto` switch policy enforces
+    pub gauss_tol: f64,
     /// queries per kernel register tile (clamped to 1..=8 at build)
     pub kernel_tile_q: usize,
     /// corpus shards: `> 1` scans shard-parallel with exact heap merges
@@ -211,6 +241,9 @@ impl Default for EngineConfig {
             simd: env_flag("GOLDDIFF_SIMD", true),
             ordering: true,
             warm_start: env_flag("GOLDDIFF_WARM_START", true),
+            gauss: env_flag("GOLDDIFF_GAUSS", false),
+            gauss_switch: env_gauss_switch("GOLDDIFF_GAUSS_SWITCH", "auto"),
+            gauss_tol: env_f64("GOLDDIFF_GAUSS_TOL", 0.05),
             kernel_tile_q: crate::index::kernel::TILE_Q,
             shards: env_usize("GOLDDIFF_SHARDS", 1),
             mem_budget_mb: env_usize("GOLDDIFF_MEM_BUDGET_MB", 0),
@@ -252,6 +285,9 @@ impl EngineConfig {
             .set("simd", self.simd)
             .set("ordering", self.ordering)
             .set("warm_start", self.warm_start)
+            .set("gauss", self.gauss)
+            .set("gauss_switch", self.gauss_switch.as_str())
+            .set("gauss_tol", self.gauss_tol)
             .set("kernel_tile_q", self.kernel_tile_q)
             .set("shards", self.shards)
             .set("mem_budget_mb", self.mem_budget_mb)
@@ -311,6 +347,9 @@ impl EngineConfig {
                 .get("warm_start")
                 .and_then(Json::as_bool)
                 .unwrap_or(def.warm_start),
+            gauss: j.get("gauss").and_then(Json::as_bool).unwrap_or(def.gauss),
+            gauss_switch: s("gauss_switch", &def.gauss_switch),
+            gauss_tol: n("gauss_tol", def.gauss_tol),
             kernel_tile_q: n("kernel_tile_q", def.kernel_tile_q as f64) as usize,
             shards: n("shards", def.shards as f64) as usize,
             mem_budget_mb: n("mem_budget_mb", def.mem_budget_mb as f64) as usize,
@@ -383,6 +422,13 @@ impl EngineConfig {
         if let Some(v) = args.get("warm-start") {
             self.warm_start = parse_flag(v);
         }
+        if let Some(v) = args.get("gauss") {
+            self.gauss = parse_flag(v);
+        }
+        if let Some(v) = args.get("gauss-switch") {
+            self.gauss_switch = v.to_string();
+        }
+        self.gauss_tol = args.f64_or("gauss-tol", self.gauss_tol);
         self.kernel_tile_q = args.usize_or("kernel-tile-q", self.kernel_tile_q);
         self.shards = args.usize_or("shards", self.shards);
         self.mem_budget_mb = args.usize_or("mem-budget-mb", self.mem_budget_mb);
@@ -446,6 +492,9 @@ mod tests {
         c.simd = false;
         c.ordering = false;
         c.warm_start = false;
+        c.gauss = true;
+        c.gauss_switch = "3".into();
+        c.gauss_tol = 0.01;
         c.kernel_tile_q = 2;
         c.shards = 6;
         c.mem_budget_mb = 512;
@@ -512,6 +561,11 @@ mod tests {
         // every default-constructed retrieval path at once
         assert_eq!(c.quant, env_flag("GOLDDIFF_QUANT", false));
         assert_eq!(c.simd, env_flag("GOLDDIFF_SIMD", true));
+        // the Gaussian fast path follows the env so the CI tier1-gauss leg
+        // can flip every default-constructed engine at once
+        assert_eq!(c.gauss, env_flag("GOLDDIFF_GAUSS", false));
+        assert_eq!(c.gauss_switch, env_gauss_switch("GOLDDIFF_GAUSS_SWITCH", "auto"));
+        assert_eq!(c.gauss_tol, env_f64("GOLDDIFF_GAUSS_TOL", 0.05));
         assert!(crate::index::backend::RetrievalBackendKind::parse(&c.backend).is_some());
         let mut c = EngineConfig::default();
         let raw: Vec<String> = [
@@ -521,6 +575,7 @@ mod tests {
             "--resident", "off", "--quant", "on", "--simd", "off",
             "--remote-workers", "2", "--worker-addrs", "127.0.0.1:7401",
             "--remote-fallback", "off", "--remote-op-timeout-ms", "500",
+            "--gauss", "on", "--gauss-switch", "4", "--gauss-tol", "0.02",
         ]
         .iter()
         .map(|s| s.to_string())
@@ -540,6 +595,9 @@ mod tests {
         assert_eq!(c.worker_addrs, "127.0.0.1:7401");
         assert!(!c.remote_fallback);
         assert_eq!(c.remote_op_timeout_ms, 500);
+        assert!(c.gauss, "--gauss on enables the Gaussian fast path");
+        assert_eq!(c.gauss_switch, "4");
+        assert!((c.gauss_tol - 0.02).abs() < 1e-12);
         let opts = c.backend_opts();
         assert!(!opts.kernel && !opts.refine_kernel && !opts.ordering);
         assert!(opts.quant && !opts.simd);
@@ -597,6 +655,29 @@ mod tests {
         std::env::set_var("GOLDDIFF_TEST_BAD_USIZE_ONLY", "-3");
         assert_eq!(env_usize("GOLDDIFF_TEST_BAD_USIZE_ONLY", 2), 2);
         std::env::remove_var("GOLDDIFF_TEST_BAD_USIZE_ONLY");
+        // GOLDDIFF_REMOTE_WORKERS / GOLDDIFF_MEM_BUDGET_MB route through
+        // `env_usize` above, so the strict warn-once-and-serve-default
+        // contract covers them without dedicated plumbing.
+    }
+
+    #[test]
+    fn gauss_switch_env_accepts_auto_or_ticks_and_falls_back() {
+        // unset → default wins
+        assert_eq!(
+            env_gauss_switch("GOLDDIFF_TEST_GSWITCH_NEVER_SET", "auto"),
+            "auto"
+        );
+        // vars only this test touches, so parallel tests cannot race
+        std::env::set_var("GOLDDIFF_TEST_GSWITCH_ONLY", "auto");
+        assert_eq!(env_gauss_switch("GOLDDIFF_TEST_GSWITCH_ONLY", "auto"), "auto");
+        std::env::set_var("GOLDDIFF_TEST_GSWITCH_ONLY", "5");
+        assert_eq!(env_gauss_switch("GOLDDIFF_TEST_GSWITCH_ONLY", "auto"), "5");
+        // malformed → warns once, serves the default
+        std::env::set_var("GOLDDIFF_TEST_GSWITCH_ONLY", "sometimes");
+        assert_eq!(env_gauss_switch("GOLDDIFF_TEST_GSWITCH_ONLY", "auto"), "auto");
+        std::env::set_var("GOLDDIFF_TEST_GSWITCH_ONLY", "-2");
+        assert_eq!(env_gauss_switch("GOLDDIFF_TEST_GSWITCH_ONLY", "auto"), "auto");
+        std::env::remove_var("GOLDDIFF_TEST_GSWITCH_ONLY");
     }
 
     #[test]

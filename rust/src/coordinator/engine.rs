@@ -33,6 +33,7 @@ use crate::config::EngineConfig;
 use crate::data::dataset::{Dataset, IvfPartition, ShardIvfPartition};
 use crate::data::shard::ShardPlan;
 use crate::data::store;
+use crate::denoiser::gaussian::{resolve_switch, GaussSwitch};
 use crate::denoiser::{DenoiserKind, StepContext};
 use crate::index::backend::{RetrievalBackend, RetrievalBackendKind};
 use crate::index::remote::RemoteShardBackend;
@@ -190,6 +191,7 @@ impl Engine {
             // on whether the tiers were on (the backend build gates them
             // on `kernel` too, which the counters themselves reveal)
             st.quant = cfg.quant;
+            st.gauss = cfg.gauss;
             // load-time integrity outcome: tiers that stood down on a
             // checksum mismatch, and the mismatch count itself (streamed
             // read failures add on top via record_source)
@@ -374,6 +376,29 @@ fn executor_loop(
         ((ds.n as f64 * cfg.k_max_frac) as usize).max(1),
         &buckets,
     );
+    // the Gaussian fast-path switch point, resolved once per engine: a
+    // forced override pins the prefix length, `auto` evaluates the error
+    // bound against the corpus spread. A dataset without a usable moment
+    // tier (streamed legacy store, or a tier pinned degraded by a
+    // checksum mismatch at load) resolves to 0 — the fast path stands
+    // down to full retrieval, serving continues byte-identically.
+    let gauss_switch = if cfg.gauss {
+        match ds.gauss_moments() {
+            Some(gm) => {
+                let mode = GaussSwitch::parse(&cfg.gauss_switch).unwrap_or_else(|| {
+                    eprintln!(
+                        "golddiff: engine: unrecognised gauss_switch `{}`; using auto",
+                        cfg.gauss_switch
+                    );
+                    GaussSwitch::Auto
+                });
+                resolve_switch(mode, &sched, gm, cfg.gauss_tol)
+            }
+            None => 0,
+        }
+    } else {
+        0
+    };
 
     loop {
         // ---- admission -------------------------------------------------
@@ -484,6 +509,7 @@ fn executor_loop(
                     &budget,
                     &backend,
                     warm_start,
+                    gauss_switch,
                     &mut active,
                     &stats,
                 )
@@ -568,6 +594,7 @@ fn step_group_once(
     budget: &BudgetSchedule,
     backend: &Arc<dyn RetrievalBackend>,
     warm_start: bool,
+    gauss_switch: usize,
     active: &mut [ActiveSeq],
     stats: &Arc<Mutex<EngineStats>>,
 ) -> Result<()> {
@@ -576,7 +603,8 @@ fn step_group_once(
             .context("denoiser init")?
             .with_budget(budget.clone())
             .with_retrieval(Arc::clone(backend))
-            .with_warm_start(warm_start);
+            .with_warm_start(warm_start)
+            .with_gauss(gauss_switch);
         denoisers.insert(group.method, den);
     }
     let den = denoisers.get_mut(&group.method).expect("just inserted");
@@ -628,9 +656,20 @@ fn step_group_once(
         st.steps_executed += 1;
         st.scan_time.record_secs(tel.scan_secs);
         st.dispatch_time.record_secs(tel.dispatch_secs);
+        st.tick_time.record_secs(tel.scan_secs + tel.dispatch_secs);
     }
+    // fold the Gaussian-tier counters BEFORE the backend snapshot lands:
+    // the backend never saw those ticks, so `record_backend` knows to
+    // leave the folded fields alone
+    let (gauss_ticks, screens_skipped) = den.take_gauss_counts();
     let mut st = lock_stats(stats);
-    st.retrieval_time.record_secs(group_scan);
+    st.gauss_ticks += gauss_ticks;
+    st.screens_skipped += screens_skipped;
+    if gauss_ticks == 0 {
+        // a Gaussian group does no retrieval — recording its zero would
+        // skew the group-retrieval latency distribution
+        st.retrieval_time.record_secs(group_scan);
+    }
     st.record_backend(backend.stats());
     // streamed corpora additionally surface the row source's own
     // residency counters (the authoritative record when the
@@ -663,8 +702,11 @@ mod tests {
         assert!(resp.sample.iter().all(|v| v.is_finite()));
         assert_eq!(resp.steps.len(), 10);
         assert!(resp.latency_secs > 0.0);
-        // k budgets shrink along the trajectory
-        assert!(resp.steps.last().unwrap().k_used < resp.steps[0].k_used);
+        // k budgets shrink along the retrieval segment (under the CI
+        // gauss leg the first ticks are closed-form with k_used = 0, so
+        // anchor on the first *retrieval* tick rather than step 0)
+        let first_retrieval = resp.steps.iter().find(|s| s.k_used > 0).unwrap();
+        assert!(resp.steps.last().unwrap().k_used < first_retrieval.k_used);
         eng.shutdown();
     }
 
@@ -1031,6 +1073,116 @@ mod tests {
         let got = eng.generate(DenoiserKind::GoldDiff, 99, None).unwrap();
         assert!(got.error.is_none());
         assert_eq!(got.sample, want.sample, "exact f32 path, byte-identical");
+        eng.shutdown();
+        std::fs::remove_dir_all(&data_dir).ok();
+    }
+
+    #[test]
+    fn gauss_fast_path_skips_screens_and_hands_off_to_retrieval() {
+        // PR-9 acceptance: with the fast path on, tick groups above the
+        // switch point execute zero coarse screens and zero refines
+        // (pinned by per-step telemetry AND the engine counters), then
+        // retrieval takes over for the rest of the trajectory
+        if !std::path::Path::new("artifacts/manifest.json").exists() {
+            return;
+        }
+        let data_dir = std::env::temp_dir().join("golddiff_engine_gauss_test");
+        std::fs::remove_dir_all(&data_dir).ok();
+        let mut cfg = EngineConfig {
+            preset: "moons".into(),
+            data_dir: data_dir.clone(),
+            ..Default::default()
+        };
+        cfg.gauss = false;
+        let eng = Engine::start(cfg.clone()).unwrap();
+        let off = eng.generate(DenoiserKind::GoldDiff, 55, None).unwrap();
+        let off_queries = eng
+            .stats_json()
+            .get("retrieval_queries")
+            .unwrap()
+            .as_f64()
+            .unwrap();
+        eng.shutdown();
+
+        cfg.gauss = true;
+        cfg.gauss_switch = "3".into(); // forced: pin the prefix length
+        let eng = Engine::start(cfg).unwrap();
+        let on = eng.generate(DenoiserKind::GoldDiff, 55, None).unwrap();
+        assert!(on.error.is_none());
+        assert!(on.sample.iter().all(|v| v.is_finite()));
+        assert_eq!(on.steps.len(), 10);
+        // the Gaussian prefix does no retrieval at all
+        for s in &on.steps[..3] {
+            assert_eq!(s.m_used, 0, "gauss tick must screen nothing");
+            assert_eq!(s.k_used, 0, "gauss tick must refine nothing");
+        }
+        // retrieval resumes with its usual budgets after the switch point
+        assert!(on.steps[3].k_used > 0, "retrieval takes over at the switch");
+        let j = eng.stats_json();
+        assert_eq!(j.get("gauss").unwrap().as_bool(), Some(true));
+        assert_eq!(j.get("gauss_ticks").unwrap().as_f64(), Some(3.0));
+        assert_eq!(j.get("screens_skipped").unwrap().as_f64(), Some(3.0));
+        assert_eq!(
+            j.get("retrieval_queries").unwrap().as_f64(),
+            Some(off_queries - 3.0),
+            "each Gaussian tick removes exactly one retrieval query"
+        );
+        let h = eng.health_json();
+        assert_eq!(
+            h.get("status").and_then(crate::util::json::Json::as_str),
+            Some("ok")
+        );
+        assert_eq!(h.get("gauss_ticks").unwrap().as_f64(), Some(3.0));
+        // the off-path trajectory also ran 10 full-retrieval steps — sanity
+        assert!(off.steps.iter().all(|s| s.k_used > 0));
+        eng.shutdown();
+        std::fs::remove_dir_all(&data_dir).ok();
+    }
+
+    #[test]
+    fn corrupt_gauss_tier_stands_down_and_serves_like_gauss_off() {
+        // degradation contract: a corrupted `gauss_*` section must not
+        // take serving down — the engine starts, health names the
+        // stood-down tier, zero ticks go through the closed form, and
+        // samples are byte-identical to a gauss-off engine
+        if !std::path::Path::new("artifacts/manifest.json").exists() {
+            return;
+        }
+        let data_dir = std::env::temp_dir().join("golddiff_engine_gauss_corrupt_test");
+        std::fs::remove_dir_all(&data_dir).ok();
+        let mut cfg = EngineConfig {
+            preset: "moons".into(),
+            data_dir: data_dir.clone(),
+            ..Default::default()
+        };
+        cfg.gauss = false;
+        let eng = Engine::start(cfg.clone()).unwrap();
+        let want = eng.generate(DenoiserKind::GoldDiff, 99, None).unwrap();
+        eng.shutdown();
+
+        corrupt_section(&store::store_path(&data_dir, "moons"), "gauss_mean");
+        cfg.gauss = true;
+        cfg.gauss_switch = "3".into();
+        let eng = Engine::start(cfg).unwrap();
+        let h = eng.health_json();
+        assert_eq!(
+            h.get("status").and_then(crate::util::json::Json::as_str),
+            Some("degraded")
+        );
+        let tiers = h.get("degraded_tiers").unwrap().as_arr().unwrap();
+        assert!(
+            tiers.iter().any(|t| t.as_str() == Some("gauss")),
+            "health must name the stood-down moment tier"
+        );
+        assert!(h.get("checksum_failures").unwrap().as_f64().unwrap() >= 1.0);
+        let got = eng.generate(DenoiserKind::GoldDiff, 99, None).unwrap();
+        assert!(got.error.is_none());
+        assert_eq!(
+            eng.stats_json().get("gauss_ticks").unwrap().as_f64(),
+            Some(0.0),
+            "a stood-down tier serves zero Gaussian ticks"
+        );
+        assert_eq!(got.sample, want.sample, "full retrieval, byte-identical");
         eng.shutdown();
         std::fs::remove_dir_all(&data_dir).ok();
     }

@@ -19,6 +19,9 @@ pub struct EngineStats {
     pub queue_delay: TimingStats,
     pub scan_time: TimingStats,
     pub dispatch_time: TimingStats,
+    /// whole sequence-steps (scan + dispatch) — the per-tick distribution
+    /// the serve bench reports percentiles over
+    pub tick_time: TimingStats,
     /// wall-clock of each batched group retrieval (one sample per group)
     pub retrieval_time: TimingStats,
     /// retrieval backend name ("flat" / "batched" / "cluster")
@@ -59,6 +62,14 @@ pub struct EngineStats {
     pub quant_rows_screened: u64,
     pub rescore_rows: u64,
     pub bound_rejects: u64,
+    /// is the Gaussian-score fast path enabled (config echo)
+    pub gauss: bool,
+    /// Gaussian-tier telemetry: sequence-ticks served closed-form, and the
+    /// coarse screens (with their refines) those ticks made unnecessary.
+    /// Engine-folded from the denoiser — the retrieval backend never sees
+    /// a Gaussian tick, so `record_backend` must leave these alone.
+    pub gauss_ticks: u64,
+    pub screens_skipped: u64,
     /// optional tiers that stood down at store load ("quant", "ivf",
     /// "shard_ivf") because their sections were corrupt — the `health` op
     /// reports `degraded` while this is non-empty
@@ -100,6 +111,7 @@ impl Default for EngineStats {
             queue_delay: TimingStats::new(),
             scan_time: TimingStats::new(),
             dispatch_time: TimingStats::new(),
+            tick_time: TimingStats::new(),
             retrieval_time: TimingStats::new(),
             backend: String::new(),
             proxy_passes: 0,
@@ -123,6 +135,9 @@ impl Default for EngineStats {
             quant_rows_screened: 0,
             rescore_rows: 0,
             bound_rejects: 0,
+            gauss: false,
+            gauss_ticks: 0,
+            screens_skipped: 0,
             degraded_tiers: Vec::new(),
             checksum_failures_load: 0,
             checksum_failures: 0,
@@ -186,6 +201,10 @@ impl EngineStats {
         self.remote_ops = snap.remote_ops;
         self.remote_retries = snap.remote_retries;
         self.workers_lost = snap.workers_lost;
+        // `snap.gauss_ticks` / `snap.screens_skipped` are deliberately NOT
+        // assigned: backend snapshots always report 0 for them (a Gaussian
+        // tick never touches the backend) and the engine folds the real
+        // counts in directly — assigning here would zero them every tick
         // a lost worker degrades the remote tier exactly like a corrupt
         // optional section degrades quant/ivf at load: serving continues
         // (in-process), `health` reports it until restart
@@ -235,7 +254,11 @@ impl EngineStats {
             .set("workers_lost", self.workers_lost as usize)
             .set("remote_retries", self.remote_retries as usize)
             .set("deadline_expired", self.deadline_expired as usize)
-            .set("panics_recovered", self.panics_recovered as usize);
+            .set("panics_recovered", self.panics_recovered as usize)
+            // a degraded gauss tier shows up both in `degraded_tiers` and
+            // as a tick count pinned at 0 while the switch wanted ticks
+            .set("gauss_ticks", self.gauss_ticks as usize)
+            .set("screens_skipped", self.screens_skipped as usize);
         j
     }
 
@@ -260,10 +283,23 @@ impl EngineStats {
             .set("steps_per_sec", self.steps_per_sec())
             .set("latency_p50_s", self.latency.percentile(0.5))
             .set("latency_p95_s", self.latency.percentile(0.95))
+            .set("latency_p99_s", self.latency.percentile(0.99))
             .set("latency_mean_s", self.latency.mean())
             .set("queue_p50_s", self.queue_delay.percentile(0.5))
             .set("scan_mean_s", self.scan_time.mean())
+            // per-stage percentiles (scan = coarse screen + exact refine,
+            // dispatch = the XLA aggregation, tick = one whole step) — the
+            // serve bench reports these instead of means alone
+            .set("scan_p50_s", self.scan_time.percentile(0.5))
+            .set("scan_p95_s", self.scan_time.percentile(0.95))
+            .set("scan_p99_s", self.scan_time.percentile(0.99))
             .set("dispatch_mean_s", self.dispatch_time.mean())
+            .set("dispatch_p50_s", self.dispatch_time.percentile(0.5))
+            .set("dispatch_p95_s", self.dispatch_time.percentile(0.95))
+            .set("dispatch_p99_s", self.dispatch_time.percentile(0.99))
+            .set("tick_p50_s", self.tick_time.percentile(0.5))
+            .set("tick_p95_s", self.tick_time.percentile(0.95))
+            .set("tick_p99_s", self.tick_time.percentile(0.99))
             .set("retrieval_mean_s", self.retrieval_time.mean())
             .set("retrieval_backend", self.backend.as_str())
             .set("proxy_passes", self.proxy_passes as usize)
@@ -288,6 +324,9 @@ impl EngineStats {
             .set("quant_rows_screened", self.quant_rows_screened as usize)
             .set("rescore_rows", self.rescore_rows as usize)
             .set("bound_rejects", self.bound_rejects as usize)
+            .set("gauss", self.gauss)
+            .set("gauss_ticks", self.gauss_ticks as usize)
+            .set("screens_skipped", self.screens_skipped as usize)
             .set(
                 "degraded_tiers",
                 Json::Arr(
@@ -342,6 +381,25 @@ mod tests {
         assert_eq!(j.get("quant_rows_screened").unwrap().as_f64(), Some(0.0));
         assert_eq!(j.get("rescore_rows").unwrap().as_f64(), Some(0.0));
         assert_eq!(j.get("bound_rejects").unwrap().as_f64(), Some(0.0));
+        // gaussian-tier telemetry is always present (zero when off)
+        assert_eq!(j.get("gauss").unwrap().as_bool(), Some(false));
+        assert_eq!(j.get("gauss_ticks").unwrap().as_f64(), Some(0.0));
+        assert_eq!(j.get("screens_skipped").unwrap().as_f64(), Some(0.0));
+        // per-stage percentiles ride alongside the means
+        for key in [
+            "latency_p99_s",
+            "scan_p50_s",
+            "scan_p95_s",
+            "scan_p99_s",
+            "dispatch_p50_s",
+            "dispatch_p95_s",
+            "dispatch_p99_s",
+            "tick_p50_s",
+            "tick_p95_s",
+            "tick_p99_s",
+        ] {
+            assert!(j.get(key).is_some(), "missing {key}");
+        }
         // fault-tolerance telemetry is always present (zero when clean)
         assert_eq!(j.get("checksum_failures").unwrap().as_f64(), Some(0.0));
         assert_eq!(j.get("retries").unwrap().as_f64(), Some(0.0));
@@ -409,6 +467,8 @@ mod tests {
             remote_ops: 30,
             remote_retries: 2,
             workers_lost: 0,
+            gauss_ticks: 0,
+            screens_skipped: 0,
         });
         let j = s.to_json();
         assert_eq!(j.get("clusters_pruned").unwrap().as_f64(), Some(24.0));
@@ -437,6 +497,19 @@ mod tests {
             s.degraded_tiers.is_empty(),
             "healthy workers degrade nothing"
         );
+        // engine-folded gauss counters survive backend snapshots (which
+        // always carry 0 for them — the backend never sees a gauss tick)
+        s.gauss_ticks = 5;
+        s.screens_skipped = 5;
+        s.record_backend(crate::index::backend::RetrievalStats::default());
+        assert_eq!(s.gauss_ticks, 5, "record_backend must not zero the fold");
+        assert_eq!(s.screens_skipped, 5);
+        let jg = s.to_json();
+        assert_eq!(jg.get("gauss_ticks").unwrap().as_f64(), Some(5.0));
+        assert_eq!(jg.get("screens_skipped").unwrap().as_f64(), Some(5.0));
+        let hg = s.health_json();
+        assert_eq!(hg.get("gauss_ticks").unwrap().as_f64(), Some(5.0));
+        assert_eq!(hg.get("screens_skipped").unwrap().as_f64(), Some(5.0));
         // exhausting a worker's retry budget degrades the remote tier —
         // once, idempotently across later snapshots
         s.record_backend(crate::index::backend::RetrievalStats {

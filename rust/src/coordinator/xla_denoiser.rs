@@ -25,12 +25,14 @@
 //! compute. GoldDiff uploads only its k_t-bucket gather each step, which is
 //! exactly the paper's complexity story.
 
+use std::collections::{HashMap, HashSet};
 use std::rc::Rc;
 use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
 use crate::data::dataset::Dataset;
+use crate::data::gauss::GaussMoments;
 use crate::denoiser::golddiff::{blended_golden_rows_batch_warm, WarmStart};
 use crate::denoiser::{DenoiseResult, Denoiser, DenoiserKind, PosteriorStats, StepContext};
 use crate::index::backend::{BackendOpts, RetrievalBackend, RetrievalBackendKind};
@@ -45,6 +47,8 @@ pub struct XlaStepTelemetry {
     pub k_used: usize,
     pub scan_secs: f64,
     pub dispatch_secs: f64,
+    /// this step was served by the Gaussian moment tier (zero retrieval)
+    pub gauss: bool,
 }
 
 pub struct XlaDenoiser {
@@ -62,6 +66,21 @@ pub struct XlaDenoiser {
     resident_full: Option<(usize, Rc<DeviceTensor>, Rc<DeviceTensor>)>,
     /// device-resident Wiener stats
     resident_wiener: Option<(Rc<DeviceTensor>, Rc<DeviceTensor>)>,
+    /// sampling points `0..gauss_switch` are served closed-form from the
+    /// corpus moment tier (`denoiser::gaussian`) — 0 disables the tier;
+    /// stands down per tick when the dataset carries no moments
+    gauss_switch: usize,
+    /// device-resident per-class Gaussian moment tensors, reusing the
+    /// `wiener_step` executable (uploaded once per class, like
+    /// `resident_wiener` — the tier's steady state uploads only x_t)
+    resident_gauss: HashMap<Option<u32>, (Rc<DeviceTensor>, Rc<DeviceTensor>)>,
+    /// per-sequence posterior means of the newest Gaussian tick, pending
+    /// the warm handoff into the first retrieval tick's screen
+    gauss_handoff: Option<Vec<Vec<f32>>>,
+    /// sequence-ticks served by the Gaussian tier (drained by the engine)
+    pub gauss_ticks: u64,
+    /// coarse screens (and their refines) the tier made unnecessary
+    pub screens_skipped: u64,
     /// gather scratch (kept across calls — zero-alloc steady state)
     gather_buf: Vec<f32>,
     mask_buf: Vec<f32>,
@@ -100,6 +119,11 @@ impl XlaDenoiser {
             warm: WarmStart::new(),
             resident_full: None,
             resident_wiener: None,
+            gauss_switch: 0,
+            resident_gauss: HashMap::new(),
+            gauss_handoff: None,
+            gauss_ticks: 0,
+            screens_skipped: 0,
             gather_buf: Vec::new(),
             mask_buf: Vec::new(),
             telemetry: XlaStepTelemetry::default(),
@@ -124,6 +148,128 @@ impl XlaDenoiser {
     pub fn with_warm_start(mut self, on: bool) -> Self {
         self.warm_start = on;
         self
+    }
+
+    /// Serve the first `switch` sampling points of GoldDiff trajectories
+    /// from the Gaussian moment tier (0 = off). Gaussian ticks never
+    /// consult the retrieval backend, so the retrieval segment from
+    /// `switch` onward is byte-identical to a run with the tier off.
+    pub fn with_gauss(mut self, switch: usize) -> Self {
+        self.gauss_switch = switch;
+        self
+    }
+
+    /// Drain the Gaussian-tier counters — the engine folds them into
+    /// `EngineStats` after every tick group (the backend snapshot knows
+    /// nothing about ticks the backend never saw).
+    pub fn take_gauss_counts(&mut self) -> (u64, u64) {
+        (
+            std::mem::take(&mut self.gauss_ticks),
+            std::mem::take(&mut self.screens_skipped),
+        )
+    }
+
+    /// Whether `step` falls in the Gaussian prefix AND the dataset's
+    /// moment tier is available to serve it (a corrupt or absent tier
+    /// stands the fast path down to full retrieval, never to an error).
+    fn gauss_serves<'a>(&self, ds: &'a Dataset, step: usize) -> Option<&'a GaussMoments> {
+        if self.is_golddiff() && step < self.gauss_switch {
+            ds.gauss_moments()
+        } else {
+            None
+        }
+    }
+
+    /// One Gaussian tick: the closed-form moment score through the
+    /// `wiener_step` executable, with the class (or global) moment
+    /// tensors lazily pinned device-resident. Zero screens, zero refines.
+    fn gauss_dispatch(
+        &mut self,
+        x_t: &[f32],
+        ctx: &StepContext,
+        gm: &GaussMoments,
+    ) -> Result<StepOutput> {
+        let ds = ctx.ds;
+        let preset = self.preset.clone();
+        let t_disp = std::time::Instant::now();
+        let alphas = self
+            .rt
+            .upload(&[ctx.alpha_bar(), ctx.sched.alpha_prev(ctx.step)], &[2])?;
+        let bx = self.rt.upload(x_t, &[ds.d])?;
+        if !self.resident_gauss.contains_key(&ctx.class) {
+            let (mean, var) = gm.moments_for(ctx.class);
+            let pair = (
+                Rc::new(self.rt.upload(mean, &[ds.d])?),
+                Rc::new(self.rt.upload(var, &[ds.d])?),
+            );
+            self.resident_gauss.insert(ctx.class, pair);
+        }
+        let (mean, var) = self.resident_gauss.get(&ctx.class).unwrap();
+        let (mean, var) = (Rc::clone(mean), Rc::clone(var));
+        let out = self
+            .rt
+            .run_step(&format!("wiener_step__{preset}"), &[&bx, &mean, &var, &alphas])?;
+        self.telemetry = XlaStepTelemetry {
+            k_bucket: 0,
+            m_used: 0,
+            k_used: 0,
+            scan_secs: 0.0,
+            dispatch_secs: t_disp.elapsed().as_secs_f64(),
+            gauss: true,
+        };
+        self.gauss_ticks += 1;
+        self.screens_skipped += 1;
+        Ok(out)
+    }
+
+    /// The gauss→retrieval handoff: seed the first retrieval tick's warm
+    /// screen with the corpus neighbourhood of the Gaussian posterior
+    /// means — the member rows of the k-means clusters nearest each mean,
+    /// nearest cluster first, until the screen budget m is covered. Seeds
+    /// are only ever an accelerator (the warm screen is exact and falls
+    /// back cold when they cannot fill the heap), so this engages only
+    /// over exact backends and never changes the retrieved subsets.
+    fn maybe_warm_handoff(&mut self, ctx: &StepContext) {
+        let Some(means) = self.gauss_handoff.take() else {
+            return;
+        };
+        if !self.warm_start || !self.backend.is_exact() || ctx.step == 0 {
+            return;
+        }
+        let ds = ctx.ds;
+        let ncl = if ds.d > 0 { ds.centroids.len() / ds.d } else { 0 };
+        if ncl == 0 {
+            return;
+        }
+        let m = self.budget.at(ctx.sched, ctx.step).m;
+        let mut cluster_rows: Vec<Vec<u32>> = vec![Vec::new(); ncl];
+        for (row, &cl) in ds.assignments.iter().enumerate() {
+            cluster_rows[cl as usize].push(row as u32);
+        }
+        let mut seeds: HashSet<u32> = HashSet::new();
+        for q in &means {
+            let mut order: Vec<usize> = (0..ncl).collect();
+            let dist = |cl: usize| -> f32 {
+                ds.centroids[cl * ds.d..(cl + 1) * ds.d]
+                    .iter()
+                    .zip(q)
+                    .map(|(a, b)| (a - b) * (a - b))
+                    .sum()
+            };
+            order.sort_by(|&a, &b| dist(a).total_cmp(&dist(b)));
+            let mut got = 0usize;
+            for cl in order {
+                got += cluster_rows[cl].len();
+                seeds.extend(cluster_rows[cl].iter().copied());
+                if got >= m {
+                    break;
+                }
+            }
+        }
+        if !seeds.is_empty() {
+            let seed_rows: Vec<u32> = seeds.into_iter().collect();
+            self.warm.record(ctx.step - 1, &[seed_rows]);
+        }
     }
 
     fn full_bucket(&self) -> usize {
@@ -324,6 +470,13 @@ impl XlaDenoiser {
 
     /// One full step dispatch: returns (x_prev, f_hat, stats) from the graph.
     pub fn step(&mut self, x_t: &[f32], ctx: &StepContext) -> Result<StepOutput> {
+        if let Some(gm) = self.gauss_serves(ctx.ds, ctx.step) {
+            let out = self.gauss_dispatch(x_t, ctx, gm)?;
+            self.gauss_handoff = Some(vec![out.f_hat.clone()]);
+            return Ok(out);
+        }
+        self.maybe_warm_handoff(ctx);
+        self.telemetry.gauss = false;
         let t_scan = std::time::Instant::now();
         let plan = self.plan(x_t, ctx)?;
         self.telemetry.scan_secs = t_scan.elapsed().as_secs_f64();
@@ -351,6 +504,24 @@ impl XlaDenoiser {
         }
 
         let ds = ctxs[0].ds;
+        // a whole tick group above the switch point is served closed-form:
+        // zero coarse screens, zero refines, no backend contact at all
+        if self.gauss_serves(ds, ctxs[0].step).is_some() {
+            let mut outs = Vec::with_capacity(xs.len());
+            let mut means = Vec::with_capacity(xs.len());
+            for (x_t, ctx) in xs.iter().zip(ctxs) {
+                let gm = self
+                    .gauss_serves(ctx.ds, ctx.step)
+                    .expect("gated above; groups share one dataset");
+                let out = self.gauss_dispatch(x_t, ctx, gm)?;
+                means.push(out.f_hat.clone());
+                outs.push((out, self.telemetry));
+            }
+            self.gauss_handoff = Some(means);
+            return Ok(outs);
+        }
+        self.maybe_warm_handoff(ctxs[0]);
+        self.telemetry.gauss = false;
         let t_scan = std::time::Instant::now();
         let b = self.budget.at(ctxs[0].sched, ctxs[0].step);
         let warm = self.warm_start.then_some(&mut self.warm);
@@ -395,7 +566,11 @@ impl Denoiser for XlaDenoiser {
                 entropy: out.stats.entropy,
                 top1_weight: out.stats.top1_weight,
             },
-            support: self.telemetry.k_used.max(1),
+            support: if self.telemetry.gauss {
+                0 // no rows aggregated — the moment tier is closed-form
+            } else {
+                self.telemetry.k_used.max(1)
+            },
         }
     }
 
@@ -529,6 +704,68 @@ mod tests {
         }
         // exactly one full-bucket executable compiled & one resident upload
         assert!(xla.resident_full.is_some());
+    }
+
+    #[test]
+    fn gauss_prefix_is_closed_form_and_retrieval_segment_is_unchanged() {
+        // ticks below the switch serve the CPU closed form (zero screens,
+        // zero refines, gauss telemetry), and every tick at/after the
+        // switch is byte-identical to a denoiser with the tier off
+        let Some((rt, ds, sched)) = setup() else { return };
+        let backend: Arc<dyn RetrievalBackend> = Arc::new(BatchedScan::new(2));
+        let switch = 3usize;
+        let mut on = XlaDenoiser::new(Rc::clone(&rt), &ds, DenoiserKind::GoldDiff)
+            .unwrap()
+            .with_retrieval(Arc::clone(&backend))
+            .with_gauss(switch);
+        let mut off = XlaDenoiser::new(Rc::clone(&rt), &ds, DenoiserKind::GoldDiff)
+            .unwrap()
+            .with_retrieval(Arc::clone(&backend));
+        let gm = ds.gauss_moments().expect("resident corpora build lazily");
+        let xs_data: Vec<Vec<f32>> = (0..4).map(|i| vec![0.1 * i as f32, -0.3]).collect();
+        for step in 0..sched.steps {
+            let ctx = StepContext {
+                ds: &ds,
+                sched: &sched,
+                step,
+                class: None,
+            };
+            let xs: Vec<&[f32]> = xs_data.iter().map(|x| x.as_slice()).collect();
+            let ctxs: Vec<&StepContext> = xs.iter().map(|_| &ctx).collect();
+            let g_on = on.step_group(&xs, &ctxs).unwrap();
+            let g_off = off.step_group(&xs, &ctxs).unwrap();
+            for (i, x) in xs.iter().enumerate() {
+                if step < switch {
+                    assert!(g_on[i].1.gauss, "step {step} seq {i}");
+                    assert_eq!(g_on[i].1.m_used, 0, "gauss ticks screen nothing");
+                    assert_eq!(g_on[i].1.k_used, 0, "gauss ticks refine nothing");
+                    let want = crate::denoiser::gaussian::closed_form_f_hat(
+                        gm,
+                        x,
+                        ctx.alpha_bar(),
+                        None,
+                    );
+                    for j in 0..ds.d {
+                        assert!(
+                            (g_on[i].0.f_hat[j] - want[j]).abs() < 1e-3,
+                            "step {step} seq {i} dim {j}"
+                        );
+                    }
+                } else {
+                    assert!(!g_on[i].1.gauss);
+                    assert_eq!(
+                        g_on[i].0.f_hat, g_off[i].0.f_hat,
+                        "retrieval segment diverged at step {step} seq {i}"
+                    );
+                    assert_eq!(g_on[i].0.x_prev, g_off[i].0.x_prev, "step {step} seq {i}");
+                }
+            }
+        }
+        let (ticks, skipped) = on.take_gauss_counts();
+        assert_eq!(ticks, (switch * xs_data.len()) as u64);
+        assert_eq!(skipped, (switch * xs_data.len()) as u64);
+        assert_eq!(on.take_gauss_counts(), (0, 0), "counters drain on take");
+        assert_eq!(off.gauss_ticks, 0);
     }
 
     #[test]

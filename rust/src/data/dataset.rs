@@ -167,6 +167,13 @@ pub struct Dataset {
     /// corpus on first use; `None` on a streamed legacy store, which
     /// makes the pre-rung stand down
     pub(crate) quant_row_tier: OnceLock<Option<QuantRows>>,
+    /// per-class + global diagonal moment summary for the Gaussian
+    /// high-noise fast path: preloaded from the `.gds` v6 `gauss_*`
+    /// sections when the store carries them (both residencies — same
+    /// bytes), else rebuilt from the corpus on the first resident use;
+    /// `None` on a streamed legacy store, which makes the Gaussian
+    /// tier stand down
+    pub(crate) gauss_moment_tier: OnceLock<Option<super::gauss::GaussMoments>>,
     /// per-class row indices (conditional scans)
     pub class_rows: Vec<Vec<u32>>,
     /// persisted IVF partition, if the `.gds` store carried one
@@ -298,6 +305,7 @@ impl Dataset {
             row_blocks: OnceLock::new(),
             quant_proxy: OnceLock::new(),
             quant_row_tier: OnceLock::new(),
+            gauss_moment_tier: OnceLock::new(),
             class_rows,
             ivf: None,
             shard_ivf: None,
@@ -421,6 +429,23 @@ impl Dataset {
             .as_ref()
     }
 
+    /// Per-class + global diagonal moments for the Gaussian high-noise
+    /// fast path. Preloaded from the `.gds` v6 `gauss_*` sections when
+    /// the store carries them (see `data::store`); otherwise rebuilt
+    /// with one streamed corpus pass on a **resident** legacy open.
+    /// Returns `None` on a streamed legacy store — the Gaussian tier
+    /// stands down and every tick runs full retrieval, per the
+    /// degradation discipline (a serve-time whole-corpus read off disk
+    /// is exactly what streamed serving exists to avoid).
+    pub fn gauss_moments(&self) -> Option<&super::gauss::GaussMoments> {
+        self.gauss_moment_tier
+            .get_or_init(|| match &self.rows {
+                RowSource::Resident(_) => Some(super::gauss::GaussMoments::build(self)),
+                RowSource::Streamed(_) => None,
+            })
+            .as_ref()
+    }
+
     /// Rows `[s, e)` as a pre-blocked kernel table harvesting global ids —
     /// the build a (possibly evicted) corpus shard rebuilds from. Resident:
     /// gathered from the corpus; streamed: read off the store (bit-identical
@@ -521,6 +546,7 @@ impl Dataset {
             row_blocks: OnceLock::new(),
             quant_proxy: OnceLock::new(),
             quant_row_tier: OnceLock::new(),
+            gauss_moment_tier: OnceLock::new(),
             class_rows,
             ivf: None,
             shard_ivf: None,

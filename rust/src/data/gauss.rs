@@ -1,0 +1,251 @@
+//! Gaussian moment tier: one-pass per-class + global diagonal moment
+//! summaries of the full-resolution corpus, feeding the closed-form
+//! high-noise score (`denoiser::gaussian`).
+//!
+//! The accumulator streams the corpus **once, in ascending row order,
+//! through [`Dataset::visit_rows`]** — so an out-of-core corpus never
+//! materialises (consecutive ids inside one shard share a single LRU
+//! probe) and the result is bit-identical across residencies, shard
+//! counts, and evictions: the visit order is fixed, the row bytes are
+//! identical, and all accumulation happens in f64 before one rounding
+//! to f32 at the end.
+//!
+//! Persistence: the summary is tiny (`(classes + 1) × d` means and
+//! variances plus the counts) and rides the `.gds` store as the v6
+//! `gauss_mean` / `gauss_var` / `gauss_counts` optional sections —
+//! checksummed like every other section, degrading per the PR-7
+//! discipline when corrupt (see `data::store`).
+
+use anyhow::{ensure, Result};
+
+use super::dataset::Dataset;
+
+/// Diagonal Gaussian moments of the corpus, per class and global.
+///
+/// Group layout: slot `0` is the global corpus, slot `1 + y` is class
+/// `y` — so `mean`/`var` are `[(classes + 1) × d]` and `counts` is
+/// `[classes + 1]` with `counts[0] == n`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GaussMoments {
+    pub d: usize,
+    pub classes: usize,
+    /// group-major means `[(classes + 1) × d]`, global first
+    pub mean: Vec<f32>,
+    /// group-major diagonal variances `[(classes + 1) × d]`, floored at
+    /// `1e-6` (matches the global Wiener stats discipline)
+    pub var: Vec<f32>,
+    /// rows per group `[classes + 1]` (`counts[0] == n`)
+    pub counts: Vec<u32>,
+}
+
+impl GaussMoments {
+    /// One streamed pass over the corpus in ascending row order. f64
+    /// accumulation + a single terminal rounding makes the result
+    /// bit-identical for any residency / shard count / LRU budget.
+    pub fn build(ds: &Dataset) -> GaussMoments {
+        let (n, d, classes) = (ds.n, ds.d, ds.classes);
+        let groups = classes + 1;
+        let mut sum = vec![0.0f64; groups * d];
+        let mut sumsq = vec![0.0f64; groups * d];
+        let mut counts = vec![0u32; groups];
+        ds.visit_rows(0..n as u32, |gid, row| {
+            let g = ds.labels[gid as usize] as usize + 1;
+            counts[0] += 1;
+            counts[g] += 1;
+            for (j, &v) in row.iter().enumerate() {
+                let v = v as f64;
+                sum[j] += v;
+                sumsq[j] += v * v;
+                sum[g * d + j] += v;
+                sumsq[g * d + j] += v * v;
+            }
+        });
+        let mut mean = vec![0.0f32; groups * d];
+        let mut var = vec![0.0f32; groups * d];
+        for g in 0..groups {
+            let c = counts[g] as f64;
+            if c == 0.0 {
+                continue;
+            }
+            for j in 0..d {
+                let m = sum[g * d + j] / c;
+                let v = (sumsq[g * d + j] / c - m * m).max(1e-6);
+                mean[g * d + j] = m as f32;
+                var[g * d + j] = v as f32;
+            }
+        }
+        GaussMoments {
+            d,
+            classes,
+            mean,
+            var,
+            counts,
+        }
+    }
+
+    /// Rehydrate from the flat `.gds` sections, validating the shapes
+    /// and the count invariants so a mismatched store fails loudly
+    /// instead of serving moments from the wrong corpus.
+    pub fn from_parts(
+        d: usize,
+        classes: usize,
+        n: usize,
+        mean: Vec<f32>,
+        var: Vec<f32>,
+        counts: Vec<u32>,
+    ) -> Result<GaussMoments> {
+        let groups = classes + 1;
+        ensure!(
+            mean.len() == groups * d && var.len() == groups * d,
+            "gauss moment sections have {} / {} values, want {} per table",
+            mean.len(),
+            var.len(),
+            groups * d
+        );
+        ensure!(
+            counts.len() == groups,
+            "gauss_counts has {} groups, want {groups}",
+            counts.len()
+        );
+        ensure!(
+            counts[0] as usize == n,
+            "gauss_counts[0] = {} rows, corpus has {n}",
+            counts[0]
+        );
+        ensure!(
+            counts[1..].iter().map(|&c| c as usize).sum::<usize>() == n,
+            "per-class gauss counts do not sum to the corpus size"
+        );
+        Ok(GaussMoments {
+            d,
+            classes,
+            mean,
+            var,
+            counts,
+        })
+    }
+
+    /// The moment group a step context should score against: the class
+    /// slot when the context is conditional and that class has support,
+    /// the global slot otherwise.
+    pub fn moments_for(&self, class: Option<u32>) -> (&[f32], &[f32]) {
+        let g = match class {
+            Some(y) if (y as usize) < self.classes && self.counts[y as usize + 1] > 0 => {
+                y as usize + 1
+            }
+            _ => 0,
+        };
+        (
+            &self.mean[g * self.d..(g + 1) * self.d],
+            &self.var[g * self.d..(g + 1) * self.d],
+        )
+    }
+
+    /// Global diagonal variance — the corpus-spread statistic the
+    /// `auto` switch-point bound evaluates against.
+    pub fn global_var(&self) -> &[f32] {
+        &self.var[..self.d]
+    }
+
+    /// Mean per-dimension corpus variance (the scalar "spread" the
+    /// switch-point error bound uses).
+    pub fn spread(&self) -> f64 {
+        if self.d == 0 {
+            return 0.0;
+        }
+        self.var[..self.d].iter().map(|&v| v as f64).sum::<f64>() / self.d as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::preset;
+
+    fn tiny(n: usize) -> Dataset {
+        let mut spec = preset("mnist-sim").unwrap().clone();
+        spec.n = n;
+        Dataset::synthesize(&spec, 42)
+    }
+
+    #[test]
+    fn moments_match_a_direct_two_pass_reference() {
+        let ds = tiny(240);
+        let gm = GaussMoments::build(&ds);
+        assert_eq!(gm.counts[0] as usize, ds.n);
+        assert_eq!(
+            gm.counts[1..].iter().map(|&c| c as usize).sum::<usize>(),
+            ds.n
+        );
+        // global slot agrees with a direct f64 reference over Dataset::row
+        for j in (0..ds.d).step_by(13) {
+            let mut s = 0.0f64;
+            for i in 0..ds.n {
+                s += ds.row(i)[j] as f64;
+            }
+            let m = s / ds.n as f64;
+            assert!((gm.mean[j] as f64 - m).abs() < 1e-5, "mean dim {j}");
+            let mut v = 0.0f64;
+            for i in 0..ds.n {
+                let dv = ds.row(i)[j] as f64 - m;
+                v += dv * dv;
+            }
+            v = (v / ds.n as f64).max(1e-6);
+            assert!((gm.var[j] as f64 - v).abs() < 1e-4, "var dim {j}");
+        }
+        assert!(gm.var.iter().all(|&v| v >= 1e-6), "variance floor holds");
+        assert!(gm.spread() > 0.0);
+    }
+
+    #[test]
+    fn class_slots_select_and_fall_back() {
+        let ds = tiny(200);
+        let gm = GaussMoments::build(&ds);
+        // a populated class serves its own slot
+        let y = ds.labels[0];
+        let (m, v) = gm.moments_for(Some(y));
+        assert_eq!(m, &gm.mean[(y as usize + 1) * gm.d..(y as usize + 2) * gm.d]);
+        assert_eq!(v, &gm.var[(y as usize + 1) * gm.d..(y as usize + 2) * gm.d]);
+        // unconditional and out-of-range classes serve the global slot
+        let (g, _) = gm.moments_for(None);
+        assert_eq!(g, &gm.mean[..gm.d]);
+        let (g2, _) = gm.moments_for(Some(u32::MAX));
+        assert_eq!(g2, g);
+    }
+
+    #[test]
+    fn from_parts_validates_shapes_and_counts() {
+        let ds = tiny(120);
+        let gm = GaussMoments::build(&ds);
+        let ok = GaussMoments::from_parts(
+            gm.d,
+            gm.classes,
+            ds.n,
+            gm.mean.clone(),
+            gm.var.clone(),
+            gm.counts.clone(),
+        )
+        .unwrap();
+        assert_eq!(ok, gm, "roundtrip through flat parts is lossless");
+        // wrong corpus size fails loudly
+        assert!(GaussMoments::from_parts(
+            gm.d,
+            gm.classes,
+            ds.n + 1,
+            gm.mean.clone(),
+            gm.var.clone(),
+            gm.counts.clone(),
+        )
+        .is_err());
+        // truncated table fails loudly
+        assert!(GaussMoments::from_parts(
+            gm.d,
+            gm.classes,
+            ds.n,
+            gm.mean[..gm.d].to_vec(),
+            gm.var.clone(),
+            gm.counts.clone(),
+        )
+        .is_err());
+    }
+}

@@ -5,6 +5,7 @@
 
 pub mod cluster;
 pub mod dataset;
+pub mod gauss;
 pub mod gmm;
 pub mod rows;
 pub mod shard;
@@ -12,6 +13,7 @@ pub mod store;
 pub mod synthetic;
 
 pub use dataset::{Dataset, IvfPartition, ShardIvfPartition};
+pub use gauss::GaussMoments;
 pub use gmm::GmmSpec;
 pub use rows::{RowCursor, RowSource, RowSourceStats, StreamedRows};
 pub use shard::{CorpusShards, ShardCacheStats, ShardPlan};

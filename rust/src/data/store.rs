@@ -54,6 +54,18 @@
 //! `checksum_failures`. Writes were already atomic (`*.tmp` + rename);
 //! v5 also fsyncs the payload and the parent directory so the rename is
 //! durable. v≤4 stores carry no checksums and load exactly as before.
+//!
+//! Version 6 appends the **Gaussian moment tier**: `gauss_mean` /
+//! `gauss_var` (group-major `(classes + 1) × d` f32 tables, global slot
+//! first) and `gauss_counts` (u32 rows per group) — the per-class +
+//! global diagonal moment summary the high-noise closed-form score
+//! (`denoiser::gaussian`) serves from. The sections are optional under
+//! the same rules as the quant tier: a v≤5 store loads unchanged, a
+//! resident legacy open rebuilds the (bit-identical) summary with one
+//! corpus pass on first use, a streamed legacy open reports no tier
+//! (the Gaussian fast path stands down and every tick runs full
+//! retrieval), and a present-but-corrupt section degrades the tier
+//! per the v5 discipline instead of failing the load.
 
 use std::fs::File;
 use std::io::{BufReader, BufWriter, Read, Seek, SeekFrom, Write};
@@ -63,6 +75,7 @@ use std::sync::Arc;
 use anyhow::{bail, Context, Result};
 
 use super::dataset::{Dataset, IvfPartition, ShardIvfPartition};
+use super::gauss::GaussMoments;
 use super::gmm::GmmSpec;
 use super::rows::{RowSource, StreamedRows};
 use crate::data::shard::ShardPlan;
@@ -75,11 +88,13 @@ const MAGIC: &[u8; 4] = b"GDS1";
 /// Header format version: 2 added the optional IVF partition sections; 3
 /// added the per-shard alias sections + `shards` header field; 4 added the
 /// optional quantised row tier (`quant_codes` / `quant_scale` /
-/// `quant_err`); 5 added the per-section `crc32` checksums. Readers never
-/// gate on this — unknown sections are ignored, missing ones degrade
-/// per-feature, and sections without a `crc32` field simply skip
-/// verification — so it is documentation, not a compatibility switch.
-const VERSION: usize = 5;
+/// `quant_err`); 5 added the per-section `crc32` checksums; 6 added the
+/// optional Gaussian moment tier (`gauss_mean` / `gauss_var` /
+/// `gauss_counts`). Readers never gate on this — unknown sections are
+/// ignored, missing ones degrade per-feature, and sections without a
+/// `crc32` field simply skip verification — so it is documentation, not
+/// a compatibility switch.
+const VERSION: usize = 6;
 
 /// A section's stored checksum disagrees with its bytes: the store is
 /// corrupt (bit rot, torn write, flaky medium). Carried as the typed root
@@ -223,6 +238,10 @@ fn write_store(ds: &Dataset, path: &Path, shards: usize) -> Result<()> {
     // so every saved store carries it regardless of what the writer touched
     let quant = QuantRows::build(data, ds.n, ds.d);
     let quant_codes = pack_i8(quant.codes_flat());
+    // v6: the Gaussian moment tier is likewise recomputed at save
+    // (deterministic in the corpus bytes + labels) so every saved store
+    // carries the summary the high-noise fast path serves from
+    let gauss = GaussMoments::build(ds);
     let mut plan = vec![
         Sec::F("data".into(), data),
         Sec::U("labels".into(), &ds.labels),
@@ -240,6 +259,9 @@ fn write_store(ds: &Dataset, path: &Path, shards: usize) -> Result<()> {
         Sec::U("quant_codes".into(), &quant_codes),
         Sec::F("quant_scale".into(), quant.scales_flat()),
         Sec::F("quant_err".into(), quant.errs_flat()),
+        Sec::F("gauss_mean".into(), &gauss.mean),
+        Sec::F("gauss_var".into(), &gauss.var),
+        Sec::U("gauss_counts".into(), &gauss.counts),
     ];
     if let Some(ivf) = &ds.ivf {
         plan.push(Sec::F("ivf_centroids".into(), &ivf.centroids));
@@ -708,6 +730,41 @@ fn finish_dataset(mut sf: StoreFile, rows: RowSource) -> Result<Dataset> {
         }
     }
 
+    // v6 stores carry the Gaussian moment tier; preload it so both
+    // residencies serve the same persisted bytes. Legacy stores leave
+    // the lock empty: a resident open rebuilds the (bit-identical)
+    // summary with one corpus pass on first use, a streamed open
+    // reports None and the Gaussian fast path stands down. A corrupt
+    // section pins the tier off, same as quant.
+    let gauss_moment_tier = std::sync::OnceLock::new();
+    if sf.has_section("gauss_mean")
+        && sf.has_section("gauss_var")
+        && sf.has_section("gauss_counts")
+    {
+        let built = (|| -> Result<GaussMoments> {
+            let mean = sf.read_f32("gauss_mean")?;
+            let var = sf.read_f32("gauss_var")?;
+            let counts = sf.read_u32("gauss_counts")?;
+            GaussMoments::from_parts(d, classes, n, mean, var, counts).with_context(|| {
+                format!(
+                    "{:?}: gauss sections disagree with the {n}-row, \
+                     {classes}-class corpus shape",
+                    sf.path
+                )
+            })
+        })();
+        match built {
+            Ok(gm) => {
+                let _ = gauss_moment_tier.set(Some(gm));
+            }
+            Err(err) => {
+                tier_degraded(&sf.path, "gauss", &err, &mut checksum_failures);
+                degraded.push("gauss".to_string());
+                let _ = gauss_moment_tier.set(None);
+            }
+        }
+    }
+
     let proxy_blocks = ProxyBlocks::build(&proxies, n, proxy_d);
     Ok(Dataset {
         name: sf.header.str_field("name")?.to_string(),
@@ -730,6 +787,7 @@ fn finish_dataset(mut sf: StoreFile, rows: RowSource) -> Result<Dataset> {
         row_blocks: std::sync::OnceLock::new(),
         quant_proxy: std::sync::OnceLock::new(),
         quant_row_tier,
+        gauss_moment_tier,
         class_rows,
         ivf,
         shard_ivf,
@@ -1216,13 +1274,15 @@ mod tests {
         save(&ds, &path).unwrap();
         let pristine = std::fs::read(&path).unwrap();
 
-        // a 16-byte tail cut lands in `quant_err` — optional, degrades
+        // a 16-byte tail cut lands in the `gauss_*` tail — optional,
+        // degrades (the quant tier ahead of it is untouched)
         let f = std::fs::OpenOptions::new().write(true).open(&path).unwrap();
         f.set_len(pristine.len() as u64 - 16).unwrap();
         drop(f);
         let rt = load(&path).unwrap();
-        assert_eq!(rt.degraded, vec!["quant".to_string()]);
-        assert!(rt.quant_rows().is_none(), "the torn tier must stand down");
+        assert_eq!(rt.degraded, vec!["gauss".to_string()]);
+        assert!(rt.gauss_moments().is_none(), "the torn tier must stand down");
+        assert!(rt.quant_rows().is_some(), "earlier tiers are untouched");
         assert_eq!(rt.resident_rows(), ds.resident_rows(), "corpus intact");
 
         // a cut inside a *required* section fails, naming it
@@ -1330,13 +1390,14 @@ mod tests {
         save(&ds, &path).unwrap();
         let pristine = std::fs::read(&path).unwrap();
 
-        // tail cut into the optional quant tier: serving continues exact
+        // tail cut into the optional gauss tier: serving continues exact
         let f = std::fs::OpenOptions::new().write(true).open(&path).unwrap();
         f.set_len(pristine.len() as u64 - 16).unwrap();
         drop(f);
         let st = open_streaming(&path, 3, 0).unwrap();
-        assert_eq!(st.degraded, vec!["quant".to_string()]);
-        assert!(st.quant_rows().is_none());
+        assert_eq!(st.degraded, vec!["gauss".to_string()]);
+        assert!(st.gauss_moments().is_none());
+        assert!(st.quant_rows().is_some(), "earlier tiers are untouched");
         let mut cur = st.row_cursor();
         assert_eq!(cur.row(5), ds.row(5), "rows still stream");
 
@@ -1404,10 +1465,11 @@ mod tests {
         std::fs::write(path, bytes).unwrap();
     }
 
-    /// Rewrite a store's header with the `quant_*` sections stripped —
-    /// simulates a v1–v3 store (the payload bytes stay; section offsets
-    /// are relative to the header end, so a shorter header stays valid).
-    fn strip_quant_sections(path: &Path) {
+    /// Rewrite a store's header with every section matching `prefix`
+    /// stripped — simulates an older-version store (the payload bytes
+    /// stay; section offsets are relative to the header end, so a
+    /// shorter header stays valid).
+    fn strip_sections(path: &Path, prefix: &str) {
         let bytes = std::fs::read(path).unwrap();
         let hlen = u32::from_le_bytes([bytes[4], bytes[5], bytes[6], bytes[7]]) as usize;
         let mut header = parse(std::str::from_utf8(&bytes[8..8 + hlen]).unwrap()).unwrap();
@@ -1419,7 +1481,7 @@ mod tests {
             .filter(|s| {
                 !s.get("name")
                     .and_then(crate::util::json::Json::as_str)
-                    .is_some_and(|n| n.starts_with("quant_"))
+                    .is_some_and(|n| n.starts_with(prefix))
             })
             .cloned()
             .collect();
@@ -1466,7 +1528,7 @@ mod tests {
         std::fs::remove_dir_all(&dir).ok();
         let path = dir.join("moons.gds");
         save(&ds, &path).unwrap();
-        strip_quant_sections(&path);
+        strip_sections(&path, "quant_");
 
         let resident = load(&path).unwrap();
         assert_eq!(resident.resident_rows(), ds.resident_rows());
@@ -1515,9 +1577,9 @@ mod tests {
         let bytes = std::fs::read(&path).unwrap();
         let hlen = u32::from_le_bytes([bytes[4], bytes[5], bytes[6], bytes[7]]) as usize;
         let header = parse(std::str::from_utf8(&bytes[8..8 + hlen]).unwrap()).unwrap();
-        assert_eq!(header.get("version").and_then(Json::as_f64), Some(5.0));
+        assert_eq!(header.get("version").and_then(Json::as_f64), Some(6.0));
         let sections = header.get("sections").and_then(Json::as_arr).unwrap();
-        assert!(sections.len() >= 16 + 2 + 6 + 6, "full v1–v5 menu present");
+        assert!(sections.len() >= 19 + 2 + 6 + 6, "full v1–v6 menu present");
         for sec in sections {
             let name = sec.get("name").and_then(Json::as_str).unwrap();
             let crc = sec.get("crc32").and_then(Json::as_f64);
@@ -1581,6 +1643,126 @@ mod tests {
         assert!(st.quant_rows().is_none());
         let mut cur = st.row_cursor();
         assert_eq!(cur.row(7), ds.row(7), "rows still stream byte-identical");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn gauss_tier_roundtrips_resident_and_streaming() {
+        // Tentpole: the v6 gauss sections reload bit-identical to a fresh
+        // build from the corpus, on both open paths — the streamed open
+        // serves the Gaussian fast path without ever touching `data`
+        let mut spec = preset("moons").unwrap().clone();
+        spec.n = 84;
+        let ds = Dataset::synthesize(&spec, 61);
+        let want = GaussMoments::build(&ds);
+        let dir = std::env::temp_dir().join("golddiff_store_gauss_test");
+        std::fs::remove_dir_all(&dir).ok();
+        let path = dir.join("moons.gds");
+        save_sharded(&ds, &path, 3).unwrap();
+
+        for opened in [load(&path).unwrap(), open_streaming(&path, 3, 0).unwrap()] {
+            let got = opened.gauss_moments().expect("v6 stores carry the tier");
+            assert_eq!(got, &want, "persisted moments are bit-identical");
+        }
+        // the streamed open reads zero corpus rows to serve the tier
+        let st = open_streaming(&path, 3, 0).unwrap();
+        let _ = st.gauss_moments().unwrap();
+        assert_eq!(st.source_stats().unwrap().rows_streamed, 0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn legacy_store_without_gauss_sections_degrades_per_residency() {
+        // a v≤5 shape store: the resident open rebuilds the summary from
+        // the corpus (identical bytes), the streamed open stands down
+        let mut spec = preset("moons").unwrap().clone();
+        spec.n = 56;
+        let ds = Dataset::synthesize(&spec, 67);
+        let dir = std::env::temp_dir().join("golddiff_store_gauss_legacy_test");
+        std::fs::remove_dir_all(&dir).ok();
+        let path = dir.join("moons.gds");
+        save(&ds, &path).unwrap();
+        strip_sections(&path, "gauss_");
+
+        let resident = load(&path).unwrap();
+        assert!(resident.degraded.is_empty(), "legacy absence is not corruption");
+        let want = GaussMoments::build(&ds);
+        assert_eq!(
+            resident.gauss_moments().expect("resident opens rebuild"),
+            &want
+        );
+
+        let streamed = open_streaming(&path, 2, 0).unwrap();
+        assert!(
+            streamed.gauss_moments().is_none(),
+            "a streamed legacy store never pays a serve-time corpus pass"
+        );
+        let mut cur = streamed.row_cursor();
+        assert_eq!(cur.row(7), ds.row(7), "rows still serve");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corrupt_gauss_tier_degrades_and_serving_continues() {
+        // a corrupt *optional* gauss section stands the tier down on both
+        // open paths — pinned off (no lazy resident rebuild masking it),
+        // surfaced in degraded/checksum telemetry, exact path intact
+        let mut spec = preset("moons").unwrap().clone();
+        spec.n = 52;
+        let ds = Dataset::synthesize(&spec, 71);
+        let dir = std::env::temp_dir().join("golddiff_store_corrupt_gauss_test");
+        std::fs::remove_dir_all(&dir).ok();
+        let path = dir.join("moons.gds");
+        save_sharded(&ds, &path, 3).unwrap();
+        flip_section_byte(&path, "gauss_var");
+
+        let rt = load(&path).unwrap();
+        assert_eq!(rt.degraded, vec!["gauss".to_string()]);
+        assert_eq!(rt.checksum_failures, 1);
+        assert!(
+            rt.gauss_moments().is_none(),
+            "the corrupt tier must pin off, not lazily rebuild from the corpus"
+        );
+        assert!(rt.quant_rows().is_some(), "other tiers are untouched");
+        assert_eq!(rt.resident_rows(), ds.resident_rows(), "exact path intact");
+
+        let st = open_streaming(&path, 3, 0).unwrap();
+        assert_eq!(st.degraded, vec!["gauss".to_string()]);
+        assert_eq!(st.checksum_failures, 1);
+        assert!(st.gauss_moments().is_none());
+        let mut cur = st.row_cursor();
+        assert_eq!(cur.row(9), ds.row(9), "rows still stream byte-identical");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn gauss_moments_byte_identical_across_residency_shards_and_evictions() {
+        // Satellite: the accumulator's one ascending visit_rows pass makes
+        // the summary bit-identical whether the corpus is resident or
+        // streamed, under any shard count, and under an LRU budget tight
+        // enough to force evictions mid-pass
+        let mut spec = preset("mnist-sim").unwrap().clone();
+        spec.n = 180;
+        let ds = Dataset::synthesize(&spec, 77);
+        let want = GaussMoments::build(&ds);
+        let dir = std::env::temp_dir().join("golddiff_store_gauss_equality_test");
+        std::fs::remove_dir_all(&dir).ok();
+        let path = dir.join("mnist-sim.gds");
+        save_sharded(&ds, &path, 4).unwrap();
+        strip_sections(&path, "gauss_"); // force a streamed rebuild path
+
+        for shards in [1usize, 4, 6] {
+            // budget 0 = minimum (one block resident at a time): every
+            // shard transition evicts, the accumulator must not care
+            for budget_mb in [0usize, 1, 64] {
+                let st = open_streaming(&path, shards, budget_mb).unwrap();
+                let got = GaussMoments::build(&st);
+                assert_eq!(
+                    got, want,
+                    "shards={shards} budget={budget_mb}MiB must be bit-identical"
+                );
+            }
+        }
         std::fs::remove_dir_all(&dir).ok();
     }
 

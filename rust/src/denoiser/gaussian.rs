@@ -1,0 +1,254 @@
+//! Gaussian-score fast path for the high-noise regime.
+//!
+//! The paper's Posterior Progressive Concentration says the golden
+//! support is near-global at low SNR — exactly where every screen is
+//! most expensive, because no pruning tier can shrink a support that
+//! genuinely spans the corpus. But in that same regime the posterior
+//! over corpus rows is nearly uniform, so the mixture score collapses
+//! to the score of a single moment-matched Gaussian: the closed form
+//! here serves those ticks from the corpus moment summary
+//! ([`GaussMoments`]) with **zero screens and zero refines**, and the
+//! trajectory hands off to golden-subset retrieval once concentration
+//! kicks in.
+//!
+//! ## The switch-point error bound
+//!
+//! With corpus spread `s̄` (mean per-dimension variance) and noise
+//! level σ_t² = (1−ᾱ)/ᾱ, the per-dimension Wiener gain of the
+//! moment-matched Gaussian is `s̄/(s̄+σ_t²)` — the fraction of the
+//! posterior mean that comes from the *query* rather than the corpus
+//! mean. That same ratio governs how far the true mixture posterior
+//! can concentrate away from the moment Gaussian: at `σ_t² ≫ s̄` the
+//! analytical logits `−‖q−x_i‖²/(2σ_t²)` spread the posterior almost
+//! uniformly over the corpus and the approximation error is
+//! `O(s̄/σ_t²)`. So we bound
+//!
+//! ```text
+//!   err(i) = s̄ / (s̄ + σ_i²)
+//! ```
+//!
+//! and serve Gaussian ticks for the longest *prefix* of sampling
+//! points with `err(i) ≤ tol`. σ² is strictly decreasing along
+//! sampling order (ᾱ strictly increases), so `err` is strictly
+//! increasing — the prefix is well-defined, and **tightening `tol`
+//! can only shrink it** (bound monotonicity, pinned by test).
+
+use super::softmax::PosteriorStats;
+use super::{descale, DenoiseResult};
+use crate::data::gauss::GaussMoments;
+use crate::schedule::noise::NoiseSchedule;
+
+/// How the switch point from Gaussian ticks to retrieval is chosen.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GaussSwitch {
+    /// Evaluate the error bound against the corpus spread (the default).
+    Auto,
+    /// Pin the first `n` sampling points Gaussian — the forced override
+    /// the determinism matrix and the pinning tests use.
+    Forced(usize),
+}
+
+impl GaussSwitch {
+    /// `"auto"` → bound-driven; a bare integer → forced prefix length.
+    /// Anything else is `None` (callers warn and serve the default).
+    pub fn parse(s: &str) -> Option<GaussSwitch> {
+        match s.trim() {
+            "auto" => Some(GaussSwitch::Auto),
+            t => t.parse::<usize>().ok().map(GaussSwitch::Forced),
+        }
+    }
+}
+
+/// The approximation-error bound at one noise level: `s̄/(s̄+σ²)`,
+/// strictly increasing in 1/σ² — i.e. along sampling order.
+pub fn error_bound(sigma2: f64, spread: f64) -> f64 {
+    if spread <= 0.0 {
+        return 0.0;
+    }
+    spread / (spread + sigma2.max(0.0))
+}
+
+/// The bound-driven switch point: the number of leading sampling points
+/// whose error bound stays within `tol`. Returns 0 when even the
+/// deepest-noise step violates the bound; never exceeds the schedule.
+pub fn switch_point(sched: &NoiseSchedule, spread: f64, tol: f64) -> usize {
+    let mut n = 0;
+    for i in 0..sched.steps {
+        if error_bound(sched.sigma2(i) as f64, spread) > tol {
+            break;
+        }
+        n = i + 1;
+    }
+    n
+}
+
+/// Resolve a configured switch mode to a concrete prefix length for a
+/// schedule + corpus: `Auto` evaluates the bound against the corpus
+/// spread, `Forced(n)` clamps to the schedule length.
+pub fn resolve_switch(
+    mode: GaussSwitch,
+    sched: &NoiseSchedule,
+    moments: &GaussMoments,
+    tol: f64,
+) -> usize {
+    match mode {
+        GaussSwitch::Auto => switch_point(sched, moments.spread(), tol),
+        GaussSwitch::Forced(n) => n.min(sched.steps),
+    }
+}
+
+/// The closed-form posterior mean of the moment-matched Gaussian:
+/// per-dimension Wiener shrinkage of the descaled query toward the
+/// class (or global) corpus mean. Identical math to the Wiener
+/// baseline, but served from the persisted per-class moment tier.
+pub fn closed_form_f_hat(
+    gm: &GaussMoments,
+    x_t: &[f32],
+    alpha_bar: f32,
+    class: Option<u32>,
+) -> Vec<f32> {
+    let sigma2 = (1.0 - alpha_bar) / alpha_bar.max(1e-12);
+    let (mean, var) = gm.moments_for(class);
+    let q = descale(x_t, alpha_bar);
+    (0..q.len())
+        .map(|j| {
+            let g = var[j] / (var[j] + sigma2);
+            mean[j] + g * (q[j] - mean[j])
+        })
+        .collect()
+}
+
+/// [`closed_form_f_hat`] wrapped as a [`DenoiseResult`]: zero support
+/// (no rows aggregated — the telemetry invariant the zero-screens
+/// assertion rides on) and zeroed posterior stats, like Wiener.
+pub fn gauss_result(
+    gm: &GaussMoments,
+    x_t: &[f32],
+    alpha_bar: f32,
+    class: Option<u32>,
+) -> DenoiseResult {
+    DenoiseResult {
+        f_hat: closed_form_f_hat(gm, x_t, alpha_bar, class),
+        stats: PosteriorStats::zero(),
+        support: 0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::dataset::Dataset;
+    use crate::data::synthetic::preset;
+    use crate::schedule::noise::ScheduleKind;
+
+    fn tiny(n: usize) -> Dataset {
+        let mut spec = preset("mnist-sim").unwrap().clone();
+        spec.n = n;
+        Dataset::synthesize(&spec, 11)
+    }
+
+    #[test]
+    fn closed_form_is_wiener_shrinkage_over_the_moment_tier() {
+        let ds = tiny(160);
+        let gm = GaussMoments::build(&ds);
+        let sched = NoiseSchedule::new(ScheduleKind::DdpmLinear, 10);
+        let a = sched.alpha_bar(2);
+        let x_t = vec![0.07f32; ds.d];
+        let got = closed_form_f_hat(&gm, &x_t, a, None);
+        let sigma2 = (1.0 - a) / a;
+        let q = x_t[0] / a.sqrt();
+        for j in (0..ds.d).step_by(19) {
+            let g = gm.var[j] / (gm.var[j] + sigma2);
+            let want = gm.mean[j] + g * (q - gm.mean[j]);
+            assert!((got[j] - want).abs() < 1e-6, "dim {j}");
+        }
+        // conditional queries shrink toward their class mean
+        let y = ds.labels[0];
+        let cond = closed_form_f_hat(&gm, &vec![0.0; ds.d], sched.alpha_bar(0), Some(y));
+        let (cm, _) = gm.moments_for(Some(y));
+        let dev: f32 = cond
+            .iter()
+            .zip(cm)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max);
+        assert!(dev < 0.05, "deep noise shrinks to the class mean: {dev}");
+        // zero support is the telemetry invariant the engine asserts on
+        assert_eq!(gauss_result(&gm, &x_t, a, None).support, 0);
+    }
+
+    #[test]
+    fn error_bound_increases_along_sampling_order() {
+        let sched = NoiseSchedule::new(ScheduleKind::DdpmLinear, 16);
+        let spread = 0.3;
+        for i in 1..sched.steps {
+            assert!(
+                error_bound(sched.sigma2(i) as f64, spread)
+                    > error_bound(sched.sigma2(i - 1) as f64, spread),
+                "bound must be strictly increasing at step {i}"
+            );
+        }
+        // degenerate spread never claims a Gaussian tick is unsafe
+        assert_eq!(error_bound(1.0, 0.0), 0.0);
+    }
+
+    #[test]
+    fn tightening_tol_never_adds_gaussian_ticks() {
+        // Satellite (d): bound monotonicity — a smaller tolerance must
+        // never move the switch point toward MORE Gaussian ticks
+        for kind in [
+            ScheduleKind::DdpmLinear,
+            ScheduleKind::Cosine,
+            ScheduleKind::EdmVp,
+            ScheduleKind::EdmVe,
+        ] {
+            let sched = NoiseSchedule::new(kind, 20);
+            for spread in [0.01f64, 0.3, 4.0] {
+                let tols = [1e-6, 1e-4, 1e-3, 1e-2, 0.1, 0.5, 0.999];
+                let switches: Vec<usize> = tols
+                    .iter()
+                    .map(|&t| switch_point(&sched, spread, t))
+                    .collect();
+                for w in switches.windows(2) {
+                    assert!(
+                        w[0] <= w[1],
+                        "{kind:?} spread={spread}: tightening tol grew the \
+                         Gaussian prefix ({switches:?})"
+                    );
+                }
+                // and every switch is a prefix consistent with the bound
+                for (&t, &n) in tols.iter().zip(&switches) {
+                    for i in 0..n {
+                        assert!(error_bound(sched.sigma2(i) as f64, spread) <= t);
+                    }
+                    if n < sched.steps {
+                        assert!(error_bound(sched.sigma2(n) as f64, spread) > t);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn switch_parse_and_resolve() {
+        assert_eq!(GaussSwitch::parse("auto"), Some(GaussSwitch::Auto));
+        assert_eq!(GaussSwitch::parse("3"), Some(GaussSwitch::Forced(3)));
+        assert_eq!(GaussSwitch::parse(" 0 "), Some(GaussSwitch::Forced(0)));
+        assert_eq!(GaussSwitch::parse("sometimes"), None);
+        let ds = tiny(120);
+        let gm = GaussMoments::build(&ds);
+        let sched = NoiseSchedule::new(ScheduleKind::DdpmLinear, 10);
+        // forced clamps to the schedule
+        assert_eq!(
+            resolve_switch(GaussSwitch::Forced(99), &sched, &gm, 0.05),
+            sched.steps
+        );
+        // auto = the bound evaluated at the corpus spread
+        assert_eq!(
+            resolve_switch(GaussSwitch::Auto, &sched, &gm, 0.05),
+            switch_point(&sched, gm.spread(), 0.05)
+        );
+        // the deepest DDPM step is extremely noisy — a sane tolerance
+        // must claim at least one Gaussian tick on real spreads
+        assert!(resolve_switch(GaussSwitch::Auto, &sched, &gm, 0.05) >= 1);
+    }
+}

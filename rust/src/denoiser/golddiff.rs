@@ -348,6 +348,14 @@ pub struct GoldDiff {
     /// last step's budgets (telemetry)
     pub last_m: usize,
     pub last_k: usize,
+    /// sampling points `0..gauss_switch` are served by the closed-form
+    /// Gaussian tier (`denoiser::gaussian`) with zero screens and zero
+    /// refines — 0 disables the tier. Stands down to full retrieval when
+    /// the dataset carries no moment tier (streamed legacy store, or a
+    /// corrupt `gauss_*` section pinned degraded at open).
+    pub gauss_switch: usize,
+    /// ticks served by the Gaussian tier (telemetry)
+    pub gauss_ticks: u64,
 }
 
 impl GoldDiff {
@@ -394,6 +402,8 @@ impl GoldDiff {
             kamb,
             last_m: 0,
             last_k: 0,
+            gauss_switch: 0,
+            gauss_ticks: 0,
         }
     }
 
@@ -413,6 +423,30 @@ impl GoldDiff {
     /// Warm-start engagement telemetry: (seeded screens, cold fallbacks).
     pub fn warm_counts(&self) -> (u64, u64) {
         (self.warm.hits, self.warm.fallbacks)
+    }
+
+    /// Serve the first `switch` sampling points from the Gaussian moment
+    /// tier (0 = off). The retrieval segment from `switch` onward is
+    /// untouched — Gaussian ticks never consult the backend, so budgets,
+    /// warm-start state, and golden subsets are byte-identical to a run
+    /// that entered at `switch` directly.
+    pub fn with_gauss(mut self, switch: usize) -> Self {
+        self.gauss_switch = switch;
+        self
+    }
+
+    /// Whether `step` falls in the Gaussian prefix AND the dataset's
+    /// moment tier is available to serve it.
+    fn gauss_serves<'a>(
+        &self,
+        ds: &'a Dataset,
+        step: usize,
+    ) -> Option<&'a crate::data::gauss::GaussMoments> {
+        if step < self.gauss_switch {
+            ds.gauss_moments()
+        } else {
+            None
+        }
     }
 
     /// The coarse→fine retrieval: returns the golden subset S_t (row ids,
@@ -457,6 +491,12 @@ impl Denoiser for GoldDiff {
     }
 
     fn denoise(&mut self, x_t: &[f32], ctx: &StepContext) -> DenoiseResult {
+        // high-noise fast path: ticks inside the Gaussian prefix are
+        // closed-form — zero screens, zero refines, zero support
+        if let Some(gm) = self.gauss_serves(ctx.ds, ctx.step) {
+            self.gauss_ticks += 1;
+            return super::gaussian::gauss_result(gm, x_t, ctx.alpha_bar(), ctx.class);
+        }
         let golden = self.golden_subset(x_t, ctx);
         let support = golden.len();
         let ds = ctx.ds;
@@ -926,6 +966,60 @@ mod tests {
             Some(&mut warm),
         );
         assert!(rows[0].iter().all(|&r| ds.labels[r as usize] == class));
+    }
+
+    #[test]
+    fn gauss_prefix_serves_closed_form_and_leaves_retrieval_untouched() {
+        // the tentpole's CPU contract: ticks below the switch are the
+        // moment-tier closed form (zero support, counted), and every
+        // retrieval tick at/after the switch is byte-identical to gauss=off
+        let (ds, sched) = setup();
+        let gm = ds.gauss_moments().expect("resident corpora build lazily");
+        let switch = 3usize;
+        let mut off = GoldDiff::paper_defaults(&ds, &sched, BaseWeighting::Golden);
+        let mut on =
+            GoldDiff::paper_defaults(&ds, &sched, BaseWeighting::Golden).with_gauss(switch);
+        let mut rng = crate::util::rng::Pcg64::new(41);
+        let x: Vec<f32> = (0..ds.d).map(|_| rng.normal()).collect();
+        for step in 0..sched.steps {
+            let ctx = StepContext {
+                ds: &ds,
+                sched: &sched,
+                step,
+                class: None,
+            };
+            let got = on.denoise(&x, &ctx);
+            if step < switch {
+                assert_eq!(got.support, 0, "gaussian ticks aggregate no rows");
+                let want =
+                    super::super::gaussian::gauss_result(gm, &x, ctx.alpha_bar(), None);
+                assert_eq!(got.f_hat, want.f_hat, "step {step}");
+            } else {
+                let want = off.denoise(&x, &ctx);
+                assert!(got.support > 0);
+                assert_eq!(
+                    got.f_hat, want.f_hat,
+                    "retrieval segment must be byte-identical at step {step}"
+                );
+                assert_eq!(
+                    on.golden_subset(&x, &ctx),
+                    off.golden_subset(&x, &ctx),
+                    "step {step}"
+                );
+            }
+        }
+        assert_eq!(on.gauss_ticks, switch as u64);
+        assert_eq!(off.gauss_ticks, 0);
+        // conditional gaussian ticks shrink toward the class moments
+        let ctx0 = StepContext {
+            ds: &ds,
+            sched: &sched,
+            step: 0,
+            class: Some(2),
+        };
+        let cond = on.denoise(&x, &ctx0);
+        let want = super::super::gaussian::gauss_result(gm, &x, ctx0.alpha_bar(), Some(2));
+        assert_eq!(cond.f_hat, want.f_hat);
     }
 
     #[test]

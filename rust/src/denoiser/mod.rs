@@ -9,6 +9,7 @@
 //!
 //!   q = x_t/√ᾱ_t ,  ℓ_i = -||q - x_i||² / (2σ_t²) ,  σ_t² = (1-ᾱ_t)/ᾱ_t
 
+pub mod gaussian;
 pub mod golddiff;
 pub mod kamb;
 pub mod optimal;

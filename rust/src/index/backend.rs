@@ -132,6 +132,14 @@ pub struct RetrievalStats {
     /// workers whose retry budget was exhausted — the remote tier stood
     /// down to the in-process path (or failed the op, with fallback off)
     pub workers_lost: u64,
+    /// sequence-ticks served closed-form by the Gaussian moment tier.
+    /// Engine-folded: the backend never sees a Gaussian tick, so backend
+    /// snapshots always report 0 and `EngineStats::record_backend` must
+    /// not overwrite the folded value.
+    pub gauss_ticks: u64,
+    /// coarse screens (with their refines) the Gaussian tier made
+    /// unnecessary — engine-folded, like `gauss_ticks`
+    pub screens_skipped: u64,
 }
 
 #[derive(Debug, Default)]
@@ -177,6 +185,8 @@ impl Counters {
             remote_ops: 0,
             remote_retries: 0,
             workers_lost: 0,
+            gauss_ticks: 0,
+            screens_skipped: 0,
             quant_rows_screened: self.quant_rows_screened.load(Ordering::Relaxed),
             rescore_rows: self.rescore_rows.load(Ordering::Relaxed),
             bound_rejects: self.bound_rejects.load(Ordering::Relaxed),

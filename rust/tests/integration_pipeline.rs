@@ -272,6 +272,74 @@ fn determinism_matrix_backend_kernel_warmstart() {
     std::fs::remove_dir_all(&dir).ok();
 }
 
+#[test]
+fn determinism_matrix_gauss_axis_leaves_retrieval_segment_byte_identical() {
+    // PR-9 satellite: the determinism matrix gains a `gauss` axis. With a
+    // forced switch point the high-noise prefix is served closed-form
+    // (support 0 — zero coarse screens, zero refines), and every tick at
+    // or beyond the switch must stay byte-identical to the gauss-off
+    // cell: the fast path is a prefix substitution, never a result lever
+    // inside the retrieval segment. Teacher-forced inputs (the same x_t
+    // fed to both cells at every step) isolate that per-tick contract
+    // from the trajectory divergence the approximate prefix legitimately
+    // introduces. The warm axis rides along because the two cells reach
+    // the first retrieval tick with different warm histories (gauss-off
+    // has step-2 seeds, gauss-on starts cold) — exactness means the
+    // history difference must not show in the output.
+    use golddiff::denoiser::gaussian::gauss_result;
+    let ds = small("mnist-sim", 260, 13);
+    let sched = NoiseSchedule::new(ScheduleKind::DdpmLinear, 10);
+    let gm = ds
+        .gauss_moments()
+        .expect("resident datasets build the moment tier lazily");
+    let xs_data: Vec<Vec<f32>> = (0..sched.steps)
+        .map(|i| {
+            let mut rng = golddiff::util::rng::Pcg64::new(1300 + i as u64);
+            (0..ds.d).map(|_| rng.normal()).collect()
+        })
+        .collect();
+    const SWITCH: usize = 3;
+    for &backend in RetrievalBackendKind::all() {
+        for warm in [true, false] {
+            let opts = BackendOpts {
+                threads: 2,
+                clusters: 8,
+                ..BackendOpts::default()
+            };
+            let build = |switch: usize| {
+                GoldDiff::paper_defaults(&ds, &sched, BaseWeighting::Golden)
+                    .with_backend(backend.build(&ds, opts))
+                    .with_warm_start(warm)
+                    .with_gauss(switch)
+            };
+            let mut off = build(0);
+            let mut on = build(SWITCH);
+            for step in 0..sched.steps {
+                let ctx = StepContext {
+                    ds: &ds,
+                    sched: &sched,
+                    step,
+                    class: None,
+                };
+                let x = &xs_data[step];
+                let a = off.denoise(x, &ctx);
+                let b = on.denoise(x, &ctx);
+                let label = format!("{}/warm={warm}/step={step}", backend.name());
+                if step < SWITCH {
+                    assert_eq!(b.support, 0, "{label}: gauss tick must screen nothing");
+                    let closed = gauss_result(gm, x, ctx.alpha_bar(), ctx.class);
+                    assert_eq!(b.f_hat, closed.f_hat, "{label}: not the closed form");
+                } else {
+                    assert_eq!(a.f_hat, b.f_hat, "{label}: retrieval segment diverged");
+                    assert_eq!(a.support, b.support, "{label}: support diverged");
+                }
+            }
+            assert_eq!(on.gauss_ticks, SWITCH as u64);
+            assert_eq!(off.gauss_ticks, 0);
+        }
+    }
+}
+
 /// One determinism-matrix cell over an arbitrary backend: the 4-sequence
 /// tick-group golden subsets at every step (warm screen seeing the
 /// previous step's subsets, as in serving) plus a full single-sequence
