@@ -87,8 +87,9 @@ fn main() -> anyhow::Result<()> {
     println!("latency mean       : {:.3}s", all.mean());
     // machine-greppable BENCH lines — whole-request percentiles plus the
     // engine's per-stage distributions (scan = coarse screen + exact
-    // refine, dispatch = XLA aggregation, tick = one whole sequence
-    // step), so a regression in one stage can't hide behind the
+    // refine, dispatch = XLA aggregation, tick = one whole tick group,
+    // step = one sequence's share of a tick, labelled by the configured
+    // solver), so a regression in one stage can't hide behind the
     // aggregate mean. The CI bench-smoke leg greps these.
     let stats = engine.stats_json();
     let stat = |key: String| {
@@ -105,9 +106,14 @@ fn main() -> anyhow::Result<()> {
         all.percentile(0.95),
         all.percentile(0.99)
     );
-    for stage in ["scan", "dispatch", "tick"] {
+    let solver = stats
+        .get("solver")
+        .and_then(golddiff::util::json::Json::as_str)
+        .unwrap_or("ddim")
+        .to_string();
+    for stage in ["scan", "dispatch", "tick", "step"] {
         println!(
-            "BENCH serve_stage stage={stage} p50_s={:.6} p95_s={:.6} p99_s={:.6}",
+            "BENCH serve_stage stage={stage} solver={solver} p50_s={:.6} p95_s={:.6} p99_s={:.6}",
             stat(format!("{stage}_p50_s")),
             stat(format!("{stage}_p95_s")),
             stat(format!("{stage}_p99_s"))

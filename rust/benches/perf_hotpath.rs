@@ -604,6 +604,98 @@ fn bench_gauss(ds: &golddiff::Dataset, sched: &NoiseSchedule) {
     );
 }
 
+/// Section 0i: few-step sampling — a heun trajectory on a churn-budgeted
+/// half grid vs the full-grid ddim path, both scored against a 4× finer
+/// ddim reference (no runtime required). The subset-reuse corrector makes
+/// a second-order tick cost ~one coarse screen instead of two, so the
+/// budgeted heun run must serve ≥2× fewer screens while staying at
+/// matched quality against the reference.
+fn bench_fewstep(ds: &golddiff::Dataset, sched: &NoiseSchedule) {
+    use golddiff::denoiser::golddiff::{BaseWeighting, GoldDiff};
+    use golddiff::denoiser::Denoiser;
+    use golddiff::sampler::{self, SamplerOpts, Solver};
+    use golddiff::schedule::steps::{churn_prior, StepPlan};
+
+    const SEED: u64 = 71;
+    let backend = std::sync::Arc::new(BatchedScan::default());
+    let mut run = |solver: Solver, sched: &NoiseSchedule, plan: &StepPlan| {
+        let mut den = GoldDiff::paper_defaults(ds, sched, BaseWeighting::Golden)
+            .with_backend(backend.clone())
+            .with_warm_start(true);
+        backend.reset_stats();
+        let t0 = std::time::Instant::now();
+        let t = sampler::sample_planned(
+            &mut den as &mut dyn Denoiser,
+            ds,
+            sched,
+            SEED,
+            SamplerOpts {
+                solver,
+                ..SamplerOpts::default()
+            },
+            plan,
+        );
+        let secs = t0.elapsed().as_secs_f64();
+        (t.final_sample().to_vec(), backend.stats().proxy_passes, secs)
+    };
+
+    // the quality reference: ddim on a 4× finer grid, same initial noise
+    let fine = NoiseSchedule::new(ScheduleKind::DdpmLinear, 4 * sched.steps);
+    let (x_ref, _, _) = run(Solver::Ddim, &fine, &StepPlan::full(fine.steps));
+    let err = |x: &[f32]| -> f64 {
+        x.iter()
+            .zip(&x_ref)
+            .map(|(&a, &b)| ((a - b) as f64).powi(2))
+            .sum::<f64>()
+            .sqrt()
+    };
+
+    let (x_full, screens_full, secs_full) =
+        run(Solver::Ddim, sched, &StepPlan::full(sched.steps));
+    let budget = sched.steps / 2;
+    let plan = StepPlan::budgeted(sched, budget, 0, &churn_prior(sched));
+    assert_eq!(plan.len(), budget, "the budget places exactly `budget` ticks");
+    let (x_few, screens_few, secs_few) = run(Solver::Heun, sched, &plan);
+
+    let err_full = err(&x_full);
+    let err_few = err(&x_few);
+    assert!(
+        screens_full >= 2 * screens_few,
+        "heun on a half budget must serve ≥2× fewer screens: \
+         full {screens_full} vs few {screens_few}"
+    );
+    assert!(
+        err_few <= err_full * 1.5 + 1e-3,
+        "the budgeted heun run must hold matched quality: \
+         err_few {err_few:.5} vs err_full {err_full:.5}"
+    );
+    let ratio = screens_full as f64 / screens_few.max(1) as f64;
+    println!(
+        "-- few-step sampling (ddim x{} grid vs heun x{} budget) --",
+        sched.steps,
+        plan.len()
+    );
+    println!(
+        "{:>58}  -> {ratio:.1}x fewer screens, err {err_few:.4} vs {err_full:.4}",
+        ""
+    );
+    benchlib::emit_bench(
+        "fewstep_vs_fullgrid",
+        &[
+            ("n", ds.n as f64),
+            ("steps", sched.steps as f64),
+            ("budget", plan.len() as f64),
+            ("screens_full", screens_full as f64),
+            ("screens_few", screens_few as f64),
+            ("screen_ratio", ratio),
+            ("err_full", err_full),
+            ("err_few", err_few),
+            ("full_secs", secs_full),
+            ("fewstep_secs", secs_few),
+        ],
+    );
+}
+
 /// Section 0d: out-of-core serving — the streamed (`open_streaming`,
 /// bounded LRU) corpus vs the resident one on the identical retrieval
 /// work (no runtime required). Byte-equality is asserted before timing;
@@ -1043,6 +1135,11 @@ fn main() -> anyhow::Result<()> {
     // (no runtime required; retrieval-segment byte-equality asserted
     // before timing)
     bench_gauss(&ds, &sched);
+
+    // 0i. few-step sampling: budgeted heun with subset-reuse correctors vs
+    // the full-grid ddim path (no runtime required; screen-count and
+    // matched-quality contracts asserted before the BENCH line)
+    bench_fewstep(&ds, &sched);
 
     // 1. coarse scan vs threads
     for threads in [1usize, 2, 4, 8] {

@@ -104,6 +104,24 @@ pub fn env_gauss_switch(name: &str, default: &str) -> String {
     }
 }
 
+/// Solver name with an environment override — `GOLDDIFF_SOLVER` accepts
+/// `ddim`, `heun`, or `dpm2` (the `sampler::Solver` names). A set but
+/// unrecognisable value warns once to stderr and serves the default, per
+/// the strict env-knob contract.
+pub fn env_solver(name: &str, default: &str) -> String {
+    match std::env::var(name) {
+        Ok(v) => {
+            if matches!(v.as_str(), "ddim" | "heun" | "dpm2") {
+                v
+            } else {
+                warn_env_once(name, &v, "`ddim`, `heun`, or `dpm2`", default);
+                default.to_string()
+            }
+        }
+        Err(_) => default.to_string(),
+    }
+}
+
 /// u64 default with an environment override — `GOLDDIFF_FAULT_SEED` keys
 /// the deterministic fault schedule. A set but unparsable value warns once
 /// to stderr and serves the default.
@@ -181,6 +199,15 @@ pub struct EngineConfig {
     pub gauss_switch: String,
     /// per-tick error-bound tolerance the `auto` switch policy enforces
     pub gauss_tol: f64,
+    /// reverse-diffusion solver: `ddim` (first order, the byte-identical
+    /// default), `heun` (trapezoidal corrector), or `dpm2` (midpoint).
+    /// Higher-order correctors re-screen only the predictor's golden
+    /// subset, so a second-order step costs ~1 coarse screen, not 2
+    pub solver: String,
+    /// retrieval-segment tick budget for the few-step plan: `0` (default)
+    /// keeps the full grid; a positive budget places that many ticks over
+    /// the retrieval segment by churn, coasting across the gaps
+    pub step_budget: usize,
     /// queries per kernel register tile (clamped to 1..=8 at build)
     pub kernel_tile_q: usize,
     /// corpus shards: `> 1` scans shard-parallel with exact heap merges
@@ -244,6 +271,8 @@ impl Default for EngineConfig {
             gauss: env_flag("GOLDDIFF_GAUSS", false),
             gauss_switch: env_gauss_switch("GOLDDIFF_GAUSS_SWITCH", "auto"),
             gauss_tol: env_f64("GOLDDIFF_GAUSS_TOL", 0.05),
+            solver: env_solver("GOLDDIFF_SOLVER", "ddim"),
+            step_budget: env_usize("GOLDDIFF_STEP_BUDGET", 0),
             kernel_tile_q: crate::index::kernel::TILE_Q,
             shards: env_usize("GOLDDIFF_SHARDS", 1),
             mem_budget_mb: env_usize("GOLDDIFF_MEM_BUDGET_MB", 0),
@@ -288,6 +317,8 @@ impl EngineConfig {
             .set("gauss", self.gauss)
             .set("gauss_switch", self.gauss_switch.as_str())
             .set("gauss_tol", self.gauss_tol)
+            .set("solver", self.solver.as_str())
+            .set("step_budget", self.step_budget)
             .set("kernel_tile_q", self.kernel_tile_q)
             .set("shards", self.shards)
             .set("mem_budget_mb", self.mem_budget_mb)
@@ -350,6 +381,8 @@ impl EngineConfig {
             gauss: j.get("gauss").and_then(Json::as_bool).unwrap_or(def.gauss),
             gauss_switch: s("gauss_switch", &def.gauss_switch),
             gauss_tol: n("gauss_tol", def.gauss_tol),
+            solver: s("solver", &def.solver),
+            step_budget: n("step_budget", def.step_budget as f64) as usize,
             kernel_tile_q: n("kernel_tile_q", def.kernel_tile_q as f64) as usize,
             shards: n("shards", def.shards as f64) as usize,
             mem_budget_mb: n("mem_budget_mb", def.mem_budget_mb as f64) as usize,
@@ -429,6 +462,10 @@ impl EngineConfig {
             self.gauss_switch = v.to_string();
         }
         self.gauss_tol = args.f64_or("gauss-tol", self.gauss_tol);
+        if let Some(v) = args.get("solver") {
+            self.solver = v.to_string();
+        }
+        self.step_budget = args.usize_or("step-budget", self.step_budget);
         self.kernel_tile_q = args.usize_or("kernel-tile-q", self.kernel_tile_q);
         self.shards = args.usize_or("shards", self.shards);
         self.mem_budget_mb = args.usize_or("mem-budget-mb", self.mem_budget_mb);
@@ -495,6 +532,8 @@ mod tests {
         c.gauss = true;
         c.gauss_switch = "3".into();
         c.gauss_tol = 0.01;
+        c.solver = "heun".into();
+        c.step_budget = 5;
         c.kernel_tile_q = 2;
         c.shards = 6;
         c.mem_budget_mb = 512;
@@ -566,6 +605,11 @@ mod tests {
         assert_eq!(c.gauss, env_flag("GOLDDIFF_GAUSS", false));
         assert_eq!(c.gauss_switch, env_gauss_switch("GOLDDIFF_GAUSS_SWITCH", "auto"));
         assert_eq!(c.gauss_tol, env_f64("GOLDDIFF_GAUSS_TOL", 0.05));
+        // the few-step solver and budget follow the env so the CI
+        // tier1-fewstep leg can flip every default-constructed engine at
+        // once
+        assert_eq!(c.solver, env_solver("GOLDDIFF_SOLVER", "ddim"));
+        assert_eq!(c.step_budget, env_usize("GOLDDIFF_STEP_BUDGET", 0));
         assert!(crate::index::backend::RetrievalBackendKind::parse(&c.backend).is_some());
         let mut c = EngineConfig::default();
         let raw: Vec<String> = [
@@ -576,6 +620,7 @@ mod tests {
             "--remote-workers", "2", "--worker-addrs", "127.0.0.1:7401",
             "--remote-fallback", "off", "--remote-op-timeout-ms", "500",
             "--gauss", "on", "--gauss-switch", "4", "--gauss-tol", "0.02",
+            "--solver", "heun", "--step-budget", "6",
         ]
         .iter()
         .map(|s| s.to_string())
@@ -598,6 +643,8 @@ mod tests {
         assert!(c.gauss, "--gauss on enables the Gaussian fast path");
         assert_eq!(c.gauss_switch, "4");
         assert!((c.gauss_tol - 0.02).abs() < 1e-12);
+        assert_eq!(c.solver, "heun");
+        assert_eq!(c.step_budget, 6);
         let opts = c.backend_opts();
         assert!(!opts.kernel && !opts.refine_kernel && !opts.ordering);
         assert!(opts.quant && !opts.simd);
@@ -678,6 +725,27 @@ mod tests {
         std::env::set_var("GOLDDIFF_TEST_GSWITCH_ONLY", "-2");
         assert_eq!(env_gauss_switch("GOLDDIFF_TEST_GSWITCH_ONLY", "auto"), "auto");
         std::env::remove_var("GOLDDIFF_TEST_GSWITCH_ONLY");
+    }
+
+    #[test]
+    fn solver_env_accepts_known_names_and_falls_back() {
+        // unset → default wins
+        assert_eq!(env_solver("GOLDDIFF_TEST_SOLVER_NEVER_SET", "ddim"), "ddim");
+        // vars only this test touches, so parallel tests cannot race
+        for name in ["ddim", "heun", "dpm2"] {
+            std::env::set_var("GOLDDIFF_TEST_SOLVER_ONLY", name);
+            assert_eq!(env_solver("GOLDDIFF_TEST_SOLVER_ONLY", "ddim"), name);
+        }
+        // malformed → warns once, serves the default
+        std::env::set_var("GOLDDIFF_TEST_SOLVER_ONLY", "euler-maruyama");
+        assert_eq!(env_solver("GOLDDIFF_TEST_SOLVER_ONLY", "ddim"), "ddim");
+        std::env::set_var("GOLDDIFF_TEST_SOLVER_ONLY", "HEUN");
+        assert_eq!(
+            env_solver("GOLDDIFF_TEST_SOLVER_ONLY", "ddim"),
+            "ddim",
+            "spellings are exact"
+        );
+        std::env::remove_var("GOLDDIFF_TEST_SOLVER_ONLY");
     }
 
     #[test]

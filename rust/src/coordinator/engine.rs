@@ -38,9 +38,10 @@ use crate::denoiser::{DenoiserKind, StepContext};
 use crate::index::backend::{RetrievalBackend, RetrievalBackendKind};
 use crate::index::remote::RemoteShardBackend;
 use crate::runtime::{Runtime, SendRuntime};
-use crate::sampler;
+use crate::sampler::{self, Solver};
 use crate::schedule::budget::BudgetSchedule;
 use crate::schedule::noise::{NoiseSchedule, ScheduleKind};
+use crate::schedule::steps::{churn_prior, StepPlan};
 use crate::util::rng::Pcg64;
 
 struct Submission {
@@ -382,6 +383,7 @@ fn executor_loop(
     // tier (streamed legacy store, or a tier pinned degraded by a
     // checksum mismatch at load) resolves to 0 — the fast path stands
     // down to full retrieval, serving continues byte-identically.
+    let mut gauss_auto_tol: Option<f64> = None;
     let gauss_switch = if cfg.gauss {
         match ds.gauss_moments() {
             Some(gm) => {
@@ -392,6 +394,12 @@ fn executor_loop(
                     );
                     GaussSwitch::Auto
                 });
+                if mode == GaussSwitch::Auto {
+                    // bound-driven mode: the denoiser re-evaluates the
+                    // switch per request class, so a tight class holds its
+                    // Gaussian prefix longer than the corpus at large
+                    gauss_auto_tol = Some(cfg.gauss_tol);
+                }
                 resolve_switch(mode, &sched, gm, cfg.gauss_tol)
             }
             None => 0,
@@ -399,6 +407,22 @@ fn executor_loop(
     } else {
         0
     };
+    let solver = Solver::parse(&cfg.solver).unwrap_or_else(|| {
+        eprintln!(
+            "golddiff: engine: unrecognised solver `{}`; using ddim",
+            cfg.solver
+        );
+        Solver::Ddim
+    });
+    let mid = solver
+        .needs_mid_schedule()
+        .then(|| sampler::mid_schedule(&sched));
+    // the budgeted step plan, cut once per engine from the schedule-prior
+    // churn signal: ticks go where the golden support moves fastest, the
+    // gauss prefix rides free, everything else coasts (the solvers jump
+    // placed point to placed point through the exponential DDIM map)
+    let plan = StepPlan::budgeted(&sched, cfg.step_budget, gauss_switch, &churn_prior(&sched));
+    lock_stats(&stats).solver = solver.name().to_string();
 
     loop {
         // ---- admission -------------------------------------------------
@@ -436,7 +460,7 @@ fn executor_loop(
                 x,
                 step: 0,
                 rng,
-                telemetry: Vec::with_capacity(sched.steps),
+                telemetry: Vec::with_capacity(plan.len()),
                 submitted: sub.submitted,
                 started: now,
                 failed: None,
@@ -447,15 +471,19 @@ fn executor_loop(
         }
 
         // ---- one scheduler tick -----------------------------------------
+        // `ActiveSeq::step` is a *plan position*; the grid step it maps to
+        // keys the group (budgets and contexts are grid-step functions).
+        // Under the default full plan position == grid step exactly.
         let keys: Vec<SeqKey> = active
             .iter()
             .enumerate()
             .map(|(i, s)| {
-                let b = budget.at(&sched, s.step);
+                let gstep = plan.placed[s.step];
+                let b = budget.at(&sched, gstep);
                 SeqKey {
                     seq: i,
                     method: s.req.method,
-                    step: s.step,
+                    step: gstep,
                     k_bucket: b.k_bucket,
                 }
             })
@@ -510,6 +538,10 @@ fn executor_loop(
                     &backend,
                     warm_start,
                     gauss_switch,
+                    gauss_auto_tol,
+                    solver,
+                    &plan,
+                    mid.as_ref(),
                     &mut active,
                     &stats,
                 )
@@ -544,7 +576,7 @@ fn executor_loop(
         }
 
         // ---- completions -------------------------------------------------
-        let total_steps = sched.steps;
+        let total_steps = plan.len();
         let mut i = 0;
         while i < active.len() {
             if let Some(reason) = active[i].failed {
@@ -581,9 +613,10 @@ fn executor_loop(
 }
 
 /// One group's scheduler tick: ensure the denoiser exists, run one batched
-/// retrieval + dispatch for every sequence in the group, fold the results
-/// back into the live state. Any error propagates to the caller, which
-/// fails the group without killing the engine.
+/// retrieval + dispatch for every sequence in the group (plus one batched
+/// corrector refine under a higher-order solver), fold the results back
+/// into the live state. Any error propagates to the caller, which fails
+/// the group without killing the engine.
 #[allow(clippy::too_many_arguments)]
 fn step_group_once(
     group: &Group,
@@ -595,21 +628,40 @@ fn step_group_once(
     backend: &Arc<dyn RetrievalBackend>,
     warm_start: bool,
     gauss_switch: usize,
+    gauss_auto_tol: Option<f64>,
+    solver: Solver,
+    plan: &StepPlan,
+    mid: Option<&NoiseSchedule>,
     active: &mut [ActiveSeq],
     stats: &Arc<Mutex<EngineStats>>,
 ) -> Result<()> {
     if !denoisers.contains_key(&group.method) {
-        let den = XlaDenoiser::new(std::rc::Rc::clone(rt), ds, group.method)
+        let mut den = XlaDenoiser::new(std::rc::Rc::clone(rt), ds, group.method)
             .context("denoiser init")?
             .with_budget(budget.clone())
             .with_retrieval(Arc::clone(backend))
             .with_warm_start(warm_start)
             .with_gauss(gauss_switch);
+        if let Some(tol) = gauss_auto_tol {
+            den = den.with_gauss_auto(tol);
+        }
         denoisers.insert(group.method, den);
     }
     let den = denoisers.get_mut(&group.method).expect("just inserted");
-    // one batched retrieval for the whole group, then dispatch —
-    // every sequence here shares (method, step, k-bucket)
+    let t_tick = Instant::now();
+    // every sequence here shares (method, grid step, k-bucket) — and so
+    // one plan position and one (from, to) jump
+    let pos = active[group.seqs[0]].step;
+    let from = plan.placed[pos];
+    let to = plan.target_of(pos);
+    debug_assert_eq!(group.step, from);
+    let a = sched.alpha_bar(from);
+    let ap = if to < sched.steps {
+        sched.alpha_bar(to)
+    } else {
+        1.0
+    };
+    // predictor: one batched retrieval for the whole group, then dispatch
     let xs: Vec<&[f32]> = group.seqs.iter().map(|&si| active[si].x.as_slice()).collect();
     let ctx_store: Vec<StepContext> = group
         .seqs
@@ -617,7 +669,7 @@ fn step_group_once(
         .map(|&si| StepContext {
             ds,
             sched,
-            step: active[si].step,
+            step: from,
             class: active[si].req.class,
         })
         .collect();
@@ -625,8 +677,54 @@ fn step_group_once(
     let results = den.step_group(&xs, &ctxs).context("dispatch failed")?;
     drop(ctxs);
     drop(xs);
+    // higher-order solvers evaluate a corrector score at the target point
+    // (Heun) or the doubled-grid midpoint (Dpm2) over the predictor
+    // group's stashed golden-subset union — one refine, no second screen.
+    // Terminal ticks (no next noise level) and closed-form Gaussian ticks
+    // coast first-order, mirroring `sampler::Solver::advance`.
+    let correct: Vec<usize> = if solver == Solver::Ddim || to >= sched.steps {
+        Vec::new()
+    } else {
+        (0..group.seqs.len()).filter(|&j| !results[j].1.gauss).collect()
+    };
+    let mut f_corr: HashMap<usize, Vec<f32>> = HashMap::new();
+    if !correct.is_empty() {
+        let (csched, cstep, a_eval) = match solver {
+            Solver::Heun => (sched, to, ap),
+            Solver::Dpm2 => {
+                let ms = mid.expect("dpm2 carries the doubled midpoint schedule");
+                (ms, from + to, ms.alpha_bar(from + to))
+            }
+            Solver::Ddim => unreachable!("filtered above"),
+        };
+        // the predictor jump is deterministic (η = 0 draws no noise), so
+        // each sequence's rng stream is untouched until the final update
+        let x_preds: Vec<Vec<f32>> = correct
+            .iter()
+            .map(|&j| {
+                let seq = &mut active[group.seqs[j]];
+                sampler::ddim_update(&seq.x, &results[j].0.f_hat, a, a_eval, 0.0, &mut seq.rng)
+            })
+            .collect();
+        let cctx_store: Vec<StepContext> = correct
+            .iter()
+            .map(|&j| StepContext {
+                ds,
+                sched: csched,
+                step: cstep,
+                class: active[group.seqs[j]].req.class,
+            })
+            .collect();
+        let cxs: Vec<&[f32]> = x_preds.iter().map(|v| v.as_slice()).collect();
+        let cctxs: Vec<&StepContext> = cctx_store.iter().collect();
+        let fs = den
+            .corrector_group(&cxs, &cctxs)
+            .context("corrector dispatch failed")?;
+        f_corr.extend(correct.iter().copied().zip(fs));
+    }
+    let step_each = t_tick.elapsed().as_secs_f64() / group.seqs.len() as f64;
     let group_scan: f64 = results.iter().map(|(_, tel)| tel.scan_secs).sum();
-    for (&si, (out, tel)) in group.seqs.iter().zip(results) {
+    for (j, (&si, (out, tel))) in group.seqs.iter().zip(results).enumerate() {
         let seq = &mut active[si];
         seq.telemetry.push(StepTelemetry {
             k_bucket: tel.k_bucket,
@@ -637,19 +735,29 @@ fn step_group_once(
             entropy: out.stats.entropy,
             top1_weight: out.stats.top1_weight,
         });
-        // the graph already produced the deterministic DDIM update;
-        // apply ancestral noise on the host only when eta > 0
-        seq.x = if seq.req.eta > 0.0 {
-            sampler::ddim_update(
-                &seq.x,
-                &out.f_hat,
-                sched.alpha_bar(seq.step),
-                sched.alpha_prev(seq.step),
-                seq.req.eta,
-                &mut seq.rng,
-            )
-        } else {
-            out.x_prev
+        let eta = seq.req.eta;
+        seq.x = match f_corr.remove(&j) {
+            // second-order slope through the same exponential map:
+            // trapezoid average for Heun, the midpoint f̂ for Dpm2
+            Some(f_c) => {
+                let f: Vec<f32> = match solver {
+                    Solver::Heun => out
+                        .f_hat
+                        .iter()
+                        .zip(&f_c)
+                        .map(|(&p, &c)| 0.5 * (p + c))
+                        .collect(),
+                    _ => f_c,
+                };
+                sampler::ddim_update(&seq.x, &f, a, ap, eta, &mut seq.rng)
+            }
+            // coasting jump or ancestral noise: the graph's x_prev only
+            // knows the adjacent grid step, so the host applies the map
+            None if eta > 0.0 || to != from + 1 => {
+                sampler::ddim_update(&seq.x, &out.f_hat, a, ap, eta, &mut seq.rng)
+            }
+            // the graph already produced the deterministic DDIM update
+            None => out.x_prev,
         };
         seq.step += 1;
         let mut st = lock_stats(stats);
@@ -657,14 +765,21 @@ fn step_group_once(
         st.scan_time.record_secs(tel.scan_secs);
         st.dispatch_time.record_secs(tel.dispatch_secs);
         st.tick_time.record_secs(tel.scan_secs + tel.dispatch_secs);
+        st.step_time.record_secs(step_each);
     }
-    // fold the Gaussian-tier counters BEFORE the backend snapshot lands:
-    // the backend never saw those ticks, so `record_backend` knows to
-    // leave the folded fields alone
+    // fold the Gaussian-tier and few-step counters BEFORE the backend
+    // snapshot lands: the backend never saw those ticks, so
+    // `record_backend` knows to leave the folded fields alone
     let (gauss_ticks, screens_skipped) = den.take_gauss_counts();
+    let (corrector_refines, screens_reused) = den.take_fewstep_counts();
     let mut st = lock_stats(stats);
     st.gauss_ticks += gauss_ticks;
     st.screens_skipped += screens_skipped;
+    st.corrector_refines += corrector_refines;
+    st.screens_reused += screens_reused;
+    if !plan.is_full() {
+        st.ticks_placed += group.seqs.len() as u64;
+    }
     if gauss_ticks == 0 {
         // a Gaussian group does no retrieval — recording its zero would
         // skew the group-retrieval latency distribution
@@ -689,6 +804,11 @@ mod tests {
         let cfg = EngineConfig {
             preset: "moons".into(),
             data_dir: std::env::temp_dir().join("golddiff_engine_test"),
+            // these tests pin the legacy full-grid ddim serving contract
+            // (step counts, per-step budgets); the few-step paths have
+            // their own dedicated test below
+            solver: "ddim".into(),
+            step_budget: 0,
             ..Default::default()
         };
         Some(Engine::start(cfg).unwrap())
@@ -945,6 +1065,9 @@ mod tests {
             preset: "moons".into(),
             data_dir: std::env::temp_dir().join("golddiff_engine_test"),
             steps: 1000,
+            // a step budget would finish the trajectory in a handful of
+            // ticks and beat the deadline this test relies on
+            step_budget: 0,
             ..Default::default()
         };
         let eng = Engine::start(cfg).unwrap();
@@ -1091,6 +1214,10 @@ mod tests {
         let mut cfg = EngineConfig {
             preset: "moons".into(),
             data_dir: data_dir.clone(),
+            // the per-step and query-delta assertions below assume the
+            // full-grid first-order trajectory
+            solver: "ddim".into(),
+            step_budget: 0,
             ..Default::default()
         };
         cfg.gauss = false;
@@ -1185,6 +1312,54 @@ mod tests {
         assert_eq!(got.sample, want.sample, "full retrieval, byte-identical");
         eng.shutdown();
         std::fs::remove_dir_all(&data_dir).ok();
+    }
+
+    #[test]
+    fn heun_engine_reuses_screens_and_a_budget_coasts() {
+        // few-step serving: under heun every retrieval tick below the
+        // terminal runs one corrector refine over the predictor pool, and
+        // a step budget serves the trajectory in fewer ticks end to end
+        if !std::path::Path::new("artifacts/manifest.json").exists() {
+            return;
+        }
+        let mut cfg = EngineConfig {
+            preset: "moons".into(),
+            data_dir: std::env::temp_dir().join("golddiff_engine_fewstep_test"),
+            ..Default::default()
+        };
+        cfg.solver = "heun".into();
+        cfg.step_budget = 0;
+        let eng = Engine::start(cfg.clone()).unwrap();
+        let resp = eng.generate(DenoiserKind::GoldDiff, 33, None).unwrap();
+        assert!(resp.error.is_none());
+        assert!(resp.sample.iter().all(|v| v.is_finite()));
+        assert_eq!(resp.steps.len(), 10, "full grid: every point ticks");
+        let j = eng.stats_json();
+        assert_eq!(j.get("solver").unwrap().as_str(), Some("heun"));
+        let refines = j.get("corrector_refines").unwrap().as_f64().unwrap();
+        assert_eq!(refines, 9.0, "every tick but the terminal corrects");
+        let reused = j.get("screens_reused").unwrap().as_f64().unwrap();
+        assert!(
+            reused > 0.0 && reused <= refines,
+            "pool reuse must engage: {reused} of {refines}"
+        );
+        assert_eq!(
+            j.get("ticks_placed").unwrap().as_f64(),
+            Some(0.0),
+            "a full plan places nothing"
+        );
+        eng.shutdown();
+
+        cfg.step_budget = 5;
+        let eng = Engine::start(cfg).unwrap();
+        let resp = eng.generate(DenoiserKind::GoldDiff, 33, None).unwrap();
+        assert!(resp.error.is_none());
+        assert!(resp.sample.iter().all(|v| v.is_finite()));
+        assert_eq!(resp.steps.len(), 5, "the budget caps the placed ticks");
+        let j = eng.stats_json();
+        assert_eq!(j.get("steps_executed").unwrap().as_f64(), Some(5.0));
+        assert_eq!(j.get("ticks_placed").unwrap().as_f64(), Some(5.0));
+        eng.shutdown();
     }
 
     #[test]

@@ -24,8 +24,15 @@ pub struct EngineStats {
     pub tick_time: TimingStats,
     /// wall-clock of each batched group retrieval (one sample per group)
     pub retrieval_time: TimingStats,
+    /// whole solver steps (predictor + any corrector refine), one sample
+    /// per sequence-step — under a higher-order solver this is the number
+    /// the per-tick `tick_time` split cannot see
+    pub step_time: TimingStats,
     /// retrieval backend name ("flat" / "batched" / "cluster")
     pub backend: String,
+    /// active solver name ("ddim" / "heun" / "dpm2") — config echo, so
+    /// the serve bench can label its percentiles per solver
+    pub solver: String,
     /// cumulative backend counters (latest snapshot)
     pub proxy_passes: u64,
     pub retrieval_queries: u64,
@@ -70,6 +77,14 @@ pub struct EngineStats {
     /// a Gaussian tick, so `record_backend` must leave these alone.
     pub gauss_ticks: u64,
     pub screens_skipped: u64,
+    /// few-step telemetry (engine-folded like the gauss counters):
+    /// corrector score evaluations run by a higher-order solver, the
+    /// subset of them that re-used the predictor tick's golden pool
+    /// instead of paying a second coarse screen, and sequence-ticks
+    /// executed under a budgeted step plan (0 on the full grid)
+    pub corrector_refines: u64,
+    pub screens_reused: u64,
+    pub ticks_placed: u64,
     /// optional tiers that stood down at store load ("quant", "ivf",
     /// "shard_ivf") because their sections were corrupt — the `health` op
     /// reports `degraded` while this is non-empty
@@ -113,7 +128,9 @@ impl Default for EngineStats {
             dispatch_time: TimingStats::new(),
             tick_time: TimingStats::new(),
             retrieval_time: TimingStats::new(),
+            step_time: TimingStats::new(),
             backend: String::new(),
+            solver: "ddim".to_string(),
             proxy_passes: 0,
             retrieval_queries: 0,
             rows_scanned: 0,
@@ -138,6 +155,9 @@ impl Default for EngineStats {
             gauss: false,
             gauss_ticks: 0,
             screens_skipped: 0,
+            corrector_refines: 0,
+            screens_reused: 0,
+            ticks_placed: 0,
             degraded_tiers: Vec::new(),
             checksum_failures_load: 0,
             checksum_failures: 0,
@@ -201,10 +221,12 @@ impl EngineStats {
         self.remote_ops = snap.remote_ops;
         self.remote_retries = snap.remote_retries;
         self.workers_lost = snap.workers_lost;
-        // `snap.gauss_ticks` / `snap.screens_skipped` are deliberately NOT
-        // assigned: backend snapshots always report 0 for them (a Gaussian
-        // tick never touches the backend) and the engine folds the real
-        // counts in directly — assigning here would zero them every tick
+        // `snap.gauss_ticks` / `snap.screens_skipped` — and the few-step
+        // counters `corrector_refines` / `screens_reused` / `ticks_placed`
+        // — are deliberately NOT assigned: backend snapshots always report
+        // 0 for them (the backend never sees those ticks as such) and the
+        // engine folds the real counts in directly — assigning here would
+        // zero them every tick
         // a lost worker degrades the remote tier exactly like a corrupt
         // optional section degrades quant/ivf at load: serving continues
         // (in-process), `health` reports it until restart
@@ -258,7 +280,13 @@ impl EngineStats {
             // a degraded gauss tier shows up both in `degraded_tiers` and
             // as a tick count pinned at 0 while the switch wanted ticks
             .set("gauss_ticks", self.gauss_ticks as usize)
-            .set("screens_skipped", self.screens_skipped as usize);
+            .set("screens_skipped", self.screens_skipped as usize)
+            // the few-step fold rides along: a reuse count pinned at 0
+            // under a higher-order solver means the corrector is paying
+            // full screens — worth an operator's look
+            .set("corrector_refines", self.corrector_refines as usize)
+            .set("screens_reused", self.screens_reused as usize)
+            .set("ticks_placed", self.ticks_placed as usize);
         j
     }
 
@@ -300,6 +328,12 @@ impl EngineStats {
             .set("tick_p50_s", self.tick_time.percentile(0.5))
             .set("tick_p95_s", self.tick_time.percentile(0.95))
             .set("tick_p99_s", self.tick_time.percentile(0.99))
+            // whole solver steps (predictor + corrector), labelled by the
+            // active solver so serve benches can compare ddim/heun/dpm2
+            .set("step_p50_s", self.step_time.percentile(0.5))
+            .set("step_p95_s", self.step_time.percentile(0.95))
+            .set("step_p99_s", self.step_time.percentile(0.99))
+            .set("solver", self.solver.as_str())
             .set("retrieval_mean_s", self.retrieval_time.mean())
             .set("retrieval_backend", self.backend.as_str())
             .set("proxy_passes", self.proxy_passes as usize)
@@ -327,6 +361,11 @@ impl EngineStats {
             .set("gauss", self.gauss)
             .set("gauss_ticks", self.gauss_ticks as usize)
             .set("screens_skipped", self.screens_skipped as usize)
+            // few-step telemetry: corrector refines, the ones that reused
+            // the predictor's golden pool, and budget-placed ticks
+            .set("corrector_refines", self.corrector_refines as usize)
+            .set("screens_reused", self.screens_reused as usize)
+            .set("ticks_placed", self.ticks_placed as usize)
             .set(
                 "degraded_tiers",
                 Json::Arr(
@@ -385,6 +424,11 @@ mod tests {
         assert_eq!(j.get("gauss").unwrap().as_bool(), Some(false));
         assert_eq!(j.get("gauss_ticks").unwrap().as_f64(), Some(0.0));
         assert_eq!(j.get("screens_skipped").unwrap().as_f64(), Some(0.0));
+        // few-step telemetry is always present (zero under plain ddim)
+        assert_eq!(j.get("solver").unwrap().as_str(), Some("ddim"));
+        assert_eq!(j.get("corrector_refines").unwrap().as_f64(), Some(0.0));
+        assert_eq!(j.get("screens_reused").unwrap().as_f64(), Some(0.0));
+        assert_eq!(j.get("ticks_placed").unwrap().as_f64(), Some(0.0));
         // per-stage percentiles ride alongside the means
         for key in [
             "latency_p99_s",
@@ -397,6 +441,9 @@ mod tests {
             "tick_p50_s",
             "tick_p95_s",
             "tick_p99_s",
+            "step_p50_s",
+            "step_p95_s",
+            "step_p99_s",
         ] {
             assert!(j.get(key).is_some(), "missing {key}");
         }
@@ -469,6 +516,9 @@ mod tests {
             workers_lost: 0,
             gauss_ticks: 0,
             screens_skipped: 0,
+            corrector_refines: 0,
+            screens_reused: 0,
+            ticks_placed: 0,
         });
         let j = s.to_json();
         assert_eq!(j.get("clusters_pruned").unwrap().as_f64(), Some(24.0));
@@ -501,15 +551,26 @@ mod tests {
         // always carry 0 for them — the backend never sees a gauss tick)
         s.gauss_ticks = 5;
         s.screens_skipped = 5;
+        s.corrector_refines = 9;
+        s.screens_reused = 8;
+        s.ticks_placed = 4;
         s.record_backend(crate::index::backend::RetrievalStats::default());
         assert_eq!(s.gauss_ticks, 5, "record_backend must not zero the fold");
         assert_eq!(s.screens_skipped, 5);
+        assert_eq!(s.corrector_refines, 9, "few-step fold survives too");
+        assert_eq!(s.screens_reused, 8);
+        assert_eq!(s.ticks_placed, 4);
         let jg = s.to_json();
         assert_eq!(jg.get("gauss_ticks").unwrap().as_f64(), Some(5.0));
         assert_eq!(jg.get("screens_skipped").unwrap().as_f64(), Some(5.0));
+        assert_eq!(jg.get("corrector_refines").unwrap().as_f64(), Some(9.0));
+        assert_eq!(jg.get("screens_reused").unwrap().as_f64(), Some(8.0));
+        assert_eq!(jg.get("ticks_placed").unwrap().as_f64(), Some(4.0));
         let hg = s.health_json();
         assert_eq!(hg.get("gauss_ticks").unwrap().as_f64(), Some(5.0));
         assert_eq!(hg.get("screens_skipped").unwrap().as_f64(), Some(5.0));
+        assert_eq!(hg.get("corrector_refines").unwrap().as_f64(), Some(9.0));
+        assert_eq!(hg.get("screens_reused").unwrap().as_f64(), Some(8.0));
         // exhausting a worker's retry budget degrades the remote tier —
         // once, idempotently across later snapshots
         s.record_backend(crate::index::backend::RetrievalStats {

@@ -33,7 +33,9 @@ use anyhow::{Context, Result};
 
 use crate::data::dataset::Dataset;
 use crate::data::gauss::GaussMoments;
-use crate::denoiser::golddiff::{blended_golden_rows_batch_warm, WarmStart};
+use crate::denoiser::golddiff::{
+    blended_golden_rows_batch_warm, corrector_golden_rows_batch, WarmStart,
+};
 use crate::denoiser::{DenoiseResult, Denoiser, DenoiserKind, PosteriorStats, StepContext};
 use crate::index::backend::{BackendOpts, RetrievalBackend, RetrievalBackendKind};
 use crate::runtime::{DeviceTensor, Runtime, StepOutput};
@@ -70,6 +72,10 @@ pub struct XlaDenoiser {
     /// corpus moment tier (`denoiser::gaussian`) — 0 disables the tier;
     /// stands down per tick when the dataset carries no moments
     gauss_switch: usize,
+    /// bound-driven per-class switching: when set, each tick resolves its
+    /// own switch point from the class moment spread at this tolerance
+    /// (overrides the fixed `gauss_switch`)
+    gauss_tol: Option<f64>,
     /// device-resident per-class Gaussian moment tensors, reusing the
     /// `wiener_step` executable (uploaded once per class, like
     /// `resident_wiener` — the tier's steady state uploads only x_t)
@@ -81,6 +87,15 @@ pub struct XlaDenoiser {
     pub gauss_ticks: u64,
     /// coarse screens (and their refines) the tier made unnecessary
     pub screens_skipped: u64,
+    /// the last tick group's golden-subset union, offered to a
+    /// higher-order solver's corrector pass then consumed
+    reuse_pool: Vec<u32>,
+    /// corrector sequence-evals served through retrieval (drained by the
+    /// engine, like the gauss counters)
+    pub corrector_refines: u64,
+    /// corrector evals that rode the predictor's pool — masked refine
+    /// only, no coarse screen
+    pub screens_reused: u64,
     /// gather scratch (kept across calls — zero-alloc steady state)
     gather_buf: Vec<f32>,
     mask_buf: Vec<f32>,
@@ -120,10 +135,14 @@ impl XlaDenoiser {
             resident_full: None,
             resident_wiener: None,
             gauss_switch: 0,
+            gauss_tol: None,
             resident_gauss: HashMap::new(),
             gauss_handoff: None,
             gauss_ticks: 0,
             screens_skipped: 0,
+            reuse_pool: Vec::new(),
+            corrector_refines: 0,
+            screens_reused: 0,
             gather_buf: Vec::new(),
             mask_buf: Vec::new(),
             telemetry: XlaStepTelemetry::default(),
@@ -159,6 +178,16 @@ impl XlaDenoiser {
         self
     }
 
+    /// Bound-driven per-class Gaussian switching: each tick resolves its
+    /// own switch point from the error bound at this tolerance, using the
+    /// **class** moment spread for conditional sequences
+    /// (`GaussMoments::spread_for`) — tighter classes hand off later.
+    /// Overrides any fixed `with_gauss` prefix.
+    pub fn with_gauss_auto(mut self, tol: f64) -> Self {
+        self.gauss_tol = Some(tol);
+        self
+    }
+
     /// Drain the Gaussian-tier counters — the engine folds them into
     /// `EngineStats` after every tick group (the backend snapshot knows
     /// nothing about ticks the backend never saw).
@@ -169,14 +198,39 @@ impl XlaDenoiser {
         )
     }
 
-    /// Whether `step` falls in the Gaussian prefix AND the dataset's
+    /// Drain the few-step solver counters (corrector evals, pool reuses)
+    /// — same engine-folded discipline as the gauss counters.
+    pub fn take_fewstep_counts(&mut self) -> (u64, u64) {
+        (
+            std::mem::take(&mut self.corrector_refines),
+            std::mem::take(&mut self.screens_reused),
+        )
+    }
+
+    /// Whether this tick falls in its Gaussian prefix AND the dataset's
     /// moment tier is available to serve it (a corrupt or absent tier
     /// stands the fast path down to full retrieval, never to an error).
-    fn gauss_serves<'a>(&self, ds: &'a Dataset, step: usize) -> Option<&'a GaussMoments> {
-        if self.is_golddiff() && step < self.gauss_switch {
-            ds.gauss_moments()
-        } else {
-            None
+    /// With `gauss_tol` set the prefix is resolved per class.
+    fn gauss_serves<'a>(&self, ctx: &StepContext<'a>) -> Option<&'a GaussMoments> {
+        if !self.is_golddiff() {
+            return None;
+        }
+        match self.gauss_tol {
+            // fixed prefix: never touch the (lazily built) moment tier
+            // unless the tier is actually on
+            None if ctx.step < self.gauss_switch => ctx.ds.gauss_moments(),
+            None => None,
+            Some(tol) => {
+                let gm = ctx.ds.gauss_moments()?;
+                let switch = crate::denoiser::gaussian::resolve_switch_for(
+                    crate::denoiser::gaussian::GaussSwitch::Auto,
+                    ctx.sched,
+                    gm,
+                    tol,
+                    ctx.class,
+                );
+                (ctx.step < switch).then_some(gm)
+            }
         }
     }
 
@@ -390,6 +444,12 @@ impl XlaDenoiser {
             )
             .pop()
             .unwrap_or_default();
+            // stash this tick's golden subset for a higher-order solver's
+            // corrector pass (consumed by `corrector_group`)
+            let mut pool = rows.clone();
+            pool.sort_unstable();
+            pool.dedup();
+            self.reuse_pool = pool;
             return Ok(Some(self.bucket_plan(rows, b.m, b.k)?));
         }
         if let Some(y) = ctx.class {
@@ -470,7 +530,7 @@ impl XlaDenoiser {
 
     /// One full step dispatch: returns (x_prev, f_hat, stats) from the graph.
     pub fn step(&mut self, x_t: &[f32], ctx: &StepContext) -> Result<StepOutput> {
-        if let Some(gm) = self.gauss_serves(ctx.ds, ctx.step) {
+        if let Some(gm) = self.gauss_serves(ctx) {
             let out = self.gauss_dispatch(x_t, ctx, gm)?;
             self.gauss_handoff = Some(vec![out.f_hat.clone()]);
             return Ok(out);
@@ -504,31 +564,47 @@ impl XlaDenoiser {
         }
 
         let ds = ctxs[0].ds;
-        // a whole tick group above the switch point is served closed-form:
-        // zero coarse screens, zero refines, no backend contact at all
-        if self.gauss_serves(ds, ctxs[0].step).is_some() {
-            let mut outs = Vec::with_capacity(xs.len());
-            let mut means = Vec::with_capacity(xs.len());
-            for (x_t, ctx) in xs.iter().zip(ctxs) {
-                let gm = self
-                    .gauss_serves(ctx.ds, ctx.step)
-                    .expect("gated above; groups share one dataset");
-                let out = self.gauss_dispatch(x_t, ctx, gm)?;
-                means.push(out.f_hat.clone());
-                outs.push((out, self.telemetry));
-            }
-            self.gauss_handoff = Some(means);
-            return Ok(outs);
+        // gauss-served sequences are closed-form: zero coarse screens,
+        // zero refines, no backend contact at all. With the per-class
+        // bound (`with_gauss_auto`) a group sharing one sampling point can
+        // straddle its classes' switch points, so partition rather than
+        // gate the whole group.
+        let served: Vec<bool> = ctxs.iter().map(|ctx| self.gauss_serves(ctx).is_some()).collect();
+        let mut outs: Vec<Option<(StepOutput, XlaStepTelemetry)>> =
+            (0..xs.len()).map(|_| None).collect();
+        let mut means = Vec::new();
+        for i in (0..xs.len()).filter(|&i| served[i]) {
+            let gm = self
+                .gauss_serves(ctxs[i])
+                .expect("partitioned above; groups share one dataset");
+            let out = self.gauss_dispatch(xs[i], ctxs[i], gm)?;
+            means.push(out.f_hat.clone());
+            outs[i] = Some((out, self.telemetry));
         }
-        self.maybe_warm_handoff(ctxs[0]);
+        let retrieval: Vec<usize> = (0..xs.len()).filter(|&i| !served[i]).collect();
+        if retrieval.is_empty() {
+            if !means.is_empty() {
+                self.gauss_handoff = Some(means);
+            }
+            return Ok(outs.into_iter().map(|o| o.unwrap()).collect());
+        }
+        // a handoff stashed by an earlier (gauss) tick seeds this tick's
+        // warm screen; this tick's own gauss means (mixed group) are
+        // stashed afterwards so they seed the *next* retrieval tick
+        self.maybe_warm_handoff(ctxs[retrieval[0]]);
+        if !means.is_empty() {
+            self.gauss_handoff = Some(means);
+        }
         self.telemetry.gauss = false;
         let t_scan = std::time::Instant::now();
         let b = self.budget.at(ctxs[0].sched, ctxs[0].step);
         let warm = self.warm_start.then_some(&mut self.warm);
+        let r_xs: Vec<&[f32]> = retrieval.iter().map(|&i| xs[i]).collect();
+        let r_ctxs: Vec<&StepContext> = retrieval.iter().map(|&i| ctxs[i]).collect();
         let rows_batch = blended_golden_rows_batch_warm(
             self.backend.as_ref(),
-            ctxs,
-            xs,
+            &r_ctxs,
+            &r_xs,
             b.m,
             b.k,
             ds.h,
@@ -536,16 +612,82 @@ impl XlaDenoiser {
             ds.c,
             warm,
         );
-        let scan_each = t_scan.elapsed().as_secs_f64() / xs.len() as f64;
+        let scan_each = t_scan.elapsed().as_secs_f64() / retrieval.len() as f64;
 
-        let mut outs = Vec::with_capacity(xs.len());
+        // stash the group's golden-subset union for a higher-order
+        // solver's corrector pass (consumed by `corrector_group`)
+        let mut pool: Vec<u32> = rows_batch.iter().flatten().copied().collect();
+        pool.sort_unstable();
+        pool.dedup();
+        self.reuse_pool = pool;
+
+        for (&i, rows) in retrieval.iter().zip(rows_batch) {
+            let plan = self.bucket_plan(rows, b.m, b.k)?;
+            self.telemetry.scan_secs = scan_each;
+            let out = self.dispatch(xs[i], ctxs[i], Some(plan))?;
+            outs[i] = Some((out, self.telemetry));
+        }
+        Ok(outs.into_iter().map(|o| o.unwrap()).collect())
+    }
+
+    /// The corrector pass of a higher-order solver tick
+    /// (`sampler::Solver::{Heun, Dpm2}`): one batched **refine-only**
+    /// retrieval over the predictor tick group's stashed golden-subset
+    /// union — no coarse screen when the reuse engages — then the usual
+    /// per-sequence bucket + dispatch. Returns each sequence's corrector
+    /// f̂; the engine combines predictor and corrector slopes on the host
+    /// (the compiled graph's x_prev only knows adjacent grid steps).
+    ///
+    /// All contexts must share one sampling point (the corrector point:
+    /// the tick's target for Heun, the doubled-grid midpoint for Dpm2).
+    /// Non-GoldDiff methods pay a full second evaluation — they have no
+    /// screen to reuse.
+    pub fn corrector_group(
+        &mut self,
+        xs: &[&[f32]],
+        ctxs: &[&StepContext],
+    ) -> Result<Vec<Vec<f32>>> {
+        assert_eq!(xs.len(), ctxs.len());
+        if xs.is_empty() {
+            return Ok(Vec::new());
+        }
+        if !self.is_golddiff() {
+            let mut f_hats = Vec::with_capacity(xs.len());
+            for (x_t, ctx) in xs.iter().zip(ctxs) {
+                f_hats.push(self.step(x_t, ctx)?.f_hat);
+            }
+            return Ok(f_hats);
+        }
+        let ds = ctxs[0].ds;
+        let b = self.budget.at(ctxs[0].sched, ctxs[0].step);
+        // consume the predictor pool — a stale pool must never serve a
+        // second corrector (empty → the exactness-preserving fallback)
+        let pool = std::mem::take(&mut self.reuse_pool);
+        let t_scan = std::time::Instant::now();
+        let (rows_batch, reused) = corrector_golden_rows_batch(
+            self.backend.as_ref(),
+            ctxs,
+            xs,
+            &pool,
+            b.m,
+            b.k,
+            ds.h,
+            ds.w,
+            ds.c,
+        );
+        let scan_each = t_scan.elapsed().as_secs_f64() / xs.len() as f64;
+        self.corrector_refines += xs.len() as u64;
+        if reused {
+            self.screens_reused += xs.len() as u64;
+        }
+        let mut f_hats = Vec::with_capacity(xs.len());
         for ((x_t, ctx), rows) in xs.iter().zip(ctxs).zip(rows_batch) {
             let plan = self.bucket_plan(rows, b.m, b.k)?;
             self.telemetry.scan_secs = scan_each;
             let out = self.dispatch(x_t, ctx, Some(plan))?;
-            outs.push((out, self.telemetry));
+            f_hats.push(out.f_hat);
         }
-        Ok(outs)
+        Ok(f_hats)
     }
 }
 
@@ -794,6 +936,52 @@ mod tests {
                 assert_eq!(grouped[i].0.f_hat, solo.f_hat, "step {step} seq {i}");
                 assert_eq!(grouped[i].0.x_prev, solo.x_prev, "step {step} seq {i}");
             }
+        }
+    }
+
+    #[test]
+    fn grouped_corrector_reuses_the_group_screen() {
+        // a predictor tick group stashes its golden-subset union; the
+        // corrector pass refines over it (no coarse screen) and consumes
+        // it, so a second corrector falls back to the full cold path
+        let Some((rt, ds, sched)) = setup() else { return };
+        let backend: Arc<dyn RetrievalBackend> = Arc::new(BatchedScan::new(2));
+        let mut xla = XlaDenoiser::new(Rc::clone(&rt), &ds, DenoiserKind::GoldDiff)
+            .unwrap()
+            .with_retrieval(Arc::clone(&backend));
+        let xs_data: Vec<Vec<f32>> = (0..3).map(|i| vec![0.05 * i as f32, -0.25]).collect();
+        let xs: Vec<&[f32]> = xs_data.iter().map(|x| x.as_slice()).collect();
+        let pred = StepContext {
+            ds: &ds,
+            sched: &sched,
+            step: 6,
+            class: None,
+        };
+        let corr = StepContext {
+            ds: &ds,
+            sched: &sched,
+            step: 7,
+            class: None,
+        };
+        let pred_ctxs: Vec<&StepContext> = xs.iter().map(|_| &pred).collect();
+        let corr_ctxs: Vec<&StepContext> = xs.iter().map(|_| &corr).collect();
+        xla.step_group(&xs, &pred_ctxs).unwrap();
+        let reused_f = xla.corrector_group(&xs, &corr_ctxs).unwrap();
+        assert_eq!(
+            xla.take_fewstep_counts(),
+            (3, 3),
+            "pool reuse engages for the whole group"
+        );
+        let cold_f = xla.corrector_group(&xs, &corr_ctxs).unwrap();
+        assert_eq!(
+            xla.take_fewstep_counts(),
+            (3, 0),
+            "a stale pool never serves a second corrector"
+        );
+        for (i, x) in xs.iter().enumerate() {
+            assert_eq!(reused_f[i].len(), ds.d);
+            let solo = xla.step(x, &corr).unwrap();
+            assert_eq!(cold_f[i], solo.f_hat, "seq {i}: cold fallback == full path");
         }
     }
 }

@@ -150,10 +150,22 @@ impl GaussMoments {
     /// Mean per-dimension corpus variance (the scalar "spread" the
     /// switch-point error bound uses).
     pub fn spread(&self) -> f64 {
+        self.spread_for(None)
+    }
+
+    /// Per-class spread: the mean per-dimension variance of the class
+    /// slot, under the same selection rule as [`Self::moments_for`] —
+    /// conditional contexts with class support read their class slot,
+    /// everything else reads the global one. A class concentrated around
+    /// its own mean has a smaller spread than the corpus at large, so the
+    /// bound-driven switch (`denoiser::gaussian`) can hold its Gaussian
+    /// prefix longer for that class.
+    pub fn spread_for(&self, class: Option<u32>) -> f64 {
         if self.d == 0 {
             return 0.0;
         }
-        self.var[..self.d].iter().map(|&v| v as f64).sum::<f64>() / self.d as f64
+        let (_, var) = self.moments_for(class);
+        var.iter().map(|&v| v as f64).sum::<f64>() / self.d as f64
     }
 }
 
@@ -211,6 +223,13 @@ mod tests {
         assert_eq!(g, &gm.mean[..gm.d]);
         let (g2, _) = gm.moments_for(Some(u32::MAX));
         assert_eq!(g2, g);
+        // spread_for follows the same slot rule
+        assert_eq!(gm.spread_for(None), gm.spread());
+        assert_eq!(gm.spread_for(Some(u32::MAX)), gm.spread());
+        let (_, cv) = gm.moments_for(Some(y));
+        let want = cv.iter().map(|&v| v as f64).sum::<f64>() / gm.d as f64;
+        assert_eq!(gm.spread_for(Some(y)), want);
+        assert!(gm.spread_for(Some(y)) > 0.0);
     }
 
     #[test]

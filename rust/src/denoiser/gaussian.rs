@@ -91,8 +91,26 @@ pub fn resolve_switch(
     moments: &GaussMoments,
     tol: f64,
 ) -> usize {
+    resolve_switch_for(mode, sched, moments, tol, None)
+}
+
+/// [`resolve_switch`] for a (possibly conditional) sampling context:
+/// `Auto` evaluates the bound against the **class** moment spread — a
+/// class concentrated around its own mean has a smaller spread, so its
+/// `err(i)` curve rises later and the Gaussian prefix extends deeper into
+/// the schedule (later hand-off). Unconditional contexts, out-of-range
+/// classes, and classes without support all read the global spread via
+/// the `moments_for` fallback rule, so behaviour is unchanged whenever
+/// classes are absent. `Forced(n)` ignores the class entirely.
+pub fn resolve_switch_for(
+    mode: GaussSwitch,
+    sched: &NoiseSchedule,
+    moments: &GaussMoments,
+    tol: f64,
+    class: Option<u32>,
+) -> usize {
     match mode {
-        GaussSwitch::Auto => switch_point(sched, moments.spread(), tol),
+        GaussSwitch::Auto => switch_point(sched, moments.spread_for(class), tol),
         GaussSwitch::Forced(n) => n.min(sched.steps),
     }
 }
@@ -250,5 +268,42 @@ mod tests {
         // the deepest DDPM step is extremely noisy — a sane tolerance
         // must claim at least one Gaussian tick on real spreads
         assert!(resolve_switch(GaussSwitch::Auto, &sched, &gm, 0.05) >= 1);
+    }
+
+    #[test]
+    fn per_class_switch_tracks_the_class_spread() {
+        // Satellite: a tighter class (smaller spread) must hand off no
+        // earlier than the global switch; a looser one no later — and the
+        // unconditional resolve is exactly the class-free resolve
+        let ds = tiny(200);
+        let gm = GaussMoments::build(&ds);
+        let sched = NoiseSchedule::new(ScheduleKind::DdpmLinear, 20);
+        let tol = 0.05;
+        let global = resolve_switch(GaussSwitch::Auto, &sched, &gm, tol);
+        assert_eq!(
+            resolve_switch_for(GaussSwitch::Auto, &sched, &gm, tol, None),
+            global
+        );
+        for y in 0..gm.classes as u32 {
+            let cls = resolve_switch_for(GaussSwitch::Auto, &sched, &gm, tol, Some(y));
+            let (sg, sc) = (gm.spread(), gm.spread_for(Some(y)));
+            if sc <= sg {
+                assert!(cls >= global, "class {y}: tighter spread, earlier handoff");
+            } else {
+                assert!(cls <= global, "class {y}: looser spread, later handoff");
+            }
+            // the per-class switch is exactly the bound at the class spread
+            assert_eq!(cls, switch_point(&sched, sc, tol));
+        }
+        // classes without support (or out of range) read the global slot
+        assert_eq!(
+            resolve_switch_for(GaussSwitch::Auto, &sched, &gm, tol, Some(u32::MAX)),
+            global
+        );
+        // forced mode ignores the class
+        assert_eq!(
+            resolve_switch_for(GaussSwitch::Forced(7), &sched, &gm, tol, Some(0)),
+            7
+        );
     }
 }

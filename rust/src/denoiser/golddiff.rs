@@ -191,6 +191,101 @@ pub fn blended_golden_rows_batch_warm(
     per_query
 }
 
+/// The subset-reuse corrector screen (the few-step tentpole's perf move).
+///
+/// A higher-order solver's second score evaluation sits a fraction of a
+/// step past the predictor tick, on the predictor's own provisional state —
+/// by Posterior Progressive Concentration its golden subset is (almost
+/// always) a subset of the predictor's candidate pool. So instead of paying
+/// a second coarse screen, the corrector re-runs **only the masked refine**
+/// over `pool` — the sorted union of the predictor tick's golden subsets —
+/// then the usual per-query breadth fill. Returns the subsets plus whether
+/// the reuse actually engaged.
+///
+/// Exactness discipline (same gate as the warm-start screen): the reuse
+/// stands down to a full cold screen + refine when
+///
+/// * the backend is approximate (`!is_exact()`) — a pool-restricted refine
+///   over it would *change* results, not just accelerate them, or
+/// * the pool cannot even cover `k_precise` — a refine over it could not
+///   return enough precision rows.
+///
+/// Within the pool the refine is the backend's own exact full-resolution
+/// top-k, so the only divergence surface vs a fresh screen is a true
+/// neighbour that left the predictor's top-m pool *within* the fractional
+/// step — second-order-small by the same concentration argument, and the
+/// corrector's output only steers the *average* slope of the update.
+/// Nothing is recorded into warm-start state: the predictor's own record
+/// already seeds the next placed point's screen.
+pub fn corrector_golden_rows_batch(
+    backend: &dyn RetrievalBackend,
+    ctxs: &[&StepContext],
+    xs: &[&[f32]],
+    pool: &[u32],
+    m: usize,
+    k: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+) -> (Vec<Vec<u32>>, bool) {
+    assert_eq!(ctxs.len(), xs.len());
+    if ctxs.is_empty() {
+        return (Vec::new(), false);
+    }
+    debug_assert!(
+        pool.windows(2).all(|p| p[0] < p[1]),
+        "corrector pool must be sorted distinct row ids"
+    );
+    let ds = ctxs[0].ds;
+    let step = ctxs[0].step;
+    let g = ctxs[0].sched.g(step) as f64;
+    let k_breadth = ((k as f64) * g) as usize;
+    let k_precise = k - k_breadth;
+    // class-conditional queries may only refine class rows: restrict the
+    // shared pool per query (the group union can mix classes)
+    let class_pools: Vec<Option<Vec<u32>>> = ctxs
+        .iter()
+        .map(|ctx| {
+            ctx.class.map(|y| {
+                pool.iter()
+                    .copied()
+                    .filter(|&r| ds.labels[r as usize] == y)
+                    .collect::<Vec<u32>>()
+            })
+        })
+        .collect();
+    let pools: Vec<&[u32]> = class_pools
+        .iter()
+        .map(|p| p.as_deref().unwrap_or(pool))
+        .collect();
+    let reusable = k_precise > 0
+        && backend.is_exact()
+        && pools.iter().all(|p| p.len() >= k_precise);
+    if k_precise > 0 && !reusable {
+        // cold full screen (no warm seeding or recording — the corrector
+        // must leave cross-step warm state exactly as the predictor set it)
+        return (
+            blended_golden_rows_batch(backend, ctxs, xs, m, k, h, w, c),
+            false,
+        );
+    }
+    let mut per_query: Vec<Vec<u32>> = if k_precise > 0 {
+        let qs: Vec<Vec<f32>> = xs
+            .iter()
+            .zip(ctxs)
+            .map(|(x, ctx)| descale(x, ctx.alpha_bar()))
+            .collect();
+        let qrefs: Vec<&[f32]> = qs.iter().map(|q| q.as_slice()).collect();
+        backend.refine_top_k_batch(ds, &qrefs, &pools, k_precise)
+    } else {
+        vec![Vec::new(); xs.len()]
+    };
+    for (rows, ctx) in per_query.iter_mut().zip(ctxs) {
+        breadth_fill(ctx, rows, k, k_breadth);
+    }
+    (per_query, k_precise > 0)
+}
+
 /// Cross-timestep warm-start state: golden-subset unions keyed by sampling
 /// point, plus engagement telemetry. Owned by whoever drives a trajectory
 /// (`GoldDiff` on the CPU path, `XlaDenoiser` in the engine); sound to
@@ -211,11 +306,18 @@ impl WarmStart {
         WarmStart::default()
     }
 
-    /// Seed rows for a screen at `step` — the union recorded at `step − 1`.
+    /// Seed rows for a screen at `step` — the union recorded at the latest
+    /// earlier sampling point. Under the full grid that is exactly
+    /// `step − 1`; under a budgeted step plan (`schedule::steps`) the
+    /// trajectory jumps placed point to placed point, so the latest record
+    /// may sit several grid points back — still sound (seeds accelerate,
+    /// never filter) and still the freshest support available.
     pub fn seed_for(&self, step: usize) -> Option<&[u32]> {
-        step.checked_sub(1)
-            .and_then(|prev| self.prev.get(&prev))
-            .map(Vec::as_slice)
+        self.prev
+            .iter()
+            .filter(|(&s, _)| s < step)
+            .max_by_key(|&(&s, _)| s)
+            .map(|(_, v)| v.as_slice())
     }
 
     /// Record a tick group's golden subsets for the next sampling point.
@@ -354,8 +456,20 @@ pub struct GoldDiff {
     /// the dataset carries no moment tier (streamed legacy store, or a
     /// corrupt `gauss_*` section pinned degraded at open).
     pub gauss_switch: usize,
+    /// bound-driven per-class switch: when set, the switch point is derived
+    /// from the class moment spread at this error tolerance instead of the
+    /// fixed `gauss_switch` (tighter classes hand off later)
+    pub gauss_tol: Option<f64>,
     /// ticks served by the Gaussian tier (telemetry)
     pub gauss_ticks: u64,
+    /// the last predictor tick's golden-subset union (sorted distinct),
+    /// offered to the next corrector eval then consumed
+    reuse_pool: Vec<u32>,
+    /// higher-order corrector evals served through retrieval (telemetry)
+    pub corrector_refines: u64,
+    /// corrector evals that reused the predictor's pool — refine only,
+    /// no coarse screen (telemetry)
+    pub screens_reused: u64,
 }
 
 impl GoldDiff {
@@ -403,7 +517,11 @@ impl GoldDiff {
             last_m: 0,
             last_k: 0,
             gauss_switch: 0,
+            gauss_tol: None,
             gauss_ticks: 0,
+            reuse_pool: Vec::new(),
+            corrector_refines: 0,
+            screens_reused: 0,
         }
     }
 
@@ -435,17 +553,40 @@ impl GoldDiff {
         self
     }
 
-    /// Whether `step` falls in the Gaussian prefix AND the dataset's
-    /// moment tier is available to serve it.
+    /// Bound-driven per-class Gaussian switching: each tick resolves its
+    /// own switch point from the error bound `err(i) = s̄/(s̄ + σ_i²)` at
+    /// this tolerance, with `s̄` the *class* moment spread for conditional
+    /// contexts (`GaussMoments::spread_for`) — tighter classes hand off
+    /// later. Overrides any fixed `with_gauss` prefix.
+    pub fn with_gauss_auto(mut self, tol: f64) -> Self {
+        self.gauss_tol = Some(tol);
+        self
+    }
+
+    /// Whether this tick falls in its Gaussian prefix AND the dataset's
+    /// moment tier is available to serve it. With `gauss_tol` set the
+    /// prefix is resolved per class from the bound; otherwise the fixed
+    /// `gauss_switch` applies to every class.
     fn gauss_serves<'a>(
         &self,
-        ds: &'a Dataset,
-        step: usize,
+        ctx: &StepContext<'a>,
     ) -> Option<&'a crate::data::gauss::GaussMoments> {
-        if step < self.gauss_switch {
-            ds.gauss_moments()
-        } else {
-            None
+        match self.gauss_tol {
+            // fixed prefix: never touch the (lazily built) moment tier
+            // unless the tier is actually on
+            None if ctx.step < self.gauss_switch => ctx.ds.gauss_moments(),
+            None => None,
+            Some(tol) => {
+                let gm = ctx.ds.gauss_moments()?;
+                let switch = super::gaussian::resolve_switch_for(
+                    super::gaussian::GaussSwitch::Auto,
+                    ctx.sched,
+                    gm,
+                    tol,
+                    ctx.class,
+                );
+                (ctx.step < switch).then_some(gm)
+            }
         }
     }
 
@@ -466,7 +607,7 @@ impl GoldDiff {
         self.last_m = b.m;
         self.last_k = b.k;
         let warm = self.warm_start.then_some(&mut self.warm);
-        blended_golden_rows_batch_warm(
+        let per_query = blended_golden_rows_batch_warm(
             self.backend.as_ref(),
             ctxs,
             xs,
@@ -476,28 +617,19 @@ impl GoldDiff {
             self.w,
             self.c,
             warm,
-        )
-    }
-}
-
-impl Denoiser for GoldDiff {
-    fn name(&self) -> String {
-        match self.base {
-            BaseWeighting::Golden => "golddiff".into(),
-            BaseWeighting::PcaSubspace { unbiased: true } => "golddiff-pca".into(),
-            BaseWeighting::PcaSubspace { unbiased: false } => "golddiff-wss".into(),
-            BaseWeighting::Kamb => "golddiff-kamb".into(),
-        }
+        );
+        // stash this tick's golden-subset union for a higher-order
+        // solver's corrector eval (consumed by `corrector_denoise`)
+        let mut pool: Vec<u32> = per_query.iter().flatten().copied().collect();
+        pool.sort_unstable();
+        pool.dedup();
+        self.reuse_pool = pool;
+        per_query
     }
 
-    fn denoise(&mut self, x_t: &[f32], ctx: &StepContext) -> DenoiseResult {
-        // high-noise fast path: ticks inside the Gaussian prefix are
-        // closed-form — zero screens, zero refines, zero support
-        if let Some(gm) = self.gauss_serves(ctx.ds, ctx.step) {
-            self.gauss_ticks += 1;
-            return super::gaussian::gauss_result(gm, x_t, ctx.alpha_bar(), ctx.class);
-        }
-        let golden = self.golden_subset(x_t, ctx);
+    /// The base-weighting aggregation over one golden subset — shared by
+    /// `denoise` and `corrector_denoise` (byte-identical math either way).
+    fn aggregate(&mut self, golden: Vec<u32>, x_t: &[f32], ctx: &StepContext) -> DenoiseResult {
         let support = golden.len();
         let ds = ctx.ds;
         match self.base {
@@ -536,6 +668,61 @@ impl Denoiser for GoldDiff {
                 out
             }
         }
+    }
+}
+
+impl Denoiser for GoldDiff {
+    fn name(&self) -> String {
+        match self.base {
+            BaseWeighting::Golden => "golddiff".into(),
+            BaseWeighting::PcaSubspace { unbiased: true } => "golddiff-pca".into(),
+            BaseWeighting::PcaSubspace { unbiased: false } => "golddiff-wss".into(),
+            BaseWeighting::Kamb => "golddiff-kamb".into(),
+        }
+    }
+
+    fn denoise(&mut self, x_t: &[f32], ctx: &StepContext) -> DenoiseResult {
+        // high-noise fast path: ticks inside the Gaussian prefix are
+        // closed-form — zero screens, zero refines, zero support
+        if let Some(gm) = self.gauss_serves(ctx) {
+            self.gauss_ticks += 1;
+            return super::gaussian::gauss_result(gm, x_t, ctx.alpha_bar(), ctx.class);
+        }
+        let golden = self.golden_subset(x_t, ctx);
+        self.aggregate(golden, x_t, ctx)
+    }
+
+    fn corrector_denoise(&mut self, x_t: &[f32], ctx: &StepContext) -> DenoiseResult {
+        // the solver coasts first-order through Gaussian ticks
+        // (support == 0), so a corrector eval can only land in the
+        // retrieval segment — keep the guard anyway for direct callers
+        if let Some(gm) = self.gauss_serves(ctx) {
+            self.gauss_ticks += 1;
+            return super::gaussian::gauss_result(gm, x_t, ctx.alpha_bar(), ctx.class);
+        }
+        let b = self.budget.at(ctx.sched, ctx.step);
+        self.last_m = b.m;
+        self.last_k = b.k;
+        // consume the predictor tick's pool: a stale pool must never
+        // serve a second corrector (mem::take leaves it empty → fallback)
+        let pool = std::mem::take(&mut self.reuse_pool);
+        let (mut subsets, reused) = corrector_golden_rows_batch(
+            self.backend.as_ref(),
+            &[ctx],
+            &[x_t],
+            &pool,
+            b.m,
+            b.k,
+            self.h,
+            self.w,
+            self.c,
+        );
+        self.corrector_refines += 1;
+        if reused {
+            self.screens_reused += 1;
+        }
+        let golden = subsets.pop().unwrap_or_default();
+        self.aggregate(golden, x_t, ctx)
     }
 
     fn working_set_bytes(&self, ds: &Dataset) -> u64 {
@@ -966,6 +1153,231 @@ mod tests {
             Some(&mut warm),
         );
         assert!(rows[0].iter().all(|&r| ds.labels[r as usize] == class));
+    }
+
+    #[test]
+    fn corrector_refine_over_a_covering_pool_is_the_exact_pool_top_k() {
+        // subset reuse must be the backend's own exact refine over the
+        // pool: the precise prefix equals a brute-force full-resolution
+        // top-k_precise, and the breadth fill tops up to exactly k
+        let (ds, sched) = setup();
+        let backend = BatchedScan::new(1);
+        let step = 8;
+        let ctx = StepContext {
+            ds: &ds,
+            sched: &sched,
+            step,
+            class: None,
+        };
+        let mut rng = crate::util::rng::Pcg64::new(23);
+        let x: Vec<f32> = (0..ds.d).map(|_| rng.normal()).collect();
+        let (m, k) = (ds.n / 4, ds.n / 10);
+        let pool: Vec<u32> = (0..ds.n as u32).collect();
+        let (rows, reused) = corrector_golden_rows_batch(
+            &backend,
+            &[&ctx],
+            &[x.as_slice()],
+            &pool,
+            m,
+            k,
+            ds.h,
+            ds.w,
+            ds.c,
+        );
+        assert!(reused, "an exact backend + covering pool must reuse");
+        let g = sched.g(step) as f64;
+        let k_precise = k - ((k as f64) * g) as usize;
+        assert!(k_precise > 0, "low-noise step must want precision rows");
+        assert_eq!(rows[0].len(), k);
+        let distinct: HashSet<u32> = rows[0].iter().copied().collect();
+        assert_eq!(distinct.len(), k);
+        let q = descale(&x, ctx.alpha_bar());
+        let mut scored: Vec<(f32, u32)> = pool
+            .iter()
+            .map(|&r| (sqdist(&q, ds.row(r as usize)), r))
+            .collect();
+        scored.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+        let want: Vec<u32> = scored[..k_precise].iter().map(|&(_, r)| r).collect();
+        assert_eq!(&rows[0][..k_precise], &want[..]);
+    }
+
+    #[test]
+    fn corrector_falls_back_without_a_usable_pool() {
+        let (ds, sched) = setup();
+        let backend = BatchedScan::new(1);
+        let step = 7;
+        let ctx = StepContext {
+            ds: &ds,
+            sched: &sched,
+            step,
+            class: None,
+        };
+        let x = vec![0.12f32; ds.d];
+        let (m, k) = (ds.n / 4, ds.n / 10);
+        let cold = blended_golden_rows(&backend, &ctx, &x, m, k, ds.h, ds.w, ds.c);
+        // empty pool and an under-covering pool both stand down to the
+        // full screen + refine — byte-identical to the predictor path
+        for pool in [Vec::new(), vec![3u32, 9]] {
+            let (rows, reused) = corrector_golden_rows_batch(
+                &backend,
+                &[&ctx],
+                &[x.as_slice()],
+                &pool,
+                m,
+                k,
+                ds.h,
+                ds.w,
+                ds.c,
+            );
+            assert!(!reused, "pool of {} cannot cover k_precise", pool.len());
+            assert_eq!(rows[0], cold);
+        }
+        // an approximate backend stands down even with a covering pool: a
+        // pool-restricted refine over it would change results
+        let approx = crate::index::backend::ClusterPruned::build_with_threads(&ds, 12, 2, 3, 1);
+        assert!(!approx.is_exact());
+        let full: Vec<u32> = (0..ds.n as u32).collect();
+        let (rows, reused) = corrector_golden_rows_batch(
+            &approx,
+            &[&ctx],
+            &[x.as_slice()],
+            &full,
+            m,
+            k,
+            ds.h,
+            ds.w,
+            ds.c,
+        );
+        assert!(!reused);
+        assert_eq!(
+            rows[0],
+            blended_golden_rows(&approx, &ctx, &x, m, k, ds.h, ds.w, ds.c)
+        );
+    }
+
+    #[test]
+    fn corrector_pool_respects_class_restrictions() {
+        let (ds, sched) = setup();
+        let backend = BatchedScan::new(1);
+        let class = (0..ds.classes)
+            .max_by_key(|&c| ds.class_rows[c].len())
+            .unwrap() as u32;
+        let ctx = StepContext {
+            ds: &ds,
+            sched: &sched,
+            step: 9,
+            class: Some(class),
+        };
+        let x = vec![0.05f32; ds.d];
+        let (m, k) = (8usize, 4usize);
+        // a mixed-class pool must be filtered to the query's class
+        let pool: Vec<u32> = (0..ds.n as u32).collect();
+        let (rows, reused) = corrector_golden_rows_batch(
+            &backend,
+            &[&ctx],
+            &[x.as_slice()],
+            &pool,
+            m,
+            k,
+            ds.h,
+            ds.w,
+            ds.c,
+        );
+        assert!(reused, "the class slice of a full pool covers k_precise");
+        assert!(rows[0].iter().all(|&r| ds.labels[r as usize] == class));
+        // a pool with no rows of the class falls back — and the fallback
+        // screen is itself class-restricted
+        let other: Vec<u32> = (0..ds.n as u32)
+            .filter(|&r| ds.labels[r as usize] != class)
+            .collect();
+        let (rows, reused) = corrector_golden_rows_batch(
+            &backend,
+            &[&ctx],
+            &[x.as_slice()],
+            &other,
+            m,
+            k,
+            ds.h,
+            ds.w,
+            ds.c,
+        );
+        assert!(!reused);
+        assert!(rows[0].iter().all(|&r| ds.labels[r as usize] == class));
+    }
+
+    #[test]
+    fn golddiff_corrector_reuses_then_consumes_the_predictor_pool() {
+        let (ds, sched) = setup();
+        let mut gd = GoldDiff::paper_defaults(&ds, &sched, BaseWeighting::Golden);
+        let mut rng = crate::util::rng::Pcg64::new(31);
+        let x: Vec<f32> = (0..ds.d).map(|_| rng.normal()).collect();
+        let ctx_from = StepContext {
+            ds: &ds,
+            sched: &sched,
+            step: 6,
+            class: None,
+        };
+        let ctx_to = StepContext {
+            ds: &ds,
+            sched: &sched,
+            step: 7,
+            class: None,
+        };
+        let out = gd.denoise(&x, &ctx_from);
+        assert!(out.support > 0);
+        // the corrector reuses the predictor's pool (k shrinks along the
+        // schedule, so the pool always covers the next step's k_precise)
+        let corr = gd.corrector_denoise(&x, &ctx_to);
+        assert!(corr.support > 0);
+        assert!(corr.f_hat.iter().all(|v| v.is_finite()));
+        assert_eq!(gd.corrector_refines, 1);
+        assert_eq!(gd.screens_reused, 1);
+        // the pool is consumed: a second corrector with no predictor in
+        // between must fall back to a full screen…
+        let corr2 = gd.corrector_denoise(&x, &ctx_to);
+        assert_eq!(gd.corrector_refines, 2);
+        assert_eq!(gd.screens_reused, 1);
+        // …which makes it byte-identical to a plain denoise there
+        let fresh = gd.denoise(&x, &ctx_to);
+        assert_eq!(corr2.f_hat, fresh.f_hat);
+        assert_eq!(corr2.support, fresh.support);
+    }
+
+    #[test]
+    fn heun_sampling_pays_no_extra_screens_through_golddiff() {
+        // the tentpole's CPU contract: a heun trajectory runs a corrector
+        // at every non-terminal step yet pays exactly the ddim run's
+        // coarse screens — every corrector rides the predictor's pool
+        let (ds, sched) = setup();
+        let run = |solver: crate::sampler::Solver| -> (u64, u64, u64) {
+            let backend = Arc::new(BatchedScan::new(1));
+            let mut gd = GoldDiff::paper_defaults(&ds, &sched, BaseWeighting::Golden)
+                .with_backend(backend.clone());
+            let opts = crate::sampler::SamplerOpts {
+                solver,
+                ..Default::default()
+            };
+            let t = crate::sampler::sample(&mut gd, &ds, &sched, 9, opts);
+            assert_eq!(t.fs.len(), sched.steps);
+            (
+                backend.stats().proxy_passes,
+                gd.corrector_refines,
+                gd.screens_reused,
+            )
+        };
+        let (passes_ddim, corr_ddim, reused_ddim) = run(crate::sampler::Solver::Ddim);
+        let (passes_heun, corr_heun, reused_heun) = run(crate::sampler::Solver::Heun);
+        assert_eq!((corr_ddim, reused_ddim), (0, 0), "ddim runs no corrector");
+        assert_eq!(
+            corr_heun,
+            (sched.steps - 1) as u64,
+            "every non-terminal heun step runs a corrector"
+        );
+        assert!(reused_heun > 0, "low-noise correctors must reuse the pool");
+        assert_eq!(
+            passes_heun, passes_ddim,
+            "corrector evals must not pay coarse screens"
+        );
     }
 
     #[test]

@@ -84,6 +84,17 @@ pub trait Denoiser {
     /// Posterior-mean estimate f̂(x_t, t).
     fn denoise(&mut self, x_t: &[f32], ctx: &StepContext) -> DenoiseResult;
 
+    /// The second score evaluation of a higher-order solver step
+    /// (`sampler::Solver::{Heun, Dpm2}`). The provisional state `x_t` sits
+    /// a fraction of a step ahead of the predictor's tick, so its golden
+    /// subset barely moves — retrieval-backed implementations may reuse the
+    /// predictor tick's candidate pool instead of paying a second coarse
+    /// screen, as long as the aggregation stays exact over whatever subset
+    /// is served. The default is simply a full `denoise` (always correct).
+    fn corrector_denoise(&mut self, x_t: &[f32], ctx: &StepContext) -> DenoiseResult {
+        self.denoise(x_t, ctx)
+    }
+
     /// Logical working set (the paper's Memory column attribution).
     fn working_set_bytes(&self, ds: &Dataset) -> u64 {
         ds.bytes()

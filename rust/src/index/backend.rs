@@ -140,6 +140,18 @@ pub struct RetrievalStats {
     /// coarse screens (with their refines) the Gaussian tier made
     /// unnecessary — engine-folded, like `gauss_ticks`
     pub screens_skipped: u64,
+    /// corrector score evaluations run by a higher-order solver
+    /// (`sampler::Solver::{Heun, Dpm2}`) — engine-folded, like
+    /// `gauss_ticks`
+    pub corrector_refines: u64,
+    /// corrector evaluations that re-used the predictor tick's stashed
+    /// golden-subset union instead of paying a second coarse screen —
+    /// engine-folded
+    pub screens_reused: u64,
+    /// sequence-ticks executed under a budgeted step plan
+    /// (`schedule::steps::StepPlan`); 0 when every grid point is placed —
+    /// engine-folded
+    pub ticks_placed: u64,
 }
 
 #[derive(Debug, Default)]
@@ -187,6 +199,9 @@ impl Counters {
             workers_lost: 0,
             gauss_ticks: 0,
             screens_skipped: 0,
+            corrector_refines: 0,
+            screens_reused: 0,
+            ticks_placed: 0,
             quant_rows_screened: self.quant_rows_screened.load(Ordering::Relaxed),
             rescore_rows: self.rescore_rows.load(Ordering::Relaxed),
             bound_rejects: self.bound_rejects.load(Ordering::Relaxed),

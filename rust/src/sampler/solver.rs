@@ -1,0 +1,227 @@
+//! Pluggable reverse-diffusion solvers over the same analytical score.
+//!
+//! Every solver advances `x` from one placed sampling point to the next
+//! through the η-generalised DDIM map ([`super::ddim_update`]), which is an
+//! exponential integrator: exact whenever the posterior mean f̂ is constant
+//! across the step. The solvers differ only in which f̂ they feed it:
+//!
+//! * [`Solver::Ddim`] — f̂ at the step's left endpoint. First order; the
+//!   default, and **byte-identical** to the pre-solver sampler (same
+//!   denoiser calls, same float op order, same rng draw order).
+//! * [`Solver::Heun`] — predictor–corrector: a second score evaluation at
+//!   the *next* placed point (on the predictor's provisional state), then
+//!   the trapezoid average ½(f̂₁+f̂₂) through the same map. Second order.
+//! * [`Solver::Dpm2`] — midpoint: a half-step in noise level onto the
+//!   doubled reference grid (see [`mid_schedule`]), one score evaluation
+//!   there, and that midpoint f̂ through the map. Second order.
+//!
+//! The corrector/midpoint evaluation goes through
+//! [`Denoiser::corrector_denoise`], which GoldDiff overrides to re-run only
+//! the masked refine over the predictor tick's golden-subset union — so a
+//! second-order step costs ~1 coarse screen instead of 2. Both higher-order
+//! solvers degenerate to the plain DDIM update at the terminal step
+//! (ᾱ_prev = 1.0: there is no "next" noise level to evaluate at — the
+//! standard Karras-Heun practice at σ = 0) and on closed-form Gaussian
+//! ticks (`support == 0`: the coasting score is already smooth and free, a
+//! corrector would force a cold screen the coast exists to avoid).
+
+use super::ddim_update;
+use crate::data::dataset::Dataset;
+use crate::denoiser::{DenoiseResult, Denoiser, StepContext};
+use crate::schedule::noise::NoiseSchedule;
+use crate::util::rng::Pcg64;
+
+/// Which reverse-diffusion solver advances the trajectory.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Solver {
+    /// η-generalised DDIM (first order; the byte-identical default)
+    Ddim,
+    /// predictor–corrector trapezoid in f̂ space (second order)
+    Heun,
+    /// midpoint on the doubled noise grid (second order)
+    Dpm2,
+}
+
+impl Solver {
+    pub fn parse(s: &str) -> Option<Solver> {
+        match s {
+            "ddim" => Some(Solver::Ddim),
+            "heun" => Some(Solver::Heun),
+            "dpm2" => Some(Solver::Dpm2),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Solver::Ddim => "ddim",
+            Solver::Heun => "heun",
+            Solver::Dpm2 => "dpm2",
+        }
+    }
+
+    pub fn all() -> &'static [Solver] {
+        &[Solver::Ddim, Solver::Heun, Solver::Dpm2]
+    }
+
+    /// Local truncation order (global order of convergence).
+    pub fn order(&self) -> usize {
+        match self {
+            Solver::Ddim => 1,
+            Solver::Heun | Solver::Dpm2 => 2,
+        }
+    }
+
+    /// Does this solver need the doubled midpoint grid ([`mid_schedule`])?
+    pub fn needs_mid_schedule(&self) -> bool {
+        matches!(self, Solver::Dpm2)
+    }
+
+    /// Advance `x` from grid point `from` to grid point `to` (`to ==
+    /// sched.steps` is the terminal clean point, ᾱ = 1). Returns the
+    /// predictor's denoise result (what the trajectory records) and the
+    /// advanced state. `to` may skip grid points — the budgeted step plan
+    /// (`schedule::steps`) coasts by jumping placed point to placed point.
+    ///
+    /// `mid` must be `Some(mid_schedule(sched))` for [`Solver::Dpm2`];
+    /// the other solvers ignore it.
+    #[allow(clippy::too_many_arguments)]
+    pub fn advance(
+        &self,
+        den: &mut dyn Denoiser,
+        ds: &Dataset,
+        sched: &NoiseSchedule,
+        mid: Option<&NoiseSchedule>,
+        x: &[f32],
+        from: usize,
+        to: usize,
+        eta: f32,
+        class: Option<u32>,
+        rng: &mut Pcg64,
+    ) -> (DenoiseResult, Vec<f32>) {
+        debug_assert!(from < to && to <= sched.steps);
+        let ctx = StepContext {
+            ds,
+            sched,
+            step: from,
+            class,
+        };
+        let out = den.denoise(x, &ctx);
+        let a = sched.alpha_bar(from);
+        let ap = if to < sched.steps {
+            sched.alpha_bar(to)
+        } else {
+            1.0
+        };
+        // terminal step: no next noise level to evaluate the corrector at;
+        // gaussian/empty-support ticks: coast first-order on the closed form
+        let first_order = matches!(self, Solver::Ddim) || to >= sched.steps || out.support == 0;
+        if first_order {
+            let x_new = ddim_update(x, &out.f_hat, a, ap, eta, rng);
+            return (out, x_new);
+        }
+        match self {
+            Solver::Heun => {
+                // predictor to the next placed point (η = 0: no rng draws),
+                // corrector score there, trapezoid average through the map
+                let x_pred = ddim_update(x, &out.f_hat, a, ap, 0.0, rng);
+                let ctx2 = StepContext {
+                    ds,
+                    sched,
+                    step: to,
+                    class,
+                };
+                let corr = den.corrector_denoise(&x_pred, &ctx2);
+                let f_avg: Vec<f32> = out
+                    .f_hat
+                    .iter()
+                    .zip(&corr.f_hat)
+                    .map(|(&p, &c)| 0.5 * (p + c))
+                    .collect();
+                let x_new = ddim_update(x, &f_avg, a, ap, eta, rng);
+                (out, x_new)
+            }
+            Solver::Dpm2 => {
+                // half-step onto the doubled grid (index from+to is exactly
+                // the stride midpoint of 2·from and 2·to), score there, and
+                // the midpoint f̂ carries the whole step
+                let ms = mid.expect("Dpm2 requires the doubled midpoint schedule");
+                debug_assert_eq!(ms.steps, 2 * sched.steps - 1);
+                let a_mid = ms.alpha_bar(from + to);
+                let x_half = ddim_update(x, &out.f_hat, a, a_mid, 0.0, rng);
+                let ctx_mid = StepContext {
+                    ds,
+                    sched: ms,
+                    step: from + to,
+                    class,
+                };
+                let corr = den.corrector_denoise(&x_half, &ctx_mid);
+                let x_new = ddim_update(x, &corr.f_hat, a, ap, eta, rng);
+                (out, x_new)
+            }
+            Solver::Ddim => unreachable!("handled by the first-order path"),
+        }
+    }
+}
+
+/// The doubled noise grid used by [`Solver::Dpm2`]'s midpoint evaluation.
+///
+/// A `2·steps − 1`-point schedule of the same kind: the DDIM stride picks
+/// reference index `round((T_REF−1)·(1 − i/(S−1)))`, and for `S' = 2S − 1`
+/// the even indices `i = 2j` give `1 − 2j/(2S−2) = 1 − j/(S−1)` *exactly*
+/// (numerator and denominator both scale by 2, which is lossless in binary
+/// floating point) — so the doubled grid contains every original sampling
+/// point bit-identically, plus a true stride-midpoint between each pair.
+pub fn mid_schedule(sched: &NoiseSchedule) -> NoiseSchedule {
+    NoiseSchedule::new(sched.kind, 2 * sched.steps - 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::noise::ScheduleKind;
+
+    #[test]
+    fn parse_names_roundtrip() {
+        for &s in Solver::all() {
+            assert_eq!(Solver::parse(s.name()), Some(s));
+        }
+        assert_eq!(Solver::parse("euler"), None);
+        assert_eq!(Solver::Ddim.order(), 1);
+        assert_eq!(Solver::Heun.order(), 2);
+        assert_eq!(Solver::Dpm2.order(), 2);
+        assert!(Solver::Dpm2.needs_mid_schedule());
+        assert!(!Solver::Heun.needs_mid_schedule());
+    }
+
+    #[test]
+    fn mid_schedule_contains_the_original_grid_bit_identically() {
+        for kind in [
+            ScheduleKind::DdpmLinear,
+            ScheduleKind::Cosine,
+            ScheduleKind::EdmVp,
+            ScheduleKind::EdmVe,
+        ] {
+            for steps in [2usize, 5, 10, 25] {
+                let sched = NoiseSchedule::new(kind, steps);
+                let mid = mid_schedule(&sched);
+                assert_eq!(mid.steps, 2 * steps - 1);
+                for i in 0..steps {
+                    assert_eq!(
+                        mid.alpha_bar(2 * i),
+                        sched.alpha_bar(i),
+                        "{kind:?} steps={steps} i={i}"
+                    );
+                }
+                // interior midpoints sit strictly between their neighbours
+                for i in 0..steps - 1 {
+                    let m = mid.alpha_bar(2 * i + 1);
+                    assert!(
+                        m >= sched.alpha_bar(i) && m <= sched.alpha_bar(i + 1),
+                        "{kind:?} steps={steps} midpoint {i} out of bracket"
+                    );
+                }
+            }
+        }
+    }
+}

@@ -1,8 +1,11 @@
-//! Diffusion noise schedules and the paper's counter-monotonic retrieval /
-//! aggregation budget schedules (Sec. 3.4).
+//! Diffusion noise schedules, the paper's counter-monotonic retrieval /
+//! aggregation budget schedules (Sec. 3.4), and the budgeted step
+//! allocator that decides which grid points get a tick at all.
 
 pub mod budget;
 pub mod noise;
+pub mod steps;
 
 pub use budget::{BudgetSchedule, StepBudget};
 pub use noise::{NoiseSchedule, ScheduleKind};
+pub use steps::{churn_from_subsets, churn_prior, StepPlan};

@@ -1,0 +1,282 @@
+//! Budgeted step allocation: spend a fixed tick budget where the golden
+//! support churns fastest, coast everywhere else.
+//!
+//! Every engine tick costs a coarse screen + masked refine, so sample
+//! latency is linear in the number of placed sampling points. But the
+//! trajectory's support-overlap statistic shows the golden subset changes
+//! at a very uneven rate along the schedule — most grid points refine a
+//! support that barely moved. The allocator keeps the full grid as the
+//! *noise parameterisation* (budgets `m/k` per placed point are issued by
+//! `BudgetSchedule` unchanged) and simply chooses **which** grid points get
+//! a tick:
+//!
+//! * Gaussian-prefix points (`step < gauss_switch`) are always placed —
+//!   they are served closed-form with zero screens, so coasting through
+//!   them costs nothing and keeps the hand-off state accurate.
+//! * Both endpoints are always placed: point 0 because the trajectory
+//!   starts there, point `steps−1` because the final contraction to the
+//!   manifold is where precision retrieval pays.
+//! * The remaining budget goes to the retrieval-segment points with the
+//!   highest churn priority, greedily — which makes plans **nested**: the
+//!   plan for budget b is a subset of the plan for budget b+1.
+//!
+//! Between two placed points the solver jumps directly (the DDIM map takes
+//! any ᾱ → ᾱ' pair), and the warm-start layer seeds the next screen from
+//! the latest recorded golden subsets, so a coasted gap is crossed with a
+//! warm (still exactness-preserving) screen rather than a cold one.
+
+use std::collections::HashSet;
+
+use super::noise::NoiseSchedule;
+
+/// The set of grid points a trajectory actually ticks at.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StepPlan {
+    /// placed sampling points (grid indices), strictly ascending; always
+    /// contains 0 and `steps − 1`
+    pub placed: Vec<usize>,
+    /// the full grid length the plan was cut from
+    pub steps: usize,
+}
+
+impl StepPlan {
+    /// The trivial plan: every grid point is placed (budget off).
+    pub fn full(steps: usize) -> StepPlan {
+        StepPlan {
+            placed: (0..steps).collect(),
+            steps,
+        }
+    }
+
+    /// Place `budget` retrieval-segment ticks by churn priority (see the
+    /// module docs). `budget == 0` or a budget covering the whole segment
+    /// yields the full grid; the gauss prefix `0..gauss_switch` is always
+    /// placed for free. `churn` must have one entry per grid point.
+    pub fn budgeted(
+        sched: &NoiseSchedule,
+        budget: usize,
+        gauss_switch: usize,
+        churn: &[f64],
+    ) -> StepPlan {
+        let steps = sched.steps;
+        assert_eq!(churn.len(), steps, "one churn entry per grid point");
+        let switch = gauss_switch.min(steps);
+        let seg_len = steps - switch;
+        if budget == 0 || budget >= seg_len {
+            return StepPlan::full(steps);
+        }
+        // endpoints are mandatory wherever they fall in the segment
+        let mut chosen: Vec<usize> = Vec::new();
+        if switch == 0 {
+            chosen.push(0);
+        }
+        if steps - 1 >= switch && !chosen.contains(&(steps - 1)) {
+            chosen.push(steps - 1);
+        }
+        let target = budget.max(chosen.len()).min(seg_len);
+        // greedy churn-priority fill (deterministic tie-break on index);
+        // a fixed ranking makes plans nested as the budget grows
+        let mut ranked: Vec<usize> = (switch..steps).filter(|i| !chosen.contains(i)).collect();
+        ranked.sort_by(|&a, &b| {
+            churn[b]
+                .partial_cmp(&churn[a])
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(&b))
+        });
+        chosen.extend(ranked.into_iter().take(target - chosen.len()));
+        let mut placed: Vec<usize> = (0..switch).chain(chosen).collect();
+        placed.sort_unstable();
+        placed.dedup();
+        StepPlan { placed, steps }
+    }
+
+    /// Is every grid point placed (the byte-identical default)?
+    pub fn is_full(&self) -> bool {
+        self.placed.len() == self.steps
+    }
+
+    /// Number of placed points.
+    pub fn len(&self) -> usize {
+        self.placed.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.placed.is_empty()
+    }
+
+    /// The grid target of the tick at plan position `pos`: the next placed
+    /// point, or `steps` (the terminal clean point, ᾱ = 1) after the last.
+    pub fn target_of(&self, pos: usize) -> usize {
+        self.placed
+            .get(pos + 1)
+            .copied()
+            .unwrap_or(self.steps)
+    }
+}
+
+/// The measured churn signal: per-step support overlap between consecutive
+/// golden subsets, as a change fraction `1 − |S_i ∩ S_{i−1}| / |S_i|`.
+/// Index 0 (no predecessor) counts as full churn — the first screen is
+/// always cold.
+pub fn churn_from_subsets(subsets: &[Vec<u32>]) -> Vec<f64> {
+    let mut churn = Vec::with_capacity(subsets.len());
+    for (i, s) in subsets.iter().enumerate() {
+        if i == 0 || s.is_empty() {
+            churn.push(1.0);
+            continue;
+        }
+        let prev: HashSet<u32> = subsets[i - 1].iter().copied().collect();
+        let overlap = s.iter().filter(|r| prev.contains(r)).count();
+        churn.push(1.0 - overlap as f64 / s.len() as f64);
+    }
+    churn
+}
+
+/// The schedule-only churn prior used when no pilot trajectory exists (the
+/// engine's default): the support moves fastest where the noise level does,
+/// so weight each point by the local ᾱ motion `g(i−1) − g(i+1)` (one-sided
+/// at the endpoints). Strictly positive since g is strictly decreasing.
+pub fn churn_prior(sched: &NoiseSchedule) -> Vec<f64> {
+    let steps = sched.steps;
+    (0..steps)
+        .map(|i| {
+            let lo = i.saturating_sub(1);
+            let hi = (i + 1).min(steps - 1);
+            if hi == lo {
+                1.0
+            } else {
+                (sched.g(lo) - sched.g(hi)) as f64
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::noise::ScheduleKind;
+
+    fn sched(steps: usize) -> NoiseSchedule {
+        NoiseSchedule::new(ScheduleKind::DdpmLinear, steps)
+    }
+
+    #[test]
+    fn zero_budget_and_saturating_budget_yield_the_full_grid() {
+        let s = sched(10);
+        let churn = churn_prior(&s);
+        assert_eq!(StepPlan::budgeted(&s, 0, 0, &churn), StepPlan::full(10));
+        for b in [10usize, 11, 100] {
+            assert_eq!(StepPlan::budgeted(&s, b, 0, &churn), StepPlan::full(10));
+        }
+        // with a gauss prefix the budget only has to cover the segment
+        assert_eq!(StepPlan::budgeted(&s, 7, 3, &churn), StepPlan::full(10));
+        assert!(StepPlan::full(10).is_full());
+        assert_eq!(StepPlan::full(10).target_of(9), 10);
+        assert_eq!(StepPlan::full(10).target_of(4), 5);
+    }
+
+    #[test]
+    fn budget_is_exactly_spent_and_endpoints_always_placed() {
+        let s = sched(12);
+        let churn = churn_prior(&s);
+        for switch in [0usize, 3, 5] {
+            let seg = s.steps - switch;
+            for budget in 1..seg {
+                let plan = StepPlan::budgeted(&s, budget, switch, &churn);
+                let seg_placed = plan.placed.iter().filter(|&&p| p >= switch).count();
+                // the mandatory endpoints can push a budget of 1 up to 2
+                let want = budget.max(if switch == 0 { 2 } else { 1 }).min(seg);
+                assert_eq!(seg_placed, want, "switch={switch} budget={budget}");
+                assert_eq!(plan.placed[0], 0, "start must be placed");
+                assert_eq!(
+                    *plan.placed.last().unwrap(),
+                    s.steps - 1,
+                    "terminal must be placed"
+                );
+                // the whole gauss prefix rides for free
+                for p in 0..switch {
+                    assert!(plan.placed.contains(&p), "prefix point {p} missing");
+                }
+                // strictly ascending, in range
+                assert!(plan.placed.windows(2).all(|w| w[0] < w[1]));
+                assert!(plan.placed.iter().all(|&p| p < s.steps));
+            }
+        }
+    }
+
+    #[test]
+    fn plans_are_nested_as_the_budget_grows() {
+        for kind in [ScheduleKind::DdpmLinear, ScheduleKind::Cosine] {
+            let s = NoiseSchedule::new(kind, 16);
+            for churn in [churn_prior(&s), vec![0.5; 16]] {
+                for switch in [0usize, 4] {
+                    let mut prev: Option<StepPlan> = None;
+                    for budget in 1..(s.steps - switch) {
+                        let plan = StepPlan::budgeted(&s, budget, switch, &churn);
+                        if let Some(p) = &prev {
+                            for pt in &p.placed {
+                                assert!(
+                                    plan.placed.contains(pt),
+                                    "{kind:?} switch={switch} budget={budget} dropped {pt}"
+                                );
+                            }
+                        }
+                        prev = Some(plan);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn high_churn_points_are_placed_first() {
+        let s = sched(10);
+        let mut churn = vec![0.0f64; 10];
+        churn[4] = 1.0;
+        churn[7] = 0.9;
+        let plan = StepPlan::budgeted(&s, 4, 0, &churn);
+        // endpoints + the two churn spikes
+        assert_eq!(plan.placed, vec![0, 4, 7, 9]);
+    }
+
+    #[test]
+    fn target_of_jumps_to_the_next_placed_point() {
+        let s = sched(10);
+        let mut churn = vec![0.0f64; 10];
+        churn[5] = 1.0;
+        let plan = StepPlan::budgeted(&s, 3, 0, &churn);
+        assert_eq!(plan.placed, vec![0, 5, 9]);
+        assert_eq!(plan.target_of(0), 5);
+        assert_eq!(plan.target_of(1), 9);
+        assert_eq!(plan.target_of(2), 10, "last tick lands on ᾱ = 1");
+    }
+
+    #[test]
+    fn churn_from_subsets_measures_overlap() {
+        let subsets = vec![
+            vec![1u32, 2, 3, 4],
+            vec![1, 2, 3, 4],
+            vec![1, 2, 5, 6],
+            vec![7, 8],
+        ];
+        let churn = churn_from_subsets(&subsets);
+        assert_eq!(churn, vec![1.0, 0.0, 0.5, 1.0]);
+        assert_eq!(churn_from_subsets(&[]), Vec::<f64>::new());
+    }
+
+    #[test]
+    fn churn_prior_is_positive_and_deterministic() {
+        for kind in [
+            ScheduleKind::DdpmLinear,
+            ScheduleKind::Cosine,
+            ScheduleKind::EdmVp,
+            ScheduleKind::EdmVe,
+        ] {
+            let s = NoiseSchedule::new(kind, 10);
+            let c = churn_prior(&s);
+            assert_eq!(c.len(), 10);
+            assert!(c.iter().all(|&v| v > 0.0), "{kind:?}");
+            assert_eq!(c, churn_prior(&s));
+        }
+    }
+}

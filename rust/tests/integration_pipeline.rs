@@ -340,6 +340,94 @@ fn determinism_matrix_gauss_axis_leaves_retrieval_segment_byte_identical() {
     }
 }
 
+#[test]
+fn determinism_matrix_solver_axis_is_deterministic_and_ddim_is_legacy() {
+    // PR-10 satellite: the determinism matrix gains a solver axis. Each
+    // solver must be a deterministic function of the seed — byte-identical
+    // across backends × warm-screen settings, because the subset-reuse
+    // corrector rides the same exactness contract as the warm screen —
+    // while the ddim cell must stay byte-identical to the legacy default
+    // sampler, and the higher-order solvers must actually move the
+    // trajectory (a corrector that changed nothing would cost a refine for
+    // no accuracy). A full-grid budget (0 or ≥ the segment) must collapse
+    // the plan to the default path, byte for byte.
+    use golddiff::schedule::steps::{churn_prior, StepPlan};
+    let ds = small("mnist-sim", 260, 17);
+    let sched = NoiseSchedule::new(ScheduleKind::DdpmLinear, 10);
+    let opts = BackendOpts {
+        threads: 2,
+        clusters: 8,
+        ..BackendOpts::default()
+    };
+    let solvers = [sampler::Solver::Ddim, sampler::Solver::Heun, sampler::Solver::Dpm2];
+    let mut by_solver: Vec<Option<Vec<f32>>> = solvers.iter().map(|_| None).collect();
+    for (si, &solver) in solvers.iter().enumerate() {
+        for &backend in RetrievalBackendKind::all() {
+            for warm in [true, false] {
+                let mut den = GoldDiff::paper_defaults(&ds, &sched, BaseWeighting::Golden)
+                    .with_backend(backend.build(&ds, opts))
+                    .with_warm_start(warm);
+                let t = sampler::sample(
+                    &mut den as &mut dyn Denoiser,
+                    &ds,
+                    &sched,
+                    7,
+                    sampler::SamplerOpts {
+                        solver,
+                        ..sampler::SamplerOpts::default()
+                    },
+                );
+                let x = t.final_sample().to_vec();
+                let label = format!("{}/{}/warm={warm}", solver.name(), backend.name());
+                match &by_solver[si] {
+                    None => by_solver[si] = Some(x),
+                    Some(r) => assert_eq!(r, &x, "{label}: solver cell diverged"),
+                }
+            }
+        }
+    }
+    // the ddim cell is the legacy sampler — `SamplerOpts::default()` runs it
+    let build = || {
+        GoldDiff::paper_defaults(&ds, &sched, BaseWeighting::Golden)
+            .with_backend(RetrievalBackendKind::Batched.build(&ds, opts))
+            .with_warm_start(true)
+    };
+    let mut den = build();
+    let legacy = sampler::sample(
+        &mut den as &mut dyn Denoiser,
+        &ds,
+        &sched,
+        7,
+        sampler::SamplerOpts::default(),
+    );
+    assert_eq!(
+        by_solver[0].as_deref(),
+        Some(legacy.final_sample()),
+        "ddim must be byte-identical to the legacy default"
+    );
+    assert_ne!(by_solver[0], by_solver[1], "heun must move the trajectory");
+    assert_ne!(by_solver[0], by_solver[2], "dpm2 must move the trajectory");
+    // full-grid budgets collapse the plan to the default path
+    for budget in [0usize, sched.steps, sched.steps + 5] {
+        let plan = StepPlan::budgeted(&sched, budget, 0, &churn_prior(&sched));
+        assert!(plan.is_full(), "budget {budget} must keep the full grid");
+        let mut den = build();
+        let t = sampler::sample_planned(
+            &mut den as &mut dyn Denoiser,
+            &ds,
+            &sched,
+            7,
+            sampler::SamplerOpts::default(),
+            &plan,
+        );
+        assert_eq!(
+            t.final_sample(),
+            legacy.final_sample(),
+            "budget {budget}: full-grid plan diverged from the default"
+        );
+    }
+}
+
 /// One determinism-matrix cell over an arbitrary backend: the 4-sequence
 /// tick-group golden subsets at every step (warm screen seeing the
 /// previous step's subsets, as in serving) plus a full single-sequence

@@ -17,6 +17,11 @@ fn engine(preset: &str) -> Engine {
     let cfg = EngineConfig {
         preset: preset.into(),
         data_dir: std::env::temp_dir().join("golddiff_it_serving"),
+        // these tests pin the legacy full-grid ddim serving contract
+        // (step counts, steps_executed totals); the few-step engine paths
+        // have their own coordinator tests
+        solver: "ddim".into(),
+        step_budget: 0,
         ..Default::default()
     };
     Engine::start(cfg).unwrap()
